@@ -1,0 +1,102 @@
+//! End-to-end system driver (the EXPERIMENTS.md §E2E run): proves all three
+//! layers compose on a real small workload.
+//!
+//!   1. PRE-TRAIN the 7-conv CIFAR CNN from scratch through the AOT'd
+//!      fused train-step (L2 fwd/bwd built on the L1 Pallas quantizers),
+//!      logging the loss curve.
+//!   2. SEARCH per-channel bit-widths with the hierarchical DRL agent under
+//!      both paper protocols (RC + AG).
+//!   3. FINE-TUNE the AG winner and report the recovered accuracy.
+//!   4. DEPLOY on both FPGA simulators and audit §3.4 storage overhead.
+//!
+//! Run: `cargo run --release --example end_to_end [episodes]`
+
+use autoq::cost::Mode;
+use autoq::data::synth::{Split, SynthDataset};
+use autoq::finetune::TrainConfig;
+use autoq::models::ModelRunner;
+use autoq::runtime::Runtime;
+use autoq::search::{run_search, Granularity, Protocol, SearchConfig};
+use autoq::sim::{Arch, FpgaSim};
+use autoq::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    autoq::util::logging::init();
+    let episodes: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(25);
+    let t0 = std::time::Instant::now();
+    let mut rt = Runtime::open_default()?;
+    let data = SynthDataset::new(42);
+
+    // ---- 1. pre-train from scratch ----------------------------------------
+    println!("== stage 1: pre-training cif10 (fresh params) ==");
+    let meta = rt.manifest.model("cif10")?.clone();
+    let mut runner = ModelRunner::init(meta, &mut Rng::new(0xE2E));
+    let cfg = TrainConfig::pretrain(250);
+    let rep = autoq::finetune::train(&mut rt, &mut runner, &data, &cfg)?;
+    println!("loss curve (step, loss):");
+    for (s, l) in &rep.curve {
+        println!("  {s:>5} {l:.4}");
+    }
+    let fp = runner.eval_fp32(&mut rt, &data, Split::Val, 2)?;
+    println!("fp32 val accuracy: {:.4} ({:.1}s)", fp.accuracy, rep.secs);
+
+    // ---- 2. hierarchical searches ------------------------------------------
+    println!("\n== stage 2: channel-level searches ({episodes} episodes each) ==");
+    let mut results = Vec::new();
+    for protocol in [Protocol::resource_constrained(5.0), Protocol::accuracy_guaranteed()] {
+        let mut scfg = SearchConfig::quick(Mode::Quant, protocol, Granularity::Channel);
+        scfg.episodes = episodes;
+        scfg.warmup = episodes / 3;
+        let res = run_search(&mut rt, &runner, &data, &scfg)?;
+        println!(
+            "{:<22} best: acc={:.4} wbits={:.2} abits={:.2} norm_logic={:.4} ({:.0}s)",
+            protocol.name(),
+            res.best.accuracy,
+            res.best.avg_wbits,
+            res.best.avg_abits,
+            res.best.cost.norm_logic(),
+            res.secs
+        );
+        results.push((protocol, res));
+    }
+
+    // ---- 3. fine-tune the accuracy-guaranteed winner ------------------------
+    println!("\n== stage 3: fine-tuning the AG configuration ==");
+    let ag = &results[1].1.best;
+    let tc = TrainConfig::finetune(Mode::Quant, ag.wbits.clone(), ag.abits.clone(), 80);
+    let ft = autoq::finetune::train(&mut rt, &mut runner, &data, &tc)?;
+    println!(
+        "AG config: searched acc {:.4} -> fine-tuned {:.4} (Δ vs fp32: {:+.2}%)",
+        ag.accuracy,
+        ft.final_eval.accuracy,
+        (ft.final_eval.accuracy - fp.accuracy) * 100.0
+    );
+
+    // ---- 4. deployment ------------------------------------------------------
+    println!("\n== stage 4: FPGA deployment + storage audit ==");
+    for (protocol, res) in &results {
+        for arch in [Arch::Temporal, Arch::Spatial] {
+            let sim = FpgaSim::new(arch, Mode::Quant);
+            let r = sim.run(&runner.meta.layers, &res.best.wbits, &res.best.abits);
+            println!(
+                "{:<22} {:<9}: {:>8.1} fps {:>8.3} mJ util={:.2}",
+                protocol.name(),
+                arch.as_str(),
+                r.fps,
+                r.energy_j * 1e3,
+                r.utilization
+            );
+        }
+        let audit = autoq::quant::audit(&runner.meta.layers, &res.best.wbits, &res.best.abits);
+        println!(
+            "{:<22} storage: {:.1} KB weights + {:.2} KB bit-configs ({:.3}% overhead)",
+            protocol.name(),
+            audit.weight_bytes as f64 / 1024.0,
+            audit.config_bytes as f64 / 1024.0,
+            audit.overhead * 100.0
+        );
+    }
+
+    println!("\nend-to-end driver finished in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! FPGA deployment study (the intro's mobile-device scenario): take the
+//! depthwise MobileNetV2-style model, search it at every granularity, and
+//! compare quantized vs binarized deployment on the spatial and temporal
+//! accelerator templates — the decision a mobile hardware developer makes
+//! with AutoQ's output (paper §4.5).
+//!
+//! Run: `cargo run --release --example fpga_deploy [episodes]`
+
+use autoq::cost::Mode;
+use autoq::data::synth::SynthDataset;
+use autoq::repro::common::runner_for;
+use autoq::runtime::Runtime;
+use autoq::search::{run_search, Granularity, Protocol, SearchConfig};
+use autoq::sim::{Arch, FpgaSim};
+
+fn main() -> anyhow::Result<()> {
+    autoq::util::logging::init();
+    let episodes: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(15);
+    let mut rt = Runtime::open_default()?;
+    let runner = runner_for(&mut rt, "monet")?;
+    let data = SynthDataset::new(42);
+    let meta = runner.meta.clone();
+
+    println!(
+        "{:<6} {:<6} {:>7} {:>6} {:>6} {:>10} {:>10} {:>10} {:>10}",
+        "mode", "gran", "acc", "wbits", "abits", "fps(temp)", "fps(spat)", "mJ(temp)", "mJ(spat)"
+    );
+    for mode in [Mode::Quant, Mode::Binar] {
+        for gran in [Granularity::Network(5), Granularity::Layer, Granularity::Channel] {
+            let mut cfg =
+                SearchConfig::quick(mode, Protocol::resource_constrained(5.0), gran);
+            cfg.episodes = episodes;
+            cfg.warmup = episodes / 3;
+            let res = run_search(&mut rt, &runner, &data, &cfg)?;
+            let b = &res.best;
+            let t = FpgaSim::new(Arch::Temporal, mode).run(&meta.layers, &b.wbits, &b.abits);
+            let s = FpgaSim::new(Arch::Spatial, mode).run(&meta.layers, &b.wbits, &b.abits);
+            println!(
+                "{:<6} {:<6} {:>7.4} {:>6.2} {:>6.2} {:>10.1} {:>10.1} {:>10.3} {:>10.3}",
+                mode.as_str(),
+                gran.tag(),
+                b.accuracy,
+                b.avg_wbits,
+                b.avg_abits,
+                t.fps,
+                s.fps,
+                t.energy_j * 1e3,
+                s.energy_j * 1e3
+            );
+        }
+    }
+    println!("\n(paper shape: C > L > N on fps; binar faster but less accurate; temporal wins on -C)");
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Quickstart: the public API in ~60 lines.
+//!
+//!   1. open the PJRT runtime over the AOT artifacts,
+//!   2. load (or pre-train) the 7-conv CIFAR CNN,
+//!   3. run a short accuracy-guaranteed channel-level search,
+//!   4. fine-tune the best config and simulate FPGA deployment.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use autoq::cost::Mode;
+use autoq::data::synth::SynthDataset;
+use autoq::repro::common::runner_for;
+use autoq::runtime::Runtime;
+use autoq::search::{run_search, Granularity, Protocol, SearchConfig};
+use autoq::sim::{Arch, FpgaSim};
+
+fn main() -> anyhow::Result<()> {
+    autoq::util::logging::init();
+    let mut rt = Runtime::open_default()?;
+    let runner = runner_for(&mut rt, "cif10")?;
+    let data = SynthDataset::new(42);
+
+    // Full-precision reference accuracy.
+    let fp = runner.eval_fp32(&mut rt, &data, autoq::data::Split::Val, 2)?;
+    println!("fp32 accuracy: {:.4}", fp.accuracy);
+
+    // Short accuracy-guaranteed channel-level search (paper protocol §3.3).
+    let mut cfg = SearchConfig::quick(
+        Mode::Quant,
+        Protocol::accuracy_guaranteed(),
+        Granularity::Channel,
+    );
+    cfg.episodes = 12;
+    cfg.warmup = 4;
+    let res = run_search(&mut rt, &runner, &data, &cfg)?;
+    let best = &res.best;
+    println!(
+        "searched: acc={:.4} avg weight bits={:.2} avg act bits={:.2} (logic ops at {:.2}% of fp32)",
+        best.accuracy,
+        best.avg_wbits,
+        best.avg_abits,
+        best.cost.norm_logic() * 100.0
+    );
+
+    // Fine-tune the searched configuration (recovers quantization loss).
+    let mut ft_runner = runner_for(&mut rt, "cif10")?;
+    let tc = autoq::finetune::TrainConfig::finetune(
+        Mode::Quant,
+        best.wbits.clone(),
+        best.abits.clone(),
+        40,
+    );
+    let rep = autoq::finetune::train(&mut rt, &mut ft_runner, &data, &tc)?;
+    println!("fine-tuned accuracy: {:.4}", rep.final_eval.accuracy);
+
+    // Deploy on both simulated FPGA accelerator templates.
+    for arch in [Arch::Temporal, Arch::Spatial] {
+        let sim = FpgaSim::new(arch, Mode::Quant);
+        let r = sim.run(&runner.meta.layers, &best.wbits, &best.abits);
+        println!(
+            "{:<9} accelerator: {:>8.1} fps, {:>7.3} mJ/inference, utilization {:.2}",
+            arch.as_str(),
+            r.fps,
+            r.energy_j * 1e3,
+            r.utilization
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,183 @@
+"""L2: DDPG actor/critic graphs for the hierarchical agent (HLC + LLC).
+
+The paper's agent (§3.2, §4): actor = 2×300-unit hidden layers with a
+sigmoid output scaled by 32 (goals/actions live in [0, 32]); critic =
+2×300-unit hidden layers.  Soft target updates with τ = 0.01, batch 64.
+
+Two artifact families are exported per input width S (S = 16 for the HLC on
+the Eq.-1 state, S = 17 for the goal-conditioned LLC):
+
+  * ``ddpg_act_s{S}``    — batched deterministic policy μ(s): (actor params,
+    states (B, S)) → actions (B, 1) in [0, 32].  One call covers all
+    channels of a layer (LLC) or a single layer state (HLC, padded) — this
+    batching is the L3 hot-path optimisation that keeps the search loop at
+    one executable dispatch per layer.
+  * ``ddpg_update_s{S}`` — one fused off-policy step: critic TD(0)
+    regression + deterministic-policy-gradient actor step + Adam for both +
+    soft target update.  All parameters, Adam moments and the step counter
+    are inputs AND outputs, so rust owns every buffer and the graph stays
+    pure.
+
+Rust instantiates four independent agents from these two artifacts
+(weight-HLC, activation-HLC, weight-LLC, activation-LLC) by holding four
+separate parameter sets — see rust/src/agent/.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+HIDDEN = 300
+ACT_BATCH = 128   # max channels acted on in one call (max layer width in zoo)
+UPD_BATCH = 64    # paper: replay minibatch of 64
+ACTION_SCALE = 32.0
+
+# Adam hyper-parameters (standard DDPG practice; the paper fixes τ=0.01 and
+# batch 64 but leaves the optimiser unstated).
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def actor_shapes(s: int) -> List[Tuple[int, ...]]:
+    return [(s, HIDDEN), (HIDDEN,), (HIDDEN, HIDDEN), (HIDDEN,), (HIDDEN, 1), (1,)]
+
+
+def critic_shapes(s: int) -> List[Tuple[int, ...]]:
+    # Critic consumes state ⊕ action.
+    return [(s + 1, HIDDEN), (HIDDEN,), (HIDDEN, HIDDEN), (HIDDEN,), (HIDDEN, 1), (1,)]
+
+
+def actor_forward(p: List[jnp.ndarray], s: jnp.ndarray) -> jnp.ndarray:
+    """μ(s) ∈ [0, 32]^(B,1)."""
+    h = jax.nn.relu(s @ p[0] + p[1])
+    h = jax.nn.relu(h @ p[2] + p[3])
+    return jax.nn.sigmoid(h @ p[4] + p[5]) * ACTION_SCALE
+
+
+def critic_forward(p: List[jnp.ndarray], s: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """Q(s, a) ∈ R^(B,1).  Action normalised to [0,1] before concat."""
+    x = jnp.concatenate([s, a / ACTION_SCALE], axis=-1)
+    h = jax.nn.relu(x @ p[0] + p[1])
+    h = jax.nn.relu(h @ p[2] + p[3])
+    return h @ p[4] + p[5]
+
+
+def act_fn(s_dim: int):
+    """(6 actor params, states (ACT_BATCH, s_dim)) -> actions (ACT_BATCH, 1)."""
+
+    def f(*args):
+        p = list(args[:6])
+        states = args[6]
+        return actor_forward(p, states)
+
+    return f
+
+
+def _adam(params, grads, m, v, t, lr):
+    new_m = [ADAM_B1 * mi + (1 - ADAM_B1) * g for mi, g in zip(m, grads)]
+    new_v = [ADAM_B2 * vi + (1 - ADAM_B2) * g * g for vi, g in zip(v, grads)]
+    mh = [mi / (1 - ADAM_B1 ** t) for mi in new_m]
+    vh = [vi / (1 - ADAM_B2 ** t) for vi in new_v]
+    new_p = [p - lr * mhi / (jnp.sqrt(vhi) + ADAM_EPS)
+             for p, mhi, vhi in zip(params, mh, vh)]
+    return new_p, new_m, new_v
+
+
+def update_fn(s_dim: int):
+    """One fused DDPG update step.
+
+    Input order (rust mirrors this via the manifest):
+      actor(6), critic(6), target_actor(6), target_critic(6),
+      adam_m_actor(6), adam_v_actor(6), adam_m_critic(6), adam_v_critic(6),
+      t(scalar),
+      s (B,S), a (B,1), r (B,1), s2 (B,S), done (B,1),
+      gamma, tau, lr_actor, lr_critic (scalars)
+    Output order:
+      actor(6), critic(6), target_actor(6), target_critic(6),
+      adam moments (24), t+1, critic_loss, actor_loss
+    """
+
+    def f(*args):
+        i = 0
+
+        def take(n):
+            nonlocal i
+            out = list(args[i:i + n])
+            i += n
+            return out
+
+        actor = take(6)
+        critic = take(6)
+        t_actor = take(6)
+        t_critic = take(6)
+        m_a, v_a = take(6), take(6)
+        m_c, v_c = take(6), take(6)
+        (t,) = take(1)
+        s, a, r, s2, done = take(5)
+        gamma, tau, lr_a, lr_c = take(4)
+
+        # --- critic: TD(0) target from target nets (paper Bellman error) ---
+        a2 = actor_forward(t_actor, s2)
+        q_tgt = r + gamma * (1.0 - done) * critic_forward(t_critic, s2, a2)
+        q_tgt = jax.lax.stop_gradient(q_tgt)
+
+        def critic_loss_fn(cp):
+            q = critic_forward(cp, s, a)
+            return jnp.mean((q - q_tgt) ** 2)
+
+        closs, cgrads = jax.value_and_grad(critic_loss_fn)(critic)
+
+        # --- actor: deterministic policy gradient through the critic -------
+        def actor_loss_fn(ap):
+            return -jnp.mean(critic_forward(critic, s, actor_forward(ap, s)))
+
+        aloss, agrads = jax.value_and_grad(actor_loss_fn)(actor)
+
+        t1 = t + 1.0
+        new_critic, m_c, v_c = _adam(critic, cgrads, m_c, v_c, t1, lr_c)
+        new_actor, m_a, v_a = _adam(actor, agrads, m_a, v_a, t1, lr_a)
+
+        # --- soft target update (τ = 0.01) ---------------------------------
+        new_t_actor = [tau * p + (1 - tau) * tp for p, tp in zip(new_actor, t_actor)]
+        new_t_critic = [tau * p + (1 - tau) * tp for p, tp in zip(new_critic, t_critic)]
+
+        return tuple(new_actor) + tuple(new_critic) + tuple(new_t_actor) + \
+            tuple(new_t_critic) + tuple(m_a) + tuple(v_a) + tuple(m_c) + \
+            tuple(v_c) + (t1, closs, aloss)
+
+    return f
+
+
+def act_example_args(s_dim: int):
+    f32 = jnp.float32
+    ps = [jax.ShapeDtypeStruct(shp, f32) for shp in actor_shapes(s_dim)]
+    return ps + [jax.ShapeDtypeStruct((ACT_BATCH, s_dim), f32)]
+
+
+def update_example_args(s_dim: int):
+    f32 = jnp.float32
+    sd = lambda shp: jax.ShapeDtypeStruct(shp, f32)
+    a6 = [sd(s) for s in actor_shapes(s_dim)]
+    c6 = [sd(s) for s in critic_shapes(s_dim)]
+    args = a6 + c6 + a6 + c6            # nets + targets
+    args += a6 + a6 + c6 + c6           # adam moments
+    args += [sd(())]                    # t
+    B = UPD_BATCH
+    args += [sd((B, s_dim)), sd((B, 1)), sd((B, 1)), sd((B, s_dim)), sd((B, 1))]
+    args += [sd(()), sd(()), sd(()), sd(())]  # gamma, tau, lr_a, lr_c
+    return args
+
+
+def agent_meta(s_dim: int) -> dict:
+    """Parameter layout metadata for rust (shapes in artifact input order)."""
+    return {
+        "s_dim": s_dim,
+        "hidden": HIDDEN,
+        "act_batch": ACT_BATCH,
+        "upd_batch": UPD_BATCH,
+        "action_scale": ACTION_SCALE,
+        "actor_shapes": [list(s) for s in actor_shapes(s_dim)],
+        "critic_shapes": [list(s) for s in critic_shapes(s_dim)],
+    }

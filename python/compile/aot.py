@@ -1,0 +1,118 @@
+"""AOT exporter: lower every L2 graph to HLO *text* + write the manifest.
+
+Interchange format is HLO **text**, NOT serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the image's xla_extension
+0.5.1 (behind the rust ``xla`` crate) rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Artifacts (written to ``artifacts/``):
+  {model}_eval_quant.hlo.txt   — Pallas-kernel path, per-channel QBN inputs
+  {model}_eval_binar.hlo.txt   — Pallas-kernel path, per-channel BBN inputs
+  {model}_train_quant.hlo.txt  — STE fine-tuning / pre-training step
+  {model}_train_binar.hlo.txt  — STE fine-tuning for binarized models
+  ddpg_act_s{16,17}.hlo.txt    — batched actor forward (HLC / LLC)
+  ddpg_update_s{16,17}.hlo.txt — fused DDPG update step
+  manifest.json                — input/output specs + model/agent metadata
+
+Python runs only here (``make artifacts``); rust never imports it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import agent as A
+from . import model as M
+
+HLC_S = 16  # Eq.-1 state feature count
+LLC_S = 17  # state ⊕ goal
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(d) -> str:
+    return {"float32": "f32", "int32": "s32"}.get(jnp.dtype(d).name, jnp.dtype(d).name)
+
+
+def _specs(structs) -> list:
+    out = []
+    for s in structs:
+        out.append({"shape": list(s.shape), "dtype": _dtype_name(s.dtype)})
+    return out
+
+
+def export_one(name: str, fn, args, out_dir: str, manifest: dict, force: bool) -> None:
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    out_shapes = jax.eval_shape(fn, *args)
+    if not isinstance(out_shapes, tuple):
+        out_shapes = (out_shapes,)
+    manifest["artifacts"][name] = {
+        "file": f"{name}.hlo.txt",
+        "inputs": _specs(args),
+        "outputs": _specs(out_shapes),
+    }
+    if os.path.exists(path) and not force:
+        print(f"  [skip] {name} (exists)")
+        return
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  [ok]   {name}: {len(text) / 1e6:.2f} MB HLO text")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--models", default=",".join(M.MODEL_NAMES),
+                    help="comma-separated model subset")
+    ap.add_argument("--force", action="store_true",
+                    help="re-export even if the .hlo.txt already exists")
+    opts = ap.parse_args()
+    os.makedirs(opts.out, exist_ok=True)
+    models = [m for m in opts.models.split(",") if m]
+
+    manifest: dict = {"artifacts": {}, "models": {}, "agents": {}}
+
+    for name in models:
+        print(f"model {name}:")
+        meta = M.model_meta(name)
+        manifest["models"][name] = meta
+        for mode in ("quant", "binar"):
+            f, _ = M.eval_fn(name, mode, use_pallas=True)
+            export_one(f"{name}_eval_{mode}", f, M.example_args(meta, "eval"),
+                       opts.out, manifest, opts.force)
+            tf, _ = M.train_fn(name, mode)
+            export_one(f"{name}_train_{mode}", tf, M.example_args(meta, "train"),
+                       opts.out, manifest, opts.force)
+
+    for s_dim in (HLC_S, LLC_S):
+        print(f"agent s{s_dim}:")
+        manifest["agents"][f"s{s_dim}"] = A.agent_meta(s_dim)
+        export_one(f"ddpg_act_s{s_dim}", A.act_fn(s_dim),
+                   A.act_example_args(s_dim), opts.out, manifest, opts.force)
+        export_one(f"ddpg_update_s{s_dim}", A.update_fn(s_dim),
+                   A.update_example_args(s_dim), opts.out, manifest, opts.force)
+
+    man_path = os.path.join(opts.out, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {man_path}")
+
+
+if __name__ == "__main__":
+    main()

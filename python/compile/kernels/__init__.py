@@ -1,0 +1,12 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+All kernels run with ``interpret=True`` (mandatory for CPU-PJRT execution on
+this image) and are validated against the pure-jnp oracles in ``ref.py``.
+"""
+
+from .fake_quant import fake_quant
+from .binarize import binarize
+from .qmatmul import qmatmul
+from . import ref
+
+__all__ = ["fake_quant", "binarize", "qmatmul", "ref"]

@@ -1,0 +1,66 @@
+"""Pallas kernel: per-channel linear fake-quantization (L1 hot-spot).
+
+This is the inner loop of the entire AutoQ search: every candidate
+bit-assignment the RL agent proposes is evaluated by re-quantizing weights
+and activations channel-by-channel and running inference.  The kernel tiles
+the channel dimension so each grid step holds a (BLOCK_C, K) tile in
+VMEM, computes the per-channel max-abs reduction in-register, and writes the
+dequantized tile back — one HBM round-trip per tile.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the per-channel scale
+reduction maps to an on-chip VPU reduction over the lane dimension; the
+bits vector is a tiny (BLOCK_C,) operand kept resident per tile (scalar-
+prefetch position).  ``interpret=True`` is mandatory on this image — real
+TPU lowering emits a Mosaic custom-call the CPU PJRT plugin cannot run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Channel-block size.  16 rows × K lanes keeps the tile ≤ 16·K·4 bytes: for
+# the largest layer in the zoo (K = 1152) that is ~72 KiB — comfortably
+# inside a 16 MiB VMEM budget together with double-buffering.
+BLOCK_C = 16
+
+
+def _fake_quant_kernel(x_ref, bits_ref, o_ref):
+    """One (BLOCK_C, K) tile: quantize-dequantize each row to its bit-width."""
+    x = x_ref[...]                                   # (BC, K)
+    b = jnp.round(bits_ref[...]).astype(jnp.float32)[:, None]  # (BC, 1)
+    pruned = b <= 0.0
+    passthrough = b >= 24.0
+    levels = jnp.exp2(jnp.clip(b, 1.0, 24.0) - 1.0) - 1.0
+    levels = jnp.maximum(levels, 1.0)
+    max_abs = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.where(max_abs > 0.0, max_abs / levels, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -levels, levels)
+    out = jnp.where(passthrough, x, q * scale)
+    o_ref[...] = jnp.where(pruned, 0.0, out)
+
+
+def fake_quant(x2d: jnp.ndarray, bits: jnp.ndarray, block_c: int = BLOCK_C) -> jnp.ndarray:
+    """Per-channel fake-quantize a (C, K) tensor with a (C,) bits vector.
+
+    Channels are padded up to a multiple of ``block_c`` so every grid step
+    sees a full tile (padding rows carry bits=0 and are sliced off).
+    """
+    c, k = x2d.shape
+    cp = (c + block_c - 1) // block_c * block_c
+    if cp != c:
+        x2d = jnp.pad(x2d, ((0, cp - c), (0, 0)))
+        bits = jnp.pad(bits, (0, cp - c))
+    out = pl.pallas_call(
+        _fake_quant_kernel,
+        grid=(cp // block_c,),
+        in_specs=[
+            pl.BlockSpec((block_c, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_c,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_c, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((cp, k), jnp.float32),
+        interpret=True,
+    )(x2d, bits)
+    return out[:c]

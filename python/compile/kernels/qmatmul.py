@@ -1,0 +1,84 @@
+"""Pallas kernel: tiled matmul over quantized operands (L1).
+
+The fully-connected layers and 1×1 (pointwise) convolutions of the model zoo
+run through this kernel after their operands have been fake-quantized /
+binarized.  On a real TPU the MXU consumes the dequantized (BM, BK)×(BK, BN)
+tiles; the bit-serial cost the paper measures on FPGA is modelled separately
+in ``rust/src/cost`` (see DESIGN.md §Hardware-Adaptation).
+
+Classic 3-D grid (M/BM, N/BN, K/BK) with accumulation into the output tile
+across the K grid dimension — the (BM, BN) accumulator stays resident in
+VMEM for all K steps (revolving output), so HBM sees each operand exactly
+once and the output exactly once.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes — multiples of the 128×128 MXU face where the operand
+# allows; shrunk automatically for small operands.
+BM, BN, BK = 128, 128, 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
+    p0 = (x.shape[0] + m0 - 1) // m0 * m0 - x.shape[0]
+    p1 = (x.shape[1] + m1 - 1) // m1 * m1 - x.shape[1]
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def _grid_cap_tile(dim: int, base: int, cap: int) -> int:
+    """Grow the tile along `dim` (in multiples of `base`) until the grid is
+    ≤ `cap` steps.  The pointwise convs of the zoo are extremely tall-skinny
+    (M = N·H·W ≈ 262 144, K/N ≤ 128): a fixed 128-row tile costs ~2 048
+    sequential grid steps whose loop overhead dominates; a 4 096-row tile is
+    still only bm·bk·4 ≈ 2 MiB of VMEM and collapses the grid to ≤ 64 steps
+    (EXPERIMENTS.md §Perf, L1 iteration 1)."""
+    tile = min(base, dim)
+    while dim > tile * cap and tile < 8192:
+        tile *= 2
+    return tile
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def qmatmul(a: jnp.ndarray, b: jnp.ndarray, bm: int = BM, bn: int = BN, bk: int = BK) -> jnp.ndarray:
+    """(M, K) @ (K, N) → (M, N), f32, via the tiled Pallas kernel."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm = _grid_cap_tile(m, bm, 64)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    # Round tiles down to the operand but keep them ≥ 8 for lane alignment.
+    bm, bn, bk = max(bm, 1), max(bn, 1), max(bk, 1)
+    ap = _pad_to(a, bm, bk)
+    bp = _pad_to(b, bk, bn)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]

@@ -1,0 +1,90 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth the Pallas kernels (and therefore the AOT'd HLO
+artifacts executed from rust) are validated against in
+``python/tests/test_kernel.py``.
+
+Semantics (paper §3.1):
+  * ``fake_quant_ref``   — linear (uniform, symmetric max-abs) per-channel
+    quantize-dequantize [Zhou et al. 38]. ``bits == 0`` prunes the channel.
+  * ``binarize_ref``     — multi-bit residual binarization [Lin et al. 17]
+    (ABC-Net style): ``W ≈ Σ_k α_k · sign(r_k)`` with the residual update
+    ``r_{k+1} = r_k − α_k · sign(r_k)``, per channel, ``bits`` levels.
+  * ``qmatmul_ref``      — plain matmul over already-quantized operands (the
+    arithmetic the FPGA accelerators implement bit-serially; numerically it
+    is an exact f32 matmul of the dequantized values).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Residual-binarization levels are unrolled to this cap in the kernels.  The
+# paper's searched BBNs average 3-5 bits; 8 covers the searched space while
+# keeping the unrolled HLO small.  Documented in DESIGN.md.
+MAX_BBN = 8
+
+
+def _per_channel_scale(x2d: jnp.ndarray, levels: jnp.ndarray) -> jnp.ndarray:
+    """Symmetric max-abs scale per row (channel) of a (C, K) matrix."""
+    max_abs = jnp.max(jnp.abs(x2d), axis=1, keepdims=True)
+    # Avoid 0/0 for all-zero channels or pruned channels.
+    safe_levels = jnp.maximum(levels, 1.0)
+    return jnp.where(max_abs > 0.0, max_abs / safe_levels, 1.0)
+
+
+def fake_quant_ref(x2d: jnp.ndarray, bits: jnp.ndarray) -> jnp.ndarray:
+    """Per-channel linear quantize-dequantize.
+
+    Args:
+      x2d:  (C, K) float32 — channel-major view of a weight/activation tensor.
+      bits: (C,)   float32 — QBN per channel; fractional values are rounded.
+            0 ⇒ channel pruned (output 0).  ≥ 24 ⇒ passthrough (beyond f32
+            mantissa, quantization is an exact identity; also keeps
+            ``exp2`` finite).
+
+    Returns (C, K) float32 dequantized values.
+    """
+    b = jnp.round(bits).astype(jnp.float32)[:, None]  # (C, 1)
+    pruned = b <= 0.0
+    passthrough = b >= 24.0
+    # Signed symmetric quantizer: 2^(b-1) - 1 positive levels.
+    levels = jnp.exp2(jnp.clip(b, 1.0, 24.0) - 1.0) - 1.0
+    # b == 1 gives levels == 0 → degenerate; use binary {-s, +s} with s = max|x|.
+    levels = jnp.maximum(levels, 1.0)
+    scale = _per_channel_scale(x2d, levels)
+    q = jnp.round(x2d / scale)
+    q = jnp.clip(q, -levels, levels)
+    deq = q * scale
+    out = jnp.where(passthrough, x2d, deq)
+    return jnp.where(pruned, 0.0, out)
+
+
+def binarize_ref(x2d: jnp.ndarray, bits: jnp.ndarray) -> jnp.ndarray:
+    """Per-channel multi-bit residual binarization.
+
+    Args:
+      x2d:  (C, K) float32.
+      bits: (C,)   float32 — BBN per channel, rounded; effective range
+            [0, MAX_BBN].  0 ⇒ pruned.
+
+    Returns (C, K) float32 — Σ_k α_k sign(r_k) with α_k = mean|r_k| per
+    channel, accumulated for k < bits.
+    """
+    b = jnp.round(bits).astype(jnp.float32)[:, None]  # (C, 1)
+    b = jnp.clip(b, 0.0, float(MAX_BBN))
+    r = x2d
+    out = jnp.zeros_like(x2d)
+    for k in range(MAX_BBN):
+        alpha = jnp.mean(jnp.abs(r), axis=1, keepdims=True)  # (C, 1)
+        s = jnp.where(r >= 0.0, 1.0, -1.0)
+        level = alpha * s
+        active = (b > float(k)).astype(x2d.dtype)
+        out = out + active * level
+        r = r - active * level
+    return out
+
+
+def qmatmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(M, K) @ (K, N) in f32 — oracle for the Pallas tiled matmul."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)

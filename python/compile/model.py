@@ -1,0 +1,451 @@
+"""L2: the model zoo — JAX forward/backward graphs, calling kernels.*.
+
+The paper evaluates five CNNs: CIFAR10-7CNN, ResNet18, ResNet50, SqueezeNetV1
+and MobileNetV2.  Per the substitution rules (DESIGN.md), the architectures
+are preserved topologically but scaled to 32×32 / 10-class so they can be
+pre-trained, searched and fine-tuned on this CPU-only image: ``cif10`` (the
+paper's 7-conv CNN, verbatim), ``res18`` (basic-block ResNet), ``sqnet``
+(fire modules), ``monet`` (inverted-residual depthwise blocks).  ResNet50's
+bottleneck topology is represented by ``res18``'s deeper stages; the search
+behaviour the paper studies depends on the channel/topology structure, which
+is preserved.
+
+Per-channel quantization semantics (paper §3.1):
+  * every conv/fc layer's weights get one QBN/BBN per *output* channel,
+  * every conv layer's activations get one QBN/BBN per *input* channel,
+  * fully-connected layers share a single activation QBN/BBN (paper §3.2,
+    "AutoQB set the same QBN/BBN to all activation input channels in a
+    fully-connected layer"),
+  * bit-width 0 prunes the channel.
+
+The bit vectors (``wbits``: one entry per weight output channel in network
+order; ``abits``: one per activation input channel) are **runtime inputs**
+of the exported HLO, so a single artifact per model serves every point of
+the 32^channels design space the RL agent explores.
+
+Two compute paths, proven numerically identical in python/tests:
+  * ``use_pallas=True``  — routes quantize/binarize (and 1×1-conv / fc
+    matmuls) through the L1 Pallas kernels; exported as the ``*_eval_*``
+    artifacts (the search hot path).
+  * ``use_pallas=False`` — the pure-jnp reference path; used inside
+    ``train_step`` where gradients flow via STE and XLA can fuse freely.
+
+GroupNorm (stateless) replaces BatchNorm so the whole training step stays
+functional — no running statistics to thread through the AOT boundary.
+Norm/bias parameters are not quantized (standard practice; they fold into
+the accumulator on deployment).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import binarize as pallas_binarize
+from .kernels import fake_quant as pallas_fake_quant
+from .kernels import qmatmul as pallas_qmatmul
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# Architecture specs (node mini-DSL)
+# ---------------------------------------------------------------------------
+
+# Node kinds: conv / fc / pool / gap / basic (resnet block) / fire / irb.
+SPECS: Dict[str, List[Dict[str, Any]]] = {
+    # The paper's CIFAR10-7CNN: 7 conv layers + classifier.
+    "cif10": [
+        {"kind": "conv", "k": 3, "s": 1, "cout": 16},
+        {"kind": "conv", "k": 3, "s": 1, "cout": 16},
+        {"kind": "conv", "k": 3, "s": 2, "cout": 32},
+        {"kind": "conv", "k": 3, "s": 1, "cout": 32},
+        {"kind": "conv", "k": 3, "s": 2, "cout": 64},
+        {"kind": "conv", "k": 3, "s": 1, "cout": 64},
+        {"kind": "conv", "k": 3, "s": 1, "cout": 64},
+        {"kind": "gap"},
+        {"kind": "fc", "cout": 10},
+    ],
+    # ResNet-18 topology at CIFAR scale: stem + 4 stages x 2 basic blocks.
+    "res18": [
+        {"kind": "conv", "k": 3, "s": 1, "cout": 16},
+        {"kind": "basic", "cout": 16, "s": 1},
+        {"kind": "basic", "cout": 16, "s": 1},
+        {"kind": "basic", "cout": 32, "s": 2},
+        {"kind": "basic", "cout": 32, "s": 1},
+        {"kind": "basic", "cout": 64, "s": 2},
+        {"kind": "basic", "cout": 64, "s": 1},
+        {"kind": "basic", "cout": 128, "s": 2},
+        {"kind": "basic", "cout": 128, "s": 1},
+        {"kind": "gap"},
+        {"kind": "fc", "cout": 10},
+    ],
+    # SqueezeNet-V1 topology: stem + fire modules + conv classifier.
+    "sqnet": [
+        {"kind": "conv", "k": 3, "s": 1, "cout": 32},
+        {"kind": "pool", "k": 2},
+        {"kind": "fire", "sq": 16, "e1": 32, "e3": 32},
+        {"kind": "fire", "sq": 16, "e1": 32, "e3": 32},
+        {"kind": "pool", "k": 2},
+        {"kind": "fire", "sq": 32, "e1": 64, "e3": 64},
+        {"kind": "fire", "sq": 32, "e1": 64, "e3": 64},
+        {"kind": "conv", "k": 1, "s": 1, "cout": 10, "norm": False, "act": "none"},
+        {"kind": "gap_logits"},
+    ],
+    # MobileNetV2 topology: stem + inverted-residual (expand/dw/project).
+    "monet": [
+        {"kind": "conv", "k": 3, "s": 1, "cout": 16},
+        {"kind": "irb", "t": 1, "cout": 16, "s": 1},
+        {"kind": "irb", "t": 3, "cout": 24, "s": 2},
+        {"kind": "irb", "t": 3, "cout": 24, "s": 1},
+        {"kind": "irb", "t": 3, "cout": 32, "s": 2},
+        {"kind": "irb", "t": 3, "cout": 32, "s": 1},
+        {"kind": "conv", "k": 1, "s": 1, "cout": 96},
+        {"kind": "gap"},
+        {"kind": "fc", "cout": 10},
+    ],
+}
+
+MODEL_NAMES = list(SPECS.keys())
+
+IMAGE_HW = 32
+NUM_CLASSES = 10
+EVAL_BATCH = 256
+TRAIN_BATCH = 128
+
+# ---------------------------------------------------------------------------
+# Shared traversal: one walker, two backends (metadata vs compute).
+# ---------------------------------------------------------------------------
+
+
+class MetaBackend:
+    """Dry-run backend: records layer metadata and parameter specs."""
+
+    def __init__(self) -> None:
+        self.layers: List[Dict[str, Any]] = []
+        self.params: List[Dict[str, Any]] = []
+        self.w_channels = 0  # running weight-output-channel offset
+        self.a_channels = 0  # running activation-input-channel offset
+
+    # Each quantizable layer: record metadata + param specs, return None.
+    def layer(self, name: str, typ: str, k: int, s: int, cin: int, cout: int,
+              h: int, w: int, norm: bool, act: str, x: Any = None) -> Any:
+        h_out = (h + s - 1) // s
+        w_out = (w + s - 1) // s
+        groups = cin if typ == "dwconv" else 1
+        # MACs for one inference (the bit-independent logic_t of Eq. 1).
+        if typ == "fc":
+            macs = cin * cout
+        elif typ == "dwconv":
+            macs = h_out * w_out * k * k * cin
+        else:
+            macs = h_out * w_out * k * k * (cin // groups) * cout
+        n_act = 1 if typ == "fc" else cin
+        self.layers.append({
+            "name": name, "type": typ, "k": k, "stride": s,
+            "cin": cin, "cout": cout, "h_in": h, "w_in": w,
+            "h_out": h_out, "w_out": w_out, "macs": macs,
+            "w_off": self.w_channels, "w_len": cout,
+            "a_off": self.a_channels, "a_len": n_act,
+        })
+        self.w_channels += cout
+        self.a_channels += n_act
+        if typ == "fc":
+            self.params.append({"name": f"{name}.w", "shape": [cin, cout], "init": "he"})
+            self.params.append({"name": f"{name}.b", "shape": [cout], "init": "zeros"})
+        else:
+            kk = [k, k, cin // groups, cout] if typ != "dwconv" else [k, k, 1, cin]
+            self.params.append({"name": f"{name}.w", "shape": kk, "init": "he"})
+            if norm:
+                self.params.append({"name": f"{name}.g", "shape": [cout], "init": "ones"})
+                self.params.append({"name": f"{name}.bta", "shape": [cout], "init": "zeros"})
+            else:
+                self.params.append({"name": f"{name}.b", "shape": [cout], "init": "zeros"})
+        return None
+
+
+class ComputeBackend:
+    """Real backend: consumes params + bit slices in metadata order."""
+
+    def __init__(self, layers_meta, params, wbits, abits, mode, use_pallas, ste):
+        self.meta = layers_meta
+        self.params = params      # dict name -> array
+        self.wbits = wbits
+        self.abits = abits
+        self.mode = mode          # "quant" | "binar"
+        self.use_pallas = use_pallas
+        self.ste = ste            # straight-through estimator (training)
+        self.idx = 0
+
+    # -- bit application helpers -------------------------------------------
+    def _apply_bits(self, x2d: jnp.ndarray, bits: jnp.ndarray) -> jnp.ndarray:
+        if self.mode == "quant":
+            fn = pallas_fake_quant if self.use_pallas else ref.fake_quant_ref
+        else:
+            fn = pallas_binarize if self.use_pallas else ref.binarize_ref
+        q = fn(x2d, bits)
+        if self.ste:
+            q = x2d + lax.stop_gradient(q - x2d)
+        return q
+
+    def _quant_weight(self, w: jnp.ndarray, bits: jnp.ndarray) -> jnp.ndarray:
+        """Per-output-channel quantization of a conv/fc weight."""
+        if w.ndim == 2:  # fc: (cin, cout) -> rows = output channels
+            w2 = w.T
+            return self._apply_bits(w2, bits).T
+        # conv: (k, k, cin_g, cout) -> (cout, k*k*cin_g)
+        kh, kw, cin_g, cout = w.shape
+        w2 = jnp.transpose(w, (3, 0, 1, 2)).reshape(cout, kh * kw * cin_g)
+        q = self._apply_bits(w2, bits)
+        return jnp.transpose(q.reshape(cout, kh, kw, cin_g), (1, 2, 3, 0))
+
+    def _quant_act(self, x: jnp.ndarray, bits: jnp.ndarray) -> jnp.ndarray:
+        """Per-input-channel quantization of an activation tensor."""
+        if x.ndim == 2:  # fc input: single shared channel (paper §3.2)
+            n, c = x.shape
+            x2 = x.reshape(1, n * c)
+            return self._apply_bits(x2, bits).reshape(n, c)
+        n, h, w, c = x.shape
+        x2 = jnp.transpose(x, (3, 0, 1, 2)).reshape(c, n * h * w)
+        q = self._apply_bits(x2, bits)
+        return jnp.transpose(q.reshape(c, n, h, w), (1, 2, 3, 0))
+
+    # -- the quantizable layer ---------------------------------------------
+    def layer(self, name, typ, k, s, cin, cout, h, w, norm, act, x):
+        m = self.meta[self.idx]
+        self.idx += 1
+        assert m["name"] == name, f"meta walk diverged: {m['name']} vs {name}"
+        wb = lax.dynamic_slice(self.wbits, (m["w_off"],), (m["w_len"],))
+        ab = lax.dynamic_slice(self.abits, (m["a_off"],), (m["a_len"],))
+        weight = self.params[f"{name}.w"]
+        x = self._quant_act(x, ab)
+        weight = self._quant_weight(weight, wb)
+
+        if typ == "fc":
+            if self.use_pallas:
+                y = pallas_qmatmul(x, weight)
+            else:
+                y = jnp.matmul(x, weight)
+            return y + self.params[f"{name}.b"]
+
+        if typ == "conv" and k == 1 and s == 1:
+            # Pointwise conv == matmul over flattened pixels (Pallas path).
+            n, hh, ww, c = x.shape
+            xf = x.reshape(n * hh * ww, c)
+            wf = weight.reshape(c, cout)
+            y = pallas_qmatmul(xf, wf) if self.use_pallas else jnp.matmul(xf, wf)
+            y = y.reshape(n, hh, ww, cout)
+        else:
+            groups = cin if typ == "dwconv" else 1
+            y = lax.conv_general_dilated(
+                x, weight,
+                window_strides=(s, s), padding="SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                feature_group_count=groups,
+            )
+        if norm:
+            y = group_norm(y, self.params[f"{name}.g"], self.params[f"{name}.bta"])
+        else:
+            y = y + self.params[f"{name}.b"]
+        if act == "relu":
+            y = jax.nn.relu(y)
+        return y
+
+
+def group_norm(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray, groups: int = 8) -> jnp.ndarray:
+    """Stateless GroupNorm over NHWC, ``groups`` divides C (fallback 1)."""
+    n, h, w, c = x.shape
+    gr = groups if c % groups == 0 else 1
+    xg = x.reshape(n, h, w, gr, c // gr)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xn = (xg - mu) * lax.rsqrt(var + 1e-5)
+    return xn.reshape(n, h, w, c) * g + b
+
+
+def _walk(spec: List[Dict[str, Any]], backend, x, h: int, w: int, c: int):
+    """Shared traversal over the node DSL.
+
+    For MetaBackend ``x`` is None and only shapes (h, w, c) are threaded;
+    for ComputeBackend the activation tensor is threaded too.
+    """
+    li = 0  # primitive layer counter (names must be deterministic)
+
+    def nm(base):
+        nonlocal li
+        li += 1
+        return f"l{li:02d}_{base}"
+
+    compute = x is not None
+    for node in spec:
+        kind = node["kind"]
+        if kind == "conv":
+            norm = node.get("norm", True)
+            act = node.get("act", "relu")
+            name = nm("conv")
+            y = backend.layer(name, "conv", node["k"], node["s"], c, node["cout"], h, w, norm, act, x)
+            h = (h + node["s"] - 1) // node["s"]
+            w = (w + node["s"] - 1) // node["s"]
+            c = node["cout"]
+            x = y if compute else None
+        elif kind == "fc":
+            name = nm("fc")
+            y = backend.layer(name, "fc", 1, 1, c, node["cout"], 1, 1, False, "none", x)
+            c = node["cout"]
+            x = y if compute else None
+        elif kind == "pool":
+            if compute:
+                x = lax.reduce_window(x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+            h, w = h // 2, w // 2
+        elif kind == "gap":
+            if compute:
+                x = jnp.mean(x, axis=(1, 2))
+            h = w = 1
+        elif kind == "gap_logits":
+            if compute:
+                x = jnp.mean(x, axis=(1, 2))
+            h = w = 1
+        elif kind == "basic":
+            cout, s = node["cout"], node["s"]
+            proj = (s != 1) or (c != cout)
+            inp = x
+            y = backend.layer(nm("conv"), "conv", 3, s, c, cout, h, w, True, "relu", x)
+            h2 = (h + s - 1) // s
+            w2 = (w + s - 1) // s
+            y = backend.layer(nm("conv"), "conv", 3, 1, cout, cout, h2, w2, True, "none", y)
+            if proj:
+                sc = backend.layer(nm("proj"), "conv", 1, s, c, cout, h, w, True, "none", inp)
+            else:
+                sc = inp
+            if compute:
+                x = jax.nn.relu(y + sc)
+            h, w, c = h2, w2, cout
+        elif kind == "fire":
+            sq, e1, e3 = node["sq"], node["e1"], node["e3"]
+            sqz = backend.layer(nm("squeeze"), "conv", 1, 1, c, sq, h, w, True, "relu", x)
+            a = backend.layer(nm("expand1"), "conv", 1, 1, sq, e1, h, w, True, "relu", sqz)
+            b = backend.layer(nm("expand3"), "conv", 3, 1, sq, e3, h, w, True, "relu", sqz)
+            if compute:
+                x = jnp.concatenate([a, b], axis=-1)
+            c = e1 + e3
+        elif kind == "irb":
+            t, cout, s = node["t"], node["cout"], node["s"]
+            cexp = c * t
+            inp = x
+            y = x
+            if t != 1:
+                y = backend.layer(nm("expand"), "conv", 1, 1, c, cexp, h, w, True, "relu", y)
+            y = backend.layer(nm("dw"), "dwconv", 3, s, cexp, cexp, h, w, True, "relu", y)
+            h2 = (h + s - 1) // s
+            w2 = (w + s - 1) // s
+            y = backend.layer(nm("project"), "conv", 1, 1, cexp, cout, h2, w2, True, "none", y)
+            if compute:
+                x = (inp + y) if (s == 1 and c == cout) else y
+            h, w, c = h2, w2, cout
+        else:
+            raise ValueError(f"unknown node kind {kind!r}")
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Public model API
+# ---------------------------------------------------------------------------
+
+
+def model_meta(name: str) -> Dict[str, Any]:
+    """Layer metadata + parameter specs for ``name`` (consumed by rust)."""
+    be = MetaBackend()
+    _walk(SPECS[name], be, None, IMAGE_HW, IMAGE_HW, 3)
+    return {
+        "name": name,
+        "image_hw": IMAGE_HW,
+        "num_classes": NUM_CLASSES,
+        "eval_batch": EVAL_BATCH,
+        "train_batch": TRAIN_BATCH,
+        "layers": be.layers,
+        "params": be.params,
+        "w_channels": be.w_channels,
+        "a_channels": be.a_channels,
+        "total_macs": sum(l["macs"] for l in be.layers),
+    }
+
+
+def forward(name: str, params: Dict[str, jnp.ndarray], images: jnp.ndarray,
+            wbits: jnp.ndarray, abits: jnp.ndarray, mode: str,
+            use_pallas: bool, ste: bool = False) -> jnp.ndarray:
+    """Logits for a batch under a per-channel bit configuration."""
+    meta = model_meta(name)
+    be = ComputeBackend(meta["layers"], params, wbits, abits, mode, use_pallas, ste)
+    logits = _walk(SPECS[name], be, images, IMAGE_HW, IMAGE_HW, 3)
+    assert be.idx == len(meta["layers"])
+    return logits
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def eval_fn(name: str, mode: str, use_pallas: bool):
+    """Builds eval(params..., images, labels, wbits, abits) -> (correct, loss).
+
+    Returned callable takes a flat list of param arrays in manifest order.
+    """
+    meta = model_meta(name)
+    pnames = [p["name"] for p in meta["params"]]
+
+    def f(*args):
+        np_ = len(pnames)
+        params = dict(zip(pnames, args[:np_]))
+        images, labels, wbits, abits = args[np_:]
+        logits = forward(name, params, images, wbits, abits, mode, use_pallas)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+        loss = cross_entropy(logits, labels)
+        return correct, loss
+
+    return f, meta
+
+
+def train_fn(name: str, mode: str):
+    """Builds train(params..., momenta..., images, labels, wbits, abits, lr)
+    -> (new_params..., new_momenta..., loss).  SGD with momentum 0.9, STE
+    through the quantizers.  Pure-jnp path (see module docstring)."""
+    meta = model_meta(name)
+    pnames = [p["name"] for p in meta["params"]]
+    np_ = len(pnames)
+
+    def loss_fn(plist, images, labels, wbits, abits):
+        params = dict(zip(pnames, plist))
+        logits = forward(name, params, images, wbits, abits, mode,
+                         use_pallas=False, ste=True)
+        return cross_entropy(logits, labels)
+
+    def f(*args):
+        plist = list(args[:np_])
+        mlist = list(args[np_:2 * np_])
+        images, labels, wbits, abits, lr = args[2 * np_:]
+        loss, grads = jax.value_and_grad(loss_fn)(plist, images, labels, wbits, abits)
+        new_m = [0.9 * m + g for m, g in zip(mlist, grads)]
+        new_p = [p - lr * m for p, m in zip(plist, new_m)]
+        return tuple(new_p) + tuple(new_m) + (loss,)
+
+    return f, meta
+
+
+def example_args(meta: Dict[str, Any], kind: str):
+    """ShapeDtypeStructs for lowering (kind: 'eval' | 'train')."""
+    f32 = jnp.float32
+    ps = [jax.ShapeDtypeStruct(tuple(p["shape"]), f32) for p in meta["params"]]
+    wb = jax.ShapeDtypeStruct((meta["w_channels"],), f32)
+    ab = jax.ShapeDtypeStruct((meta["a_channels"],), f32)
+    if kind == "eval":
+        img = jax.ShapeDtypeStruct((EVAL_BATCH, IMAGE_HW, IMAGE_HW, 3), f32)
+        lbl = jax.ShapeDtypeStruct((EVAL_BATCH,), jnp.int32)
+        return ps + [img, lbl, wb, ab]
+    img = jax.ShapeDtypeStruct((TRAIN_BATCH, IMAGE_HW, IMAGE_HW, 3), f32)
+    lbl = jax.ShapeDtypeStruct((TRAIN_BATCH,), jnp.int32)
+    lr = jax.ShapeDtypeStruct((), f32)
+    return ps + ps + [img, lbl, wb, ab, lr]

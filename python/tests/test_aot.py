@@ -1,0 +1,88 @@
+"""AOT contract tests: the manifest written by compile.aot matches what the
+rust runtime expects, and lowered HLO text is parseable/stable."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import agent as A
+from compile import model as M
+from compile.aot import to_hlo_text
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_roundtrip_small():
+    def fn(x):
+        return (x * 2.0 + 1.0,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[4]" in text
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="run `make artifacts` first")
+class TestManifest:
+    @pytest.fixture(autouse=True)
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            self.man = json.load(f)
+
+    def test_all_artifact_files_exist(self):
+        for name, spec in self.man["artifacts"].items():
+            path = os.path.join(ART, spec["file"])
+            assert os.path.exists(path), f"{name}: {path} missing"
+            assert os.path.getsize(path) > 100
+
+    def test_model_families_complete(self):
+        for m in M.MODEL_NAMES:
+            for fam in ("eval_quant", "eval_binar", "train_quant", "train_binar"):
+                assert f"{m}_{fam}" in self.man["artifacts"]
+
+    def test_eval_input_arity(self):
+        for m in M.MODEL_NAMES:
+            meta = self.man["models"][m]
+            spec = self.man["artifacts"][f"{m}_eval_quant"]
+            assert len(spec["inputs"]) == len(meta["params"]) + 4
+            # Last two inputs are the bit vectors.
+            assert spec["inputs"][-2]["shape"] == [meta["w_channels"]]
+            assert spec["inputs"][-1]["shape"] == [meta["a_channels"]]
+            # Outputs: (correct, loss) scalars.
+            assert [o["shape"] for o in spec["outputs"]] == [[], []]
+
+    def test_train_io_symmetry(self):
+        for m in M.MODEL_NAMES:
+            meta = self.man["models"][m]
+            spec = self.man["artifacts"][f"{m}_train_quant"]
+            np_ = len(meta["params"])
+            assert len(spec["inputs"]) == 2 * np_ + 5
+            assert len(spec["outputs"]) == 2 * np_ + 1
+            # Param shapes echo manifest order in both directions.
+            for i, p in enumerate(meta["params"]):
+                assert spec["inputs"][i]["shape"] == p["shape"]
+                assert spec["outputs"][i]["shape"] == p["shape"]
+
+    def test_agent_artifacts(self):
+        for s in (16, 17):
+            act = self.man["artifacts"][f"ddpg_act_s{s}"]
+            assert act["inputs"][-1]["shape"] == [A.ACT_BATCH, s]
+            assert act["outputs"][0]["shape"] == [A.ACT_BATCH, 1]
+            upd = self.man["artifacts"][f"ddpg_update_s{s}"]
+            assert len(upd["inputs"]) == 58
+            assert len(upd["outputs"]) == 51
+
+    def test_model_meta_matches_live_builder(self):
+        """The shipped manifest must agree with model.py's current output —
+        guards against stale artifacts after editing the zoo."""
+        for m in M.MODEL_NAMES:
+            live = M.model_meta(m)
+            baked = self.man["models"][m]
+            assert baked["w_channels"] == live["w_channels"]
+            assert baked["a_channels"] == live["a_channels"]
+            assert baked["total_macs"] == live["total_macs"]
+            assert len(baked["layers"]) == len(live["layers"])

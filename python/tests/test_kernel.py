@@ -1,0 +1,168 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes, bit-vectors and block sizes; assert_allclose
+against the reference.  This is the CORE correctness signal for everything
+the rust coordinator executes.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import binarize, fake_quant, qmatmul, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.normal(size=shape) * scale).astype("float32"))
+
+
+# ---------------------------------------------------------------------------
+# fake_quant
+# ---------------------------------------------------------------------------
+
+
+@given(
+    c=st.integers(1, 70),
+    k=st.integers(1, 130),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fake_quant_matches_ref(c, k, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(c, k)).astype("float32"))
+    bits = jnp.asarray(rng.integers(0, 33, size=(c,)).astype("float32"))
+    np.testing.assert_allclose(
+        np.asarray(fake_quant(x, bits)),
+        np.asarray(ref.fake_quant_ref(x, bits)),
+        rtol=0,
+        atol=0,
+    )
+
+
+@pytest.mark.parametrize("block_c", [1, 4, 16, 64])
+def test_fake_quant_block_size_invariant(block_c):
+    x = rand((37, 23), seed=3)
+    bits = jnp.asarray(np.arange(37, dtype="float32") % 9)
+    out = fake_quant(x, bits, block_c=block_c)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref.fake_quant_ref(x, bits)))
+
+
+def test_fake_quant_zero_bits_prunes():
+    x = rand((4, 8), seed=1)
+    out = fake_quant(x, jnp.zeros(4))
+    assert np.all(np.asarray(out) == 0.0)
+
+
+def test_fake_quant_32_bits_passthrough():
+    x = rand((4, 8), seed=2)
+    out = fake_quant(x, jnp.full((4,), 32.0))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+def test_fake_quant_levels():
+    # 2-bit symmetric quantizer: 2^(2-1)-1 = 1 level each side → values in
+    # {-s, 0, +s} where s = max|row|.
+    x = jnp.asarray([[0.9, -0.4, 0.1, -0.95]], dtype=jnp.float32)
+    out = np.asarray(fake_quant(x, jnp.full((1,), 2.0)))[0]
+    s = 0.95
+    for v in out:
+        assert min(abs(v - t) for t in (-s, 0.0, s)) < 1e-6
+
+
+def test_fake_quant_monotone_error_in_bits():
+    # Quantization error must not increase with more bits (per channel).
+    x = rand((1, 256), seed=5)
+    errs = []
+    for b in [2, 3, 4, 6, 8]:
+        q = fake_quant(x, jnp.full((1,), float(b)))
+        errs.append(float(jnp.mean(jnp.abs(q - x))))
+    assert all(a >= b - 1e-9 for a, b in zip(errs, errs[1:])), errs
+
+
+# ---------------------------------------------------------------------------
+# binarize
+# ---------------------------------------------------------------------------
+
+
+@given(
+    c=st.integers(1, 40),
+    k=st.integers(1, 90),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_binarize_matches_ref(c, k, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(c, k)).astype("float32"))
+    bits = jnp.asarray(rng.integers(0, ref.MAX_BBN + 1, size=(c,)).astype("float32"))
+    np.testing.assert_allclose(
+        np.asarray(binarize(x, bits)),
+        np.asarray(ref.binarize_ref(x, bits)),
+        rtol=1e-6,
+        atol=1e-6,
+    )
+
+
+def test_binarize_one_bit_is_sign_times_mean():
+    x = rand((2, 64), seed=7)
+    out = np.asarray(binarize(x, jnp.ones(2)))
+    xn = np.asarray(x)
+    for c in range(2):
+        alpha = np.mean(np.abs(xn[c]))
+        expect = np.where(xn[c] >= 0, alpha, -alpha)
+        np.testing.assert_allclose(out[c], expect, rtol=1e-6)
+
+
+def test_binarize_residual_error_decreases():
+    x = rand((1, 512), seed=9)
+    errs = []
+    for b in range(1, ref.MAX_BBN + 1):
+        out = binarize(x, jnp.full((1,), float(b)))
+        errs.append(float(jnp.mean((out - x) ** 2)))
+    assert all(a > b for a, b in zip(errs, errs[1:])), errs
+
+
+def test_binarize_zero_bits_prunes():
+    x = rand((3, 16), seed=11)
+    assert np.all(np.asarray(binarize(x, jnp.zeros(3))) == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# qmatmul
+# ---------------------------------------------------------------------------
+
+
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qmatmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, k)).astype("float32"))
+    b = jnp.asarray(rng.normal(size=(k, n)).astype("float32"))
+    np.testing.assert_allclose(
+        np.asarray(qmatmul(a, b)),
+        np.asarray(ref.qmatmul_ref(a, b)),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (32, 16, 64), (128, 128, 128)])
+def test_qmatmul_tile_size_invariant(bm, bn, bk):
+    a = rand((50, 33), seed=13)
+    b = rand((33, 41), seed=14)
+    out = qmatmul(a, b, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.qmatmul_ref(a, b)), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_qmatmul_identity():
+    a = rand((17, 17), seed=15)
+    eye = jnp.eye(17, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(qmatmul(a, eye)), np.asarray(a), rtol=1e-6)

@@ -1,0 +1,168 @@
+"""L2 correctness: model zoo metadata/compute consistency and quantization
+semantics at the model level."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+
+def init_params(meta, seed=0):
+    rng = np.random.default_rng(seed)
+    out = {}
+    for p in meta["params"]:
+        shp = p["shape"]
+        if p["init"] == "he":
+            fan_in = int(np.prod(shp[:-1])) if len(shp) > 1 else shp[0]
+            out[p["name"]] = jnp.asarray(
+                rng.normal(0, np.sqrt(2.0 / max(fan_in, 1)), shp).astype("float32")
+            )
+        elif p["init"] == "ones":
+            out[p["name"]] = jnp.ones(shp, "float32")
+        else:
+            out[p["name"]] = jnp.zeros(shp, "float32")
+    return out
+
+
+@pytest.fixture(scope="module")
+def small_batch():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.normal(size=(4, 32, 32, 3)).astype("float32"))
+
+
+@pytest.mark.parametrize("name", M.MODEL_NAMES)
+def test_meta_channel_slices_tile(name):
+    meta = M.model_meta(name)
+    w_total = sum(l["w_len"] for l in meta["layers"])
+    a_total = sum(l["a_len"] for l in meta["layers"])
+    assert w_total == meta["w_channels"]
+    assert a_total == meta["a_channels"]
+    # Slices are contiguous and ordered.
+    off = 0
+    for l in meta["layers"]:
+        assert l["w_off"] == off
+        off += l["w_len"]
+
+
+@pytest.mark.parametrize("name", M.MODEL_NAMES)
+def test_meta_macs_positive_and_fc_single_act(name):
+    meta = M.model_meta(name)
+    for l in meta["layers"]:
+        assert l["macs"] > 0
+        if l["type"] == "fc":
+            assert l["a_len"] == 1  # paper §3.2
+        else:
+            assert l["a_len"] == l["cin"]
+        assert l["w_len"] == l["cout"]
+
+
+@pytest.mark.parametrize("name", M.MODEL_NAMES)
+def test_forward_shapes(name, small_batch):
+    meta = M.model_meta(name)
+    params = init_params(meta)
+    wb = jnp.full((meta["w_channels"],), 8.0)
+    ab = jnp.full((meta["a_channels"],), 8.0)
+    logits = M.forward(name, params, small_batch, wb, ab, "quant", use_pallas=False)
+    assert logits.shape == (4, M.NUM_CLASSES)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", ["cif10", "sqnet"])
+def test_pallas_path_matches_ref_path_quant(name, small_batch):
+    """Quant mode is bit-exact between the Pallas and reference paths."""
+    meta = M.model_meta(name)
+    params = init_params(meta)
+    wb = jnp.full((meta["w_channels"],), 5.0)
+    ab = jnp.full((meta["a_channels"],), 5.0)
+    lp = M.forward(name, params, small_batch, wb, ab, "quant", use_pallas=True)
+    lr = M.forward(name, params, small_batch, wb, ab, "quant", use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(lp), np.asarray(lr))
+
+
+def test_pallas_path_matches_ref_path_binar(small_batch):
+    """Binar mode: sign() boundaries amplify fp accumulation-order noise, so
+    the two paths agree statistically (see DESIGN.md), not bit-exactly."""
+    meta = M.model_meta("cif10")
+    params = init_params(meta)
+    wb = jnp.full((meta["w_channels"],), 4.0)
+    ab = jnp.full((meta["a_channels"],), 4.0)
+    lp = M.forward("cif10", params, small_batch, wb, ab, "binar", use_pallas=True)
+    lr = M.forward("cif10", params, small_batch, wb, ab, "binar", use_pallas=False)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lr), rtol=1e-2, atol=1e-2)
+
+
+def test_bits32_equals_unquantized(small_batch):
+    """32-bit config must match the raw float forward exactly (passthrough)."""
+    meta = M.model_meta("cif10")
+    params = init_params(meta)
+    wb32 = jnp.full((meta["w_channels"],), 32.0)
+    ab32 = jnp.full((meta["a_channels"],), 32.0)
+    l32 = M.forward("cif10", params, small_batch, wb32, ab32, "quant", use_pallas=False)
+    assert l32.shape == (4, 10)
+    # Degrading one layer to 1 bit must change the logits.
+    wb_low = wb32.at[:16].set(1.0)
+    l_low = M.forward("cif10", params, small_batch, wb_low, ab32, "quant", use_pallas=False)
+    assert float(jnp.max(jnp.abs(l32 - l_low))) > 1e-4
+
+
+def test_pruned_first_layer_kills_signal(small_batch):
+    meta = M.model_meta("cif10")
+    params = init_params(meta)
+    wb = jnp.full((meta["w_channels"],), 32.0).at[:16].set(0.0)  # prune layer 1
+    ab = jnp.full((meta["a_channels"],), 32.0)
+    logits = M.forward("cif10", params, small_batch, wb, ab, "quant", use_pallas=False)
+    # All images produce identical logits (no input-dependent signal).
+    diffs = jnp.max(jnp.abs(logits - logits[0:1]))
+    assert float(diffs) < 1e-5
+
+
+def test_eval_fn_counts_correct(small_batch):
+    meta = M.model_meta("cif10")
+    f, _ = M.eval_fn("cif10", "quant", use_pallas=False)
+    params = init_params(meta)
+    plist = [params[p["name"]] for p in meta["params"]]
+    # Use the real eval batch size for the exported signature.
+    rng = np.random.default_rng(1)
+    images = jnp.asarray(rng.normal(size=(M.EVAL_BATCH, 32, 32, 3)).astype("float32"))
+    labels = jnp.asarray(rng.integers(0, 10, size=(M.EVAL_BATCH,)).astype("int32"))
+    wb = jnp.full((meta["w_channels"],), 32.0)
+    ab = jnp.full((meta["a_channels"],), 32.0)
+    correct, loss = f(*plist, images, labels, wb, ab)
+    assert 0.0 <= float(correct) <= M.EVAL_BATCH
+    assert float(loss) > 0.0
+
+
+def test_train_fn_reduces_loss():
+    """A few STE train steps on a fixed batch must reduce the loss."""
+    name = "cif10"
+    meta = M.model_meta(name)
+    f, _ = M.train_fn(name, "quant")
+    params = init_params(meta, seed=3)
+    plist = [params[p["name"]] for p in meta["params"]]
+    mlist = [jnp.zeros_like(p) for p in plist]
+    rng = np.random.default_rng(2)
+    images = jnp.asarray(rng.normal(size=(M.TRAIN_BATCH, 32, 32, 3)).astype("float32"))
+    labels = jnp.asarray((np.arange(M.TRAIN_BATCH) % 10).astype("int32"))
+    wb = jnp.full((meta["w_channels"],), 32.0)
+    ab = jnp.full((meta["a_channels"],), 32.0)
+    lr = jnp.asarray(0.05, dtype=jnp.float32)
+    jf = jax.jit(f)
+    np_ = len(plist)
+    losses = []
+    for _ in range(6):
+        outs = jf(*plist, *mlist, images, labels, wb, ab, lr)
+        plist = list(outs[:np_])
+        mlist = list(outs[np_:2 * np_])
+        losses.append(float(outs[-1]))
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize("name", M.MODEL_NAMES)
+def test_example_args_match_manifest_contract(name):
+    meta = M.model_meta(name)
+    ev = M.example_args(meta, "eval")
+    assert len(ev) == len(meta["params"]) + 4
+    tr = M.example_args(meta, "train")
+    assert len(tr) == 2 * len(meta["params"]) + 5

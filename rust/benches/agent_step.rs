@@ -1,0 +1,41 @@
+//! Bench: the DDPG hot path — actor dispatch (one per channel per episode)
+//! and the fused update step (hundreds per episode).  These dominate Fig-8
+//! search wall-clock, so they are the L3 optimization target.
+
+use autoq::agent::{DdpgAgent, DdpgHyper, ReplayBuffer, Transition};
+use autoq::runtime::Runtime;
+use autoq::util::bench::bench;
+use autoq::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    println!("== agent_step bench (search-loop hot path) ==");
+    let mut rt = Runtime::open_default()?;
+    let mut rng = Rng::new(1);
+    let meta16 = rt.manifest.agent(16)?.clone();
+    let agent = DdpgAgent::new(meta16.clone(), DdpgHyper::default(), &mut rng);
+
+    let state = vec![0.3f32; 16];
+    bench("ddpg act_one (s16)", 5, 200, || {
+        agent.act_one(&mut rt, &state).unwrap()
+    });
+    let states128 = vec![0.3f32; 128 * 16];
+    bench("ddpg act batched (128 states)", 5, 200, || {
+        agent.act(&mut rt, &states128, 128).unwrap()
+    });
+
+    let mut replay = ReplayBuffer::new(2000);
+    for i in 0..512 {
+        replay.push(Transition {
+            s: vec![i as f32 / 512.0; 16],
+            a: (i % 32) as f32,
+            r: 0.1,
+            s2: vec![(i + 1) as f32 / 512.0; 16],
+            done: i % 50 == 0,
+        });
+    }
+    let mut agent2 = DdpgAgent::new(meta16, DdpgHyper::default(), &mut rng);
+    bench("ddpg update (batch 64, fused adam+targets)", 3, 100, || {
+        agent2.update(&mut rt, &replay, &mut rng).unwrap()
+    });
+    Ok(())
+}

@@ -1,0 +1,30 @@
+//! Bench: Fig-1 hardware cost model + the m(N)/p(N) logic-op audit that
+//! runs inside every reward evaluation (Tables 2-4 inner loop, L3 hot path).
+
+use autoq::cost::hardware::{fig1_table, normalized_cost, Mode};
+use autoq::cost::logic::model_cost;
+use autoq::runtime::Manifest;
+use autoq::util::bench::bench;
+
+fn main() {
+    println!("== cost_model bench (Fig 1 + NetScore cost audit) ==");
+    bench("fig1_table(32)", 10, 1000, || fig1_table(32));
+    bench("normalized_cost(quant 5x5)", 10, 1000, || {
+        normalized_cost(Mode::Quant, 5, 5)
+    });
+
+    // Model-scale audit on the real manifest (if artifacts are built).
+    let Ok(man) = Manifest::load(std::path::Path::new("artifacts")) else {
+        println!("(artifacts missing — run `make artifacts` for model-scale rows)");
+        return;
+    };
+    for model in ["cif10", "res18", "sqnet", "monet"] {
+        let meta = man.model(model).unwrap();
+        let wbits = vec![5u8; meta.w_channels];
+        let abits = vec![5u8; meta.a_channels];
+        let layers = meta.layers.clone();
+        bench(&format!("model_cost({model})"), 10, 2000, || {
+            model_cost(&layers, &wbits, &abits)
+        });
+    }
+}

@@ -1,0 +1,49 @@
+//! Bench: the cycle-level FPGA simulators behind Figs 9-12 — per-inference
+//! simulation latency and the full fig-9 grid regeneration rate.
+
+use autoq::cost::Mode;
+use autoq::runtime::Manifest;
+use autoq::sim::{Arch, FpgaSim};
+use autoq::util::bench::bench;
+
+fn main() {
+    println!("== fpga_sim bench (Figs 9-12 substrate) ==");
+    let Ok(man) = Manifest::load(std::path::Path::new("artifacts")) else {
+        println!("run `make artifacts` first");
+        return;
+    };
+    for model in ["res18", "monet"] {
+        let meta = man.model(model).unwrap().clone();
+        let wbits: Vec<u8> = (0..meta.w_channels).map(|i| 3 + (i % 4) as u8).collect();
+        let abits: Vec<u8> = (0..meta.a_channels).map(|i| 3 + (i % 3) as u8).collect();
+        for arch in [Arch::Temporal, Arch::Spatial] {
+            for mode in [Mode::Quant, Mode::Binar] {
+                let sim = FpgaSim::new(arch, mode);
+                let layers = meta.layers.clone();
+                let (w, a) = (wbits.clone(), abits.clone());
+                bench(
+                    &format!("sim {model} {} {}", arch.as_str(), mode.as_str()),
+                    5,
+                    500,
+                    move || sim.run(&layers, &w, &a),
+                );
+            }
+        }
+    }
+    // Whole fig-9 style grid (4 granularity rows × 2 modes × 2 archs).
+    let meta = man.model("monet").unwrap().clone();
+    bench("fig9 grid (monet, 16 sims)", 2, 100, || {
+        let mut acc = 0.0;
+        for mode in [Mode::Quant, Mode::Binar] {
+            for arch in [Arch::Temporal, Arch::Spatial] {
+                for bits in [32u8, 5, 4, 3] {
+                    let sim = FpgaSim::new(arch, mode);
+                    let w = vec![bits; meta.w_channels];
+                    let a = vec![bits; meta.a_channels];
+                    acc += sim.run(&meta.layers, &w, &a).fps;
+                }
+            }
+        }
+        acc
+    });
+}

@@ -1,0 +1,28 @@
+//! Bench: miniature Table-2/Table-3 row generation — a complete
+//! (search → best config → cost audit) cell per mode at reduced episode
+//! count, timing what `autoq repro table2/table3` pays per row.
+
+use autoq::cost::Mode;
+use autoq::data::synth::SynthDataset;
+use autoq::repro::common::runner_for;
+use autoq::runtime::Runtime;
+use autoq::search::{run_search, Granularity, Protocol, SearchConfig};
+use autoq::util::bench::bench;
+
+fn main() -> anyhow::Result<()> {
+    println!("== table_rows bench (Table 2 quant / Table 3 binar cells) ==");
+    let mut rt = Runtime::open_default()?;
+    let runner = runner_for(&mut rt, "cif10")?;
+    let data = SynthDataset::new(42);
+    for mode in [Mode::Quant, Mode::Binar] {
+        for gran in [Granularity::Network(5), Granularity::Layer, Granularity::Channel] {
+            let mut cfg = SearchConfig::quick(mode, Protocol::accuracy_guaranteed(), gran);
+            cfg.episodes = 4;
+            cfg.warmup = 2;
+            cfg.eval_batches = 1;
+            let label = format!("cell cif10-{} {} (4 episodes)", gran.tag(), mode.as_str());
+            bench(&label, 0, 2, || run_search(&mut rt, &runner, &data, &cfg).unwrap());
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,209 @@
+//! DDPG agent: rust owns every parameter/optimizer buffer; the actor
+//! forward pass and the fused update step are AOT'd HLO artifacts
+//! (`ddpg_act_s{S}`, `ddpg_update_s{S}`) executed via PJRT.
+//!
+//! One `DdpgAgent` instance is a *flat* DDPG.  The hierarchical agent
+//! (hiro.rs) composes four of them: weight/activation HLC (S=16) and
+//! weight/activation LLC (S=17, state ⊕ goal).
+
+use xla::Literal;
+
+use crate::agent::replay::{ReplayBuffer, Transition};
+use crate::runtime::{AgentMeta, Runtime, Tensor};
+use crate::util::rng::Rng;
+
+/// Hyper-parameters of one DDPG update call.
+#[derive(Debug, Clone, Copy)]
+pub struct DdpgHyper {
+    pub gamma: f32,
+    pub tau: f32,
+    pub lr_actor: f32,
+    pub lr_critic: f32,
+}
+
+impl Default for DdpgHyper {
+    fn default() -> Self {
+        // τ from the paper; γ/lrs standard DDPG values.
+        DdpgHyper { gamma: 0.99, tau: 0.01, lr_actor: 1e-4, lr_critic: 1e-3 }
+    }
+}
+
+pub struct DdpgAgent {
+    pub meta: AgentMeta,
+    pub hyper: DdpgHyper,
+    // All network/optimizer state is held as XLA literals so update/act
+    // dispatches borrow them directly — no Tensor↔Literal copy per call
+    // (EXPERIMENTS.md §Perf, L3 iteration 2).  Order: actor(6), critic(6),
+    // t_actor(6), t_critic(6), m_a(6), v_a(6), m_c(6), v_c(6).
+    state: Vec<Literal>,
+    t: f32,
+    act_name: String,
+    update_name: String,
+    pub last_critic_loss: f32,
+    pub last_actor_loss: f32,
+    pub updates: u64,
+}
+
+/// DDPG-standard MLP init: hidden layers U(±1/√fan_in), output layer
+/// U(±3e-3) so initial actions sit mid-range (sigmoid(≈0)·32 ≈ 16).
+fn init_mlp(shapes: &[Vec<usize>], rng: &mut Rng) -> Vec<Tensor> {
+    let n = shapes.len();
+    shapes
+        .iter()
+        .enumerate()
+        .map(|(i, shp)| {
+            let mut t = Tensor::zeros(shp.clone());
+            let is_weight = shp.len() == 2;
+            let last_pair = i >= n - 2;
+            if is_weight {
+                let bound = if last_pair { 3e-3 } else { 1.0 / (shp[0] as f32).sqrt() };
+                for x in t.data.iter_mut() {
+                    *x = (rng.f32() * 2.0 - 1.0) * bound;
+                }
+            }
+            t
+        })
+        .collect()
+}
+
+impl DdpgAgent {
+    pub fn new(meta: AgentMeta, hyper: DdpgHyper, rng: &mut Rng) -> Self {
+        let actor = init_mlp(&meta.actor_shapes, rng);
+        let critic = init_mlp(&meta.critic_shapes, rng);
+        let zeros = |src: &[Tensor]| -> Vec<Tensor> {
+            src.iter().map(|t| Tensor::zeros(t.shape.clone())).collect()
+        };
+        let groups: Vec<Vec<Tensor>> = vec![
+            actor.clone(),
+            critic.clone(),
+            actor.clone(),  // target actor
+            critic.clone(), // target critic
+            zeros(&actor),
+            zeros(&actor),
+            zeros(&critic),
+            zeros(&critic),
+        ];
+        let state = groups
+            .iter()
+            .flatten()
+            .map(|t| t.to_literal().expect("literal init"))
+            .collect();
+        let s = meta.s_dim;
+        DdpgAgent {
+            hyper,
+            state,
+            t: 0.0,
+            act_name: format!("ddpg_act_s{s}"),
+            update_name: format!("ddpg_update_s{s}"),
+            meta,
+            last_critic_loss: 0.0,
+            last_actor_loss: 0.0,
+            updates: 0,
+        }
+    }
+
+    /// The 6 actor-parameter literals (the first group of `state`).
+    fn actor_literals(&self) -> &[Literal] {
+        &self.state[0..6]
+    }
+
+    /// Deterministic policy μ(s) for up to `act_batch` states in one
+    /// executable call.  `states` is row-major (n, s_dim); n ≤ act_batch.
+    pub fn act(&self, rt: &mut Runtime, states: &[f32], n: usize) -> anyhow::Result<Vec<f32>> {
+        let s_dim = self.meta.s_dim;
+        let b = self.meta.act_batch;
+        anyhow::ensure!(n <= b, "act batch {n} exceeds artifact batch {b}");
+        anyhow::ensure!(states.len() == n * s_dim, "states len");
+        let mut padded = vec![0.0f32; b * s_dim];
+        padded[..n * s_dim].copy_from_slice(states);
+        let states_lit = Tensor::new(vec![b, s_dim], padded).to_literal()?;
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(7);
+        inputs.extend(self.actor_literals());
+        inputs.push(&states_lit);
+        let outs = rt.exec(&self.act_name, &inputs)?;
+        let actions = Tensor::from_literal(&outs[0])?;
+        Ok(actions.data[..n].to_vec())
+    }
+
+    /// μ(s) for a single state.
+    pub fn act_one(&self, rt: &mut Runtime, state: &[f32]) -> anyhow::Result<f32> {
+        Ok(self.act(rt, state, 1)?[0])
+    }
+
+    /// One fused update step from a replay sample.
+    pub fn update(
+        &mut self,
+        rt: &mut Runtime,
+        replay: &ReplayBuffer,
+        rng: &mut Rng,
+    ) -> anyhow::Result<()> {
+        let b = self.meta.upd_batch;
+        if replay.len() < b {
+            return Ok(()); // not enough experience yet
+        }
+        let s_dim = self.meta.s_dim;
+        let mut sample: Vec<&Transition> = Vec::with_capacity(b);
+        replay.sample_into(rng, &mut sample, b);
+
+        let mut s = vec![0.0f32; b * s_dim];
+        let mut a = vec![0.0f32; b];
+        let mut r = vec![0.0f32; b];
+        let mut s2 = vec![0.0f32; b * s_dim];
+        let mut done = vec![0.0f32; b];
+        for (i, tr) in sample.iter().enumerate() {
+            debug_assert_eq!(tr.s.len(), s_dim);
+            s[i * s_dim..(i + 1) * s_dim].copy_from_slice(&tr.s);
+            s2[i * s_dim..(i + 1) * s_dim].copy_from_slice(&tr.s2);
+            a[i] = tr.a;
+            r[i] = tr.r;
+            done[i] = if tr.done { 1.0 } else { 0.0 };
+        }
+
+        // Batch + hyper literals (small); parameter/optimizer literals are
+        // borrowed from `self.state` — no copies.
+        let scratch: Vec<Literal> = vec![
+            Tensor::scalar(self.t).to_literal()?,
+            Tensor::new(vec![b, s_dim], s).to_literal()?,
+            Tensor::new(vec![b, 1], a).to_literal()?,
+            Tensor::new(vec![b, 1], r).to_literal()?,
+            Tensor::new(vec![b, s_dim], s2).to_literal()?,
+            Tensor::new(vec![b, 1], done).to_literal()?,
+            Tensor::scalar(self.hyper.gamma).to_literal()?,
+            Tensor::scalar(self.hyper.tau).to_literal()?,
+            Tensor::scalar(self.hyper.lr_actor).to_literal()?,
+            Tensor::scalar(self.hyper.lr_critic).to_literal()?,
+        ];
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(58);
+        inputs.extend(self.state.iter());
+        inputs.extend(scratch.iter());
+
+        let mut outs = rt.exec(&self.update_name, &inputs)?;
+        anyhow::ensure!(outs.len() == 51, "update artifact returned {}", outs.len());
+        self.last_actor_loss = crate::runtime::tensor::scalar_f32(&outs[50])?;
+        self.last_critic_loss = crate::runtime::tensor::scalar_f32(&outs[49])?;
+        self.t = crate::runtime::tensor::scalar_f32(&outs[48])?;
+        outs.truncate(48);
+        // Output literals become the new state verbatim.
+        self.state = outs;
+        self.updates += 1;
+        Ok(())
+    }
+
+    /// LLC log-likelihood surrogate for HIRO relabeling: −‖a − μ(s, g̃)‖²
+    /// summed over the stored sequence (the Gaussian behaviour policy's
+    /// log-prob up to constants).
+    pub fn action_log_prob(
+        &self,
+        rt: &mut Runtime,
+        states: &[f32],
+        n: usize,
+        actions: &[f32],
+    ) -> anyhow::Result<f64> {
+        let mu = self.act(rt, states, n)?;
+        Ok(-mu
+            .iter()
+            .zip(actions)
+            .map(|(m, a)| ((m - a) as f64).powi(2))
+            .sum::<f64>())
+    }
+}

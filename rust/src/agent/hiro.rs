@@ -1,0 +1,256 @@
+//! HIRO-style hierarchical agent (paper §3.2): four flat DDPG controllers —
+//! weight/activation HLC (goals, Eq.-1 state, s16) and weight/activation
+//! LLC (channel actions, state ⊕ goal, s17) — plus the off-policy goal
+//! relabeling correction of "Correcting High level Training".
+
+use crate::agent::ddpg::{DdpgAgent, DdpgHyper};
+use crate::agent::noise::NoiseSchedule;
+use crate::agent::replay::{ReplayBuffer, Transition};
+use crate::env::state::STATE_DIM;
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+
+/// Which controller pair (weights or activations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Side {
+    Weight,
+    Act,
+}
+
+/// LLC state = 16 Eq.-1 features ⊕ goal.  The goal also shadows feature
+/// 11/12 (gw/ga), so relabeling must rewrite both slots.
+pub const LLC_DIM: usize = STATE_DIM + 1;
+
+pub fn set_goal(s: &mut [f32], side: Side, g: f32) {
+    match side {
+        Side::Weight => s[11] = g / 32.0,
+        Side::Act => s[12] = g / 32.0,
+    }
+    s[STATE_DIM] = g / 32.0;
+}
+
+/// Configuration of the hierarchical agent.
+#[derive(Debug, Clone)]
+pub struct HiroConfig {
+    pub hyper: DdpgHyper,
+    /// Intrinsic-reward mixing ζ (paper §3.3).
+    pub zeta: f32,
+    /// Gaussian candidates for goal relabeling (paper: 8, plus g_t and G_t).
+    pub relabel_candidates: usize,
+    /// σ of the relabel candidate Gaussian (bits).
+    pub relabel_sigma: f64,
+    /// Replay capacity (paper: 2000).
+    pub replay_capacity: usize,
+    pub noise: NoiseSchedule,
+}
+
+impl Default for HiroConfig {
+    fn default() -> Self {
+        HiroConfig {
+            hyper: DdpgHyper::default(),
+            zeta: 0.5,
+            relabel_candidates: 8,
+            relabel_sigma: 4.0,
+            replay_capacity: 2000,
+            noise: NoiseSchedule::paper(),
+        }
+    }
+}
+
+pub struct HiroAgent {
+    pub cfg: HiroConfig,
+    pub hlc_w: DdpgAgent,
+    pub hlc_a: DdpgAgent,
+    pub llc_w: DdpgAgent,
+    pub llc_a: DdpgAgent,
+    pub replay_hlc_w: ReplayBuffer,
+    pub replay_hlc_a: ReplayBuffer,
+    pub replay_llc_w: ReplayBuffer,
+    pub replay_llc_a: ReplayBuffer,
+    pub rng: Rng,
+}
+
+impl HiroAgent {
+    pub fn new(rt: &Runtime, cfg: HiroConfig, seed: u64) -> anyhow::Result<HiroAgent> {
+        let m16 = rt.manifest.agent(STATE_DIM)?.clone();
+        let m17 = rt.manifest.agent(LLC_DIM)?.clone();
+        let mut rng = Rng::new(seed);
+        let mk16 = |r: &mut Rng| DdpgAgent::new(m16.clone(), cfg.hyper, r);
+        let hlc_w = mk16(&mut rng);
+        let hlc_a = mk16(&mut rng);
+        let mk17 = |r: &mut Rng| DdpgAgent::new(m17.clone(), cfg.hyper, r);
+        let llc_w = mk17(&mut rng);
+        let llc_a = mk17(&mut rng);
+        let cap = cfg.replay_capacity;
+        Ok(HiroAgent {
+            cfg,
+            hlc_w,
+            hlc_a,
+            llc_w,
+            llc_a,
+            replay_hlc_w: ReplayBuffer::new(cap),
+            replay_hlc_a: ReplayBuffer::new(cap),
+            replay_llc_w: ReplayBuffer::new(cap),
+            replay_llc_a: ReplayBuffer::new(cap),
+            rng: Rng::new(seed ^ 0x5EED_0001),
+        })
+    }
+
+    fn hlc(&self, side: Side) -> &DdpgAgent {
+        match side {
+            Side::Weight => &self.hlc_w,
+            Side::Act => &self.hlc_a,
+        }
+    }
+    fn llc(&self, side: Side) -> &DdpgAgent {
+        match side {
+            Side::Weight => &self.llc_w,
+            Side::Act => &self.llc_a,
+        }
+    }
+
+    /// HLC goal for a layer: μ(s) + exploration noise, clamped to [0, 32].
+    pub fn propose_goal(
+        &mut self,
+        rt: &mut Runtime,
+        side: Side,
+        state: &[f32],
+    ) -> anyhow::Result<f32> {
+        let mu = self.hlc(side).act_one(rt, state)?;
+        let sigma = self.cfg.noise.sigma_scaled(32.0);
+        let g = (mu as f64 + self.rng.normal() * sigma).clamp(0.0, 32.0);
+        Ok(g as f32)
+    }
+
+    /// LLC action for one channel: round(μ(s ⊕ g) + noise) ∈ {0..32}.
+    pub fn propose_action(
+        &mut self,
+        rt: &mut Runtime,
+        side: Side,
+        llc_state: &[f32],
+    ) -> anyhow::Result<f32> {
+        let mu = self.llc(side).act_one(rt, llc_state)?;
+        let sigma = self.cfg.noise.sigma_scaled(32.0);
+        let a = (mu as f64 + self.rng.normal() * sigma).clamp(0.0, 32.0);
+        Ok(a as f32)
+    }
+
+    /// Batched LLC actions for a whole layer: one executable dispatch for
+    /// up to `act_batch` channels (the L3 fast path — see DESIGN.md §Perf).
+    /// Noise is applied per row; rounding/clamping matches propose_action.
+    pub fn propose_actions_batch(
+        &mut self,
+        rt: &mut Runtime,
+        side: Side,
+        states: &[f32],
+        n: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        let cap = self.llc(side).meta.act_batch;
+        let sigma = self.cfg.noise.sigma_scaled(32.0);
+        let mut out = Vec::with_capacity(n);
+        for chunk_start in (0..n).step_by(cap) {
+            let m = (n - chunk_start).min(cap);
+            let slice = &states[chunk_start * LLC_DIM..(chunk_start + m) * LLC_DIM];
+            let mu = self.llc(side).act(rt, slice, m)?;
+            for v in mu {
+                out.push(((v as f64 + self.rng.normal() * sigma).clamp(0.0, 32.0)) as f32);
+            }
+        }
+        Ok(out)
+    }
+
+    /// HIRO goal relabeling for one layer segment: pick, among
+    /// {g_t, G_t, 8 × N(G_t, σ)}, the goal maximizing the LLC's likelihood
+    /// of the executed actions; following the paper, among near-maximal
+    /// candidates (within 5 % of the best score's range) the *minimal*
+    /// goal is selected.
+    ///
+    /// `seg_states` — row-major (n, 17) LLC states of the segment;
+    /// `actions` — the executed actions.
+    pub fn relabel_goal(
+        &mut self,
+        rt: &mut Runtime,
+        side: Side,
+        seg_states: &[f32],
+        actions: &[f32],
+        g_orig: f32,
+        g_min: f32,
+    ) -> anyhow::Result<f32> {
+        let n = actions.len();
+        if n == 0 {
+            return Ok(g_orig);
+        }
+        let g_real = actions.iter().sum::<f32>() / n as f32; // G_t
+        let mut cands = vec![g_orig, g_real];
+        for _ in 0..self.cfg.relabel_candidates {
+            let g = (g_real as f64 + self.rng.normal() * self.cfg.relabel_sigma)
+                .clamp(g_min as f64, 32.0);
+            cands.push(g as f32);
+        }
+        let mut scored = Vec::with_capacity(cands.len());
+        let mut buf = seg_states.to_vec();
+        for &g in &cands {
+            for row in buf.chunks_mut(LLC_DIM) {
+                set_goal(row, side, g);
+            }
+            let lp = self.llc(side).action_log_prob(rt, &buf, n, actions)?;
+            scored.push((g, lp));
+        }
+        let best = scored.iter().map(|&(_, lp)| lp).fold(f64::NEG_INFINITY, f64::max);
+        let worst = scored.iter().map(|&(_, lp)| lp).fold(f64::INFINITY, f64::min);
+        let tol = (best - worst).abs() * 0.05;
+        let g = scored
+            .iter()
+            .filter(|&&(_, lp)| lp >= best - tol)
+            .map(|&(g, _)| g)
+            .fold(f32::INFINITY, f32::min);
+        Ok(g)
+    }
+
+    pub fn push_llc(&mut self, side: Side, t: Transition) {
+        match side {
+            Side::Weight => self.replay_llc_w.push(t),
+            Side::Act => self.replay_llc_a.push(t),
+        }
+    }
+    pub fn push_hlc(&mut self, side: Side, t: Transition) {
+        match side {
+            Side::Weight => self.replay_hlc_w.push(t),
+            Side::Act => self.replay_hlc_a.push(t),
+        }
+    }
+
+    /// Off-policy updates after an episode: `n_llc` minibatch steps per LLC
+    /// and `n_hlc` per HLC.
+    pub fn train(&mut self, rt: &mut Runtime, n_llc: usize, n_hlc: usize) -> anyhow::Result<()> {
+        for _ in 0..n_llc {
+            self.llc_w.update(rt, &self.replay_llc_w, &mut self.rng)?;
+            self.llc_a.update(rt, &self.replay_llc_a, &mut self.rng)?;
+        }
+        for _ in 0..n_hlc {
+            self.hlc_w.update(rt, &self.replay_hlc_w, &mut self.rng)?;
+            self.hlc_a.update(rt, &self.replay_hlc_a, &mut self.rng)?;
+        }
+        Ok(())
+    }
+
+    pub fn end_episode(&mut self) {
+        self.cfg.noise.advance_episode();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_goal_updates_both_slots() {
+        let mut s = vec![0.0f32; LLC_DIM];
+        set_goal(&mut s, Side::Weight, 16.0);
+        assert_eq!(s[11], 0.5);
+        assert_eq!(s[STATE_DIM], 0.5);
+        set_goal(&mut s, Side::Act, 8.0);
+        assert_eq!(s[12], 0.25);
+        assert_eq!(s[STATE_DIM], 0.25);
+    }
+}

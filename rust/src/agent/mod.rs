@@ -1,0 +1,12 @@
+//! The DRL agent stack: replay buffer, exploration-noise schedule, flat
+//! DDPG (AOT'd actor/critic), and the HIRO-style hierarchical composition.
+
+pub mod ddpg;
+pub mod hiro;
+pub mod noise;
+pub mod replay;
+
+pub use ddpg::{DdpgAgent, DdpgHyper};
+pub use hiro::{HiroAgent, HiroConfig, Side};
+pub use noise::NoiseSchedule;
+pub use replay::{ReplayBuffer, Transition};

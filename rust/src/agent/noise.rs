@@ -1,0 +1,83 @@
+//! Exploration noise schedule (paper §3.2/§4): actions are collected as
+//! a ~ N(μ(s), δ) with δ = 0.5 held constant for the first 100 warm-up
+//! episodes, then decayed exponentially each episode during exploitation.
+//!
+//! δ is expressed as a fraction of the action scale (32), matching the
+//! DDPG convention the paper inherits.
+
+#[derive(Debug, Clone)]
+pub struct NoiseSchedule {
+    pub sigma0: f64,
+    pub warmup_episodes: usize,
+    pub decay: f64,
+    episode: usize,
+}
+
+impl NoiseSchedule {
+    /// Paper settings: δ=0.5, 100 explore episodes, then exponential decay
+    /// over the 300 exploit episodes (δ≈0.05 by the end).
+    pub fn paper() -> Self {
+        NoiseSchedule { sigma0: 0.5, warmup_episodes: 100, decay: 0.99, episode: 0 }
+    }
+
+    pub fn new(sigma0: f64, warmup_episodes: usize, decay: f64) -> Self {
+        NoiseSchedule { sigma0, warmup_episodes, decay, episode: 0 }
+    }
+
+    /// Current δ (fraction of action scale).
+    pub fn sigma(&self) -> f64 {
+        if self.episode < self.warmup_episodes {
+            self.sigma0
+        } else {
+            self.sigma0 * self.decay.powi((self.episode - self.warmup_episodes) as i32)
+        }
+    }
+
+    /// Absolute σ in action units for scale (e.g. 32).
+    pub fn sigma_scaled(&self, scale: f64) -> f64 {
+        self.sigma() * scale
+    }
+
+    pub fn advance_episode(&mut self) {
+        self.episode += 1;
+    }
+
+    pub fn episode(&self) -> usize {
+        self.episode
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_during_warmup_then_decays() {
+        let mut n = NoiseSchedule::paper();
+        assert_eq!(n.sigma(), 0.5);
+        for _ in 0..100 {
+            n.advance_episode();
+        }
+        assert_eq!(n.sigma(), 0.5);
+        n.advance_episode();
+        assert!(n.sigma() < 0.5);
+        let s1 = n.sigma();
+        n.advance_episode();
+        assert!(n.sigma() < s1);
+    }
+
+    #[test]
+    fn decay_is_exponential() {
+        let mut n = NoiseSchedule::new(1.0, 0, 0.5);
+        n.advance_episode();
+        assert!((n.sigma() - 0.5).abs() < 1e-12);
+        n.advance_episode();
+        assert!((n.sigma() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaled_sigma() {
+        let n = NoiseSchedule::paper();
+        assert_eq!(n.sigma_scaled(32.0), 16.0);
+    }
+}

@@ -1,0 +1,126 @@
+//! Experience replay buffer (paper §4: capacity 2000, minibatch 64).
+//!
+//! Fixed-capacity ring; sampling is allocation-free into a caller-provided
+//! scratch (hot path of the search loop).
+
+use crate::util::rng::Rng;
+
+/// One off-policy transition.  For the LLC the goal is folded into the
+/// state vector (s = features ⊕ g), matching the s17 artifacts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Transition {
+    pub s: Vec<f32>,
+    pub a: f32,
+    pub r: f32,
+    pub s2: Vec<f32>,
+    pub done: bool,
+}
+
+#[derive(Debug)]
+pub struct ReplayBuffer {
+    buf: Vec<Transition>,
+    capacity: usize,
+    next: usize,
+    /// Total pushes ever (for diagnostics).
+    pub pushed: u64,
+}
+
+impl ReplayBuffer {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        ReplayBuffer { buf: Vec::with_capacity(capacity), capacity, next: 0, pushed: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        self.pushed += 1;
+        if self.buf.len() < self.capacity {
+            self.buf.push(t);
+        } else {
+            self.buf[self.next] = t;
+        }
+        self.next = (self.next + 1) % self.capacity;
+    }
+
+    /// Sample `out.len()` transitions uniformly with replacement.
+    pub fn sample_into<'a>(&'a self, rng: &mut Rng, out: &mut Vec<&'a Transition>, n: usize) {
+        out.clear();
+        for _ in 0..n {
+            out.push(&self.buf[rng.below(self.buf.len())]);
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Transition> {
+        self.buf.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr(v: f32) -> Transition {
+        Transition { s: vec![v; 3], a: v, r: v, s2: vec![v; 3], done: false }
+    }
+
+    #[test]
+    fn fills_then_wraps() {
+        let mut rb = ReplayBuffer::new(4);
+        for i in 0..6 {
+            rb.push(tr(i as f32));
+        }
+        assert_eq!(rb.len(), 4);
+        assert_eq!(rb.pushed, 6);
+        // Oldest two (0,1) overwritten by 4,5.
+        let vals: Vec<f32> = rb.iter().map(|t| t.a).collect();
+        assert!(vals.contains(&4.0) && vals.contains(&5.0));
+        assert!(!vals.contains(&0.0) && !vals.contains(&1.0));
+    }
+
+    #[test]
+    fn sampling_uniform_coverage() {
+        let mut rb = ReplayBuffer::new(16);
+        for i in 0..16 {
+            rb.push(tr(i as f32));
+        }
+        let mut rng = Rng::new(1);
+        let mut out = Vec::new();
+        let mut seen = [false; 16];
+        for _ in 0..50 {
+            rb.sample_into(&mut rng, &mut out, 8);
+            assert_eq!(out.len(), 8);
+            for t in &out {
+                seen[t.a as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "all slots should be sampled");
+    }
+
+    #[test]
+    fn prop_ring_never_exceeds_capacity() {
+        crate::util::prop::forall_ns(
+            9,
+            |r| (1 + r.below(32), r.below(200)),
+            |&(cap, pushes)| {
+                let mut rb = ReplayBuffer::new(cap);
+                for i in 0..pushes {
+                    rb.push(tr(i as f32));
+                }
+                if rb.len() <= cap && rb.len() == pushes.min(cap) {
+                    Ok(())
+                } else {
+                    Err(format!("len {} cap {cap} pushes {pushes}", rb.len()))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,298 @@
+//! Reimplemented comparison baselines (paper §4.4 and §4.6, Table 4 and
+//! Fig. 8), all running on the same evaluation stack as AutoQ so the
+//! comparison isolates the search *policy*:
+//!
+//! * `FlatDdpg`   — traditional (non-hierarchical) DDPG emitting a QBN/BBN
+//!   per channel directly (the Fig.-8 comparison): one controller per side,
+//!   no goals, no relabeling.
+//! * `Haq`        — HAQ [32]: layer-level DDPG assigning one weight QBN and
+//!   one activation QBN per layer.
+//! * `Releq`      — ReLeQ [5]: layer-level RL over *weights only*
+//!   (activations pinned at 8 bits; the original uses an LSTM policy — we
+//!   keep the paper's "weights-only, layer-level" semantics with the same
+//!   DDPG machinery, isolating what the comparison measures).
+//! * `Amc`        — AMC [9]: channel-level *pruning* — each output channel
+//!   is kept (8-bit) or pruned (0), driven by the FLOP reward.
+
+use crate::agent::ddpg::{DdpgAgent, DdpgHyper};
+use crate::agent::noise::NoiseSchedule;
+use crate::agent::replay::{ReplayBuffer, Transition};
+use crate::cost::logic::model_cost;
+use crate::cost::Mode;
+use crate::data::synth::{Split, SynthDataset};
+use crate::env::state::{StateBuilder, StateCtx, STATE_DIM};
+use crate::models::ModelRunner;
+use crate::runtime::Runtime;
+use crate::search::episode::{EpisodeOutcome, LayerBits};
+use crate::search::runner::{EpisodeStats, SearchResult};
+use crate::search::Protocol;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BaselinePolicy {
+    FlatDdpg,
+    Haq,
+    Releq,
+    Amc,
+}
+
+impl BaselinePolicy {
+    pub fn parse(s: &str) -> anyhow::Result<BaselinePolicy> {
+        match s {
+            "flat" | "ddpg" => Ok(BaselinePolicy::FlatDdpg),
+            "haq" => Ok(BaselinePolicy::Haq),
+            "releq" => Ok(BaselinePolicy::Releq),
+            "amc" => Ok(BaselinePolicy::Amc),
+            _ => anyhow::bail!("baseline must be flat|haq|releq|amc, got {s:?}"),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            BaselinePolicy::FlatDdpg => "flat-ddpg",
+            BaselinePolicy::Haq => "haq",
+            BaselinePolicy::Releq => "releq",
+            BaselinePolicy::Amc => "amc",
+        }
+    }
+    fn channel_level(&self) -> bool {
+        matches!(self, BaselinePolicy::FlatDdpg | BaselinePolicy::Amc)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BaselineConfig {
+    pub policy: BaselinePolicy,
+    pub mode: Mode,
+    pub protocol: Protocol,
+    pub episodes: usize,
+    pub warmup: usize,
+    pub noise_decay: f64,
+    pub eval_batches: usize,
+    pub seed: u64,
+}
+
+impl BaselineConfig {
+    pub fn quick(policy: BaselinePolicy, mode: Mode, protocol: Protocol) -> BaselineConfig {
+        BaselineConfig {
+            policy,
+            mode,
+            protocol,
+            episodes: 40,
+            warmup: 10,
+            noise_decay: 0.95,
+            eval_batches: 2,
+            seed: 1,
+        }
+    }
+}
+
+/// AMC keep/prune threshold on the raw [0,32] action.
+const AMC_THRESHOLD: f32 = 16.0;
+const AMC_KEEP_BITS: u8 = 8;
+const RELEQ_ACT_BITS: u8 = 8;
+
+pub fn run_baseline(
+    rt: &mut Runtime,
+    runner: &ModelRunner,
+    data: &SynthDataset,
+    cfg: &BaselineConfig,
+) -> anyhow::Result<SearchResult> {
+    let t0 = std::time::Instant::now();
+    let meta = runner.meta.clone();
+    let wvar = runner.weight_variances();
+    let sb = StateBuilder::new(&meta, &wvar);
+    let m16 = rt.manifest.agent(STATE_DIM)?.clone();
+    let mut rng = Rng::new(cfg.seed ^ 0xBA5E);
+    let mut agent_w = DdpgAgent::new(m16.clone(), DdpgHyper::default(), &mut rng);
+    let mut agent_a = DdpgAgent::new(m16, DdpgHyper::default(), &mut rng);
+    let mut replay_w = ReplayBuffer::new(2000);
+    let mut replay_a = ReplayBuffer::new(2000);
+    let mut noise = NoiseSchedule::new(0.5, cfg.warmup, cfg.noise_decay);
+
+    let mut best: Option<EpisodeOutcome> = None;
+    let mut history = Vec::with_capacity(cfg.episodes);
+
+    for ep in 0..cfg.episodes {
+        let mut wbits = vec![0u8; meta.w_channels];
+        let mut abits = vec![0u8; meta.a_channels];
+        let mut staged_w: Vec<(Vec<f32>, f32)> = Vec::new();
+        let mut staged_a: Vec<(Vec<f32>, f32)> = Vec::new();
+        let mut rdc = 0.0f64;
+        let mut visited = 0.0f64;
+        let mut gi = 0usize;
+        let (mut prev_aw, mut prev_aa) = (32.0f32, 32.0f32);
+        let sigma = noise.sigma_scaled(32.0);
+
+        for (t, l) in meta.layers.iter().enumerate() {
+            let rst = sb.total_macs - visited;
+            let layer_wvar = &wvar[l.w_off..l.w_off + l.w_len];
+            let macs_per_oc = l.macs as f64 / l.w_len as f64;
+            let act = |agent: &DdpgAgent, rt: &mut Runtime, s: &[f32], rng: &mut Rng| -> anyhow::Result<f32> {
+                let mu = agent.act_one(rt, s)?;
+                Ok(((mu as f64 + rng.normal() * sigma).clamp(0.0, 32.0)) as f32)
+            };
+
+            if cfg.policy.channel_level() {
+                // Per output channel.
+                for c in 0..l.w_len {
+                    let ctx = StateCtx {
+                        i: gi, t, rdc, rst,
+                        gw: prev_aw, ga: prev_aa,
+                        prev_aw, prev_aa, wvar: layer_wvar[c],
+                    };
+                    let s = sb.state(&meta, t, &ctx).to_vec();
+                    let raw = act(&agent_w, rt, &s, &mut rng)?;
+                    let bits = match cfg.policy {
+                        BaselinePolicy::Amc => {
+                            if raw >= AMC_THRESHOLD { AMC_KEEP_BITS } else { 0 }
+                        }
+                        _ => raw.round().clamp(0.0, 32.0) as u8,
+                    };
+                    wbits[l.w_off + c] = bits;
+                    rdc += macs_per_oc * (32.0 - bits as f64) / 32.0;
+                    prev_aw = raw;
+                    gi += 1;
+                    staged_w.push((s, raw));
+                }
+                // Activations: flat-ddpg searches them; AMC keeps 8-bit.
+                for c in 0..l.a_len {
+                    let bits = match cfg.policy {
+                        BaselinePolicy::Amc => AMC_KEEP_BITS,
+                        _ => {
+                            let ctx = StateCtx {
+                                i: gi, t, rdc, rst,
+                                gw: prev_aw, ga: prev_aa,
+                                prev_aw, prev_aa, wvar: 0.0,
+                            };
+                            let s = sb.state(&meta, t, &ctx).to_vec();
+                            let raw = act(&agent_a, rt, &s, &mut rng)?;
+                            prev_aa = raw;
+                            staged_a.push((s, raw));
+                            raw.round().clamp(0.0, 32.0) as u8
+                        }
+                    };
+                    abits[l.a_off + c] = bits;
+                    gi += 1;
+                }
+            } else {
+                // Layer-level (HAQ / ReLeQ).
+                let ctx = StateCtx {
+                    i: gi, t, rdc, rst,
+                    gw: prev_aw, ga: prev_aa,
+                    prev_aw, prev_aa,
+                    wvar: layer_wvar.iter().sum::<f64>() / l.w_len as f64,
+                };
+                let s = sb.state(&meta, t, &ctx).to_vec();
+                let raw_w = act(&agent_w, rt, &s, &mut rng)?;
+                let bw = raw_w.round().clamp(0.0, 32.0) as u8;
+                wbits[l.w_off..l.w_off + l.w_len].fill(bw);
+                staged_w.push((s.clone(), raw_w));
+                prev_aw = raw_w;
+                let ba = match cfg.policy {
+                    BaselinePolicy::Releq => RELEQ_ACT_BITS,
+                    _ => {
+                        let raw_a = act(&agent_a, rt, &s, &mut rng)?;
+                        staged_a.push((s, raw_a));
+                        prev_aa = raw_a;
+                        raw_a.round().clamp(0.0, 32.0) as u8
+                    }
+                };
+                abits[l.a_off..l.a_off + l.a_len].fill(ba);
+                rdc += l.macs as f64 * (32.0 - bw as f64) / 32.0;
+                gi += l.w_len + l.a_len;
+            }
+            visited += l.macs as f64;
+        }
+
+        // Evaluate and assign the final reward to all staged transitions.
+        let eval =
+            runner.eval_config(rt, cfg.mode, &wbits, &abits, data, Split::Val, cfg.eval_batches)?;
+        let cost = model_cost(&meta.layers, &wbits, &abits);
+        let reward = cfg.protocol.netscore.reward(eval.accuracy, &cost) as f32;
+        for (staged, replay) in [(&staged_w, &mut replay_w), (&staged_a, &mut replay_a)] {
+            for i in 0..staged.len() {
+                let s2 = if i + 1 < staged.len() { staged[i + 1].0.clone() } else { staged[i].0.clone() };
+                replay.push(Transition {
+                    s: staged[i].0.clone(),
+                    a: staged[i].1,
+                    r: reward,
+                    s2,
+                    done: i + 1 == staged.len(),
+                });
+            }
+        }
+        let n_upd = (staged_w.len() / 4).max(1);
+        for _ in 0..n_upd {
+            agent_w.update(rt, &replay_w, &mut rng)?;
+            if !staged_a.is_empty() {
+                agent_a.update(rt, &replay_a, &mut rng)?;
+            }
+        }
+        noise.advance_episode();
+
+        let per_layer = meta
+            .layers
+            .iter()
+            .map(|l| LayerBits {
+                name: l.name.clone(),
+                avg_w: wbits[l.w_off..l.w_off + l.w_len].iter().map(|&b| b as f64).sum::<f64>()
+                    / l.w_len as f64,
+                avg_a: abits[l.a_off..l.a_off + l.a_len].iter().map(|&b| b as f64).sum::<f64>()
+                    / l.a_len as f64,
+            })
+            .collect();
+        let out = EpisodeOutcome {
+            avg_wbits: wbits.iter().map(|&b| b as f64).sum::<f64>() / wbits.len() as f64,
+            avg_abits: abits.iter().map(|&b| b as f64).sum::<f64>() / abits.len() as f64,
+            wbits,
+            abits,
+            accuracy: eval.accuracy,
+            loss: eval.loss,
+            cost,
+            reward: reward as f64,
+            score: cfg.protocol.netscore.score(eval.accuracy, &cost),
+            per_layer,
+        };
+        history.push(EpisodeStats {
+            episode: ep,
+            accuracy: out.accuracy,
+            reward: out.reward,
+            avg_wbits: out.avg_wbits,
+            avg_abits: out.avg_abits,
+            norm_logic: out.cost.norm_logic(),
+        });
+        if best.as_ref().map_or(true, |b| out.reward > b.reward) {
+            best = Some(out);
+        }
+        if ep % 10 == 0 {
+            crate::info!(
+                "[baseline {} {}] ep {ep}/{} acc={:.4} reward={:.4}",
+                cfg.policy.name(),
+                runner.meta.name,
+                cfg.episodes,
+                history[ep].accuracy,
+                history[ep].reward
+            );
+        }
+    }
+
+    Ok(SearchResult {
+        best: best.expect("episodes > 0"),
+        history,
+        secs: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(BaselinePolicy::parse("haq").unwrap(), BaselinePolicy::Haq);
+        assert_eq!(BaselinePolicy::parse("flat").unwrap(), BaselinePolicy::FlatDdpg);
+        assert!(BaselinePolicy::parse("x").is_err());
+        assert!(BaselinePolicy::FlatDdpg.channel_level());
+        assert!(!BaselinePolicy::Haq.channel_level());
+    }
+}

@@ -1,0 +1,150 @@
+//! Fig.-1 hardware cost model: (32 nm) transistor counts of the logic that
+//! finishes one output channel's convolutions per cycle, for quantized
+//! (fixed-point multiply-accumulate) vs binarized (XNOR + popcount)
+//! datapaths, normalized to a 32-bit floating-point MAC unit.
+//!
+//! The paper plots normalized transistor counts; absolute constants below
+//! are standard static-CMOS gate budgets (NAND2 = 4T, XOR/XNOR = 8T,
+//! 1-bit full adder = 28T, 6T SRAM cell) — the *ratios* reproduce Fig. 1's
+//! qualitative shape: cost falls with bit-width, and a binarized datapath
+//! undercuts a quantized one at equal nominal bits.
+
+/// Transistors of a 1-bit full adder (mirror CMOS).
+const FA_T: f64 = 28.0;
+/// Transistors of an AND gate.
+const AND_T: f64 = 6.0;
+/// Transistors of an XNOR gate.
+const XNOR_T: f64 = 8.0;
+/// 32-bit floating point MAC (multiplier + adder + normalization) — the
+/// normalization denominator of Fig. 1.
+pub const FP32_MAC_T: f64 = 33_000.0;
+
+/// Array multiplier for bw × ba fixed point: bw·ba AND terms + carry-save
+/// adder array of ~bw·ba full adders.
+pub fn quant_mult_transistors(bw: u32, ba: u32) -> f64 {
+    if bw == 0 || ba == 0 {
+        return 0.0;
+    }
+    let partial = (bw * ba) as f64 * AND_T;
+    let reduce = (bw * ba) as f64 * FA_T;
+    // Accumulator adder sized to the product width + 4 guard bits.
+    let acc = (bw + ba + 4) as f64 * FA_T;
+    partial + reduce + acc
+}
+
+/// Binarized datapath for BBN_w × BBN_a: one XNOR per bit-plane pair, a
+/// shared popcount tree (~FA per input bit), and BBN_w·BBN_a scale
+/// multiplies amortized over the channel (fixed small multiplier).
+pub fn binar_unit_transistors(bw: u32, ba: u32) -> f64 {
+    if bw == 0 || ba == 0 {
+        return 0.0;
+    }
+    let planes = (bw * ba) as f64;
+    let xnor = planes * XNOR_T;
+    // Popcount: ~1 FA per counted bit (Wallace-style tree), shared.
+    let popcount = planes * FA_T * 0.5;
+    // α·β scale-and-add per plane pair, amortized over the ~256 MACs of a
+    // typical output channel (one scale multiply per plane per channel).
+    let scale = planes * quant_mult_transistors(8, 8) / 256.0;
+    xnor + popcount + scale
+}
+
+/// Normalized hardware cost (Fig. 1): transistors / fp32-MAC transistors.
+pub fn normalized_cost(mode: Mode, bw: u32, ba: u32) -> f64 {
+    let t = match mode {
+        Mode::Quant => quant_mult_transistors(bw, ba),
+        Mode::Binar => binar_unit_transistors(bw, ba),
+    };
+    t / FP32_MAC_T
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Quant,
+    Binar,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> anyhow::Result<Mode> {
+        match s {
+            "quant" | "q" => Ok(Mode::Quant),
+            "binar" | "b" => Ok(Mode::Binar),
+            _ => anyhow::bail!("mode must be quant|binar, got {s:?}"),
+        }
+    }
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Mode::Quant => "quant",
+            Mode::Binar => "binar",
+        }
+    }
+}
+
+/// The Fig.-1 sweep rows: (bits, normalized quant cost, normalized binar
+/// cost) for symmetric weight/activation bit-widths.
+pub fn fig1_table(max_bits: u32) -> Vec<(u32, f64, f64)> {
+    (1..=max_bits)
+        .map(|b| {
+            (
+                b,
+                normalized_cost(Mode::Quant, b, b),
+                normalized_cost(Mode::Binar, b, b),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_monotone_in_bits() {
+        for b in 1..32 {
+            assert!(
+                quant_mult_transistors(b + 1, b + 1) > quant_mult_transistors(b, b),
+                "quant not monotone at {b}"
+            );
+            assert!(
+                binar_unit_transistors(b + 1, b + 1) > binar_unit_transistors(b, b),
+                "binar not monotone at {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn binar_cheaper_than_quant_same_bits() {
+        // Fig. 1's headline: same nominal bit-widths, binarized logic costs
+        // much less than the fixed-point datapath.
+        for b in 1..=8 {
+            let q = quant_mult_transistors(b, b);
+            let x = binar_unit_transistors(b, b);
+            assert!(x < q, "bits={b}: binar {x} !< quant {q}");
+        }
+    }
+
+    #[test]
+    fn normalization_below_one_for_low_bits() {
+        // A ≤8-bit datapath is far below a fp32 MAC (paper: "significantly
+        // reduced").
+        assert!(normalized_cost(Mode::Quant, 8, 8) < 0.2);
+        assert!(normalized_cost(Mode::Binar, 8, 8) < 0.1);
+        // Pruned = free.
+        assert_eq!(normalized_cost(Mode::Quant, 0, 5), 0.0);
+    }
+
+    #[test]
+    fn fig1_rows_complete() {
+        let t = fig1_table(32);
+        assert_eq!(t.len(), 32);
+        assert_eq!(t[0].0, 1);
+        assert!(t[31].1 > t[0].1);
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(Mode::parse("quant").unwrap(), Mode::Quant);
+        assert_eq!(Mode::parse("b").unwrap(), Mode::Binar);
+        assert!(Mode::parse("x").is_err());
+    }
+}

@@ -1,0 +1,222 @@
+//! Logic-operation cost model (paper §3.2–3.3).
+//!
+//! Quantized inference: a `bw`-bit × `ba`-bit fixed-point multiply performs
+//! `bw · ba` bit-level AND operations inside a serial-parallel multiplier
+//! [Gnanasekaran 6].  Binarized inference: BBN_w × BBN_a binary filter
+//! pairs each contribute one XNOR per MAC position [Lin 17].  Either way,
+//! the bit-level logic-op count of a MAC between a weight channel with
+//! bit-width `bw` and an activation channel with `ba` is `bw · ba` — the
+//! quantity `m(N)` in NetScore and the budget of Algorithm 1.
+//!
+//! Channel-level factorization: for a dense conv layer every (output
+//! channel, input channel) pair contributes `h_out·w_out·k²` MACs, so
+//!   logic = h_out·w_out·k² · (Σ_oc bw[oc]) · (Σ_ic ba[ic])
+//! For depthwise conv, channel c pairs only with itself; for fc layers all
+//! inputs share one activation bit-width (paper §3.2).
+
+use crate::runtime::LayerMeta;
+
+/// Full-precision reference bit-width (32-bit IEEE754 in the paper).
+pub const FP_BITS: u64 = 32;
+
+/// Bit-level logic ops of one layer under per-channel bit assignments.
+///
+/// `wbits` — one entry per weight output channel of this layer;
+/// `abits` — one entry per activation input channel (len 1 for fc).
+pub fn layer_logic_ops(layer: &LayerMeta, wbits: &[u8], abits: &[u8]) -> u64 {
+    assert_eq!(wbits.len(), layer.w_len, "{}: wbits len", layer.name);
+    assert_eq!(abits.len(), layer.a_len, "{}: abits len", layer.name);
+    let sum_w: u64 = wbits.iter().map(|&b| b as u64).sum();
+    match layer.typ.as_str() {
+        "fc" => {
+            // One shared activation bit-width; each output unit does cin MACs.
+            let ba = abits[0] as u64;
+            layer.cin as u64 * sum_w * ba
+        }
+        "dwconv" => {
+            // Channel c's filter convolves only input channel c.
+            let per_c = (layer.h_out * layer.w_out * layer.k * layer.k) as u64;
+            wbits
+                .iter()
+                .zip(abits)
+                .map(|(&bw, &ba)| per_c * bw as u64 * ba as u64)
+                .sum()
+        }
+        _ => {
+            let per_pair = (layer.h_out * layer.w_out * layer.k * layer.k) as u64;
+            let sum_a: u64 = abits.iter().map(|&b| b as u64).sum();
+            per_pair * sum_w * sum_a
+        }
+    }
+}
+
+/// Logic ops of the layer at full precision (all channels FP_BITS).
+pub fn layer_logic_fp(layer: &LayerMeta) -> u64 {
+    layer.macs * FP_BITS * FP_BITS
+}
+
+/// logic_t of Eq. 1: the MAC count of the layer (bit-independent part).
+pub fn layer_macs(layer: &LayerMeta) -> u64 {
+    layer.macs
+}
+
+/// Quantized-weight storage bits: Σ_c (elems per channel · bw[c]).
+/// `w_elems_per_channel` = k·k·(cin/groups) for conv, cin for fc.
+pub fn layer_weight_bits(layer: &LayerMeta, wbits: &[u8]) -> u64 {
+    let per_c = match layer.typ.as_str() {
+        "fc" => layer.cin as u64,
+        "dwconv" => (layer.k * layer.k) as u64,
+        _ => (layer.k * layer.k * layer.cin) as u64,
+    };
+    wbits.iter().map(|&b| per_c * b as u64).sum()
+}
+
+/// Whole-model audit under a bit config (both vectors in network order).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelCost {
+    /// Bit-level logic ops (ANDs for quant, XNORs for binar).
+    pub logic_ops: u64,
+    /// Same model at 32-bit full precision.
+    pub logic_fp: u64,
+    /// Quantized weight payload in bits.
+    pub weight_bits: u64,
+    /// Full-precision weight payload in bits.
+    pub weight_bits_fp: u64,
+}
+
+impl ModelCost {
+    /// m(N) normalized to the full-precision model (paper Table 4 "Norm.
+    /// Logic" column).
+    pub fn norm_logic(&self) -> f64 {
+        self.logic_ops as f64 / self.logic_fp.max(1) as f64
+    }
+    /// p(N): Σ QBN per weight / 32, normalized by weight count — the
+    /// architectural-complexity term of NetScore.
+    pub fn norm_params(&self) -> f64 {
+        self.weight_bits as f64 / self.weight_bits_fp.max(1) as f64
+    }
+}
+
+pub fn model_cost(layers: &[LayerMeta], wbits: &[u8], abits: &[u8]) -> ModelCost {
+    let mut c = ModelCost { logic_ops: 0, logic_fp: 0, weight_bits: 0, weight_bits_fp: 0 };
+    for l in layers {
+        let wb = &wbits[l.w_off..l.w_off + l.w_len];
+        let ab = &abits[l.a_off..l.a_off + l.a_len];
+        c.logic_ops += layer_logic_ops(l, wb, ab);
+        c.logic_fp += layer_logic_fp(l);
+        c.weight_bits += layer_weight_bits(l, wb);
+        c.weight_bits_fp += layer_weight_bits(l, &vec![FP_BITS as u8; l.w_len]);
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall_ns;
+    use crate::util::rng::Rng;
+
+    fn conv_layer() -> LayerMeta {
+        LayerMeta {
+            name: "l01_conv".into(),
+            typ: "conv".into(),
+            k: 3,
+            stride: 1,
+            cin: 4,
+            cout: 8,
+            h_in: 16,
+            w_in: 16,
+            h_out: 16,
+            w_out: 16,
+            macs: (16 * 16 * 3 * 3 * 4 * 8) as u64,
+            w_off: 0,
+            w_len: 8,
+            a_off: 0,
+            a_len: 4,
+        }
+    }
+
+    fn fc_layer() -> LayerMeta {
+        LayerMeta {
+            name: "l02_fc".into(),
+            typ: "fc".into(),
+            k: 1,
+            stride: 1,
+            cin: 64,
+            cout: 10,
+            h_in: 1,
+            w_in: 1,
+            h_out: 1,
+            w_out: 1,
+            macs: 640,
+            w_off: 8,
+            w_len: 10,
+            a_off: 4,
+            a_len: 1,
+        }
+    }
+
+    #[test]
+    fn uniform_bits_match_closed_form() {
+        let l = conv_layer();
+        let logic = layer_logic_ops(&l, &[5; 8], &[4; 4]);
+        // macs * bw * ba
+        assert_eq!(logic, l.macs * 5 * 4);
+        assert_eq!(layer_logic_fp(&l), l.macs * 1024);
+    }
+
+    #[test]
+    fn fc_shares_activation_bits() {
+        let l = fc_layer();
+        let logic = layer_logic_ops(&l, &[3; 10], &[6]);
+        assert_eq!(logic, 64 * 10 * 3 * 6);
+    }
+
+    #[test]
+    fn pruned_channels_cost_zero() {
+        let l = conv_layer();
+        let mut wb = [5u8; 8];
+        wb[0] = 0;
+        let full = layer_logic_ops(&l, &[5; 8], &[4; 4]) as i64;
+        let cut = layer_logic_ops(&l, &wb, &[4; 4]) as i64;
+        // Removing one of 8 output channels removes exactly 1/8 of the ops.
+        assert_eq!(full - cut, full / 8);
+    }
+
+    #[test]
+    fn prop_monotone_in_bits() {
+        // Raising any channel's bits never lowers logic ops or weight bits.
+        forall_ns(
+            42,
+            |r: &mut Rng| {
+                let wb: Vec<u8> = (0..8).map(|_| r.below(9) as u8).collect();
+                let ab: Vec<u8> = (0..4).map(|_| r.below(9) as u8).collect();
+                let which = r.below(8);
+                (wb, ab, which)
+            },
+            |(wb, ab, which)| {
+                let l = conv_layer();
+                let base = layer_logic_ops(&l, wb, ab);
+                let mut hi = wb.clone();
+                hi[*which] = (hi[*which] + 1).min(32);
+                let bumped = layer_logic_ops(&l, &hi, ab);
+                if bumped >= base {
+                    Ok(())
+                } else {
+                    Err(format!("bumped {bumped} < base {base}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn model_cost_aggregates_and_normalizes() {
+        let layers = vec![conv_layer(), fc_layer()];
+        let wbits = vec![5u8; 18];
+        let abits = vec![5u8; 5];
+        let c = model_cost(&layers, &wbits, &abits);
+        assert_eq!(c.logic_ops, (conv_layer().macs + 640) * 25);
+        assert!((c.norm_logic() - 25.0 / 1024.0).abs() < 1e-12);
+        assert!((c.norm_params() - 5.0 / 32.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,8 @@
+//! Cost models: bit-level logic-op counting (m(N), Algorithm-1 budgets) and
+//! the Fig.-1 transistor-level hardware cost model.
+
+pub mod hardware;
+pub mod logic;
+
+pub use hardware::Mode;
+pub use logic::{model_cost, ModelCost};

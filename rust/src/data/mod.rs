@@ -1,0 +1,6 @@
+//! Data substrate: deterministic synthetic image dataset (CIFAR/ImageNet
+//! substitution — DESIGN.md) and batching.
+
+pub mod synth;
+
+pub use synth::{Batch, Split, SynthDataset};

@@ -1,0 +1,7 @@
+//! Quantization environment: Eq.-1 observation construction and the §3.2
+//! action-space constraints.  The episode walk itself lives in
+//! `search::episode` (it needs the agents and the runtime).
+
+pub mod state;
+
+pub use state::{enforce_variance_order, StateBuilder, StateCtx, STATE_DIM};

@@ -1,0 +1,214 @@
+//! Eq.-1 observation builder: the 16-feature state vector
+//!
+//!   s_i = (i, t, c_in, c_out, w, h, str, k, logic_t, rdc, rst,
+//!          gw_t, ga_t, aw_i, aa_i, wvar_i)
+//!
+//! All features are normalized to ~[0,1] per HAQ/AMC practice so one actor
+//! works across models; the LLC state is this vector ⊕ the active goal
+//! (s17 artifacts).
+
+use crate::runtime::ModelMeta;
+
+pub const STATE_DIM: usize = 16;
+
+/// Static per-model normalizers.
+#[derive(Debug, Clone)]
+pub struct StateBuilder {
+    pub n_layers: f32,
+    pub total_channels: f32,
+    pub max_cin: f32,
+    pub max_cout: f32,
+    pub max_hw: f32,
+    pub max_macs: f32,
+    pub total_macs: f64,
+    pub max_wvar: f64,
+}
+
+/// Dynamic episode context for one observation.
+#[derive(Debug, Clone, Copy)]
+pub struct StateCtx {
+    /// Global channel walk index.
+    pub i: usize,
+    /// Layer index.
+    pub t: usize,
+    /// Reduced logic ops so far (weight-linear units, see env/mod.rs).
+    pub rdc: f64,
+    /// Remaining logic ops in the unvisited suffix.
+    pub rst: f64,
+    pub gw: f32,
+    pub ga: f32,
+    /// Previous weight / activation actions.
+    pub prev_aw: f32,
+    pub prev_aa: f32,
+    /// Weight variance of the current output channel (0 for act channels).
+    pub wvar: f64,
+}
+
+impl StateBuilder {
+    pub fn new(meta: &ModelMeta, wvar: &[f64]) -> StateBuilder {
+        let max_wvar = wvar.iter().cloned().fold(1e-12f64, f64::max);
+        StateBuilder {
+            n_layers: meta.layers.len() as f32,
+            total_channels: (meta.w_channels + meta.a_channels) as f32,
+            max_cin: meta.layers.iter().map(|l| l.cin).max().unwrap_or(1) as f32,
+            max_cout: meta.layers.iter().map(|l| l.cout).max().unwrap_or(1) as f32,
+            max_hw: meta.image_hw as f32,
+            max_macs: meta.layers.iter().map(|l| l.macs).max().unwrap_or(1) as f32,
+            total_macs: meta.total_macs as f64,
+            max_wvar,
+        }
+    }
+
+    /// Build the normalized 16-vector for layer `layer` under `ctx`.
+    pub fn state(&self, meta: &ModelMeta, layer_idx: usize, ctx: &StateCtx) -> [f32; STATE_DIM] {
+        let l = &meta.layers[layer_idx];
+        [
+            ctx.i as f32 / self.total_channels,
+            ctx.t as f32 / self.n_layers,
+            l.cin as f32 / self.max_cin,
+            l.cout as f32 / self.max_cout,
+            l.w_in as f32 / self.max_hw,
+            l.h_in as f32 / self.max_hw,
+            l.stride as f32 / 2.0,
+            l.k as f32 / 3.0,
+            l.macs as f32 / self.max_macs,
+            (ctx.rdc / self.total_macs) as f32,
+            (ctx.rst / self.total_macs) as f32,
+            ctx.gw / 32.0,
+            ctx.ga / 32.0,
+            ctx.prev_aw / 32.0,
+            ctx.prev_aa / 32.0,
+            (ctx.wvar / self.max_wvar) as f32,
+        ]
+    }
+}
+
+/// Project the LLC's weight actions for one layer onto the §3.2 constraint
+/// set: ∀x,y (aw_x/aw_y − 1)(wvar_x/wvar_y − 1) > 0 — i.e. action order
+/// must agree with variance order.  Sort the proposed actions and assign
+/// them to channels by variance rank (the closest point of the constraint
+/// set under any rank-respecting metric).
+pub fn enforce_variance_order(actions: &mut [f32], vars: &[f64]) {
+    debug_assert_eq!(actions.len(), vars.len());
+    let n = actions.len();
+    let mut var_rank: Vec<usize> = (0..n).collect();
+    var_rank.sort_by(|&a, &b| vars[a].partial_cmp(&vars[b]).unwrap());
+    let mut sorted = actions.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for (rank, &ch) in var_rank.iter().enumerate() {
+        actions[ch] = sorted[rank];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{LayerMeta, ModelMeta};
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            name: "m".into(),
+            image_hw: 32,
+            num_classes: 10,
+            eval_batch: 256,
+            train_batch: 128,
+            layers: vec![LayerMeta {
+                name: "l01_conv".into(),
+                typ: "conv".into(),
+                k: 3,
+                stride: 2,
+                cin: 3,
+                cout: 16,
+                h_in: 32,
+                w_in: 32,
+                h_out: 16,
+                w_out: 16,
+                macs: 110_592,
+                w_off: 0,
+                w_len: 16,
+                a_off: 0,
+                a_len: 3,
+            }],
+            params: vec![],
+            w_channels: 16,
+            a_channels: 3,
+            total_macs: 110_592,
+        }
+    }
+
+    #[test]
+    fn state_is_normalized() {
+        let m = meta();
+        let sb = StateBuilder::new(&m, &vec![0.01; 16]);
+        let ctx = StateCtx {
+            i: 4,
+            t: 0,
+            rdc: 10_000.0,
+            rst: 100_000.0,
+            gw: 16.0,
+            ga: 8.0,
+            prev_aw: 32.0,
+            prev_aa: 0.0,
+            wvar: 0.005,
+        };
+        let s = sb.state(&m, 0, &ctx);
+        assert_eq!(s.len(), STATE_DIM);
+        for (j, &x) in s.iter().enumerate() {
+            assert!((0.0..=1.5).contains(&x), "feature {j} = {x}");
+        }
+        assert_eq!(s[11], 0.5); // gw/32
+        assert_eq!(s[13], 1.0); // prev_aw/32
+        assert!((s[15] - 0.5).abs() < 1e-6); // wvar / max_wvar
+    }
+
+    #[test]
+    fn variance_order_projection() {
+        let vars = vec![0.3, 0.1, 0.9, 0.5];
+        let mut actions = vec![4.0, 8.0, 2.0, 6.0];
+        enforce_variance_order(&mut actions, &vars);
+        // Highest-variance channel (2) gets the largest action, etc.
+        assert_eq!(actions, vec![4.0, 2.0, 8.0, 6.0]);
+        // Constraint holds for all pairs with distinct vars/actions.
+        for x in 0..4 {
+            for y in 0..4 {
+                if x != y {
+                    let c = (actions[x] / actions[y] - 1.0) as f64 * (vars[x] / vars[y] - 1.0);
+                    assert!(c > 0.0, "pair ({x},{y}) violates constraint");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_projection_is_permutation() {
+        crate::util::prop::forall_ns(
+            31,
+            |r| {
+                let n = 2 + r.below(20);
+                let acts: Vec<f32> = (0..n).map(|_| r.f32() * 32.0).collect();
+                let vars: Vec<f64> = (0..n).map(|_| r.f64() + 1e-6).collect();
+                (acts, vars)
+            },
+            |(acts, vars)| {
+                let mut proj = acts.clone();
+                enforce_variance_order(&mut proj, vars);
+                let mut a = acts.clone();
+                let mut b = proj.clone();
+                a.sort_by(|x, y| x.partial_cmp(y).unwrap());
+                b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+                if a != b {
+                    return Err("projection changed the multiset".into());
+                }
+                // Order agreement: higher variance ⇒ action not smaller.
+                for x in 0..proj.len() {
+                    for y in 0..proj.len() {
+                        if vars[x] > vars[y] && proj[x] < proj[y] {
+                            return Err(format!("order violated at ({x},{y})"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

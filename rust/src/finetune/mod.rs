@@ -1,0 +1,123 @@
+//! Training driver: pre-training the zoo (fp32 = all-32-bit config, an
+//! exact passthrough) and post-search fine-tuning of the best-explored
+//! configuration (paper §3: "the best-explored model is fine-tuned to
+//! obtain the best inference accuracy").  Runs the `{model}_train_{mode}`
+//! artifact; rust owns params + momenta.
+
+use crate::cost::Mode;
+use crate::data::synth::{Split, SynthDataset};
+use crate::models::{EvalResult, ModelRunner};
+use crate::runtime::Runtime;
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    /// Cosine decay to lr_min over the run.
+    pub lr_min: f32,
+    pub mode: Mode,
+    /// Per-channel bit config; `None` trains at full precision (32s).
+    pub bits: Option<(Vec<u8>, Vec<u8>)>,
+    /// Distinct training samples to draw from.
+    pub pool: u64,
+    pub log_every: usize,
+    pub eval_batches: usize,
+    pub seed: u64,
+}
+
+impl TrainConfig {
+    pub fn pretrain(steps: usize) -> TrainConfig {
+        TrainConfig {
+            steps,
+            lr: 0.05,
+            lr_min: 0.002,
+            mode: Mode::Quant,
+            bits: None,
+            pool: 20_000,
+            log_every: 50,
+            eval_batches: 2,
+            seed: 7,
+        }
+    }
+
+    /// Model-aware pre-training: deeper residual nets need a gentler peak
+    /// learning rate to converge from He init under GroupNorm.
+    pub fn pretrain_for(model: &str, steps: usize) -> TrainConfig {
+        let mut cfg = Self::pretrain(steps);
+        if model == "res18" || model == "monet" {
+            cfg.lr = 0.02;
+        }
+        cfg
+    }
+
+    pub fn finetune(mode: Mode, wbits: Vec<u8>, abits: Vec<u8>, steps: usize) -> TrainConfig {
+        TrainConfig {
+            steps,
+            lr: 0.01,
+            lr_min: 0.0005,
+            mode,
+            bits: Some((wbits, abits)),
+            pool: 20_000,
+            log_every: 50,
+            eval_batches: 2,
+            seed: 11,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// (step, loss) curve, sampled at log_every.
+    pub curve: Vec<(usize, f32)>,
+    pub final_eval: EvalResult,
+    pub secs: f64,
+}
+
+pub fn train(
+    rt: &mut Runtime,
+    runner: &mut ModelRunner,
+    data: &SynthDataset,
+    cfg: &TrainConfig,
+) -> anyhow::Result<TrainReport> {
+    let t0 = std::time::Instant::now();
+    let (wbits, abits) = match &cfg.bits {
+        Some((w, a)) => (w.clone(), a.clone()),
+        None => (
+            vec![32u8; runner.meta.w_channels],
+            vec![32u8; runner.meta.a_channels],
+        ),
+    };
+    let tb = runner.meta.train_batch;
+    let mut curve = Vec::new();
+    for step in 0..cfg.steps {
+        // Cosine learning-rate decay.
+        let prog = step as f32 / cfg.steps.max(1) as f32;
+        let lr = cfg.lr_min
+            + 0.5 * (cfg.lr - cfg.lr_min) * (1.0 + (std::f32::consts::PI * prog).cos());
+        let batch = data.train_batch(cfg.seed.wrapping_add(step as u64), tb, cfg.pool);
+        let loss = runner.train_step(rt, cfg.mode, &batch, &wbits, &abits, lr)?;
+        anyhow::ensure!(loss.is_finite(), "training diverged at step {step}: loss {loss}");
+        if step % cfg.log_every.max(1) == 0 || step + 1 == cfg.steps {
+            curve.push((step, loss));
+            crate::debug!("{} train step {step}/{}: loss {loss:.4} lr {lr:.4}", runner.meta.name, cfg.steps);
+        }
+    }
+    let final_eval =
+        runner.eval_config(rt, cfg.mode, &wbits, &abits, data, Split::Val, cfg.eval_batches)?;
+    Ok(TrainReport { curve, final_eval, secs: t0.elapsed().as_secs_f64() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn configs_have_sane_defaults() {
+        let p = TrainConfig::pretrain(100);
+        assert!(p.bits.is_none());
+        assert!(p.lr > p.lr_min);
+        let f = TrainConfig::finetune(Mode::Binar, vec![4; 8], vec![4; 3], 50);
+        assert_eq!(f.mode, Mode::Binar);
+        assert!(f.bits.is_some());
+    }
+}

@@ -1,0 +1,28 @@
+//! AutoQ: hierarchical-DRL kernel-wise (channel-level) network quantization
+//! and binarization — a rust + JAX + Pallas reproduction of "AutoQ:
+//! Automated Kernel-Wise Neural Network Quantization" (ICLR 2020; arXiv
+//! title "AutoQB").
+//!
+//! Layer 3 (this crate) owns the search loop, hierarchical agent state,
+//! rewards, cost models and FPGA simulators; Layer 2 (JAX) and Layer 1
+//! (Pallas) are AOT-compiled to HLO text and executed via PJRT — python is
+//! never on the search path.  See DESIGN.md.
+
+pub mod agent;
+pub mod env;
+pub mod finetune;
+pub mod search;
+pub mod baselines;
+pub mod cost;
+pub mod data;
+pub mod models;
+pub mod quant;
+pub mod repro;
+pub mod reward;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

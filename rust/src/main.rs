@@ -1,0 +1,245 @@
+//! AutoQ leader binary: CLI over the coordinator library.
+//!
+//! Subcommands:
+//!   pretrain   — train a zoo model (fp32) on the synthetic dataset
+//!   search     — hierarchical channel/layer/network bit-width search
+//!   finetune   — fine-tune a searched bit configuration
+//!   eval       — evaluate a model / bit config
+//!   sim        — run a searched config through the FPGA simulators
+//!   repro      — regenerate a paper table/figure (see DESIGN.md index)
+//!   stats      — dump runtime executable statistics
+//!
+//! Run `autoq <cmd> --help` for options.
+
+use std::path::PathBuf;
+
+use autoq::cost::Mode;
+use autoq::data::synth::SynthDataset;
+use autoq::models::{ModelRunner, ParamStore};
+use autoq::runtime::Runtime;
+use autoq::search::{Granularity, Protocol, SearchConfig};
+use autoq::util::cli::Args;
+use autoq::util::rng::Rng;
+
+fn main() {
+    autoq::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().cloned().unwrap_or_else(|| "help".to_string());
+    let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
+    let code = match run(&cmd, rest) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
+    match cmd {
+        "pretrain" => cmd_pretrain(rest),
+        "search" => cmd_search(rest),
+        "finetune" => cmd_finetune(rest),
+        "eval" => cmd_eval(rest),
+        "sim" => cmd_sim(rest),
+        "repro" => autoq::repro::cmd_repro(rest),
+        "stats" => cmd_stats(rest),
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?}\n{HELP}"),
+    }
+}
+
+const HELP: &str = "autoq — hierarchical-DRL kernel-wise quantization/binarization
+
+commands:
+  pretrain --model M --steps N            pre-train a zoo model
+  search   --model M --mode quant|binar --protocol rc|ag|fr \\
+           --granularity n|l|c --episodes N   run a search
+  finetune --model M --config FILE --steps N  fine-tune a searched config
+  eval     --model M [--config FILE]          evaluate fp32 or a config
+  sim      --model M --config FILE            FPGA simulator report
+  repro    <fig1|table2|table3|table4|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|storage|all>
+  stats                                        runtime executable stats";
+
+fn params_path(model: &str) -> PathBuf {
+    PathBuf::from(format!("artifacts/{model}_trained.apb"))
+}
+
+/// Load a pre-trained runner (pretraining first if missing).
+pub fn load_runner(rt: &mut Runtime, model: &str, auto_pretrain: bool) -> anyhow::Result<ModelRunner> {
+    let meta = rt.manifest.model(model)?.clone();
+    let path = params_path(model);
+    if path.exists() {
+        let params = ParamStore::load(&path)?;
+        return ModelRunner::new(meta, params);
+    }
+    anyhow::ensure!(auto_pretrain, "{} not found — run `autoq pretrain --model {model}`", path.display());
+    autoq::info!("no trained params for {model}; pre-training now");
+    let mut runner = ModelRunner::init(meta, &mut Rng::new(0xA0_70_u64 ^ model.len() as u64));
+    let data = SynthDataset::new(42);
+    let cfg = autoq::finetune::TrainConfig::pretrain_for(model, 300);
+    let rep = autoq::finetune::train(rt, &mut runner, &data, &cfg)?;
+    autoq::info!("pretrained {model}: acc={:.4}", rep.final_eval.accuracy);
+    runner.params.save(&path)?;
+    Ok(runner)
+}
+
+fn cmd_pretrain(rest: &[String]) -> anyhow::Result<()> {
+    let a = Args::new("pretrain")
+        .opt("model", "cif10", "zoo model name")
+        .opt("steps", "300", "SGD steps")
+        .opt("seed", "42", "dataset seed")
+        .parse(rest)?;
+    let model = a.get("model");
+    let mut rt = Runtime::open_default()?;
+    let meta = rt.manifest.model(&model)?.clone();
+    let mut runner = ModelRunner::init(meta, &mut Rng::new(0xA0_70_u64 ^ model.len() as u64));
+    let data = SynthDataset::new(a.get_u64("seed")?);
+    let cfg = autoq::finetune::TrainConfig::pretrain_for(&model, a.get_usize("steps")?);
+    let rep = autoq::finetune::train(&mut rt, &mut runner, &data, &cfg)?;
+    println!("pretrain {model}: final loss curve tail {:?}", rep.curve.last());
+    println!("val accuracy: {:.4} ({} images)", rep.final_eval.accuracy, rep.final_eval.images);
+    runner.params.save(&params_path(&model))?;
+    println!("saved {}", params_path(&model).display());
+    Ok(())
+}
+
+fn cmd_search(rest: &[String]) -> anyhow::Result<()> {
+    let a = Args::new("search")
+        .opt("model", "cif10", "zoo model name")
+        .opt("mode", "quant", "quant|binar")
+        .opt("protocol", "rc", "rc|ag|fr")
+        .opt("granularity", "c", "n|l|c (network/layer/channel)")
+        .opt("episodes", "40", "search episodes")
+        .opt("warmup", "10", "constant-noise episodes")
+        .opt("eval-batches", "2", "val batches per evaluation")
+        .opt("seed", "1", "agent seed")
+        .opt("target-bits", "5", "B-bar for Algorithm 1 (rc)")
+        .opt("out", "", "write best config JSON here")
+        .flag("paper-scale", "use the paper's 400-episode schedule")
+        .flag("no-relabel", "disable HIRO goal relabeling (ablation)")
+        .parse(rest)?;
+    let model = a.get("model");
+    let mut rt = Runtime::open_default()?;
+    let runner = load_runner(&mut rt, &model, true)?;
+    let data = SynthDataset::new(42);
+    let mode = Mode::parse(&a.get("mode"))?;
+    let mut protocol = Protocol::parse(&a.get("protocol"))?;
+    protocol.target_bits = a.get_f64("target-bits")?;
+    let gran = Granularity::parse(&a.get("granularity"))?;
+    let mut cfg = SearchConfig::quick(mode, protocol, gran);
+    cfg.episodes = a.get_usize("episodes")?;
+    cfg.warmup = a.get_usize("warmup")?;
+    cfg.eval_batches = a.get_usize("eval-batches")?;
+    cfg.seed = a.get_u64("seed")?;
+    cfg.relabel = !a.get_bool("no-relabel");
+    if a.get_bool("paper-scale") {
+        cfg = cfg.paper_scale();
+    }
+    let res = autoq::search::run_search(&mut rt, &runner, &data, &cfg)?;
+    let b = &res.best;
+    println!(
+        "best: acc={:.4} reward={:.4} score={:.2} avg_wbits={:.2} avg_abits={:.2} norm_logic={:.4}",
+        b.accuracy, b.reward, b.score, b.avg_wbits, b.avg_abits, b.cost.norm_logic()
+    );
+    println!("search took {:.1}s over {} episodes", res.secs, res.history.len());
+    let out = a.get("out");
+    if !out.is_empty() {
+        autoq::quant::save_config(&PathBuf::from(&out), &model, mode, b)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_finetune(rest: &[String]) -> anyhow::Result<()> {
+    let a = Args::new("finetune")
+        .opt("model", "cif10", "zoo model name")
+        .opt("config", "", "searched config JSON (from search --out)")
+        .opt("steps", "200", "fine-tune steps")
+        .parse(rest)?;
+    let model = a.get("model");
+    let mut rt = Runtime::open_default()?;
+    let mut runner = load_runner(&mut rt, &model, true)?;
+    let cfgf = a.get("config");
+    anyhow::ensure!(!cfgf.is_empty(), "--config required");
+    let saved = autoq::quant::load_config(&PathBuf::from(&cfgf))?;
+    let data = SynthDataset::new(42);
+    let tc = autoq::finetune::TrainConfig::finetune(
+        saved.mode,
+        saved.wbits.clone(),
+        saved.abits.clone(),
+        a.get_usize("steps")?,
+    );
+    let before = runner.eval_config(
+        &mut rt, saved.mode, &saved.wbits, &saved.abits, &data,
+        autoq::data::Split::Val, 2,
+    )?;
+    let rep = autoq::finetune::train(&mut rt, &mut runner, &data, &tc)?;
+    println!(
+        "finetune {model}: acc {:.4} -> {:.4} over {} steps ({:.1}s)",
+        before.accuracy, rep.final_eval.accuracy, a.get_usize("steps")?, rep.secs
+    );
+    Ok(())
+}
+
+fn cmd_eval(rest: &[String]) -> anyhow::Result<()> {
+    let a = Args::new("eval")
+        .opt("model", "cif10", "zoo model name")
+        .opt("config", "", "optional searched config JSON")
+        .opt("batches", "4", "val batches")
+        .parse(rest)?;
+    let model = a.get("model");
+    let mut rt = Runtime::open_default()?;
+    let runner = load_runner(&mut rt, &model, true)?;
+    let data = SynthDataset::new(42);
+    let nb = a.get_usize("batches")?;
+    let cfgf = a.get("config");
+    let res = if cfgf.is_empty() {
+        runner.eval_fp32(&mut rt, &data, autoq::data::Split::Val, nb)?
+    } else {
+        let saved = autoq::quant::load_config(&PathBuf::from(&cfgf))?;
+        runner.eval_config(
+            &mut rt, saved.mode, &saved.wbits, &saved.abits, &data,
+            autoq::data::Split::Val, nb,
+        )?
+    };
+    println!("{model}: accuracy {:.4} loss {:.4} ({} images)", res.accuracy, res.loss, res.images);
+    Ok(())
+}
+
+fn cmd_sim(rest: &[String]) -> anyhow::Result<()> {
+    let a = Args::new("sim")
+        .opt("model", "cif10", "zoo model name")
+        .opt("config", "", "searched config JSON")
+        .parse(rest)?;
+    let model = a.get("model");
+    let rt = Runtime::open_default()?;
+    let meta = rt.manifest.model(&model)?.clone();
+    let cfgf = a.get("config");
+    let (mode, wbits, abits) = if cfgf.is_empty() {
+        (Mode::Quant, vec![5u8; meta.w_channels], vec![5u8; meta.a_channels])
+    } else {
+        let saved = autoq::quant::load_config(&PathBuf::from(&cfgf))?;
+        (saved.mode, saved.wbits, saved.abits)
+    };
+    println!("{:<10} {:>10} {:>12} {:>8}", "arch", "fps", "energy(mJ)", "util");
+    for arch in [autoq::sim::Arch::Temporal, autoq::sim::Arch::Spatial] {
+        let sim = autoq::sim::FpgaSim::new(arch, mode);
+        let r = sim.run(&meta.layers, &wbits, &abits);
+        println!(
+            "{:<10} {:>10.1} {:>12.3} {:>8.3}",
+            arch.as_str(), r.fps, r.energy_j * 1e3, r.utilization
+        );
+    }
+    Ok(())
+}
+
+fn cmd_stats(_rest: &[String]) -> anyhow::Result<()> {
+    let rt = Runtime::open_default()?;
+    println!("{}", rt.stats_report());
+    Ok(())
+}

@@ -1,0 +1,162 @@
+//! Model runner: evaluate and train zoo models through their AOT artifacts.
+//!
+//! The search hot path: `eval_config` scores a candidate per-channel bit
+//! assignment on held-out validation batches via `{model}_eval_{mode}`
+//! (whose quantize/binarize inner loops are the L1 Pallas kernels).
+
+use xla::Literal;
+
+use crate::cost::hardware::Mode;
+use crate::data::synth::{Batch, Split, SynthDataset};
+use crate::models::params::ParamStore;
+use crate::runtime::{tensor, ModelMeta, Runtime, Tensor};
+
+pub struct ModelRunner {
+    pub meta: ModelMeta,
+    pub params: ParamStore,
+    pub momenta: ParamStore,
+}
+
+/// Bit config in evaluation form (f32 vectors, network channel order).
+pub fn bits_to_f32(bits: &[u8]) -> Vec<f32> {
+    bits.iter().map(|&b| b as f32).collect()
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalResult {
+    pub accuracy: f64,
+    pub loss: f64,
+    pub images: usize,
+}
+
+impl ModelRunner {
+    pub fn new(meta: ModelMeta, params: ParamStore) -> anyhow::Result<ModelRunner> {
+        params.check_layout(&meta.params)?;
+        let momenta = params.zeros_like();
+        Ok(ModelRunner { meta, params, momenta })
+    }
+
+    pub fn init(meta: ModelMeta, rng: &mut crate::util::rng::Rng) -> ModelRunner {
+        let params = ParamStore::init(&meta.params, rng);
+        let momenta = params.zeros_like();
+        ModelRunner { meta, params, momenta }
+    }
+
+    fn artifact(&self, kind: &str, mode: Mode) -> String {
+        format!("{}_{}_{}", self.meta.name, kind, mode.as_str())
+    }
+
+    fn batch_literals(&self, batch: &Batch, n_expected: usize) -> anyhow::Result<(Literal, Literal)> {
+        anyhow::ensure!(batch.n == n_expected, "batch {} vs expected {n_expected}", batch.n);
+        let hw = self.meta.image_hw;
+        let img = Tensor::new(vec![batch.n, hw, hw, 3], batch.images.clone()).to_literal()?;
+        let lbl = tensor::lit_i32(&batch.labels, &[batch.n])?;
+        Ok((img, lbl))
+    }
+
+    /// Evaluate a bit config on `n_batches` × eval_batch validation images.
+    pub fn eval_config(
+        &self,
+        rt: &mut Runtime,
+        mode: Mode,
+        wbits: &[u8],
+        abits: &[u8],
+        data: &SynthDataset,
+        split: Split,
+        n_batches: usize,
+    ) -> anyhow::Result<EvalResult> {
+        anyhow::ensure!(wbits.len() == self.meta.w_channels, "wbits len");
+        anyhow::ensure!(abits.len() == self.meta.a_channels, "abits len");
+        let name = self.artifact("eval", mode);
+        let eb = self.meta.eval_batch;
+        let mut correct = 0.0f64;
+        let mut loss = 0.0f64;
+        for bi in 0..n_batches {
+            let batch = data.batch(split, (bi * eb) as u64, eb);
+            let (img, lbl) = self.batch_literals(&batch, eb)?;
+            let mut inputs: Vec<Literal> = Vec::with_capacity(self.params.len() + 4);
+            for t in &self.params.tensors {
+                inputs.push(t.to_literal()?);
+            }
+            inputs.push(img);
+            inputs.push(lbl);
+            inputs.push(Tensor::new(vec![wbits.len()], bits_to_f32(wbits)).to_literal()?);
+            inputs.push(Tensor::new(vec![abits.len()], bits_to_f32(abits)).to_literal()?);
+            let outs = rt.exec(&name, &inputs)?;
+            correct += tensor::scalar_f32(&outs[0])? as f64;
+            loss += tensor::scalar_f32(&outs[1])? as f64;
+        }
+        let images = n_batches * eb;
+        Ok(EvalResult {
+            accuracy: correct / images as f64,
+            loss: loss / n_batches as f64,
+            images,
+        })
+    }
+
+    /// Full-precision accuracy = all channels at 32 bits (quant path is an
+    /// exact passthrough ≥ 24 bits).
+    pub fn eval_fp32(
+        &self,
+        rt: &mut Runtime,
+        data: &SynthDataset,
+        split: Split,
+        n_batches: usize,
+    ) -> anyhow::Result<EvalResult> {
+        let wbits = vec![32u8; self.meta.w_channels];
+        let abits = vec![32u8; self.meta.a_channels];
+        self.eval_config(rt, Mode::Quant, &wbits, &abits, data, split, n_batches)
+    }
+
+    /// One SGD-momentum training step under a bit config (STE), updating
+    /// params/momenta in place.  Returns the batch loss.
+    pub fn train_step(
+        &mut self,
+        rt: &mut Runtime,
+        mode: Mode,
+        batch: &Batch,
+        wbits: &[u8],
+        abits: &[u8],
+        lr: f32,
+    ) -> anyhow::Result<f32> {
+        let name = self.artifact("train", mode);
+        let (img, lbl) = self.batch_literals(batch, self.meta.train_batch)?;
+        let np = self.params.len();
+        let mut inputs: Vec<Literal> = Vec::with_capacity(2 * np + 5);
+        for t in &self.params.tensors {
+            inputs.push(t.to_literal()?);
+        }
+        for t in &self.momenta.tensors {
+            inputs.push(t.to_literal()?);
+        }
+        inputs.push(img);
+        inputs.push(lbl);
+        inputs.push(Tensor::new(vec![wbits.len()], bits_to_f32(wbits)).to_literal()?);
+        inputs.push(Tensor::new(vec![abits.len()], bits_to_f32(abits)).to_literal()?);
+        inputs.push(Tensor::scalar(lr).to_literal()?);
+        let outs = rt.exec(&name, &inputs)?;
+        anyhow::ensure!(outs.len() == 2 * np + 1, "train outputs {}", outs.len());
+        for (i, t) in self.params.tensors.iter_mut().enumerate() {
+            *t = Tensor::from_literal(&outs[i])?;
+        }
+        for (i, t) in self.momenta.tensors.iter_mut().enumerate() {
+            *t = Tensor::from_literal(&outs[np + i])?;
+        }
+        tensor::scalar_f32(&outs[2 * np])
+    }
+
+    /// Per-output-channel weight variances, network order (Eq.-1 wvar_i).
+    pub fn weight_variances(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.meta.w_channels);
+        for l in &self.meta.layers {
+            let v = self
+                .params
+                .channel_variances(&format!("{}.w", l.name))
+                .unwrap_or_else(|| vec![0.0; l.cout]);
+            debug_assert_eq!(v.len(), l.w_len);
+            out.extend(v);
+        }
+        debug_assert_eq!(out.len(), self.meta.w_channels);
+        out
+    }
+}

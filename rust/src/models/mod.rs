@@ -1,0 +1,9 @@
+//! Model-zoo services: parameter stores (rust-owned buffers), the artifact
+//! eval/train runner, and §3.4 bit-config storage.
+
+pub mod eval;
+pub mod params;
+pub mod storage;
+
+pub use eval::{bits_to_f32, EvalResult, ModelRunner};
+pub use params::ParamStore;

@@ -1,0 +1,242 @@
+//! Parameter store: rust owns every model/agent buffer.
+//!
+//! Initialization follows the manifest's per-param `init` kind (`he` — He
+//! normal scaled by fan-in, `ones`, `zeros`), so no binary interchange with
+//! python is needed.  Trained parameters persist in a simple length-checked
+//! binary format (`.apb` — AutoQ Param Blob).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::runtime::{ParamSpec, Tensor};
+use crate::util::rng::Rng;
+
+/// Named, ordered set of tensors matching a manifest param list.
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    pub names: Vec<String>,
+    pub tensors: Vec<Tensor>,
+}
+
+const MAGIC: &[u8; 8] = b"AUTOQPB1";
+
+impl ParamStore {
+    /// Initialize from manifest specs with a seeded RNG.
+    pub fn init(specs: &[ParamSpec], rng: &mut Rng) -> ParamStore {
+        let mut names = Vec::with_capacity(specs.len());
+        let mut tensors = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let mut t = Tensor::zeros(spec.shape.clone());
+            match spec.init.as_str() {
+                "he" => {
+                    let sigma = (2.0 / spec.fan_in().max(1) as f64).sqrt() as f32;
+                    rng.fill_normal_f32(&mut t.data, sigma);
+                }
+                "ones" => t.data.fill(1.0),
+                "zeros" => {}
+                other => panic!("unknown init kind {other:?}"),
+            }
+            names.push(spec.name.clone());
+            tensors.push(t);
+        }
+        ParamStore { names, tensors }
+    }
+
+    /// All-zero momenta/moment buffers shaped like `self`.
+    pub fn zeros_like(&self) -> ParamStore {
+        ParamStore {
+            names: self.names.clone(),
+            tensors: self.tensors.iter().map(|t| Tensor::zeros(t.shape.clone())).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+    pub fn total_elems(&self) -> usize {
+        self.tensors.iter().map(|t| t.elems()).sum()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.names.iter().position(|n| n == name).map(|i| &self.tensors[i])
+    }
+
+    /// Save to the `.apb` format: magic, count, then per-tensor
+    /// (name_len, name, ndim, dims..., f32 data), all little-endian.
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.tensors.len() as u64).to_le_bytes())?;
+        for (name, t) in self.names.iter().zip(&self.tensors) {
+            f.write_all(&(name.len() as u64).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            f.write_all(&(t.shape.len() as u64).to_le_bytes())?;
+            for &d in &t.shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            for &x in &t.data {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<ParamStore> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "{}: not an .apb file", path.display());
+        let count = read_u64(&mut f)? as usize;
+        anyhow::ensure!(count < 1_000_000, "implausible tensor count {count}");
+        let mut names = Vec::with_capacity(count);
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name_len = read_u64(&mut f)? as usize;
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let ndim = read_u64(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u64(&mut f)? as usize);
+            }
+            let n: usize = shape.iter().product::<usize>().max(1);
+            let mut buf = vec![0u8; n * 4];
+            f.read_exact(&mut buf)?;
+            let data: Vec<f32> = buf
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            names.push(String::from_utf8(name)?);
+            tensors.push(Tensor::new(shape, data));
+        }
+        Ok(ParamStore { names, tensors })
+    }
+
+    /// Verify layout against manifest specs (names + shapes, in order).
+    pub fn check_layout(&self, specs: &[ParamSpec]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.len() == specs.len(),
+            "param count {} vs manifest {}",
+            self.len(),
+            specs.len()
+        );
+        for (i, spec) in specs.iter().enumerate() {
+            anyhow::ensure!(
+                self.names[i] == spec.name && self.tensors[i].shape == spec.shape,
+                "param {i}: {}{:?} vs manifest {}{:?}",
+                self.names[i],
+                self.tensors[i].shape,
+                spec.name,
+                spec.shape
+            );
+        }
+        Ok(())
+    }
+
+    /// Per-output-channel weight variances for a conv/fc weight tensor
+    /// (the `wvar_i` state feature of Eq. 1).  Conv shape (k,k,cin,cout) →
+    /// channel = last dim; fc (cin,cout) → channel = last dim.
+    pub fn channel_variances(&self, name: &str) -> Option<Vec<f64>> {
+        let t = self.get(name)?;
+        let cout = *t.shape.last()?;
+        let rows = t.elems() / cout;
+        let mut sums = vec![0.0f64; cout];
+        let mut sqs = vec![0.0f64; cout];
+        // Data layout is row-major with channel last: stride over it.
+        for (i, &x) in t.data.iter().enumerate() {
+            let c = i % cout;
+            sums[c] += x as f64;
+            sqs[c] += (x as f64) * (x as f64);
+        }
+        Some(
+            (0..cout)
+                .map(|c| {
+                    let m = sums[c] / rows as f64;
+                    (sqs[c] / rows as f64 - m * m).max(0.0)
+                })
+                .collect(),
+        )
+    }
+}
+
+fn read_u64(f: &mut impl Read) -> anyhow::Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec { name: "l1.w".into(), shape: vec![3, 3, 2, 4], init: "he".into() },
+            ParamSpec { name: "l1.g".into(), shape: vec![4], init: "ones".into() },
+            ParamSpec { name: "l1.b".into(), shape: vec![4], init: "zeros".into() },
+        ]
+    }
+
+    #[test]
+    fn init_kinds() {
+        let mut rng = Rng::new(1);
+        let ps = ParamStore::init(&specs(), &mut rng);
+        assert_eq!(ps.len(), 3);
+        let w = ps.get("l1.w").unwrap();
+        assert!(w.data.iter().any(|&x| x != 0.0));
+        // He sigma = sqrt(2/18) ≈ 0.33 — check empirical std is in range.
+        let std = crate::util::stats::variance_f32(&w.data).sqrt();
+        assert!((0.15..0.6).contains(&std), "std {std}");
+        assert!(ps.get("l1.g").unwrap().data.iter().all(|&x| x == 1.0));
+        assert!(ps.get("l1.b").unwrap().data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut rng = Rng::new(2);
+        let ps = ParamStore::init(&specs(), &mut rng);
+        let dir = std::env::temp_dir().join("autoq_test_params.apb");
+        ps.save(&dir).unwrap();
+        let ps2 = ParamStore::load(&dir).unwrap();
+        assert_eq!(ps.names, ps2.names);
+        for (a, b) in ps.tensors.iter().zip(&ps2.tensors) {
+            assert_eq!(a, b);
+        }
+        ps2.check_layout(&specs()).unwrap();
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn layout_mismatch_detected() {
+        let mut rng = Rng::new(3);
+        let ps = ParamStore::init(&specs(), &mut rng);
+        let mut bad = specs();
+        bad[0].shape = vec![3, 3, 2, 8];
+        assert!(ps.check_layout(&bad).is_err());
+    }
+
+    #[test]
+    fn channel_variance_per_output_channel() {
+        // Build a tensor where channel c has constant value c → variance 0,
+        // then perturb channel 1.
+        let cout = 4;
+        let rows = 6;
+        let mut data = vec![0.0f32; rows * cout];
+        for i in 0..rows * cout {
+            data[i] = (i % cout) as f32;
+        }
+        data[1] += 3.0; // channel 1 now has nonzero variance
+        let ps = ParamStore {
+            names: vec!["w".into()],
+            tensors: vec![Tensor::new(vec![rows, cout], data)],
+        };
+        let v = ps.channel_variances("w").unwrap();
+        assert_eq!(v.len(), cout);
+        assert!(v[0].abs() < 1e-9);
+        assert!(v[1] > 0.1);
+        assert!(v[2].abs() < 1e-9);
+    }
+}

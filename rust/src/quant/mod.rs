@@ -1,0 +1,133 @@
+//! Searched bit-configuration persistence: JSON for humans/tools plus the
+//! §3.4 6-bit packed form for deployment-size audits.
+
+use std::path::Path;
+
+use crate::cost::Mode;
+use crate::models::storage;
+use crate::search::EpisodeOutcome;
+use crate::util::json::Json;
+
+/// A searched per-channel configuration, as written by `autoq search --out`.
+#[derive(Debug, Clone)]
+pub struct SavedConfig {
+    pub model: String,
+    pub mode: Mode,
+    pub wbits: Vec<u8>,
+    pub abits: Vec<u8>,
+    pub accuracy: f64,
+    pub score: f64,
+}
+
+pub fn save_config(
+    path: &Path,
+    model: &str,
+    mode: Mode,
+    out: &EpisodeOutcome,
+) -> anyhow::Result<()> {
+    let j = Json::obj(vec![
+        ("model", model.into()),
+        ("mode", mode.as_str().into()),
+        ("accuracy", out.accuracy.into()),
+        ("score", out.score.into()),
+        ("norm_logic", out.cost.norm_logic().into()),
+        ("avg_wbits", out.avg_wbits.into()),
+        ("avg_abits", out.avg_abits.into()),
+        (
+            "wbits",
+            Json::Arr(out.wbits.iter().map(|&b| Json::Num(b as f64)).collect()),
+        ),
+        (
+            "abits",
+            Json::Arr(out.abits.iter().map(|&b| Json::Num(b as f64)).collect()),
+        ),
+        (
+            "per_layer",
+            Json::Arr(
+                out.per_layer
+                    .iter()
+                    .map(|l| {
+                        Json::obj(vec![
+                            ("name", l.name.as_str().into()),
+                            ("avg_w", l.avg_w.into()),
+                            ("avg_a", l.avg_a.into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(path, j.to_string())?;
+    Ok(())
+}
+
+pub fn load_config(path: &Path) -> anyhow::Result<SavedConfig> {
+    let text = std::fs::read_to_string(path)?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    let bits = |k: &str| -> anyhow::Result<Vec<u8>> {
+        Ok(j.req(k)?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("{k} not an array"))?
+            .iter()
+            .map(|v| v.as_usize().unwrap_or(0) as u8)
+            .collect())
+    };
+    Ok(SavedConfig {
+        model: j.req("model")?.as_str().unwrap_or("").to_string(),
+        mode: Mode::parse(j.req("mode")?.as_str().unwrap_or("quant"))?,
+        wbits: bits("wbits")?,
+        abits: bits("abits")?,
+        accuracy: j.req("accuracy")?.as_f64().unwrap_or(0.0),
+        score: j.req("score")?.as_f64().unwrap_or(0.0),
+    })
+}
+
+/// Deployment payload audit of a saved config (§3.4).
+pub fn audit(
+    layers: &[crate::runtime::LayerMeta],
+    wbits: &[u8],
+    abits: &[u8],
+) -> storage::StorageAudit {
+    let mut elems = Vec::with_capacity(wbits.len());
+    for l in layers {
+        let per_c: u64 = match l.typ.as_str() {
+            "fc" => l.cin as u64,
+            "dwconv" => (l.k * l.k) as u64,
+            _ => (l.k * l.k * l.cin) as u64,
+        };
+        elems.extend(std::iter::repeat(per_c).take(l.w_len));
+    }
+    storage::storage_audit(&elems, wbits, abits.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::logic::model_cost;
+    use crate::search::LayerBits;
+
+    #[test]
+    fn config_roundtrip() {
+        let out = EpisodeOutcome {
+            wbits: vec![4, 5, 0, 32],
+            abits: vec![3, 3],
+            accuracy: 0.91,
+            loss: 0.3,
+            cost: model_cost(&[], &[], &[]),
+            reward: 0.5,
+            score: 10.0,
+            per_layer: vec![LayerBits { name: "l01_conv".into(), avg_w: 4.5, avg_a: 3.0 }],
+            avg_wbits: 10.25,
+            avg_abits: 3.0,
+        };
+        let path = std::env::temp_dir().join("autoq_cfg_test.json");
+        save_config(&path, "cif10", Mode::Binar, &out).unwrap();
+        let back = load_config(&path).unwrap();
+        assert_eq!(back.model, "cif10");
+        assert_eq!(back.mode, Mode::Binar);
+        assert_eq!(back.wbits, vec![4, 5, 0, 32]);
+        assert_eq!(back.abits, vec![3, 3]);
+        assert!((back.accuracy - 0.91).abs() < 1e-9);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,159 @@
+//! Shared plumbing for the repro harness: searched-config caching (so
+//! `repro fig9` can reuse the searches `repro table2` ran), report sinks,
+//! and the search-or-load entry point.
+
+use std::path::PathBuf;
+
+use crate::cost::Mode;
+use crate::data::synth::SynthDataset;
+use crate::models::{ModelRunner, ParamStore};
+use crate::quant::{load_config, save_config, SavedConfig};
+use crate::runtime::Runtime;
+use crate::search::{run_search, Granularity, Protocol, SearchConfig, SearchResult};
+use crate::util::rng::Rng;
+
+pub fn reports_dir() -> PathBuf {
+    let d = PathBuf::from("reports");
+    std::fs::create_dir_all(d.join("configs")).ok();
+    d
+}
+
+/// Report sink: tees formatted text to stdout and reports/<id>.txt.
+pub struct Report {
+    pub id: String,
+    buf: String,
+}
+
+impl Report {
+    pub fn new(id: &str) -> Report {
+        Report { id: id.to_string(), buf: String::new() }
+    }
+    pub fn line(&mut self, s: impl AsRef<str>) {
+        println!("{}", s.as_ref());
+        self.buf.push_str(s.as_ref());
+        self.buf.push('\n');
+    }
+    pub fn finish(self) -> anyhow::Result<PathBuf> {
+        let path = reports_dir().join(format!("{}.txt", self.id));
+        std::fs::write(&path, self.buf)?;
+        Ok(path)
+    }
+}
+
+/// Shared repro knobs (scaled-down defaults; `--paper-scale` restores §4).
+#[derive(Debug, Clone)]
+pub struct ReproCtx {
+    pub episodes: usize,
+    pub warmup: usize,
+    pub eval_batches: usize,
+    pub finetune_steps: usize,
+    pub seed: u64,
+    pub fresh: bool,
+    pub paper_scale: bool,
+}
+
+impl Default for ReproCtx {
+    fn default() -> Self {
+        ReproCtx {
+            episodes: 30,
+            warmup: 8,
+            eval_batches: 2,
+            finetune_steps: 80,
+            seed: 1,
+            fresh: false,
+            paper_scale: false,
+        }
+    }
+}
+
+/// Load (pre-training if needed) a zoo model.
+pub fn runner_for(rt: &mut Runtime, model: &str) -> anyhow::Result<ModelRunner> {
+    let meta = rt.manifest.model(model)?.clone();
+    let path = PathBuf::from(format!("artifacts/{model}_trained.apb"));
+    if path.exists() {
+        return ModelRunner::new(meta, ParamStore::load(&path)?);
+    }
+    crate::info!("pre-training {model} (first use)");
+    let mut runner = ModelRunner::init(meta, &mut Rng::new(0xA0_70_u64 ^ model.len() as u64));
+    let data = SynthDataset::new(42);
+    let cfg = crate::finetune::TrainConfig::pretrain(300);
+    let rep = crate::finetune::train(rt, &mut runner, &data, &cfg)?;
+    crate::info!("pretrained {model}: acc={:.4}", rep.final_eval.accuracy);
+    runner.params.save(&path)?;
+    Ok(runner)
+}
+
+fn cache_key(model: &str, mode: Mode, protocol: &Protocol, gran: Granularity) -> PathBuf {
+    reports_dir().join(format!(
+        "configs/{model}_{}_{}_{}.json",
+        mode.as_str(),
+        protocol.name(),
+        gran.tag()
+    ))
+}
+
+/// Search one (model, mode, protocol, granularity) cell, or return the
+/// cached best config from a previous repro run.
+pub fn search_or_cached(
+    rt: &mut Runtime,
+    model: &str,
+    mode: Mode,
+    protocol: Protocol,
+    gran: Granularity,
+    ctx: &ReproCtx,
+) -> anyhow::Result<SavedConfig> {
+    let key = cache_key(model, mode, &protocol, gran);
+    if key.exists() && !ctx.fresh {
+        crate::debug!("cache hit: {}", key.display());
+        return load_config(&key);
+    }
+    let runner = runner_for(rt, model)?;
+    let data = SynthDataset::new(42);
+    let res = run_cell(rt, &runner, &data, mode, protocol, gran, ctx)?;
+    save_config(&key, model, mode, &res.best)?;
+    load_config(&key)
+}
+
+pub fn run_cell(
+    rt: &mut Runtime,
+    runner: &ModelRunner,
+    data: &SynthDataset,
+    mode: Mode,
+    protocol: Protocol,
+    gran: Granularity,
+    ctx: &ReproCtx,
+) -> anyhow::Result<SearchResult> {
+    let mut cfg = SearchConfig::quick(mode, protocol, gran);
+    cfg.episodes = ctx.episodes;
+    cfg.warmup = ctx.warmup;
+    cfg.eval_batches = ctx.eval_batches;
+    cfg.seed = ctx.seed;
+    if ctx.paper_scale {
+        cfg = cfg.paper_scale();
+    }
+    run_search(rt, runner, data, &cfg)
+}
+
+/// Fine-tune a searched config and report the recovered accuracy (the
+/// tables report fine-tuned numbers).
+pub fn finetuned_accuracy(
+    rt: &mut Runtime,
+    model: &str,
+    saved: &SavedConfig,
+    ctx: &ReproCtx,
+) -> anyhow::Result<f64> {
+    if ctx.finetune_steps == 0 {
+        return Ok(saved.accuracy);
+    }
+    let mut runner = runner_for(rt, model)?; // fresh copy of pre-trained params
+    let data = SynthDataset::new(42);
+    let tc = crate::finetune::TrainConfig::finetune(
+        saved.mode,
+        saved.wbits.clone(),
+        saved.abits.clone(),
+        ctx.finetune_steps,
+    );
+    let rep = crate::finetune::train(rt, &mut runner, &data, &tc)?;
+    // Fine-tuning can only help; guard against a regression run.
+    Ok(rep.final_eval.accuracy.max(saved.accuracy))
+}

@@ -1,0 +1,213 @@
+//! Figures 4–12 of the paper, regenerated on this testbed as text series
+//! (one row per x-axis point, ready for plotting).
+
+use crate::baselines::{run_baseline, BaselineConfig, BaselinePolicy};
+use crate::cost::Mode;
+use crate::data::synth::SynthDataset;
+use crate::quant::SavedConfig;
+use crate::repro::common::{run_cell, runner_for, search_or_cached, Report, ReproCtx};
+use crate::runtime::Runtime;
+use crate::search::{Granularity, Protocol};
+use crate::sim::{Arch, FpgaSim};
+use crate::util::stats;
+
+/// Figs 4 / 5 / 7: per-layer average weight & activation QBNs of res18
+/// under RC (fig4), AG (fig5) or the FLOP reward (fig7).
+pub fn per_layer_bits(rt: &mut Runtime, fig: &str, ctx: &ReproCtx) -> anyhow::Result<()> {
+    let (protocol, title) = match fig {
+        "fig4" => (Protocol::resource_constrained(5.0), "resource-constrained"),
+        "fig5" => (Protocol::accuracy_guaranteed(), "accuracy-guaranteed"),
+        "fig7" => (Protocol::flop_reward(), "FLOP-based reward"),
+        _ => anyhow::bail!("unknown per-layer fig {fig}"),
+    };
+    let model = "res18";
+    let saved = search_or_cached(rt, model, Mode::Quant, protocol, Granularity::Channel, ctx)?;
+    let meta = rt.manifest.model(model)?.clone();
+    let mut rep = Report::new(fig);
+    rep.line(format!(
+        "{} — per-layer average QBNs of {model}, {} channel-level search",
+        fig.to_uppercase(),
+        title
+    ));
+    rep.line(format!("{:<6} {:<14} {:>8} {:>8}", "layer", "name", "avg_wQBN", "avg_aQBN"));
+    for (t, l) in meta.layers.iter().enumerate() {
+        let avg_w = saved.wbits[l.w_off..l.w_off + l.w_len]
+            .iter()
+            .map(|&b| b as f64)
+            .sum::<f64>()
+            / l.w_len as f64;
+        let avg_a = saved.abits[l.a_off..l.a_off + l.a_len]
+            .iter()
+            .map(|&b| b as f64)
+            .sum::<f64>()
+            / l.a_len as f64;
+        rep.line(format!("{:<6} {:<14} {:>8.2} {:>8.2}", t + 1, l.name, avg_w, avg_a));
+    }
+    let p = rep.finish()?;
+    crate::info!("wrote {}", p.display());
+    Ok(())
+}
+
+/// Fig 6: weight-QBN distributions of layers 9–16 of res18 (RC channel
+/// search) — histograms over channel bit-widths.
+pub fn fig6(rt: &mut Runtime, ctx: &ReproCtx) -> anyhow::Result<()> {
+    let model = "res18";
+    let saved = search_or_cached(
+        rt,
+        model,
+        Mode::Quant,
+        Protocol::resource_constrained(5.0),
+        Granularity::Channel,
+        ctx,
+    )?;
+    let meta = rt.manifest.model(model)?.clone();
+    let mut rep = Report::new("fig6");
+    rep.line("FIG6 — weight QBN distributions, layers 9–16 of res18 (RC channel search)");
+    rep.line(format!("{:<6} {:<14} {}", "layer", "name", "count per QBN 0..8+ (col = bits)"));
+    for (t, l) in meta.layers.iter().enumerate() {
+        if !(8..16).contains(&t) {
+            continue;
+        }
+        let bits: Vec<f64> = saved.wbits[l.w_off..l.w_off + l.w_len]
+            .iter()
+            .map(|&b| b as f64)
+            .collect();
+        let hist = stats::histogram(&bits, 0.0, 9.0, 9);
+        let cells: Vec<String> = hist.iter().map(|c| format!("{c:>4}")).collect();
+        rep.line(format!("{:<6} {:<14} {}", t + 1, l.name, cells.join("")));
+    }
+    let p = rep.finish()?;
+    crate::info!("wrote {}", p.display());
+    Ok(())
+}
+
+/// Fig 8: hierarchical AutoQ vs flat DDPG learning curves (avg of `runs`
+/// seeds, resource-constrained channel search on cif10).
+pub fn fig8(rt: &mut Runtime, ctx: &ReproCtx, runs: usize) -> anyhow::Result<()> {
+    let model = "cif10";
+    let runner = runner_for(rt, model)?;
+    let data = SynthDataset::new(42);
+    let episodes = ctx.episodes;
+    let mut hiro_acc = vec![0.0f64; episodes];
+    let mut flat_acc = vec![0.0f64; episodes];
+    for run in 0..runs {
+        let mut c = ctx.clone();
+        c.seed = ctx.seed + run as u64 * 101;
+        let res = run_cell(
+            rt,
+            &runner,
+            &data,
+            Mode::Quant,
+            Protocol::resource_constrained(5.0),
+            Granularity::Channel,
+            &c,
+        )?;
+        for (i, st) in res.history.iter().enumerate() {
+            hiro_acc[i] += st.accuracy / runs as f64;
+        }
+        let mut bcfg = BaselineConfig::quick(
+            BaselinePolicy::FlatDdpg,
+            Mode::Quant,
+            Protocol::resource_constrained(5.0),
+        );
+        bcfg.episodes = episodes;
+        bcfg.warmup = c.warmup;
+        bcfg.eval_batches = c.eval_batches;
+        bcfg.seed = c.seed;
+        let bres = run_baseline(rt, &runner, &data, &bcfg)?;
+        for (i, st) in bres.history.iter().enumerate() {
+            flat_acc[i] += st.accuracy / runs as f64;
+        }
+    }
+    let mut rep = Report::new("fig8");
+    rep.line(format!(
+        "FIG8 — mean inference accuracy over {runs} runs, RC channel search on cif10"
+    ));
+    rep.line(format!("{:<8} {:>12} {:>12}", "episode", "hiro(AutoQ)", "flat DDPG"));
+    let h_s = stats::ema(&hiro_acc, 0.3);
+    let f_s = stats::ema(&flat_acc, 0.3);
+    for ep in 0..episodes {
+        rep.line(format!("{:<8} {:>12.4} {:>12.4}", ep, h_s[ep], f_s[ep]));
+    }
+    let h_final = stats::mean(&h_s[episodes.saturating_sub(5)..]);
+    let f_final = stats::mean(&f_s[episodes.saturating_sub(5)..]);
+    rep.line(format!(
+        "final-5-episode mean: hiro {h_final:.4} vs flat {f_final:.4} (paper: >80% vs ~40%)"
+    ));
+    let p = rep.finish()?;
+    crate::info!("wrote {}", p.display());
+    Ok(())
+}
+
+/// Figs 9–12: FPS / energy of quantized & binarized res18 + monet on the
+/// spatial and temporal accelerators (RC for 9/10, AG + FR for 11/12).
+pub fn fpga_figs(rt: &mut Runtime, fig: &str, ctx: &ReproCtx) -> anyhow::Result<()> {
+    let (protocols, metric): (Vec<(&str, Protocol)>, &str) = match fig {
+        "fig9" => (vec![("RC", Protocol::resource_constrained(5.0))], "fps"),
+        "fig10" => (vec![("RC", Protocol::resource_constrained(5.0))], "energy"),
+        "fig11" => (
+            vec![
+                ("AG", Protocol::accuracy_guaranteed()),
+                ("FR", Protocol::flop_reward()),
+            ],
+            "fps",
+        ),
+        "fig12" => (
+            vec![
+                ("AG", Protocol::accuracy_guaranteed()),
+                ("FR", Protocol::flop_reward()),
+            ],
+            "energy",
+        ),
+        _ => anyhow::bail!("unknown fpga fig {fig}"),
+    };
+    let mut rep = Report::new(fig);
+    rep.line(format!(
+        "{} — {} on the FPGA simulators (paper §4.5; res18 stands in for Res50)",
+        fig.to_uppercase(),
+        if metric == "fps" { "frames/s" } else { "inference energy (mJ)" }
+    ));
+    rep.line(format!(
+        "{:<8} {:<5} {:<5} {:<6} {:>12} {:>12} {:>6}",
+        "model", "mode", "prot", "gran", "temporal", "spatial", "util_s"
+    ));
+    for model in ["res18", "monet"] {
+        let meta = rt.manifest.model(model)?.clone();
+        for mode in [Mode::Quant, Mode::Binar] {
+            for (ptag, protocol) in &protocols {
+                // F and N need no search; L and C come from the cache.
+                let mut rows: Vec<(String, Vec<u8>, Vec<u8>)> = vec![
+                    ("F".into(), vec![32; meta.w_channels], vec![32; meta.a_channels]),
+                    ("N".into(), vec![5; meta.w_channels], vec![5; meta.a_channels]),
+                ];
+                for gran in [Granularity::Layer, Granularity::Channel] {
+                    let saved: SavedConfig =
+                        search_or_cached(rt, model, mode, *protocol, gran, ctx)?;
+                    rows.push((gran.tag().into(), saved.wbits, saved.abits));
+                }
+                for (tag, wbits, abits) in rows {
+                    let t = FpgaSim::new(Arch::Temporal, mode).run(&meta.layers, &wbits, &abits);
+                    let s = FpgaSim::new(Arch::Spatial, mode).run(&meta.layers, &wbits, &abits);
+                    let (vt, vs) = if metric == "fps" {
+                        (t.fps, s.fps)
+                    } else {
+                        (t.energy_j * 1e3, s.energy_j * 1e3)
+                    };
+                    rep.line(format!(
+                        "{:<8} {:<5} {:<5} {:<6} {:>12.2} {:>12.2} {:>6.3}",
+                        model,
+                        mode.as_str(),
+                        ptag,
+                        tag,
+                        vt,
+                        vs,
+                        s.utilization
+                    ));
+                }
+            }
+        }
+    }
+    let p = rep.finish()?;
+    crate::info!("wrote {}", p.display());
+    Ok(())
+}

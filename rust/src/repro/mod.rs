@@ -1,0 +1,83 @@
+//! `autoq repro <id>` — regenerate the paper's tables and figures (see
+//! DESIGN.md experiment index).  Results are teed to `reports/<id>.txt`;
+//! searched configurations are cached under `reports/configs/` so figures
+//! can reuse the searches the tables ran.
+
+pub mod common;
+pub mod figs;
+pub mod tables;
+
+use crate::cost::Mode;
+use crate::util::cli::Args;
+use common::ReproCtx;
+
+pub fn cmd_repro(rest: &[String]) -> anyhow::Result<()> {
+    let a = Args::new("repro")
+        .opt("episodes", "30", "search episodes per cell")
+        .opt("warmup", "8", "constant-noise episodes")
+        .opt("eval-batches", "2", "val batches per evaluation")
+        .opt("finetune-steps", "80", "fine-tune steps for table rows (0 = skip)")
+        .opt("models", "cif10", "comma-separated models for table2/3")
+        .opt("runs", "3", "independent runs for fig8")
+        .opt("seed", "1", "base seed")
+        .flag("fresh", "ignore cached searched configs")
+        .flag("paper-scale", "paper's 400-episode schedule")
+        .parse(rest)?;
+    let ctx = ReproCtx {
+        episodes: a.get_usize("episodes")?,
+        warmup: a.get_usize("warmup")?,
+        eval_batches: a.get_usize("eval-batches")?,
+        finetune_steps: a.get_usize("finetune-steps")?,
+        seed: a.get_u64("seed")?,
+        fresh: a.get_bool("fresh"),
+        paper_scale: a.get_bool("paper-scale"),
+    };
+    let models: Vec<String> = a.get("models").split(',').map(str::to_string).collect();
+    let what = a.positional.first().cloned().unwrap_or_else(|| "help".into());
+    let runs = a.get_usize("runs")?;
+
+    let mut runtime = crate::runtime::Runtime::open_default()?;
+    match what.as_str() {
+        "fig1" => fig1(),
+        "table2" => tables::table(&mut runtime, Mode::Quant, &models, &ctx),
+        "table3" => tables::table(&mut runtime, Mode::Binar, &models, &ctx),
+        "table4" => tables::table4(&mut runtime, &ctx),
+        "storage" => tables::storage(&mut runtime, &ctx),
+        "fig4" | "fig5" | "fig7" => figs::per_layer_bits(&mut runtime, &what, &ctx),
+        "fig6" => figs::fig6(&mut runtime, &ctx),
+        "fig8" => figs::fig8(&mut runtime, &ctx, runs),
+        "fig9" | "fig10" | "fig11" | "fig12" => figs::fpga_figs(&mut runtime, &what, &ctx),
+        "all" => {
+            fig1()?;
+            tables::table(&mut runtime, Mode::Quant, &models, &ctx)?;
+            tables::table(&mut runtime, Mode::Binar, &models, &ctx)?;
+            tables::table4(&mut runtime, &ctx)?;
+            tables::storage(&mut runtime, &ctx)?;
+            for f in ["fig4", "fig5", "fig7"] {
+                figs::per_layer_bits(&mut runtime, f, &ctx)?;
+            }
+            figs::fig6(&mut runtime, &ctx)?;
+            figs::fig8(&mut runtime, &ctx, runs)?;
+            for f in ["fig9", "fig10", "fig11", "fig12"] {
+                figs::fpga_figs(&mut runtime, f, &ctx)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "repro target {other:?} unknown — try fig1|table2|table3|table4|storage|fig4..fig12|all"
+        ),
+    }
+}
+
+/// Fig. 1: normalized hardware cost vs bit-width, quant vs binar.
+fn fig1() -> anyhow::Result<()> {
+    let mut rep = common::Report::new("fig1");
+    rep.line("FIG1 — normalized (to fp32 MAC) transistor cost of the datapath");
+    rep.line(format!("{:>4} {:>12} {:>12}", "bits", "quant", "binar"));
+    for (b, q, x) in crate::cost::hardware::fig1_table(16) {
+        rep.line(format!("{b:>4} {q:>12.5} {x:>12.5}"));
+    }
+    let p = rep.finish()?;
+    crate::info!("wrote {}", p.display());
+    Ok(())
+}

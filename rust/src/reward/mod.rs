@@ -1,0 +1,8 @@
+//! Reward layer: NetScore extrinsic reward (Eq. 2) with the §3.3 protocol
+//! presets, and the Roofline hardware model its β/γ terms come from.
+
+pub mod netscore;
+pub mod roofline;
+
+pub use netscore::NetScore;
+pub use roofline::Roofline;

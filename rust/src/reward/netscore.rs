@@ -1,0 +1,110 @@
+//! NetScore-based extrinsic reward (paper Eq. 2, [Wong 35]):
+//!
+//!   Ω(N) = 20 · log( a(N)^α / (p(N)^β · m(N)^γ) )
+//!
+//! a(N) — validation accuracy (in [0,1] here; the paper's percentage form
+//! only shifts Ω by a constant), p(N) — weight payload normalized to the
+//! fp32 model, m(N) — bit-level logic ops normalized to the fp32 model.
+//! Normalized p/m keep Ω platform-independent; constant factors cancel in
+//! the argmax the agent chases.
+//!
+//! Search protocols (§3.3):
+//!   * resource-constrained:  α=1, β=0, γ=0  (pure accuracy; the budget is
+//!     enforced structurally by Algorithm 1's action-space limiting)
+//!   * accuracy-guaranteed:   α=2, β=0.5, γ=0.5
+//!   * flop-based (AMC [9]):  α=2, β=0,   γ=0.5 — ignores the weight count,
+//!     the §4.3 ablation.
+
+use crate::cost::logic::ModelCost;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetScore {
+    pub alpha: f64,
+    pub beta: f64,
+    pub gamma: f64,
+}
+
+/// Floors keep Ω finite when a config prunes everything (a=0 or m=0).
+const EPS: f64 = 1e-6;
+
+impl NetScore {
+    pub const RESOURCE_CONSTRAINED: NetScore = NetScore { alpha: 1.0, beta: 0.0, gamma: 0.0 };
+    pub const ACCURACY_GUARANTEED: NetScore = NetScore { alpha: 2.0, beta: 0.5, gamma: 0.5 };
+    pub const FLOP_BASED: NetScore = NetScore { alpha: 2.0, beta: 0.0, gamma: 0.5 };
+
+    /// Ω(N) for accuracy `acc` in [0,1] and a model cost audit.
+    pub fn score(&self, acc: f64, cost: &ModelCost) -> f64 {
+        let a = acc.max(EPS);
+        let p = cost.norm_params().max(EPS);
+        let m = cost.norm_logic().max(EPS);
+        20.0 * (a.powf(self.alpha) / (p.powf(self.beta) * m.powf(self.gamma))).log10()
+    }
+
+    /// Immediate extrinsic reward: Ω scaled to a [-1, ~3] band the critic
+    /// learns comfortably (Ω/20 = the plain log10 argument).
+    pub fn reward(&self, acc: f64, cost: &ModelCost) -> f64 {
+        self.score(acc, cost) / 20.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost(norm_logic: f64, norm_params: f64) -> ModelCost {
+        // Construct a cost with the desired normalized ratios.
+        let fp = 1_000_000_000u64;
+        ModelCost {
+            logic_ops: (norm_logic * fp as f64) as u64,
+            logic_fp: fp,
+            weight_bits: (norm_params * fp as f64) as u64,
+            weight_bits_fp: fp,
+        }
+    }
+
+    #[test]
+    fn rc_protocol_ignores_cost() {
+        let ns = NetScore::RESOURCE_CONSTRAINED;
+        let a = ns.score(0.9, &cost(0.5, 0.5));
+        let b = ns.score(0.9, &cost(0.01, 0.01));
+        assert!((a - b).abs() < 1e-9, "RC must ignore cost terms");
+        assert!(ns.score(0.95, &cost(0.5, 0.5)) > a);
+    }
+
+    #[test]
+    fn ag_protocol_rewards_smaller_models() {
+        let ns = NetScore::ACCURACY_GUARANTEED;
+        let big = ns.score(0.9, &cost(0.5, 0.5));
+        let small = ns.score(0.9, &cost(0.05, 0.05));
+        assert!(small > big);
+    }
+
+    #[test]
+    fn ag_trades_accuracy_for_cost() {
+        let ns = NetScore::ACCURACY_GUARANTEED;
+        // 1% accuracy drop for 10x cost reduction must win under AG.
+        let keep = ns.score(0.90, &cost(0.5, 0.5));
+        let shrink = ns.score(0.89, &cost(0.05, 0.05));
+        assert!(shrink > keep);
+    }
+
+    #[test]
+    fn flop_based_ignores_weights() {
+        let ns = NetScore::FLOP_BASED;
+        let a = ns.score(0.9, &cost(0.1, 0.9));
+        let b = ns.score(0.9, &cost(0.1, 0.01));
+        assert!((a - b).abs() < 1e-9, "FLOP reward must ignore p(N)");
+    }
+
+    #[test]
+    fn degenerate_configs_finite() {
+        for ns in [
+            NetScore::RESOURCE_CONSTRAINED,
+            NetScore::ACCURACY_GUARANTEED,
+            NetScore::FLOP_BASED,
+        ] {
+            let s = ns.score(0.0, &cost(0.0, 0.0));
+            assert!(s.is_finite());
+        }
+    }
+}

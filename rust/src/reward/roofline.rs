@@ -1,0 +1,146 @@
+//! Roofline model [Williams 34] (paper §3): a lightweight stand-in for the
+//! "heavy and slow hardware simulators" HAQ queries — AutoQ instead fits
+//! approximately linear relationships between network parameters and
+//! hardware latency/energy and plugs them into the reward.
+//!
+//! latency = max(ops / peak_ops_per_s, bytes / bandwidth)     (the roofline)
+//! energy  = ops · e_op + bytes · e_byte
+//!
+//! `fit` recovers (peak, bandwidth) from observed (ops, bytes, latency)
+//! triples by least squares on the two regimes, which is exactly the
+//! "fitting parameters" workflow the paper describes; presets model the
+//! two FPGA accelerator templates of §4.5.
+
+/// Platform description: compute roof, memory roof, energy coefficients.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Roofline {
+    /// Peak bit-level logic ops per second.
+    pub peak_ops: f64,
+    /// Off-chip bandwidth, bytes per second.
+    pub bandwidth: f64,
+    /// Energy per bit-level logic op (J).
+    pub e_op: f64,
+    /// Energy per byte moved (J).
+    pub e_byte: f64,
+}
+
+impl Roofline {
+    /// Zynq-7000-class temporal (BISMO-like bit-serial @150 MHz) template.
+    pub fn fpga_temporal() -> Roofline {
+        Roofline {
+            peak_ops: 150e6 * 4096.0, // 150 MHz × 4096 bit-serial lanes
+            bandwidth: 4.2e9,         // DDR3 on the ZC702
+            e_op: 2.0e-12,
+            e_byte: 80.0e-12,
+        }
+    }
+    /// Spatial (BitFusion-like fusion-unit array @100 MHz) template.
+    pub fn fpga_spatial() -> Roofline {
+        Roofline {
+            peak_ops: 100e6 * 6144.0,
+            bandwidth: 4.2e9,
+            e_op: 1.6e-12,
+            e_byte: 80.0e-12,
+        }
+    }
+
+    /// Roofline latency (seconds) for a workload of `ops` bit-level logic
+    /// ops that moves `bytes` bytes.
+    pub fn latency(&self, ops: f64, bytes: f64) -> f64 {
+        (ops / self.peak_ops).max(bytes / self.bandwidth)
+    }
+
+    pub fn energy(&self, ops: f64, bytes: f64) -> f64 {
+        ops * self.e_op + bytes * self.e_byte
+    }
+
+    /// Is the workload memory-bound on this platform?  Drives the β/γ
+    /// choice of §3.3 (increase β when memory-bound, γ when compute-bound).
+    pub fn memory_bound(&self, ops: f64, bytes: f64) -> bool {
+        bytes / self.bandwidth > ops / self.peak_ops
+    }
+
+    /// Fit (peak_ops, bandwidth) from (ops, bytes, latency) samples: each
+    /// sample is assigned to its binding regime iteratively (2 rounds of
+    /// Lloyd-style reassignment), then each roof is the least-squares slope
+    /// through the origin.
+    pub fn fit(samples: &[(f64, f64, f64)]) -> Option<Roofline> {
+        if samples.len() < 2 {
+            return None;
+        }
+        let mut peak: f64 = 1e12;
+        let mut bw: f64 = 1e10;
+        for _ in 0..4 {
+            let (mut num_c, mut den_c, mut num_m, mut den_m) = (0.0, 0.0, 0.0, 0.0);
+            for &(ops, bytes, lat) in samples {
+                if ops / peak >= bytes / bw {
+                    // Compute-bound: lat ≈ ops / peak.
+                    num_c += ops * ops;
+                    den_c += ops * lat;
+                } else {
+                    num_m += bytes * bytes;
+                    den_m += bytes * lat;
+                }
+            }
+            if den_c > 0.0 {
+                peak = num_c / den_c;
+            }
+            if den_m > 0.0 {
+                bw = num_m / den_m;
+            }
+        }
+        Some(Roofline { peak_ops: peak, bandwidth: bw, e_op: 0.0, e_byte: 0.0 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_takes_binding_roof() {
+        let r = Roofline { peak_ops: 100.0, bandwidth: 10.0, e_op: 1.0, e_byte: 2.0 };
+        // Compute-bound: 1000 ops → 10 s vs 10 bytes → 1 s.
+        assert_eq!(r.latency(1000.0, 10.0), 10.0);
+        assert!(!r.memory_bound(1000.0, 10.0));
+        // Memory-bound.
+        assert_eq!(r.latency(10.0, 1000.0), 100.0);
+        assert!(r.memory_bound(10.0, 1000.0));
+    }
+
+    #[test]
+    fn energy_is_linear() {
+        let r = Roofline { peak_ops: 1.0, bandwidth: 1.0, e_op: 2.0, e_byte: 3.0 };
+        assert_eq!(r.energy(10.0, 100.0), 20.0 + 300.0);
+    }
+
+    #[test]
+    fn fit_recovers_both_roofs() {
+        let truth = Roofline { peak_ops: 1e9, bandwidth: 1e7, e_op: 0.0, e_byte: 0.0 };
+        let mut samples = Vec::new();
+        for i in 1..20 {
+            // Compute-heavy samples.
+            let ops = i as f64 * 1e8;
+            samples.push((ops, 10.0, truth.latency(ops, 10.0)));
+            // Memory-heavy samples.
+            let bytes = i as f64 * 1e6;
+            samples.push((10.0, bytes, truth.latency(10.0, bytes)));
+        }
+        let fit = Roofline::fit(&samples).unwrap();
+        assert!((fit.peak_ops / truth.peak_ops - 1.0).abs() < 0.05, "peak {}", fit.peak_ops);
+        assert!((fit.bandwidth / truth.bandwidth - 1.0).abs() < 0.05, "bw {}", fit.bandwidth);
+    }
+
+    #[test]
+    fn presets_sane() {
+        let t = Roofline::fpga_temporal();
+        let s = Roofline::fpga_spatial();
+        assert!(t.peak_ops > 1e10 && s.peak_ops > 1e10);
+        // Conv workload: compute-bound on both; FC workload: memory-bound
+        // (the §4.5 observation about fully-connected layers).
+        let conv = (1e9, 1e5);
+        let fc = (1e6, 4e6);
+        assert!(!t.memory_bound(conv.0, conv.1));
+        assert!(t.memory_bound(fc.0, fc.1));
+    }
+}

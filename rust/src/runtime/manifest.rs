@@ -1,0 +1,317 @@
+//! Typed view of `artifacts/manifest.json` (written by `python -m
+//! compile.aot`): artifact I/O specs, model-zoo metadata and agent layouts.
+//!
+//! This file is the single source of truth binding the three layers: rust
+//! never hard-codes a shape — every literal it builds is sized from here.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Tensor spec of one artifact input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "s32"
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One AOT'd HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One quantizable layer (conv / dwconv / fc) of a model — Eq.-1 features
+/// plus the weight/activation channel slices into the flat bit vectors.
+#[derive(Debug, Clone)]
+pub struct LayerMeta {
+    pub name: String,
+    pub typ: String, // "conv" | "dwconv" | "fc"
+    pub k: usize,
+    pub stride: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub h_in: usize,
+    pub w_in: usize,
+    pub h_out: usize,
+    pub w_out: usize,
+    /// MACs of one inference through this layer (bit-independent logic_t).
+    pub macs: u64,
+    pub w_off: usize,
+    pub w_len: usize,
+    pub a_off: usize,
+    pub a_len: usize,
+}
+
+/// Parameter spec (shape + init kind) — rust initializes weights itself.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: String, // "he" | "zeros" | "ones"
+}
+
+impl ParamSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+    pub fn fan_in(&self) -> usize {
+        if self.shape.len() > 1 {
+            self.shape[..self.shape.len() - 1].iter().product()
+        } else {
+            self.shape[0]
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub image_hw: usize,
+    pub num_classes: usize,
+    pub eval_batch: usize,
+    pub train_batch: usize,
+    pub layers: Vec<LayerMeta>,
+    pub params: Vec<ParamSpec>,
+    pub w_channels: usize,
+    pub a_channels: usize,
+    pub total_macs: u64,
+}
+
+impl ModelMeta {
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|p| p.elems()).sum()
+    }
+    /// Number of quantized weight scalars (conv/fc weights only — norm/bias
+    /// params are not quantized).
+    pub fn weight_count(&self) -> usize {
+        self.params
+            .iter()
+            .filter(|p| p.name.ends_with(".w"))
+            .map(|p| p.elems())
+            .sum()
+    }
+    pub fn layer(&self, name: &str) -> Option<&LayerMeta> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct AgentMeta {
+    pub s_dim: usize,
+    pub hidden: usize,
+    pub act_batch: usize,
+    pub upd_batch: usize,
+    pub action_scale: f64,
+    pub actor_shapes: Vec<Vec<usize>>,
+    pub critic_shapes: Vec<Vec<usize>>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub agents: BTreeMap<String, AgentMeta>,
+}
+
+fn spec_list(j: &Json) -> anyhow::Result<Vec<TensorSpec>> {
+    let mut out = Vec::new();
+    for s in j.as_arr().ok_or_else(|| anyhow::anyhow!("specs not array"))? {
+        out.push(TensorSpec {
+            shape: s
+                .req("shape")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect(),
+            dtype: s.req("dtype")?.as_str().unwrap_or("f32").to_string(),
+        });
+    }
+    Ok(out)
+}
+
+fn usize_of(j: &Json, k: &str) -> anyhow::Result<usize> {
+    j.req(k)?
+        .as_usize()
+        .ok_or_else(|| anyhow::anyhow!("{k} not a number"))
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} ({e}) — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in root.req("artifacts")?.as_obj().unwrap() {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: a.req("file")?.as_str().unwrap_or("").to_string(),
+                    inputs: spec_list(a.req("inputs")?)?,
+                    outputs: spec_list(a.req("outputs")?)?,
+                },
+            );
+        }
+
+        let mut models = BTreeMap::new();
+        for (name, m) in root.req("models")?.as_obj().unwrap() {
+            let mut layers = Vec::new();
+            for l in m.req("layers")?.as_arr().unwrap() {
+                layers.push(LayerMeta {
+                    name: l.req("name")?.as_str().unwrap().to_string(),
+                    typ: l.req("type")?.as_str().unwrap().to_string(),
+                    k: usize_of(l, "k")?,
+                    stride: usize_of(l, "stride")?,
+                    cin: usize_of(l, "cin")?,
+                    cout: usize_of(l, "cout")?,
+                    h_in: usize_of(l, "h_in")?,
+                    w_in: usize_of(l, "w_in")?,
+                    h_out: usize_of(l, "h_out")?,
+                    w_out: usize_of(l, "w_out")?,
+                    macs: usize_of(l, "macs")? as u64,
+                    w_off: usize_of(l, "w_off")?,
+                    w_len: usize_of(l, "w_len")?,
+                    a_off: usize_of(l, "a_off")?,
+                    a_len: usize_of(l, "a_len")?,
+                });
+            }
+            let mut params = Vec::new();
+            for p in m.req("params")?.as_arr().unwrap() {
+                params.push(ParamSpec {
+                    name: p.req("name")?.as_str().unwrap().to_string(),
+                    shape: p
+                        .req("shape")?
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|d| d.as_usize().unwrap())
+                        .collect(),
+                    init: p.req("init")?.as_str().unwrap().to_string(),
+                });
+            }
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    name: name.clone(),
+                    image_hw: usize_of(m, "image_hw")?,
+                    num_classes: usize_of(m, "num_classes")?,
+                    eval_batch: usize_of(m, "eval_batch")?,
+                    train_batch: usize_of(m, "train_batch")?,
+                    layers,
+                    params,
+                    w_channels: usize_of(m, "w_channels")?,
+                    a_channels: usize_of(m, "a_channels")?,
+                    total_macs: usize_of(m, "total_macs")? as u64,
+                },
+            );
+        }
+
+        let mut agents = BTreeMap::new();
+        for (name, a) in root.req("agents")?.as_obj().unwrap() {
+            let shapes = |k: &str| -> anyhow::Result<Vec<Vec<usize>>> {
+                Ok(a.req(k)?
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|s| s.as_arr().unwrap().iter().map(|d| d.as_usize().unwrap()).collect())
+                    .collect())
+            };
+            agents.insert(
+                name.clone(),
+                AgentMeta {
+                    s_dim: usize_of(a, "s_dim")?,
+                    hidden: usize_of(a, "hidden")?,
+                    act_batch: usize_of(a, "act_batch")?,
+                    upd_batch: usize_of(a, "upd_batch")?,
+                    action_scale: a.req("action_scale")?.as_f64().unwrap_or(32.0),
+                    actor_shapes: shapes("actor_shapes")?,
+                    critic_shapes: shapes("critic_shapes")?,
+                },
+            );
+        }
+
+        Ok(Manifest { artifacts, models, agents })
+    }
+
+    pub fn artifact(&self, name: &str) -> anyhow::Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not in manifest"))
+    }
+    pub fn model(&self, name: &str) -> anyhow::Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model {name:?} not in manifest"))
+    }
+    pub fn agent(&self, s_dim: usize) -> anyhow::Result<&AgentMeta> {
+        self.agents
+            .get(&format!("s{s_dim}"))
+            .ok_or_else(|| anyhow::anyhow!("agent s{s_dim} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "artifacts": {"m_eval_quant": {"file": "m.hlo.txt",
+        "inputs": [{"shape": [2, 3], "dtype": "f32"}],
+        "outputs": [{"shape": [], "dtype": "f32"}]}},
+      "models": {"m": {"name": "m", "image_hw": 32, "num_classes": 10,
+        "eval_batch": 256, "train_batch": 128,
+        "layers": [{"name": "l01_conv", "type": "conv", "k": 3, "stride": 1,
+          "cin": 3, "cout": 16, "h_in": 32, "w_in": 32, "h_out": 32,
+          "w_out": 32, "macs": 442368, "w_off": 0, "w_len": 16,
+          "a_off": 0, "a_len": 3}],
+        "params": [{"name": "l01_conv.w", "shape": [3, 3, 3, 16], "init": "he"}],
+        "w_channels": 16, "a_channels": 3, "total_macs": 442368}},
+      "agents": {"s16": {"s_dim": 16, "hidden": 300, "act_batch": 128,
+        "upd_batch": 64, "action_scale": 32.0,
+        "actor_shapes": [[16, 300]], "critic_shapes": [[17, 300]]}}
+    }"#;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let m = Manifest::parse(MINI).unwrap();
+        let a = m.artifact("m_eval_quant").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![2, 3]);
+        assert_eq!(a.inputs[0].elems(), 6);
+        let model = m.model("m").unwrap();
+        assert_eq!(model.layers[0].macs, 442368);
+        assert_eq!(model.param_count(), 3 * 3 * 3 * 16);
+        assert_eq!(model.weight_count(), 3 * 3 * 3 * 16);
+        assert_eq!(m.agent(16).unwrap().hidden, 300);
+        assert!(m.agent(99).is_err());
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn param_fan_in() {
+        let p = ParamSpec { name: "w".into(), shape: vec![3, 3, 3, 16], init: "he".into() };
+        assert_eq!(p.fan_in(), 27);
+        let b = ParamSpec { name: "b".into(), shape: vec![16], init: "zeros".into() };
+        assert_eq!(b.fan_in(), 16);
+    }
+}

@@ -1,0 +1,11 @@
+//! Runtime layer: PJRT client wrapper (xla crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`), the artifact
+//! manifest, and host-side tensors.
+
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::Runtime;
+pub use manifest::{AgentMeta, ArtifactSpec, LayerMeta, Manifest, ModelMeta, ParamSpec, TensorSpec};
+pub use tensor::Tensor;

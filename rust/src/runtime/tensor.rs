@@ -1,0 +1,123 @@
+//! Host-side tensor: a flat f32 buffer + shape, with conversions to/from
+//! `xla::Literal`.  All coordinator math (states, bit vectors, params) lives
+//! in `Tensor`s; literals are built only at the executable boundary.
+
+use xla::{ArrayElement, Literal};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>().max(1),
+            data.len(),
+            "shape {shape:?} vs data len {}",
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product::<usize>().max(1);
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Self {
+        let n = shape.iter().product::<usize>().max(1);
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Convert to an XLA literal (f32).
+    pub fn to_literal(&self) -> anyhow::Result<Literal> {
+        if self.shape.is_empty() {
+            return Ok(Literal::scalar(self.data[0]));
+        }
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &Literal) -> anyhow::Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Ok(Tensor::new(dims, data))
+    }
+}
+
+/// Build an s32 literal (labels).
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> anyhow::Result<Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Read a scalar f32 out of a literal.
+pub fn scalar_f32(lit: &Literal) -> anyhow::Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// Read any literal as Vec<f32> (must be f32-typed).
+pub fn vec_f32(lit: &Literal) -> anyhow::Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Dtype string (manifest) → element size in bytes; used for size audits.
+pub fn dtype_size(dtype: &str) -> usize {
+    match dtype {
+        "f32" | "s32" => 4,
+        "f64" | "s64" => 8,
+        _ => 4,
+    }
+}
+
+/// Sanity trait check: Literal roundtrip preserves f32 payloads.
+pub fn roundtrip_check() -> anyhow::Result<()> {
+    let t = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    let l = t.to_literal()?;
+    let t2 = Tensor::from_literal(&l)?;
+    anyhow::ensure!(t == t2, "roundtrip mismatch");
+    let _ = f32::TY; // ensure ArrayElement is in scope / linked
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::new(vec![2, 2], vec![0.0; 4]);
+        assert_eq!(t.elems(), 4);
+        let s = Tensor::scalar(3.0);
+        assert_eq!(s.elems(), 1);
+        assert!(s.shape.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_rejects_bad_shape() {
+        let _ = Tensor::new(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        roundtrip_check().unwrap();
+    }
+
+    #[test]
+    fn i32_literal() {
+        let l = lit_i32(&[1, 2, 3, 4], &[4]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+    }
+}

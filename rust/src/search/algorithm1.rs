@@ -1,0 +1,142 @@
+//! Algorithm 1 (paper §3.3): HLC goal bounding for resource-constrained
+//! searches.  The search is free for the first layers and starts limiting
+//! goals once the remaining budget could not be met even if every
+//! following layer ran at the minimal goal.
+//!
+//! We apply the algorithm per controller side (weights and activations
+//! each bound against their own average-bit target B̄), the linear
+//! per-side form of the paper's XNOR-budget recurrence; the product of the
+//! two sides then meets the joint bit-op budget.
+
+/// Per-side goal bounder over an m-layer network.
+#[derive(Debug, Clone)]
+pub struct LayerBound {
+    /// MAC count of each layer (logic_i, bit-independent).
+    layer_macs: Vec<f64>,
+    /// Σ logic_i · B̄/32 — the budget in weight-linear units.
+    budget: f64,
+    /// Minimal allowed goal g_min.
+    pub g_min: f64,
+    /// Actual charged units so far (logic_curr).
+    curr: f64,
+    /// Next layer expected (guards against out-of-order use).
+    next_t: usize,
+}
+
+impl LayerBound {
+    /// `avg_bits` = B̄ (the paper's \overline{BBN}/\overline{QBN} target).
+    pub fn new(layer_macs: Vec<f64>, avg_bits: f64, g_min: f64) -> LayerBound {
+        let budget = layer_macs.iter().sum::<f64>() * (avg_bits / 32.0);
+        LayerBound { layer_macs, budget, g_min, curr: 0.0, next_t: 0 }
+    }
+
+    /// Bound the HLC's proposed goal for layer `t` (must be called in
+    /// layer order).  Implements lines 8–18 of Algorithm 1.
+    pub fn bound(&mut self, t: usize, proposed: f64) -> f64 {
+        assert_eq!(t, self.next_t, "LayerBound must be driven in layer order");
+        self.next_t += 1;
+        let logic_t = self.layer_macs[t];
+        // line 10: floor at g_min
+        let mut g = proposed.max(self.g_min).min(32.0);
+        // line 12: remaining layers' logic
+        let logic_rest: f64 = self.layer_macs[t + 1..].iter().sum();
+        // line 14: what must be cut at L_t if the suffix runs at g_min
+        let duty = self.budget - (self.g_min / 32.0) * logic_rest - self.curr;
+        // line 16: cap the goal so duty is met
+        let cap = (duty / logic_t) * 32.0;
+        g = g.min(cap.max(self.g_min)).max(0.0);
+        // line 18: charge
+        self.curr += g / 32.0 * logic_t;
+        g
+    }
+
+    /// Units spent so far (for reports/tests).
+    pub fn spent(&self) -> f64 {
+        self.curr
+    }
+    pub fn budget(&self) -> f64 {
+        self.budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall_ns;
+
+    #[test]
+    fn early_layers_unconstrained() {
+        // Huge budget → proposals pass through (clamped to [g_min, 32]).
+        let mut lb = LayerBound::new(vec![100.0; 4], 32.0, 1.0);
+        assert_eq!(lb.bound(0, 7.3), 7.3);
+        assert_eq!(lb.bound(1, 40.0), 32.0);
+        assert_eq!(lb.bound(2, 0.2), 1.0);
+    }
+
+    #[test]
+    fn budget_enforced_across_layers() {
+        // 4 equal layers, target average 4 bits, g_min 1: asking 32 bits
+        // everywhere must be capped so that the total ≈ budget.
+        let macs = vec![1000.0; 4];
+        let mut lb = LayerBound::new(macs.clone(), 4.0, 1.0);
+        let mut total = 0.0;
+        for t in 0..4 {
+            let g = lb.bound(t, 32.0);
+            total += g / 32.0 * macs[t];
+        }
+        let budget = macs.iter().sum::<f64>() * (4.0 / 32.0);
+        assert!(total <= budget + 1e-9, "spent {total} > budget {budget}");
+        // Greedy: the first layer takes what it can, suffix pinned at g_min.
+        assert!(lb.spent() <= lb.budget() + 1e-9);
+    }
+
+    #[test]
+    fn modest_proposals_unchanged_under_budget() {
+        let macs = vec![500.0, 1000.0, 2000.0];
+        let mut lb = LayerBound::new(macs, 8.0, 1.0);
+        for t in 0..3 {
+            let g = lb.bound(t, 6.0);
+            assert!((g - 6.0).abs() < 1e-9, "layer {t} got {g}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "layer order")]
+    fn out_of_order_rejected() {
+        let mut lb = LayerBound::new(vec![1.0; 3], 4.0, 1.0);
+        lb.bound(1, 4.0);
+    }
+
+    #[test]
+    fn prop_never_exceeds_budget_when_feasible() {
+        forall_ns(
+            17,
+            |r| {
+                let n = 1 + r.below(8);
+                let macs: Vec<f64> = (0..n).map(|_| 10.0 + r.f64() * 1000.0).collect();
+                let proposals: Vec<f64> = (0..n).map(|_| r.f64() * 40.0).collect();
+                let avg = 1.0 + r.f64() * 8.0;
+                (macs, proposals, avg)
+            },
+            |(macs, proposals, avg)| {
+                // Feasible iff budget ≥ all-layers-at-g_min; use g_min=1 ≤ avg.
+                let g_min = 1.0;
+                let mut lb = LayerBound::new(macs.clone(), *avg, g_min);
+                let mut spent = 0.0;
+                for (t, &p) in proposals.iter().enumerate() {
+                    let g = lb.bound(t, p);
+                    if !(0.0..=32.0).contains(&g) {
+                        return Err(format!("goal {g} out of range"));
+                    }
+                    spent += g / 32.0 * macs[t];
+                }
+                let budget = macs.iter().sum::<f64>() * (avg / 32.0);
+                if spent <= budget + 1e-6 {
+                    Ok(())
+                } else {
+                    Err(format!("spent {spent} > budget {budget}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,421 @@
+//! One search episode (§3.2): the hierarchical walk over all layers and
+//! channels of a model, producing a complete per-channel bit configuration,
+//! its validation score, and the HLC/LLC transitions pushed to replay.
+//!
+//! Timeline per layer L_t:
+//!   1. HLC_w / HLC_a observe the Eq.-1 layer state and emit goals gw_t /
+//!      ga_t (bounded by Algorithm 1 under the resource-constrained
+//!      protocol).
+//!   2. LLC_w walks the c_out weight output channels; LLC_a walks the
+//!      c_in activation input channels (1 for fc layers).  Each step is a
+//!      goal-conditioned action in {0..32}; weight actions are projected
+//!      onto the §3.2 variance-ordering constraint.
+//!   3. The episode ends with one validation evaluation (no fine-tuning —
+//!      the [9] delegate), NetScore reward assignment, HIRO goal
+//!      relabeling of the HLC transitions, and replay pushes.
+
+use crate::agent::hiro::{set_goal, HiroAgent, Side, LLC_DIM};
+use crate::agent::replay::Transition;
+use crate::cost::logic::{model_cost, ModelCost};
+use crate::cost::Mode;
+use crate::data::synth::{Split, SynthDataset};
+use crate::env::state::{enforce_variance_order, StateBuilder, StateCtx};
+use crate::models::ModelRunner;
+use crate::runtime::Runtime;
+use crate::search::protocol::{Granularity, Protocol};
+
+/// Per-episode knobs (scaled-down defaults; paper-scale via CLI flags).
+#[derive(Debug, Clone)]
+pub struct EpisodeConfig {
+    /// Validation batches per evaluation (× eval_batch images).
+    pub eval_batches: usize,
+    /// LLC minibatch updates per episode = llc_steps / this.
+    pub llc_updates_div: usize,
+    /// HLC minibatch updates per episode (0 → one per layer).
+    pub hlc_updates: usize,
+    /// Enable HIRO goal relabeling.
+    pub relabel: bool,
+    /// Batch all LLC actions of a layer into one executable dispatch (the
+    /// fast path; the sequential walk feeds each channel the exact previous
+    /// action per Eq. 1 — see DESIGN.md §Perf for the measured trade-off).
+    pub batch_llc: bool,
+}
+
+impl Default for EpisodeConfig {
+    fn default() -> Self {
+        EpisodeConfig {
+            eval_batches: 2,
+            llc_updates_div: 4,
+            hlc_updates: 0,
+            relabel: true,
+            batch_llc: true,
+        }
+    }
+}
+
+/// Average searched bit-widths of one layer (Figs 4–7).
+#[derive(Debug, Clone)]
+pub struct LayerBits {
+    pub name: String,
+    pub avg_w: f64,
+    pub avg_a: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct EpisodeOutcome {
+    pub wbits: Vec<u8>,
+    pub abits: Vec<u8>,
+    pub accuracy: f64,
+    pub loss: f64,
+    pub cost: ModelCost,
+    /// Extrinsic reward (NetScore/20) used by the agent.
+    pub reward: f64,
+    /// Full NetScore Ω.
+    pub score: f64,
+    pub per_layer: Vec<LayerBits>,
+    pub avg_wbits: f64,
+    pub avg_abits: f64,
+}
+
+/// One controller side's staged segment (a layer's worth of LLC steps).
+struct Seg {
+    side: Side,
+    s16: [f32; 16],
+    goal: f32,
+    states: Vec<f32>, // (n, LLC_DIM) row-major
+    actions: Vec<f32>,
+}
+
+pub fn run_episode(
+    rt: &mut Runtime,
+    runner: &ModelRunner,
+    sb: &StateBuilder,
+    wvar: &[f64],
+    agents: &mut HiroAgent,
+    protocol: &Protocol,
+    gran: Granularity,
+    mode: Mode,
+    data: &SynthDataset,
+    cfg: &EpisodeConfig,
+) -> anyhow::Result<EpisodeOutcome> {
+    let meta = runner.meta.clone();
+    let layer_macs: Vec<f64> = meta.layers.iter().map(|l| l.macs as f64).collect();
+    let mut bound_w = protocol.bounder(&layer_macs);
+    let mut bound_a = protocol.bounder(&layer_macs);
+
+    let mut wbits = vec![0u8; meta.w_channels];
+    let mut abits = vec![0u8; meta.a_channels];
+    let mut segs: Vec<Seg> = Vec::with_capacity(meta.layers.len() * 2);
+
+    let mut rdc = 0.0f64;
+    let mut visited = 0.0f64;
+    let mut gi = 0usize;
+    let (mut prev_aw, mut prev_aa) = (32.0f32, 32.0f32);
+    let (mut prev_gw, mut prev_ga) = (32.0f32, 32.0f32);
+
+    for (t, l) in meta.layers.iter().enumerate() {
+        let rst = sb.total_macs - visited;
+        let layer_wvar = &wvar[l.w_off..l.w_off + l.w_len];
+        let mean_var = layer_wvar.iter().sum::<f64>() / l.w_len as f64;
+        let ctx = StateCtx {
+            i: gi,
+            t,
+            rdc,
+            rst,
+            gw: prev_gw,
+            ga: prev_ga,
+            prev_aw,
+            prev_aa,
+            wvar: mean_var,
+        };
+        let s16 = sb.state(&meta, t, &ctx);
+
+        // --- HLC goals, Algorithm-1 bounded under RC -----------------------
+        let gw_prop = agents.propose_goal(rt, Side::Weight, &s16)? as f64;
+        let gw = match &mut bound_w {
+            Some(b) => b.bound(t, gw_prop) as f32,
+            None => gw_prop.clamp(0.0, 32.0) as f32,
+        };
+        let ga_prop = agents.propose_goal(rt, Side::Act, &s16)? as f64;
+        let ga = match &mut bound_a {
+            Some(b) => b.bound(t, ga_prop) as f32,
+            None => ga_prop.clamp(0.0, 32.0) as f32,
+        };
+        prev_gw = gw;
+        prev_ga = ga;
+
+        // --- LLC walks ------------------------------------------------------
+        let macs_per_oc = l.macs as f64 / l.w_len as f64;
+        match gran {
+            Granularity::Network(b) => {
+                wbits[l.w_off..l.w_off + l.w_len].fill(b);
+                abits[l.a_off..l.a_off + l.a_len].fill(b);
+                rdc += l.macs as f64 * (32.0 - b as f64) / 32.0;
+                gi += l.w_len + l.a_len;
+            }
+            Granularity::Layer => {
+                let bw = gw.round().clamp(0.0, 32.0) as u8;
+                let ba = ga.round().clamp(0.0, 32.0) as u8;
+                wbits[l.w_off..l.w_off + l.w_len].fill(bw);
+                abits[l.a_off..l.a_off + l.a_len].fill(ba);
+                rdc += l.macs as f64 * (32.0 - bw as f64) / 32.0;
+                gi += l.w_len + l.a_len;
+                segs.push(Seg { side: Side::Weight, s16, goal: gw, states: vec![], actions: vec![bw as f32; l.w_len] });
+                segs.push(Seg { side: Side::Act, s16, goal: ga, states: vec![], actions: vec![ba as f32; l.a_len] });
+            }
+            Granularity::Channel => {
+                // Weight output channels.
+                let mut wstates = Vec::with_capacity(l.w_len * LLC_DIM);
+                let mut wactions = Vec::with_capacity(l.w_len);
+                if cfg.batch_llc {
+                    // Fast path: one dispatch for the whole layer.  Channel
+                    // states share the layer-entry rdc/rst/prev-action
+                    // context (the per-channel walk features only drift
+                    // within a layer).
+                    for c in 0..l.w_len {
+                        let ctx = StateCtx {
+                            i: gi + c,
+                            t,
+                            rdc,
+                            rst,
+                            gw,
+                            ga,
+                            prev_aw,
+                            prev_aa,
+                            wvar: layer_wvar[c],
+                        };
+                        let base = sb.state(&meta, t, &ctx);
+                        let mut s17 = [0.0f32; LLC_DIM];
+                        s17[..16].copy_from_slice(&base);
+                        set_goal(&mut s17, Side::Weight, gw);
+                        wstates.extend_from_slice(&s17);
+                    }
+                    wactions =
+                        agents.propose_actions_batch(rt, Side::Weight, &wstates, l.w_len)?;
+                    for a in wactions.iter_mut() {
+                        *a = a.round().clamp(0.0, 32.0);
+                        rdc += macs_per_oc * (32.0 - *a as f64) / 32.0;
+                    }
+                    prev_aw = *wactions.last().unwrap_or(&prev_aw);
+                    gi += l.w_len;
+                } else {
+                    for c in 0..l.w_len {
+                        let ctx = StateCtx {
+                            i: gi,
+                            t,
+                            rdc,
+                            rst,
+                            gw,
+                            ga,
+                            prev_aw,
+                            prev_aa,
+                            wvar: layer_wvar[c],
+                        };
+                        let base = sb.state(&meta, t, &ctx);
+                        let mut s17 = [0.0f32; LLC_DIM];
+                        s17[..16].copy_from_slice(&base);
+                        set_goal(&mut s17, Side::Weight, gw);
+                        let a = agents.propose_action(rt, Side::Weight, &s17)?;
+                        let a = a.round().clamp(0.0, 32.0);
+                        rdc += macs_per_oc * (32.0 - a as f64) / 32.0;
+                        prev_aw = a;
+                        gi += 1;
+                        wstates.extend_from_slice(&s17);
+                        wactions.push(a);
+                    }
+                }
+                // §3.2 constraint: action order must match variance order.
+                enforce_variance_order(&mut wactions, layer_wvar);
+                for (c, &a) in wactions.iter().enumerate() {
+                    wbits[l.w_off + c] = a as u8;
+                }
+                segs.push(Seg { side: Side::Weight, s16, goal: gw, states: wstates, actions: wactions });
+
+                // Activation input channels (one shared for fc).
+                let mut astates = Vec::with_capacity(l.a_len * LLC_DIM);
+                let mut aactions = Vec::with_capacity(l.a_len);
+                if cfg.batch_llc {
+                    for c in 0..l.a_len {
+                        let ctx = StateCtx {
+                            i: gi + c,
+                            t,
+                            rdc,
+                            rst,
+                            gw,
+                            ga,
+                            prev_aw,
+                            prev_aa,
+                            wvar: 0.0,
+                        };
+                        let base = sb.state(&meta, t, &ctx);
+                        let mut s17 = [0.0f32; LLC_DIM];
+                        s17[..16].copy_from_slice(&base);
+                        set_goal(&mut s17, Side::Act, ga);
+                        astates.extend_from_slice(&s17);
+                    }
+                    aactions = agents.propose_actions_batch(rt, Side::Act, &astates, l.a_len)?;
+                    for (c, a) in aactions.iter_mut().enumerate() {
+                        *a = a.round().clamp(0.0, 32.0);
+                        abits[l.a_off + c] = *a as u8;
+                    }
+                    prev_aa = *aactions.last().unwrap_or(&prev_aa);
+                    gi += l.a_len;
+                } else {
+                    for c in 0..l.a_len {
+                        let ctx = StateCtx {
+                            i: gi,
+                            t,
+                            rdc,
+                            rst,
+                            gw,
+                            ga,
+                            prev_aw,
+                            prev_aa,
+                            wvar: 0.0,
+                        };
+                        let base = sb.state(&meta, t, &ctx);
+                        let mut s17 = [0.0f32; LLC_DIM];
+                        s17[..16].copy_from_slice(&base);
+                        set_goal(&mut s17, Side::Act, ga);
+                        let a = agents.propose_action(rt, Side::Act, &s17)?;
+                        let a = a.round().clamp(0.0, 32.0);
+                        prev_aa = a;
+                        gi += 1;
+                        astates.extend_from_slice(&s17);
+                        abits[l.a_off + c] = a as u8;
+                        aactions.push(a);
+                    }
+                }
+                segs.push(Seg { side: Side::Act, s16, goal: ga, states: astates, actions: aactions });
+            }
+        }
+        visited += l.macs as f64;
+    }
+
+    // --- Evaluate the complete configuration (no fine-tuning) --------------
+    let eval = runner.eval_config(rt, mode, &wbits, &abits, data, Split::Val, cfg.eval_batches)?;
+    let cost = model_cost(&meta.layers, &wbits, &abits);
+    let reward = protocol.netscore.reward(eval.accuracy, &cost);
+    let score = protocol.netscore.score(eval.accuracy, &cost);
+
+    // --- Stage → replay: LLC shaped-intrinsic + HLC relabeled ---------------
+    push_transitions(rt, agents, &segs, reward as f32, protocol.g_min as f32, cfg)?;
+
+    // --- Reports -------------------------------------------------------------
+    let per_layer = meta
+        .layers
+        .iter()
+        .map(|l| LayerBits {
+            name: l.name.clone(),
+            avg_w: wbits[l.w_off..l.w_off + l.w_len].iter().map(|&b| b as f64).sum::<f64>()
+                / l.w_len as f64,
+            avg_a: abits[l.a_off..l.a_off + l.a_len].iter().map(|&b| b as f64).sum::<f64>()
+                / l.a_len as f64,
+        })
+        .collect();
+    let avg_wbits = wbits.iter().map(|&b| b as f64).sum::<f64>() / wbits.len() as f64;
+    let avg_abits = abits.iter().map(|&b| b as f64).sum::<f64>() / abits.len() as f64;
+
+    Ok(EpisodeOutcome {
+        wbits,
+        abits,
+        accuracy: eval.accuracy,
+        loss: eval.loss,
+        cost,
+        reward,
+        score,
+        per_layer,
+        avg_wbits,
+        avg_abits,
+    })
+}
+
+/// Build transitions from staged segments and push to the four replays.
+fn push_transitions(
+    rt: &mut Runtime,
+    agents: &mut HiroAgent,
+    segs: &[Seg],
+    extrinsic: f32,
+    g_min: f32,
+    cfg: &EpisodeConfig,
+) -> anyhow::Result<()> {
+    let zeta = agents.cfg.zeta;
+    for side in [Side::Weight, Side::Act] {
+        let side_segs: Vec<&Seg> = segs.iter().filter(|s| s.side == side).collect();
+        // ---- LLC transitions (channel granularity only) -------------------
+        let mut flat_states: Vec<&[f32]> = Vec::new();
+        let mut flat_rewards: Vec<f32> = Vec::new();
+        let mut flat_actions: Vec<f32> = Vec::new();
+        for seg in &side_segs {
+            let n = seg.actions.len();
+            if seg.states.is_empty() {
+                continue;
+            }
+            let mut cum = 0.0f32;
+            for i in 0..n {
+                cum += seg.actions[i];
+                // Shaped intrinsic (§3.3): deviation of the executed prefix
+                // from the goal track, normalized to [0,1] bits-fraction.
+                let dev = (seg.goal * (i + 1) as f32 - cum).abs() / ((i + 1) as f32 * 32.0);
+                let r = zeta * (-dev) + (1.0 - zeta) * extrinsic;
+                flat_states.push(&seg.states[i * LLC_DIM..(i + 1) * LLC_DIM]);
+                flat_rewards.push(r);
+                flat_actions.push(seg.actions[i]);
+            }
+        }
+        for i in 0..flat_states.len() {
+            let s2 = if i + 1 < flat_states.len() {
+                flat_states[i + 1].to_vec()
+            } else {
+                flat_states[i].to_vec()
+            };
+            agents.push_llc(
+                side,
+                Transition {
+                    s: flat_states[i].to_vec(),
+                    a: flat_actions[i] / 32.0 * 32.0, // action in bit units
+                    r: flat_rewards[i],
+                    s2,
+                    done: i + 1 == flat_states.len(),
+                },
+            );
+        }
+        // ---- HLC transitions (relabeled) -----------------------------------
+        for (j, seg) in side_segs.iter().enumerate() {
+            let g = if cfg.relabel && !seg.states.is_empty() {
+                agents.relabel_goal(rt, side, &seg.states, &seg.actions, seg.goal, g_min)?
+            } else {
+                seg.goal
+            };
+            let s2 = if j + 1 < side_segs.len() {
+                side_segs[j + 1].s16.to_vec()
+            } else {
+                seg.s16.to_vec()
+            };
+            agents.push_hlc(
+                side,
+                Transition {
+                    s: seg.s16.to_vec(),
+                    a: g,
+                    r: extrinsic,
+                    s2,
+                    done: j + 1 == side_segs.len(),
+                },
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Per-episode training schedule derived from the staged step counts.
+pub fn train_after_episode(
+    rt: &mut Runtime,
+    agents: &mut HiroAgent,
+    llc_steps: usize,
+    n_layers: usize,
+    cfg: &EpisodeConfig,
+) -> anyhow::Result<()> {
+    let n_llc = (llc_steps / cfg.llc_updates_div.max(1)).max(1);
+    let n_hlc = if cfg.hlc_updates == 0 { n_layers } else { cfg.hlc_updates };
+    agents.train(rt, n_llc, n_hlc)
+}

@@ -1,0 +1,13 @@
+//! The paper's system contribution: hierarchical channel-level search —
+//! protocols (§3.3), Algorithm-1 goal bounding, the episode walk (§3.2) and
+//! the explore/exploit runner (§4).
+
+pub mod algorithm1;
+pub mod episode;
+pub mod protocol;
+pub mod runner;
+
+pub use algorithm1::LayerBound;
+pub use episode::{EpisodeConfig, EpisodeOutcome, LayerBits};
+pub use protocol::{Granularity, Protocol, ProtocolKind};
+pub use runner::{run_search, EpisodeStats, SearchConfig, SearchResult};

@@ -1,0 +1,144 @@
+//! §3.3 search protocols: NetScore coefficient presets plus the structural
+//! budget (Algorithm 1) the resource-constrained protocol uses instead of a
+//! cost term in the reward.
+
+use crate::reward::NetScore;
+use crate::search::algorithm1::LayerBound;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProtocolKind {
+    /// α=1, β=γ=0 — best accuracy under a hardware budget (drones);
+    /// the budget is enforced by Algorithm-1 goal bounding.
+    ResourceConstrained,
+    /// α=2, β=γ=0.5 — smallest/fastest model with no accuracy loss
+    /// (fingerprint locks).
+    AccuracyGuaranteed,
+    /// The §4.3 ablation: AMC's FLOP-only reward (β=0).
+    FlopReward,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Protocol {
+    pub kind: ProtocolKind,
+    pub netscore: NetScore,
+    /// B̄ — target average bit-width for Algorithm 1 (RC only).
+    pub target_bits: f64,
+    /// Minimal allowed goal g_min.
+    pub g_min: f64,
+}
+
+impl Protocol {
+    pub fn resource_constrained(target_bits: f64) -> Protocol {
+        Protocol {
+            kind: ProtocolKind::ResourceConstrained,
+            netscore: NetScore::RESOURCE_CONSTRAINED,
+            target_bits,
+            g_min: 1.0,
+        }
+    }
+
+    pub fn accuracy_guaranteed() -> Protocol {
+        Protocol {
+            kind: ProtocolKind::AccuracyGuaranteed,
+            netscore: NetScore::ACCURACY_GUARANTEED,
+            target_bits: 0.0,
+            g_min: 0.0,
+        }
+    }
+
+    pub fn flop_reward() -> Protocol {
+        Protocol {
+            kind: ProtocolKind::FlopReward,
+            netscore: NetScore::FLOP_BASED,
+            target_bits: 0.0,
+            g_min: 0.0,
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Protocol> {
+        match s {
+            "rc" | "resource-constrained" => Ok(Self::resource_constrained(5.0)),
+            "ag" | "accuracy-guaranteed" => Ok(Self::accuracy_guaranteed()),
+            "fr" | "flop" => Ok(Self::flop_reward()),
+            _ => anyhow::bail!("protocol must be rc|ag|fr, got {s:?}"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self.kind {
+            ProtocolKind::ResourceConstrained => "resource-constrained",
+            ProtocolKind::AccuracyGuaranteed => "accuracy-guaranteed",
+            ProtocolKind::FlopReward => "flop-reward",
+        }
+    }
+
+    /// Algorithm-1 bounder for one controller side, if this protocol uses
+    /// structural budgeting.
+    pub fn bounder(&self, layer_macs: &[f64]) -> Option<LayerBound> {
+        match self.kind {
+            ProtocolKind::ResourceConstrained => {
+                Some(LayerBound::new(layer_macs.to_vec(), self.target_bits, self.g_min))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Search granularity — the N / L / C rows of Tables 2 and 3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    /// One fixed QBN/BBN for the whole network (the empirical policy).
+    Network(u8),
+    /// One QBN/BBN per layer (HAQ-style; HLC goals applied verbatim).
+    Layer,
+    /// One QBN/BBN per weight output / activation input channel (AutoQ).
+    Channel,
+}
+
+impl Granularity {
+    pub fn parse(s: &str) -> anyhow::Result<Granularity> {
+        if let Some(b) = s.strip_prefix("network:") {
+            return Ok(Granularity::Network(b.parse()?));
+        }
+        match s {
+            "network" | "n" => Ok(Granularity::Network(5)),
+            "layer" | "l" => Ok(Granularity::Layer),
+            "channel" | "c" => Ok(Granularity::Channel),
+            _ => anyhow::bail!("granularity must be network[:B]|layer|channel, got {s:?}"),
+        }
+    }
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Granularity::Network(_) => "N",
+            Granularity::Layer => "L",
+            Granularity::Channel => "C",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_coefficients() {
+        let rc = Protocol::resource_constrained(5.0);
+        assert_eq!((rc.netscore.alpha, rc.netscore.beta, rc.netscore.gamma), (1.0, 0.0, 0.0));
+        assert!(rc.bounder(&[1.0, 2.0]).is_some());
+        let ag = Protocol::accuracy_guaranteed();
+        assert_eq!((ag.netscore.alpha, ag.netscore.beta, ag.netscore.gamma), (2.0, 0.5, 0.5));
+        assert!(ag.bounder(&[1.0]).is_none());
+        let fr = Protocol::flop_reward();
+        assert_eq!(fr.netscore.beta, 0.0);
+    }
+
+    #[test]
+    fn parsing() {
+        assert_eq!(Protocol::parse("rc").unwrap().kind, ProtocolKind::ResourceConstrained);
+        assert_eq!(Protocol::parse("ag").unwrap().kind, ProtocolKind::AccuracyGuaranteed);
+        assert!(Protocol::parse("zz").is_err());
+        assert_eq!(Granularity::parse("network:4").unwrap(), Granularity::Network(4));
+        assert_eq!(Granularity::parse("c").unwrap(), Granularity::Channel);
+        assert_eq!(Granularity::parse("c").unwrap().tag(), "C");
+    }
+}

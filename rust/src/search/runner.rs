@@ -1,0 +1,165 @@
+//! Search runner: the explore→exploit episode loop (paper §4: 100 explore
+//! episodes at δ=0.5, then 300 exploit episodes with exponential decay),
+//! best-configuration tracking, and learning-curve capture (Fig. 8).
+
+use crate::agent::hiro::{HiroAgent, HiroConfig};
+use crate::agent::noise::NoiseSchedule;
+use crate::cost::Mode;
+use crate::data::synth::SynthDataset;
+use crate::env::state::StateBuilder;
+use crate::models::ModelRunner;
+use crate::runtime::Runtime;
+use crate::search::episode::{run_episode, train_after_episode, EpisodeConfig, EpisodeOutcome};
+use crate::search::protocol::{Granularity, Protocol};
+
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    pub mode: Mode,
+    pub protocol: Protocol,
+    pub granularity: Granularity,
+    pub episodes: usize,
+    /// Warm-up episodes at constant noise (paper: 100).
+    pub warmup: usize,
+    pub noise_decay: f64,
+    pub eval_batches: usize,
+    pub seed: u64,
+    pub zeta: f32,
+    pub relabel: bool,
+    pub llc_updates_div: usize,
+}
+
+impl SearchConfig {
+    /// Scaled-down default (this testbed); `paper_scale` restores §4.
+    pub fn quick(mode: Mode, protocol: Protocol, granularity: Granularity) -> SearchConfig {
+        SearchConfig {
+            mode,
+            protocol,
+            granularity,
+            episodes: 40,
+            warmup: 10,
+            noise_decay: 0.95,
+            eval_batches: 2,
+            seed: 1,
+            zeta: 0.5,
+            relabel: true,
+            llc_updates_div: 4,
+        }
+    }
+
+    pub fn paper_scale(mut self) -> SearchConfig {
+        self.episodes = 400;
+        self.warmup = 100;
+        self.noise_decay = 0.99;
+        self
+    }
+}
+
+/// Learning-curve row (one per episode) — Fig. 8's series.
+#[derive(Debug, Clone, Copy)]
+pub struct EpisodeStats {
+    pub episode: usize,
+    pub accuracy: f64,
+    pub reward: f64,
+    pub avg_wbits: f64,
+    pub avg_abits: f64,
+    pub norm_logic: f64,
+}
+
+#[derive(Debug)]
+pub struct SearchResult {
+    pub best: EpisodeOutcome,
+    pub history: Vec<EpisodeStats>,
+    /// Wall-clock of the whole search.
+    pub secs: f64,
+}
+
+/// Run a full hierarchical search for one (model, mode, protocol,
+/// granularity) cell.
+pub fn run_search(
+    rt: &mut Runtime,
+    runner: &ModelRunner,
+    data: &SynthDataset,
+    cfg: &SearchConfig,
+) -> anyhow::Result<SearchResult> {
+    let t0 = std::time::Instant::now();
+    let wvar = runner.weight_variances();
+    let sb = StateBuilder::new(&runner.meta, &wvar);
+    let mut hiro_cfg = HiroConfig {
+        zeta: cfg.zeta,
+        noise: NoiseSchedule::new(0.5, cfg.warmup, cfg.noise_decay),
+        ..HiroConfig::default()
+    };
+    // Network granularity needs no agent exploration at all.
+    if matches!(cfg.granularity, Granularity::Network(_)) {
+        hiro_cfg.noise = NoiseSchedule::new(0.0, 0, 1.0);
+    }
+    let mut agents = HiroAgent::new(rt, hiro_cfg, cfg.seed)?;
+    let ep_cfg = EpisodeConfig {
+        eval_batches: cfg.eval_batches,
+        llc_updates_div: cfg.llc_updates_div,
+        hlc_updates: 0,
+        relabel: cfg.relabel,
+        batch_llc: true,
+    };
+
+    let episodes = if matches!(cfg.granularity, Granularity::Network(_)) { 1 } else { cfg.episodes };
+    let mut best: Option<EpisodeOutcome> = None;
+    let mut history = Vec::with_capacity(episodes);
+    let llc_steps = runner.meta.w_channels + runner.meta.a_channels;
+    let n_layers = runner.meta.layers.len();
+
+    for ep in 0..episodes {
+        let out = run_episode(
+            rt,
+            runner,
+            &sb,
+            &wvar,
+            &mut agents,
+            &cfg.protocol,
+            cfg.granularity,
+            cfg.mode,
+            data,
+            &ep_cfg,
+        )?;
+        if !matches!(cfg.granularity, Granularity::Network(_)) {
+            train_after_episode(rt, &mut agents, llc_steps, n_layers, &ep_cfg)?;
+        }
+        agents.end_episode();
+        history.push(EpisodeStats {
+            episode: ep,
+            accuracy: out.accuracy,
+            reward: out.reward,
+            avg_wbits: out.avg_wbits,
+            avg_abits: out.avg_abits,
+            norm_logic: out.cost.norm_logic(),
+        });
+        let better = best.as_ref().map_or(true, |b| out.reward > b.reward);
+        if better {
+            crate::debug!(
+                "ep {ep}: new best acc={:.4} reward={:.4} wb={:.2} ab={:.2}",
+                out.accuracy,
+                out.reward,
+                out.avg_wbits,
+                out.avg_abits
+            );
+            best = Some(out);
+        }
+        if ep % 10 == 0 {
+            crate::info!(
+                "[{}-{} {} {}] ep {ep}/{episodes} acc={:.4} reward={:.4}",
+                runner.meta.name,
+                cfg.granularity.tag(),
+                cfg.mode.as_str(),
+                cfg.protocol.name(),
+                history[ep].accuracy,
+                history[ep].reward
+            );
+        }
+    }
+
+    Ok(SearchResult {
+        best: best.expect("at least one episode"),
+        history,
+        secs: t0.elapsed().as_secs_f64(),
+    })
+}

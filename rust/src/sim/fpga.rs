@@ -1,0 +1,303 @@
+//! Cycle-level FPGA accelerator simulators (paper §4.5 substitution —
+//! DESIGN.md): the two Zynq-7000 accelerator templates the paper deploys
+//! searched models on.
+//!
+//! * **Temporal** (BISMO-like [31], 150 MHz): bit-serial MAC lanes.  Each
+//!   lane retires one 1-bit × 1-bit product per cycle, so a `bw`×`ba` MAC
+//!   takes `bw·ba` lane-cycles — any bit-width combination runs without
+//!   pipeline bubbles.  This is exactly the bit-level logic-op count of
+//!   `cost::logic`, divided by the lane count.
+//!
+//! * **Spatial** (BitFusion-like [25], 100 MHz): a systolic array of Fusion
+//!   Units composed of 2-bit multiplier slices.  Only even effective
+//!   bit-widths are composable, and the activation-side precision is
+//!   configured per layer, so channel-level mixed precision leaves slices
+//!   idle ("pipeline bubbles") — the mechanism behind Fig. 9's
+//!   temporal-beats-spatial result for `-C` models.
+//!
+//! Both templates double-buffer DMA against compute (per-layer time =
+//! max(compute, dma)) and share the board's DDR3 bandwidth.
+
+use crate::cost::hardware::Mode;
+use crate::cost::logic;
+use crate::runtime::LayerMeta;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    Temporal,
+    Spatial,
+}
+
+impl Arch {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Arch::Temporal => "temporal",
+            Arch::Spatial => "spatial",
+        }
+    }
+}
+
+/// Accelerator instance (constants are Zynq-7000-class; see module doc).
+#[derive(Debug, Clone)]
+pub struct FpgaSim {
+    pub arch: Arch,
+    pub mode: Mode,
+    /// Clock (Hz).  Paper: spatial @100 MHz, temporal @150 MHz.
+    pub freq: f64,
+    /// Bit-level ops retired per cycle at full utilization.
+    pub lanes: f64,
+    /// DDR3 bytes per second.
+    pub bandwidth: f64,
+    /// Dynamic energy per bit-level op (J).
+    pub e_op: f64,
+    /// DMA energy per byte (J).
+    pub e_byte: f64,
+    /// Static power (J/s).
+    pub p_static: f64,
+}
+
+impl FpgaSim {
+    pub fn new(arch: Arch, mode: Mode) -> FpgaSim {
+        // Binarized datapaths pack ~4× the lanes into the same fabric and
+        // switch less charge per op (Fig.-1 transistor ratio).
+        let binar_lane_boost = 4.0;
+        let (freq, base_lanes, e_op, p_static) = match arch {
+            Arch::Temporal => (150e6, 4096.0, 2.0e-12, 0.5),
+            Arch::Spatial => (100e6, 6144.0, 1.6e-12, 0.7),
+        };
+        let (lanes, e_op) = match mode {
+            Mode::Quant => (base_lanes, e_op),
+            Mode::Binar => (base_lanes * binar_lane_boost, e_op * 0.25),
+        };
+        FpgaSim {
+            arch,
+            mode,
+            freq,
+            lanes,
+            bandwidth: 4.2e9,
+            e_op,
+            e_byte: 80.0e-12,
+            p_static,
+        }
+    }
+
+    /// Round a bit-width up to the spatial array's composable precision
+    /// (even, ≥2; 0 stays 0 = pruned).
+    fn spatial_round(b: u8) -> u64 {
+        match b {
+            0 => 0,
+            b => ((b as u64) + 1) / 2 * 2,
+        }
+    }
+
+    /// Effective bit-level ops the datapath must retire for one layer —
+    /// equals the true logic-op count on the temporal design; includes
+    /// bubble (idle-slice) overhead on the spatial design.
+    fn effective_ops(&self, layer: &LayerMeta, wbits: &[u8], abits: &[u8]) -> u64 {
+        match self.arch {
+            Arch::Temporal => logic::layer_logic_ops(layer, wbits, abits),
+            Arch::Spatial => {
+                // Activation precision is configured once per layer: the
+                // array runs at the max (rounded-even) input bit-width.
+                let ba_eff = abits.iter().map(|&b| Self::spatial_round(b)).max().unwrap_or(0);
+                let per_out: u64 = match layer.typ.as_str() {
+                    "fc" => layer.cin as u64,
+                    "dwconv" => (layer.h_out * layer.w_out * layer.k * layer.k) as u64,
+                    _ => (layer.h_out * layer.w_out * layer.k * layer.k * layer.cin) as u64,
+                };
+                wbits
+                    .iter()
+                    .map(|&bw| per_out * Self::spatial_round(bw) * ba_eff)
+                    .sum()
+            }
+        }
+    }
+
+    /// Bytes DMA'd for one layer: packed quantized weights + input feature
+    /// map at its activation precision + output at accumulator width.
+    fn layer_bytes(&self, layer: &LayerMeta, wbits: &[u8], abits: &[u8]) -> u64 {
+        let w_bits = logic::layer_weight_bits(layer, wbits);
+        let a_in_bits: u64 = if layer.typ == "fc" {
+            layer.cin as u64 * abits[0] as u64
+        } else {
+            let hw = (layer.h_in * layer.w_in) as u64;
+            abits.iter().map(|&b| hw * b as u64).sum()
+        };
+        let out_bits = (layer.h_out * layer.w_out * layer.cout) as u64 * 16; // 16-bit psums
+        (w_bits + a_in_bits + out_bits + 7) / 8
+    }
+
+    /// Simulate one inference of the whole model (batch 1).
+    pub fn run(&self, layers: &[LayerMeta], wbits: &[u8], abits: &[u8]) -> SimReport {
+        let mut compute_cycles = 0.0f64;
+        let mut dma_cycles = 0.0f64;
+        let mut total_cycles = 0.0f64;
+        let mut bytes = 0u64;
+        let mut true_ops = 0u64;
+        let mut eff_ops = 0u64;
+        for l in layers {
+            let wb = &wbits[l.w_off..l.w_off + l.w_len];
+            let ab = &abits[l.a_off..l.a_off + l.a_len];
+            let eff = self.effective_ops(l, wb, ab);
+            let cyc_c = eff as f64 / self.lanes;
+            let by = self.layer_bytes(l, wb, ab);
+            let cyc_d = by as f64 * self.freq / self.bandwidth;
+            compute_cycles += cyc_c;
+            dma_cycles += cyc_d;
+            // Double-buffered: layer time is the binding resource.
+            total_cycles += cyc_c.max(cyc_d);
+            bytes += by;
+            true_ops += logic::layer_logic_ops(l, wb, ab);
+            eff_ops += eff;
+        }
+        let secs = total_cycles / self.freq;
+        let dyn_energy = eff_ops as f64 * self.e_op + bytes as f64 * self.e_byte;
+        SimReport {
+            cycles: total_cycles,
+            compute_cycles,
+            dma_cycles,
+            secs,
+            fps: 1.0 / secs.max(1e-12),
+            energy_j: dyn_energy + self.p_static * secs,
+            bytes,
+            true_ops,
+            eff_ops,
+            utilization: if eff_ops > 0 { true_ops as f64 / eff_ops as f64 } else { 1.0 },
+        }
+    }
+}
+
+/// Result of simulating one inference.
+#[derive(Debug, Clone, Copy)]
+pub struct SimReport {
+    pub cycles: f64,
+    pub compute_cycles: f64,
+    pub dma_cycles: f64,
+    pub secs: f64,
+    pub fps: f64,
+    pub energy_j: f64,
+    pub bytes: u64,
+    /// Bit-level ops actually required by the model.
+    pub true_ops: u64,
+    /// Ops the datapath retires including bubble overhead.
+    pub eff_ops: u64,
+    /// true/effective — 1.0 on the temporal design, ≤1.0 on spatial.
+    pub utilization: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer() -> LayerMeta {
+        LayerMeta {
+            name: "l01_conv".into(),
+            typ: "conv".into(),
+            k: 3,
+            stride: 1,
+            cin: 16,
+            cout: 32,
+            h_in: 32,
+            w_in: 32,
+            h_out: 32,
+            w_out: 32,
+            macs: (32 * 32 * 3 * 3 * 16 * 32) as u64,
+            w_off: 0,
+            w_len: 32,
+            a_off: 0,
+            a_len: 16,
+        }
+    }
+
+    #[test]
+    fn temporal_has_no_bubbles() {
+        let sim = FpgaSim::new(Arch::Temporal, Mode::Quant);
+        let mut wb = vec![5u8; 32];
+        wb[3] = 3; // mixed precision
+        let ab = vec![4u8; 16];
+        let r = sim.run(&[layer()], &wb, &ab);
+        assert!((r.utilization - 1.0).abs() < 1e-12);
+        assert_eq!(r.true_ops, r.eff_ops);
+    }
+
+    #[test]
+    fn spatial_mixed_precision_wastes_slices() {
+        let sim = FpgaSim::new(Arch::Spatial, Mode::Quant);
+        // Odd bits round up to even → bubbles.
+        let wb = vec![5u8; 32];
+        let ab = vec![3u8; 16];
+        let r = sim.run(&[layer()], &wb, &ab);
+        assert!(r.utilization < 1.0, "util {}", r.utilization);
+        // 5→6, 3→4: effective = macs·24, true = macs·15.
+        assert!((r.utilization - 15.0 / 24.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spatial_even_uniform_has_full_utilization() {
+        let sim = FpgaSim::new(Arch::Spatial, Mode::Quant);
+        let r = sim.run(&[layer()], &vec![4u8; 32], &vec![4u8; 16]);
+        assert!((r.utilization - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn binar_faster_and_cheaper_than_quant() {
+        // Fig. 9/10 headline: same bit-widths, binarized models run faster
+        // and burn less energy on either architecture.
+        for arch in [Arch::Temporal, Arch::Spatial] {
+            let q = FpgaSim::new(arch, Mode::Quant).run(&[layer()], &vec![4u8; 32], &vec![4u8; 16]);
+            let b = FpgaSim::new(arch, Mode::Binar).run(&[layer()], &vec![4u8; 32], &vec![4u8; 16]);
+            assert!(b.fps > q.fps, "{arch:?}: binar fps {} !> quant {}", b.fps, q.fps);
+            assert!(b.energy_j < q.energy_j);
+        }
+    }
+
+    #[test]
+    fn fewer_bits_means_more_fps() {
+        let sim = FpgaSim::new(Arch::Temporal, Mode::Quant);
+        let hi = sim.run(&[layer()], &vec![8u8; 32], &vec![8u8; 16]);
+        let lo = sim.run(&[layer()], &vec![4u8; 32], &vec![4u8; 16]);
+        assert!(lo.fps > hi.fps);
+        assert!(lo.energy_j < hi.energy_j);
+    }
+
+    #[test]
+    fn temporal_beats_spatial_on_channel_level_models() {
+        // The paper's §4.5 claim, for mixed odd per-channel bit-widths.
+        let mut wb = vec![0u8; 32];
+        for (i, b) in wb.iter_mut().enumerate() {
+            *b = 3 + (i % 4) as u8; // 3,4,5,6 mixed
+        }
+        let ab = vec![3u8; 16];
+        let t = FpgaSim::new(Arch::Temporal, Mode::Quant).run(&[layer()], &wb, &ab);
+        let s = FpgaSim::new(Arch::Spatial, Mode::Quant).run(&[layer()], &wb, &ab);
+        assert!(t.fps > s.fps, "temporal {} !> spatial {}", t.fps, s.fps);
+    }
+
+    #[test]
+    fn fc_layer_is_memory_bound() {
+        // §4.5: fully-connected layers spend their time fetching weights.
+        let fc = LayerMeta {
+            name: "fc".into(),
+            typ: "fc".into(),
+            k: 1,
+            stride: 1,
+            cin: 4096,
+            cout: 1000,
+            h_in: 1,
+            w_in: 1,
+            h_out: 1,
+            w_out: 1,
+            macs: 4096 * 1000,
+            w_off: 0,
+            w_len: 1000,
+            a_off: 0,
+            a_len: 1,
+        };
+        let sim = FpgaSim::new(Arch::Temporal, Mode::Quant);
+        let wb = vec![8u8; 1000];
+        let ab = vec![8u8; 1];
+        let eff = sim.effective_ops(&fc, &wb, &ab) as f64 / sim.lanes;
+        let dma = sim.layer_bytes(&fc, &wb, &ab) as f64 * sim.freq / sim.bandwidth;
+        assert!(dma > eff, "fc should be memory-bound: dma {dma} compute {eff}");
+    }
+}

@@ -1,0 +1,6 @@
+//! Deployment simulators: cycle-level spatial (BitFusion-like) and temporal
+//! (BISMO-like) FPGA accelerators for the §4.5 performance/energy studies.
+
+pub mod fpga;
+
+pub use fpga::{Arch, FpgaSim, SimReport};

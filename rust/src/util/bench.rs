@@ -1,0 +1,85 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//! Used by the `cargo bench` targets (`benches/*.rs`, `harness = false`).
+
+use std::time::Instant;
+
+/// Timing summary of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub stddev_s: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>6} iters  mean {:>12}  min {:>12}  ±{:>10}",
+            self.name,
+            self.iters,
+            human_time(self.mean_s),
+            human_time(self.min_s),
+            human_time(self.stddev_s),
+        )
+    }
+}
+
+pub fn human_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Run `f` `iters` times (after `warmup` unmeasured runs) and report.
+pub fn bench<F: FnMut() -> R, R>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / iters as f64;
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / iters as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_s: samples.iter().cloned().fold(0.0, f64::max),
+        stddev_s: var.sqrt(),
+    };
+    println!("{}", r.row());
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop", 1, 10, || 1 + 1);
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_s >= 0.0 && r.min_s <= r.mean_s);
+    }
+
+    #[test]
+    fn humanized_times() {
+        assert!(human_time(2.5e-9).ends_with("ns"));
+        assert!(human_time(2.5e-5).ends_with("µs"));
+        assert!(human_time(2.5e-2).ends_with("ms"));
+        assert!(human_time(2.5).ends_with("s"));
+    }
+}

@@ -1,0 +1,171 @@
+//! Tiny CLI argument parser substrate (no clap in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args, with
+//! typed getters and a generated `--help`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Declarative argument set for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub cmd: String,
+    specs: Vec<ArgSpec>,
+    values: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(cmd: &str) -> Self {
+        Args { cmd: cmd.to_string(), ..Default::default() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("usage: autoq {} [options]\n\noptions:\n", self.cmd);
+        for spec in &self.specs {
+            let d = spec
+                .default
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{:<20} {}{}\n", spec.name, spec.help, d));
+        }
+        s
+    }
+
+    /// Parse raw args (after the subcommand).  Unknown `--keys` are errors.
+    pub fn parse(mut self, raw: &[String]) -> anyhow::Result<Self> {
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if a == "--help" || a == "-h" {
+                anyhow::bail!("{}", self.usage());
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key}\n{}", self.usage()))?
+                    .clone();
+                let val = if spec.is_flag {
+                    inline_val.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    i += 1;
+                    raw.get(i)
+                        .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?
+                        .clone()
+                };
+                self.values.insert(key, val);
+            } else {
+                self.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(self)
+    }
+
+    fn raw(&self, name: &str) -> Option<String> {
+        self.values.get(name).cloned().or_else(|| {
+            self.specs
+                .iter()
+                .find(|s| s.name == name)
+                .and_then(|s| s.default.map(str::to_string))
+        })
+    }
+
+    pub fn get(&self, name: &str) -> String {
+        self.raw(name)
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<usize> {
+        let v = self.get(name);
+        v.parse()
+            .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v:?}"))
+    }
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<f64> {
+        let v = self.get(name);
+        v.parse()
+            .map_err(|_| anyhow::anyhow!("--{name} expects a number, got {v:?}"))
+    }
+    pub fn get_u64(&self, name: &str) -> anyhow::Result<u64> {
+        let v = self.get(name);
+        v.parse()
+            .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v:?}"))
+    }
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.raw(name).as_deref(), Some("true" | "1" | "yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = Args::new("t")
+            .opt("model", "cif10", "model name")
+            .opt("episodes", "400", "episode count")
+            .flag("paper-scale", "full scale")
+            .parse(&v(&["--model", "res18", "--paper-scale", "--episodes=10"]))
+            .unwrap();
+        assert_eq!(a.get("model"), "res18");
+        assert_eq!(a.get_usize("episodes").unwrap(), 10);
+        assert!(a.get_bool("paper-scale"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::new("t")
+            .opt("model", "cif10", "")
+            .flag("fast", "")
+            .parse(&v(&[]))
+            .unwrap();
+        assert_eq!(a.get("model"), "cif10");
+        assert!(!a.get_bool("fast"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(Args::new("t").parse(&v(&["--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = Args::new("t").parse(&v(&["x", "y"])).unwrap();
+        assert_eq!(a.positional, vec!["x", "y"]);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::new("t").opt("n", "1", "").parse(&v(&["--n", "abc"])).unwrap();
+        assert!(a.get_usize("n").is_err());
+    }
+}

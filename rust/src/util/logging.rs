@@ -1,0 +1,85 @@
+//! Leveled stderr logger with wall-clock-relative timestamps.
+//!
+//! `AUTOQ_LOG` in {trace, debug, info, warn, error}; default info.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Trace = 0,
+    Debug = 1,
+    Info = 2,
+    Warn = 3,
+    Error = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static START: OnceLock<Instant> = OnceLock::new();
+
+pub fn init() {
+    START.get_or_init(Instant::now);
+    if let Ok(v) = std::env::var("AUTOQ_LOG") {
+        let lvl = match v.to_lowercase().as_str() {
+            "trace" => Level::Trace,
+            "debug" => Level::Debug,
+            "warn" => Level::Warn,
+            "error" => Level::Error,
+            _ => Level::Info,
+        };
+        LEVEL.store(lvl as u8, Ordering::Relaxed);
+    }
+}
+
+pub fn set_level(lvl: Level) {
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(lvl: Level) -> bool {
+    lvl as u8 >= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(lvl: Level, args: std::fmt::Arguments<'_>) {
+    if !enabled(lvl) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    let tag = match lvl {
+        Level::Trace => "TRACE",
+        Level::Debug => "DEBUG",
+        Level::Info => "INFO ",
+        Level::Warn => "WARN ",
+        Level::Error => "ERROR",
+    };
+    eprintln!("[{t:9.3}s {tag}] {args}");
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($a)*)) };
+}
+#[macro_export]
+macro_rules! debug {
+    ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($a)*)) };
+}
+#[macro_export]
+macro_rules! warn_ {
+    ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($a)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        init();
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Error));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+}

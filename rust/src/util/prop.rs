@@ -1,0 +1,177 @@
+//! Property-based testing substrate (proptest is not in the offline vendor
+//! set).  Seeded generators + a `forall` runner with failure-case reporting
+//! and greedy input shrinking for `Vec`-valued cases.
+//!
+//! Used across the coordinator tests: routing/batching/state invariants of
+//! the search loop, cost-model monotonicity, replay-buffer safety,
+//! bit-config packing round-trips, FPGA-simulator conservation laws.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (tunable via AUTOQ_PROP_CASES).
+pub fn cases() -> usize {
+    std::env::var("AUTOQ_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128)
+}
+
+/// Run `prop` on `n` random inputs drawn by `gen`.  On failure, tries to
+/// shrink via `shrink` (smaller variants first) and panics with the minimal
+/// failing input's debug form.
+pub fn forall<T, G, P, S>(seed: u64, mut gen: G, mut prop: P, shrink: S)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    S: Fn(&T) -> Vec<T>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases() {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Greedy shrink loop.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut improved = true;
+            let mut budget = 200usize;
+            while improved && budget > 0 {
+                improved = false;
+                for cand in shrink(&best) {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        improved = true;
+                        break;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {seed}):\n  input: {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+/// `forall` without shrinking.
+pub fn forall_ns<T, G, P>(seed: u64, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    forall(seed, gen, prop, |_| Vec::new());
+}
+
+/// Standard shrinker for vectors: drop halves, drop single elements.
+pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if v.is_empty() {
+        return out;
+    }
+    out.push(v[..v.len() / 2].to_vec());
+    out.push(v[v.len() / 2..].to_vec());
+    if v.len() <= 16 {
+        for i in 0..v.len() {
+            let mut w = v.to_vec();
+            w.remove(i);
+            out.push(w);
+        }
+    }
+    out
+}
+
+/// Generator helpers.
+pub fn gen_bits_vec(rng: &mut Rng, max_len: usize, max_bits: u32) -> Vec<u8> {
+    let n = 1 + rng.below(max_len.max(1));
+    (0..n).map(|_| rng.below(max_bits as usize + 1) as u8).collect()
+}
+
+pub fn gen_f32_vec(rng: &mut Rng, max_len: usize, scale: f32) -> Vec<f32> {
+    let n = 1 + rng.below(max_len.max(1));
+    (0..n).map(|_| (rng.normal() as f32) * scale).collect()
+}
+
+/// Assert helper returning Result for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall_ns(
+            1,
+            |r| r.below(100),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, cases());
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        forall_ns(2, |r| r.below(10), |&x| {
+            if x < 5 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 5"))
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_finds_smaller_case() {
+        // Property: no vector contains a value >= 50.  The shrinker should
+        // reduce any failing vector to length 1.
+        let result = std::panic::catch_unwind(|| {
+            forall(
+                3,
+                |r| {
+                    let n = 1 + r.below(20);
+                    (0..n).map(|_| r.below(100) as u32).collect::<Vec<u32>>()
+                },
+                |v| {
+                    if v.iter().all(|&x| x < 50) {
+                        Ok(())
+                    } else {
+                        Err("contains big".into())
+                    }
+                },
+                |v| shrink_vec(v),
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // The minimal counterexample is a single-element vector.
+        assert!(msg.contains("input: ["), "{msg}");
+        let inside = msg.split("input: [").nth(1).unwrap();
+        let list = inside.split(']').next().unwrap();
+        assert_eq!(list.split(',').count(), 1, "not shrunk: {msg}");
+    }
+
+    #[test]
+    fn gen_helpers_in_range() {
+        let mut r = Rng::new(4);
+        for _ in 0..100 {
+            let b = gen_bits_vec(&mut r, 32, 8);
+            assert!(!b.is_empty() && b.len() <= 32);
+            assert!(b.iter().all(|&x| x <= 8));
+        }
+    }
+}

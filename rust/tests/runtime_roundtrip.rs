@@ -1,0 +1,62 @@
+//! Integration: AOT artifacts load, compile and execute through PJRT with
+//! the shapes the manifest promises.  Requires `make artifacts`.
+
+use std::path::Path;
+
+use autoq::runtime::{Runtime, Tensor};
+
+fn runtime() -> Runtime {
+    Runtime::open(Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").as_path())
+        .expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_lists_all_families() {
+    let rt = runtime();
+    for model in ["cif10", "res18", "sqnet", "monet"] {
+        for fam in ["eval_quant", "eval_binar", "train_quant", "train_binar"] {
+            assert!(
+                rt.manifest.artifact(&format!("{model}_{fam}")).is_ok(),
+                "{model}_{fam} missing"
+            );
+        }
+        let m = rt.manifest.model(model).unwrap();
+        assert!(m.w_channels > 0 && m.a_channels > 0);
+        assert_eq!(
+            m.layers.iter().map(|l| l.w_len).sum::<usize>(),
+            m.w_channels,
+            "layer w slices must tile the weight-bit vector"
+        );
+        assert_eq!(m.layers.iter().map(|l| l.a_len).sum::<usize>(), m.a_channels);
+    }
+    for s in [16, 17] {
+        assert!(rt.manifest.artifact(&format!("ddpg_act_s{s}")).is_ok());
+        assert!(rt.manifest.artifact(&format!("ddpg_update_s{s}")).is_ok());
+    }
+}
+
+#[test]
+fn ddpg_act_executes_and_bounds_actions() {
+    let mut rt = runtime();
+    let spec = rt.manifest.artifact("ddpg_act_s16").unwrap().clone();
+    // Zero-initialized actor → sigmoid(0)*32 == 16 for every state.
+    let inputs: Vec<xla::Literal> = spec
+        .inputs
+        .iter()
+        .map(|t| Tensor::zeros(t.shape.clone()).to_literal().unwrap())
+        .collect();
+    let outs = rt.exec("ddpg_act_s16", &inputs).unwrap();
+    assert_eq!(outs.len(), 1);
+    let a = Tensor::from_literal(&outs[0]).unwrap();
+    assert_eq!(a.shape, vec![128, 1]);
+    for &x in &a.data {
+        assert!((x - 16.0).abs() < 1e-5, "zero actor must emit 16.0, got {x}");
+    }
+}
+
+#[test]
+fn exec_validates_arity() {
+    let mut rt = runtime();
+    let err = match rt.exec::<xla::Literal>("ddpg_act_s16", &[]) { Err(e) => e, Ok(_) => panic!("expected arity error") };
+    assert!(err.to_string().contains("inputs"));
+}
