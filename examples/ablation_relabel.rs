@@ -1,43 +1,42 @@
 //! Ablation: HIRO goal relabeling on vs off (the design choice DESIGN.md
 //! calls out — the "Correcting High level Training" machinery of §3.2).
-//! Runs matched-seed channel searches and compares the learning curves.
+//! Runs matched-seed channel searches through the coordinator job API
+//! (`JobSpec::search(..).relabel(false)`) and compares the learning curves.
 //!
 //! Run: `cargo run --release --example ablation_relabel [episodes] [runs]`
 
+use autoq::coordinator::{Coordinator, JobOutcome, JobSpec};
 use autoq::cost::Mode;
-use autoq::data::synth::SynthDataset;
-use autoq::repro::common::runner_for;
-use autoq::runtime::Runtime;
-use autoq::search::{run_search, Granularity, Protocol, SearchConfig};
+use autoq::search::{Granularity, Protocol};
 use autoq::util::stats;
 
 fn main() -> anyhow::Result<()> {
     autoq::util::logging::init();
     let episodes: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(20);
     let runs: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(2);
-    let mut rt = Runtime::open_default()?;
-    let runner = runner_for(&mut rt, "cif10")?;
-    let data = SynthDataset::new(42);
+    let mut coord = Coordinator::open_default()?;
 
     let mut curves: Vec<(bool, Vec<f64>)> = Vec::new();
     for relabel in [true, false] {
         let mut acc = vec![0.0f64; episodes];
         let mut best_rewards = Vec::new();
         for run in 0..runs {
-            let mut cfg = SearchConfig::quick(
-                Mode::Quant,
-                Protocol::accuracy_guaranteed(),
-                Granularity::Channel,
-            );
-            cfg.episodes = episodes;
-            cfg.warmup = episodes / 3;
-            cfg.relabel = relabel;
-            cfg.seed = 1 + run as u64 * 57;
-            let res = run_search(&mut rt, &runner, &data, &cfg)?;
-            for (i, st) in res.history.iter().enumerate() {
+            let report = coord.run(
+                &JobSpec::search("cif10")
+                    .mode(Mode::Quant)
+                    .protocol(Protocol::accuracy_guaranteed())
+                    .granularity(Granularity::Channel)
+                    .episodes(episodes)
+                    .warmup(episodes / 3)
+                    .relabel(relabel)
+                    .seed(1 + run as u64 * 57)
+                    .build()?,
+            )?;
+            let JobOutcome::Search { best, history } = &report.outcome else { unreachable!() };
+            for (i, st) in history.iter().enumerate() {
                 acc[i] += st.reward / runs as f64;
             }
-            best_rewards.push(res.best.reward);
+            best_rewards.push(best.reward);
         }
         println!(
             "relabel={relabel:<5} mean best reward over {runs} runs: {:.4}",

@@ -1,9 +1,9 @@
 //! End-to-end system driver (the EXPERIMENTS.md §E2E run): proves all three
-//! layers compose on a real small workload.
+//! layers compose on a real small workload, driven entirely through the
+//! coordinator job API.
 //!
-//!   1. PRE-TRAIN the 7-conv CIFAR CNN from scratch through the AOT'd
-//!      fused train-step (L2 fwd/bwd built on the L1 Pallas quantizers),
-//!      logging the loss curve.
+//!   1. PRE-TRAIN the 7-conv CIFAR CNN from scratch (seeded init) through
+//!      the AOT'd fused train-step, logging the loss curve.
 //!   2. SEARCH per-channel bit-widths with the hierarchical DRL agent under
 //!      both paper protocols (RC + AG).
 //!   3. FINE-TUNE the AG winner and report the recovered accuracy.
@@ -11,83 +11,89 @@
 //!
 //! Run: `cargo run --release --example end_to_end [episodes]`
 
+use autoq::coordinator::{Coordinator, JobOutcome, JobSpec};
 use autoq::cost::Mode;
-use autoq::data::synth::{Split, SynthDataset};
-use autoq::finetune::TrainConfig;
-use autoq::models::ModelRunner;
-use autoq::runtime::Runtime;
-use autoq::search::{run_search, Granularity, Protocol, SearchConfig};
-use autoq::sim::{Arch, FpgaSim};
-use autoq::util::rng::Rng;
+use autoq::search::{Granularity, Protocol};
 
 fn main() -> anyhow::Result<()> {
     autoq::util::logging::init();
     let episodes: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(25);
     let t0 = std::time::Instant::now();
-    let mut rt = Runtime::open_default()?;
-    let data = SynthDataset::new(42);
+    let mut coord = Coordinator::open_default()?;
 
     // ---- 1. pre-train from scratch ----------------------------------------
+    // persist(false): this is a demo run — keep any saved trained params.
     println!("== stage 1: pre-training cif10 (fresh params) ==");
-    let meta = rt.manifest.model("cif10")?.clone();
-    let mut runner = ModelRunner::init(meta, &mut Rng::new(0xE2E));
-    let cfg = TrainConfig::pretrain(250);
-    let rep = autoq::finetune::train(&mut rt, &mut runner, &data, &cfg)?;
+    let pre =
+        coord.run(&JobSpec::pretrain("cif10").steps(250).seed(0xE2E).persist(false).build()?)?;
+    let JobOutcome::Train { curve, final_eval, .. } = &pre.outcome else { unreachable!() };
     println!("loss curve (step, loss):");
-    for (s, l) in &rep.curve {
+    for (s, l) in curve {
         println!("  {s:>5} {l:.4}");
     }
-    let fp = runner.eval_fp32(&mut rt, &data, Split::Val, 2)?;
-    println!("fp32 val accuracy: {:.4} ({:.1}s)", fp.accuracy, rep.secs);
+    let fp_acc = final_eval.accuracy;
+    println!("fp32 val accuracy: {fp_acc:.4} ({:.1}s)", pre.secs);
 
     // ---- 2. hierarchical searches ------------------------------------------
     println!("\n== stage 2: channel-level searches ({episodes} episodes each) ==");
     let mut results = Vec::new();
     for protocol in [Protocol::resource_constrained(5.0), Protocol::accuracy_guaranteed()] {
-        let mut scfg = SearchConfig::quick(Mode::Quant, protocol, Granularity::Channel);
-        scfg.episodes = episodes;
-        scfg.warmup = episodes / 3;
-        let res = run_search(&mut rt, &runner, &data, &scfg)?;
+        let cfg_path = std::env::temp_dir().join(format!("autoq_e2e_{}.json", protocol.tag()));
+        let report = coord.run(
+            &JobSpec::search("cif10")
+                .mode(Mode::Quant)
+                .protocol(protocol)
+                .granularity(Granularity::Channel)
+                .episodes(episodes)
+                .warmup(episodes / 3)
+                .out(cfg_path.clone())
+                .build()?,
+        )?;
+        let JobOutcome::Search { best, .. } = &report.outcome else { unreachable!() };
         println!(
             "{:<22} best: acc={:.4} wbits={:.2} abits={:.2} norm_logic={:.4} ({:.0}s)",
             protocol.name(),
-            res.best.accuracy,
-            res.best.avg_wbits,
-            res.best.avg_abits,
-            res.best.cost.norm_logic(),
-            res.secs
+            best.accuracy,
+            best.avg_wbits,
+            best.avg_abits,
+            best.cost.norm_logic(),
+            report.secs
         );
-        results.push((protocol, res));
+        results.push((protocol, cfg_path, report));
     }
 
     // ---- 3. fine-tune the accuracy-guaranteed winner ------------------------
     println!("\n== stage 3: fine-tuning the AG configuration ==");
-    let ag = &results[1].1.best;
-    let tc = TrainConfig::finetune(Mode::Quant, ag.wbits.clone(), ag.abits.clone(), 80);
-    let ft = autoq::finetune::train(&mut rt, &mut runner, &data, &tc)?;
+    let (_, ag_cfg, ag_report) = &results[1];
+    let JobOutcome::Search { best: ag_best, .. } = &ag_report.outcome else { unreachable!() };
+    let ft = coord.run(&JobSpec::finetune("cif10", ag_cfg.clone()).steps(80).build()?)?;
+    let JobOutcome::Train { final_eval: ft_eval, .. } = &ft.outcome else { unreachable!() };
     println!(
         "AG config: searched acc {:.4} -> fine-tuned {:.4} (Δ vs fp32: {:+.2}%)",
-        ag.accuracy,
-        ft.final_eval.accuracy,
-        (ft.final_eval.accuracy - fp.accuracy) * 100.0
+        ag_best.accuracy,
+        ft_eval.accuracy,
+        (ft_eval.accuracy - fp_acc) * 100.0
     );
 
     // ---- 4. deployment ------------------------------------------------------
     println!("\n== stage 4: FPGA deployment + storage audit ==");
-    for (protocol, res) in &results {
-        for arch in [Arch::Temporal, Arch::Spatial] {
-            let sim = FpgaSim::new(arch, Mode::Quant);
-            let r = sim.run(&runner.meta.layers, &res.best.wbits, &res.best.abits);
-            println!(
-                "{:<22} {:<9}: {:>8.1} fps {:>8.3} mJ util={:.2}",
-                protocol.name(),
-                arch.as_str(),
-                r.fps,
-                r.energy_j * 1e3,
-                r.utilization
-            );
+    let meta = coord.manifest().model("cif10")?.clone();
+    for (protocol, cfg_path, report) in &results {
+        let sim = coord.run(&JobSpec::sim("cif10").config(cfg_path.clone()).build()?)?;
+        if let JobOutcome::Sim(rows) = &sim.outcome {
+            for r in rows {
+                println!(
+                    "{:<22} {:<9}: {:>8.1} fps {:>8.3} mJ util={:.2}",
+                    protocol.name(),
+                    r.arch,
+                    r.fps,
+                    r.energy_mj,
+                    r.utilization
+                );
+            }
         }
-        let audit = autoq::quant::audit(&runner.meta.layers, &res.best.wbits, &res.best.abits);
+        let JobOutcome::Search { best, .. } = &report.outcome else { continue };
+        let audit = autoq::quant::audit(&meta.layers, &best.wbits, &best.abits);
         println!(
             "{:<22} storage: {:.1} KB weights + {:.2} KB bit-configs ({:.3}% overhead)",
             protocol.name(),

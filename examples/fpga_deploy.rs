@@ -1,53 +1,58 @@
 //! FPGA deployment study (the intro's mobile-device scenario): take the
-//! depthwise MobileNetV2-style model, search it at every granularity, and
-//! compare quantized vs binarized deployment on the spatial and temporal
-//! accelerator templates — the decision a mobile hardware developer makes
-//! with AutoQ's output (paper §4.5).
+//! depthwise MobileNetV2-style model, sweep it at every granularity in both
+//! modes across two worker threads via the coordinator's `Sweep` scheduler,
+//! and compare quantized vs binarized deployment on the spatial and
+//! temporal accelerator templates — the decision a mobile hardware
+//! developer makes with AutoQ's output (paper §4.5).
 //!
 //! Run: `cargo run --release --example fpga_deploy [episodes]`
 
+use autoq::coordinator::{Coordinator, JobKind, JobOutcome, Sweep};
 use autoq::cost::Mode;
-use autoq::data::synth::SynthDataset;
-use autoq::repro::common::runner_for;
-use autoq::runtime::Runtime;
-use autoq::search::{run_search, Granularity, Protocol, SearchConfig};
+use autoq::runtime::Manifest;
+use autoq::search::{Granularity, Protocol};
 use autoq::sim::{Arch, FpgaSim};
 
 fn main() -> anyhow::Result<()> {
     autoq::util::logging::init();
     let episodes: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(15);
-    let mut rt = Runtime::open_default()?;
-    let runner = runner_for(&mut rt, "monet")?;
-    let data = SynthDataset::new(42);
-    let meta = runner.meta.clone();
+    let dir = Coordinator::default_dir();
+    let meta = Manifest::load(&dir)?.model("monet")?.clone();
+
+    let sweep = Sweep {
+        models: vec!["monet".to_string()],
+        modes: vec![Mode::Quant, Mode::Binar],
+        protocols: vec![Protocol::resource_constrained(5.0)],
+        granularities: vec![Granularity::Network(5), Granularity::Layer, Granularity::Channel],
+        episodes,
+        warmup: episodes / 3,
+        workers: 2,
+        ..Sweep::default()
+    };
+    let result = sweep.run(&dir)?;
+    anyhow::ensure!(result.failures.is_empty(), "sweep failures: {:?}", result.failures);
 
     println!(
         "{:<6} {:<6} {:>7} {:>6} {:>6} {:>10} {:>10} {:>10} {:>10}",
         "mode", "gran", "acc", "wbits", "abits", "fps(temp)", "fps(spat)", "mJ(temp)", "mJ(spat)"
     );
-    for mode in [Mode::Quant, Mode::Binar] {
-        for gran in [Granularity::Network(5), Granularity::Layer, Granularity::Channel] {
-            let mut cfg =
-                SearchConfig::quick(mode, Protocol::resource_constrained(5.0), gran);
-            cfg.episodes = episodes;
-            cfg.warmup = episodes / 3;
-            let res = run_search(&mut rt, &runner, &data, &cfg)?;
-            let b = &res.best;
-            let t = FpgaSim::new(Arch::Temporal, mode).run(&meta.layers, &b.wbits, &b.abits);
-            let s = FpgaSim::new(Arch::Spatial, mode).run(&meta.layers, &b.wbits, &b.abits);
-            println!(
-                "{:<6} {:<6} {:>7.4} {:>6.2} {:>6.2} {:>10.1} {:>10.1} {:>10.3} {:>10.3}",
-                mode.as_str(),
-                gran.tag(),
-                b.accuracy,
-                b.avg_wbits,
-                b.avg_abits,
-                t.fps,
-                s.fps,
-                t.energy_j * 1e3,
-                s.energy_j * 1e3
-            );
-        }
+    for report in &result.reports {
+        let JobKind::Search(p) = &report.spec.kind else { continue };
+        let JobOutcome::Search { best, .. } = &report.outcome else { continue };
+        let t = FpgaSim::new(Arch::Temporal, p.mode).run(&meta.layers, &best.wbits, &best.abits);
+        let s = FpgaSim::new(Arch::Spatial, p.mode).run(&meta.layers, &best.wbits, &best.abits);
+        println!(
+            "{:<6} {:<6} {:>7.4} {:>6.2} {:>6.2} {:>10.1} {:>10.1} {:>10.3} {:>10.3}",
+            p.mode.as_str(),
+            p.granularity.tag(),
+            best.accuracy,
+            best.avg_wbits,
+            best.avg_abits,
+            t.fps,
+            s.fps,
+            t.energy_j * 1e3,
+            s.energy_j * 1e3
+        );
     }
     println!("\n(paper shape: C > L > N on fps; binar faster but less accurate; temporal wins on -C)");
     Ok(())

@@ -1,39 +1,42 @@
-//! Quickstart: the public API in ~60 lines.
+//! Quickstart: the coordinator job API in ~50 lines.
 //!
-//!   1. open the PJRT runtime over the AOT artifacts,
-//!   2. load (or pre-train) the 7-conv CIFAR CNN,
-//!   3. run a short accuracy-guaranteed channel-level search,
-//!   4. fine-tune the best config and simulate FPGA deployment.
+//!   1. open a `Coordinator` over the AOT artifacts (it owns the PJRT
+//!      runtime and pre-trains zoo models on first use),
+//!   2. evaluate the fp32 reference, run a short accuracy-guaranteed
+//!      channel-level search,
+//!   3. fine-tune the best config and simulate FPGA deployment —
+//!      each step one validated `JobSpec`.
 //!
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
+use autoq::coordinator::{Coordinator, JobOutcome, JobSpec};
 use autoq::cost::Mode;
-use autoq::data::synth::SynthDataset;
-use autoq::repro::common::runner_for;
-use autoq::runtime::Runtime;
-use autoq::search::{run_search, Granularity, Protocol, SearchConfig};
-use autoq::sim::{Arch, FpgaSim};
+use autoq::search::{Granularity, Protocol};
 
 fn main() -> anyhow::Result<()> {
     autoq::util::logging::init();
-    let mut rt = Runtime::open_default()?;
-    let runner = runner_for(&mut rt, "cif10")?;
-    let data = SynthDataset::new(42);
+    let mut coord = Coordinator::open_default()?;
 
     // Full-precision reference accuracy.
-    let fp = runner.eval_fp32(&mut rt, &data, autoq::data::Split::Val, 2)?;
-    println!("fp32 accuracy: {:.4}", fp.accuracy);
+    let fp = coord.run(&JobSpec::eval("cif10").batches(2).build()?)?;
+    if let JobOutcome::Eval(e) = &fp.outcome {
+        println!("fp32 accuracy: {:.4}", e.accuracy);
+    }
 
-    // Short accuracy-guaranteed channel-level search (paper protocol §3.3).
-    let mut cfg = SearchConfig::quick(
-        Mode::Quant,
-        Protocol::accuracy_guaranteed(),
-        Granularity::Channel,
-    );
-    cfg.episodes = 12;
-    cfg.warmup = 4;
-    let res = run_search(&mut rt, &runner, &data, &cfg)?;
-    let best = &res.best;
+    // Short accuracy-guaranteed channel-level search (paper protocol §3.3);
+    // the best config is written out for the follow-up jobs.
+    let cfg_path = std::env::temp_dir().join("autoq_quickstart_best.json");
+    let search = coord.run(
+        &JobSpec::search("cif10")
+            .mode(Mode::Quant)
+            .protocol(Protocol::accuracy_guaranteed())
+            .granularity(Granularity::Channel)
+            .episodes(12)
+            .warmup(4)
+            .out(cfg_path.clone())
+            .build()?,
+    )?;
+    let JobOutcome::Search { best, .. } = &search.outcome else { unreachable!() };
     println!(
         "searched: acc={:.4} avg weight bits={:.2} avg act bits={:.2} (logic ops at {:.2}% of fp32)",
         best.accuracy,
@@ -43,27 +46,20 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Fine-tune the searched configuration (recovers quantization loss).
-    let mut ft_runner = runner_for(&mut rt, "cif10")?;
-    let tc = autoq::finetune::TrainConfig::finetune(
-        Mode::Quant,
-        best.wbits.clone(),
-        best.abits.clone(),
-        40,
-    );
-    let rep = autoq::finetune::train(&mut rt, &mut ft_runner, &data, &tc)?;
-    println!("fine-tuned accuracy: {:.4}", rep.final_eval.accuracy);
+    let ft = coord.run(&JobSpec::finetune("cif10", cfg_path.clone()).steps(40).build()?)?;
+    if let JobOutcome::Train { final_eval, .. } = &ft.outcome {
+        println!("fine-tuned accuracy: {:.4}", final_eval.accuracy);
+    }
 
     // Deploy on both simulated FPGA accelerator templates.
-    for arch in [Arch::Temporal, Arch::Spatial] {
-        let sim = FpgaSim::new(arch, Mode::Quant);
-        let r = sim.run(&runner.meta.layers, &best.wbits, &best.abits);
-        println!(
-            "{:<9} accelerator: {:>8.1} fps, {:>7.3} mJ/inference, utilization {:.2}",
-            arch.as_str(),
-            r.fps,
-            r.energy_j * 1e3,
-            r.utilization
-        );
+    let sim = coord.run(&JobSpec::sim("cif10").config(cfg_path).build()?)?;
+    if let JobOutcome::Sim(rows) = &sim.outcome {
+        for r in rows {
+            println!(
+                "{:<9} accelerator: {:>8.1} fps, {:>7.3} mJ/inference, utilization {:.2}",
+                r.arch, r.fps, r.energy_mj, r.utilization
+            );
+        }
     }
     Ok(())
 }

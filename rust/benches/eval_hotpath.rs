@@ -1,22 +1,23 @@
 //! Bench: `eval_config` — the Tables 2/3 inner loop.  One call = one
 //! validation batch through the AOT'd Pallas-quantized forward pass; every
-//! search episode pays `eval_batches` of these.
+//! search episode pays `eval_batches` of these.  Runners come from the
+//! coordinator's model cache (pre-training on first use).
 
+use autoq::coordinator::Coordinator;
 use autoq::cost::Mode;
 use autoq::data::synth::SynthDataset;
 use autoq::data::Split;
-use autoq::repro::common::runner_for;
-use autoq::runtime::Runtime;
 use autoq::util::bench::bench;
 
 fn main() -> anyhow::Result<()> {
     println!("== eval_hotpath bench (Tables 2/3 inner loop) ==");
-    let mut rt = Runtime::open_default()?;
+    let mut coord = Coordinator::open_default()?;
     let data = SynthDataset::new(42);
     for model in ["cif10", "res18", "sqnet", "monet"] {
-        let runner = runner_for(&mut rt, model)?;
+        let runner = coord.fresh_runner(model)?;
         let wbits = vec![5u8; runner.meta.w_channels];
         let abits = vec![5u8; runner.meta.a_channels];
+        let rt = coord.runtime();
         for mode in [Mode::Quant, Mode::Binar] {
             bench(
                 &format!("eval_config {model} {} (256 imgs)", mode.as_str()),
@@ -24,12 +25,12 @@ fn main() -> anyhow::Result<()> {
                 5,
                 || {
                     runner
-                        .eval_config(&mut rt, mode, &wbits, &abits, &data, Split::Val, 1)
+                        .eval_config(&mut *rt, mode, &wbits, &abits, &data, Split::Val, 1)
                         .unwrap()
                 },
             );
         }
     }
-    println!("\nper-executable stats:\n{}", rt.stats_report());
+    println!("\nper-executable stats:\n{}", coord.runtime().stats_report());
     Ok(())
 }

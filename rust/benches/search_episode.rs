@@ -4,36 +4,36 @@
 
 use autoq::agent::hiro::{HiroAgent, HiroConfig};
 use autoq::baselines::{run_baseline, BaselineConfig, BaselinePolicy};
+use autoq::coordinator::Coordinator;
 use autoq::cost::Mode;
 use autoq::data::synth::SynthDataset;
 use autoq::env::state::StateBuilder;
-use autoq::repro::common::runner_for;
-use autoq::runtime::Runtime;
 use autoq::search::episode::{run_episode, EpisodeConfig};
 use autoq::search::{Granularity, Protocol};
 use autoq::util::bench::bench;
 
 fn main() -> anyhow::Result<()> {
     println!("== search_episode bench (Tables 2-4 / Fig 8 unit) ==");
-    let mut rt = Runtime::open_default()?;
-    let runner = runner_for(&mut rt, "cif10")?;
+    let mut coord = Coordinator::open_default()?;
+    let runner = coord.fresh_runner("cif10")?;
     let data = SynthDataset::new(42);
     let wvar = runner.weight_variances();
     let sb = StateBuilder::new(&runner.meta, &wvar);
     let protocol = Protocol::accuracy_guaranteed();
     let ep_cfg = EpisodeConfig { eval_batches: 1, ..EpisodeConfig::default() };
+    let rt = coord.runtime();
 
-    let mut agents = HiroAgent::new(&rt, HiroConfig::default(), 1)?;
+    let mut agents = HiroAgent::new(&*rt, HiroConfig::default(), 1)?;
     bench("hiro episode (cif10 channel, 1 eval batch)", 1, 4, || {
         run_episode(
-            &mut rt, &runner, &sb, &wvar, &mut agents, &protocol,
+            &mut *rt, &runner, &sb, &wvar, &mut agents, &protocol,
             Granularity::Channel, Mode::Quant, &data, &ep_cfg,
         )
         .unwrap()
     });
     bench("hiro episode (cif10 layer granularity)", 1, 4, || {
         run_episode(
-            &mut rt, &runner, &sb, &wvar, &mut agents, &protocol,
+            &mut *rt, &runner, &sb, &wvar, &mut agents, &protocol,
             Granularity::Layer, Mode::Quant, &data, &ep_cfg,
         )
         .unwrap()
@@ -45,7 +45,7 @@ fn main() -> anyhow::Result<()> {
     bcfg.warmup = 3;
     bcfg.eval_batches = 1;
     bench("flat-ddpg 3-episode search (cif10)", 0, 2, || {
-        run_baseline(&mut rt, &runner, &data, &bcfg).unwrap()
+        run_baseline(&mut *rt, &runner, &data, &bcfg).unwrap()
     });
 
     println!("\nper-executable stats:\n{}", rt.stats_report());

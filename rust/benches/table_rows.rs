@@ -2,18 +2,18 @@
 //! (search → best config → cost audit) cell per mode at reduced episode
 //! count, timing what `autoq repro table2/table3` pays per row.
 
+use autoq::coordinator::Coordinator;
 use autoq::cost::Mode;
 use autoq::data::synth::SynthDataset;
-use autoq::repro::common::runner_for;
-use autoq::runtime::Runtime;
 use autoq::search::{run_search, Granularity, Protocol, SearchConfig};
 use autoq::util::bench::bench;
 
 fn main() -> anyhow::Result<()> {
     println!("== table_rows bench (Table 2 quant / Table 3 binar cells) ==");
-    let mut rt = Runtime::open_default()?;
-    let runner = runner_for(&mut rt, "cif10")?;
+    let mut coord = Coordinator::open_default()?;
+    let runner = coord.fresh_runner("cif10")?;
     let data = SynthDataset::new(42);
+    let rt = coord.runtime();
     for mode in [Mode::Quant, Mode::Binar] {
         for gran in [Granularity::Network(5), Granularity::Layer, Granularity::Channel] {
             let mut cfg = SearchConfig::quick(mode, Protocol::accuracy_guaranteed(), gran);
@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
             cfg.warmup = 2;
             cfg.eval_batches = 1;
             let label = format!("cell cif10-{} {} (4 episodes)", gran.tag(), mode.as_str());
-            bench(&label, 0, 2, || run_search(&mut rt, &runner, &data, &cfg).unwrap());
+            bench(&label, 0, 2, || run_search(&mut *rt, &runner, &data, &cfg).unwrap());
         }
     }
     Ok(())

@@ -1,0 +1,505 @@
+//! Job specifications: the coordinator's unit of work.
+//!
+//! A [`JobSpec`] describes one run — pretrain / search / finetune / eval /
+//! sim — independent of the runtime that executes it, so the same spec can
+//! be run serially (`Coordinator::run`) or fanned out by the
+//! [`Sweep`](crate::coordinator::Sweep) scheduler.  Specs are constructed
+//! through the builder (`JobSpec::search("cif10").mode(..).episodes(..)…`)
+//! and validated once at `build()` time; a spec that builds always names a
+//! well-formed job.
+
+use std::path::PathBuf;
+
+use crate::cost::Mode;
+use crate::search::{Granularity, Protocol, ProtocolKind};
+use crate::util::json::Json;
+
+/// Deterministic parameter-init seed for a zoo model — the single home of
+/// the `0xA0_70 ^ len` rule that `cmd_pretrain` and `load_runner` used to
+/// duplicate.
+pub fn init_seed(model: &str) -> u64 {
+    0xA0_70_u64 ^ model.len() as u64
+}
+
+/// File-name-safe granularity token ("n5" | "l" | "c") used in job ids and
+/// sweep cell keys.
+pub fn granularity_token(g: Granularity) -> String {
+    match g {
+        Granularity::Network(b) => format!("n{b}"),
+        Granularity::Layer => "l".to_string(),
+        Granularity::Channel => "c".to_string(),
+    }
+}
+
+/// Search-job parameters (mirrors `SearchConfig` plus artifact plumbing).
+#[derive(Debug, Clone)]
+pub struct SearchParams {
+    pub mode: Mode,
+    pub protocol: Protocol,
+    pub granularity: Granularity,
+    pub episodes: usize,
+    pub warmup: usize,
+    pub eval_batches: usize,
+    pub relabel: bool,
+    pub paper_scale: bool,
+    /// Write the best searched config here (`quant::save_config` JSON).
+    pub out: Option<PathBuf>,
+}
+
+#[derive(Debug, Clone)]
+pub enum JobKind {
+    /// Train a zoo model from a seeded init; `persist` saves the params to
+    /// the artifact dir (throwaway drivers opt out to keep saved params).
+    Pretrain { steps: usize, data_seed: u64, persist: bool },
+    /// Hierarchical bit-width search for one (model, mode, protocol,
+    /// granularity) cell.
+    Search(SearchParams),
+    /// Fine-tune a searched config (fresh copy of the pre-trained params).
+    Finetune { config: PathBuf, steps: usize },
+    /// Evaluate fp32 (no config) or a searched config.
+    Eval { config: Option<PathBuf>, batches: usize },
+    /// FPGA simulator report for a config (uniform 5-bit if none given).
+    Sim { config: Option<PathBuf> },
+}
+
+impl JobKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobKind::Pretrain { .. } => "pretrain",
+            JobKind::Search(_) => "search",
+            JobKind::Finetune { .. } => "finetune",
+            JobKind::Eval { .. } => "eval",
+            JobKind::Sim { .. } => "sim",
+        }
+    }
+}
+
+/// A validated job. Construct through the `JobSpec::search(..)`-style
+/// builder entry points.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub model: String,
+    /// Agent seed for searches, param-init seed for pretraining.
+    pub seed: u64,
+    pub kind: JobKind,
+}
+
+impl JobSpec {
+    pub fn search(model: &str) -> JobBuilder {
+        JobBuilder::new(model, Tag::Search)
+    }
+    pub fn pretrain(model: &str) -> JobBuilder {
+        JobBuilder::new(model, Tag::Pretrain)
+    }
+    pub fn finetune(model: &str, config: impl Into<PathBuf>) -> JobBuilder {
+        let mut b = JobBuilder::new(model, Tag::Finetune);
+        b.config = Some(config.into());
+        b
+    }
+    pub fn eval(model: &str) -> JobBuilder {
+        JobBuilder::new(model, Tag::Eval)
+    }
+    pub fn sim(model: &str) -> JobBuilder {
+        JobBuilder::new(model, Tag::Sim)
+    }
+
+    /// Stable, file-name-safe identity (used for report files and logs).
+    pub fn id(&self) -> String {
+        match &self.kind {
+            JobKind::Pretrain { .. } => format!("pretrain_{}_s{}", self.model, self.seed),
+            JobKind::Search(p) => format!(
+                "search_{}_{}_{}_{}_s{}",
+                self.model,
+                p.mode.as_str(),
+                p.protocol.tag(),
+                granularity_token(p.granularity),
+                self.seed
+            ),
+            JobKind::Finetune { .. } => format!("finetune_{}_s{}", self.model, self.seed),
+            JobKind::Eval { config, .. } => format!(
+                "eval_{}_{}_s{}",
+                self.model,
+                if config.is_some() { "cfg" } else { "fp32" },
+                self.seed
+            ),
+            JobKind::Sim { .. } => format!("sim_{}_s{}", self.model, self.seed),
+        }
+    }
+
+    /// Seeds serialize as decimal strings: the JSON substrate stores numbers
+    /// as f64, which would silently round u64 seeds above 2^53.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("model", self.model.as_str().into()),
+            ("kind", self.kind.name().into()),
+            ("seed", self.seed.to_string().into()),
+        ];
+        match &self.kind {
+            JobKind::Pretrain { steps, data_seed, persist } => {
+                pairs.push(("steps", (*steps).into()));
+                pairs.push(("data_seed", data_seed.to_string().into()));
+                pairs.push(("persist", (*persist).into()));
+            }
+            JobKind::Search(p) => {
+                pairs.push(("mode", p.mode.as_str().into()));
+                pairs.push(("protocol", p.protocol.tag().into()));
+                pairs.push(("granularity", granularity_token(p.granularity).into()));
+                pairs.push(("episodes", p.episodes.into()));
+                pairs.push(("warmup", p.warmup.into()));
+                pairs.push(("eval_batches", p.eval_batches.into()));
+                pairs.push(("relabel", p.relabel.into()));
+                pairs.push(("paper_scale", p.paper_scale.into()));
+                if p.protocol.kind == ProtocolKind::ResourceConstrained {
+                    pairs.push(("target_bits", p.protocol.target_bits.into()));
+                }
+            }
+            JobKind::Finetune { config, steps } => {
+                pairs.push(("config", config.display().to_string().into()));
+                pairs.push(("steps", (*steps).into()));
+            }
+            JobKind::Eval { config, batches } => {
+                if let Some(c) = config {
+                    pairs.push(("config", c.display().to_string().into()));
+                }
+                pairs.push(("batches", (*batches).into()));
+            }
+            JobKind::Sim { config } => {
+                if let Some(c) = config {
+                    pairs.push(("config", c.display().to_string().into()));
+                }
+            }
+        }
+        Json::obj(pairs)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Tag {
+    Pretrain,
+    Search,
+    Finetune,
+    Eval,
+    Sim,
+}
+
+/// Builder for [`JobSpec`]; setters irrelevant to the job kind are ignored
+/// at `build()`.  Defaults mirror `SearchConfig::quick` and the historical
+/// CLI defaults.
+#[derive(Debug, Clone)]
+pub struct JobBuilder {
+    model: String,
+    tag: Tag,
+    mode: Mode,
+    protocol: Protocol,
+    granularity: Granularity,
+    episodes: usize,
+    warmup: usize,
+    eval_batches: usize,
+    seed: Option<u64>,
+    data_seed: u64,
+    steps: usize,
+    relabel: bool,
+    paper_scale: bool,
+    config: Option<PathBuf>,
+    batches: usize,
+    out: Option<PathBuf>,
+    persist: bool,
+    target_bits: Option<f64>,
+}
+
+impl JobBuilder {
+    fn new(model: &str, tag: Tag) -> JobBuilder {
+        JobBuilder {
+            model: model.to_string(),
+            tag,
+            mode: Mode::Quant,
+            protocol: Protocol::resource_constrained(5.0),
+            granularity: Granularity::Channel,
+            episodes: 40,
+            warmup: 10,
+            eval_batches: 2,
+            seed: None,
+            data_seed: 42,
+            steps: match tag {
+                Tag::Pretrain => 300,
+                Tag::Finetune => 200,
+                _ => 0,
+            },
+            relabel: true,
+            paper_scale: false,
+            config: None,
+            batches: 4,
+            out: None,
+            persist: true,
+            target_bits: None,
+        }
+    }
+
+    pub fn mode(mut self, mode: Mode) -> Self {
+        self.mode = mode;
+        self
+    }
+    pub fn protocol(mut self, protocol: Protocol) -> Self {
+        self.protocol = protocol;
+        self
+    }
+    pub fn granularity(mut self, granularity: Granularity) -> Self {
+        self.granularity = granularity;
+        self
+    }
+    pub fn episodes(mut self, episodes: usize) -> Self {
+        self.episodes = episodes;
+        self
+    }
+    pub fn warmup(mut self, warmup: usize) -> Self {
+        self.warmup = warmup;
+        self
+    }
+    pub fn eval_batches(mut self, eval_batches: usize) -> Self {
+        self.eval_batches = eval_batches;
+        self
+    }
+    /// Agent seed (search) / param-init seed (pretrain).  Defaults to 1 for
+    /// searches and `init_seed(model)` for pretraining.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+    /// Synthetic-dataset seed (pretrain jobs).
+    pub fn data_seed(mut self, data_seed: u64) -> Self {
+        self.data_seed = data_seed;
+        self
+    }
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.steps = steps;
+        self
+    }
+    pub fn relabel(mut self, relabel: bool) -> Self {
+        self.relabel = relabel;
+        self
+    }
+    pub fn paper_scale(mut self, paper_scale: bool) -> Self {
+        self.paper_scale = paper_scale;
+        self
+    }
+    /// B̄ for Algorithm 1 (resource-constrained protocol only).  Applied at
+    /// `build()`, so it composes with `.protocol(..)` in either order.
+    pub fn target_bits(mut self, target_bits: f64) -> Self {
+        self.target_bits = Some(target_bits);
+        self
+    }
+    pub fn config(mut self, config: impl Into<PathBuf>) -> Self {
+        self.config = Some(config.into());
+        self
+    }
+    pub fn batches(mut self, batches: usize) -> Self {
+        self.batches = batches;
+        self
+    }
+    pub fn out(mut self, out: impl Into<PathBuf>) -> Self {
+        self.out = Some(out.into());
+        self
+    }
+    /// Whether a pretrain job saves its params to the artifact dir
+    /// (default true; false keeps existing saved params untouched).
+    pub fn persist(mut self, persist: bool) -> Self {
+        self.persist = persist;
+        self
+    }
+
+    /// Validate and freeze into a [`JobSpec`].
+    pub fn build(self) -> anyhow::Result<JobSpec> {
+        anyhow::ensure!(!self.model.trim().is_empty(), "job needs a non-empty model name");
+        let kind = match self.tag {
+            Tag::Pretrain => {
+                anyhow::ensure!(self.steps > 0, "pretrain needs steps > 0");
+                JobKind::Pretrain {
+                    steps: self.steps,
+                    data_seed: self.data_seed,
+                    persist: self.persist,
+                }
+            }
+            Tag::Search => {
+                anyhow::ensure!(self.episodes > 0, "search needs episodes > 0");
+                anyhow::ensure!(
+                    self.warmup <= self.episodes,
+                    "warmup {} exceeds episodes {}",
+                    self.warmup,
+                    self.episodes
+                );
+                anyhow::ensure!(self.eval_batches > 0, "search needs eval_batches > 0");
+                if let Granularity::Network(b) = self.granularity {
+                    anyhow::ensure!(
+                        (1..=32).contains(&b),
+                        "network granularity bits must be in 1..=32, got {b}"
+                    );
+                }
+                let mut protocol = self.protocol;
+                if let Some(tb) = self.target_bits {
+                    protocol.target_bits = tb;
+                }
+                if protocol.kind == ProtocolKind::ResourceConstrained {
+                    anyhow::ensure!(
+                        protocol.target_bits > 0.0 && protocol.target_bits <= 32.0,
+                        "resource-constrained target_bits must be in (0, 32], got {}",
+                        protocol.target_bits
+                    );
+                }
+                JobKind::Search(SearchParams {
+                    mode: self.mode,
+                    protocol,
+                    granularity: self.granularity,
+                    episodes: self.episodes,
+                    warmup: self.warmup,
+                    eval_batches: self.eval_batches,
+                    relabel: self.relabel,
+                    paper_scale: self.paper_scale,
+                    out: self.out.clone(),
+                })
+            }
+            Tag::Finetune => {
+                let config = self
+                    .config
+                    .clone()
+                    .ok_or_else(|| anyhow::anyhow!("finetune needs a searched-config path"))?;
+                anyhow::ensure!(self.steps > 0, "finetune needs steps > 0");
+                JobKind::Finetune { config, steps: self.steps }
+            }
+            Tag::Eval => {
+                anyhow::ensure!(self.batches > 0, "eval needs batches > 0");
+                JobKind::Eval { config: self.config.clone(), batches: self.batches }
+            }
+            Tag::Sim => JobKind::Sim { config: self.config.clone() },
+        };
+        let seed = self.seed.unwrap_or(match self.tag {
+            Tag::Pretrain => init_seed(&self.model),
+            _ => 1,
+        });
+        Ok(JobSpec { model: self.model, seed, kind })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn search_builder_defaults_and_id() {
+        let spec = JobSpec::search("cif10")
+            .mode(Mode::Quant)
+            .protocol(Protocol::resource_constrained(5.0))
+            .granularity(Granularity::Channel)
+            .episodes(40)
+            .build()
+            .unwrap();
+        assert_eq!(spec.model, "cif10");
+        assert_eq!(spec.seed, 1);
+        assert_eq!(spec.id(), "search_cif10_quant_rc_c_s1");
+        let JobKind::Search(p) = &spec.kind else { panic!("wrong kind") };
+        assert_eq!(p.warmup, 10);
+        assert_eq!(p.eval_batches, 2);
+        assert!(p.relabel);
+    }
+
+    #[test]
+    fn empty_model_rejected() {
+        assert!(JobSpec::search("").episodes(10).build().is_err());
+        assert!(JobSpec::pretrain("  ").build().is_err());
+    }
+
+    #[test]
+    fn zero_episodes_rejected() {
+        assert!(JobSpec::search("cif10").episodes(0).build().is_err());
+    }
+
+    #[test]
+    fn warmup_beyond_episodes_rejected() {
+        assert!(JobSpec::search("cif10").episodes(5).warmup(6).build().is_err());
+        assert!(JobSpec::search("cif10").episodes(5).warmup(5).build().is_ok());
+    }
+
+    #[test]
+    fn bad_granularity_bits_rejected() {
+        assert!(JobSpec::search("cif10")
+            .granularity(Granularity::Network(0))
+            .build()
+            .is_err());
+        assert!(JobSpec::search("cif10")
+            .granularity(Granularity::Network(33))
+            .build()
+            .is_err());
+        assert!(JobSpec::search("cif10")
+            .granularity(Granularity::Network(5))
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn bad_rc_target_bits_rejected() {
+        assert!(JobSpec::search("cif10").target_bits(0.0).build().is_err());
+        assert!(JobSpec::search("cif10").target_bits(64.0).build().is_err());
+        // AG ignores target_bits, so the same value is fine there.
+        assert!(JobSpec::search("cif10")
+            .protocol(Protocol::accuracy_guaranteed())
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn target_bits_applies_regardless_of_setter_order() {
+        for spec in [
+            JobSpec::search("cif10")
+                .target_bits(4.0)
+                .protocol(Protocol::resource_constrained(5.0))
+                .build()
+                .unwrap(),
+            JobSpec::search("cif10")
+                .protocol(Protocol::resource_constrained(5.0))
+                .target_bits(4.0)
+                .build()
+                .unwrap(),
+        ] {
+            let JobKind::Search(p) = &spec.kind else { panic!("wrong kind") };
+            assert_eq!(p.protocol.target_bits, 4.0);
+        }
+    }
+
+    #[test]
+    fn finetune_and_eval_validation() {
+        assert!(JobSpec::finetune("cif10", "cfg.json").steps(0).build().is_err());
+        assert!(JobSpec::finetune("cif10", "cfg.json").build().is_ok());
+        assert!(JobSpec::eval("cif10").batches(0).build().is_err());
+        assert!(JobSpec::eval("cif10").build().is_ok());
+        assert!(JobSpec::pretrain("cif10").steps(0).build().is_err());
+    }
+
+    #[test]
+    fn pretrain_seed_defaults_to_init_seed() {
+        let spec = JobSpec::pretrain("cif10").build().unwrap();
+        assert_eq!(spec.seed, init_seed("cif10"));
+        let spec = JobSpec::pretrain("cif10").seed(7).build().unwrap();
+        assert_eq!(spec.seed, 7);
+    }
+
+    #[test]
+    fn spec_json_is_parseable_and_typed() {
+        let spec = JobSpec::search("cif10")
+            .granularity(Granularity::Network(5))
+            .seed(9)
+            .build()
+            .unwrap();
+        let j = crate::util::json::Json::parse(&spec.to_json().to_string()).unwrap();
+        assert_eq!(j.req("kind").unwrap().as_str(), Some("search"));
+        assert_eq!(j.req("granularity").unwrap().as_str(), Some("n5"));
+        assert_eq!(j.req("seed").unwrap().as_str(), Some("9"));
+        assert_eq!(j.req("target_bits").unwrap().as_f64(), Some(5.0));
+    }
+
+    #[test]
+    fn huge_seeds_survive_json_exactly() {
+        let spec = JobSpec::search("cif10").seed(u64::MAX - 1).build().unwrap();
+        let j = crate::util::json::Json::parse(&spec.to_json().to_string()).unwrap();
+        let back: u64 = j.req("seed").unwrap().as_str().unwrap().parse().unwrap();
+        assert_eq!(back, u64::MAX - 1);
+    }
+}

@@ -1,1 +1,264 @@
-// paper's L3 coordination contribution
+//! The paper's Layer-3 coordination contribution as a real subsystem: a
+//! job-oriented orchestration API over the runtime, model zoo, search,
+//! fine-tuning and simulators.
+//!
+//! - [`Coordinator`] owns the PJRT [`Runtime`], a cache of pre-trained
+//!   [`ModelRunner`]s (pre-training on first use) and the artifact-directory
+//!   layout — the plumbing every CLI subcommand used to hand-wire itself.
+//! - [`JobSpec`] is the builder-validated unit of work
+//!   (`JobSpec::search("cif10").mode(..).protocol(..).episodes(40).build()?`).
+//! - [`Observer`] streams structured per-episode progress events;
+//!   [`JobReport`] is the JSON-serializable result.
+//! - [`Sweep`] fans a grid of search jobs across worker threads with
+//!   deterministic per-cell seeds (`autoq sweep`).
+//!
+//! See DESIGN.md §Coordinator for the full API walkthrough.
+
+pub mod job;
+pub mod observer;
+pub mod report;
+pub mod sweep;
+
+pub use job::{granularity_token, init_seed, JobBuilder, JobKind, JobSpec, SearchParams};
+pub use observer::{LogObserver, NullObserver, Observer};
+pub use report::{JobOutcome, JobReport, SimCell};
+pub use sweep::{derive_seed, Sweep, SweepResult};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::cost::Mode;
+use crate::data::synth::{Split, SynthDataset};
+use crate::finetune::TrainConfig;
+use crate::models::{ModelRunner, ParamStore};
+use crate::runtime::{Manifest, Runtime};
+use crate::search::SearchConfig;
+use crate::sim::{Arch, FpgaSim};
+use crate::util::rng::Rng;
+
+/// Synthetic-dataset seed shared by search/eval/finetune jobs (the
+/// testbed's fixed validation data — see DESIGN.md §Substitutions).
+pub const DATA_SEED: u64 = 42;
+
+/// SGD steps for pretrain-on-first-use (explicit `pretrain` jobs choose
+/// their own step count).
+const AUTO_PRETRAIN_STEPS: usize = 300;
+
+/// The crate's front door: owns the runtime, the model-runner cache and the
+/// artifact layout, and executes [`JobSpec`]s into [`JobReport`]s.
+pub struct Coordinator {
+    rt: Runtime,
+    dir: PathBuf,
+    runners: HashMap<String, ModelRunner>,
+}
+
+impl Coordinator {
+    /// Default artifact dir: `$AUTOQ_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        Runtime::default_dir()
+    }
+
+    pub fn open(dir: &Path) -> anyhow::Result<Coordinator> {
+        Ok(Coordinator {
+            rt: Runtime::open(dir)?,
+            dir: dir.to_path_buf(),
+            runners: HashMap::new(),
+        })
+    }
+
+    pub fn open_default() -> anyhow::Result<Coordinator> {
+        Self::open(&Self::default_dir())
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.rt.manifest
+    }
+
+    /// Escape hatch for call sites that drive artifacts directly (repro
+    /// internals, benches).
+    pub fn runtime(&mut self) -> &mut Runtime {
+        &mut self.rt
+    }
+
+    /// Where a model's trained parameters persist inside an artifact dir.
+    pub fn params_path_in(dir: &Path, model: &str) -> PathBuf {
+        dir.join(format!("{model}_trained.apb"))
+    }
+
+    /// Where a model's trained parameters persist inside the artifact dir.
+    pub fn params_path(&self, model: &str) -> PathBuf {
+        Self::params_path_in(&self.dir, model)
+    }
+
+    /// Load `model` into the runner cache, pre-training and persisting the
+    /// params on first use (the logic formerly duplicated across
+    /// `cmd_pretrain`, `load_runner` and `repro::runner_for`).
+    pub fn ensure_pretrained(&mut self, model: &str) -> anyhow::Result<()> {
+        if self.runners.contains_key(model) {
+            return Ok(());
+        }
+        let meta = self.rt.manifest.model(model)?.clone();
+        let path = self.params_path(model);
+        let runner = if path.exists() {
+            ModelRunner::new(meta, ParamStore::load(&path)?)?
+        } else {
+            crate::info!("no trained params for {model}; pre-training now ({AUTO_PRETRAIN_STEPS} steps)");
+            let mut r = ModelRunner::init(meta, &mut Rng::new(init_seed(model)));
+            let data = SynthDataset::new(DATA_SEED);
+            let cfg = TrainConfig::pretrain_for(model, AUTO_PRETRAIN_STEPS);
+            let rep = crate::finetune::train(&mut self.rt, &mut r, &data, &cfg)?;
+            crate::info!("pretrained {model}: acc={:.4}", rep.final_eval.accuracy);
+            r.params.save(&path)?;
+            r
+        };
+        self.runners.insert(model.to_string(), runner);
+        Ok(())
+    }
+
+    /// Owned copy of the cached pre-trained runner (fresh zero momenta) —
+    /// for callers that mutate params, e.g. fine-tuning.
+    pub fn fresh_runner(&mut self, model: &str) -> anyhow::Result<ModelRunner> {
+        self.ensure_pretrained(model)?;
+        let cached = self.runners.get(model).expect("ensured above");
+        ModelRunner::new(cached.meta.clone(), cached.params.clone())
+    }
+
+    /// Run a job with default stderr logging.
+    pub fn run(&mut self, spec: &JobSpec) -> anyhow::Result<JobReport> {
+        let mut obs = LogObserver::default();
+        self.run_observed(spec, &mut obs)
+    }
+
+    /// Run a job, streaming progress into `obs`.
+    pub fn run_observed(
+        &mut self,
+        spec: &JobSpec,
+        obs: &mut dyn Observer,
+    ) -> anyhow::Result<JobReport> {
+        let t0 = Instant::now();
+        obs.job_started(spec);
+        let outcome = match &spec.kind {
+            JobKind::Pretrain { steps, data_seed, persist } => {
+                let meta = self.rt.manifest.model(&spec.model)?.clone();
+                let mut runner = ModelRunner::init(meta, &mut Rng::new(spec.seed));
+                let data = SynthDataset::new(*data_seed);
+                let cfg = TrainConfig::pretrain_for(&spec.model, *steps);
+                let rep = crate::finetune::train(&mut self.rt, &mut runner, &data, &cfg)?;
+                if *persist {
+                    let path = self.params_path(&spec.model);
+                    runner.params.save(&path)?;
+                    obs.message(spec, &format!("saved {}", path.display()));
+                }
+                self.runners.insert(spec.model.clone(), runner);
+                JobOutcome::Train { before: None, final_eval: rep.final_eval, curve: rep.curve }
+            }
+            JobKind::Search(p) => {
+                self.ensure_pretrained(&spec.model)?;
+                let runner = self.runners.get(&spec.model).expect("ensured above");
+                let data = SynthDataset::new(DATA_SEED);
+                let mut cfg = SearchConfig::quick(p.mode, p.protocol, p.granularity);
+                cfg.episodes = p.episodes;
+                cfg.warmup = p.warmup;
+                cfg.eval_batches = p.eval_batches;
+                cfg.seed = spec.seed;
+                cfg.relabel = p.relabel;
+                if p.paper_scale {
+                    cfg = cfg.paper_scale();
+                }
+                let res = crate::search::run_search_with(
+                    &mut self.rt,
+                    runner,
+                    &data,
+                    &cfg,
+                    &mut |st, episodes, new_best| obs.episode_done(spec, st, episodes, new_best),
+                )?;
+                if let Some(out) = &p.out {
+                    crate::quant::save_config(out, &spec.model, p.mode, &res.best)?;
+                    obs.message(spec, &format!("wrote {}", out.display()));
+                }
+                JobOutcome::Search { best: res.best, history: res.history }
+            }
+            JobKind::Finetune { config, steps } => {
+                let saved = crate::quant::load_config(config)?;
+                if saved.model != spec.model {
+                    crate::warn_!(
+                        "config {} was searched on {:?}, fine-tuning {:?}",
+                        config.display(),
+                        saved.model,
+                        spec.model
+                    );
+                }
+                let mut runner = self.fresh_runner(&spec.model)?;
+                let data = SynthDataset::new(DATA_SEED);
+                let before = runner.eval_config(
+                    &mut self.rt,
+                    saved.mode,
+                    &saved.wbits,
+                    &saved.abits,
+                    &data,
+                    Split::Val,
+                    2,
+                )?;
+                let tc = TrainConfig::finetune(saved.mode, saved.wbits, saved.abits, *steps);
+                let rep = crate::finetune::train(&mut self.rt, &mut runner, &data, &tc)?;
+                JobOutcome::Train {
+                    before: Some(before),
+                    final_eval: rep.final_eval,
+                    curve: rep.curve,
+                }
+            }
+            JobKind::Eval { config, batches } => {
+                self.ensure_pretrained(&spec.model)?;
+                let runner = self.runners.get(&spec.model).expect("ensured above");
+                let data = SynthDataset::new(DATA_SEED);
+                let res = match config {
+                    None => runner.eval_fp32(&mut self.rt, &data, Split::Val, *batches)?,
+                    Some(path) => {
+                        let saved = crate::quant::load_config(path)?;
+                        runner.eval_config(
+                            &mut self.rt,
+                            saved.mode,
+                            &saved.wbits,
+                            &saved.abits,
+                            &data,
+                            Split::Val,
+                            *batches,
+                        )?
+                    }
+                };
+                JobOutcome::Eval(res)
+            }
+            JobKind::Sim { config } => {
+                let meta = self.rt.manifest.model(&spec.model)?.clone();
+                let (mode, wbits, abits) = match config {
+                    None => (Mode::Quant, vec![5u8; meta.w_channels], vec![5u8; meta.a_channels]),
+                    Some(path) => {
+                        let saved = crate::quant::load_config(path)?;
+                        (saved.mode, saved.wbits, saved.abits)
+                    }
+                };
+                let rows = [Arch::Temporal, Arch::Spatial]
+                    .iter()
+                    .map(|&arch| {
+                        let r = FpgaSim::new(arch, mode).run(&meta.layers, &wbits, &abits);
+                        SimCell {
+                            arch: arch.as_str().to_string(),
+                            fps: r.fps,
+                            energy_mj: r.energy_j * 1e3,
+                            utilization: r.utilization,
+                        }
+                    })
+                    .collect();
+                JobOutcome::Sim(rows)
+            }
+        };
+        let report = JobReport { spec: spec.clone(), secs: t0.elapsed().as_secs_f64(), outcome };
+        obs.job_finished(spec, &report);
+        Ok(report)
+    }
+}

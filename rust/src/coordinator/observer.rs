@@ -1,0 +1,111 @@
+//! Progress observation: structured per-episode events instead of the
+//! ad-hoc `info!`/`println!` calls that used to live inside the search
+//! runner.  Implement [`Observer`] to stream progress into a UI, a log
+//! aggregator or a test harness; [`LogObserver`] reproduces the historical
+//! stderr logging, [`NullObserver`] drops everything.
+
+use crate::coordinator::job::JobSpec;
+use crate::coordinator::report::JobReport;
+use crate::search::EpisodeStats;
+
+/// Receives coordinator job lifecycle + per-episode progress events.  All
+/// methods default to no-ops so implementors subscribe only to what they
+/// need.
+pub trait Observer {
+    fn job_started(&mut self, _job: &JobSpec) {}
+    /// One search episode finished.  `episodes` is the planned total;
+    /// `new_best` marks episodes that improved the best reward so far.
+    fn episode_done(
+        &mut self,
+        _job: &JobSpec,
+        _stats: &EpisodeStats,
+        _episodes: usize,
+        _new_best: bool,
+    ) {
+    }
+    /// Free-form progress note (artifact written, cache hit, …).
+    fn message(&mut self, _job: &JobSpec, _text: &str) {}
+    fn job_finished(&mut self, _job: &JobSpec, _report: &JobReport) {}
+}
+
+/// Discards every event.
+pub struct NullObserver;
+
+impl Observer for NullObserver {}
+
+/// Logs events through the crate logger (stderr), tagged with the job id —
+/// the default observer for `Coordinator::run` and sweep workers.
+#[derive(Debug, Clone)]
+pub struct LogObserver {
+    /// Log every n-th episode at info level (new bests always log at debug).
+    pub every: usize,
+}
+
+impl Default for LogObserver {
+    fn default() -> Self {
+        LogObserver { every: 10 }
+    }
+}
+
+impl Observer for LogObserver {
+    fn job_started(&mut self, job: &JobSpec) {
+        crate::info!("[{}] started", job.id());
+    }
+
+    fn episode_done(&mut self, job: &JobSpec, stats: &EpisodeStats, episodes: usize, new_best: bool) {
+        crate::search::log_episode_progress(&job.id(), self.every, stats, episodes, new_best);
+    }
+
+    fn message(&mut self, job: &JobSpec, text: &str) {
+        crate::info!("[{}] {text}", job.id());
+    }
+
+    fn job_finished(&mut self, job: &JobSpec, report: &JobReport) {
+        crate::info!("[{}] finished in {:.1}s", job.id(), report.secs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Records event order — also proves the trait is object-safe and
+    /// implementable outside the crate's defaults.
+    #[derive(Default)]
+    struct Recorder {
+        events: Vec<String>,
+    }
+
+    impl Observer for Recorder {
+        fn job_started(&mut self, job: &JobSpec) {
+            self.events.push(format!("start:{}", job.id()));
+        }
+        fn message(&mut self, _job: &JobSpec, text: &str) {
+            self.events.push(format!("msg:{text}"));
+        }
+    }
+
+    #[test]
+    fn custom_observer_receives_events() {
+        let spec = JobSpec::eval("cif10").build().unwrap();
+        let mut rec = Recorder::default();
+        let obs: &mut dyn Observer = &mut rec;
+        obs.job_started(&spec);
+        obs.message(&spec, "hello");
+        // Default no-op methods must not panic.
+        obs.episode_done(
+            &spec,
+            &EpisodeStats {
+                episode: 0,
+                accuracy: 0.5,
+                reward: 0.1,
+                avg_wbits: 5.0,
+                avg_abits: 5.0,
+                norm_logic: 0.2,
+            },
+            1,
+            true,
+        );
+        assert_eq!(rec.events, vec!["start:eval_cif10_fp32_s1".to_string(), "msg:hello".into()]);
+    }
+}

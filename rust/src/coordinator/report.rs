@@ -1,0 +1,193 @@
+//! Structured job results: one [`JobReport`] type unifying what used to be
+//! four ad-hoc shapes (`SearchResult`, `TrainReport`, `EvalResult` and the
+//! printed sim table), JSON-serializable through the crate's own `Json`
+//! substrate so sweeps can emit one machine-readable file per cell.
+
+use std::path::Path;
+
+use crate::coordinator::job::JobSpec;
+use crate::models::EvalResult;
+use crate::search::{EpisodeOutcome, EpisodeStats};
+use crate::util::json::Json;
+
+/// One simulated accelerator row (per `sim::Arch`).
+#[derive(Debug, Clone)]
+pub struct SimCell {
+    pub arch: String,
+    pub fps: f64,
+    pub energy_mj: f64,
+    pub utilization: f64,
+}
+
+/// Kind-specific payload of a finished job.
+#[derive(Debug, Clone)]
+pub enum JobOutcome {
+    Search { best: EpisodeOutcome, history: Vec<EpisodeStats> },
+    /// Pretrain and finetune; `before` is the pre-finetune eval when the
+    /// job fine-tuned an existing config.
+    Train { before: Option<EvalResult>, final_eval: EvalResult, curve: Vec<(usize, f32)> },
+    Eval(EvalResult),
+    Sim(Vec<SimCell>),
+}
+
+/// A finished job: the spec that ran, wall-clock, and its outcome.
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    pub spec: JobSpec,
+    pub secs: f64,
+    pub outcome: JobOutcome,
+}
+
+impl JobReport {
+    pub fn id(&self) -> String {
+        self.spec.id()
+    }
+
+    /// Serialize as `{id, secs, spec: {...}, <kind>: {...}}`.
+    pub fn to_json(&self) -> Json {
+        let outcome = match &self.outcome {
+            JobOutcome::Search { best, history } => Json::obj(vec![
+                ("accuracy", best.accuracy.into()),
+                ("loss", best.loss.into()),
+                ("reward", best.reward.into()),
+                ("score", best.score.into()),
+                ("norm_logic", best.cost.norm_logic().into()),
+                ("avg_wbits", best.avg_wbits.into()),
+                ("avg_abits", best.avg_abits.into()),
+                (
+                    "wbits",
+                    Json::Arr(best.wbits.iter().map(|&b| Json::Num(b as f64)).collect()),
+                ),
+                (
+                    "abits",
+                    Json::Arr(best.abits.iter().map(|&b| Json::Num(b as f64)).collect()),
+                ),
+                (
+                    "history",
+                    Json::Arr(
+                        history
+                            .iter()
+                            .map(|st| {
+                                Json::obj(vec![
+                                    ("episode", st.episode.into()),
+                                    ("accuracy", st.accuracy.into()),
+                                    ("reward", st.reward.into()),
+                                    ("avg_wbits", st.avg_wbits.into()),
+                                    ("avg_abits", st.avg_abits.into()),
+                                    ("norm_logic", st.norm_logic.into()),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            JobOutcome::Train { before, final_eval, curve } => {
+                let mut pairs: Vec<(&str, Json)> = vec![
+                    ("accuracy", final_eval.accuracy.into()),
+                    ("loss", final_eval.loss.into()),
+                    ("images", final_eval.images.into()),
+                    (
+                        "curve",
+                        Json::Arr(
+                            curve
+                                .iter()
+                                .map(|&(s, l)| {
+                                    Json::Arr(vec![Json::Num(s as f64), Json::Num(l as f64)])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ];
+                if let Some(b) = before {
+                    pairs.push(("accuracy_before", b.accuracy.into()));
+                }
+                Json::obj(pairs)
+            }
+            JobOutcome::Eval(e) => Json::obj(vec![
+                ("accuracy", e.accuracy.into()),
+                ("loss", e.loss.into()),
+                ("images", e.images.into()),
+            ]),
+            JobOutcome::Sim(rows) => Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("arch", r.arch.as_str().into()),
+                            ("fps", r.fps.into()),
+                            ("energy_mj", r.energy_mj.into()),
+                            ("utilization", r.utilization.into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        };
+        Json::obj(vec![
+            ("id", self.id().into()),
+            ("secs", self.secs.into()),
+            ("spec", self.spec.to_json()),
+            (self.spec.kind.name(), outcome),
+        ])
+    }
+
+    /// Write the JSON form to `path`.
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::logic::model_cost;
+    use crate::search::LayerBits;
+
+    #[test]
+    fn eval_report_serializes() {
+        let report = JobReport {
+            spec: JobSpec::eval("cif10").batches(2).build().unwrap(),
+            secs: 1.25,
+            outcome: JobOutcome::Eval(EvalResult { accuracy: 0.9, loss: 0.4, images: 512 }),
+        };
+        let j = Json::parse(&report.to_json().to_string()).unwrap();
+        assert_eq!(j.req("id").unwrap().as_str(), Some("eval_cif10_fp32_s1"));
+        let e = j.req("eval").unwrap();
+        assert_eq!(e.req("images").unwrap().as_usize(), Some(512));
+        assert!((e.req("accuracy").unwrap().as_f64().unwrap() - 0.9).abs() < 1e-12);
+        assert_eq!(j.req("spec").unwrap().req("kind").unwrap().as_str(), Some("eval"));
+    }
+
+    #[test]
+    fn search_report_serializes_config_and_history() {
+        let best = EpisodeOutcome {
+            wbits: vec![4, 5],
+            abits: vec![3],
+            accuracy: 0.8,
+            loss: 0.5,
+            cost: model_cost(&[], &[], &[]),
+            reward: 0.7,
+            score: 12.0,
+            per_layer: vec![LayerBits { name: "l01_conv".into(), avg_w: 4.5, avg_a: 3.0 }],
+            avg_wbits: 4.5,
+            avg_abits: 3.0,
+        };
+        let history = vec![EpisodeStats {
+            episode: 0,
+            accuracy: 0.8,
+            reward: 0.7,
+            avg_wbits: 4.5,
+            avg_abits: 3.0,
+            norm_logic: 0.1,
+        }];
+        let report = JobReport {
+            spec: JobSpec::search("cif10").episodes(1).warmup(0).seed(3).build().unwrap(),
+            secs: 2.0,
+            outcome: JobOutcome::Search { best, history },
+        };
+        let j = Json::parse(&report.to_json().to_string()).unwrap();
+        let s = j.req("search").unwrap();
+        assert_eq!(s.req("wbits").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(s.req("history").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(j.req("spec").unwrap().req("seed").unwrap().as_str(), Some("3"));
+    }
+}

@@ -1,0 +1,311 @@
+//! Sweep scheduler: fan a grid of search jobs (models × modes × protocols ×
+//! granularities) across worker threads.
+//!
+//! Each worker owns its own `Coordinator` (and therefore its own PJRT
+//! runtime — executables are not shared across threads); jobs are pulled
+//! from a shared atomic cursor.  Per-job seeds are derived deterministically
+//! from the base seed and the cell coordinates, so any sweep cell can be
+//! reproduced bit-for-bit with a serial `autoq search --seed <job seed>`
+//! invocation.  Model pre-training happens once, serially, before workers
+//! spawn — workers only ever read the persisted params.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::coordinator::job::{granularity_token, JobSpec};
+use crate::coordinator::observer::LogObserver;
+use crate::coordinator::report::JobReport;
+use crate::coordinator::Coordinator;
+use crate::cost::Mode;
+use crate::search::{Granularity, Protocol, ProtocolKind};
+
+/// Cell-key token for a protocol: unlike `Protocol::tag`, distinguishes
+/// resource-constrained protocols by their bit budget so rc@4 and rc@5
+/// cells get distinct seeds and report files.
+fn protocol_cell_token(p: &Protocol) -> String {
+    match p.kind {
+        ProtocolKind::ResourceConstrained => format!("rc-b{}", p.target_bits),
+        _ => p.tag().to_string(),
+    }
+}
+
+/// Deterministic per-cell seed: FNV-1a of the cell key mixed with the base
+/// seed, masked to 48 bits so seeds survive a JSON f64 round-trip exactly.
+pub fn derive_seed(base: u64, cell: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in cell.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h ^ base) & 0xFFFF_FFFF_FFFF
+}
+
+/// A grid of search jobs plus shared schedule knobs.
+#[derive(Debug, Clone)]
+pub struct Sweep {
+    pub models: Vec<String>,
+    pub modes: Vec<Mode>,
+    pub protocols: Vec<Protocol>,
+    pub granularities: Vec<Granularity>,
+    pub episodes: usize,
+    pub warmup: usize,
+    pub eval_batches: usize,
+    pub base_seed: u64,
+    pub relabel: bool,
+    pub paper_scale: bool,
+    /// Worker threads; clamped to [1, #jobs] at run time.
+    pub workers: usize,
+    /// Where per-cell `JobReport` JSONs land (default `reports/sweep`).
+    pub out_dir: Option<PathBuf>,
+}
+
+impl Default for Sweep {
+    fn default() -> Sweep {
+        Sweep {
+            models: vec!["cif10".to_string()],
+            modes: vec![Mode::Quant],
+            protocols: vec![Protocol::resource_constrained(5.0)],
+            granularities: vec![Granularity::Channel],
+            episodes: 40,
+            warmup: 10,
+            eval_batches: 2,
+            base_seed: 1,
+            relabel: true,
+            paper_scale: false,
+            workers: 2,
+            out_dir: None,
+        }
+    }
+}
+
+/// Everything a finished sweep produced, reports in grid order.
+#[derive(Debug)]
+pub struct SweepResult {
+    pub reports: Vec<JobReport>,
+    /// (job id, error) for cells that failed.
+    pub failures: Vec<(String, String)>,
+    pub secs: f64,
+}
+
+impl Sweep {
+    pub fn cells(&self) -> usize {
+        self.models.len() * self.modes.len() * self.protocols.len() * self.granularities.len()
+    }
+
+    /// Expand the grid into validated job specs with derived seeds.
+    pub fn jobs(&self) -> anyhow::Result<Vec<JobSpec>> {
+        anyhow::ensure!(!self.models.is_empty(), "sweep needs at least one model");
+        anyhow::ensure!(!self.modes.is_empty(), "sweep needs at least one mode");
+        anyhow::ensure!(!self.protocols.is_empty(), "sweep needs at least one protocol");
+        anyhow::ensure!(!self.granularities.is_empty(), "sweep needs at least one granularity");
+        let mut jobs = Vec::with_capacity(self.cells());
+        let mut seen = BTreeSet::new();
+        for model in &self.models {
+            for &mode in &self.modes {
+                for &protocol in &self.protocols {
+                    for &granularity in &self.granularities {
+                        let cell = format!(
+                            "{model}/{}/{}/{}",
+                            mode.as_str(),
+                            protocol_cell_token(&protocol),
+                            granularity_token(granularity)
+                        );
+                        // Duplicate grid entries would rerun the same job and
+                        // overwrite the same report — keep the first.
+                        if !seen.insert(cell.clone()) {
+                            crate::warn_!("sweep: duplicate cell {cell} skipped");
+                            continue;
+                        }
+                        let spec = JobSpec::search(model)
+                            .mode(mode)
+                            .protocol(protocol)
+                            .granularity(granularity)
+                            .episodes(self.episodes)
+                            .warmup(self.warmup)
+                            .eval_batches(self.eval_batches)
+                            .relabel(self.relabel)
+                            .paper_scale(self.paper_scale)
+                            .seed(derive_seed(self.base_seed, &cell))
+                            .build()?;
+                        jobs.push(spec);
+                    }
+                }
+            }
+        }
+        Ok(jobs)
+    }
+
+    /// Run the whole grid against the artifact directory `dir`, writing one
+    /// JSON report per cell.  Failed cells are collected, not fatal.
+    pub fn run(&self, dir: &Path) -> anyhow::Result<SweepResult> {
+        let t0 = Instant::now();
+        let jobs = self.jobs()?;
+
+        // Fail on an unwritable report dir before burning hours of search.
+        let out_dir = self
+            .out_dir
+            .clone()
+            .unwrap_or_else(|| PathBuf::from("reports").join("sweep"));
+        std::fs::create_dir_all(&out_dir)?;
+
+        // Pre-warm trained params serially so workers never race a pretrain.
+        // Only worth opening a runtime when some model's params are missing.
+        let models: BTreeSet<&str> = jobs.iter().map(|j| j.model.as_str()).collect();
+        let missing: Vec<&str> = models
+            .into_iter()
+            .filter(|m| !Coordinator::params_path_in(dir, m).exists())
+            .collect();
+        if !missing.is_empty() {
+            let mut coord = Coordinator::open(dir)?;
+            for model in missing {
+                coord.ensure_pretrained(model)?;
+            }
+        }
+
+        let workers = self.workers.max(1).min(jobs.len());
+        crate::info!("sweep: {} jobs on {} worker(s)", jobs.len(), workers);
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, Result<JobReport, String>)>();
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                let next = &next;
+                let jobs = &jobs;
+                s.spawn(move || {
+                    let mut coord = match Coordinator::open(dir) {
+                        Ok(c) => c,
+                        Err(e) => {
+                            // Don't claim queue slots: healthy workers drain
+                            // the whole queue, and if every worker fails the
+                            // unclaimed slots surface as "never scheduled".
+                            crate::warn_!("sweep worker failed to open runtime: {e:#}");
+                            return;
+                        }
+                    };
+                    loop {
+                        let i = next.fetch_add(1, Ordering::SeqCst);
+                        if i >= jobs.len() {
+                            break;
+                        }
+                        let mut obs = LogObserver::default();
+                        let res = coord
+                            .run_observed(&jobs[i], &mut obs)
+                            .map_err(|e| format!("{e:#}"));
+                        if tx.send((i, res)).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+        drop(tx);
+
+        let mut slots: Vec<Option<Result<JobReport, String>>> =
+            (0..jobs.len()).map(|_| None).collect();
+        for (i, res) in rx {
+            slots[i] = Some(res);
+        }
+
+        let mut reports = Vec::new();
+        let mut failures = Vec::new();
+        for (i, slot) in slots.into_iter().enumerate() {
+            match slot {
+                Some(Ok(report)) => {
+                    let path = out_dir.join(format!("{}.json", report.id()));
+                    match report.save(&path) {
+                        Ok(()) => crate::info!("wrote {}", path.display()),
+                        // Keep the in-memory result; record the broken write.
+                        Err(e) => failures
+                            .push((report.id(), format!("report write failed: {e:#}"))),
+                    }
+                    reports.push(report);
+                }
+                Some(Err(e)) => failures.push((jobs[i].id(), e)),
+                None => failures.push((
+                    jobs[i].id(),
+                    "job was never scheduled (all workers failed to start — see warnings)"
+                        .to_string(),
+                )),
+            }
+        }
+        Ok(SweepResult { reports, failures, secs: t0.elapsed().as_secs_f64() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::JobKind;
+
+    fn grid() -> Sweep {
+        Sweep {
+            protocols: vec![Protocol::resource_constrained(5.0), Protocol::accuracy_guaranteed()],
+            granularities: vec![Granularity::Layer, Granularity::Channel],
+            ..Sweep::default()
+        }
+    }
+
+    #[test]
+    fn grid_expands_with_unique_deterministic_seeds() {
+        let sw = grid();
+        let jobs = sw.jobs().unwrap();
+        assert_eq!(jobs.len(), 4);
+        assert_eq!(jobs.len(), sw.cells());
+        let ids: BTreeSet<String> = jobs.iter().map(|j| j.id()).collect();
+        assert_eq!(ids.len(), 4, "ids must be unique");
+        let seeds: BTreeSet<u64> = jobs.iter().map(|j| j.seed).collect();
+        assert_eq!(seeds.len(), 4, "per-cell seeds must differ");
+        // Deterministic: a second expansion is identical.
+        let again = sw.jobs().unwrap();
+        for (a, b) in jobs.iter().zip(&again) {
+            assert_eq!(a.id(), b.id());
+            assert_eq!(a.seed, b.seed);
+        }
+        // Every cell is a search job over the configured schedule.
+        for j in &jobs {
+            let JobKind::Search(p) = &j.kind else { panic!("non-search job in sweep") };
+            assert_eq!(p.episodes, sw.episodes);
+        }
+    }
+
+    #[test]
+    fn derived_seeds_are_json_safe_and_base_sensitive() {
+        let a = derive_seed(1, "cif10/quant/rc/c");
+        let b = derive_seed(2, "cif10/quant/rc/c");
+        let c = derive_seed(1, "cif10/quant/rc/l");
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, derive_seed(1, "cif10/quant/rc/c"));
+        for s in [a, b, c] {
+            assert!(s < (1u64 << 53), "seed {s} would lose precision in JSON");
+        }
+    }
+
+    #[test]
+    fn rc_budgets_get_distinct_cells_and_duplicates_collapse() {
+        let sw = Sweep {
+            protocols: vec![
+                Protocol::resource_constrained(4.0),
+                Protocol::resource_constrained(5.0),
+                Protocol::resource_constrained(4.0), // exact duplicate
+            ],
+            ..Sweep::default()
+        };
+        let jobs = sw.jobs().unwrap();
+        assert_eq!(jobs.len(), 2, "duplicate rc@4 cell must collapse");
+        assert_ne!(jobs[0].seed, jobs[1].seed, "rc@4 and rc@5 must get distinct seeds");
+    }
+
+    #[test]
+    fn empty_dimensions_rejected() {
+        let mut sw = grid();
+        sw.models.clear();
+        assert!(sw.jobs().is_err());
+        let mut sw = grid();
+        sw.granularities.clear();
+        assert!(sw.jobs().is_err());
+    }
+}

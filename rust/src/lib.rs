@@ -13,6 +13,7 @@ pub mod env;
 pub mod finetune;
 pub mod search;
 pub mod baselines;
+pub mod coordinator;
 pub mod cost;
 pub mod data;
 pub mod models;

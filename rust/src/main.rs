@@ -1,8 +1,13 @@
-//! AutoQ leader binary: CLI over the coordinator library.
+//! AutoQ leader binary: a thin argument-parsing shell over the coordinator
+//! job API (`autoq::coordinator`).  Every subcommand builds a validated
+//! `JobSpec`, hands it to the `Coordinator`, and prints from the returned
+//! `JobReport` — no runtime/model plumbing lives here.
 //!
 //! Subcommands:
 //!   pretrain   — train a zoo model (fp32) on the synthetic dataset
 //!   search     — hierarchical channel/layer/network bit-width search
+//!   sweep      — fan a models × modes × protocols × granularities grid of
+//!                searches across worker threads (one JSON report per cell)
 //!   finetune   — fine-tune a searched bit configuration
 //!   eval       — evaluate a model / bit config
 //!   sim        — run a searched config through the FPGA simulators
@@ -13,13 +18,10 @@
 
 use std::path::PathBuf;
 
+use autoq::coordinator::{Coordinator, JobOutcome, JobSpec, Sweep};
 use autoq::cost::Mode;
-use autoq::data::synth::SynthDataset;
-use autoq::models::{ModelRunner, ParamStore};
-use autoq::runtime::Runtime;
-use autoq::search::{Granularity, Protocol, SearchConfig};
+use autoq::search::{Granularity, Protocol, ProtocolKind};
 use autoq::util::cli::Args;
-use autoq::util::rng::Rng;
 
 fn main() {
     autoq::util::logging::init();
@@ -40,6 +42,7 @@ fn run(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
     match cmd {
         "pretrain" => cmd_pretrain(rest),
         "search" => cmd_search(rest),
+        "sweep" => cmd_sweep(rest),
         "finetune" => cmd_finetune(rest),
         "eval" => cmd_eval(rest),
         "sim" => cmd_sim(rest),
@@ -59,33 +62,24 @@ commands:
   pretrain --model M --steps N            pre-train a zoo model
   search   --model M --mode quant|binar --protocol rc|ag|fr \\
            --granularity n|l|c --episodes N   run a search
+  sweep    --models M1,M2 --modes quant,binar --protocols rc,ag \\
+           --granularities l,c --workers K    parallel search grid via the
+                                              Coordinator (one JSON JobReport
+                                              per cell, deterministic seeds)
   finetune --model M --config FILE --steps N  fine-tune a searched config
   eval     --model M [--config FILE]          evaluate fp32 or a config
   sim      --model M --config FILE            FPGA simulator report
   repro    <fig1|table2|table3|table4|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|storage|all>
-  stats                                        runtime executable stats";
+  stats                                        runtime executable stats
 
-fn params_path(model: &str) -> PathBuf {
-    PathBuf::from(format!("artifacts/{model}_trained.apb"))
-}
+The coordinator job API behind these commands is documented in DESIGN.md.";
 
-/// Load a pre-trained runner (pretraining first if missing).
-pub fn load_runner(rt: &mut Runtime, model: &str, auto_pretrain: bool) -> anyhow::Result<ModelRunner> {
-    let meta = rt.manifest.model(model)?.clone();
-    let path = params_path(model);
-    if path.exists() {
-        let params = ParamStore::load(&path)?;
-        return ModelRunner::new(meta, params);
-    }
-    anyhow::ensure!(auto_pretrain, "{} not found — run `autoq pretrain --model {model}`", path.display());
-    autoq::info!("no trained params for {model}; pre-training now");
-    let mut runner = ModelRunner::init(meta, &mut Rng::new(0xA0_70_u64 ^ model.len() as u64));
-    let data = SynthDataset::new(42);
-    let cfg = autoq::finetune::TrainConfig::pretrain_for(model, 300);
-    let rep = autoq::finetune::train(rt, &mut runner, &data, &cfg)?;
-    autoq::info!("pretrained {model}: acc={:.4}", rep.final_eval.accuracy);
-    runner.params.save(&path)?;
-    Ok(runner)
+fn parse_list<T>(s: &str, f: impl Fn(&str) -> anyhow::Result<T>) -> anyhow::Result<Vec<T>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(f)
+        .collect()
 }
 
 fn cmd_pretrain(rest: &[String]) -> anyhow::Result<()> {
@@ -95,16 +89,18 @@ fn cmd_pretrain(rest: &[String]) -> anyhow::Result<()> {
         .opt("seed", "42", "dataset seed")
         .parse(rest)?;
     let model = a.get("model");
-    let mut rt = Runtime::open_default()?;
-    let meta = rt.manifest.model(&model)?.clone();
-    let mut runner = ModelRunner::init(meta, &mut Rng::new(0xA0_70_u64 ^ model.len() as u64));
-    let data = SynthDataset::new(a.get_u64("seed")?);
-    let cfg = autoq::finetune::TrainConfig::pretrain_for(&model, a.get_usize("steps")?);
-    let rep = autoq::finetune::train(&mut rt, &mut runner, &data, &cfg)?;
-    println!("pretrain {model}: final loss curve tail {:?}", rep.curve.last());
-    println!("val accuracy: {:.4} ({} images)", rep.final_eval.accuracy, rep.final_eval.images);
-    runner.params.save(&params_path(&model))?;
-    println!("saved {}", params_path(&model).display());
+    let spec = JobSpec::pretrain(&model)
+        .steps(a.get_usize("steps")?)
+        .data_seed(a.get_u64("seed")?)
+        .build()?;
+    let mut coord = Coordinator::open_default()?;
+    let report = coord.run(&spec)?;
+    let JobOutcome::Train { final_eval, curve, .. } = &report.outcome else {
+        anyhow::bail!("pretrain job returned an unexpected report kind");
+    };
+    println!("pretrain {model}: final loss curve tail {:?}", curve.last());
+    println!("val accuracy: {:.4} ({} images)", final_eval.accuracy, final_eval.images);
+    println!("saved {}", coord.params_path(&model).display());
     Ok(())
 }
 
@@ -124,34 +120,109 @@ fn cmd_search(rest: &[String]) -> anyhow::Result<()> {
         .flag("no-relabel", "disable HIRO goal relabeling (ablation)")
         .parse(rest)?;
     let model = a.get("model");
-    let mut rt = Runtime::open_default()?;
-    let runner = load_runner(&mut rt, &model, true)?;
-    let data = SynthDataset::new(42);
-    let mode = Mode::parse(&a.get("mode"))?;
     let mut protocol = Protocol::parse(&a.get("protocol"))?;
     protocol.target_bits = a.get_f64("target-bits")?;
-    let gran = Granularity::parse(&a.get("granularity"))?;
-    let mut cfg = SearchConfig::quick(mode, protocol, gran);
-    cfg.episodes = a.get_usize("episodes")?;
-    cfg.warmup = a.get_usize("warmup")?;
-    cfg.eval_batches = a.get_usize("eval-batches")?;
-    cfg.seed = a.get_u64("seed")?;
-    cfg.relabel = !a.get_bool("no-relabel");
-    if a.get_bool("paper-scale") {
-        cfg = cfg.paper_scale();
-    }
-    let res = autoq::search::run_search(&mut rt, &runner, &data, &cfg)?;
-    let b = &res.best;
-    println!(
-        "best: acc={:.4} reward={:.4} score={:.2} avg_wbits={:.2} avg_abits={:.2} norm_logic={:.4}",
-        b.accuracy, b.reward, b.score, b.avg_wbits, b.avg_abits, b.cost.norm_logic()
-    );
-    println!("search took {:.1}s over {} episodes", res.secs, res.history.len());
+    let mut builder = JobSpec::search(&model)
+        .mode(Mode::parse(&a.get("mode"))?)
+        .protocol(protocol)
+        .granularity(Granularity::parse(&a.get("granularity"))?)
+        .episodes(a.get_usize("episodes")?)
+        .warmup(a.get_usize("warmup")?)
+        .eval_batches(a.get_usize("eval-batches")?)
+        .seed(a.get_u64("seed")?)
+        .relabel(!a.get_bool("no-relabel"))
+        .paper_scale(a.get_bool("paper-scale"));
     let out = a.get("out");
     if !out.is_empty() {
-        autoq::quant::save_config(&PathBuf::from(&out), &model, mode, b)?;
+        builder = builder.out(PathBuf::from(&out));
+    }
+    let mut coord = Coordinator::open_default()?;
+    let report = coord.run(&builder.build()?)?;
+    let JobOutcome::Search { best, history } = &report.outcome else {
+        anyhow::bail!("search job returned an unexpected report kind");
+    };
+    println!(
+        "best: acc={:.4} reward={:.4} score={:.2} avg_wbits={:.2} avg_abits={:.2} norm_logic={:.4}",
+        best.accuracy,
+        best.reward,
+        best.score,
+        best.avg_wbits,
+        best.avg_abits,
+        best.cost.norm_logic()
+    );
+    println!("search took {:.1}s over {} episodes", report.secs, history.len());
+    if !out.is_empty() {
         println!("wrote {out}");
     }
+    Ok(())
+}
+
+fn cmd_sweep(rest: &[String]) -> anyhow::Result<()> {
+    let a = Args::new("sweep")
+        .opt("models", "cif10", "comma-separated zoo models")
+        .opt("modes", "quant", "comma-separated quant|binar")
+        .opt("protocols", "rc,ag", "comma-separated rc|ag|fr")
+        .opt("granularities", "l,c", "comma-separated n|l|c|network:B")
+        .opt("episodes", "40", "search episodes per cell")
+        .opt("warmup", "10", "constant-noise episodes")
+        .opt("eval-batches", "2", "val batches per evaluation")
+        .opt("seed", "1", "base seed (per-cell seeds derived deterministically)")
+        .opt("target-bits", "5", "B-bar for Algorithm 1 (rc cells)")
+        .opt("workers", "2", "worker threads, each with its own PJRT runtime")
+        .opt("out-dir", "reports/sweep", "one JobReport JSON per cell lands here")
+        .flag("paper-scale", "use the paper's 400-episode schedule")
+        .flag("no-relabel", "disable HIRO goal relabeling (ablation)")
+        .parse(rest)?;
+    let target_bits = a.get_f64("target-bits")?;
+    let sweep = Sweep {
+        models: parse_list(&a.get("models"), |s| Ok(s.to_string()))?,
+        modes: parse_list(&a.get("modes"), Mode::parse)?,
+        protocols: parse_list(&a.get("protocols"), |s| {
+            let mut p = Protocol::parse(s)?;
+            if p.kind == ProtocolKind::ResourceConstrained {
+                p.target_bits = target_bits;
+            }
+            Ok(p)
+        })?,
+        granularities: parse_list(&a.get("granularities"), Granularity::parse)?,
+        episodes: a.get_usize("episodes")?,
+        warmup: a.get_usize("warmup")?,
+        eval_batches: a.get_usize("eval-batches")?,
+        base_seed: a.get_u64("seed")?,
+        relabel: !a.get_bool("no-relabel"),
+        paper_scale: a.get_bool("paper-scale"),
+        workers: a.get_usize("workers")?,
+        out_dir: Some(PathBuf::from(a.get("out-dir"))),
+    };
+    let result = sweep.run(&Coordinator::default_dir())?;
+    println!(
+        "{:<44} {:>15} {:>8} {:>8} {:>7} {:>7}",
+        "job", "seed", "acc", "reward", "wbits", "abits"
+    );
+    for report in &result.reports {
+        if let JobOutcome::Search { best, .. } = &report.outcome {
+            println!(
+                "{:<44} {:>15} {:>8.4} {:>8.4} {:>7.2} {:>7.2}",
+                report.id(),
+                report.spec.seed,
+                best.accuracy,
+                best.reward,
+                best.avg_wbits,
+                best.avg_abits
+            );
+        }
+    }
+    println!(
+        "{} job(s) completed in {:.1}s; {} failure(s); reports under {}",
+        result.reports.len(),
+        result.secs,
+        result.failures.len(),
+        a.get("out-dir")
+    );
+    for (id, err) in &result.failures {
+        eprintln!("FAILED {id}: {err}");
+    }
+    anyhow::ensure!(result.failures.is_empty(), "{} sweep job(s) failed", result.failures.len());
     Ok(())
 }
 
@@ -162,26 +233,20 @@ fn cmd_finetune(rest: &[String]) -> anyhow::Result<()> {
         .opt("steps", "200", "fine-tune steps")
         .parse(rest)?;
     let model = a.get("model");
-    let mut rt = Runtime::open_default()?;
-    let mut runner = load_runner(&mut rt, &model, true)?;
     let cfgf = a.get("config");
     anyhow::ensure!(!cfgf.is_empty(), "--config required");
-    let saved = autoq::quant::load_config(&PathBuf::from(&cfgf))?;
-    let data = SynthDataset::new(42);
-    let tc = autoq::finetune::TrainConfig::finetune(
-        saved.mode,
-        saved.wbits.clone(),
-        saved.abits.clone(),
-        a.get_usize("steps")?,
-    );
-    let before = runner.eval_config(
-        &mut rt, saved.mode, &saved.wbits, &saved.abits, &data,
-        autoq::data::Split::Val, 2,
-    )?;
-    let rep = autoq::finetune::train(&mut rt, &mut runner, &data, &tc)?;
+    let steps = a.get_usize("steps")?;
+    let spec = JobSpec::finetune(&model, PathBuf::from(&cfgf)).steps(steps).build()?;
+    let mut coord = Coordinator::open_default()?;
+    let report = coord.run(&spec)?;
+    let JobOutcome::Train { before, final_eval, .. } = &report.outcome else {
+        anyhow::bail!("finetune job returned an unexpected report kind");
+    };
     println!(
-        "finetune {model}: acc {:.4} -> {:.4} over {} steps ({:.1}s)",
-        before.accuracy, rep.final_eval.accuracy, a.get_usize("steps")?, rep.secs
+        "finetune {model}: acc {:.4} -> {:.4} over {steps} steps ({:.1}s)",
+        before.as_ref().map(|e| e.accuracy).unwrap_or(f64::NAN),
+        final_eval.accuracy,
+        report.secs
     );
     Ok(())
 }
@@ -193,19 +258,15 @@ fn cmd_eval(rest: &[String]) -> anyhow::Result<()> {
         .opt("batches", "4", "val batches")
         .parse(rest)?;
     let model = a.get("model");
-    let mut rt = Runtime::open_default()?;
-    let runner = load_runner(&mut rt, &model, true)?;
-    let data = SynthDataset::new(42);
-    let nb = a.get_usize("batches")?;
+    let mut builder = JobSpec::eval(&model).batches(a.get_usize("batches")?);
     let cfgf = a.get("config");
-    let res = if cfgf.is_empty() {
-        runner.eval_fp32(&mut rt, &data, autoq::data::Split::Val, nb)?
-    } else {
-        let saved = autoq::quant::load_config(&PathBuf::from(&cfgf))?;
-        runner.eval_config(
-            &mut rt, saved.mode, &saved.wbits, &saved.abits, &data,
-            autoq::data::Split::Val, nb,
-        )?
+    if !cfgf.is_empty() {
+        builder = builder.config(PathBuf::from(&cfgf));
+    }
+    let mut coord = Coordinator::open_default()?;
+    let report = coord.run(&builder.build()?)?;
+    let JobOutcome::Eval(res) = &report.outcome else {
+        anyhow::bail!("eval job returned an unexpected report kind");
     };
     println!("{model}: accuracy {:.4} loss {:.4} ({} images)", res.accuracy, res.loss, res.images);
     Ok(())
@@ -217,29 +278,28 @@ fn cmd_sim(rest: &[String]) -> anyhow::Result<()> {
         .opt("config", "", "searched config JSON")
         .parse(rest)?;
     let model = a.get("model");
-    let rt = Runtime::open_default()?;
-    let meta = rt.manifest.model(&model)?.clone();
+    let mut builder = JobSpec::sim(&model);
     let cfgf = a.get("config");
-    let (mode, wbits, abits) = if cfgf.is_empty() {
-        (Mode::Quant, vec![5u8; meta.w_channels], vec![5u8; meta.a_channels])
-    } else {
-        let saved = autoq::quant::load_config(&PathBuf::from(&cfgf))?;
-        (saved.mode, saved.wbits, saved.abits)
+    if !cfgf.is_empty() {
+        builder = builder.config(PathBuf::from(&cfgf));
+    }
+    let mut coord = Coordinator::open_default()?;
+    let report = coord.run(&builder.build()?)?;
+    let JobOutcome::Sim(rows) = &report.outcome else {
+        anyhow::bail!("sim job returned an unexpected report kind");
     };
     println!("{:<10} {:>10} {:>12} {:>8}", "arch", "fps", "energy(mJ)", "util");
-    for arch in [autoq::sim::Arch::Temporal, autoq::sim::Arch::Spatial] {
-        let sim = autoq::sim::FpgaSim::new(arch, mode);
-        let r = sim.run(&meta.layers, &wbits, &abits);
+    for row in rows {
         println!(
             "{:<10} {:>10.1} {:>12.3} {:>8.3}",
-            arch.as_str(), r.fps, r.energy_j * 1e3, r.utilization
+            row.arch, row.fps, row.energy_mj, row.utilization
         );
     }
     Ok(())
 }
 
 fn cmd_stats(_rest: &[String]) -> anyhow::Result<()> {
-    let rt = Runtime::open_default()?;
-    println!("{}", rt.stats_report());
+    let mut coord = Coordinator::open_default()?;
+    println!("{}", coord.runtime().stats_report());
     Ok(())
 }

@@ -65,12 +65,21 @@ pub fn load_config(path: &Path) -> anyhow::Result<SavedConfig> {
     let text = std::fs::read_to_string(path)?;
     let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
     let bits = |k: &str| -> anyhow::Result<Vec<u8>> {
-        Ok(j.req(k)?
+        j.req(k)?
             .as_arr()
             .ok_or_else(|| anyhow::anyhow!("{k} not an array"))?
             .iter()
-            .map(|v| v.as_usize().unwrap_or(0) as u8)
-            .collect())
+            .map(|v| {
+                let n = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("{k} entry is not a number"))?;
+                anyhow::ensure!(
+                    n.fract() == 0.0 && (0.0..=32.0).contains(&n),
+                    "{k} entry {n} is not an integer bit-width in 0..=32"
+                );
+                Ok(n as u8)
+            })
+            .collect()
     };
     Ok(SavedConfig {
         model: j.req("model")?.as_str().unwrap_or("").to_string(),
@@ -128,6 +137,57 @@ mod tests {
         assert_eq!(back.wbits, vec![4, 5, 0, 32]);
         assert_eq!(back.abits, vec![3, 3]);
         assert!((back.accuracy - 0.91).abs() < 1e-9);
+        assert!((back.score - 10.0).abs() < 1e-9);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn saved_json_carries_report_fields() {
+        let out = EpisodeOutcome {
+            wbits: vec![4],
+            abits: vec![3],
+            accuracy: 0.5,
+            loss: 0.9,
+            cost: model_cost(&[], &[], &[]),
+            reward: 0.25,
+            score: 5.0,
+            per_layer: vec![LayerBits { name: "l01_conv".into(), avg_w: 4.0, avg_a: 3.0 }],
+            avg_wbits: 4.0,
+            avg_abits: 3.0,
+        };
+        let path = std::env::temp_dir().join("autoq_cfg_fields_test.json");
+        save_config(&path, "res18", Mode::Quant, &out).unwrap();
+        let j = crate::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.req("model").unwrap().as_str(), Some("res18"));
+        assert!(j.req("norm_logic").unwrap().as_f64().is_some());
+        let per_layer = j.req("per_layer").unwrap().as_arr().unwrap();
+        assert_eq!(per_layer.len(), 1);
+        assert_eq!(per_layer[0].req("name").unwrap().as_str(), Some("l01_conv"));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_rejects_malformed_configs() {
+        let path = std::env::temp_dir().join("autoq_cfg_bad_test.json");
+        std::fs::write(&path, "not json at all").unwrap();
+        assert!(load_config(&path).is_err(), "non-JSON must error");
+        std::fs::write(&path, r#"{"model":"m","mode":"quant","accuracy":1,"score":1}"#).unwrap();
+        assert!(load_config(&path).is_err(), "missing wbits/abits must error");
+        std::fs::write(&path, r#"{"model":"m","mode":"warp","accuracy":1,"score":1,"wbits":[],"abits":[]}"#)
+            .unwrap();
+        assert!(load_config(&path).is_err(), "unknown mode must error");
+        std::fs::write(
+            &path,
+            r#"{"model":"m","mode":"quant","accuracy":1,"score":1,"wbits":["4x",5],"abits":[3]}"#,
+        )
+        .unwrap();
+        assert!(load_config(&path).is_err(), "non-numeric bit entries must error, not become 0");
+        std::fs::write(
+            &path,
+            r#"{"model":"m","mode":"quant","accuracy":1,"score":1,"wbits":[40],"abits":[3]}"#,
+        )
+        .unwrap();
+        assert!(load_config(&path).is_err(), "out-of-range bit entries must error");
         std::fs::remove_file(path).ok();
     }
 }

@@ -1,16 +1,15 @@
 //! Shared plumbing for the repro harness: searched-config caching (so
 //! `repro fig9` can reuse the searches `repro table2` ran), report sinks,
-//! and the search-or-load entry point.
+//! and the coordinator-backed search-or-load entry point.
 
 use std::path::PathBuf;
 
+use crate::coordinator::{Coordinator, JobOutcome, JobSpec};
 use crate::cost::Mode;
 use crate::data::synth::SynthDataset;
-use crate::models::{ModelRunner, ParamStore};
+use crate::models::ModelRunner;
 use crate::quant::{load_config, save_config, SavedConfig};
-use crate::runtime::Runtime;
 use crate::search::{run_search, Granularity, Protocol, SearchConfig, SearchResult};
-use crate::util::rng::Rng;
 
 pub fn reports_dir() -> PathBuf {
     let d = PathBuf::from("reports");
@@ -66,23 +65,6 @@ impl Default for ReproCtx {
     }
 }
 
-/// Load (pre-training if needed) a zoo model.
-pub fn runner_for(rt: &mut Runtime, model: &str) -> anyhow::Result<ModelRunner> {
-    let meta = rt.manifest.model(model)?.clone();
-    let path = PathBuf::from(format!("artifacts/{model}_trained.apb"));
-    if path.exists() {
-        return ModelRunner::new(meta, ParamStore::load(&path)?);
-    }
-    crate::info!("pre-training {model} (first use)");
-    let mut runner = ModelRunner::init(meta, &mut Rng::new(0xA0_70_u64 ^ model.len() as u64));
-    let data = SynthDataset::new(42);
-    let cfg = crate::finetune::TrainConfig::pretrain(300);
-    let rep = crate::finetune::train(rt, &mut runner, &data, &cfg)?;
-    crate::info!("pretrained {model}: acc={:.4}", rep.final_eval.accuracy);
-    runner.params.save(&path)?;
-    Ok(runner)
-}
-
 fn cache_key(model: &str, mode: Mode, protocol: &Protocol, gran: Granularity) -> PathBuf {
     reports_dir().join(format!(
         "configs/{model}_{}_{}_{}.json",
@@ -92,10 +74,11 @@ fn cache_key(model: &str, mode: Mode, protocol: &Protocol, gran: Granularity) ->
     ))
 }
 
-/// Search one (model, mode, protocol, granularity) cell, or return the
-/// cached best config from a previous repro run.
+/// Search one (model, mode, protocol, granularity) cell through the
+/// coordinator job API, or return the cached best config from a previous
+/// repro run.
 pub fn search_or_cached(
-    rt: &mut Runtime,
+    c: &mut Coordinator,
     model: &str,
     mode: Mode,
     protocol: Protocol,
@@ -107,15 +90,28 @@ pub fn search_or_cached(
         crate::debug!("cache hit: {}", key.display());
         return load_config(&key);
     }
-    let runner = runner_for(rt, model)?;
-    let data = SynthDataset::new(42);
-    let res = run_cell(rt, &runner, &data, mode, protocol, gran, ctx)?;
-    save_config(&key, model, mode, &res.best)?;
+    let spec = JobSpec::search(model)
+        .mode(mode)
+        .protocol(protocol)
+        .granularity(gran)
+        .episodes(ctx.episodes)
+        .warmup(ctx.warmup)
+        .eval_batches(ctx.eval_batches)
+        .seed(ctx.seed)
+        .paper_scale(ctx.paper_scale)
+        .build()?;
+    let report = c.run(&spec)?;
+    let JobOutcome::Search { best, .. } = &report.outcome else {
+        anyhow::bail!("search job returned a non-search report");
+    };
+    save_config(&key, model, mode, best)?;
     load_config(&key)
 }
 
+/// Run one cell on an externally-owned runner (fig8 shares a runner between
+/// the hierarchical and flat-DDPG searches).
 pub fn run_cell(
-    rt: &mut Runtime,
+    c: &mut Coordinator,
     runner: &ModelRunner,
     data: &SynthDataset,
     mode: Mode,
@@ -131,13 +127,13 @@ pub fn run_cell(
     if ctx.paper_scale {
         cfg = cfg.paper_scale();
     }
-    run_search(rt, runner, data, &cfg)
+    run_search(c.runtime(), runner, data, &cfg)
 }
 
 /// Fine-tune a searched config and report the recovered accuracy (the
 /// tables report fine-tuned numbers).
 pub fn finetuned_accuracy(
-    rt: &mut Runtime,
+    c: &mut Coordinator,
     model: &str,
     saved: &SavedConfig,
     ctx: &ReproCtx,
@@ -145,7 +141,7 @@ pub fn finetuned_accuracy(
     if ctx.finetune_steps == 0 {
         return Ok(saved.accuracy);
     }
-    let mut runner = runner_for(rt, model)?; // fresh copy of pre-trained params
+    let mut runner = c.fresh_runner(model)?; // fresh copy of pre-trained params
     let data = SynthDataset::new(42);
     let tc = crate::finetune::TrainConfig::finetune(
         saved.mode,
@@ -153,7 +149,7 @@ pub fn finetuned_accuracy(
         saved.abits.clone(),
         ctx.finetune_steps,
     );
-    let rep = crate::finetune::train(rt, &mut runner, &data, &tc)?;
+    let rep = crate::finetune::train(c.runtime(), &mut runner, &data, &tc)?;
     // Fine-tuning can only help; guard against a regression run.
     Ok(rep.final_eval.accuracy.max(saved.accuracy))
 }

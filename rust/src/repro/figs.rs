@@ -2,18 +2,18 @@
 //! (one row per x-axis point, ready for plotting).
 
 use crate::baselines::{run_baseline, BaselineConfig, BaselinePolicy};
+use crate::coordinator::Coordinator;
 use crate::cost::Mode;
 use crate::data::synth::SynthDataset;
 use crate::quant::SavedConfig;
-use crate::repro::common::{run_cell, runner_for, search_or_cached, Report, ReproCtx};
-use crate::runtime::Runtime;
+use crate::repro::common::{run_cell, search_or_cached, Report, ReproCtx};
 use crate::search::{Granularity, Protocol};
 use crate::sim::{Arch, FpgaSim};
 use crate::util::stats;
 
 /// Figs 4 / 5 / 7: per-layer average weight & activation QBNs of res18
 /// under RC (fig4), AG (fig5) or the FLOP reward (fig7).
-pub fn per_layer_bits(rt: &mut Runtime, fig: &str, ctx: &ReproCtx) -> anyhow::Result<()> {
+pub fn per_layer_bits(c: &mut Coordinator, fig: &str, ctx: &ReproCtx) -> anyhow::Result<()> {
     let (protocol, title) = match fig {
         "fig4" => (Protocol::resource_constrained(5.0), "resource-constrained"),
         "fig5" => (Protocol::accuracy_guaranteed(), "accuracy-guaranteed"),
@@ -21,8 +21,8 @@ pub fn per_layer_bits(rt: &mut Runtime, fig: &str, ctx: &ReproCtx) -> anyhow::Re
         _ => anyhow::bail!("unknown per-layer fig {fig}"),
     };
     let model = "res18";
-    let saved = search_or_cached(rt, model, Mode::Quant, protocol, Granularity::Channel, ctx)?;
-    let meta = rt.manifest.model(model)?.clone();
+    let saved = search_or_cached(c, model, Mode::Quant, protocol, Granularity::Channel, ctx)?;
+    let meta = c.manifest().model(model)?.clone();
     let mut rep = Report::new(fig);
     rep.line(format!(
         "{} — per-layer average QBNs of {model}, {} channel-level search",
@@ -50,17 +50,17 @@ pub fn per_layer_bits(rt: &mut Runtime, fig: &str, ctx: &ReproCtx) -> anyhow::Re
 
 /// Fig 6: weight-QBN distributions of layers 9–16 of res18 (RC channel
 /// search) — histograms over channel bit-widths.
-pub fn fig6(rt: &mut Runtime, ctx: &ReproCtx) -> anyhow::Result<()> {
+pub fn fig6(c: &mut Coordinator, ctx: &ReproCtx) -> anyhow::Result<()> {
     let model = "res18";
     let saved = search_or_cached(
-        rt,
+        c,
         model,
         Mode::Quant,
         Protocol::resource_constrained(5.0),
         Granularity::Channel,
         ctx,
     )?;
-    let meta = rt.manifest.model(model)?.clone();
+    let meta = c.manifest().model(model)?.clone();
     let mut rep = Report::new("fig6");
     rep.line("FIG6 — weight QBN distributions, layers 9–16 of res18 (RC channel search)");
     rep.line(format!("{:<6} {:<14} {}", "layer", "name", "count per QBN 0..8+ (col = bits)"));
@@ -83,24 +83,24 @@ pub fn fig6(rt: &mut Runtime, ctx: &ReproCtx) -> anyhow::Result<()> {
 
 /// Fig 8: hierarchical AutoQ vs flat DDPG learning curves (avg of `runs`
 /// seeds, resource-constrained channel search on cif10).
-pub fn fig8(rt: &mut Runtime, ctx: &ReproCtx, runs: usize) -> anyhow::Result<()> {
+pub fn fig8(c: &mut Coordinator, ctx: &ReproCtx, runs: usize) -> anyhow::Result<()> {
     let model = "cif10";
-    let runner = runner_for(rt, model)?;
+    let runner = c.fresh_runner(model)?;
     let data = SynthDataset::new(42);
     let episodes = ctx.episodes;
     let mut hiro_acc = vec![0.0f64; episodes];
     let mut flat_acc = vec![0.0f64; episodes];
     for run in 0..runs {
-        let mut c = ctx.clone();
-        c.seed = ctx.seed + run as u64 * 101;
+        let mut rc = ctx.clone();
+        rc.seed = ctx.seed + run as u64 * 101;
         let res = run_cell(
-            rt,
+            c,
             &runner,
             &data,
             Mode::Quant,
             Protocol::resource_constrained(5.0),
             Granularity::Channel,
-            &c,
+            &rc,
         )?;
         for (i, st) in res.history.iter().enumerate() {
             hiro_acc[i] += st.accuracy / runs as f64;
@@ -111,10 +111,10 @@ pub fn fig8(rt: &mut Runtime, ctx: &ReproCtx, runs: usize) -> anyhow::Result<()>
             Protocol::resource_constrained(5.0),
         );
         bcfg.episodes = episodes;
-        bcfg.warmup = c.warmup;
-        bcfg.eval_batches = c.eval_batches;
-        bcfg.seed = c.seed;
-        let bres = run_baseline(rt, &runner, &data, &bcfg)?;
+        bcfg.warmup = rc.warmup;
+        bcfg.eval_batches = rc.eval_batches;
+        bcfg.seed = rc.seed;
+        let bres = run_baseline(c.runtime(), &runner, &data, &bcfg)?;
         for (i, st) in bres.history.iter().enumerate() {
             flat_acc[i] += st.accuracy / runs as f64;
         }
@@ -141,7 +141,7 @@ pub fn fig8(rt: &mut Runtime, ctx: &ReproCtx, runs: usize) -> anyhow::Result<()>
 
 /// Figs 9–12: FPS / energy of quantized & binarized res18 + monet on the
 /// spatial and temporal accelerators (RC for 9/10, AG + FR for 11/12).
-pub fn fpga_figs(rt: &mut Runtime, fig: &str, ctx: &ReproCtx) -> anyhow::Result<()> {
+pub fn fpga_figs(c: &mut Coordinator, fig: &str, ctx: &ReproCtx) -> anyhow::Result<()> {
     let (protocols, metric): (Vec<(&str, Protocol)>, &str) = match fig {
         "fig9" => (vec![("RC", Protocol::resource_constrained(5.0))], "fps"),
         "fig10" => (vec![("RC", Protocol::resource_constrained(5.0))], "energy"),
@@ -172,7 +172,7 @@ pub fn fpga_figs(rt: &mut Runtime, fig: &str, ctx: &ReproCtx) -> anyhow::Result<
         "model", "mode", "prot", "gran", "temporal", "spatial", "util_s"
     ));
     for model in ["res18", "monet"] {
-        let meta = rt.manifest.model(model)?.clone();
+        let meta = c.manifest().model(model)?.clone();
         for mode in [Mode::Quant, Mode::Binar] {
             for (ptag, protocol) in &protocols {
                 // F and N need no search; L and C come from the cache.
@@ -182,7 +182,7 @@ pub fn fpga_figs(rt: &mut Runtime, fig: &str, ctx: &ReproCtx) -> anyhow::Result<
                 ];
                 for gran in [Granularity::Layer, Granularity::Channel] {
                     let saved: SavedConfig =
-                        search_or_cached(rt, model, mode, *protocol, gran, ctx)?;
+                        search_or_cached(c, model, mode, *protocol, gran, ctx)?;
                     rows.push((gran.tag().into(), saved.wbits, saved.abits));
                 }
                 for (tag, wbits, abits) in rows {

@@ -36,30 +36,30 @@ pub fn cmd_repro(rest: &[String]) -> anyhow::Result<()> {
     let what = a.positional.first().cloned().unwrap_or_else(|| "help".into());
     let runs = a.get_usize("runs")?;
 
-    let mut runtime = crate::runtime::Runtime::open_default()?;
+    let mut coord = crate::coordinator::Coordinator::open_default()?;
     match what.as_str() {
         "fig1" => fig1(),
-        "table2" => tables::table(&mut runtime, Mode::Quant, &models, &ctx),
-        "table3" => tables::table(&mut runtime, Mode::Binar, &models, &ctx),
-        "table4" => tables::table4(&mut runtime, &ctx),
-        "storage" => tables::storage(&mut runtime, &ctx),
-        "fig4" | "fig5" | "fig7" => figs::per_layer_bits(&mut runtime, &what, &ctx),
-        "fig6" => figs::fig6(&mut runtime, &ctx),
-        "fig8" => figs::fig8(&mut runtime, &ctx, runs),
-        "fig9" | "fig10" | "fig11" | "fig12" => figs::fpga_figs(&mut runtime, &what, &ctx),
+        "table2" => tables::table(&mut coord, Mode::Quant, &models, &ctx),
+        "table3" => tables::table(&mut coord, Mode::Binar, &models, &ctx),
+        "table4" => tables::table4(&mut coord, &ctx),
+        "storage" => tables::storage(&mut coord, &ctx),
+        "fig4" | "fig5" | "fig7" => figs::per_layer_bits(&mut coord, &what, &ctx),
+        "fig6" => figs::fig6(&mut coord, &ctx),
+        "fig8" => figs::fig8(&mut coord, &ctx, runs),
+        "fig9" | "fig10" | "fig11" | "fig12" => figs::fpga_figs(&mut coord, &what, &ctx),
         "all" => {
             fig1()?;
-            tables::table(&mut runtime, Mode::Quant, &models, &ctx)?;
-            tables::table(&mut runtime, Mode::Binar, &models, &ctx)?;
-            tables::table4(&mut runtime, &ctx)?;
-            tables::storage(&mut runtime, &ctx)?;
+            tables::table(&mut coord, Mode::Quant, &models, &ctx)?;
+            tables::table(&mut coord, Mode::Binar, &models, &ctx)?;
+            tables::table4(&mut coord, &ctx)?;
+            tables::storage(&mut coord, &ctx)?;
             for f in ["fig4", "fig5", "fig7"] {
-                figs::per_layer_bits(&mut runtime, f, &ctx)?;
+                figs::per_layer_bits(&mut coord, f, &ctx)?;
             }
-            figs::fig6(&mut runtime, &ctx)?;
-            figs::fig8(&mut runtime, &ctx, runs)?;
+            figs::fig6(&mut coord, &ctx)?;
+            figs::fig8(&mut coord, &ctx, runs)?;
             for f in ["fig9", "fig10", "fig11", "fig12"] {
-                figs::fpga_figs(&mut runtime, f, &ctx)?;
+                figs::fpga_figs(&mut coord, f, &ctx)?;
             }
             Ok(())
         }

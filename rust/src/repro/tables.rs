@@ -1,15 +1,15 @@
 //! Tables 2, 3 and 4 of the paper, regenerated on this testbed.
 
 use crate::baselines::{run_baseline, BaselineConfig, BaselinePolicy};
+use crate::coordinator::Coordinator;
 use crate::cost::logic::model_cost;
 use crate::cost::Mode;
 use crate::data::synth::{Split, SynthDataset};
-use crate::repro::common::{finetuned_accuracy, runner_for, search_or_cached, Report, ReproCtx};
-use crate::runtime::Runtime;
+use crate::repro::common::{finetuned_accuracy, search_or_cached, Report, ReproCtx};
 use crate::search::{Granularity, Protocol};
 
 /// Tables 2 (quant) / 3 (binar): F / N / L / C rows × RC / AG protocols.
-pub fn table(rt: &mut Runtime, mode: Mode, models: &[String], ctx: &ReproCtx) -> anyhow::Result<()> {
+pub fn table(c: &mut Coordinator, mode: Mode, models: &[String], ctx: &ReproCtx) -> anyhow::Result<()> {
     let tid = if mode == Mode::Quant { "table2" } else { "table3" };
     let mut rep = Report::new(tid);
     rep.line(format!(
@@ -25,9 +25,9 @@ pub fn table(rt: &mut Runtime, mode: Mode, models: &[String], ctx: &ReproCtx) ->
     rep.line("-".repeat(62));
 
     for model in models {
-        let runner = runner_for(rt, model)?;
+        let runner = c.fresh_runner(model)?;
         let data = SynthDataset::new(42);
-        let fp = runner.eval_fp32(rt, &data, Split::Val, ctx.eval_batches)?;
+        let fp = runner.eval_fp32(c.runtime(), &data, Split::Val, ctx.eval_batches)?;
         rep.line(format!(
             "{:<10} | {:>8.2} {:>6} {:>6} | {:>8.2} {:>6} {:>6}",
             format!("{model}-F"),
@@ -41,9 +41,9 @@ pub fn table(rt: &mut Runtime, mode: Mode, models: &[String], ctx: &ReproCtx) ->
         for gran in [Granularity::Network(5), Granularity::Layer, Granularity::Channel] {
             let mut row = vec![format!("{model}-{}", gran.tag())];
             for protocol in [Protocol::resource_constrained(5.0), Protocol::accuracy_guaranteed()] {
-                let saved = search_or_cached(rt, model, mode, protocol, gran, ctx)?;
-                let acc = finetuned_accuracy(rt, model, &saved, ctx)?;
-                let meta = rt.manifest.model(model)?.clone();
+                let saved = search_or_cached(c, model, mode, protocol, gran, ctx)?;
+                let acc = finetuned_accuracy(c, model, &saved, ctx)?;
+                let meta = c.manifest().model(model)?.clone();
                 let avg = |bits: &[u8]| {
                     bits.iter().map(|&b| b as f64).sum::<f64>() / bits.len() as f64
                 };
@@ -64,7 +64,7 @@ pub fn table(rt: &mut Runtime, mode: Mode, models: &[String], ctx: &ReproCtx) ->
 }
 
 /// Table 4: AutoQ vs ReLeQ / AMC / HAQ (ΔAcc and normalized logic ops).
-pub fn table4(rt: &mut Runtime, ctx: &ReproCtx) -> anyhow::Result<()> {
+pub fn table4(c: &mut Coordinator, ctx: &ReproCtx) -> anyhow::Result<()> {
     let mut rep = Report::new("table4");
     rep.line("Table 4 — Comparison against ReLeQ, AMC and HAQ (this testbed)");
     rep.line("ΔAcc = searched-and-finetuned accuracy − full-precision accuracy");
@@ -81,9 +81,9 @@ pub fn table4(rt: &mut Runtime, ctx: &ReproCtx) -> anyhow::Result<()> {
         ("monet", BaselinePolicy::Haq),
     ];
     for (model, policy) in cells {
-        let runner = runner_for(rt, model)?;
+        let runner = c.fresh_runner(model)?;
         let data = SynthDataset::new(42);
-        let fp = runner.eval_fp32(rt, &data, Split::Val, ctx.eval_batches)?;
+        let fp = runner.eval_fp32(c.runtime(), &data, Split::Val, ctx.eval_batches)?;
         // Baseline search (AG / FLOP protocol per the original papers).
         let protocol = match policy {
             BaselinePolicy::Amc => Protocol::flop_reward(),
@@ -94,7 +94,7 @@ pub fn table4(rt: &mut Runtime, ctx: &ReproCtx) -> anyhow::Result<()> {
         bcfg.warmup = ctx.warmup;
         bcfg.eval_batches = ctx.eval_batches;
         bcfg.seed = ctx.seed;
-        let bres = run_baseline(rt, &runner, &data, &bcfg)?;
+        let bres = run_baseline(c.runtime(), &runner, &data, &bcfg)?;
         let bsaved = crate::quant::SavedConfig {
             model: model.into(),
             mode: Mode::Quant,
@@ -103,7 +103,7 @@ pub fn table4(rt: &mut Runtime, ctx: &ReproCtx) -> anyhow::Result<()> {
             accuracy: bres.best.accuracy,
             score: bres.best.score,
         };
-        let bacc = finetuned_accuracy(rt, model, &bsaved, ctx)?;
+        let bacc = finetuned_accuracy(c, model, &bsaved, ctx)?;
         rep.line(format!(
             "{:<10} {:<10} {:<10} {:>8.2} {:>12.2}",
             "synth10",
@@ -114,15 +114,15 @@ pub fn table4(rt: &mut Runtime, ctx: &ReproCtx) -> anyhow::Result<()> {
         ));
         // AutoQ channel-level AG on the same cell.
         let saved = search_or_cached(
-            rt,
+            c,
             model,
             Mode::Quant,
             Protocol::accuracy_guaranteed(),
             Granularity::Channel,
             ctx,
         )?;
-        let acc = finetuned_accuracy(rt, model, &saved, ctx)?;
-        let meta = rt.manifest.model(model)?.clone();
+        let acc = finetuned_accuracy(c, model, &saved, ctx)?;
+        let meta = c.manifest().model(model)?.clone();
         let cost = model_cost(&meta.layers, &saved.wbits, &saved.abits);
         rep.line(format!(
             "{:<10} {:<10} {:<10} {:>8.2} {:>12.2}",
@@ -139,7 +139,7 @@ pub fn table4(rt: &mut Runtime, ctx: &ReproCtx) -> anyhow::Result<()> {
 }
 
 /// §3.4 storage-overhead audit on searched configs.
-pub fn storage(rt: &mut Runtime, ctx: &ReproCtx) -> anyhow::Result<()> {
+pub fn storage(c: &mut Coordinator, ctx: &ReproCtx) -> anyhow::Result<()> {
     let mut rep = Report::new("storage");
     rep.line("§3.4 — 6-bit channel bit-width records vs quantized weight payload");
     rep.line(format!(
@@ -148,14 +148,14 @@ pub fn storage(rt: &mut Runtime, ctx: &ReproCtx) -> anyhow::Result<()> {
     ));
     for model in ["cif10", "res18", "sqnet", "monet"] {
         let saved = search_or_cached(
-            rt,
+            c,
             model,
             Mode::Quant,
             Protocol::resource_constrained(5.0),
             Granularity::Channel,
             ctx,
         )?;
-        let meta = rt.manifest.model(model)?.clone();
+        let meta = c.manifest().model(model)?.clone();
         let audit = crate::quant::audit(&meta.layers, &saved.wbits, &saved.abits);
         rep.line(format!(
             "{:<10} {:>14.2} {:>14.3} {:>10.3}",

@@ -47,10 +47,14 @@ impl Runtime {
         })
     }
 
-    /// Default artifact dir: $AUTOQ_ARTIFACTS or ./artifacts.
+    /// Default artifact dir: $AUTOQ_ARTIFACTS or ./artifacts — the single
+    /// resolver shared with `Coordinator::default_dir`.
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(std::env::var("AUTOQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string()))
+    }
+
     pub fn open_default() -> anyhow::Result<Runtime> {
-        let dir = std::env::var("AUTOQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
-        Self::open(Path::new(&dir))
+        Self::open(&Self::default_dir())
     }
 
     /// Compile (once) and return the executable for `name`.

@@ -10,4 +10,6 @@ pub mod runner;
 pub use algorithm1::LayerBound;
 pub use episode::{EpisodeConfig, EpisodeOutcome, LayerBits};
 pub use protocol::{Granularity, Protocol, ProtocolKind};
-pub use runner::{run_search, EpisodeStats, SearchConfig, SearchResult};
+pub use runner::{
+    log_episode_progress, run_search, run_search_with, EpisodeStats, SearchConfig, SearchResult,
+};

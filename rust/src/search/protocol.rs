@@ -72,6 +72,15 @@ impl Protocol {
         }
     }
 
+    /// Short CLI/file-name tag — the inverse of `parse`.
+    pub fn tag(&self) -> &'static str {
+        match self.kind {
+            ProtocolKind::ResourceConstrained => "rc",
+            ProtocolKind::AccuracyGuaranteed => "ag",
+            ProtocolKind::FlopReward => "fr",
+        }
+    }
+
     /// Algorithm-1 bounder for one controller side, if this protocol uses
     /// structural budgeting.
     pub fn bounder(&self, layer_macs: &[f64]) -> Option<LayerBound> {
@@ -137,6 +146,9 @@ mod tests {
         assert_eq!(Protocol::parse("rc").unwrap().kind, ProtocolKind::ResourceConstrained);
         assert_eq!(Protocol::parse("ag").unwrap().kind, ProtocolKind::AccuracyGuaranteed);
         assert!(Protocol::parse("zz").is_err());
+        for tag in ["rc", "ag", "fr"] {
+            assert_eq!(Protocol::parse(tag).unwrap().tag(), tag);
+        }
         assert_eq!(Granularity::parse("network:4").unwrap(), Granularity::Network(4));
         assert_eq!(Granularity::parse("c").unwrap(), Granularity::Channel);
         assert_eq!(Granularity::parse("c").unwrap().tag(), "C");

@@ -73,13 +73,68 @@ pub struct SearchResult {
     pub secs: f64,
 }
 
+/// Episode-progress logging shared by [`run_search`]'s default hook and
+/// the coordinator's `LogObserver` — new bests at debug level, every
+/// `every`-th episode at info level.
+pub fn log_episode_progress(
+    tag: &str,
+    every: usize,
+    st: &EpisodeStats,
+    episodes: usize,
+    new_best: bool,
+) {
+    if new_best {
+        crate::debug!(
+            "[{tag}] ep {}: new best acc={:.4} reward={:.4} wb={:.2} ab={:.2}",
+            st.episode,
+            st.accuracy,
+            st.reward,
+            st.avg_wbits,
+            st.avg_abits
+        );
+    }
+    if st.episode % every.max(1) == 0 {
+        crate::info!(
+            "[{tag}] ep {}/{episodes} acc={:.4} reward={:.4}",
+            st.episode,
+            st.accuracy,
+            st.reward
+        );
+    }
+}
+
 /// Run a full hierarchical search for one (model, mode, protocol,
-/// granularity) cell.
+/// granularity) cell, logging progress through the crate logger.
+///
+/// Structured consumers (the coordinator's `Observer`) should use
+/// [`run_search_with`] and receive the per-episode events directly.
 pub fn run_search(
     rt: &mut Runtime,
     runner: &ModelRunner,
     data: &SynthDataset,
     cfg: &SearchConfig,
+) -> anyhow::Result<SearchResult> {
+    let tag = format!(
+        "{}-{} {} {}",
+        runner.meta.name,
+        cfg.granularity.tag(),
+        cfg.mode.as_str(),
+        cfg.protocol.name()
+    );
+    run_search_with(rt, runner, data, cfg, &mut |st: &EpisodeStats, episodes, new_best| {
+        log_episode_progress(&tag, 10, st, episodes, new_best)
+    })
+}
+
+/// [`run_search`] with a per-episode progress hook: called once per
+/// finished episode with the just-recorded stats, the planned episode
+/// count, and whether the episode set a new best reward.
+pub fn run_search_with(
+    rt: &mut Runtime,
+    runner: &ModelRunner,
+    data: &SynthDataset,
+    cfg: &SearchConfig,
+    on_episode: &mut dyn FnMut(&EpisodeStats, usize, bool),
 ) -> anyhow::Result<SearchResult> {
     let t0 = std::time::Instant::now();
     let wvar = runner.weight_variances();
@@ -125,36 +180,22 @@ pub fn run_search(
             train_after_episode(rt, &mut agents, llc_steps, n_layers, &ep_cfg)?;
         }
         agents.end_episode();
-        history.push(EpisodeStats {
+        // Log/observe from the just-built stats value — `history[ep]` would
+        // re-index what we only just pushed.
+        let stats = EpisodeStats {
             episode: ep,
             accuracy: out.accuracy,
             reward: out.reward,
             avg_wbits: out.avg_wbits,
             avg_abits: out.avg_abits,
             norm_logic: out.cost.norm_logic(),
-        });
+        };
+        history.push(stats);
         let better = best.as_ref().map_or(true, |b| out.reward > b.reward);
         if better {
-            crate::debug!(
-                "ep {ep}: new best acc={:.4} reward={:.4} wb={:.2} ab={:.2}",
-                out.accuracy,
-                out.reward,
-                out.avg_wbits,
-                out.avg_abits
-            );
             best = Some(out);
         }
-        if ep % 10 == 0 {
-            crate::info!(
-                "[{}-{} {} {}] ep {ep}/{episodes} acc={:.4} reward={:.4}",
-                runner.meta.name,
-                cfg.granularity.tag(),
-                cfg.mode.as_str(),
-                cfg.protocol.name(),
-                history[ep].accuracy,
-                history[ep].reward
-            );
-        }
+        on_episode(&stats, episodes, better);
     }
 
     Ok(SearchResult {

@@ -1,18 +1,29 @@
 //! Integration: AOT artifacts load, compile and execute through PJRT with
-//! the shapes the manifest promises.  Requires `make artifacts`.
+//! the shapes the manifest promises.  Requires `make artifacts`; tests
+//! self-skip when the artifacts are not built (e.g. plain CI runners).
 
 use std::path::Path;
 
 use autoq::runtime::{Runtime, Tensor};
 
-fn runtime() -> Runtime {
-    Runtime::open(Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").as_path())
-        .expect("run `make artifacts` first")
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        // AUTOQ_REQUIRE_ARTIFACTS=1 turns the silent skip into a failure so
+        // full-stack CI lanes can't go green without exercising the runtime.
+        assert!(
+            std::env::var("AUTOQ_REQUIRE_ARTIFACTS").is_err(),
+            "AOT artifacts required but not built (run `make artifacts`)"
+        );
+        eprintln!("skipping: AOT artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::open(&dir).expect("artifacts present but unloadable"))
 }
 
 #[test]
 fn manifest_lists_all_families() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     for model in ["cif10", "res18", "sqnet", "monet"] {
         for fam in ["eval_quant", "eval_binar", "train_quant", "train_binar"] {
             assert!(
@@ -37,7 +48,7 @@ fn manifest_lists_all_families() {
 
 #[test]
 fn ddpg_act_executes_and_bounds_actions() {
-    let mut rt = runtime();
+    let Some(mut rt) = runtime() else { return };
     let spec = rt.manifest.artifact("ddpg_act_s16").unwrap().clone();
     // Zero-initialized actor → sigmoid(0)*32 == 16 for every state.
     let inputs: Vec<xla::Literal> = spec
@@ -56,7 +67,7 @@ fn ddpg_act_executes_and_bounds_actions() {
 
 #[test]
 fn exec_validates_arity() {
-    let mut rt = runtime();
+    let Some(mut rt) = runtime() else { return };
     let err = match rt.exec::<xla::Literal>("ddpg_act_s16", &[]) { Err(e) => e, Ok(_) => panic!("expected arity error") };
     assert!(err.to_string().contains("inputs"));
 }

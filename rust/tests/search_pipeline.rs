@@ -1,6 +1,7 @@
 //! Integration: the full search pipeline over the real AOT artifacts —
 //! episode walk, granularities, protocols, baselines and fine-tuning.
-//! Uses tiny episode counts; requires `make artifacts`.
+//! Uses tiny episode counts; requires `make artifacts` and self-skips when
+//! the artifacts are not built (e.g. plain CI runners).
 
 use std::path::Path;
 
@@ -12,8 +13,19 @@ use autoq::runtime::Runtime;
 use autoq::search::{run_search, Granularity, Protocol, SearchConfig};
 use autoq::util::rng::Rng;
 
-fn runtime() -> Runtime {
-    Runtime::open(Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").as_path()).unwrap()
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        // AUTOQ_REQUIRE_ARTIFACTS=1 turns the silent skip into a failure so
+        // full-stack CI lanes can't go green without exercising the runtime.
+        assert!(
+            std::env::var("AUTOQ_REQUIRE_ARTIFACTS").is_err(),
+            "AOT artifacts required but not built (run `make artifacts`)"
+        );
+        eprintln!("skipping: AOT artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::open(&dir).expect("artifacts present but unloadable"))
 }
 
 /// A lightly-trained cif10 runner (fast; accuracy need not be high for
@@ -38,7 +50,7 @@ fn quick_cfg(gran: Granularity, protocol: Protocol) -> SearchConfig {
 
 #[test]
 fn channel_search_produces_valid_config() {
-    let mut rt = runtime();
+    let Some(mut rt) = runtime() else { return };
     let runner = quick_runner(&mut rt);
     let data = SynthDataset::new(7);
     let res = run_search(
@@ -77,7 +89,7 @@ fn channel_search_produces_valid_config() {
 
 #[test]
 fn layer_granularity_is_uniform_within_layers() {
-    let mut rt = runtime();
+    let Some(mut rt) = runtime() else { return };
     let runner = quick_runner(&mut rt);
     let data = SynthDataset::new(7);
     let res = run_search(
@@ -95,7 +107,7 @@ fn layer_granularity_is_uniform_within_layers() {
 
 #[test]
 fn network_granularity_fixed_bits() {
-    let mut rt = runtime();
+    let Some(mut rt) = runtime() else { return };
     let runner = quick_runner(&mut rt);
     let data = SynthDataset::new(7);
     let res = run_search(
@@ -112,7 +124,7 @@ fn network_granularity_fixed_bits() {
 
 #[test]
 fn rc_protocol_respects_algorithm1_budget() {
-    let mut rt = runtime();
+    let Some(mut rt) = runtime() else { return };
     let runner = quick_runner(&mut rt);
     let data = SynthDataset::new(7);
     let target = 4.0;
@@ -138,7 +150,7 @@ fn rc_protocol_respects_algorithm1_budget() {
 
 #[test]
 fn baselines_respect_their_action_spaces() {
-    let mut rt = runtime();
+    let Some(mut rt) = runtime() else { return };
     let runner = quick_runner(&mut rt);
     let data = SynthDataset::new(7);
 
@@ -167,7 +179,7 @@ fn baselines_respect_their_action_spaces() {
 
 #[test]
 fn finetune_improves_or_holds_quantized_accuracy() {
-    let mut rt = runtime();
+    let Some(mut rt) = runtime() else { return };
     let mut runner = quick_runner(&mut rt);
     let data = SynthDataset::new(7);
     let wbits = vec![3u8; runner.meta.w_channels];
@@ -190,7 +202,7 @@ fn finetune_improves_or_holds_quantized_accuracy() {
 
 #[test]
 fn binar_mode_runs_end_to_end() {
-    let mut rt = runtime();
+    let Some(mut rt) = runtime() else { return };
     let runner = quick_runner(&mut rt);
     let data = SynthDataset::new(7);
     let mut cfg = quick_cfg(Granularity::Channel, Protocol::accuracy_guaranteed());
