@@ -9,7 +9,6 @@
 
 use autoq::coordinator::{Coordinator, JobKind, JobOutcome, Sweep};
 use autoq::cost::Mode;
-use autoq::runtime::Manifest;
 use autoq::search::{Granularity, Protocol};
 use autoq::sim::{Arch, FpgaSim};
 
@@ -17,7 +16,9 @@ fn main() -> anyhow::Result<()> {
     autoq::util::logging::init();
     let episodes: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(15);
     let dir = Coordinator::default_dir();
-    let meta = Manifest::load(&dir)?.model("monet")?.clone();
+    // Model metadata comes from the runtime's manifest (builtin on the
+    // reference backend, artifacts/manifest.json on PJRT).
+    let meta = Coordinator::open(&dir)?.manifest().model("monet")?.clone();
 
     let sweep = Sweep {
         models: vec!["monet".to_string()],

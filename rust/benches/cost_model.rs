@@ -13,11 +13,9 @@ fn main() {
         normalized_cost(Mode::Quant, 5, 5)
     });
 
-    // Model-scale audit on the real manifest (if artifacts are built).
-    let Ok(man) = Manifest::load(std::path::Path::new("artifacts")) else {
-        println!("(artifacts missing — run `make artifacts` for model-scale rows)");
-        return;
-    };
+    // Model-scale audit: real manifest when built, builtin zoo otherwise.
+    let man = Manifest::load(std::path::Path::new("artifacts"))
+        .unwrap_or_else(|_| autoq::runtime::reference::builtin_manifest());
     for model in ["cif10", "res18", "sqnet", "monet"] {
         let meta = man.model(model).unwrap();
         let wbits = vec![5u8; meta.w_channels];

@@ -8,10 +8,9 @@ use autoq::util::bench::bench;
 
 fn main() {
     println!("== fpga_sim bench (Figs 9-12 substrate) ==");
-    let Ok(man) = Manifest::load(std::path::Path::new("artifacts")) else {
-        println!("run `make artifacts` first");
-        return;
-    };
+    // Use real artifact metadata when present, the builtin zoo otherwise.
+    let man = Manifest::load(std::path::Path::new("artifacts"))
+        .unwrap_or_else(|_| autoq::runtime::reference::builtin_manifest());
     for model in ["res18", "monet"] {
         let meta = man.model(model).unwrap().clone();
         let wbits: Vec<u8> = (0..meta.w_channels).map(|i| 3 + (i % 4) as u8).collect();

@@ -1,15 +1,14 @@
 //! DDPG agent: rust owns every parameter/optimizer buffer; the actor
-//! forward pass and the fused update step are AOT'd HLO artifacts
-//! (`ddpg_act_s{S}`, `ddpg_update_s{S}`) executed via PJRT.
+//! forward pass and the fused update step are the `ddpg_act_s{S}` /
+//! `ddpg_update_s{S}` artifacts, dispatched through whichever execution
+//! backend the [`Runtime`] carries (PJRT or the reference interpreter).
 //!
 //! One `DdpgAgent` instance is a *flat* DDPG.  The hierarchical agent
 //! (hiro.rs) composes four of them: weight/activation HLC (S=16) and
 //! weight/activation LLC (S=17, state ⊕ goal).
 
-use xla::Literal;
-
 use crate::agent::replay::{ReplayBuffer, Transition};
-use crate::runtime::{AgentMeta, Runtime, Tensor};
+use crate::runtime::{AgentMeta, Runtime, Tensor, Value};
 use crate::util::rng::Rng;
 
 /// Hyper-parameters of one DDPG update call.
@@ -31,11 +30,11 @@ impl Default for DdpgHyper {
 pub struct DdpgAgent {
     pub meta: AgentMeta,
     pub hyper: DdpgHyper,
-    // All network/optimizer state is held as XLA literals so update/act
-    // dispatches borrow them directly — no Tensor↔Literal copy per call
-    // (EXPERIMENTS.md §Perf, L3 iteration 2).  Order: actor(6), critic(6),
-    // t_actor(6), t_critic(6), m_a(6), v_a(6), m_c(6), v_c(6).
-    state: Vec<Literal>,
+    // All network/optimizer state is held as host values so update/act
+    // dispatches borrow them directly — no copy per call (EXPERIMENTS.md
+    // §Perf, L3 iteration 2).  Order: actor(6), critic(6), t_actor(6),
+    // t_critic(6), m_a(6), v_a(6), m_c(6), v_c(6).
+    state: Vec<Value>,
     t: f32,
     act_name: String,
     update_name: String,
@@ -83,11 +82,7 @@ impl DdpgAgent {
             zeros(&critic),
             zeros(&critic),
         ];
-        let state = groups
-            .iter()
-            .flatten()
-            .map(|t| t.to_literal().expect("literal init"))
-            .collect();
+        let state = groups.into_iter().flatten().map(Value::F32).collect();
         let s = meta.s_dim;
         DdpgAgent {
             hyper,
@@ -102,8 +97,8 @@ impl DdpgAgent {
         }
     }
 
-    /// The 6 actor-parameter literals (the first group of `state`).
-    fn actor_literals(&self) -> &[Literal] {
+    /// The 6 actor-parameter values (the first group of `state`).
+    fn actor_values(&self) -> &[Value] {
         &self.state[0..6]
     }
 
@@ -116,12 +111,12 @@ impl DdpgAgent {
         anyhow::ensure!(states.len() == n * s_dim, "states len");
         let mut padded = vec![0.0f32; b * s_dim];
         padded[..n * s_dim].copy_from_slice(states);
-        let states_lit = Tensor::new(vec![b, s_dim], padded).to_literal()?;
-        let mut inputs: Vec<&Literal> = Vec::with_capacity(7);
-        inputs.extend(self.actor_literals());
-        inputs.push(&states_lit);
+        let states_val = Value::f32(vec![b, s_dim], padded);
+        let mut inputs: Vec<&Value> = Vec::with_capacity(7);
+        inputs.extend(self.actor_values());
+        inputs.push(&states_val);
         let outs = rt.exec(&self.act_name, &inputs)?;
-        let actions = Tensor::from_literal(&outs[0])?;
+        let actions = outs[0].as_f32()?;
         Ok(actions.data[..n].to_vec())
     }
 
@@ -159,31 +154,31 @@ impl DdpgAgent {
             done[i] = if tr.done { 1.0 } else { 0.0 };
         }
 
-        // Batch + hyper literals (small); parameter/optimizer literals are
+        // Batch + hyper values (small); parameter/optimizer values are
         // borrowed from `self.state` — no copies.
-        let scratch: Vec<Literal> = vec![
-            Tensor::scalar(self.t).to_literal()?,
-            Tensor::new(vec![b, s_dim], s).to_literal()?,
-            Tensor::new(vec![b, 1], a).to_literal()?,
-            Tensor::new(vec![b, 1], r).to_literal()?,
-            Tensor::new(vec![b, s_dim], s2).to_literal()?,
-            Tensor::new(vec![b, 1], done).to_literal()?,
-            Tensor::scalar(self.hyper.gamma).to_literal()?,
-            Tensor::scalar(self.hyper.tau).to_literal()?,
-            Tensor::scalar(self.hyper.lr_actor).to_literal()?,
-            Tensor::scalar(self.hyper.lr_critic).to_literal()?,
+        let scratch: Vec<Value> = vec![
+            Value::scalar(self.t),
+            Value::f32(vec![b, s_dim], s),
+            Value::f32(vec![b, 1], a),
+            Value::f32(vec![b, 1], r),
+            Value::f32(vec![b, s_dim], s2),
+            Value::f32(vec![b, 1], done),
+            Value::scalar(self.hyper.gamma),
+            Value::scalar(self.hyper.tau),
+            Value::scalar(self.hyper.lr_actor),
+            Value::scalar(self.hyper.lr_critic),
         ];
-        let mut inputs: Vec<&Literal> = Vec::with_capacity(58);
+        let mut inputs: Vec<&Value> = Vec::with_capacity(58);
         inputs.extend(self.state.iter());
         inputs.extend(scratch.iter());
 
         let mut outs = rt.exec(&self.update_name, &inputs)?;
         anyhow::ensure!(outs.len() == 51, "update artifact returned {}", outs.len());
-        self.last_actor_loss = crate::runtime::tensor::scalar_f32(&outs[50])?;
-        self.last_critic_loss = crate::runtime::tensor::scalar_f32(&outs[49])?;
-        self.t = crate::runtime::tensor::scalar_f32(&outs[48])?;
+        self.last_actor_loss = outs[50].scalar_f32()?;
+        self.last_critic_loss = outs[49].scalar_f32()?;
+        self.t = outs[48].scalar_f32()?;
         outs.truncate(48);
-        // Output literals become the new state verbatim.
+        // Output values become the new state verbatim.
         self.state = outs;
         self.updates += 1;
         Ok(())

@@ -32,7 +32,7 @@ use crate::cost::Mode;
 use crate::data::synth::{Split, SynthDataset};
 use crate::finetune::TrainConfig;
 use crate::models::{ModelRunner, ParamStore};
-use crate::runtime::{Manifest, Runtime};
+use crate::runtime::{BackendKind, Manifest, Runtime};
 use crate::search::SearchConfig;
 use crate::sim::{Arch, FpgaSim};
 use crate::util::rng::Rng;
@@ -59,16 +59,29 @@ impl Coordinator {
         Runtime::default_dir()
     }
 
+    /// Open with automatic backend selection (explicit > `$AUTOQ_BACKEND` >
+    /// PJRT iff compiled in and artifacts exist > reference).
     pub fn open(dir: &Path) -> anyhow::Result<Coordinator> {
-        Ok(Coordinator {
-            rt: Runtime::open(dir)?,
-            dir: dir.to_path_buf(),
-            runners: HashMap::new(),
-        })
+        Self::open_with(dir, None)
+    }
+
+    /// Open with an explicit backend choice (`None` = auto-resolve).
+    pub fn open_with(dir: &Path, backend: Option<BackendKind>) -> anyhow::Result<Coordinator> {
+        let kind = BackendKind::resolve(dir, backend)?;
+        let rt = Runtime::open_with(dir, kind)?;
+        // The reference backend needs no artifacts, but trained params still
+        // persist under the artifact dir — make sure it exists.
+        std::fs::create_dir_all(dir)?;
+        Ok(Coordinator { rt, dir: dir.to_path_buf(), runners: HashMap::new() })
     }
 
     pub fn open_default() -> anyhow::Result<Coordinator> {
         Self::open(&Self::default_dir())
+    }
+
+    /// Which execution backend this coordinator runs on.
+    pub fn backend(&self) -> BackendKind {
+        self.rt.backend_kind()
     }
 
     pub fn dir(&self) -> &Path {

@@ -20,6 +20,7 @@ use crate::coordinator::observer::LogObserver;
 use crate::coordinator::report::JobReport;
 use crate::coordinator::Coordinator;
 use crate::cost::Mode;
+use crate::runtime::BackendKind;
 use crate::search::{Granularity, Protocol, ProtocolKind};
 
 /// Cell-key token for a protocol: unlike `Protocol::tag`, distinguishes
@@ -60,6 +61,9 @@ pub struct Sweep {
     pub workers: usize,
     /// Where per-cell `JobReport` JSONs land (default `reports/sweep`).
     pub out_dir: Option<PathBuf>,
+    /// Execution backend for every worker (`None` = auto-resolve).  Each
+    /// worker opens its own `Coordinator`/`Runtime` of this kind.
+    pub backend: Option<BackendKind>,
 }
 
 impl Default for Sweep {
@@ -77,6 +81,7 @@ impl Default for Sweep {
             paper_scale: false,
             workers: 2,
             out_dir: None,
+            backend: None,
         }
     }
 }
@@ -159,7 +164,7 @@ impl Sweep {
             .filter(|m| !Coordinator::params_path_in(dir, m).exists())
             .collect();
         if !missing.is_empty() {
-            let mut coord = Coordinator::open(dir)?;
+            let mut coord = Coordinator::open_with(dir, self.backend)?;
             for model in missing {
                 coord.ensure_pretrained(model)?;
             }
@@ -174,8 +179,9 @@ impl Sweep {
                 let tx = tx.clone();
                 let next = &next;
                 let jobs = &jobs;
+                let backend = self.backend;
                 s.spawn(move || {
-                    let mut coord = match Coordinator::open(dir) {
+                    let mut coord = match Coordinator::open_with(dir, backend) {
                         Ok(c) => c,
                         Err(e) => {
                             // Don't claim queue slots: healthy workers drain

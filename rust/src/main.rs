@@ -20,8 +20,22 @@ use std::path::PathBuf;
 
 use autoq::coordinator::{Coordinator, JobOutcome, JobSpec, Sweep};
 use autoq::cost::Mode;
+use autoq::runtime::BackendKind;
 use autoq::search::{Granularity, Protocol, ProtocolKind};
 use autoq::util::cli::Args;
+
+/// Shared `--backend` option help (pjrt|reference; empty = auto).
+const BACKEND_HELP: &str = "pjrt|reference (default: $AUTOQ_BACKEND, else auto)";
+
+/// Parse the shared `--backend` option (empty string = auto-resolve).
+fn backend_arg(a: &Args) -> anyhow::Result<Option<BackendKind>> {
+    BackendKind::parse_opt(&a.get("backend"))
+}
+
+/// Open the default-artifact-dir coordinator honouring `--backend`.
+fn open_coord(a: &Args) -> anyhow::Result<Coordinator> {
+    Coordinator::open_with(&Coordinator::default_dir(), backend_arg(a)?)
+}
 
 fn main() {
     autoq::util::logging::init();
@@ -72,6 +86,11 @@ commands:
   repro    <fig1|table2|table3|table4|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|storage|all>
   stats                                        runtime executable stats
 
+Every command takes --backend {pjrt,reference} (or $AUTOQ_BACKEND): `pjrt`
+executes the AOT HLO artifacts, `reference` interprets the same graphs in
+pure Rust — no artifacts, no XLA library, runs anywhere.  Default: pjrt
+iff compiled in and artifacts exist, else reference.
+
 The coordinator job API behind these commands is documented in DESIGN.md.";
 
 fn parse_list<T>(s: &str, f: impl Fn(&str) -> anyhow::Result<T>) -> anyhow::Result<Vec<T>> {
@@ -87,13 +106,14 @@ fn cmd_pretrain(rest: &[String]) -> anyhow::Result<()> {
         .opt("model", "cif10", "zoo model name")
         .opt("steps", "300", "SGD steps")
         .opt("seed", "42", "dataset seed")
+        .opt("backend", "", BACKEND_HELP)
         .parse(rest)?;
     let model = a.get("model");
     let spec = JobSpec::pretrain(&model)
         .steps(a.get_usize("steps")?)
         .data_seed(a.get_u64("seed")?)
         .build()?;
-    let mut coord = Coordinator::open_default()?;
+    let mut coord = open_coord(&a)?;
     let report = coord.run(&spec)?;
     let JobOutcome::Train { final_eval, curve, .. } = &report.outcome else {
         anyhow::bail!("pretrain job returned an unexpected report kind");
@@ -116,6 +136,7 @@ fn cmd_search(rest: &[String]) -> anyhow::Result<()> {
         .opt("seed", "1", "agent seed")
         .opt("target-bits", "5", "B-bar for Algorithm 1 (rc)")
         .opt("out", "", "write best config JSON here")
+        .opt("backend", "", BACKEND_HELP)
         .flag("paper-scale", "use the paper's 400-episode schedule")
         .flag("no-relabel", "disable HIRO goal relabeling (ablation)")
         .parse(rest)?;
@@ -136,7 +157,7 @@ fn cmd_search(rest: &[String]) -> anyhow::Result<()> {
     if !out.is_empty() {
         builder = builder.out(PathBuf::from(&out));
     }
-    let mut coord = Coordinator::open_default()?;
+    let mut coord = open_coord(&a)?;
     let report = coord.run(&builder.build()?)?;
     let JobOutcome::Search { best, history } = &report.outcome else {
         anyhow::bail!("search job returned an unexpected report kind");
@@ -168,8 +189,9 @@ fn cmd_sweep(rest: &[String]) -> anyhow::Result<()> {
         .opt("eval-batches", "2", "val batches per evaluation")
         .opt("seed", "1", "base seed (per-cell seeds derived deterministically)")
         .opt("target-bits", "5", "B-bar for Algorithm 1 (rc cells)")
-        .opt("workers", "2", "worker threads, each with its own PJRT runtime")
+        .opt("workers", "2", "worker threads, each with its own runtime/backend")
         .opt("out-dir", "reports/sweep", "one JobReport JSON per cell lands here")
+        .opt("backend", "", BACKEND_HELP)
         .flag("paper-scale", "use the paper's 400-episode schedule")
         .flag("no-relabel", "disable HIRO goal relabeling (ablation)")
         .parse(rest)?;
@@ -193,6 +215,7 @@ fn cmd_sweep(rest: &[String]) -> anyhow::Result<()> {
         paper_scale: a.get_bool("paper-scale"),
         workers: a.get_usize("workers")?,
         out_dir: Some(PathBuf::from(a.get("out-dir"))),
+        backend: backend_arg(&a)?,
     };
     let result = sweep.run(&Coordinator::default_dir())?;
     println!(
@@ -231,13 +254,14 @@ fn cmd_finetune(rest: &[String]) -> anyhow::Result<()> {
         .opt("model", "cif10", "zoo model name")
         .opt("config", "", "searched config JSON (from search --out)")
         .opt("steps", "200", "fine-tune steps")
+        .opt("backend", "", BACKEND_HELP)
         .parse(rest)?;
     let model = a.get("model");
     let cfgf = a.get("config");
     anyhow::ensure!(!cfgf.is_empty(), "--config required");
     let steps = a.get_usize("steps")?;
     let spec = JobSpec::finetune(&model, PathBuf::from(&cfgf)).steps(steps).build()?;
-    let mut coord = Coordinator::open_default()?;
+    let mut coord = open_coord(&a)?;
     let report = coord.run(&spec)?;
     let JobOutcome::Train { before, final_eval, .. } = &report.outcome else {
         anyhow::bail!("finetune job returned an unexpected report kind");
@@ -256,6 +280,7 @@ fn cmd_eval(rest: &[String]) -> anyhow::Result<()> {
         .opt("model", "cif10", "zoo model name")
         .opt("config", "", "optional searched config JSON")
         .opt("batches", "4", "val batches")
+        .opt("backend", "", BACKEND_HELP)
         .parse(rest)?;
     let model = a.get("model");
     let mut builder = JobSpec::eval(&model).batches(a.get_usize("batches")?);
@@ -263,7 +288,7 @@ fn cmd_eval(rest: &[String]) -> anyhow::Result<()> {
     if !cfgf.is_empty() {
         builder = builder.config(PathBuf::from(&cfgf));
     }
-    let mut coord = Coordinator::open_default()?;
+    let mut coord = open_coord(&a)?;
     let report = coord.run(&builder.build()?)?;
     let JobOutcome::Eval(res) = &report.outcome else {
         anyhow::bail!("eval job returned an unexpected report kind");
@@ -276,6 +301,7 @@ fn cmd_sim(rest: &[String]) -> anyhow::Result<()> {
     let a = Args::new("sim")
         .opt("model", "cif10", "zoo model name")
         .opt("config", "", "searched config JSON")
+        .opt("backend", "", BACKEND_HELP)
         .parse(rest)?;
     let model = a.get("model");
     let mut builder = JobSpec::sim(&model);
@@ -283,7 +309,7 @@ fn cmd_sim(rest: &[String]) -> anyhow::Result<()> {
     if !cfgf.is_empty() {
         builder = builder.config(PathBuf::from(&cfgf));
     }
-    let mut coord = Coordinator::open_default()?;
+    let mut coord = open_coord(&a)?;
     let report = coord.run(&builder.build()?)?;
     let JobOutcome::Sim(rows) = &report.outcome else {
         anyhow::bail!("sim job returned an unexpected report kind");
@@ -298,8 +324,9 @@ fn cmd_sim(rest: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_stats(_rest: &[String]) -> anyhow::Result<()> {
-    let mut coord = Coordinator::open_default()?;
+fn cmd_stats(rest: &[String]) -> anyhow::Result<()> {
+    let a = Args::new("stats").opt("backend", "", BACKEND_HELP).parse(rest)?;
+    let mut coord = open_coord(&a)?;
     println!("{}", coord.runtime().stats_report());
     Ok(())
 }

@@ -1,15 +1,14 @@
-//! Model runner: evaluate and train zoo models through their AOT artifacts.
+//! Model runner: evaluate and train zoo models through their artifacts.
 //!
 //! The search hot path: `eval_config` scores a candidate per-channel bit
 //! assignment on held-out validation batches via `{model}_eval_{mode}`
-//! (whose quantize/binarize inner loops are the L1 Pallas kernels).
-
-use xla::Literal;
+//! (whose quantize/binarize inner loops are the L1 Pallas kernels on the
+//! PJRT backend, and the `runtime::reference` interpreter otherwise).
 
 use crate::cost::hardware::Mode;
 use crate::data::synth::{Batch, Split, SynthDataset};
 use crate::models::params::ParamStore;
-use crate::runtime::{tensor, ModelMeta, Runtime, Tensor};
+use crate::runtime::{ModelMeta, Runtime, Tensor, Value};
 
 pub struct ModelRunner {
     pub meta: ModelMeta,
@@ -46,11 +45,11 @@ impl ModelRunner {
         format!("{}_{}_{}", self.meta.name, kind, mode.as_str())
     }
 
-    fn batch_literals(&self, batch: &Batch, n_expected: usize) -> anyhow::Result<(Literal, Literal)> {
+    fn batch_values(&self, batch: &Batch, n_expected: usize) -> anyhow::Result<(Value, Value)> {
         anyhow::ensure!(batch.n == n_expected, "batch {} vs expected {n_expected}", batch.n);
         let hw = self.meta.image_hw;
-        let img = Tensor::new(vec![batch.n, hw, hw, 3], batch.images.clone()).to_literal()?;
-        let lbl = tensor::lit_i32(&batch.labels, &[batch.n])?;
+        let img = Value::F32(Tensor::new(vec![batch.n, hw, hw, 3], batch.images.clone()));
+        let lbl = Value::i32(vec![batch.n], batch.labels.clone());
         Ok((img, lbl))
     }
 
@@ -69,22 +68,26 @@ impl ModelRunner {
         anyhow::ensure!(abits.len() == self.meta.a_channels, "abits len");
         let name = self.artifact("eval", mode);
         let eb = self.meta.eval_batch;
+        // Parameter/bit values are built once and borrowed per dispatch —
+        // only the batch tensors change across iterations (§Perf).
+        let param_vals: Vec<Value> =
+            self.params.tensors.iter().map(|t| Value::F32(t.clone())).collect();
+        let wb_val = Value::f32(vec![wbits.len()], bits_to_f32(wbits));
+        let ab_val = Value::f32(vec![abits.len()], bits_to_f32(abits));
         let mut correct = 0.0f64;
         let mut loss = 0.0f64;
         for bi in 0..n_batches {
             let batch = data.batch(split, (bi * eb) as u64, eb);
-            let (img, lbl) = self.batch_literals(&batch, eb)?;
-            let mut inputs: Vec<Literal> = Vec::with_capacity(self.params.len() + 4);
-            for t in &self.params.tensors {
-                inputs.push(t.to_literal()?);
-            }
-            inputs.push(img);
-            inputs.push(lbl);
-            inputs.push(Tensor::new(vec![wbits.len()], bits_to_f32(wbits)).to_literal()?);
-            inputs.push(Tensor::new(vec![abits.len()], bits_to_f32(abits)).to_literal()?);
+            let (img, lbl) = self.batch_values(&batch, eb)?;
+            let mut inputs: Vec<&Value> = Vec::with_capacity(param_vals.len() + 4);
+            inputs.extend(param_vals.iter());
+            inputs.push(&img);
+            inputs.push(&lbl);
+            inputs.push(&wb_val);
+            inputs.push(&ab_val);
             let outs = rt.exec(&name, &inputs)?;
-            correct += tensor::scalar_f32(&outs[0])? as f64;
-            loss += tensor::scalar_f32(&outs[1])? as f64;
+            correct += outs[0].scalar_f32()? as f64;
+            loss += outs[1].scalar_f32()? as f64;
         }
         let images = n_batches * eb;
         Ok(EvalResult {
@@ -120,29 +123,33 @@ impl ModelRunner {
         lr: f32,
     ) -> anyhow::Result<f32> {
         let name = self.artifact("train", mode);
-        let (img, lbl) = self.batch_literals(batch, self.meta.train_batch)?;
+        let (img, lbl) = self.batch_values(batch, self.meta.train_batch)?;
         let np = self.params.len();
-        let mut inputs: Vec<Literal> = Vec::with_capacity(2 * np + 5);
+        let mut inputs: Vec<Value> = Vec::with_capacity(2 * np + 5);
         for t in &self.params.tensors {
-            inputs.push(t.to_literal()?);
+            inputs.push(Value::F32(t.clone()));
         }
         for t in &self.momenta.tensors {
-            inputs.push(t.to_literal()?);
+            inputs.push(Value::F32(t.clone()));
         }
         inputs.push(img);
         inputs.push(lbl);
-        inputs.push(Tensor::new(vec![wbits.len()], bits_to_f32(wbits)).to_literal()?);
-        inputs.push(Tensor::new(vec![abits.len()], bits_to_f32(abits)).to_literal()?);
-        inputs.push(Tensor::scalar(lr).to_literal()?);
-        let outs = rt.exec(&name, &inputs)?;
+        inputs.push(Value::f32(vec![wbits.len()], bits_to_f32(wbits)));
+        inputs.push(Value::f32(vec![abits.len()], bits_to_f32(abits)));
+        inputs.push(Value::scalar(lr));
+        let mut outs = rt.exec(&name, &inputs)?;
         anyhow::ensure!(outs.len() == 2 * np + 1, "train outputs {}", outs.len());
-        for (i, t) in self.params.tensors.iter_mut().enumerate() {
-            *t = Tensor::from_literal(&outs[i])?;
+        let loss = outs[2 * np].scalar_f32()?;
+        // Consume outputs back into params/momenta (new params first).
+        for (i, v) in outs.drain(..2 * np).enumerate() {
+            let t = v.into_f32()?;
+            if i < np {
+                self.params.tensors[i] = t;
+            } else {
+                self.momenta.tensors[i - np] = t;
+            }
         }
-        for (i, t) in self.momenta.tensors.iter_mut().enumerate() {
-            *t = Tensor::from_literal(&outs[np + i])?;
-        }
-        tensor::scalar_f32(&outs[2 * np])
+        Ok(loss)
     }
 
     /// Per-output-channel weight variances, network order (Eq.-1 wvar_i).

@@ -20,6 +20,7 @@ pub fn cmd_repro(rest: &[String]) -> anyhow::Result<()> {
         .opt("models", "cif10", "comma-separated models for table2/3")
         .opt("runs", "3", "independent runs for fig8")
         .opt("seed", "1", "base seed")
+        .opt("backend", "", "pjrt|reference (default: $AUTOQ_BACKEND, else auto)")
         .flag("fresh", "ignore cached searched configs")
         .flag("paper-scale", "paper's 400-episode schedule")
         .parse(rest)?;
@@ -36,7 +37,11 @@ pub fn cmd_repro(rest: &[String]) -> anyhow::Result<()> {
     let what = a.positional.first().cloned().unwrap_or_else(|| "help".into());
     let runs = a.get_usize("runs")?;
 
-    let mut coord = crate::coordinator::Coordinator::open_default()?;
+    let backend = crate::runtime::BackendKind::parse_opt(&a.get("backend"))?;
+    let mut coord = crate::coordinator::Coordinator::open_with(
+        &crate::coordinator::Coordinator::default_dir(),
+        backend,
+    )?;
     match what.as_str() {
         "fig1" => fig1(),
         "table2" => tables::table(&mut coord, Mode::Quant, &models, &ctx),

@@ -1,0 +1,131 @@
+//! The execution-backend abstraction: [`Backend`] produces [`Executable`]s
+//! for manifest artifacts, [`BackendKind`] selects an implementation.
+//!
+//! Two backends exist:
+//!   * `pjrt` (feature-gated) — compiles AOT'd HLO-text artifacts through
+//!     the XLA PJRT CPU client (`runtime/client.rs`).  Requires `make
+//!     artifacts` and the XLA extension library.
+//!   * `reference` — a pure-Rust interpreter of the same graphs
+//!     (`runtime/reference/`).  Needs no artifacts, no native library, no
+//!     python: the whole search pipeline runs anywhere `cargo test` does.
+//!
+//! Selection precedence: explicit caller choice (`--backend` /
+//! `Runtime::open_with`) > `$AUTOQ_BACKEND` > auto (PJRT iff compiled in
+//! and `manifest.json` exists in the artifact dir, else reference).
+
+use std::path::Path;
+
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::runtime::value::Value;
+
+/// One compiled/loaded artifact, ready to dispatch.
+pub trait Executable {
+    /// Run on host values; returns the decomposed output tuple in manifest
+    /// output order.  Input arity is validated by [`Runtime`] before
+    /// dispatch.
+    fn execute(&mut self, inputs: &[&Value]) -> anyhow::Result<Vec<Value>>;
+}
+
+/// An execution engine: turns manifest artifacts into executables.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+    /// Load (and compile, where that means something) artifact `spec`.
+    /// `manifest` provides the model/agent metadata interpreters need.
+    fn load(
+        &mut self,
+        spec: &ArtifactSpec,
+        manifest: &Manifest,
+    ) -> anyhow::Result<Box<dyn Executable>>;
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust reference interpreter (always available).
+    Reference,
+    /// PJRT over AOT HLO artifacts (needs the `pjrt` cargo feature).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Reference => "reference",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<BackendKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "reference" | "ref" => Ok(BackendKind::Reference),
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt),
+            other => anyhow::bail!("unknown backend {other:?} (expected pjrt|reference)"),
+        }
+    }
+
+    /// Parse an optional CLI value: empty string means "auto-resolve".
+    /// The single parser behind every `--backend` flag.
+    pub fn parse_opt(s: &str) -> anyhow::Result<Option<BackendKind>> {
+        if s.trim().is_empty() {
+            Ok(None)
+        } else {
+            Ok(Some(Self::parse(s)?))
+        }
+    }
+
+    /// `$AUTOQ_BACKEND`, if set and non-empty.
+    pub fn from_env() -> anyhow::Result<Option<BackendKind>> {
+        match std::env::var("AUTOQ_BACKEND") {
+            Ok(s) if !s.trim().is_empty() => Ok(Some(Self::parse(&s)?)),
+            _ => Ok(None),
+        }
+    }
+
+    /// Resolve the backend for artifact dir `dir`: explicit choice beats
+    /// `$AUTOQ_BACKEND` beats the auto rule (PJRT iff compiled in and the
+    /// dir holds a manifest).
+    pub fn resolve(dir: &Path, explicit: Option<BackendKind>) -> anyhow::Result<BackendKind> {
+        if let Some(k) = explicit {
+            return Ok(k);
+        }
+        if let Some(k) = Self::from_env()? {
+            return Ok(k);
+        }
+        if cfg!(feature = "pjrt") && dir.join("manifest.json").exists() {
+            Ok(BackendKind::Pjrt)
+        } else {
+            Ok(BackendKind::Reference)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_tokens() {
+        assert_eq!(BackendKind::parse("reference").unwrap(), BackendKind::Reference);
+        assert_eq!(BackendKind::parse("REF").unwrap(), BackendKind::Reference);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("cuda").is_err());
+    }
+
+    #[test]
+    fn explicit_beats_auto() {
+        let dir = std::env::temp_dir().join("autoq_no_such_artifacts");
+        let k = BackendKind::resolve(&dir, Some(BackendKind::Pjrt)).unwrap();
+        assert_eq!(k, BackendKind::Pjrt);
+    }
+
+    #[test]
+    fn auto_falls_back_to_reference_without_manifest() {
+        // NOTE: relies on AUTOQ_BACKEND being unset in the test environment;
+        // the CI lanes keep it that way.
+        if BackendKind::from_env().ok().flatten().is_some() {
+            return;
+        }
+        let dir = std::env::temp_dir().join("autoq_no_such_artifacts");
+        let k = BackendKind::resolve(&dir, None).unwrap();
+        assert_eq!(k, BackendKind::Reference);
+    }
+}

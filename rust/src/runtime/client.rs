@@ -1,129 +1,96 @@
-//! PJRT runtime: load AOT'd HLO-text artifacts, compile once, execute from
+//! PJRT execution backend (cargo feature `pjrt`): load AOT'd HLO-text
+//! artifacts, compile once through the XLA PJRT CPU client, execute from
 //! the coordinator hot path.  Adapted from /opt/xla-example/load_hlo/.
 //!
 //! Python is never on this path: artifacts are produced once by
-//! `make artifacts` and this module is self-contained afterwards.
+//! `make artifacts` and this module is self-contained afterwards.  The
+//! [`Value`] ⇄ `xla::Literal` translation happens here, at the backend
+//! edge — the rest of the crate never sees a literal.
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::time::Instant;
 
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
-use crate::runtime::manifest::Manifest;
+use crate::runtime::backend::{Backend, Executable};
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::runtime::tensor::Tensor;
+use crate::runtime::value::Value;
 
-/// Cumulative executable statistics (perf pass / reports).
-#[derive(Debug, Default, Clone)]
-pub struct ExecStats {
-    pub calls: u64,
-    pub total_secs: f64,
-    pub compile_secs: f64,
-}
-
-pub struct Runtime {
+pub struct PjrtBackend {
     client: PjRtClient,
     dir: PathBuf,
-    pub manifest: Manifest,
-    cache: HashMap<String, PjRtLoadedExecutable>,
-    stats: HashMap<String, ExecStats>,
 }
 
-impl Runtime {
-    /// Open the artifact directory (must contain manifest.json).
-    pub fn open(dir: &Path) -> anyhow::Result<Runtime> {
-        let manifest = Manifest::load(dir)?;
+impl PjrtBackend {
+    pub fn new(dir: &Path) -> anyhow::Result<PjrtBackend> {
         let client = PjRtClient::cpu()?;
         crate::info!(
             "pjrt client up: platform={} devices={}",
             client.platform_name(),
             client.device_count()
         );
-        Ok(Runtime {
-            client,
-            dir: dir.to_path_buf(),
-            manifest,
-            cache: HashMap::new(),
-            stats: HashMap::new(),
-        })
+        Ok(PjrtBackend { client, dir: dir.to_path_buf() })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
     }
 
-    /// Default artifact dir: $AUTOQ_ARTIFACTS or ./artifacts — the single
-    /// resolver shared with `Coordinator::default_dir`.
-    pub fn default_dir() -> PathBuf {
-        PathBuf::from(std::env::var("AUTOQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string()))
-    }
-
-    pub fn open_default() -> anyhow::Result<Runtime> {
-        Self::open(&Self::default_dir())
-    }
-
-    /// Compile (once) and return the executable for `name`.
-    pub fn load(&mut self, name: &str) -> anyhow::Result<&PjRtLoadedExecutable> {
-        if !self.cache.contains_key(name) {
-            let spec = self.manifest.artifact(name)?;
-            let path = self.dir.join(&spec.file);
-            let t0 = Instant::now();
-            let proto = HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
-            )?;
-            let comp = XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp)?;
-            let dt = t0.elapsed().as_secs_f64();
-            self.stats.entry(name.to_string()).or_default().compile_secs = dt;
-            crate::debug!("compiled {name} in {dt:.2}s");
-            self.cache.insert(name.to_string(), exe);
-        }
-        Ok(&self.cache[name])
-    }
-
-    /// Execute artifact `name` on host literals; returns the decomposed
-    /// output tuple.  Input arity is validated against the manifest.
-    /// Accepts owned or borrowed literals (`&[Literal]` / `&[&Literal]`) —
-    /// callers that hold long-lived parameter literals pass references and
-    /// skip a full copy per dispatch (EXPERIMENTS.md §Perf, L3 iteration 2).
-    pub fn exec<L: std::borrow::Borrow<Literal>>(
+    fn load(
         &mut self,
-        name: &str,
-        inputs: &[L],
-    ) -> anyhow::Result<Vec<Literal>> {
-        let expected = self.manifest.artifact(name)?.inputs.len();
-        anyhow::ensure!(
-            inputs.len() == expected,
-            "artifact {name}: got {} inputs, manifest says {expected}",
-            inputs.len()
-        );
-        self.load(name)?;
-        let t0 = Instant::now();
-        let exe = &self.cache[name];
-        let result = exe.execute(inputs)?;
+        spec: &ArtifactSpec,
+        _manifest: &Manifest,
+    ) -> anyhow::Result<Box<dyn Executable>> {
+        let path = self.dir.join(&spec.file);
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Box::new(PjrtExecutable { exe }))
+    }
+}
+
+pub struct PjrtExecutable {
+    exe: PjRtLoadedExecutable,
+}
+
+impl Executable for PjrtExecutable {
+    fn execute(&mut self, inputs: &[&Value]) -> anyhow::Result<Vec<Value>> {
+        let lits: Vec<Literal> = inputs
+            .iter()
+            .map(|v| value_to_literal(v))
+            .collect::<anyhow::Result<_>>()?;
+        let result = self.exe.execute(&lits)?;
         // Lowered with return_tuple=True → single tuple output.
         let mut tuple = result[0][0].to_literal_sync()?;
         let outs = tuple.decompose_tuple()?;
-        let st = self.stats.entry(name.to_string()).or_default();
-        st.calls += 1;
-        st.total_secs += t0.elapsed().as_secs_f64();
-        Ok(outs)
+        outs.iter().map(literal_to_value).collect()
     }
+}
 
-    pub fn stats(&self) -> &HashMap<String, ExecStats> {
-        &self.stats
-    }
-
-    pub fn stats_report(&self) -> String {
-        let mut rows: Vec<_> = self.stats.iter().collect();
-        rows.sort_by(|a, b| b.1.total_secs.partial_cmp(&a.1.total_secs).unwrap());
-        let mut s = String::from("artifact                      calls   total(s)  mean(ms)  compile(s)\n");
-        for (name, st) in rows {
-            let mean_ms = if st.calls > 0 {
-                st.total_secs / st.calls as f64 * 1e3
-            } else {
-                0.0
-            };
-            s.push_str(&format!(
-                "{name:<28} {:>6} {:>10.2} {:>9.2} {:>11.2}\n",
-                st.calls, st.total_secs, mean_ms, st.compile_secs
-            ));
+fn value_to_literal(v: &Value) -> anyhow::Result<Literal> {
+    match v {
+        Value::F32(t) => {
+            if t.shape.is_empty() {
+                return Ok(Literal::scalar(t.data[0]));
+            }
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            Ok(Literal::vec1(&t.data).reshape(&dims)?)
         }
-        s
+        Value::I32 { shape, data } => {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            Ok(Literal::vec1(data).reshape(&dims)?)
+        }
     }
+}
+
+fn literal_to_value(lit: &Literal) -> anyhow::Result<Value> {
+    // Every artifact output in the manifest is f32 (labels are inputs only),
+    // so the translation does not need dtype dispatch.
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    Ok(Value::F32(Tensor::new(dims, lit.to_vec::<f32>()?)))
 }

@@ -1,11 +1,170 @@
-//! Runtime layer: PJRT client wrapper (xla crate: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `compile` → `execute`), the artifact
-//! manifest, and host-side tensors.
+//! Runtime layer: the pluggable execution-backend abstraction
+//! ([`Backend`]/[`Executable`]), the [`Runtime`] facade that owns one
+//! backend plus an executable cache, the artifact manifest, and host-side
+//! tensors/values.
+//!
+//! Backends: `reference` (pure-Rust interpreter, always available — see
+//! `reference/`) and `pjrt` (XLA PJRT over AOT HLO artifacts, behind the
+//! `pjrt` cargo feature — see `client.rs`).  DESIGN.md §Execution backends
+//! documents the numerics and the selection rules.
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod client;
 pub mod manifest;
+pub mod reference;
 pub mod tensor;
+pub mod value;
 
-pub use client::Runtime;
+pub use backend::{Backend, BackendKind, Executable};
 pub use manifest::{AgentMeta, ArtifactSpec, LayerMeta, Manifest, ModelMeta, ParamSpec, TensorSpec};
 pub use tensor::Tensor;
+pub use value::Value;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// Cumulative executable statistics (perf pass / reports).
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+    pub compile_secs: f64,
+}
+
+/// The execution facade every subsystem holds: one backend, one manifest,
+/// a name → executable cache and per-artifact stats.  All callers are
+/// backend-agnostic — `exec("cif10_eval_quant", inputs)` behaves
+/// identically (within float tolerance) on PJRT and the reference
+/// interpreter.
+pub struct Runtime {
+    backend: Box<dyn Backend>,
+    kind: BackendKind,
+    pub manifest: Manifest,
+    cache: HashMap<String, Box<dyn Executable>>,
+    stats: HashMap<String, ExecStats>,
+}
+
+impl Runtime {
+    /// Open with automatic backend selection (see [`BackendKind::resolve`]).
+    pub fn open(dir: &Path) -> anyhow::Result<Runtime> {
+        Self::open_with(dir, BackendKind::resolve(dir, None)?)
+    }
+
+    /// Open with an explicit backend.  The reference backend synthesizes
+    /// its manifest from the built-in model zoo and never touches `dir`;
+    /// PJRT loads `dir/manifest.json` and compiles HLO from `dir`.
+    pub fn open_with(dir: &Path, kind: BackendKind) -> anyhow::Result<Runtime> {
+        let (backend, manifest): (Box<dyn Backend>, Manifest) = match kind {
+            BackendKind::Reference => (
+                Box::new(reference::RefBackend::new()),
+                reference::builtin_manifest(),
+            ),
+            #[cfg(feature = "pjrt")]
+            BackendKind::Pjrt => {
+                (Box::new(client::PjrtBackend::new(dir)?), Manifest::load(dir)?)
+            }
+            #[cfg(not(feature = "pjrt"))]
+            BackendKind::Pjrt => {
+                let _ = dir;
+                anyhow::bail!(
+                    "backend pjrt requested but this build has no `pjrt` cargo feature \
+                     (rebuild with --features pjrt, or use --backend reference)"
+                );
+            }
+        };
+        crate::info!("runtime up: backend={}", kind.as_str());
+        Ok(Runtime {
+            backend,
+            kind,
+            manifest,
+            cache: HashMap::new(),
+            stats: HashMap::new(),
+        })
+    }
+
+    /// Default artifact dir: $AUTOQ_ARTIFACTS or ./artifacts — the single
+    /// resolver shared with `Coordinator::default_dir`.
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(std::env::var("AUTOQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string()))
+    }
+
+    pub fn open_default() -> anyhow::Result<Runtime> {
+        Self::open(&Self::default_dir())
+    }
+
+    pub fn backend_kind(&self) -> BackendKind {
+        self.kind
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Load (once) the executable for `name` into the cache.
+    pub fn load(&mut self, name: &str) -> anyhow::Result<()> {
+        if !self.cache.contains_key(name) {
+            let spec = self.manifest.artifact(name)?.clone();
+            let t0 = Instant::now();
+            let exe = self.backend.load(&spec, &self.manifest)?;
+            let dt = t0.elapsed().as_secs_f64();
+            self.stats.entry(name.to_string()).or_default().compile_secs = dt;
+            crate::debug!("loaded {name} in {dt:.2}s ({})", self.backend.name());
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(())
+    }
+
+    /// Execute artifact `name` on host values; returns the decomposed
+    /// output tuple.  Input arity is validated against the manifest.
+    /// Accepts owned or borrowed values (`&[Value]` / `&[&Value]`) —
+    /// callers that hold long-lived parameter values pass references and
+    /// skip a full copy per dispatch (EXPERIMENTS.md §Perf, L3 iteration 2).
+    pub fn exec<V: std::borrow::Borrow<Value>>(
+        &mut self,
+        name: &str,
+        inputs: &[V],
+    ) -> anyhow::Result<Vec<Value>> {
+        let expected = self.manifest.artifact(name)?.inputs.len();
+        anyhow::ensure!(
+            inputs.len() == expected,
+            "artifact {name}: got {} inputs, manifest says {expected}",
+            inputs.len()
+        );
+        self.load(name)?;
+        let t0 = Instant::now();
+        let refs: Vec<&Value> = inputs.iter().map(|v| v.borrow()).collect();
+        let exe = self.cache.get_mut(name).expect("loaded above");
+        let outs = exe.execute(&refs)?;
+        let st = self.stats.entry(name.to_string()).or_default();
+        st.calls += 1;
+        st.total_secs += t0.elapsed().as_secs_f64();
+        Ok(outs)
+    }
+
+    pub fn stats(&self) -> &HashMap<String, ExecStats> {
+        &self.stats
+    }
+
+    pub fn stats_report(&self) -> String {
+        let mut rows: Vec<_> = self.stats.iter().collect();
+        rows.sort_by(|a, b| b.1.total_secs.partial_cmp(&a.1.total_secs).unwrap());
+        let mut s = format!(
+            "backend: {}\nartifact                      calls   total(s)  mean(ms)  compile(s)\n",
+            self.backend.name()
+        );
+        for (name, st) in rows {
+            let mean_ms = if st.calls > 0 {
+                st.total_secs / st.calls as f64 * 1e3
+            } else {
+                0.0
+            };
+            s.push_str(&format!(
+                "{name:<28} {:>6} {:>10.2} {:>9.2} {:>11.2}\n",
+                st.calls, st.total_secs, mean_ms, st.compile_secs
+            ));
+        }
+        s
+    }
+}

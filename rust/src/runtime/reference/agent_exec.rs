@@ -1,0 +1,478 @@
+//! Reference interpreter for the DDPG artifacts (`ddpg_act_s{S}`,
+//! `ddpg_update_s{S}`) — the actor/critic MLP graphs of
+//! `python/compile/agent.py`: 2×300-unit ReLU hidden layers, sigmoid·32
+//! actor head, fused TD(0) critic + deterministic-policy-gradient actor
+//! update with Adam for both and τ-soft target updates.
+
+use crate::runtime::backend::Executable;
+use crate::runtime::reference::nn::{matmul_a_bt, matmul_at_b_acc, relu_bwd};
+use crate::runtime::reference::zoo::ACTION_SCALE;
+use crate::runtime::tensor::Tensor;
+use crate::runtime::value::Value;
+
+// Adam hyper-parameters (python `agent.py`).
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+/// One 3-layer MLP parameter view: [w1, b1, w2, b2, w3, b3].
+struct Mlp<'a> {
+    w1: &'a Tensor,
+    b1: &'a Tensor,
+    w2: &'a Tensor,
+    b2: &'a Tensor,
+    w3: &'a Tensor,
+    b3: &'a Tensor,
+}
+
+impl<'a> Mlp<'a> {
+    fn from(params: &[&'a Tensor]) -> anyhow::Result<Mlp<'a>> {
+        anyhow::ensure!(params.len() == 6, "MLP needs 6 parameter tensors");
+        Ok(Mlp {
+            w1: params[0],
+            b1: params[1],
+            w2: params[2],
+            b2: params[3],
+            w3: params[4],
+            b3: params[5],
+        })
+    }
+
+    fn in_dim(&self) -> usize {
+        self.w1.shape[0]
+    }
+    fn hidden(&self) -> usize {
+        self.w1.shape[1]
+    }
+}
+
+/// Forward cache for the backward pass: post-ReLU hiddens + linear output.
+struct MlpCache {
+    h1: Vec<f32>,
+    h2: Vec<f32>,
+    /// z = h2·w3 + b3, pre-head (B, 1).
+    z: Vec<f32>,
+}
+
+/// x (B, in) → z (B, 1); `relu(x·w1+b1) → relu(·w2+b2) → ·w3+b3`.
+fn mlp_forward(p: &Mlp, x: &[f32], b: usize) -> MlpCache {
+    let (din, h) = (p.in_dim(), p.hidden());
+    debug_assert_eq!(x.len(), b * din);
+    let mut h1 = vec![0.0f32; b * h];
+    for i in 0..b {
+        h1[i * h..(i + 1) * h].copy_from_slice(&p.b1.data);
+    }
+    crate::runtime::reference::nn::matmul_acc(&mut h1, x, &p.w1.data, b, din, h);
+    for v in h1.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+    let mut h2 = vec![0.0f32; b * h];
+    for i in 0..b {
+        h2[i * h..(i + 1) * h].copy_from_slice(&p.b2.data);
+    }
+    crate::runtime::reference::nn::matmul_acc(&mut h2, &h1, &p.w2.data, b, h, h);
+    for v in h2.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+    let mut z = vec![0.0f32; b];
+    for i in 0..b {
+        let row = &h2[i * h..(i + 1) * h];
+        let mut acc = p.b3.data[0];
+        for (j, &v) in row.iter().enumerate() {
+            acc += v * p.w3.data[j]; // w3 is (h, 1)
+        }
+        z[i] = acc;
+    }
+    MlpCache { h1, h2, z }
+}
+
+/// Backward through the MLP given dz (B, 1): returns param grads in
+/// [w1, b1, w2, b2, w3, b3] order plus the input gradient (B, in).
+fn mlp_backward(p: &Mlp, x: &[f32], b: usize, cache: &MlpCache, dz: &[f32]) -> (Vec<Vec<f32>>, Vec<f32>) {
+    let (din, h) = (p.in_dim(), p.hidden());
+    // Head: z = h2·w3 + b3.
+    let mut dw3 = vec![0.0f32; h];
+    let mut db3 = 0.0f32;
+    let mut dh2 = vec![0.0f32; b * h];
+    for i in 0..b {
+        let g = dz[i];
+        db3 += g;
+        let h2row = &cache.h2[i * h..(i + 1) * h];
+        let drow = &mut dh2[i * h..(i + 1) * h];
+        for j in 0..h {
+            dw3[j] += h2row[j] * g;
+            drow[j] = p.w3.data[j] * g;
+        }
+    }
+    relu_bwd(&mut dh2, &cache.h2);
+    // Layer 2: h2 = relu(h1·w2 + b2).
+    let mut dw2 = vec![0.0f32; h * h];
+    matmul_at_b_acc(&mut dw2, &cache.h1, &dh2, b, h, h);
+    let db2 = col_sums(&dh2, b, h);
+    let mut dh1 = matmul_a_bt(&dh2, &p.w2.data, b, h, h);
+    relu_bwd(&mut dh1, &cache.h1);
+    // Layer 1: h1 = relu(x·w1 + b1).
+    let mut dw1 = vec![0.0f32; din * h];
+    matmul_at_b_acc(&mut dw1, x, &dh1, b, din, h);
+    let db1 = col_sums(&dh1, b, h);
+    let dx = matmul_a_bt(&dh1, &p.w1.data, b, h, din);
+    (vec![dw1, db1, dw2, db2, dw3, vec![db3]], dx)
+}
+
+fn refs(ts: &[Tensor]) -> Vec<&Tensor> {
+    ts.iter().collect()
+}
+
+fn col_sums(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c] += x[r * cols + c];
+        }
+    }
+    out
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// μ(s) = sigmoid(z)·32 for each row; returns (actions, sigmoids).
+fn actor_head(z: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let sig: Vec<f32> = z.iter().map(|&v| sigmoid(v)).collect();
+    let act: Vec<f32> = sig.iter().map(|&s| s * ACTION_SCALE as f32).collect();
+    (act, sig)
+}
+
+/// Critic input: concat(s, a/32) row-wise.
+fn critic_input(s: &[f32], a: &[f32], b: usize, s_dim: usize) -> Vec<f32> {
+    let mut x = vec![0.0f32; b * (s_dim + 1)];
+    for i in 0..b {
+        x[i * (s_dim + 1)..i * (s_dim + 1) + s_dim]
+            .copy_from_slice(&s[i * s_dim..(i + 1) * s_dim]);
+        x[i * (s_dim + 1) + s_dim] = a[i] / ACTION_SCALE as f32;
+    }
+    x
+}
+
+// ---------------------------------------------------------------------------
+// Executables
+// ---------------------------------------------------------------------------
+
+/// `ddpg_act_s{S}`: (actor(6), states (B, S)) → actions (B, 1) ∈ [0, 32].
+pub struct RefDdpgAct {
+    pub s_dim: usize,
+}
+
+impl Executable for RefDdpgAct {
+    fn execute(&mut self, inputs: &[&Value]) -> anyhow::Result<Vec<Value>> {
+        anyhow::ensure!(inputs.len() == 7, "act arity");
+        let params: Vec<&Tensor> =
+            inputs[..6].iter().map(|v| v.as_f32()).collect::<anyhow::Result<_>>()?;
+        let actor = Mlp::from(&params)?;
+        let states = inputs[6].as_f32()?;
+        anyhow::ensure!(states.shape.len() == 2 && states.shape[1] == self.s_dim, "states shape");
+        let b = states.shape[0];
+        let cache = mlp_forward(&actor, &states.data, b);
+        let (actions, _) = actor_head(&cache.z);
+        Ok(vec![Value::f32(vec![b, 1], actions)])
+    }
+}
+
+/// `ddpg_update_s{S}`: one fused off-policy step (python `update_fn`).
+pub struct RefDdpgUpdate {
+    pub s_dim: usize,
+}
+
+impl Executable for RefDdpgUpdate {
+    fn execute(&mut self, inputs: &[&Value]) -> anyhow::Result<Vec<Value>> {
+        anyhow::ensure!(inputs.len() == 58, "update arity");
+        let mut i = 0usize;
+        let mut take6 = |inputs: &[&Value]| -> anyhow::Result<Vec<Tensor>> {
+            let out: anyhow::Result<Vec<Tensor>> =
+                inputs[i..i + 6].iter().map(|v| Ok(v.as_f32()?.clone())).collect();
+            i += 6;
+            out
+        };
+        let actor = take6(inputs)?;
+        let critic = take6(inputs)?;
+        let t_actor = take6(inputs)?;
+        let t_critic = take6(inputs)?;
+        let m_a = take6(inputs)?;
+        let v_a = take6(inputs)?;
+        let m_c = take6(inputs)?;
+        let v_c = take6(inputs)?;
+        let t = inputs[i].scalar_f32()?;
+        let s = inputs[i + 1].as_f32()?;
+        let a = inputs[i + 2].as_f32()?;
+        let r = inputs[i + 3].as_f32()?;
+        let s2 = inputs[i + 4].as_f32()?;
+        let done = inputs[i + 5].as_f32()?;
+        let gamma = inputs[i + 6].scalar_f32()?;
+        let tau = inputs[i + 7].scalar_f32()?;
+        let lr_a = inputs[i + 8].scalar_f32()?;
+        let lr_c = inputs[i + 9].scalar_f32()?;
+
+        let s_dim = self.s_dim;
+        let b = s.shape[0];
+        anyhow::ensure!(s.shape == vec![b, s_dim] && s2.shape == vec![b, s_dim], "state shapes");
+        anyhow::ensure!(a.data.len() == b && r.data.len() == b && done.data.len() == b, "batch");
+
+        // --- critic target: r + γ(1−done)·Q'(s2, μ'(s2)), stop-gradient ----
+        let ta = Mlp::from(&refs(&t_actor))?;
+        let tc = Mlp::from(&refs(&t_critic))?;
+        let c2 = mlp_forward(&ta, &s2.data, b);
+        let (a2, _) = actor_head(&c2.z);
+        let x2 = critic_input(&s2.data, &a2, b, s_dim);
+        let q2 = mlp_forward(&tc, &x2, b).z;
+        let q_tgt: Vec<f32> = (0..b)
+            .map(|j| r.data[j] + gamma * (1.0 - done.data[j]) * q2[j])
+            .collect();
+
+        // --- critic: TD(0) regression --------------------------------------
+        let cr = Mlp::from(&refs(&critic))?;
+        let xc = critic_input(&s.data, &a.data, b, s_dim);
+        let qc = mlp_forward(&cr, &xc, b);
+        let closs = qc
+            .z
+            .iter()
+            .zip(&q_tgt)
+            .map(|(&q, &qt)| {
+                let d = q - qt;
+                (d * d) as f64
+            })
+            .sum::<f64>() as f32
+            / b as f32;
+        let dq: Vec<f32> = qc.z.iter().zip(&q_tgt).map(|(&q, &qt)| 2.0 * (q - qt) / b as f32).collect();
+        let (cgrads, _) = mlp_backward(&cr, &xc, b, &qc, &dq);
+
+        // --- actor: deterministic policy gradient through the critic -------
+        let ac = Mlp::from(&refs(&actor))?;
+        let pa = mlp_forward(&ac, &s.data, b);
+        let (mu, sig) = actor_head(&pa.z);
+        let xa = critic_input(&s.data, &mu, b, s_dim);
+        let qa = mlp_forward(&cr, &xa, b);
+        let aloss = -(qa.z.iter().map(|&q| q as f64).sum::<f64>() as f32) / b as f32;
+        let dqa: Vec<f32> = vec![-1.0 / b as f32; b];
+        let (_, dxa) = mlp_backward(&cr, &xa, b, &qa, &dqa);
+        // d(action) = dx[:, s_dim] / 32; through sigmoid·32 head: ·32·σ(1−σ).
+        let dz: Vec<f32> = (0..b)
+            .map(|j| {
+                let da = dxa[j * (s_dim + 1) + s_dim] / ACTION_SCALE as f32;
+                da * ACTION_SCALE as f32 * sig[j] * (1.0 - sig[j])
+            })
+            .collect();
+        let (agrads, _) = mlp_backward(&ac, &s.data, b, &pa, &dz);
+
+        // --- Adam + soft target updates ------------------------------------
+        let t1 = t + 1.0;
+        let (new_critic, m_c, v_c) = adam(&critic, &cgrads, &m_c, &v_c, t1, lr_c);
+        let (new_actor, m_a, v_a) = adam(&actor, &agrads, &m_a, &v_a, t1, lr_a);
+        let new_t_actor = soft_update(&new_actor, &t_actor, tau);
+        let new_t_critic = soft_update(&new_critic, &t_critic, tau);
+
+        let mut outs: Vec<Value> = Vec::with_capacity(51);
+        for group in [new_actor, new_critic, new_t_actor, new_t_critic, m_a, v_a, m_c, v_c] {
+            for t in group {
+                outs.push(Value::F32(t));
+            }
+        }
+        outs.push(Value::scalar(t1));
+        outs.push(Value::scalar(closs));
+        outs.push(Value::scalar(aloss));
+        Ok(outs)
+    }
+}
+
+/// Bias-corrected Adam step (python `_adam`): returns (params, m, v).
+fn adam(
+    params: &[Tensor],
+    grads: &[Vec<f32>],
+    m: &[Tensor],
+    v: &[Tensor],
+    t1: f32,
+    lr: f32,
+) -> (Vec<Tensor>, Vec<Tensor>, Vec<Tensor>) {
+    let bc1 = 1.0 - ADAM_B1.powf(t1);
+    let bc2 = 1.0 - ADAM_B2.powf(t1);
+    let mut new_p = Vec::with_capacity(params.len());
+    let mut new_m = Vec::with_capacity(params.len());
+    let mut new_v = Vec::with_capacity(params.len());
+    for idx in 0..params.len() {
+        let g = &grads[idx];
+        let mut mi = m[idx].data.clone();
+        let mut vi = v[idx].data.clone();
+        let mut pi = params[idx].data.clone();
+        for j in 0..pi.len() {
+            mi[j] = ADAM_B1 * mi[j] + (1.0 - ADAM_B1) * g[j];
+            vi[j] = ADAM_B2 * vi[j] + (1.0 - ADAM_B2) * g[j] * g[j];
+            let mh = mi[j] / bc1;
+            let vh = vi[j] / bc2;
+            pi[j] -= lr * mh / (vh.sqrt() + ADAM_EPS);
+        }
+        new_p.push(Tensor::new(params[idx].shape.clone(), pi));
+        new_m.push(Tensor::new(m[idx].shape.clone(), mi));
+        new_v.push(Tensor::new(v[idx].shape.clone(), vi));
+    }
+    (new_p, new_m, new_v)
+}
+
+/// τ·p + (1−τ)·target, element-wise per tensor.
+fn soft_update(p: &[Tensor], target: &[Tensor], tau: f32) -> Vec<Tensor> {
+    p.iter()
+        .zip(target)
+        .map(|(pi, ti)| {
+            let data: Vec<f32> =
+                pi.data.iter().zip(&ti.data).map(|(&a, &b)| tau * a + (1.0 - tau) * b).collect();
+            Tensor::new(pi.shape.clone(), data)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::reference::zoo::{actor_shapes, critic_shapes, ACT_BATCH, UPD_BATCH};
+
+    fn zeros_of(shapes: &[Vec<usize>]) -> Vec<Value> {
+        shapes.iter().map(|s| Value::F32(Tensor::zeros(s.clone()))).collect()
+    }
+
+    #[test]
+    fn zero_actor_emits_midrange_actions() {
+        let mut exe = RefDdpgAct { s_dim: 16 };
+        let mut inputs = zeros_of(&actor_shapes(16));
+        inputs.push(Value::F32(Tensor::zeros(vec![ACT_BATCH, 16])));
+        let refs: Vec<&Value> = inputs.iter().collect();
+        let outs = exe.execute(&refs).unwrap();
+        assert_eq!(outs.len(), 1);
+        let a = outs[0].as_f32().unwrap();
+        assert_eq!(a.shape, vec![ACT_BATCH, 1]);
+        for &x in &a.data {
+            assert!((x - 16.0).abs() < 1e-5, "sigmoid(0)·32 must be 16, got {x}");
+        }
+    }
+
+    #[test]
+    fn actions_stay_in_range_for_random_params() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let mut exe = RefDdpgAct { s_dim: 17 };
+        let mut inputs: Vec<Value> = actor_shapes(17)
+            .iter()
+            .map(|s| {
+                let mut t = Tensor::zeros(s.clone());
+                rng.fill_normal_f32(&mut t.data, 0.3);
+                Value::F32(t)
+            })
+            .collect();
+        let mut st = Tensor::zeros(vec![ACT_BATCH, 17]);
+        rng.fill_normal_f32(&mut st.data, 1.0);
+        inputs.push(Value::F32(st));
+        let refs: Vec<&Value> = inputs.iter().collect();
+        let outs = exe.execute(&refs).unwrap();
+        for &x in &outs[0].as_f32().unwrap().data {
+            assert!((0.0..=32.0).contains(&x));
+        }
+    }
+
+    /// Build a full 58-input update call with small random nets.
+    fn update_inputs(s_dim: usize, seed: u64) -> Vec<Value> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut mk = |shapes: &[Vec<usize>], sigma: f32| -> Vec<Value> {
+            shapes
+                .iter()
+                .map(|s| {
+                    let mut t = Tensor::zeros(s.clone());
+                    if sigma > 0.0 {
+                        rng.fill_normal_f32(&mut t.data, sigma);
+                    }
+                    Value::F32(t)
+                })
+                .collect()
+        };
+        let a6 = actor_shapes(s_dim);
+        let c6 = critic_shapes(s_dim);
+        let mut inputs = Vec::new();
+        inputs.extend(mk(&a6, 0.1)); // actor
+        inputs.extend(mk(&c6, 0.1)); // critic
+        inputs.extend(mk(&a6, 0.1)); // target actor
+        inputs.extend(mk(&c6, 0.1)); // target critic
+        inputs.extend(mk(&a6, 0.0)); // m_a
+        inputs.extend(mk(&a6, 0.0)); // v_a
+        inputs.extend(mk(&c6, 0.0)); // m_c
+        inputs.extend(mk(&c6, 0.0)); // v_c
+        inputs.push(Value::scalar(0.0)); // t
+        let b = UPD_BATCH;
+        let mut s = Tensor::zeros(vec![b, s_dim]);
+        rng.fill_normal_f32(&mut s.data, 0.5);
+        inputs.push(Value::F32(s));
+        let a = Tensor::full(vec![b, 1], 12.0);
+        inputs.push(Value::F32(a));
+        inputs.push(Value::F32(Tensor::full(vec![b, 1], 0.3))); // r
+        let mut s2 = Tensor::zeros(vec![b, s_dim]);
+        rng.fill_normal_f32(&mut s2.data, 0.5);
+        inputs.push(Value::F32(s2));
+        inputs.push(Value::F32(Tensor::zeros(vec![b, 1]))); // done
+        inputs.push(Value::scalar(0.99)); // gamma
+        inputs.push(Value::scalar(0.01)); // tau
+        inputs.push(Value::scalar(1e-3)); // lr_a
+        inputs.push(Value::scalar(1e-3)); // lr_c
+        inputs
+    }
+
+    #[test]
+    fn update_shapes_losses_and_time_counter() {
+        let mut exe = RefDdpgUpdate { s_dim: 16 };
+        let inputs = update_inputs(16, 5);
+        let refs: Vec<&Value> = inputs.iter().collect();
+        let outs = exe.execute(&refs).unwrap();
+        assert_eq!(outs.len(), 51);
+        assert_eq!(outs[48].scalar_f32().unwrap(), 1.0); // t+1
+        let closs = outs[49].scalar_f32().unwrap();
+        let aloss = outs[50].scalar_f32().unwrap();
+        assert!(closs.is_finite() && closs >= 0.0);
+        assert!(aloss.is_finite());
+        // Output shapes mirror the input parameter shapes.
+        for (j, v) in outs[..48].iter().enumerate() {
+            assert_eq!(v.shape(), inputs[j].shape(), "output {j}");
+        }
+        // Parameters actually moved.
+        let p0_in = inputs[0].as_f32().unwrap();
+        let p0_out = outs[0].as_f32().unwrap();
+        assert_ne!(p0_in.data, p0_out.data);
+    }
+
+    #[test]
+    fn repeated_updates_reduce_critic_loss() {
+        // Fixed batch, fixed target values → TD regression must descend.
+        let mut exe = RefDdpgUpdate { s_dim: 16 };
+        let mut inputs = update_inputs(16, 11);
+        let mut losses = Vec::new();
+        for _ in 0..30 {
+            let refs: Vec<&Value> = inputs.iter().collect();
+            let outs = exe.execute(&refs).unwrap();
+            losses.push(outs[49].scalar_f32().unwrap());
+            for (j, v) in outs.into_iter().take(49).enumerate() {
+                inputs[j] = v; // feed nets, moments and t back in
+            }
+        }
+        assert!(
+            losses.last().unwrap() < losses.first().unwrap(),
+            "critic loss did not drop: first {} last {}",
+            losses.first().unwrap(),
+            losses.last().unwrap()
+        );
+    }
+
+    #[test]
+    fn soft_update_interpolates() {
+        let p = vec![Tensor::full(vec![2], 1.0)];
+        let t = vec![Tensor::full(vec![2], 0.0)];
+        let out = soft_update(&p, &t, 0.25);
+        assert_eq!(out[0].data, vec![0.25, 0.25]);
+    }
+}

@@ -1,0 +1,103 @@
+//! The pure-Rust reference execution backend: interprets the manifest's
+//! model and agent graphs directly — conv/fc forward with per-channel
+//! fake-quantization/binarization for eval, STE backward + SGD-momentum
+//! for training, and the DDPG actor/critic MLPs with the fused
+//! Adam/soft-target update — so pretrain, search, sweep, baselines,
+//! fine-tune and repro all run with **zero AOT artifacts** and no native
+//! XLA library.
+//!
+//! Numerics track the JAX graphs within float tolerance (same padding
+//! rules, GroupNorm groups/ε, ties-to-even rounding in the quantizers);
+//! the opt-in PJRT CI lane cross-checks eval accuracy between backends.
+
+pub mod agent_exec;
+pub mod model_exec;
+pub mod nn;
+pub mod quantize;
+pub mod zoo;
+
+pub use zoo::builtin_manifest;
+
+use crate::runtime::backend::{Backend, Executable};
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+
+/// The reference backend carries no state: every executable is
+/// self-contained (graph + mode), built straight from the builtin zoo.
+#[derive(Debug, Default)]
+pub struct RefBackend;
+
+impl RefBackend {
+    pub fn new() -> RefBackend {
+        RefBackend
+    }
+}
+
+impl Backend for RefBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn load(
+        &mut self,
+        spec: &ArtifactSpec,
+        _manifest: &Manifest,
+    ) -> anyhow::Result<Box<dyn Executable>> {
+        let name = spec.name.as_str();
+        if let Some(s) = name.strip_prefix("ddpg_act_s") {
+            let s_dim: usize = s.parse()?;
+            return Ok(Box::new(agent_exec::RefDdpgAct { s_dim }));
+        }
+        if let Some(s) = name.strip_prefix("ddpg_update_s") {
+            let s_dim: usize = s.parse()?;
+            return Ok(Box::new(agent_exec::RefDdpgUpdate { s_dim }));
+        }
+        // "{model}_{eval|train}_{quant|binar}"
+        for (infix, is_train) in [("_eval_", false), ("_train_", true)] {
+            if let Some(pos) = name.find(infix) {
+                let model = &name[..pos];
+                let mode = &name[pos + infix.len()..];
+                let binar = match mode {
+                    "quant" => false,
+                    "binar" => true,
+                    other => anyhow::bail!("artifact {name}: unknown mode {other:?}"),
+                };
+                let graph = zoo::model_graph(model)?;
+                return Ok(if is_train {
+                    Box::new(model_exec::RefModelTrain { graph, binar })
+                } else {
+                    Box::new(model_exec::RefModelEval { graph, binar })
+                });
+            }
+        }
+        anyhow::bail!("reference backend cannot interpret artifact {name:?}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(name: &str) -> anyhow::Result<Box<dyn Executable>> {
+        let m = builtin_manifest();
+        let spec = m.artifact(name)?.clone();
+        RefBackend::new().load(&spec, &m)
+    }
+
+    #[test]
+    fn every_builtin_artifact_loads() {
+        let m = builtin_manifest();
+        for name in m.artifacts.keys() {
+            assert!(load(name).is_ok(), "{name} must load");
+        }
+    }
+
+    #[test]
+    fn unknown_artifacts_rejected() {
+        let m = builtin_manifest();
+        let mut spec = m.artifact("cif10_eval_quant").unwrap().clone();
+        spec.name = "cif10_compile_quant".into();
+        assert!(RefBackend::new().load(&spec, &m).is_err());
+        spec.name = "cif10_eval_fp8".into();
+        assert!(RefBackend::new().load(&spec, &m).is_err());
+    }
+}

@@ -1,0 +1,632 @@
+//! Reference interpreter for the model artifacts: `{model}_eval_{mode}`
+//! (forward + accuracy/loss head) and `{model}_train_{mode}` (forward,
+//! STE backward, SGD-momentum update) — the same graphs
+//! `python/compile/model.py` lowers to HLO, walked node-by-node in Rust.
+//!
+//! STE semantics match the JAX export: the forward pass computes with
+//! quantized weights/activations, the backward pass treats both quantizers
+//! as identity (`q = x + stop_gradient(q − x)`), so weight gradients are
+//! taken at the quantized point and flow to the raw parameters unchanged.
+
+use crate::runtime::backend::Executable;
+use crate::runtime::reference::nn::{
+    add_bias, bias_bwd, cmajor_to_nhwc, cmajor_to_w, conv2d, conv2d_bwd, dwconv2d, dwconv2d_bwd,
+    gap, gap_bwd, group_norm, group_norm_bwd, matmul, matmul_a_bt, matmul_at_b_acc, maxpool2,
+    maxpool2_bwd, nhwc_to_cmajor, relu, relu_bwd, softmax_xent, w_to_cmajor, Dims, GnCache,
+};
+use crate::runtime::reference::quantize::quantize_rows;
+use crate::runtime::reference::zoo::{LType, ModelGraph, Node};
+use crate::runtime::tensor::Tensor;
+use crate::runtime::value::Value;
+
+/// Activation flowing through the walk: NHWC feature maps, or the flat
+/// (n, c) form after global average pooling.
+#[derive(Clone)]
+enum ActT {
+    A4(Dims, Vec<f32>),
+    A2 { n: usize, c: usize, data: Vec<f32> },
+}
+
+impl ActT {
+    fn channels(&self) -> usize {
+        match self {
+            ActT::A4(d, _) => d.c,
+            ActT::A2 { c, .. } => *c,
+        }
+    }
+    fn into4(self) -> (Dims, Vec<f32>) {
+        match self {
+            ActT::A4(d, data) => (d, data),
+            ActT::A2 { .. } => panic!("expected NHWC activation"),
+        }
+    }
+}
+
+/// Per-layer backward state.
+struct LayerTape {
+    li: usize,
+    xq: ActT,
+    /// Quantized weight in the parameter's row-major layout.
+    wq: Vec<f32>,
+    gn: Option<GnCache>,
+    out_d: Dims,
+    /// Post-ReLU output (mask source) when the layer activates.
+    relu_out: Option<Vec<f32>>,
+}
+
+/// Per-node backward state.
+enum Tape {
+    Layer(LayerTape),
+    Pool { idx: Vec<u32>, in_d: Dims },
+    Gap { d: Dims },
+    Basic { c1: LayerTape, c2: LayerTape, proj: Option<LayerTape>, relu_out: Vec<f32> },
+    Fire { sq: LayerTape, e1: LayerTape, e3: LayerTape, e1_cout: usize },
+    Irb { expand: Option<LayerTape>, dw: LayerTape, project: LayerTape, residual: bool },
+}
+
+fn add_vec(a: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x += y;
+    }
+}
+
+/// One primitive layer: per-channel quantize input + weight, conv/matmul,
+/// norm or bias, optional ReLU.  Returns the output and (in training) the
+/// backward tape.
+#[allow(clippy::too_many_arguments)]
+fn layer_fwd(
+    g: &ModelGraph,
+    li: usize,
+    params: &[&Tensor],
+    wbits: &[f32],
+    abits: &[f32],
+    binar: bool,
+    x: ActT,
+    want_tape: bool,
+) -> (ActT, Option<LayerTape>) {
+    let l = &g.layers[li];
+    let wb = &wbits[l.w_off..l.w_off + l.w_len];
+    let ab = &abits[l.a_off..l.a_off + l.a_len];
+
+    // Per-input-channel activation quantization (fc: one shared channel).
+    let xq: ActT = match &x {
+        ActT::A4(d, data) => {
+            debug_assert_eq!(d.c, l.a_len, "{}: activation channels", l.name);
+            let mut cm = nhwc_to_cmajor(data, *d);
+            quantize_rows(&mut cm, d.c, d.n * d.h * d.w, ab, binar);
+            ActT::A4(*d, cmajor_to_nhwc(&cm, *d))
+        }
+        ActT::A2 { n, c, data } => {
+            let mut q = data.clone();
+            quantize_rows(&mut q, 1, n * c, ab, binar);
+            ActT::A2 { n: *n, c: *c, data: q }
+        }
+    };
+
+    // Per-output-channel weight quantization.
+    let w = params[l.p_w];
+    let rest = w.data.len() / l.w_len;
+    let mut w2 = w_to_cmajor(&w.data, rest, l.w_len);
+    quantize_rows(&mut w2, l.w_len, rest, wb, binar);
+    let wq = cmajor_to_w(&w2, rest, l.w_len);
+
+    match l.typ {
+        LType::Fc => {
+            let (n, c) = match &xq {
+                ActT::A2 { n, c, .. } => (*n, *c),
+                ActT::A4(..) => panic!("fc expects flat input"),
+            };
+            let ActT::A2 { data, .. } = &xq else { unreachable!() };
+            let mut y = matmul(data, &wq, n, c, l.cout);
+            add_bias(&mut y, l.cout, &params[l.p_w + 1].data);
+            let out = ActT::A2 { n, c: l.cout, data: y };
+            let out_d = Dims { n, h: 1, w: 1, c: l.cout };
+            let tape = want_tape
+                .then(|| LayerTape { li, xq, wq, gn: None, out_d, relu_out: None });
+            (out, tape)
+        }
+        LType::Conv | LType::DwConv => {
+            let ActT::A4(d, data) = &xq else { panic!("conv expects NHWC input") };
+            let (mut y, od) = if l.typ == LType::DwConv {
+                dwconv2d(data, *d, &wq, l.k, l.s)
+            } else {
+                conv2d(data, *d, &wq, l.k, l.s, l.cout)
+            };
+            let gn = if l.norm {
+                let (yy, cache) =
+                    group_norm(&y, od, &params[l.p_w + 1].data, &params[l.p_w + 2].data);
+                y = yy;
+                Some(cache)
+            } else {
+                add_bias(&mut y, od.c, &params[l.p_w + 1].data);
+                None
+            };
+            if l.relu {
+                relu(&mut y);
+            }
+            let relu_out = (want_tape && l.relu).then(|| y.clone());
+            let tape = want_tape.then(|| LayerTape { li, xq, wq, gn, out_d: od, relu_out });
+            (ActT::A4(od, y), tape)
+        }
+    }
+}
+
+/// Backward of one primitive layer: accumulates parameter gradients and
+/// returns the gradient w.r.t. the layer input (STE through both
+/// quantizers).
+fn layer_bwd(
+    g: &ModelGraph,
+    t: &LayerTape,
+    params: &[&Tensor],
+    mut dy: Vec<f32>,
+    grads: &mut [Vec<f32>],
+) -> ActT {
+    let l = &g.layers[t.li];
+    match l.typ {
+        LType::Fc => {
+            let ActT::A2 { n, c, data: xqd } = &t.xq else { panic!("fc tape") };
+            add_vec(&mut grads[l.p_w + 1], &bias_bwd(&dy, l.cout));
+            matmul_at_b_acc(&mut grads[l.p_w], xqd, &dy, *n, *c, l.cout);
+            let dx = matmul_a_bt(&dy, &t.wq, *n, l.cout, *c);
+            ActT::A2 { n: *n, c: *c, data: dx }
+        }
+        LType::Conv | LType::DwConv => {
+            if let Some(out) = &t.relu_out {
+                relu_bwd(&mut dy, out);
+            }
+            if l.norm {
+                let (dxn, dg, db) =
+                    group_norm_bwd(&dy, t.out_d, &params[l.p_w + 1].data, t.gn.as_ref().unwrap());
+                add_vec(&mut grads[l.p_w + 1], &dg);
+                add_vec(&mut grads[l.p_w + 2], &db);
+                dy = dxn;
+            } else {
+                add_vec(&mut grads[l.p_w + 1], &bias_bwd(&dy, t.out_d.c));
+            }
+            let ActT::A4(din, xqd) = &t.xq else { panic!("conv tape") };
+            let (dx, dw) = if l.typ == LType::DwConv {
+                dwconv2d_bwd(xqd, *din, &t.wq, l.k, l.s, &dy)
+            } else {
+                conv2d_bwd(xqd, *din, &t.wq, l.k, l.s, l.cout, &dy)
+            };
+            add_vec(&mut grads[l.p_w], &dw);
+            ActT::A4(*din, dx)
+        }
+    }
+}
+
+/// Full forward walk.  Returns (logits data, n, classes, tapes-if-train).
+fn forward(
+    g: &ModelGraph,
+    params: &[&Tensor],
+    images: &Tensor,
+    wbits: &[f32],
+    abits: &[f32],
+    binar: bool,
+    want_tape: bool,
+) -> anyhow::Result<(Vec<f32>, usize, usize, Option<Vec<Tape>>)> {
+    anyhow::ensure!(images.shape.len() == 4, "images must be NHWC");
+    let d0 = Dims { n: images.shape[0], h: images.shape[1], w: images.shape[2], c: images.shape[3] };
+    anyhow::ensure!(wbits.len() == g.w_channels, "wbits len {} vs {}", wbits.len(), g.w_channels);
+    anyhow::ensure!(abits.len() == g.a_channels, "abits len {} vs {}", abits.len(), g.a_channels);
+    let mut x = ActT::A4(d0, images.data.clone());
+    let mut tapes: Vec<Tape> = Vec::new();
+    let mut li = 0usize;
+    let fwd = |li: usize, x: ActT| layer_fwd(g, li, params, wbits, abits, binar, x, want_tape);
+
+    for node in &g.nodes {
+        match *node {
+            Node::Conv { .. } | Node::Fc { .. } => {
+                let (y, t) = fwd(li, x);
+                li += 1;
+                x = y;
+                if want_tape {
+                    tapes.push(Tape::Layer(t.unwrap()));
+                }
+            }
+            Node::Pool => {
+                let (d, data) = x.into4();
+                let (y, idx, od) = maxpool2(&data, d);
+                x = ActT::A4(od, y);
+                if want_tape {
+                    tapes.push(Tape::Pool { idx, in_d: d });
+                }
+            }
+            Node::Gap => {
+                let (d, data) = x.into4();
+                let y = gap(&data, d);
+                x = ActT::A2 { n: d.n, c: d.c, data: y };
+                if want_tape {
+                    tapes.push(Tape::Gap { d });
+                }
+            }
+            Node::Basic { cout, s } => {
+                let proj = s != 1 || x.channels() != cout;
+                let inp = x.clone();
+                let (y1, t1) = fwd(li, x);
+                let (y2, t2) = fwd(li + 1, y1);
+                let (sc, tp) = if proj {
+                    let (sc, tp) = fwd(li + 2, inp);
+                    (sc, tp)
+                } else {
+                    (inp, None)
+                };
+                li += if proj { 3 } else { 2 };
+                let (od, mut data) = y2.into4();
+                let (_, scd) = sc.into4();
+                add_vec(&mut data, &scd);
+                relu(&mut data);
+                if want_tape {
+                    tapes.push(Tape::Basic {
+                        c1: t1.unwrap(),
+                        c2: t2.unwrap(),
+                        proj: tp,
+                        relu_out: data.clone(),
+                    });
+                }
+                x = ActT::A4(od, data);
+            }
+            Node::Fire { e1, .. } => {
+                let (sqz, tsq) = fwd(li, x);
+                let (a, te1) = fwd(li + 1, sqz.clone());
+                let (b, te3) = fwd(li + 2, sqz);
+                li += 3;
+                let (da, adata) = a.into4();
+                let (db, bdata) = b.into4();
+                debug_assert_eq!(da.c, e1);
+                let od = Dims { n: da.n, h: da.h, w: da.w, c: da.c + db.c };
+                let mut out = vec![0.0f32; od.elems()];
+                for p in 0..da.n * da.h * da.w {
+                    out[p * od.c..p * od.c + da.c]
+                        .copy_from_slice(&adata[p * da.c..(p + 1) * da.c]);
+                    out[p * od.c + da.c..(p + 1) * od.c]
+                        .copy_from_slice(&bdata[p * db.c..(p + 1) * db.c]);
+                }
+                if want_tape {
+                    tapes.push(Tape::Fire {
+                        sq: tsq.unwrap(),
+                        e1: te1.unwrap(),
+                        e3: te3.unwrap(),
+                        e1_cout: da.c,
+                    });
+                }
+                x = ActT::A4(od, out);
+            }
+            Node::Irb { t, cout, s } => {
+                let cin_cur = x.channels();
+                let residual = s == 1 && cin_cur == cout;
+                let inp = if residual { Some(x.clone()) } else { None };
+                let mut cur = x;
+                let texp = if t != 1 {
+                    let (y, tp) = fwd(li, cur);
+                    li += 1;
+                    cur = y;
+                    tp
+                } else {
+                    None
+                };
+                let (y, tdw) = fwd(li, cur);
+                li += 1;
+                let (y, tpr) = fwd(li, y);
+                li += 1;
+                let (od, mut data) = y.into4();
+                if let Some(inp) = inp {
+                    let (_, inpd) = inp.into4();
+                    add_vec(&mut data, &inpd);
+                }
+                if want_tape {
+                    tapes.push(Tape::Irb {
+                        expand: texp,
+                        dw: tdw.unwrap(),
+                        project: tpr.unwrap(),
+                        residual,
+                    });
+                }
+                x = ActT::A4(od, data);
+            }
+        }
+    }
+    anyhow::ensure!(li == g.layers.len(), "layer walk diverged: {li} vs {}", g.layers.len());
+    match x {
+        ActT::A2 { n, c, data } => Ok((data, n, c, want_tape.then_some(tapes))),
+        ActT::A4(..) => anyhow::bail!("model {} does not end in a flat head", g.name),
+    }
+}
+
+/// Full backward walk from d(logits); returns per-parameter gradients.
+fn backward(
+    g: &ModelGraph,
+    tapes: &[Tape],
+    params: &[&Tensor],
+    dlogits: Vec<f32>,
+    n: usize,
+    classes: usize,
+) -> Vec<Vec<f32>> {
+    let mut grads: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0f32; p.data.len()]).collect();
+    let mut dy = ActT::A2 { n, c: classes, data: dlogits };
+    for tape in tapes.iter().rev() {
+        dy = match tape {
+            Tape::Layer(t) => {
+                let data = match dy {
+                    ActT::A4(_, data) => data,
+                    ActT::A2 { data, .. } => data,
+                };
+                layer_bwd(g, t, params, data, &mut grads)
+            }
+            Tape::Pool { idx, in_d } => {
+                let (_, data) = dy.into4();
+                ActT::A4(*in_d, maxpool2_bwd(&data, idx, in_d.elems()))
+            }
+            Tape::Gap { d } => {
+                let ActT::A2 { data, .. } = dy else { panic!("gap grad") };
+                ActT::A4(*d, gap_bwd(&data, *d))
+            }
+            Tape::Basic { c1, c2, proj, relu_out } => {
+                let (_, mut data) = dy.into4();
+                relu_bwd(&mut data, relu_out);
+                let d_sc = data.clone();
+                let (_, dy1) = layer_bwd(g, c2, params, data, &mut grads).into4();
+                let (din, mut dinp) = layer_bwd(g, c1, params, dy1, &mut grads).into4();
+                let dinp_b = match proj {
+                    Some(tp) => {
+                        let (_, d) = layer_bwd(g, tp, params, d_sc, &mut grads).into4();
+                        d
+                    }
+                    None => d_sc,
+                };
+                add_vec(&mut dinp, &dinp_b);
+                ActT::A4(din, dinp)
+            }
+            Tape::Fire { sq, e1, e3, e1_cout } => {
+                let (od, data) = dy.into4();
+                let ca = *e1_cout;
+                let cb = od.c - ca;
+                let pixels = od.n * od.h * od.w;
+                let mut da = vec![0.0f32; pixels * ca];
+                let mut db = vec![0.0f32; pixels * cb];
+                for p in 0..pixels {
+                    da[p * ca..(p + 1) * ca].copy_from_slice(&data[p * od.c..p * od.c + ca]);
+                    db[p * cb..(p + 1) * cb].copy_from_slice(&data[p * od.c + ca..(p + 1) * od.c]);
+                }
+                let (_, mut dsq) = layer_bwd(g, e1, params, da, &mut grads).into4();
+                let (_, dsq2) = layer_bwd(g, e3, params, db, &mut grads).into4();
+                add_vec(&mut dsq, &dsq2);
+                let (din, dinp) = layer_bwd(g, sq, params, dsq, &mut grads).into4();
+                ActT::A4(din, dinp)
+            }
+            Tape::Irb { expand, dw, project, residual } => {
+                let (_, data) = dy.into4();
+                let dres = residual.then(|| data.clone());
+                let (_, d1) = layer_bwd(g, project, params, data, &mut grads).into4();
+                let (d2d, d2) = layer_bwd(g, dw, params, d1, &mut grads).into4();
+                let (din, mut dx) = match expand {
+                    Some(te) => layer_bwd(g, te, params, d2, &mut grads).into4(),
+                    None => (d2d, d2),
+                };
+                if let Some(r) = dres {
+                    add_vec(&mut dx, &r);
+                }
+                ActT::A4(din, dx)
+            }
+        };
+    }
+    grads
+}
+
+// ---------------------------------------------------------------------------
+// Executables
+// ---------------------------------------------------------------------------
+
+pub struct RefModelEval {
+    pub graph: ModelGraph,
+    pub binar: bool,
+}
+
+impl Executable for RefModelEval {
+    fn execute(&mut self, inputs: &[&Value]) -> anyhow::Result<Vec<Value>> {
+        let np = self.graph.params.len();
+        anyhow::ensure!(inputs.len() == np + 4, "eval arity");
+        let params: Vec<&Tensor> =
+            inputs[..np].iter().map(|v| v.as_f32()).collect::<anyhow::Result<_>>()?;
+        let images = inputs[np].as_f32()?;
+        let labels = inputs[np + 1].as_i32()?;
+        let wbits = inputs[np + 2].as_f32()?;
+        let abits = inputs[np + 3].as_f32()?;
+        let (logits, n, classes, _) =
+            forward(&self.graph, &params, images, &wbits.data, &abits.data, self.binar, false)?;
+        anyhow::ensure!(labels.len() == n, "labels len {} vs batch {n}", labels.len());
+        let (correct, loss, _) = softmax_xent(&logits, n, classes, labels, false);
+        Ok(vec![Value::scalar(correct), Value::scalar(loss)])
+    }
+}
+
+pub struct RefModelTrain {
+    pub graph: ModelGraph,
+    pub binar: bool,
+}
+
+impl Executable for RefModelTrain {
+    fn execute(&mut self, inputs: &[&Value]) -> anyhow::Result<Vec<Value>> {
+        let np = self.graph.params.len();
+        anyhow::ensure!(inputs.len() == 2 * np + 5, "train arity");
+        let params: Vec<&Tensor> =
+            inputs[..np].iter().map(|v| v.as_f32()).collect::<anyhow::Result<_>>()?;
+        let momenta: Vec<&Tensor> =
+            inputs[np..2 * np].iter().map(|v| v.as_f32()).collect::<anyhow::Result<_>>()?;
+        let images = inputs[2 * np].as_f32()?;
+        let labels = inputs[2 * np + 1].as_i32()?;
+        let wbits = inputs[2 * np + 2].as_f32()?;
+        let abits = inputs[2 * np + 3].as_f32()?;
+        let lr = inputs[2 * np + 4].scalar_f32()?;
+
+        let (logits, n, classes, tapes) =
+            forward(&self.graph, &params, images, &wbits.data, &abits.data, self.binar, true)?;
+        anyhow::ensure!(labels.len() == n, "labels len {} vs batch {n}", labels.len());
+        let (_, loss, dlogits) = softmax_xent(&logits, n, classes, labels, true);
+        let grads = backward(
+            &self.graph,
+            &tapes.expect("train tape"),
+            &params,
+            dlogits.expect("train grad"),
+            n,
+            classes,
+        );
+
+        // SGD with momentum 0.9: new_m = 0.9·m + g, new_p = p − lr·new_m.
+        let mut new_params = Vec::with_capacity(np);
+        let mut new_momenta = Vec::with_capacity(np);
+        for i in 0..np {
+            let mut m = momenta[i].data.clone();
+            for (mv, &gv) in m.iter_mut().zip(&grads[i]) {
+                *mv = 0.9 * *mv + gv;
+            }
+            let mut p = params[i].data.clone();
+            for (pv, &mv) in p.iter_mut().zip(&m) {
+                *pv -= lr * mv;
+            }
+            new_params.push(Value::f32(params[i].shape.clone(), p));
+            new_momenta.push(Value::f32(momenta[i].shape.clone(), m));
+        }
+        let mut outs = new_params;
+        outs.extend(new_momenta);
+        outs.push(Value::scalar(loss));
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ParamStore;
+    use crate::runtime::reference::zoo::{model_graph, IMAGE_HW};
+    use crate::util::rng::Rng;
+
+    fn tiny_images(n: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let mut data = vec![0.0f32; n * IMAGE_HW * IMAGE_HW * 3];
+        rng.fill_normal_f32(&mut data, 0.5);
+        Tensor::new(vec![n, IMAGE_HW, IMAGE_HW, 3], data)
+    }
+
+    fn graph_params(g: &ModelGraph, seed: u64) -> ParamStore {
+        ParamStore::init(&g.params, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn forward_shapes_for_every_model() {
+        for name in crate::runtime::reference::zoo::MODEL_NAMES {
+            let g = model_graph(name).unwrap();
+            let ps = graph_params(&g, 3);
+            let params: Vec<&Tensor> = ps.tensors.iter().collect();
+            let images = tiny_images(2, 9);
+            let wbits = vec![32.0f32; g.w_channels];
+            let abits = vec![32.0f32; g.a_channels];
+            let (logits, n, c, _) =
+                forward(&g, &params, &images, &wbits, &abits, false, false).unwrap();
+            assert_eq!(n, 2, "{name}");
+            assert_eq!(c, 10, "{name}");
+            assert_eq!(logits.len(), 20, "{name}");
+            assert!(logits.iter().all(|v| v.is_finite()), "{name}");
+        }
+    }
+
+    #[test]
+    fn pruned_everything_zeroes_logits() {
+        // All weight channels pruned → logits reduce to biases (zeros at
+        // init) for cif10's bias-free conv stack + zero-init fc bias.
+        let g = model_graph("cif10").unwrap();
+        let ps = graph_params(&g, 5);
+        let params: Vec<&Tensor> = ps.tensors.iter().collect();
+        let images = tiny_images(2, 1);
+        let wbits = vec![0.0f32; g.w_channels];
+        let abits = vec![32.0f32; g.a_channels];
+        let (logits, ..) = forward(&g, &params, &images, &wbits, &abits, false, false).unwrap();
+        assert!(logits.iter().all(|&v| v.abs() < 1e-5), "{logits:?}");
+    }
+
+    #[test]
+    fn train_step_reduces_loss_on_fixed_batch() {
+        // A few SGD steps on one small batch must reduce the loss — the
+        // end-to-end check that backward matches forward.
+        let g = model_graph("cif10").unwrap();
+        let mut ps = graph_params(&g, 7);
+        let mut momenta = ps.zeros_like();
+        let n = 8;
+        let images = tiny_images(n, 11);
+        let labels: Vec<i32> = (0..n as i32).map(|i| i % 10).collect();
+        let wbits = Value::f32(vec![g.w_channels], vec![32.0; g.w_channels]);
+        let abits = Value::f32(vec![g.a_channels], vec![32.0; g.a_channels]);
+        let img_v = Value::F32(images);
+        let lbl_v = Value::i32(vec![n], labels);
+        let lr = Value::scalar(0.05);
+        let mut exe = RefModelTrain { graph: g.clone(), binar: false };
+        let np = g.params.len();
+        let mut losses = Vec::new();
+        for _ in 0..6 {
+            let mut inputs: Vec<Value> = Vec::with_capacity(2 * np + 5);
+            for t in &ps.tensors {
+                inputs.push(Value::F32(t.clone()));
+            }
+            for t in &momenta.tensors {
+                inputs.push(Value::F32(t.clone()));
+            }
+            inputs.push(img_v.clone());
+            inputs.push(lbl_v.clone());
+            inputs.push(wbits.clone());
+            inputs.push(abits.clone());
+            inputs.push(lr.clone());
+            let refs: Vec<&Value> = inputs.iter().collect();
+            let outs = exe.execute(&refs).unwrap();
+            assert_eq!(outs.len(), 2 * np + 1);
+            losses.push(outs[2 * np].scalar_f32().unwrap());
+            for i in 0..np {
+                ps.tensors[i] = outs[i].as_f32().unwrap().clone();
+                momenta.tensors[i] = outs[np + i].as_f32().unwrap().clone();
+            }
+        }
+        assert!(
+            losses.last().unwrap() < losses.first().unwrap(),
+            "loss did not drop: {losses:?}"
+        );
+        assert!(losses.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
+    fn eval_outputs_bounded() {
+        let g = model_graph("cif10").unwrap();
+        let ps = graph_params(&g, 13);
+        let np = g.params.len();
+        let n = 16;
+        let images = tiny_images(n, 17);
+        let labels: Vec<i32> = (0..n as i32).map(|i| i % 10).collect();
+        let mut inputs: Vec<Value> = ps.tensors.iter().map(|t| Value::F32(t.clone())).collect();
+        inputs.push(Value::F32(images));
+        inputs.push(Value::i32(vec![n], labels));
+        inputs.push(Value::f32(vec![g.w_channels], vec![4.0; g.w_channels]));
+        inputs.push(Value::f32(vec![g.a_channels], vec![4.0; g.a_channels]));
+        let refs: Vec<&Value> = inputs.iter().collect();
+        let mut exe = RefModelEval { graph: g, binar: false };
+        let outs = exe.execute(&refs).unwrap();
+        assert_eq!(outs.len(), 2);
+        let correct = outs[0].scalar_f32().unwrap();
+        let loss = outs[1].scalar_f32().unwrap();
+        assert!((0.0..=n as f32).contains(&correct));
+        assert!(loss.is_finite() && loss > 0.0);
+        assert_eq!(inputs.len(), np + 4);
+    }
+
+    #[test]
+    fn binar_mode_forward_is_finite_on_all_models() {
+        for name in crate::runtime::reference::zoo::MODEL_NAMES {
+            let g = model_graph(name).unwrap();
+            let ps = graph_params(&g, 23);
+            let params: Vec<&Tensor> = ps.tensors.iter().collect();
+            let images = tiny_images(2, 29);
+            let wbits = vec![3.0f32; g.w_channels];
+            let abits = vec![3.0f32; g.a_channels];
+            let (logits, ..) = forward(&g, &params, &images, &wbits, &abits, true, false).unwrap();
+            assert!(logits.iter().all(|v| v.is_finite()), "{name}");
+        }
+    }
+}

@@ -1,0 +1,852 @@
+//! Dense NHWC tensor ops (forward + backward) for the reference
+//! interpreter: conv / depthwise conv (SAME padding), matmul, GroupNorm,
+//! ReLU, 2×2 max-pool, global average pool, softmax cross-entropy.
+//!
+//! Semantics mirror the JAX graphs in `python/compile/model.py`: SAME
+//! padding splits the total pad floor/ceil, GroupNorm uses 8 groups when
+//! the channel count divides (else 1) with ε = 1e-5, pooling is VALID.
+//! Convolutions lower to im2col + a cache-friendly (i,k,j) matmul so the
+//! hot loops autovectorize; everything is f32 like the artifacts.
+
+/// NHWC activation dims.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Dims {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl Dims {
+    pub fn elems(&self) -> usize {
+        self.n * self.h * self.w * self.c
+    }
+}
+
+/// SAME-padding geometry: (out, pad_lo, pad_hi).
+pub fn same_pad(inp: usize, k: usize, s: usize) -> (usize, usize, usize) {
+    let out = (inp + s - 1) / s;
+    let total = ((out - 1) * s + k).saturating_sub(inp);
+    (out, total / 2, total - total / 2)
+}
+
+// ---------------------------------------------------------------------------
+// Matmul family
+// ---------------------------------------------------------------------------
+
+/// c += a @ b for a (m,k), b (k,n), c (m,n).
+pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// a @ b for a (m,k), b (k,n) → (m,n).
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    matmul_acc(&mut c, a, b, m, k, n);
+    c
+}
+
+/// c += aᵀ @ b for a (m,k), b (m,n), c (k,n).
+pub fn matmul_at_b_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(c.len(), k * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            let crow = &mut c[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// a @ bᵀ for a (m,n), b (k,n) → (m,k): rows of a dotted with rows of b.
+pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * k];
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        let crow = &mut c[i * k..(i + 1) * k];
+        for (kk, cv) in crow.iter_mut().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            let mut acc = 0.0f32;
+            for j in 0..n {
+                acc += arow[j] * brow[j];
+            }
+            *cv = acc;
+        }
+    }
+    c
+}
+
+// ---------------------------------------------------------------------------
+// Layout shuffles (channel-major views for the per-channel quantizers)
+// ---------------------------------------------------------------------------
+
+/// NHWC → channel-major (c, n·h·w), rows ordered by the (n,h,w) scan.
+pub fn nhwc_to_cmajor(x: &[f32], d: Dims) -> Vec<f32> {
+    let rows = d.n * d.h * d.w;
+    let mut out = vec![0.0f32; x.len()];
+    for r in 0..rows {
+        for c in 0..d.c {
+            out[c * rows + r] = x[r * d.c + c];
+        }
+    }
+    out
+}
+
+/// Inverse of [`nhwc_to_cmajor`].
+pub fn cmajor_to_nhwc(xc: &[f32], d: Dims) -> Vec<f32> {
+    let rows = d.n * d.h * d.w;
+    let mut out = vec![0.0f32; xc.len()];
+    for c in 0..d.c {
+        for r in 0..rows {
+            out[r * d.c + c] = xc[c * rows + r];
+        }
+    }
+    out
+}
+
+/// Weight (…, cout) row-major → channel-major (cout, rest).
+pub fn w_to_cmajor(w: &[f32], rest: usize, cout: usize) -> Vec<f32> {
+    debug_assert_eq!(w.len(), rest * cout);
+    let mut out = vec![0.0f32; w.len()];
+    for r in 0..rest {
+        for co in 0..cout {
+            out[co * rest + r] = w[r * cout + co];
+        }
+    }
+    out
+}
+
+/// Inverse of [`w_to_cmajor`].
+pub fn cmajor_to_w(w2: &[f32], rest: usize, cout: usize) -> Vec<f32> {
+    debug_assert_eq!(w2.len(), rest * cout);
+    let mut out = vec![0.0f32; w2.len()];
+    for co in 0..cout {
+        for r in 0..rest {
+            out[r * cout + co] = w2[co * rest + r];
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Convolutions
+// ---------------------------------------------------------------------------
+
+/// im2col for one image: rows = ho·wo, cols = k·k·cin ordered [kh][kw][ci]
+/// to match the (k,k,cin,cout) weight layout flattened row-major.
+fn im2col(img: &[f32], h: usize, w: usize, cin: usize, k: usize, s: usize, out: &mut [f32]) {
+    let (ho, pad_t, _) = same_pad(h, k, s);
+    let (wo, pad_l, _) = same_pad(w, k, s);
+    let cols = k * k * cin;
+    debug_assert_eq!(out.len(), ho * wo * cols);
+    out.fill(0.0);
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let row = &mut out[(oy * wo + ox) * cols..(oy * wo + ox + 1) * cols];
+            for ky in 0..k {
+                let iy = (oy * s + ky) as isize - pad_t as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for kx in 0..k {
+                    let ix = (ox * s + kx) as isize - pad_l as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    let src = ((iy as usize) * w + ix as usize) * cin;
+                    let dst = (ky * k + kx) * cin;
+                    row[dst..dst + cin].copy_from_slice(&img[src..src + cin]);
+                }
+            }
+        }
+    }
+}
+
+/// Scatter-add of a patch-gradient matrix back to the image (col2im).
+fn col2im_acc(dpatch: &[f32], h: usize, w: usize, cin: usize, k: usize, s: usize, dimg: &mut [f32]) {
+    let (ho, pad_t, _) = same_pad(h, k, s);
+    let (wo, pad_l, _) = same_pad(w, k, s);
+    let cols = k * k * cin;
+    debug_assert_eq!(dpatch.len(), ho * wo * cols);
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let row = &dpatch[(oy * wo + ox) * cols..(oy * wo + ox + 1) * cols];
+            for ky in 0..k {
+                let iy = (oy * s + ky) as isize - pad_t as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for kx in 0..k {
+                    let ix = (ox * s + kx) as isize - pad_l as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    let dst = ((iy as usize) * w + ix as usize) * cin;
+                    let src = (ky * k + kx) * cin;
+                    for ci in 0..cin {
+                        dimg[dst + ci] += row[src + ci];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Dense conv, SAME padding: x NHWC, w (k,k,cin,cout) row-major.
+pub fn conv2d(x: &[f32], d: Dims, w: &[f32], k: usize, s: usize, cout: usize) -> (Vec<f32>, Dims) {
+    let (ho, _, _) = same_pad(d.h, k, s);
+    let (wo, _, _) = same_pad(d.w, k, s);
+    let od = Dims { n: d.n, h: ho, w: wo, c: cout };
+    if k == 1 && s == 1 {
+        // Pointwise conv == matmul over flattened pixels.
+        let m = d.n * d.h * d.w;
+        return (matmul(x, w, m, d.c, cout), od);
+    }
+    let cols = k * k * d.c;
+    let img_elems = d.h * d.w * d.c;
+    let mut out = vec![0.0f32; od.elems()];
+    let mut patches = vec![0.0f32; ho * wo * cols];
+    for ni in 0..d.n {
+        im2col(&x[ni * img_elems..(ni + 1) * img_elems], d.h, d.w, d.c, k, s, &mut patches);
+        let dst = &mut out[ni * ho * wo * cout..(ni + 1) * ho * wo * cout];
+        matmul_acc(dst, &patches, w, ho * wo, cols, cout);
+    }
+    (out, od)
+}
+
+/// Dense conv backward: returns (dx, dw) for quantized inputs x / weight w.
+pub fn conv2d_bwd(
+    x: &[f32],
+    d: Dims,
+    w: &[f32],
+    k: usize,
+    s: usize,
+    cout: usize,
+    dy: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    if k == 1 && s == 1 {
+        let m = d.n * d.h * d.w;
+        let dw = {
+            let mut dw = vec![0.0f32; d.c * cout];
+            matmul_at_b_acc(&mut dw, x, dy, m, d.c, cout);
+            dw
+        };
+        let dx = matmul_a_bt(dy, w, m, cout, d.c);
+        return (dx, dw);
+    }
+    let (ho, _, _) = same_pad(d.h, k, s);
+    let (wo, _, _) = same_pad(d.w, k, s);
+    let cols = k * k * d.c;
+    let img_elems = d.h * d.w * d.c;
+    let mut dx = vec![0.0f32; x.len()];
+    let mut dw = vec![0.0f32; w.len()];
+    let mut patches = vec![0.0f32; ho * wo * cols];
+    for ni in 0..d.n {
+        let dy_img = &dy[ni * ho * wo * cout..(ni + 1) * ho * wo * cout];
+        im2col(&x[ni * img_elems..(ni + 1) * img_elems], d.h, d.w, d.c, k, s, &mut patches);
+        matmul_at_b_acc(&mut dw, &patches, dy_img, ho * wo, cols, cout);
+        let dpatch = matmul_a_bt(dy_img, w, ho * wo, cout, cols);
+        col2im_acc(&dpatch, d.h, d.w, d.c, k, s, &mut dx[ni * img_elems..(ni + 1) * img_elems]);
+    }
+    (dx, dw)
+}
+
+/// Depthwise conv (feature_group_count = cin): w (k,k,1,cin).
+pub fn dwconv2d(x: &[f32], d: Dims, w: &[f32], k: usize, s: usize) -> (Vec<f32>, Dims) {
+    let (ho, pad_t, _) = same_pad(d.h, k, s);
+    let (wo, pad_l, _) = same_pad(d.w, k, s);
+    let od = Dims { n: d.n, h: ho, w: wo, c: d.c };
+    let mut out = vec![0.0f32; od.elems()];
+    let img_elems = d.h * d.w * d.c;
+    for ni in 0..d.n {
+        let img = &x[ni * img_elems..(ni + 1) * img_elems];
+        let dst = &mut out[ni * ho * wo * d.c..(ni + 1) * ho * wo * d.c];
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let orow = &mut dst[(oy * wo + ox) * d.c..(oy * wo + ox + 1) * d.c];
+                for ky in 0..k {
+                    let iy = (oy * s + ky) as isize - pad_t as isize;
+                    if iy < 0 || iy >= d.h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * s + kx) as isize - pad_l as isize;
+                        if ix < 0 || ix >= d.w as isize {
+                            continue;
+                        }
+                        let src = ((iy as usize) * d.w + ix as usize) * d.c;
+                        let wrow = &w[(ky * k + kx) * d.c..(ky * k + kx + 1) * d.c];
+                        for c in 0..d.c {
+                            orow[c] += img[src + c] * wrow[c];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (out, od)
+}
+
+/// Depthwise conv backward: (dx, dw).
+pub fn dwconv2d_bwd(
+    x: &[f32],
+    d: Dims,
+    w: &[f32],
+    k: usize,
+    s: usize,
+    dy: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let (ho, pad_t, _) = same_pad(d.h, k, s);
+    let (wo, pad_l, _) = same_pad(d.w, k, s);
+    let mut dx = vec![0.0f32; x.len()];
+    let mut dw = vec![0.0f32; w.len()];
+    let img_elems = d.h * d.w * d.c;
+    for ni in 0..d.n {
+        let img = &x[ni * img_elems..(ni + 1) * img_elems];
+        let dimg = &mut dx[ni * img_elems..(ni + 1) * img_elems];
+        let dy_img = &dy[ni * ho * wo * d.c..(ni + 1) * ho * wo * d.c];
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let drow = &dy_img[(oy * wo + ox) * d.c..(oy * wo + ox + 1) * d.c];
+                for ky in 0..k {
+                    let iy = (oy * s + ky) as isize - pad_t as isize;
+                    if iy < 0 || iy >= d.h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * s + kx) as isize - pad_l as isize;
+                        if ix < 0 || ix >= d.w as isize {
+                            continue;
+                        }
+                        let src = ((iy as usize) * d.w + ix as usize) * d.c;
+                        let wi = (ky * k + kx) * d.c;
+                        for c in 0..d.c {
+                            dimg[src + c] += drow[c] * w[wi + c];
+                            dw[wi + c] += img[src + c] * drow[c];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (dx, dw)
+}
+
+// ---------------------------------------------------------------------------
+// Normalization / activation / pooling
+// ---------------------------------------------------------------------------
+
+/// GroupNorm groups: 8 when it divides C, else 1 (python `group_norm`).
+pub fn gn_groups(c: usize) -> usize {
+    if c % 8 == 0 {
+        8
+    } else {
+        1
+    }
+}
+
+pub struct GnCache {
+    /// Normalized activations (pre scale/shift), full tensor.
+    pub xn: Vec<f32>,
+    /// 1/√(var+ε) per (image, group).
+    pub istd: Vec<f32>,
+}
+
+/// y = xn·γ + β with per-(n, group) statistics over (h, w, c/groups).
+pub fn group_norm(x: &[f32], d: Dims, gamma: &[f32], beta: &[f32]) -> (Vec<f32>, GnCache) {
+    let gr = gn_groups(d.c);
+    let cg = d.c / gr;
+    let m = (d.h * d.w * cg) as f64;
+    let mut xn = vec![0.0f32; x.len()];
+    let mut istd = vec![0.0f32; d.n * gr];
+    let mut y = vec![0.0f32; x.len()];
+    let img = d.h * d.w * d.c;
+    for ni in 0..d.n {
+        for g in 0..gr {
+            let (mut sum, mut sq) = (0.0f64, 0.0f64);
+            for p in 0..d.h * d.w {
+                let base = ni * img + p * d.c + g * cg;
+                for j in 0..cg {
+                    let v = x[base + j] as f64;
+                    sum += v;
+                    sq += v * v;
+                }
+            }
+            let mu = sum / m;
+            let var = (sq / m - mu * mu).max(0.0);
+            let is = 1.0 / (var + 1e-5).sqrt();
+            istd[ni * gr + g] = is as f32;
+            for p in 0..d.h * d.w {
+                let base = ni * img + p * d.c + g * cg;
+                for j in 0..cg {
+                    let c = g * cg + j;
+                    let v = ((x[base + j] as f64 - mu) * is) as f32;
+                    xn[base + j] = v;
+                    y[base + j] = v * gamma[c] + beta[c];
+                }
+            }
+        }
+    }
+    (y, GnCache { xn, istd })
+}
+
+/// GroupNorm backward: (dx, dγ, dβ).
+pub fn group_norm_bwd(
+    dy: &[f32],
+    d: Dims,
+    gamma: &[f32],
+    cache: &GnCache,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let gr = gn_groups(d.c);
+    let cg = d.c / gr;
+    let m = (d.h * d.w * cg) as f64;
+    let img = d.h * d.w * d.c;
+    let mut dx = vec![0.0f32; dy.len()];
+    let mut dgamma = vec![0.0f32; d.c];
+    let mut dbeta = vec![0.0f32; d.c];
+    for ni in 0..d.n {
+        for g in 0..gr {
+            // dxn = dy·γ; group sums of dxn and dxn·xn.
+            let (mut s1, mut s2) = (0.0f64, 0.0f64);
+            for p in 0..d.h * d.w {
+                let base = ni * img + p * d.c + g * cg;
+                for j in 0..cg {
+                    let c = g * cg + j;
+                    let dyv = dy[base + j];
+                    let xnv = cache.xn[base + j];
+                    dgamma[c] += dyv * xnv;
+                    dbeta[c] += dyv;
+                    let dxn = (dyv * gamma[c]) as f64;
+                    s1 += dxn;
+                    s2 += dxn * xnv as f64;
+                }
+            }
+            let is = cache.istd[ni * gr + g] as f64;
+            let mean1 = s1 / m;
+            let mean2 = s2 / m;
+            for p in 0..d.h * d.w {
+                let base = ni * img + p * d.c + g * cg;
+                for j in 0..cg {
+                    let c = g * cg + j;
+                    let dxn = (dy[base + j] * gamma[c]) as f64;
+                    let xnv = cache.xn[base + j] as f64;
+                    dx[base + j] = (is * (dxn - mean1 - xnv * mean2)) as f32;
+                }
+            }
+        }
+    }
+    (dx, dgamma, dbeta)
+}
+
+/// y += bias per channel (last axis).
+pub fn add_bias(y: &mut [f32], c: usize, bias: &[f32]) {
+    debug_assert_eq!(bias.len(), c);
+    for row in y.chunks_exact_mut(c) {
+        for (v, &b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// dβ for a bias add: channel sums of dy.
+pub fn bias_bwd(dy: &[f32], c: usize) -> Vec<f32> {
+    let mut db = vec![0.0f32; c];
+    for row in dy.chunks_exact(c) {
+        for (d, &v) in db.iter_mut().zip(row) {
+            *d += v;
+        }
+    }
+    db
+}
+
+pub fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// dx = dy ⊙ 1[out > 0] — `out` is the post-ReLU activation.
+pub fn relu_bwd(dy: &mut [f32], out: &[f32]) {
+    for (d, &o) in dy.iter_mut().zip(out) {
+        if o <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+/// 2×2 max pool, stride 2, VALID.  Returns (y, argmax flat indices, dims).
+pub fn maxpool2(x: &[f32], d: Dims) -> (Vec<f32>, Vec<u32>, Dims) {
+    let ho = d.h / 2;
+    let wo = d.w / 2;
+    let od = Dims { n: d.n, h: ho, w: wo, c: d.c };
+    let mut y = vec![0.0f32; od.elems()];
+    let mut idx = vec![0u32; od.elems()];
+    for ni in 0..d.n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for c in 0..d.c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut bi = 0usize;
+                    for dy_ in 0..2 {
+                        for dx_ in 0..2 {
+                            let src =
+                                ((ni * d.h + oy * 2 + dy_) * d.w + ox * 2 + dx_) * d.c + c;
+                            if x[src] > best {
+                                best = x[src];
+                                bi = src;
+                            }
+                        }
+                    }
+                    let dst = ((ni * ho + oy) * wo + ox) * d.c + c;
+                    y[dst] = best;
+                    idx[dst] = bi as u32;
+                }
+            }
+        }
+    }
+    (y, idx, od)
+}
+
+pub fn maxpool2_bwd(dy: &[f32], idx: &[u32], in_elems: usize) -> Vec<f32> {
+    let mut dx = vec![0.0f32; in_elems];
+    for (d, &i) in dy.iter().zip(idx) {
+        dx[i as usize] += d;
+    }
+    dx
+}
+
+/// Global average pool over (h, w): NHWC → (n, c).
+pub fn gap(x: &[f32], d: Dims) -> Vec<f32> {
+    let hw = (d.h * d.w) as f32;
+    let mut y = vec![0.0f32; d.n * d.c];
+    for ni in 0..d.n {
+        let dst = &mut y[ni * d.c..(ni + 1) * d.c];
+        for p in 0..d.h * d.w {
+            let src = &x[(ni * d.h * d.w + p) * d.c..(ni * d.h * d.w + p + 1) * d.c];
+            for c in 0..d.c {
+                dst[c] += src[c];
+            }
+        }
+        for v in dst.iter_mut() {
+            *v /= hw;
+        }
+    }
+    y
+}
+
+pub fn gap_bwd(dy: &[f32], d: Dims) -> Vec<f32> {
+    let hw = (d.h * d.w) as f32;
+    let mut dx = vec![0.0f32; d.elems()];
+    for ni in 0..d.n {
+        let g = &dy[ni * d.c..(ni + 1) * d.c];
+        for p in 0..d.h * d.w {
+            let dst = &mut dx[(ni * d.h * d.w + p) * d.c..(ni * d.h * d.w + p + 1) * d.c];
+            for c in 0..d.c {
+                dst[c] = g[c] / hw;
+            }
+        }
+    }
+    dx
+}
+
+// ---------------------------------------------------------------------------
+// Loss head
+// ---------------------------------------------------------------------------
+
+/// Softmax cross-entropy head: (correct count, mean loss, optional
+/// d(logits) when `want_grad`).  `logits` is (n, c) row-major.
+pub fn softmax_xent(
+    logits: &[f32],
+    n: usize,
+    c: usize,
+    labels: &[i32],
+    want_grad: bool,
+) -> (f32, f32, Option<Vec<f32>>) {
+    debug_assert_eq!(logits.len(), n * c);
+    debug_assert_eq!(labels.len(), n);
+    let mut correct = 0.0f32;
+    let mut loss = 0.0f64;
+    let mut grad = if want_grad { Some(vec![0.0f32; n * c]) } else { None };
+    for i in 0..n {
+        let row = &logits[i * c..(i + 1) * c];
+        let mut maxv = f32::NEG_INFINITY;
+        let mut arg = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > maxv {
+                maxv = v;
+                arg = j;
+            }
+        }
+        let label = labels[i] as usize;
+        if arg == label {
+            correct += 1.0;
+        }
+        let mut sum = 0.0f64;
+        for &v in row {
+            sum += ((v - maxv) as f64).exp();
+        }
+        let logz = maxv as f64 + sum.ln();
+        loss += logz - row[label] as f64;
+        if let Some(g) = grad.as_mut() {
+            let grow = &mut g[i * c..(i + 1) * c];
+            for (j, &v) in row.iter().enumerate() {
+                let p = ((v as f64 - logz).exp()) as f32;
+                grow[j] = (p - if j == label { 1.0 } else { 0.0 }) / n as f32;
+            }
+        }
+    }
+    (correct, (loss / n as f64) as f32, grad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_pad_matches_xla() {
+        assert_eq!(same_pad(32, 3, 1), (32, 1, 1));
+        assert_eq!(same_pad(32, 3, 2), (16, 0, 1));
+        assert_eq!(same_pad(32, 1, 1), (32, 0, 0));
+        assert_eq!(same_pad(5, 3, 2), (3, 1, 1));
+    }
+
+    #[test]
+    fn matmul_identities() {
+        // (2,3) @ (3,2)
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0];
+        let c = matmul(&a, &b, 2, 3, 2);
+        assert_eq!(c, vec![58.0, 64.0, 139.0, 154.0]);
+        // aᵀ @ a is symmetric.
+        let mut ata = vec![0.0; 9];
+        matmul_at_b_acc(&mut ata, &a, &a, 2, 3, 3);
+        assert_eq!(ata[1], ata[3]);
+        assert_eq!(ata[2], ata[6]);
+        // a @ bᵀ where b == b: (2,3)@(2,3)ᵀ = (2,2).
+        let abt = matmul_a_bt(&a, &b, 2, 3, 2);
+        assert_eq!(abt, vec![50.0, 68.0, 122.0, 167.0]);
+    }
+
+    #[test]
+    fn cmajor_roundtrips() {
+        let d = Dims { n: 2, h: 2, w: 1, c: 3 };
+        let x: Vec<f32> = (0..d.elems()).map(|i| i as f32).collect();
+        let cm = nhwc_to_cmajor(&x, d);
+        // Channel 0 row = every 3rd element.
+        assert_eq!(&cm[0..4], &[0.0, 3.0, 6.0, 9.0]);
+        assert_eq!(cmajor_to_nhwc(&cm, d), x);
+        let w: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        assert_eq!(cmajor_to_w(&w_to_cmajor(&w, 4, 3), 4, 3), w);
+    }
+
+    #[test]
+    fn conv_identity_kernel_preserves_input() {
+        // 1×1 conv with identity weight = passthrough.
+        let d = Dims { n: 1, h: 3, w: 3, c: 2 };
+        let x: Vec<f32> = (0..d.elems()).map(|i| i as f32 * 0.5).collect();
+        let w = vec![1.0, 0.0, 0.0, 1.0]; // (1,1,2,2) identity
+        let (y, od) = conv2d(&x, d, &w, 1, 1, 2);
+        assert_eq!(od, d);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn conv_3x3_counts_neighbours() {
+        // All-ones 3×3 kernel on all-ones input counts the valid
+        // neighbourhood: 4 at corners, 6 at edges, 9 inside.
+        let d = Dims { n: 1, h: 3, w: 3, c: 1 };
+        let x = vec![1.0f32; 9];
+        let w = vec![1.0f32; 9]; // (3,3,1,1)
+        let (y, _) = conv2d(&x, d, &w, 3, 1, 1);
+        assert_eq!(y, vec![4.0, 6.0, 4.0, 6.0, 9.0, 6.0, 4.0, 6.0, 4.0]);
+    }
+
+    #[test]
+    fn conv_grad_matches_finite_difference() {
+        let d = Dims { n: 1, h: 4, w: 4, c: 2 };
+        let mut x: Vec<f32> = (0..d.elems()).map(|i| ((i * 7 % 13) as f32 - 6.0) / 6.0).collect();
+        let w: Vec<f32> = (0..3 * 3 * 2 * 3).map(|i| ((i * 5 % 11) as f32 - 5.0) / 10.0).collect();
+        let loss = |x: &[f32], w: &[f32]| -> f64 {
+            let (y, _) = conv2d(x, d, w, 3, 1, 3);
+            y.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() * 0.5
+        };
+        let (y, od) = conv2d(&x, d, &w, 3, 1, 3);
+        let dy: Vec<f32> = y.clone(); // dL/dy for L = ½Σy²
+        let (dx, dw) = conv2d_bwd(&x, d, &w, 3, 1, 3, &dy);
+        assert_eq!(dy.len(), od.elems());
+        let eps = 1e-2f32;
+        for &i in &[0usize, 5, 17, 31] {
+            let base = loss(&x, &w);
+            x[i] += eps;
+            let plus = loss(&x, &w);
+            x[i] -= eps;
+            let fd = ((plus - base) / eps as f64) as f32;
+            assert!((fd - dx[i]).abs() < 0.05 * (1.0 + fd.abs()), "dx[{i}]: fd {fd} vs {}", dx[i]);
+        }
+        let mut wm = w.clone();
+        for &i in &[0usize, 10, 30] {
+            let base = loss(&x, &wm);
+            wm[i] += eps;
+            let plus = loss(&x, &wm);
+            wm[i] -= eps;
+            let fd = ((plus - base) / eps as f64) as f32;
+            assert!((fd - dw[i]).abs() < 0.05 * (1.0 + fd.abs()), "dw[{i}]: fd {fd} vs {}", dw[i]);
+        }
+    }
+
+    #[test]
+    fn dwconv_matches_grouped_dense() {
+        // Depthwise conv == dense conv per single channel.
+        let d = Dims { n: 1, h: 4, w: 4, c: 2 };
+        let x: Vec<f32> = (0..d.elems()).map(|i| (i as f32 * 0.3).sin()).collect();
+        let w: Vec<f32> = (0..9 * 2).map(|i| (i as f32 * 0.7).cos()).collect(); // (3,3,1,2)
+        let (y, od) = dwconv2d(&x, d, &w, 3, 1);
+        assert_eq!(od.c, 2);
+        // Channel 0 via dense conv on the channel-0 slice.
+        let d1 = Dims { n: 1, h: 4, w: 4, c: 1 };
+        let x0: Vec<f32> = x.iter().step_by(2).cloned().collect();
+        let w0: Vec<f32> = w.iter().step_by(2).cloned().collect();
+        let (y0, _) = conv2d(&x0, d1, &w0, 3, 1, 1);
+        for p in 0..16 {
+            assert!((y[p * 2] - y0[p]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn dwconv_grad_matches_finite_difference() {
+        let d = Dims { n: 1, h: 3, w: 3, c: 2 };
+        let mut x: Vec<f32> = (0..d.elems()).map(|i| ((i % 5) as f32 - 2.0) / 3.0).collect();
+        let w: Vec<f32> = (0..9 * 2).map(|i| ((i % 7) as f32 - 3.0) / 5.0).collect();
+        let loss = |x: &[f32], w: &[f32]| -> f64 {
+            let (y, _) = dwconv2d(x, d, w, 3, 2);
+            y.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() * 0.5
+        };
+        let (y, _) = dwconv2d(&x, d, &w, 3, 2);
+        let (dx, dw) = dwconv2d_bwd(&x, d, &w, 3, 2, &y);
+        let eps = 1e-2f32;
+        for &i in &[0usize, 7, 17] {
+            let base = loss(&x, &w);
+            x[i] += eps;
+            let plus = loss(&x, &w);
+            x[i] -= eps;
+            let fd = ((plus - base) / eps as f64) as f32;
+            assert!((fd - dx[i]).abs() < 0.05 * (1.0 + fd.abs()), "dx[{i}]: fd {fd} vs {}", dx[i]);
+        }
+        for &i in &[1usize, 9] {
+            let base = loss(&x, &w);
+            let mut wm = w.clone();
+            wm[i] += eps;
+            let plus = loss(&x, &wm);
+            let fd = ((plus - base) / eps as f64) as f32;
+            assert!((fd - dw[i]).abs() < 0.05 * (1.0 + fd.abs()), "dw[{i}]: fd {fd} vs {}", dw[i]);
+        }
+    }
+
+    #[test]
+    fn group_norm_normalizes_and_bwd_matches_fd() {
+        let d = Dims { n: 2, h: 2, w: 2, c: 8 };
+        let x: Vec<f32> = (0..d.elems()).map(|i| ((i * 11 % 23) as f32 - 11.0) / 7.0).collect();
+        let gamma = vec![1.0f32; 8];
+        let beta = vec![0.0f32; 8];
+        let (y, cache) = group_norm(&x, d, &gamma, &beta);
+        // Per (n, group) the normalized output has ~zero mean, ~unit var.
+        let gr = gn_groups(8);
+        let cg = 8 / gr;
+        let m = (d.h * d.w * cg) as f64;
+        for ni in 0..2 {
+            for g in 0..gr {
+                let mut sum = 0.0f64;
+                for p in 0..4 {
+                    for j in 0..cg {
+                        sum += y[(ni * 4 + p) * 8 + g * cg + j] as f64;
+                    }
+                }
+                assert!((sum / m).abs() < 1e-4, "group mean {}", sum / m);
+            }
+        }
+        // Finite-difference check of dx through a quadratic loss.
+        let gamma2: Vec<f32> = (0..8).map(|i| 0.5 + 0.1 * i as f32).collect();
+        let beta2: Vec<f32> = (0..8).map(|i| 0.05 * i as f32).collect();
+        let loss = |x: &[f32]| -> f64 {
+            let (y, _) = group_norm(x, d, &gamma2, &beta2);
+            y.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() * 0.5
+        };
+        let (y2, cache2) = group_norm(&x, d, &gamma2, &beta2);
+        let _ = cache;
+        let (dx, dgamma, dbeta) = group_norm_bwd(&y2, d, &gamma2, &cache2);
+        assert_eq!(dgamma.len(), 8);
+        assert_eq!(dbeta.len(), 8);
+        let mut xm = x.clone();
+        let eps = 1e-2f32;
+        for &i in &[0usize, 13, 40, 63] {
+            let base = loss(&xm);
+            xm[i] += eps;
+            let plus = loss(&xm);
+            xm[i] -= eps;
+            let fd = ((plus - base) / eps as f64) as f32;
+            assert!((fd - dx[i]).abs() < 0.05 * (1.0 + fd.abs()), "dx[{i}]: fd {fd} vs {}", dx[i]);
+        }
+    }
+
+    #[test]
+    fn pool_gap_relu_roundtrip() {
+        let d = Dims { n: 1, h: 4, w: 4, c: 1 };
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let (y, idx, od) = maxpool2(&x, d);
+        assert_eq!(od.h, 2);
+        assert_eq!(y, vec![5.0, 7.0, 13.0, 15.0]);
+        let dx = maxpool2_bwd(&[1.0, 2.0, 3.0, 4.0], &idx, 16);
+        assert_eq!(dx[5], 1.0);
+        assert_eq!(dx[15], 4.0);
+        assert_eq!(dx.iter().sum::<f32>(), 10.0);
+
+        let g = gap(&x, d);
+        assert_eq!(g, vec![7.5]);
+        let dg = gap_bwd(&[16.0], d);
+        assert!(dg.iter().all(|&v| v == 1.0));
+
+        let mut r = vec![-1.0f32, 0.0, 2.0];
+        relu(&mut r);
+        assert_eq!(r, vec![0.0, 0.0, 2.0]);
+        let mut dr = vec![5.0f32, 5.0, 5.0];
+        relu_bwd(&mut dr, &r);
+        assert_eq!(dr, vec![0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn xent_grad_sums_to_zero_and_loss_matches() {
+        let logits = vec![2.0f32, 1.0, 0.0, 0.0, 3.0, 0.0];
+        let (correct, loss, grad) = softmax_xent(&logits, 2, 3, &[0, 1], true);
+        assert_eq!(correct, 2.0);
+        assert!(loss > 0.0 && loss < 1.0);
+        let g = grad.unwrap();
+        for i in 0..2 {
+            let s: f32 = g[i * 3..(i + 1) * 3].iter().sum();
+            assert!(s.abs() < 1e-6, "grad rows sum to 0, got {s}");
+        }
+        // Gold logit's gradient is negative.
+        assert!(g[0] < 0.0);
+        assert!(g[4] < 0.0);
+    }
+}

@@ -1,0 +1,152 @@
+//! Pure-Rust ports of the L1 quantizer oracles
+//! (`python/compile/kernels/ref.py`), operating on channel-major `(C, K)`
+//! matrices exactly like the Pallas kernels:
+//!
+//! * [`fake_quant_rows`] — linear (uniform, symmetric max-abs) per-channel
+//!   quantize-dequantize.  bits 0 ⇒ channel pruned, ≥ 24 ⇒ passthrough.
+//! * [`binarize_rows`] — multi-bit residual binarization (ABC-Net style):
+//!   `W ≈ Σ_k α_k · sign(r_k)` with `r_{k+1} = r_k − α_k·sign(r_k)`.
+//!
+//! Rounding is ties-to-even to match `jnp.round`.
+
+/// Residual-binarization level cap (python `MAX_BBN`).
+pub const MAX_BBN: usize = 8;
+
+/// `jnp.round` semantics: round half to even.
+pub fn round_te(x: f32) -> f32 {
+    let r = x.round(); // half away from zero
+    if (r - x).abs() == 0.5 && (r as i64) % 2 != 0 {
+        r - x.signum()
+    } else {
+        r
+    }
+}
+
+/// Per-channel linear quantize-dequantize over the `cols`-wide row `c` of a
+/// channel-major matrix, in place.
+fn fake_quant_row(row: &mut [f32], bits: f32) {
+    let b = round_te(bits);
+    if b <= 0.0 {
+        row.fill(0.0);
+        return;
+    }
+    if b >= 24.0 {
+        return; // beyond the f32 mantissa quantization is exact identity
+    }
+    // Signed symmetric quantizer: 2^(b-1) - 1 positive levels; b == 1 is
+    // degenerate (0 levels) → binary {-s, +s} via the max(levels, 1) floor.
+    let levels = (2.0f32.powf(b.clamp(1.0, 24.0) - 1.0) - 1.0).max(1.0);
+    let max_abs = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let scale = if max_abs > 0.0 { max_abs / levels } else { 1.0 };
+    for x in row.iter_mut() {
+        let q = round_te(*x / scale).clamp(-levels, levels);
+        *x = q * scale;
+    }
+}
+
+/// Per-channel multi-bit residual binarization of row `c`, in place.
+fn binarize_row(row: &mut [f32], bits: f32) {
+    let b = round_te(bits).clamp(0.0, MAX_BBN as f32) as usize;
+    let k_cols = row.len().max(1) as f32;
+    let mut r: Vec<f32> = row.to_vec();
+    row.fill(0.0);
+    for _ in 0..b {
+        let alpha = r.iter().map(|x| x.abs()).sum::<f32>() / k_cols;
+        for (o, ri) in row.iter_mut().zip(r.iter_mut()) {
+            let level = if *ri >= 0.0 { alpha } else { -alpha };
+            *o += level;
+            *ri -= level;
+        }
+    }
+}
+
+/// Apply the mode's quantizer to every row of a channel-major `(rows, cols)`
+/// matrix; `bits[c]` governs row `c`.
+pub fn quantize_rows(x: &mut [f32], rows: usize, cols: usize, bits: &[f32], binar: bool) {
+    debug_assert_eq!(x.len(), rows * cols);
+    debug_assert_eq!(bits.len(), rows);
+    for c in 0..rows {
+        let row = &mut x[c * cols..(c + 1) * cols];
+        if binar {
+            binarize_row(row, bits[c]);
+        } else {
+            fake_quant_row(row, bits[c]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rounding_is_ties_even() {
+        assert_eq!(round_te(2.5), 2.0);
+        assert_eq!(round_te(3.5), 4.0);
+        assert_eq!(round_te(-2.5), -2.0);
+        assert_eq!(round_te(-3.5), -4.0);
+        assert_eq!(round_te(2.3), 2.0);
+        assert_eq!(round_te(-2.7), -3.0);
+    }
+
+    #[test]
+    fn zero_bits_prunes_and_high_bits_pass_through() {
+        let orig = vec![0.5f32, -1.25, 0.0, 2.0];
+        let mut x = orig.clone();
+        fake_quant_row(&mut x, 0.0);
+        assert!(x.iter().all(|&v| v == 0.0));
+        let mut x = orig.clone();
+        fake_quant_row(&mut x, 32.0);
+        assert_eq!(x, orig);
+    }
+
+    #[test]
+    fn quantization_error_shrinks_with_bits() {
+        let orig: Vec<f32> = (0..64).map(|i| ((i * 37 % 101) as f32 / 50.0) - 1.0).collect();
+        let err = |bits: f32| {
+            let mut x = orig.clone();
+            fake_quant_row(&mut x, bits);
+            x.iter().zip(&orig).map(|(a, b)| (a - b).abs() as f64).sum::<f64>()
+        };
+        assert!(err(2.0) > err(4.0));
+        assert!(err(4.0) > err(8.0));
+        assert!(err(16.0) < 1e-3);
+    }
+
+    #[test]
+    fn one_bit_is_binary_pm_maxabs() {
+        let mut x = vec![0.3f32, -0.8, 0.1];
+        fake_quant_row(&mut x, 1.0);
+        // levels floor = 1, scale = max|x| → values in {-0.8, 0, 0.8}.
+        for &v in &x {
+            assert!(v == 0.8 || v == -0.8 || v == 0.0, "{v}");
+        }
+        assert_eq!(x[1], -0.8);
+    }
+
+    #[test]
+    fn binarize_residual_converges() {
+        let orig: Vec<f32> = (0..32).map(|i| ((i * 13 % 17) as f32 / 8.0) - 1.0).collect();
+        let err = |bits: f32| {
+            let mut x = orig.clone();
+            binarize_row(&mut x, bits);
+            x.iter().zip(&orig).map(|(a, b)| (a - b).abs() as f64).sum::<f64>()
+        };
+        assert!(err(1.0) > err(3.0));
+        assert!(err(3.0) > err(8.0));
+        let mut zeroed = orig.clone();
+        binarize_row(&mut zeroed, 0.0);
+        assert!(zeroed.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn rows_quantized_independently() {
+        let mut x = vec![
+            0.5, -0.5, 0.25, // row 0: 0 bits → pruned
+            1.0, -1.0, 0.5, // row 1: passthrough
+        ];
+        quantize_rows(&mut x, 2, 3, &[0.0, 32.0], false);
+        assert_eq!(&x[..3], &[0.0, 0.0, 0.0]);
+        assert_eq!(&x[3..], &[1.0, -1.0, 0.5]);
+    }
+}

@@ -1,0 +1,641 @@
+//! The model zoo, mirrored from `python/compile/model.py` /
+//! `python/compile/agent.py` node-for-node so the reference backend can
+//! synthesize the same manifest (layer metadata, parameter specs, artifact
+//! shapes) the AOT exporter writes — with zero artifacts on disk.
+//!
+//! Any change to the python specs must be mirrored here (and vice versa);
+//! `tests/runtime_roundtrip.rs` cross-checks the two when the PJRT lane
+//! runs with real artifacts.
+
+use std::collections::BTreeMap;
+
+use crate::runtime::manifest::{
+    AgentMeta, ArtifactSpec, LayerMeta, Manifest, ModelMeta, ParamSpec, TensorSpec,
+};
+
+pub const IMAGE_HW: usize = 32;
+pub const NUM_CLASSES: usize = 10;
+pub const EVAL_BATCH: usize = 256;
+pub const TRAIN_BATCH: usize = 128;
+
+pub const HIDDEN: usize = 300;
+pub const ACT_BATCH: usize = 128;
+pub const UPD_BATCH: usize = 64;
+pub const ACTION_SCALE: f64 = 32.0;
+
+pub const MODEL_NAMES: [&str; 4] = ["cif10", "res18", "sqnet", "monet"];
+
+/// Architecture node mini-DSL (python `SPECS`).
+#[derive(Debug, Clone, Copy)]
+pub enum Node {
+    /// Plain conv; `norm=false, relu=false` is the sqnet classifier conv.
+    Conv { k: usize, s: usize, cout: usize, norm: bool, relu: bool },
+    Fc { cout: usize },
+    /// 2×2 max pool, stride 2, VALID.
+    Pool,
+    /// Global average pool over H×W (covers python's gap and gap_logits).
+    Gap,
+    /// ResNet basic block: conv3(s)+relu → conv3(1) → (+proj?) → relu.
+    Basic { cout: usize, s: usize },
+    /// SqueezeNet fire: squeeze1 → concat(expand1, expand3).
+    Fire { sq: usize, e1: usize, e3: usize },
+    /// MobileNetV2 inverted residual: expand1 → dw3(s) → project1 (+skip).
+    Irb { t: usize, cout: usize, s: usize },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LType {
+    Conv,
+    DwConv,
+    Fc,
+}
+
+impl LType {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LType::Conv => "conv",
+            LType::DwConv => "dwconv",
+            LType::Fc => "fc",
+        }
+    }
+}
+
+/// One primitive quantizable layer with everything the interpreter needs
+/// (a superset of the manifest's `LayerMeta`: norm/activation flags and the
+/// parameter-list offset).
+#[derive(Debug, Clone)]
+pub struct LayerDef {
+    pub name: String,
+    pub typ: LType,
+    pub k: usize,
+    pub s: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub h_in: usize,
+    pub w_in: usize,
+    pub h_out: usize,
+    pub w_out: usize,
+    pub norm: bool,
+    pub relu: bool,
+    pub macs: u64,
+    pub w_off: usize,
+    pub w_len: usize,
+    pub a_off: usize,
+    pub a_len: usize,
+    /// Index of `{name}.w` in the manifest param list; `.g`/`.bta` (norm)
+    /// or `.b` (bias) follow at `p_w + 1` (+2).
+    pub p_w: usize,
+}
+
+/// A whole model: the node program plus the flattened layer/param layout.
+#[derive(Debug, Clone)]
+pub struct ModelGraph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    pub layers: Vec<LayerDef>,
+    pub params: Vec<ParamSpec>,
+    pub w_channels: usize,
+    pub a_channels: usize,
+    pub total_macs: u64,
+}
+
+pub fn spec(name: &str) -> anyhow::Result<Vec<Node>> {
+    use Node::*;
+    let conv = |k, s, cout| Conv { k, s, cout, norm: true, relu: true };
+    Ok(match name {
+        // The paper's CIFAR10-7CNN: 7 conv layers + classifier.
+        "cif10" => vec![
+            conv(3, 1, 16),
+            conv(3, 1, 16),
+            conv(3, 2, 32),
+            conv(3, 1, 32),
+            conv(3, 2, 64),
+            conv(3, 1, 64),
+            conv(3, 1, 64),
+            Gap,
+            Fc { cout: NUM_CLASSES },
+        ],
+        // ResNet-18 topology at CIFAR scale: stem + 4 stages × 2 blocks.
+        "res18" => vec![
+            conv(3, 1, 16),
+            Basic { cout: 16, s: 1 },
+            Basic { cout: 16, s: 1 },
+            Basic { cout: 32, s: 2 },
+            Basic { cout: 32, s: 1 },
+            Basic { cout: 64, s: 2 },
+            Basic { cout: 64, s: 1 },
+            Basic { cout: 128, s: 2 },
+            Basic { cout: 128, s: 1 },
+            Gap,
+            Fc { cout: NUM_CLASSES },
+        ],
+        // SqueezeNet-V1 topology: stem + fire modules + conv classifier.
+        "sqnet" => vec![
+            conv(3, 1, 32),
+            Pool,
+            Fire { sq: 16, e1: 32, e3: 32 },
+            Fire { sq: 16, e1: 32, e3: 32 },
+            Pool,
+            Fire { sq: 32, e1: 64, e3: 64 },
+            Fire { sq: 32, e1: 64, e3: 64 },
+            Conv { k: 1, s: 1, cout: NUM_CLASSES, norm: false, relu: false },
+            Gap, // gap_logits
+        ],
+        // MobileNetV2 topology: stem + inverted-residual blocks.
+        "monet" => vec![
+            conv(3, 1, 16),
+            Irb { t: 1, cout: 16, s: 1 },
+            Irb { t: 3, cout: 24, s: 2 },
+            Irb { t: 3, cout: 24, s: 1 },
+            Irb { t: 3, cout: 32, s: 2 },
+            Irb { t: 3, cout: 32, s: 1 },
+            Conv { k: 1, s: 1, cout: 96, norm: true, relu: true },
+            Gap,
+            Fc { cout: NUM_CLASSES },
+        ],
+        other => anyhow::bail!("unknown zoo model {other:?}"),
+    })
+}
+
+/// Metadata walker (python `MetaBackend` + `_walk`): expands the node
+/// program into the primitive layer list and parameter specs, assigning
+/// the flat weight/activation channel offsets.
+struct MetaWalk {
+    layers: Vec<LayerDef>,
+    params: Vec<ParamSpec>,
+    w_channels: usize,
+    a_channels: usize,
+    li: usize,
+}
+
+impl MetaWalk {
+    fn new() -> MetaWalk {
+        MetaWalk { layers: Vec::new(), params: Vec::new(), w_channels: 0, a_channels: 0, li: 0 }
+    }
+
+    fn nm(&mut self, base: &str) -> String {
+        self.li += 1;
+        format!("l{:02}_{base}", self.li)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn layer(
+        &mut self,
+        name: String,
+        typ: LType,
+        k: usize,
+        s: usize,
+        cin: usize,
+        cout: usize,
+        h: usize,
+        w: usize,
+        norm: bool,
+        relu: bool,
+    ) {
+        let h_out = (h + s - 1) / s;
+        let w_out = (w + s - 1) / s;
+        let groups = if typ == LType::DwConv { cin } else { 1 };
+        // MACs for one inference (the bit-independent logic_t of Eq. 1).
+        let macs: u64 = match typ {
+            LType::Fc => (cin * cout) as u64,
+            LType::DwConv => (h_out * w_out * k * k * cin) as u64,
+            LType::Conv => (h_out * w_out * k * k * (cin / groups) * cout) as u64,
+        };
+        let n_act = if typ == LType::Fc { 1 } else { cin };
+        let p_w = self.params.len();
+        match typ {
+            LType::Fc => {
+                self.params.push(ParamSpec {
+                    name: format!("{name}.w"),
+                    shape: vec![cin, cout],
+                    init: "he".into(),
+                });
+                self.params.push(ParamSpec {
+                    name: format!("{name}.b"),
+                    shape: vec![cout],
+                    init: "zeros".into(),
+                });
+            }
+            _ => {
+                let kk = if typ == LType::DwConv {
+                    vec![k, k, 1, cin]
+                } else {
+                    vec![k, k, cin / groups, cout]
+                };
+                self.params.push(ParamSpec {
+                    name: format!("{name}.w"),
+                    shape: kk,
+                    init: "he".into(),
+                });
+                if norm {
+                    self.params.push(ParamSpec {
+                        name: format!("{name}.g"),
+                        shape: vec![cout],
+                        init: "ones".into(),
+                    });
+                    self.params.push(ParamSpec {
+                        name: format!("{name}.bta"),
+                        shape: vec![cout],
+                        init: "zeros".into(),
+                    });
+                } else {
+                    self.params.push(ParamSpec {
+                        name: format!("{name}.b"),
+                        shape: vec![cout],
+                        init: "zeros".into(),
+                    });
+                }
+            }
+        }
+        self.layers.push(LayerDef {
+            name,
+            typ,
+            k,
+            s,
+            cin,
+            cout,
+            h_in: h,
+            w_in: w,
+            h_out,
+            w_out,
+            norm,
+            relu,
+            macs,
+            w_off: self.w_channels,
+            w_len: cout,
+            a_off: self.a_channels,
+            a_len: n_act,
+            p_w,
+        });
+        self.w_channels += cout;
+        self.a_channels += n_act;
+    }
+}
+
+pub fn model_graph(name: &str) -> anyhow::Result<ModelGraph> {
+    let nodes = spec(name)?;
+    let mut mw = MetaWalk::new();
+    let (mut h, mut w, mut c) = (IMAGE_HW, IMAGE_HW, 3usize);
+    for node in &nodes {
+        match *node {
+            Node::Conv { k, s, cout, norm, relu } => {
+                let nm = mw.nm("conv");
+                mw.layer(nm, LType::Conv, k, s, c, cout, h, w, norm, relu);
+                h = (h + s - 1) / s;
+                w = (w + s - 1) / s;
+                c = cout;
+            }
+            Node::Fc { cout } => {
+                let nm = mw.nm("fc");
+                mw.layer(nm, LType::Fc, 1, 1, c, cout, 1, 1, false, false);
+                c = cout;
+            }
+            Node::Pool => {
+                h /= 2;
+                w /= 2;
+            }
+            Node::Gap => {
+                h = 1;
+                w = 1;
+            }
+            Node::Basic { cout, s } => {
+                let proj = s != 1 || c != cout;
+                let n1 = mw.nm("conv");
+                mw.layer(n1, LType::Conv, 3, s, c, cout, h, w, true, true);
+                let h2 = (h + s - 1) / s;
+                let w2 = (w + s - 1) / s;
+                let n2 = mw.nm("conv");
+                mw.layer(n2, LType::Conv, 3, 1, cout, cout, h2, w2, true, false);
+                if proj {
+                    let n3 = mw.nm("proj");
+                    mw.layer(n3, LType::Conv, 1, s, c, cout, h, w, true, false);
+                }
+                h = h2;
+                w = w2;
+                c = cout;
+            }
+            Node::Fire { sq, e1, e3 } => {
+                let n1 = mw.nm("squeeze");
+                mw.layer(n1, LType::Conv, 1, 1, c, sq, h, w, true, true);
+                let n2 = mw.nm("expand1");
+                mw.layer(n2, LType::Conv, 1, 1, sq, e1, h, w, true, true);
+                let n3 = mw.nm("expand3");
+                mw.layer(n3, LType::Conv, 3, 1, sq, e3, h, w, true, true);
+                c = e1 + e3;
+            }
+            Node::Irb { t, cout, s } => {
+                let cexp = c * t;
+                if t != 1 {
+                    let n1 = mw.nm("expand");
+                    mw.layer(n1, LType::Conv, 1, 1, c, cexp, h, w, true, true);
+                }
+                let n2 = mw.nm("dw");
+                mw.layer(n2, LType::DwConv, 3, s, cexp, cexp, h, w, true, true);
+                let h2 = (h + s - 1) / s;
+                let w2 = (w + s - 1) / s;
+                let n3 = mw.nm("project");
+                mw.layer(n3, LType::Conv, 1, 1, cexp, cout, h2, w2, true, false);
+                h = h2;
+                w = w2;
+                c = cout;
+            }
+        }
+    }
+    let total_macs = mw.layers.iter().map(|l| l.macs).sum();
+    Ok(ModelGraph {
+        name: name.to_string(),
+        nodes,
+        layers: mw.layers,
+        params: mw.params,
+        w_channels: mw.w_channels,
+        a_channels: mw.a_channels,
+        total_macs,
+    })
+}
+
+pub fn model_meta(g: &ModelGraph) -> ModelMeta {
+    ModelMeta {
+        name: g.name.clone(),
+        image_hw: IMAGE_HW,
+        num_classes: NUM_CLASSES,
+        eval_batch: EVAL_BATCH,
+        train_batch: TRAIN_BATCH,
+        layers: g
+            .layers
+            .iter()
+            .map(|l| LayerMeta {
+                name: l.name.clone(),
+                typ: l.typ.as_str().to_string(),
+                k: l.k,
+                stride: l.s,
+                cin: l.cin,
+                cout: l.cout,
+                h_in: l.h_in,
+                w_in: l.w_in,
+                h_out: l.h_out,
+                w_out: l.w_out,
+                macs: l.macs,
+                w_off: l.w_off,
+                w_len: l.w_len,
+                a_off: l.a_off,
+                a_len: l.a_len,
+            })
+            .collect(),
+        params: g.params.clone(),
+        w_channels: g.w_channels,
+        a_channels: g.a_channels,
+        total_macs: g.total_macs,
+    }
+}
+
+pub fn actor_shapes(s: usize) -> Vec<Vec<usize>> {
+    vec![
+        vec![s, HIDDEN],
+        vec![HIDDEN],
+        vec![HIDDEN, HIDDEN],
+        vec![HIDDEN],
+        vec![HIDDEN, 1],
+        vec![1],
+    ]
+}
+
+pub fn critic_shapes(s: usize) -> Vec<Vec<usize>> {
+    // Critic consumes state ⊕ action.
+    actor_shapes(s + 1)
+}
+
+pub fn agent_meta(s_dim: usize) -> AgentMeta {
+    AgentMeta {
+        s_dim,
+        hidden: HIDDEN,
+        act_batch: ACT_BATCH,
+        upd_batch: UPD_BATCH,
+        action_scale: ACTION_SCALE,
+        actor_shapes: actor_shapes(s_dim),
+        critic_shapes: critic_shapes(s_dim),
+    }
+}
+
+fn f32s(shape: &[usize]) -> TensorSpec {
+    TensorSpec { shape: shape.to_vec(), dtype: "f32".into() }
+}
+
+fn scalar() -> TensorSpec {
+    TensorSpec { shape: vec![], dtype: "f32".into() }
+}
+
+fn model_artifacts(g: &ModelGraph, out: &mut BTreeMap<String, ArtifactSpec>) {
+    let params: Vec<TensorSpec> = g.params.iter().map(|p| f32s(&p.shape)).collect();
+    for mode in ["quant", "binar"] {
+        // eval(params..., images, labels, wbits, abits) -> (correct, loss)
+        let mut inputs = params.clone();
+        inputs.push(f32s(&[EVAL_BATCH, IMAGE_HW, IMAGE_HW, 3]));
+        inputs.push(TensorSpec { shape: vec![EVAL_BATCH], dtype: "s32".into() });
+        inputs.push(f32s(&[g.w_channels]));
+        inputs.push(f32s(&[g.a_channels]));
+        let name = format!("{}_eval_{mode}", g.name);
+        out.insert(
+            name.clone(),
+            ArtifactSpec {
+                name,
+                file: "<builtin>".into(),
+                inputs,
+                outputs: vec![scalar(), scalar()],
+            },
+        );
+        // train(params..., momenta..., images, labels, wbits, abits, lr)
+        //   -> (new_params..., new_momenta..., loss)
+        let mut inputs = params.clone();
+        inputs.extend(params.clone());
+        inputs.push(f32s(&[TRAIN_BATCH, IMAGE_HW, IMAGE_HW, 3]));
+        inputs.push(TensorSpec { shape: vec![TRAIN_BATCH], dtype: "s32".into() });
+        inputs.push(f32s(&[g.w_channels]));
+        inputs.push(f32s(&[g.a_channels]));
+        inputs.push(scalar());
+        let mut outputs = params.clone();
+        outputs.extend(params.clone());
+        outputs.push(scalar());
+        let name = format!("{}_train_{mode}", g.name);
+        out.insert(
+            name.clone(),
+            ArtifactSpec { name, file: "<builtin>".into(), inputs, outputs },
+        );
+    }
+}
+
+fn agent_artifacts(s_dim: usize, out: &mut BTreeMap<String, ArtifactSpec>) {
+    let a6: Vec<TensorSpec> = actor_shapes(s_dim).iter().map(|s| f32s(s)).collect();
+    let c6: Vec<TensorSpec> = critic_shapes(s_dim).iter().map(|s| f32s(s)).collect();
+
+    // act(actor..., states) -> actions
+    let mut inputs = a6.clone();
+    inputs.push(f32s(&[ACT_BATCH, s_dim]));
+    let name = format!("ddpg_act_s{s_dim}");
+    out.insert(
+        name.clone(),
+        ArtifactSpec {
+            name,
+            file: "<builtin>".into(),
+            inputs,
+            outputs: vec![f32s(&[ACT_BATCH, 1])],
+        },
+    );
+
+    // update(nets + targets + adam moments + t + batch + hypers)
+    //   -> (new nets + targets + moments, t+1, critic_loss, actor_loss)
+    let mut inputs = Vec::new();
+    inputs.extend(a6.clone());
+    inputs.extend(c6.clone());
+    inputs.extend(a6.clone());
+    inputs.extend(c6.clone());
+    inputs.extend(a6.clone());
+    inputs.extend(a6.clone());
+    inputs.extend(c6.clone());
+    inputs.extend(c6.clone());
+    inputs.push(scalar()); // t
+    let b = UPD_BATCH;
+    inputs.push(f32s(&[b, s_dim]));
+    inputs.push(f32s(&[b, 1]));
+    inputs.push(f32s(&[b, 1]));
+    inputs.push(f32s(&[b, s_dim]));
+    inputs.push(f32s(&[b, 1]));
+    for _ in 0..4 {
+        inputs.push(scalar()); // gamma, tau, lr_a, lr_c
+    }
+    let mut outputs = Vec::new();
+    outputs.extend(a6.clone());
+    outputs.extend(c6.clone());
+    outputs.extend(a6.clone());
+    outputs.extend(c6.clone());
+    outputs.extend(a6.clone());
+    outputs.extend(a6);
+    outputs.extend(c6.clone());
+    outputs.extend(c6);
+    outputs.push(scalar()); // t+1
+    outputs.push(scalar()); // critic loss
+    outputs.push(scalar()); // actor loss
+    let name = format!("ddpg_update_s{s_dim}");
+    out.insert(name.clone(), ArtifactSpec { name, file: "<builtin>".into(), inputs, outputs });
+}
+
+/// The complete manifest the reference backend serves — same content the
+/// AOT exporter writes to `artifacts/manifest.json`, minus the HLO files.
+pub fn builtin_manifest() -> Manifest {
+    let mut artifacts = BTreeMap::new();
+    let mut models = BTreeMap::new();
+    for name in MODEL_NAMES {
+        let g = model_graph(name).expect("builtin zoo");
+        model_artifacts(&g, &mut artifacts);
+        models.insert(name.to_string(), model_meta(&g));
+    }
+    let mut agents = BTreeMap::new();
+    for s_dim in [16usize, 17] {
+        agents.insert(format!("s{s_dim}"), agent_meta(s_dim));
+        agent_artifacts(s_dim, &mut artifacts);
+    }
+    Manifest { artifacts, models, agents }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cif10_layout_matches_paper_cnn() {
+        let g = model_graph("cif10").unwrap();
+        assert_eq!(g.layers.len(), 8); // 7 convs + fc
+        assert_eq!(g.layers[0].name, "l01_conv");
+        assert_eq!(g.layers[7].name, "l08_fc");
+        assert_eq!(g.layers[7].typ, LType::Fc);
+        assert_eq!(g.layers[7].cin, 64);
+        assert_eq!(g.layers[7].a_len, 1);
+        // l01: 32×32×3×3×3×16 MACs.
+        assert_eq!(g.layers[0].macs, (32 * 32 * 9 * 3 * 16) as u64);
+        assert_eq!(g.w_channels, 16 + 16 + 32 + 32 + 64 + 64 + 64 + 10);
+        assert_eq!(g.a_channels, 3 + 16 + 16 + 32 + 32 + 64 + 64 + 1);
+        // Channel slices tile the bit vectors.
+        assert_eq!(g.layers.iter().map(|l| l.w_len).sum::<usize>(), g.w_channels);
+        assert_eq!(g.layers.iter().map(|l| l.a_len).sum::<usize>(), g.a_channels);
+        // Param layout: conv → w/g/bta triples; fc → w/b pair.
+        assert_eq!(g.params.len(), 7 * 3 + 2);
+        assert_eq!(g.params[0].name, "l01_conv.w");
+        assert_eq!(g.params[0].shape, vec![3, 3, 3, 16]);
+        assert_eq!(g.params[1].name, "l01_conv.g");
+    }
+
+    #[test]
+    fn res18_blocks_expand_with_projections() {
+        let g = model_graph("res18").unwrap();
+        // stem + 8 blocks (2 convs each, 3 with projection) + fc.
+        assert_eq!(g.layers.len(), 1 + 8 * 2 + 3 + 1);
+        assert!(g.layers.iter().any(|l| l.name.contains("proj")));
+        // Stage-transition block downsamples.
+        let proj = g.layers.iter().find(|l| l.name.contains("proj")).unwrap();
+        assert_eq!(proj.k, 1);
+        assert_eq!(proj.s, 2);
+    }
+
+    #[test]
+    fn monet_uses_dwconv_and_sqnet_skips_norm_on_classifier() {
+        let m = model_graph("monet").unwrap();
+        let dw = m.layers.iter().find(|l| l.typ == LType::DwConv).unwrap();
+        assert_eq!(dw.cin, dw.cout);
+        assert_eq!(dw.a_len, dw.w_len);
+        // dwconv weight shape (k,k,1,cin).
+        let p = &m.params[dw.p_w];
+        assert_eq!(p.shape, vec![3, 3, 1, dw.cin]);
+        // First irb has t=1 → no expand layer.
+        assert!(!m.layers.iter().any(|l| l.name == "l02_expand"));
+        assert_eq!(m.layers[1].name, "l02_dw");
+
+        let s = model_graph("sqnet").unwrap();
+        let cls = s.layers.iter().find(|l| !l.norm).unwrap();
+        assert_eq!(cls.cout, NUM_CLASSES);
+        assert!(!cls.relu);
+        assert_eq!(s.params[cls.p_w + 1].name, format!("{}.b", cls.name));
+    }
+
+    #[test]
+    fn builtin_manifest_is_complete() {
+        let m = builtin_manifest();
+        for model in MODEL_NAMES {
+            for fam in ["eval_quant", "eval_binar", "train_quant", "train_binar"] {
+                assert!(m.artifact(&format!("{model}_{fam}")).is_ok(), "{model}_{fam}");
+            }
+            let meta = m.model(model).unwrap();
+            assert!(meta.w_channels > 0 && meta.a_channels > 0);
+            assert!(meta.param_count() > 0);
+        }
+        for s in [16, 17] {
+            assert!(m.artifact(&format!("ddpg_act_s{s}")).is_ok());
+            assert!(m.artifact(&format!("ddpg_update_s{s}")).is_ok());
+            assert_eq!(m.agent(s).unwrap().hidden, HIDDEN);
+        }
+        // Arities: eval = np+4, train = 2np+5, act = 7, update = 58.
+        let np = m.model("cif10").unwrap().params.len();
+        assert_eq!(m.artifact("cif10_eval_quant").unwrap().inputs.len(), np + 4);
+        assert_eq!(m.artifact("cif10_train_quant").unwrap().inputs.len(), 2 * np + 5);
+        assert_eq!(m.artifact("cif10_train_quant").unwrap().outputs.len(), 2 * np + 1);
+        assert_eq!(m.artifact("ddpg_act_s16").unwrap().inputs.len(), 7);
+        assert_eq!(m.artifact("ddpg_update_s17").unwrap().inputs.len(), 58);
+        assert_eq!(m.artifact("ddpg_update_s17").unwrap().outputs.len(), 51);
+    }
+
+    #[test]
+    fn gap_then_fc_threads_flat_dims() {
+        for name in MODEL_NAMES {
+            let g = model_graph(name).unwrap();
+            // Output head ends at NUM_CLASSES channels.
+            assert_eq!(g.layers.last().unwrap().cout, NUM_CLASSES);
+            // Offsets are dense and increasing.
+            let mut w_off = 0;
+            let mut a_off = 0;
+            for l in &g.layers {
+                assert_eq!(l.w_off, w_off);
+                assert_eq!(l.a_off, a_off);
+                w_off += l.w_len;
+                a_off += l.a_len;
+            }
+        }
+    }
+}

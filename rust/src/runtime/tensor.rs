@@ -1,8 +1,8 @@
-//! Host-side tensor: a flat f32 buffer + shape, with conversions to/from
-//! `xla::Literal`.  All coordinator math (states, bit vectors, params) lives
-//! in `Tensor`s; literals are built only at the executable boundary.
-
-use xla::{ArrayElement, Literal};
+//! Host-side tensor: a flat f32 buffer + shape.  All coordinator math
+//! (states, bit vectors, params) lives in `Tensor`s; they cross the
+//! executable boundary wrapped in [`crate::runtime::Value`]s, and only the
+//! PJRT backend (feature `pjrt`) converts them to `xla::Literal`s at its
+//! edge.
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
@@ -38,38 +38,6 @@ impl Tensor {
     pub fn elems(&self) -> usize {
         self.data.len()
     }
-
-    /// Convert to an XLA literal (f32).
-    pub fn to_literal(&self) -> anyhow::Result<Literal> {
-        if self.shape.is_empty() {
-            return Ok(Literal::scalar(self.data[0]));
-        }
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        Ok(Literal::vec1(&self.data).reshape(&dims)?)
-    }
-
-    pub fn from_literal(lit: &Literal) -> anyhow::Result<Tensor> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let data = lit.to_vec::<f32>()?;
-        Ok(Tensor::new(dims, data))
-    }
-}
-
-/// Build an s32 literal (labels).
-pub fn lit_i32(data: &[i32], shape: &[usize]) -> anyhow::Result<Literal> {
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Ok(Literal::vec1(data).reshape(&dims)?)
-}
-
-/// Read a scalar f32 out of a literal.
-pub fn scalar_f32(lit: &Literal) -> anyhow::Result<f32> {
-    Ok(lit.get_first_element::<f32>()?)
-}
-
-/// Read any literal as Vec<f32> (must be f32-typed).
-pub fn vec_f32(lit: &Literal) -> anyhow::Result<Vec<f32>> {
-    Ok(lit.to_vec::<f32>()?)
 }
 
 /// Dtype string (manifest) → element size in bytes; used for size audits.
@@ -79,16 +47,6 @@ pub fn dtype_size(dtype: &str) -> usize {
         "f64" | "s64" => 8,
         _ => 4,
     }
-}
-
-/// Sanity trait check: Literal roundtrip preserves f32 payloads.
-pub fn roundtrip_check() -> anyhow::Result<()> {
-    let t = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
-    let l = t.to_literal()?;
-    let t2 = Tensor::from_literal(&l)?;
-    anyhow::ensure!(t == t2, "roundtrip mismatch");
-    let _ = f32::TY; // ensure ArrayElement is in scope / linked
-    Ok(())
 }
 
 #[cfg(test)]
@@ -111,13 +69,10 @@ mod tests {
     }
 
     #[test]
-    fn literal_roundtrip() {
-        roundtrip_check().unwrap();
-    }
-
-    #[test]
-    fn i32_literal() {
-        let l = lit_i32(&[1, 2, 3, 4], &[4]).unwrap();
-        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+    fn full_fills() {
+        let t = Tensor::full(vec![3], 2.0);
+        assert_eq!(t.data, vec![2.0, 2.0, 2.0]);
+        assert_eq!(dtype_size("f32"), 4);
+        assert_eq!(dtype_size("s64"), 8);
     }
 }

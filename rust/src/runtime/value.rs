@@ -1,0 +1,124 @@
+//! Backend-neutral host values crossing the executable boundary.
+//!
+//! Everything the coordinator dispatches (parameters, images, bit vectors,
+//! scalars) and everything an executable returns is a [`Value`] — a typed
+//! host buffer with a shape.  Backends translate at their own edge: the
+//! PJRT backend converts to/from `xla::Literal`, the reference interpreter
+//! reads the buffers directly.  Only the two dtypes the manifest uses
+//! exist: `f32` and `s32`.
+
+use crate::runtime::tensor::Tensor;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    F32(Tensor),
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Value {
+    pub fn scalar(v: f32) -> Value {
+        Value::F32(Tensor::scalar(v))
+    }
+
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Value {
+        Value::F32(Tensor::new(shape, data))
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Value {
+        assert_eq!(
+            shape.iter().product::<usize>().max(1),
+            data.len(),
+            "shape {shape:?} vs data len {}",
+            data.len()
+        );
+        Value::I32 { shape, data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => &t.shape,
+            Value::I32 { shape, .. } => shape,
+        }
+    }
+
+    /// Manifest dtype token.
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Value::F32(_) => "f32",
+            Value::I32 { .. } => "s32",
+        }
+    }
+
+    pub fn elems(&self) -> usize {
+        match self {
+            Value::F32(t) => t.elems(),
+            Value::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn as_f32(&self) -> anyhow::Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32 { .. } => anyhow::bail!("expected f32 value, got s32"),
+        }
+    }
+
+    pub fn into_f32(self) -> anyhow::Result<Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32 { .. } => anyhow::bail!("expected f32 value, got s32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> anyhow::Result<&[i32]> {
+        match self {
+            Value::I32 { data, .. } => Ok(data),
+            Value::F32(_) => anyhow::bail!("expected s32 value, got f32"),
+        }
+    }
+
+    /// Read a scalar (or single-element) f32.
+    pub fn scalar_f32(&self) -> anyhow::Result<f32> {
+        let t = self.as_f32()?;
+        anyhow::ensure!(t.elems() == 1, "expected scalar, got shape {:?}", t.shape);
+        Ok(t.data[0])
+    }
+}
+
+impl From<Tensor> for Value {
+    fn from(t: Tensor) -> Value {
+        Value::F32(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors_and_dtypes() {
+        let f = Value::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(f.dtype(), "f32");
+        assert_eq!(f.shape(), &[2, 2]);
+        assert_eq!(f.elems(), 4);
+        assert!(f.as_f32().is_ok());
+        assert!(f.as_i32().is_err());
+
+        let i = Value::i32(vec![3], vec![1, 2, 3]);
+        assert_eq!(i.dtype(), "s32");
+        assert_eq!(i.as_i32().unwrap(), &[1, 2, 3]);
+        assert!(i.as_f32().is_err());
+    }
+
+    #[test]
+    fn scalar_reads() {
+        assert_eq!(Value::scalar(2.5).scalar_f32().unwrap(), 2.5);
+        assert!(Value::f32(vec![2], vec![1.0, 2.0]).scalar_f32().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn i32_shape_checked() {
+        let _ = Value::i32(vec![2], vec![1, 2, 3]);
+    }
+}

@@ -86,9 +86,14 @@ pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
 }
 
 /// Generator helpers.
+///
+/// Bit-width vectors respect a minimum of 1: width 0 means "channel
+/// pruned" and is rejected by config validation (e.g. network-granularity
+/// bits must be in 1..=32), so properties that exercise pruning must
+/// inject zeros deliberately rather than receive them at random.
 pub fn gen_bits_vec(rng: &mut Rng, max_len: usize, max_bits: u32) -> Vec<u8> {
     let n = 1 + rng.below(max_len.max(1));
-    (0..n).map(|_| rng.below(max_bits as usize + 1) as u8).collect()
+    (0..n).map(|_| 1 + rng.below(max_bits.max(1) as usize) as u8).collect()
 }
 
 pub fn gen_f32_vec(rng: &mut Rng, max_len: usize, scale: f32) -> Vec<f32> {
@@ -172,6 +177,23 @@ mod tests {
             let b = gen_bits_vec(&mut r, 32, 8);
             assert!(!b.is_empty() && b.len() <= 32);
             assert!(b.iter().all(|&x| x <= 8));
+        }
+    }
+
+    /// Regression: bit-width generators must never emit 0-bit entries —
+    /// 0 means "pruned" and config validation rejects it as a searched
+    /// network-granularity width.
+    #[test]
+    fn gen_bits_vec_respects_min_width_one() {
+        let mut r = Rng::new(99);
+        for _ in 0..2000 {
+            let b = gen_bits_vec(&mut r, 16, 32);
+            assert!(b.iter().all(|&x| (1..=32).contains(&x)), "{b:?}");
+        }
+        // Degenerate max_bits still yields width-1 entries, not zeros.
+        for _ in 0..50 {
+            let b = gen_bits_vec(&mut r, 4, 0);
+            assert!(b.iter().all(|&x| x == 1), "{b:?}");
         }
     }
 }

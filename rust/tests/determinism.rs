@@ -1,0 +1,126 @@
+//! Determinism and cross-backend agreement.
+//!
+//! * The same `JobSpec` + seed through two freshly-opened `Coordinator`s
+//!   yields byte-identical `JobReport` JSON (wall-clock `secs` zeroed —
+//!   the only intentionally non-deterministic field).
+//! * With `AUTOQ_REQUIRE_ARTIFACTS=1` (the opt-in PJRT lane), the
+//!   reference interpreter and the PJRT backend agree on eval
+//!   accuracy/loss within tolerance for identical parameters.
+
+use std::path::{Path, PathBuf};
+
+use autoq::coordinator::{Coordinator, JobSpec};
+use autoq::cost::Mode;
+use autoq::data::synth::{Split, SynthDataset};
+use autoq::models::{ModelRunner, ParamStore};
+use autoq::runtime::{BackendKind, Runtime};
+use autoq::search::{Granularity, Protocol};
+use autoq::util::rng::Rng;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("autoq_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+#[test]
+fn same_jobspec_and_seed_yield_byte_identical_reports() {
+    let dir = temp_dir("determinism");
+
+    // Seed the artifact dir with deterministic pretrained params once, so
+    // both search runs load the same persisted weights.
+    {
+        let mut coord = Coordinator::open_with(&dir, Some(BackendKind::Reference)).unwrap();
+        let spec = JobSpec::pretrain("cif10").steps(4).build().unwrap();
+        coord.run(&spec).unwrap();
+    }
+
+    let spec = JobSpec::search("cif10")
+        .mode(Mode::Quant)
+        .protocol(Protocol::resource_constrained(5.0))
+        .granularity(Granularity::Channel)
+        .episodes(2)
+        .warmup(1)
+        .eval_batches(1)
+        .seed(5)
+        .build()
+        .unwrap();
+
+    // Two independent coordinators — fresh runtime, fresh runner cache —
+    // model a process restart.
+    let mut jsons = Vec::new();
+    for _ in 0..2 {
+        let mut coord = Coordinator::open_with(&dir, Some(BackendKind::Reference)).unwrap();
+        let mut report = coord.run(&spec).unwrap();
+        report.secs = 0.0; // wall-clock is the one legitimately varying field
+        jsons.push(report.to_json().to_string());
+    }
+    assert_eq!(jsons[0], jsons[1], "JobReport JSON must be byte-identical");
+    // Sanity: the report actually carries a searched config.
+    assert!(jsons[0].contains("\"wbits\""));
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn pretrain_then_eval_is_deterministic_across_coordinators() {
+    let dir = temp_dir("det_eval");
+    let run = || -> String {
+        let mut coord = Coordinator::open_with(&dir, Some(BackendKind::Reference)).unwrap();
+        let spec = JobSpec::pretrain("cif10").steps(3).persist(false).build().unwrap();
+        let mut report = coord.run(&spec).unwrap();
+        report.secs = 0.0;
+        report.to_json().to_string()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "pretrain reports must replay bit-identically");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Cross-backend numerics smoke test (opt-in lane): identical params →
+/// eval accuracy/loss agree between the reference interpreter and PJRT
+/// within float-reassociation tolerance.
+#[test]
+fn cross_backend_eval_accuracy_agrees() {
+    if std::env::var("AUTOQ_REQUIRE_ARTIFACTS").is_err() {
+        return; // PJRT lane not requested; reference-only CI stays green
+    }
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        dir.join("manifest.json").exists(),
+        "AUTOQ_REQUIRE_ARTIFACTS=1 but AOT artifacts not built (run `make artifacts`)"
+    );
+    let mut rt_ref = Runtime::open_with(&dir, BackendKind::Reference).unwrap();
+    let mut rt_pjrt = Runtime::open_with(&dir, BackendKind::Pjrt).unwrap();
+
+    let meta_ref = rt_ref.manifest.model("cif10").unwrap().clone();
+    let meta_pjrt = rt_pjrt.manifest.model("cif10").unwrap().clone();
+    let params = ParamStore::init(&meta_ref.params, &mut Rng::new(42));
+    let runner_ref = ModelRunner::new(meta_ref, params.clone()).unwrap();
+    let runner_pjrt = ModelRunner::new(meta_pjrt, params).unwrap();
+
+    let data = SynthDataset::new(42);
+    for (wb, ab) in [(32u8, 32u8), (5, 4)] {
+        let wbits = vec![wb; runner_ref.meta.w_channels];
+        let abits = vec![ab; runner_ref.meta.a_channels];
+        let a = runner_ref
+            .eval_config(&mut rt_ref, Mode::Quant, &wbits, &abits, &data, Split::Val, 1)
+            .unwrap();
+        let b = runner_pjrt
+            .eval_config(&mut rt_pjrt, Mode::Quant, &wbits, &abits, &data, Split::Val, 1)
+            .unwrap();
+        assert!(
+            (a.accuracy - b.accuracy).abs() <= 0.02,
+            "accuracy diverged at {wb}w/{ab}a: reference {} vs pjrt {}",
+            a.accuracy,
+            b.accuracy
+        );
+        assert!(
+            (a.loss - b.loss).abs() <= 0.05 * (1.0 + b.loss.abs()),
+            "loss diverged at {wb}w/{ab}a: reference {} vs pjrt {}",
+            a.loss,
+            b.loss
+        );
+    }
+}

@@ -1,0 +1,207 @@
+//! Property tests over the deterministic substrate (`util::prop::forall`):
+//! FPGA-simulator conservation laws, latency/energy monotonicity in the
+//! bit-widths, and bit-config persistence round-trips (JSON `SavedConfig`
+//! vs the §3.4 6-bit packed form).
+
+use autoq::cost::logic::model_cost;
+use autoq::cost::Mode;
+use autoq::models::storage::{pack6, unpack6};
+use autoq::quant::{load_config, save_config};
+use autoq::runtime::LayerMeta;
+use autoq::search::{EpisodeOutcome, LayerBits};
+use autoq::sim::{Arch, FpgaSim};
+use autoq::util::prop::{forall, forall_ns, gen_bits_vec, shrink_vec};
+use autoq::util::rng::Rng;
+
+/// Random but self-consistent conv/dwconv/fc layer + per-channel bits.
+fn gen_layer(r: &mut Rng) -> (LayerMeta, Vec<u8>, Vec<u8>) {
+    let typ = match r.below(4) {
+        0 => "fc",
+        1 => "dwconv",
+        _ => "conv",
+    };
+    let (k, s) = if typ == "fc" { (1, 1) } else { ([1usize, 3][r.below(2)], 1 + r.below(2)) };
+    let cin = 1 + r.below(8);
+    let cout = if typ == "dwconv" { cin } else { 1 + r.below(8) };
+    let (h_in, w_in) = if typ == "fc" { (1, 1) } else { (4 + r.below(13), 4 + r.below(13)) };
+    let h_out = (h_in + s - 1) / s;
+    let w_out = (w_in + s - 1) / s;
+    let macs = match typ {
+        "fc" => (cin * cout) as u64,
+        "dwconv" => (h_out * w_out * k * k * cin) as u64,
+        _ => (h_out * w_out * k * k * cin * cout) as u64,
+    };
+    let a_len = if typ == "fc" { 1 } else { cin };
+    let layer = LayerMeta {
+        name: "lp_test".into(),
+        typ: typ.into(),
+        k,
+        stride: s,
+        cin,
+        cout,
+        h_in,
+        w_in,
+        h_out,
+        w_out,
+        macs,
+        w_off: 0,
+        w_len: cout,
+        a_off: 0,
+        a_len,
+    };
+    // Mostly live channels (≥1 bit via gen_bits_vec semantics), with
+    // deliberate pruning sprinkled in to exercise the 0-bit path.
+    let mut wbits: Vec<u8> = (0..cout).map(|_| 1 + r.below(8) as u8).collect();
+    let mut abits: Vec<u8> = (0..a_len).map(|_| 1 + r.below(8) as u8).collect();
+    if r.below(4) == 0 {
+        wbits[r.below(cout)] = 0;
+    }
+    if r.below(8) == 0 {
+        abits[r.below(a_len)] = 0;
+    }
+    (layer, wbits, abits)
+}
+
+#[test]
+fn prop_fpga_layer_time_is_max_of_compute_and_dma() {
+    // Double-buffered DMA: a single-layer model's total time must be
+    // exactly max(compute, dma) — neither sum nor min.
+    forall_ns(101, gen_layer, |(layer, wbits, abits)| {
+        for arch in [Arch::Temporal, Arch::Spatial] {
+            for mode in [Mode::Quant, Mode::Binar] {
+                let rep = FpgaSim::new(arch, mode).run(std::slice::from_ref(layer), wbits, abits);
+                let expect = rep.compute_cycles.max(rep.dma_cycles);
+                if (rep.cycles - expect).abs() > 1e-9 * expect.max(1.0) {
+                    return Err(format!(
+                        "{arch:?}/{mode:?}: cycles {} != max(compute {}, dma {})",
+                        rep.cycles, rep.compute_cycles, rep.dma_cycles
+                    ));
+                }
+                if rep.utilization > 1.0 + 1e-12 {
+                    return Err(format!("utilization {} > 1", rep.utilization));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fpga_latency_and_energy_monotone_in_bits() {
+    // Raising any single channel's bit-width never makes the model faster
+    // or cheaper on either architecture.
+    forall_ns(
+        102,
+        |r| {
+            let (layer, wbits, abits) = gen_layer(r);
+            let bump_w = r.below(2) == 0;
+            let idx = if bump_w { r.below(wbits.len()) } else { r.below(abits.len()) };
+            (layer, wbits, abits, bump_w, idx)
+        },
+        |(layer, wbits, abits, bump_w, idx)| {
+            let mut wb2 = wbits.clone();
+            let mut ab2 = abits.clone();
+            if *bump_w {
+                wb2[*idx] = (wb2[*idx] + 1).min(32);
+            } else {
+                ab2[*idx] = (ab2[*idx] + 1).min(32);
+            }
+            for arch in [Arch::Temporal, Arch::Spatial] {
+                let sim = FpgaSim::new(arch, Mode::Quant);
+                let base = sim.run(std::slice::from_ref(layer), wbits, abits);
+                let more = sim.run(std::slice::from_ref(layer), &wb2, &ab2);
+                if more.secs < base.secs - 1e-15 {
+                    return Err(format!(
+                        "{arch:?}: latency dropped with more bits ({} -> {})",
+                        base.secs, more.secs
+                    ));
+                }
+                if more.energy_j < base.energy_j - 1e-15 {
+                    return Err(format!(
+                        "{arch:?}: energy dropped with more bits ({} -> {})",
+                        base.energy_j, more.energy_j
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_saved_config_json_and_packed_form_agree() {
+    // A searched config must survive both persistence forms losslessly:
+    // the human-readable JSON written by `search --out`, and the §3.4
+    // 6-bit packed deployment records — and the two must agree.
+    forall(
+        103,
+        |r| {
+            let wbits = gen_bits_vec(r, 48, 32);
+            let abits = gen_bits_vec(r, 48, 32);
+            (wbits, abits)
+        },
+        |(wbits, abits)| {
+            let out = EpisodeOutcome {
+                wbits: wbits.clone(),
+                abits: abits.clone(),
+                accuracy: 0.875,
+                loss: 0.25,
+                cost: model_cost(&[], &[], &[]),
+                reward: 0.5,
+                score: 12.5,
+                per_layer: vec![LayerBits { name: "l01_conv".into(), avg_w: 4.0, avg_a: 3.0 }],
+                avg_wbits: 4.0,
+                avg_abits: 3.0,
+            };
+            let path = std::env::temp_dir()
+                .join(format!("autoq_prop_cfg_{}.json", std::process::id()));
+            save_config(&path, "cif10", Mode::Quant, &out).map_err(|e| e.to_string())?;
+            let back = load_config(&path).map_err(|e| e.to_string())?;
+            std::fs::remove_file(&path).ok();
+
+            if &back.wbits != wbits || &back.abits != abits {
+                return Err(format!("JSON roundtrip mutated bits: {:?}", back.wbits));
+            }
+            // §3.4 packed form agrees with the JSON form.
+            let packed_w = pack6(&back.wbits);
+            let packed_a = pack6(&back.abits);
+            if unpack6(&packed_w, wbits.len()) != *wbits {
+                return Err("packed wbits disagree with JSON wbits".into());
+            }
+            if unpack6(&packed_a, abits.len()) != *abits {
+                return Err("packed abits disagree with JSON abits".into());
+            }
+            Ok(())
+        },
+        |(w, a)| {
+            let mut out = Vec::new();
+            for ws in shrink_vec(w) {
+                if !ws.is_empty() {
+                    out.push((ws, a.clone()));
+                }
+            }
+            for as_ in shrink_vec(a) {
+                if !as_.is_empty() {
+                    out.push((w.clone(), as_));
+                }
+            }
+            out
+        },
+    );
+}
+
+#[test]
+fn prop_generated_bits_are_valid_config_entries() {
+    // gen_bits_vec feeds config-level properties: every entry must already
+    // be a valid searched bit-width (1..=32) so `load_config` validation
+    // never rejects generated cases.
+    forall_ns(104, |r| gen_bits_vec(r, 64, 32), |bits| {
+        if bits.is_empty() {
+            return Err("empty bit vector".into());
+        }
+        if let Some(&bad) = bits.iter().find(|&&b| !(1..=32).contains(&b)) {
+            return Err(format!("generated invalid bit-width {bad}"));
+        }
+        Ok(())
+    });
+}

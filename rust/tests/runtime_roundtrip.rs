@@ -1,73 +1,112 @@
-//! Integration: AOT artifacts load, compile and execute through PJRT with
-//! the shapes the manifest promises.  Requires `make artifacts`; tests
-//! self-skip when the artifacts are not built (e.g. plain CI runners).
+//! Integration: artifacts load and execute with the shapes the manifest
+//! promises — on the reference backend unconditionally (builtin manifest,
+//! zero artifacts), and on PJRT over the real AOT artifacts when
+//! `AUTOQ_REQUIRE_ARTIFACTS=1` (which fails, rather than skips, if they
+//! are not built).
 
 use std::path::Path;
 
-use autoq::runtime::{Runtime, Tensor};
+use autoq::runtime::{BackendKind, Runtime, Tensor, Value};
 
-fn runtime() -> Option<Runtime> {
+fn runtimes() -> Vec<Runtime> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        // AUTOQ_REQUIRE_ARTIFACTS=1 turns the silent skip into a failure so
-        // full-stack CI lanes can't go green without exercising the runtime.
+    let mut rts =
+        vec![Runtime::open_with(&dir, BackendKind::Reference).expect("reference backend")];
+    if std::env::var("AUTOQ_REQUIRE_ARTIFACTS").is_ok() {
         assert!(
-            std::env::var("AUTOQ_REQUIRE_ARTIFACTS").is_err(),
-            "AOT artifacts required but not built (run `make artifacts`)"
+            dir.join("manifest.json").exists(),
+            "AUTOQ_REQUIRE_ARTIFACTS=1 but AOT artifacts not built (run `make artifacts`)"
         );
-        eprintln!("skipping: AOT artifacts not built (run `make artifacts`)");
-        return None;
+        rts.push(Runtime::open_with(&dir, BackendKind::Pjrt).expect("artifacts unloadable"));
     }
-    Some(Runtime::open(&dir).expect("artifacts present but unloadable"))
+    rts
 }
 
 #[test]
 fn manifest_lists_all_families() {
-    let Some(rt) = runtime() else { return };
-    for model in ["cif10", "res18", "sqnet", "monet"] {
-        for fam in ["eval_quant", "eval_binar", "train_quant", "train_binar"] {
-            assert!(
-                rt.manifest.artifact(&format!("{model}_{fam}")).is_ok(),
-                "{model}_{fam} missing"
+    for rt in runtimes() {
+        for model in ["cif10", "res18", "sqnet", "monet"] {
+            for fam in ["eval_quant", "eval_binar", "train_quant", "train_binar"] {
+                assert!(
+                    rt.manifest.artifact(&format!("{model}_{fam}")).is_ok(),
+                    "{model}_{fam} missing ({})",
+                    rt.backend_name()
+                );
+            }
+            let m = rt.manifest.model(model).unwrap();
+            assert!(m.w_channels > 0 && m.a_channels > 0);
+            assert_eq!(
+                m.layers.iter().map(|l| l.w_len).sum::<usize>(),
+                m.w_channels,
+                "layer w slices must tile the weight-bit vector"
             );
+            assert_eq!(m.layers.iter().map(|l| l.a_len).sum::<usize>(), m.a_channels);
         }
-        let m = rt.manifest.model(model).unwrap();
-        assert!(m.w_channels > 0 && m.a_channels > 0);
-        assert_eq!(
-            m.layers.iter().map(|l| l.w_len).sum::<usize>(),
-            m.w_channels,
-            "layer w slices must tile the weight-bit vector"
-        );
-        assert_eq!(m.layers.iter().map(|l| l.a_len).sum::<usize>(), m.a_channels);
+        for s in [16, 17] {
+            assert!(rt.manifest.artifact(&format!("ddpg_act_s{s}")).is_ok());
+            assert!(rt.manifest.artifact(&format!("ddpg_update_s{s}")).is_ok());
+        }
     }
-    for s in [16, 17] {
-        assert!(rt.manifest.artifact(&format!("ddpg_act_s{s}")).is_ok());
-        assert!(rt.manifest.artifact(&format!("ddpg_update_s{s}")).is_ok());
+}
+
+#[test]
+fn backends_agree_on_manifest_metadata() {
+    // When the PJRT lane runs, the builtin zoo manifest must match the AOT
+    // exporter's manifest.json layer for layer — the cross-backend
+    // consistency contract.
+    let rts = runtimes();
+    if rts.len() < 2 {
+        return; // reference-only lane: nothing to compare
+    }
+    let (reference, pjrt) = (&rts[0].manifest, &rts[1].manifest);
+    for model in ["cif10", "res18", "sqnet", "monet"] {
+        let a = reference.model(model).unwrap();
+        let b = pjrt.model(model).unwrap();
+        assert_eq!(a.w_channels, b.w_channels, "{model} w_channels");
+        assert_eq!(a.a_channels, b.a_channels, "{model} a_channels");
+        assert_eq!(a.total_macs, b.total_macs, "{model} total_macs");
+        assert_eq!(a.layers.len(), b.layers.len(), "{model} layer count");
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.name, lb.name);
+            assert_eq!(la.typ, lb.typ);
+            assert_eq!((la.w_off, la.w_len, la.a_off, la.a_len), (lb.w_off, lb.w_len, lb.a_off, lb.a_len));
+            assert_eq!(la.macs, lb.macs, "{model}/{}", la.name);
+        }
+        assert_eq!(a.params.len(), b.params.len());
+        for (pa, pb) in a.params.iter().zip(&b.params) {
+            assert_eq!(pa.name, pb.name);
+            assert_eq!(pa.shape, pb.shape);
+        }
     }
 }
 
 #[test]
 fn ddpg_act_executes_and_bounds_actions() {
-    let Some(mut rt) = runtime() else { return };
-    let spec = rt.manifest.artifact("ddpg_act_s16").unwrap().clone();
-    // Zero-initialized actor → sigmoid(0)*32 == 16 for every state.
-    let inputs: Vec<xla::Literal> = spec
-        .inputs
-        .iter()
-        .map(|t| Tensor::zeros(t.shape.clone()).to_literal().unwrap())
-        .collect();
-    let outs = rt.exec("ddpg_act_s16", &inputs).unwrap();
-    assert_eq!(outs.len(), 1);
-    let a = Tensor::from_literal(&outs[0]).unwrap();
-    assert_eq!(a.shape, vec![128, 1]);
-    for &x in &a.data {
-        assert!((x - 16.0).abs() < 1e-5, "zero actor must emit 16.0, got {x}");
+    for mut rt in runtimes() {
+        let spec = rt.manifest.artifact("ddpg_act_s16").unwrap().clone();
+        // Zero-initialized actor → sigmoid(0)*32 == 16 for every state.
+        let inputs: Vec<Value> = spec
+            .inputs
+            .iter()
+            .map(|t| Value::F32(Tensor::zeros(t.shape.clone())))
+            .collect();
+        let outs = rt.exec("ddpg_act_s16", &inputs).unwrap();
+        assert_eq!(outs.len(), 1);
+        let a = outs[0].as_f32().unwrap();
+        assert_eq!(a.shape, vec![128, 1]);
+        for &x in &a.data {
+            assert!((x - 16.0).abs() < 1e-5, "zero actor must emit 16.0, got {x}");
+        }
     }
 }
 
 #[test]
 fn exec_validates_arity() {
-    let Some(mut rt) = runtime() else { return };
-    let err = match rt.exec::<xla::Literal>("ddpg_act_s16", &[]) { Err(e) => e, Ok(_) => panic!("expected arity error") };
-    assert!(err.to_string().contains("inputs"));
+    for mut rt in runtimes() {
+        let err = match rt.exec::<Value>("ddpg_act_s16", &[]) {
+            Err(e) => e,
+            Ok(_) => panic!("expected arity error"),
+        };
+        assert!(err.to_string().contains("inputs"));
+    }
 }

@@ -1,7 +1,11 @@
-//! Integration: the full search pipeline over the real AOT artifacts —
-//! episode walk, granularities, protocols, baselines and fine-tuning.
-//! Uses tiny episode counts; requires `make artifacts` and self-skips when
-//! the artifacts are not built (e.g. plain CI runners).
+//! Integration: the full search pipeline — episode walk, granularities,
+//! protocols, baselines and fine-tuning.
+//!
+//! Runs unconditionally on the pure-Rust **reference backend** (no AOT
+//! artifacts, no XLA library — every CI runner exercises real episodes).
+//! Setting `AUTOQ_REQUIRE_ARTIFACTS=1` additionally runs every test body
+//! against the PJRT backend over the real artifacts (and fails, rather
+//! than skips, if they are not built).
 
 use std::path::Path;
 
@@ -9,23 +13,24 @@ use autoq::baselines::{run_baseline, BaselineConfig, BaselinePolicy};
 use autoq::cost::Mode;
 use autoq::data::synth::{Split, SynthDataset};
 use autoq::models::ModelRunner;
-use autoq::runtime::Runtime;
+use autoq::runtime::{BackendKind, Runtime};
 use autoq::search::{run_search, Granularity, Protocol, SearchConfig};
 use autoq::util::rng::Rng;
 
-fn runtime() -> Option<Runtime> {
+/// The runtimes to exercise: always the reference interpreter; plus PJRT
+/// when the opt-in artifact lane is requested.
+fn runtimes() -> Vec<Runtime> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        // AUTOQ_REQUIRE_ARTIFACTS=1 turns the silent skip into a failure so
-        // full-stack CI lanes can't go green without exercising the runtime.
+    let mut rts =
+        vec![Runtime::open_with(&dir, BackendKind::Reference).expect("reference backend")];
+    if std::env::var("AUTOQ_REQUIRE_ARTIFACTS").is_ok() {
         assert!(
-            std::env::var("AUTOQ_REQUIRE_ARTIFACTS").is_err(),
-            "AOT artifacts required but not built (run `make artifacts`)"
+            dir.join("manifest.json").exists(),
+            "AUTOQ_REQUIRE_ARTIFACTS=1 but AOT artifacts not built (run `make artifacts`)"
         );
-        eprintln!("skipping: AOT artifacts not built (run `make artifacts`)");
-        return None;
+        rts.push(Runtime::open_with(&dir, BackendKind::Pjrt).expect("artifacts unloadable"));
     }
-    Some(Runtime::open(&dir).expect("artifacts present but unloadable"))
+    rts
 }
 
 /// A lightly-trained cif10 runner (fast; accuracy need not be high for
@@ -50,37 +55,38 @@ fn quick_cfg(gran: Granularity, protocol: Protocol) -> SearchConfig {
 
 #[test]
 fn channel_search_produces_valid_config() {
-    let Some(mut rt) = runtime() else { return };
-    let runner = quick_runner(&mut rt);
-    let data = SynthDataset::new(7);
-    let res = run_search(
-        &mut rt,
-        &runner,
-        &data,
-        &quick_cfg(Granularity::Channel, Protocol::accuracy_guaranteed()),
-    )
-    .unwrap();
-    let b = &res.best;
-    assert_eq!(b.wbits.len(), runner.meta.w_channels);
-    assert_eq!(b.abits.len(), runner.meta.a_channels);
-    assert!(b.wbits.iter().all(|&x| x <= 32));
-    assert!(b.reward.is_finite());
-    assert!(b.accuracy >= 0.0 && b.accuracy <= 1.0);
-    assert_eq!(res.history.len(), 2);
-    assert_eq!(b.per_layer.len(), runner.meta.layers.len());
-    // Variance-ordering constraint holds per layer (§3.2).
-    let wvar = runner.weight_variances();
-    for l in &runner.meta.layers {
-        let bits = &b.wbits[l.w_off..l.w_off + l.w_len];
-        let vars = &wvar[l.w_off..l.w_off + l.w_len];
-        for x in 0..bits.len() {
-            for y in 0..bits.len() {
-                if vars[x] > vars[y] {
-                    assert!(
-                        bits[x] >= bits[y],
-                        "layer {}: var order violated ({x},{y})",
-                        l.name
-                    );
+    for mut rt in runtimes() {
+        let runner = quick_runner(&mut rt);
+        let data = SynthDataset::new(7);
+        let res = run_search(
+            &mut rt,
+            &runner,
+            &data,
+            &quick_cfg(Granularity::Channel, Protocol::accuracy_guaranteed()),
+        )
+        .unwrap();
+        let b = &res.best;
+        assert_eq!(b.wbits.len(), runner.meta.w_channels);
+        assert_eq!(b.abits.len(), runner.meta.a_channels);
+        assert!(b.wbits.iter().all(|&x| x <= 32));
+        assert!(b.reward.is_finite());
+        assert!(b.accuracy >= 0.0 && b.accuracy <= 1.0);
+        assert_eq!(res.history.len(), 2);
+        assert_eq!(b.per_layer.len(), runner.meta.layers.len());
+        // Variance-ordering constraint holds per layer (§3.2).
+        let wvar = runner.weight_variances();
+        for l in &runner.meta.layers {
+            let bits = &b.wbits[l.w_off..l.w_off + l.w_len];
+            let vars = &wvar[l.w_off..l.w_off + l.w_len];
+            for x in 0..bits.len() {
+                for y in 0..bits.len() {
+                    if vars[x] > vars[y] {
+                        assert!(
+                            bits[x] >= bits[y],
+                            "layer {}: var order violated ({x},{y})",
+                            l.name
+                        );
+                    }
                 }
             }
         }
@@ -89,125 +95,135 @@ fn channel_search_produces_valid_config() {
 
 #[test]
 fn layer_granularity_is_uniform_within_layers() {
-    let Some(mut rt) = runtime() else { return };
-    let runner = quick_runner(&mut rt);
-    let data = SynthDataset::new(7);
-    let res = run_search(
-        &mut rt,
-        &runner,
-        &data,
-        &quick_cfg(Granularity::Layer, Protocol::accuracy_guaranteed()),
-    )
-    .unwrap();
-    for l in &runner.meta.layers {
-        let bits = &res.best.wbits[l.w_off..l.w_off + l.w_len];
-        assert!(bits.iter().all(|&b| b == bits[0]), "layer {} not uniform", l.name);
+    for mut rt in runtimes() {
+        let runner = quick_runner(&mut rt);
+        let data = SynthDataset::new(7);
+        let res = run_search(
+            &mut rt,
+            &runner,
+            &data,
+            &quick_cfg(Granularity::Layer, Protocol::accuracy_guaranteed()),
+        )
+        .unwrap();
+        for l in &runner.meta.layers {
+            let bits = &res.best.wbits[l.w_off..l.w_off + l.w_len];
+            assert!(bits.iter().all(|&b| b == bits[0]), "layer {} not uniform", l.name);
+        }
     }
 }
 
 #[test]
 fn network_granularity_fixed_bits() {
-    let Some(mut rt) = runtime() else { return };
-    let runner = quick_runner(&mut rt);
-    let data = SynthDataset::new(7);
-    let res = run_search(
-        &mut rt,
-        &runner,
-        &data,
-        &quick_cfg(Granularity::Network(5), Protocol::resource_constrained(5.0)),
-    )
-    .unwrap();
-    assert!(res.best.wbits.iter().all(|&b| b == 5));
-    assert!(res.best.abits.iter().all(|&b| b == 5));
-    assert_eq!(res.history.len(), 1, "network granularity needs no exploration");
+    for mut rt in runtimes() {
+        let runner = quick_runner(&mut rt);
+        let data = SynthDataset::new(7);
+        let res = run_search(
+            &mut rt,
+            &runner,
+            &data,
+            &quick_cfg(Granularity::Network(5), Protocol::resource_constrained(5.0)),
+        )
+        .unwrap();
+        assert!(res.best.wbits.iter().all(|&b| b == 5));
+        assert!(res.best.abits.iter().all(|&b| b == 5));
+        assert_eq!(res.history.len(), 1, "network granularity needs no exploration");
+    }
 }
 
 #[test]
 fn rc_protocol_respects_algorithm1_budget() {
-    let Some(mut rt) = runtime() else { return };
-    let runner = quick_runner(&mut rt);
-    let data = SynthDataset::new(7);
-    let target = 4.0;
-    let res = run_search(
-        &mut rt,
-        &runner,
-        &data,
-        &quick_cfg(Granularity::Layer, Protocol::resource_constrained(target)),
-    )
-    .unwrap();
-    // Layer granularity applies goals verbatim, so the MAC-weighted mean
-    // weight bit-width must meet the Algorithm-1 budget.
-    let total: f64 = runner.meta.layers.iter().map(|l| l.macs as f64).sum();
-    let spent: f64 = runner
-        .meta
-        .layers
-        .iter()
-        .map(|l| l.macs as f64 * res.best.wbits[l.w_off] as f64)
-        .sum();
-    let avg = spent / total;
-    assert!(avg <= target + 0.5, "MAC-weighted avg bits {avg} exceeds target {target}");
+    for mut rt in runtimes() {
+        let runner = quick_runner(&mut rt);
+        let data = SynthDataset::new(7);
+        let target = 4.0;
+        let res = run_search(
+            &mut rt,
+            &runner,
+            &data,
+            &quick_cfg(Granularity::Layer, Protocol::resource_constrained(target)),
+        )
+        .unwrap();
+        // Layer granularity applies goals verbatim, so the MAC-weighted mean
+        // weight bit-width must meet the Algorithm-1 budget.
+        let total: f64 = runner.meta.layers.iter().map(|l| l.macs as f64).sum();
+        let spent: f64 = runner
+            .meta
+            .layers
+            .iter()
+            .map(|l| l.macs as f64 * res.best.wbits[l.w_off] as f64)
+            .sum();
+        let avg = spent / total;
+        assert!(avg <= target + 0.5, "MAC-weighted avg bits {avg} exceeds target {target}");
+    }
 }
 
 #[test]
 fn baselines_respect_their_action_spaces() {
-    let Some(mut rt) = runtime() else { return };
-    let runner = quick_runner(&mut rt);
-    let data = SynthDataset::new(7);
+    for mut rt in runtimes() {
+        let runner = quick_runner(&mut rt);
+        let data = SynthDataset::new(7);
 
-    // AMC: prune-or-8-bit weights, 8-bit activations.
-    let mut cfg = BaselineConfig::quick(BaselinePolicy::Amc, Mode::Quant, Protocol::flop_reward());
-    cfg.episodes = 2;
-    cfg.warmup = 2;
-    cfg.eval_batches = 1;
-    let res = run_baseline(&mut rt, &runner, &data, &cfg).unwrap();
-    assert!(res.best.wbits.iter().all(|&b| b == 0 || b == 8));
-    assert!(res.best.abits.iter().all(|&b| b == 8));
+        // AMC: prune-or-8-bit weights, 8-bit activations.
+        let mut cfg =
+            BaselineConfig::quick(BaselinePolicy::Amc, Mode::Quant, Protocol::flop_reward());
+        cfg.episodes = 2;
+        cfg.warmup = 2;
+        cfg.eval_batches = 1;
+        let res = run_baseline(&mut rt, &runner, &data, &cfg).unwrap();
+        assert!(res.best.wbits.iter().all(|&b| b == 0 || b == 8));
+        assert!(res.best.abits.iter().all(|&b| b == 8));
 
-    // ReLeQ: weights searched per layer, activations pinned at 8.
-    let mut cfg =
-        BaselineConfig::quick(BaselinePolicy::Releq, Mode::Quant, Protocol::accuracy_guaranteed());
-    cfg.episodes = 2;
-    cfg.warmup = 2;
-    cfg.eval_batches = 1;
-    let res = run_baseline(&mut rt, &runner, &data, &cfg).unwrap();
-    assert!(res.best.abits.iter().all(|&b| b == 8));
-    for l in &runner.meta.layers {
-        let bits = &res.best.wbits[l.w_off..l.w_off + l.w_len];
-        assert!(bits.iter().all(|&b| b == bits[0]), "releq must be layer-uniform");
+        // ReLeQ: weights searched per layer, activations pinned at 8.
+        let mut cfg = BaselineConfig::quick(
+            BaselinePolicy::Releq,
+            Mode::Quant,
+            Protocol::accuracy_guaranteed(),
+        );
+        cfg.episodes = 2;
+        cfg.warmup = 2;
+        cfg.eval_batches = 1;
+        let res = run_baseline(&mut rt, &runner, &data, &cfg).unwrap();
+        assert!(res.best.abits.iter().all(|&b| b == 8));
+        for l in &runner.meta.layers {
+            let bits = &res.best.wbits[l.w_off..l.w_off + l.w_len];
+            assert!(bits.iter().all(|&b| b == bits[0]), "releq must be layer-uniform");
+        }
     }
 }
 
 #[test]
 fn finetune_improves_or_holds_quantized_accuracy() {
-    let Some(mut rt) = runtime() else { return };
-    let mut runner = quick_runner(&mut rt);
-    let data = SynthDataset::new(7);
-    let wbits = vec![3u8; runner.meta.w_channels];
-    let abits = vec![4u8; runner.meta.a_channels];
-    let before = runner
-        .eval_config(&mut rt, Mode::Quant, &wbits, &abits, &data, Split::Val, 1)
-        .unwrap();
-    let tc = autoq::finetune::TrainConfig {
-        eval_batches: 1,
-        ..autoq::finetune::TrainConfig::finetune(Mode::Quant, wbits, abits, 12)
-    };
-    let rep = autoq::finetune::train(&mut rt, &mut runner, &data, &tc).unwrap();
-    assert!(
-        rep.final_eval.accuracy >= before.accuracy - 0.05,
-        "finetune regressed: {} -> {}",
-        before.accuracy,
-        rep.final_eval.accuracy
-    );
+    for mut rt in runtimes() {
+        let mut runner = quick_runner(&mut rt);
+        let data = SynthDataset::new(7);
+        let wbits = vec![3u8; runner.meta.w_channels];
+        let abits = vec![4u8; runner.meta.a_channels];
+        let before = runner
+            .eval_config(&mut rt, Mode::Quant, &wbits, &abits, &data, Split::Val, 1)
+            .unwrap();
+        let tc = autoq::finetune::TrainConfig {
+            eval_batches: 1,
+            ..autoq::finetune::TrainConfig::finetune(Mode::Quant, wbits, abits, 12)
+        };
+        let rep = autoq::finetune::train(&mut rt, &mut runner, &data, &tc).unwrap();
+        assert!(
+            rep.final_eval.accuracy >= before.accuracy - 0.05,
+            "finetune regressed: {} -> {}",
+            before.accuracy,
+            rep.final_eval.accuracy
+        );
+    }
 }
 
 #[test]
 fn binar_mode_runs_end_to_end() {
-    let Some(mut rt) = runtime() else { return };
-    let runner = quick_runner(&mut rt);
-    let data = SynthDataset::new(7);
-    let mut cfg = quick_cfg(Granularity::Channel, Protocol::accuracy_guaranteed());
-    cfg.mode = Mode::Binar;
-    let res = run_search(&mut rt, &runner, &data, &cfg).unwrap();
-    assert!(res.best.reward.is_finite());
-    assert!(res.best.accuracy >= 0.0);
+    for mut rt in runtimes() {
+        let runner = quick_runner(&mut rt);
+        let data = SynthDataset::new(7);
+        let mut cfg = quick_cfg(Granularity::Channel, Protocol::accuracy_guaranteed());
+        cfg.mode = Mode::Binar;
+        let res = run_search(&mut rt, &runner, &data, &cfg).unwrap();
+        assert!(res.best.reward.is_finite());
+        assert!(res.best.accuracy >= 0.0);
+    }
 }
