@@ -1,0 +1,156 @@
+//! Bench: reference-backend `eval_config` throughput at 1/2/4 worker
+//! threads plus blocked-vs-naive matmul kernels — the two layers the
+//! search loop's wall-clock hangs off.
+//!
+//! Flags (after `--`):
+//!   --smoke        1 measured iteration on a short schedule; also asserts
+//!                  serial/parallel byte-identity (the CI regression guard)
+//!   --json PATH    write machine-readable results (the committed baseline
+//!                  lives at BENCH_reference_eval.json in the repo root)
+//!
+//! Regenerate the baseline with:
+//!   cargo bench --bench reference_eval -- --json ../BENCH_reference_eval.json
+
+use std::path::PathBuf;
+
+use autoq::coordinator::{Coordinator, JobSpec};
+use autoq::cost::Mode;
+use autoq::data::synth::SynthDataset;
+use autoq::data::Split;
+use autoq::runtime::reference::kernels;
+use autoq::runtime::{BackendKind, Parallelism};
+use autoq::util::bench::bench;
+use autoq::util::json::Json;
+use autoq::util::rng::Rng;
+
+const MODEL: &str = "cif10";
+const THREAD_COUNTS: [usize; 3] = [1, 2, 4];
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path: Option<PathBuf> = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .map(PathBuf::from);
+    let (n_batches, iters, warmup) = if smoke { (2, 1, 0) } else { (4, 5, 1) };
+    println!("== reference_eval bench (threads sweep + kernel comparison) ==");
+
+    // Shared short-pretrained params in a scratch artifact dir so every
+    // runtime below evaluates the same model.
+    let dir = std::env::temp_dir().join(format!("autoq_bench_refeval_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    {
+        let mut coord = Coordinator::open_with_opts(&dir, Some(BackendKind::Reference), None)?;
+        let steps = if smoke { 2 } else { 40 };
+        coord.run(&JobSpec::pretrain(MODEL).steps(steps).build()?)?;
+    }
+
+    let data = SynthDataset::new(42);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut baseline: Option<f64> = None;
+    let mut reference_result: Option<(u64, u64)> = None;
+    for &threads in &THREAD_COUNTS {
+        let mut coord = Coordinator::open_with_opts(
+            &dir,
+            Some(BackendKind::Reference),
+            Some(Parallelism::new(threads)),
+        )?;
+        let runner = coord.fresh_runner(MODEL)?;
+        let wbits = vec![5u8; runner.meta.w_channels];
+        let abits = vec![5u8; runner.meta.a_channels];
+        let images = n_batches * runner.meta.eval_batch;
+        let rt = coord.runtime();
+        let mut last = None;
+        let mut eval = || {
+            runner
+                .eval_config(&mut *rt, Mode::Quant, &wbits, &abits, &data, Split::Val, n_batches)
+                .unwrap()
+        };
+        let r = bench(
+            &format!("eval_config {MODEL} quant threads={threads} ({images} imgs)"),
+            warmup,
+            iters,
+            || last = Some(eval()),
+        );
+        // Byte-identity guard: every thread count must reproduce the
+        // serial result exactly.
+        let res = last.expect("bench ran at least once");
+        let bits = (res.accuracy.to_bits(), res.loss.to_bits());
+        match reference_result {
+            None => reference_result = Some(bits),
+            Some(expect) => assert_eq!(
+                bits, expect,
+                "threads={threads} changed eval results — determinism contract broken"
+            ),
+        }
+        let ips = images as f64 / r.mean_s;
+        println!("    -> {ips:.1} images/sec");
+        let speedup = match baseline {
+            None => {
+                baseline = Some(r.mean_s);
+                1.0
+            }
+            Some(serial) => serial / r.mean_s,
+        };
+        rows.push(Json::obj(vec![
+            ("threads", Json::from(threads)),
+            ("batches", Json::from(n_batches)),
+            ("images", Json::from(images)),
+            ("mean_s", Json::from(r.mean_s)),
+            ("min_s", Json::from(r.min_s)),
+            ("images_per_sec", Json::from(ips)),
+            ("speedup_vs_serial", Json::from(speedup)),
+        ]));
+    }
+
+    // Kernel layer: blocked vs naive matmul on an im2col-shaped problem
+    // (m = 32·32 output pixels, k = 3·3·64 patch, n = 128 filters).
+    let (m, k, n) = if smoke { (64, 96, 48) } else { (1024, 576, 128) };
+    let mut rng = Rng::new(5);
+    let mut a = vec![0.0f32; m * k];
+    let mut b = vec![0.0f32; k * n];
+    rng.fill_normal_f32(&mut a, 1.0);
+    rng.fill_normal_f32(&mut b, 1.0);
+    let kiters = if smoke { 1 } else { 20 };
+    let rb = bench(&format!("matmul blocked ({m}x{k}x{n})"), warmup, kiters, || {
+        kernels::matmul(&a, &b, m, k, n)
+    });
+    let rn = bench(&format!("matmul naive   ({m}x{k}x{n})"), warmup, kiters, || {
+        let mut c = vec![0.0f32; m * n];
+        kernels::naive::matmul_acc(&mut c, &a, &b, m, k, n);
+        c
+    });
+    let flops = 2.0 * (m * k * n) as f64;
+    println!(
+        "    -> blocked {:.2} GFLOP/s vs naive {:.2} GFLOP/s",
+        flops / rb.min_s / 1e9,
+        flops / rn.min_s / 1e9
+    );
+
+    if let Some(path) = json_path {
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("reference_eval".to_string())),
+            ("model", Json::Str(MODEL.to_string())),
+            ("smoke", Json::Bool(smoke)),
+            ("eval", Json::Arr(rows)),
+            (
+                "matmul",
+                Json::obj(vec![
+                    ("m", Json::from(m)),
+                    ("k", Json::from(k)),
+                    ("n", Json::from(n)),
+                    ("blocked_min_s", Json::from(rb.min_s)),
+                    ("naive_min_s", Json::from(rn.min_s)),
+                    ("blocked_gflops", Json::from(flops / rb.min_s / 1e9)),
+                    ("naive_gflops", Json::from(flops / rn.min_s / 1e9)),
+                ]),
+            ),
+        ]);
+        std::fs::write(&path, format!("{doc}\n"))?;
+        println!("wrote {}", path.display());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

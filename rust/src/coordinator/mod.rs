@@ -32,7 +32,7 @@ use crate::cost::Mode;
 use crate::data::synth::{Split, SynthDataset};
 use crate::finetune::TrainConfig;
 use crate::models::{ModelRunner, ParamStore};
-use crate::runtime::{BackendKind, Manifest, Runtime};
+use crate::runtime::{BackendKind, Manifest, Parallelism, Runtime};
 use crate::search::SearchConfig;
 use crate::sim::{Arch, FpgaSim};
 use crate::util::rng::Rng;
@@ -65,10 +65,21 @@ impl Coordinator {
         Self::open_with(dir, None)
     }
 
-    /// Open with an explicit backend choice (`None` = auto-resolve).
+    /// Open with an explicit backend choice (`None` = auto-resolve) and
+    /// auto-resolved eval parallelism (`$AUTOQ_THREADS`, else all cores).
     pub fn open_with(dir: &Path, backend: Option<BackendKind>) -> anyhow::Result<Coordinator> {
+        Self::open_with_opts(dir, backend, None)
+    }
+
+    /// Open with explicit backend and worker-thread choices (`None` =
+    /// auto-resolve each, mirroring `--backend`/`--threads`).
+    pub fn open_with_opts(
+        dir: &Path,
+        backend: Option<BackendKind>,
+        threads: Option<Parallelism>,
+    ) -> anyhow::Result<Coordinator> {
         let kind = BackendKind::resolve(dir, backend)?;
-        let rt = Runtime::open_with(dir, kind)?;
+        let rt = Runtime::open_with_opts(dir, kind, threads)?;
         // The reference backend needs no artifacts, but trained params still
         // persist under the artifact dir — make sure it exists.
         std::fs::create_dir_all(dir)?;

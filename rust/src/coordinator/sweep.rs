@@ -8,6 +8,11 @@
 //! reproduced bit-for-bit with a serial `autoq search --seed <job seed>`
 //! invocation.  Model pre-training happens once, serially, before workers
 //! spawn — workers only ever read the persisted params.
+//!
+//! Outer per-cell workers compose with the reference backend's inner
+//! per-batch eval threads: unless `threads` pins a per-worker budget, the
+//! machine's thread budget is split evenly across workers so the grid
+//! never oversubscribes cores.
 
 use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
@@ -20,7 +25,7 @@ use crate::coordinator::observer::LogObserver;
 use crate::coordinator::report::JobReport;
 use crate::coordinator::Coordinator;
 use crate::cost::Mode;
-use crate::runtime::BackendKind;
+use crate::runtime::{BackendKind, Parallelism};
 use crate::search::{Granularity, Protocol, ProtocolKind};
 
 /// Cell-key token for a protocol: unlike `Protocol::tag`, distinguishes
@@ -64,6 +69,10 @@ pub struct Sweep {
     /// Execution backend for every worker (`None` = auto-resolve).  Each
     /// worker opens its own `Coordinator`/`Runtime` of this kind.
     pub backend: Option<BackendKind>,
+    /// Inner eval-batch threads per worker (`None` = split the machine's
+    /// thread budget evenly across workers, so outer per-cell and inner
+    /// per-batch parallelism compose without oversubscription).
+    pub threads: Option<Parallelism>,
 }
 
 impl Default for Sweep {
@@ -82,6 +91,7 @@ impl Default for Sweep {
             workers: 2,
             out_dir: None,
             backend: None,
+            threads: None,
         }
     }
 }
@@ -156,6 +166,8 @@ impl Sweep {
             .unwrap_or_else(|| PathBuf::from("reports").join("sweep"));
         std::fs::create_dir_all(&out_dir)?;
 
+        let workers = self.workers.max(1).min(jobs.len());
+
         // Pre-warm trained params serially so workers never race a pretrain.
         // Only worth opening a runtime when some model's params are missing.
         let models: BTreeSet<&str> = jobs.iter().map(|j| j.model.as_str()).collect();
@@ -164,14 +176,32 @@ impl Sweep {
             .filter(|m| !Coordinator::params_path_in(dir, m).exists())
             .collect();
         if !missing.is_empty() {
-            let mut coord = Coordinator::open_with(dir, self.backend)?;
+            // The serial pre-warm gets the grid's whole thread budget:
+            // workers × per-worker threads when pinned, the machine
+            // otherwise.
+            let warm = match self.threads {
+                Some(p) => Parallelism::new(p.get() * workers),
+                None => Parallelism::resolve(None)?,
+            };
+            let mut coord = Coordinator::open_with_opts(dir, self.backend, Some(warm))?;
             for model in missing {
                 coord.ensure_pretrained(model)?;
             }
         }
 
-        let workers = self.workers.max(1).min(jobs.len());
-        crate::info!("sweep: {} jobs on {} worker(s)", jobs.len(), workers);
+        // Compose outer (per-cell) with inner (per-batch) parallelism
+        // without oversubscription: pinned via `threads`, else an even
+        // share of the resolved machine budget per worker.
+        let inner = match self.threads {
+            Some(p) => p,
+            None => Parallelism::new(Parallelism::resolve(None)?.get() / workers),
+        };
+        crate::info!(
+            "sweep: {} jobs on {} worker(s) × {} eval thread(s)",
+            jobs.len(),
+            workers,
+            inner.get()
+        );
         let next = AtomicUsize::new(0);
         let (tx, rx) = mpsc::channel::<(usize, Result<JobReport, String>)>();
         std::thread::scope(|s| {
@@ -181,7 +211,7 @@ impl Sweep {
                 let jobs = &jobs;
                 let backend = self.backend;
                 s.spawn(move || {
-                    let mut coord = match Coordinator::open_with(dir, backend) {
+                    let mut coord = match Coordinator::open_with_opts(dir, backend, Some(inner)) {
                         Ok(c) => c,
                         Err(e) => {
                             // Don't claim queue slots: healthy workers drain

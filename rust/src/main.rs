@@ -20,21 +20,31 @@ use std::path::PathBuf;
 
 use autoq::coordinator::{Coordinator, JobOutcome, JobSpec, Sweep};
 use autoq::cost::Mode;
-use autoq::runtime::BackendKind;
+use autoq::runtime::{BackendKind, Parallelism};
 use autoq::search::{Granularity, Protocol, ProtocolKind};
 use autoq::util::cli::Args;
 
 /// Shared `--backend` option help (pjrt|reference; empty = auto).
 const BACKEND_HELP: &str = "pjrt|reference (default: $AUTOQ_BACKEND, else auto)";
 
+/// Shared `--threads` option help (empty/auto/0 = auto-resolve).
+const THREADS_HELP: &str =
+    "reference-backend eval worker threads (default: $AUTOQ_THREADS, else all cores)";
+
 /// Parse the shared `--backend` option (empty string = auto-resolve).
 fn backend_arg(a: &Args) -> anyhow::Result<Option<BackendKind>> {
     BackendKind::parse_opt(&a.get("backend"))
 }
 
-/// Open the default-artifact-dir coordinator honouring `--backend`.
+/// Parse the shared `--threads` option (empty/auto/0 = auto-resolve).
+fn threads_arg(a: &Args) -> anyhow::Result<Option<Parallelism>> {
+    Parallelism::parse_opt(&a.get("threads"))
+}
+
+/// Open the default-artifact-dir coordinator honouring `--backend` and
+/// `--threads`.
 fn open_coord(a: &Args) -> anyhow::Result<Coordinator> {
-    Coordinator::open_with(&Coordinator::default_dir(), backend_arg(a)?)
+    Coordinator::open_with_opts(&Coordinator::default_dir(), backend_arg(a)?, threads_arg(a)?)
 }
 
 fn main() {
@@ -91,6 +101,12 @@ executes the AOT HLO artifacts, `reference` interprets the same graphs in
 pure Rust — no artifacts, no XLA library, runs anywhere.  Default: pjrt
 iff compiled in and artifacts exist, else reference.
 
+Every command also takes --threads N (or $AUTOQ_THREADS; default all
+cores): the reference backend fans independent eval batches across N
+worker threads with byte-identical results at any N.  For `sweep`,
+--threads is the per-worker eval budget (default: cores split evenly
+across --workers, so the grid never oversubscribes).
+
 The coordinator job API behind these commands is documented in DESIGN.md.";
 
 fn parse_list<T>(s: &str, f: impl Fn(&str) -> anyhow::Result<T>) -> anyhow::Result<Vec<T>> {
@@ -107,6 +123,7 @@ fn cmd_pretrain(rest: &[String]) -> anyhow::Result<()> {
         .opt("steps", "300", "SGD steps")
         .opt("seed", "42", "dataset seed")
         .opt("backend", "", BACKEND_HELP)
+        .opt("threads", "", THREADS_HELP)
         .parse(rest)?;
     let model = a.get("model");
     let spec = JobSpec::pretrain(&model)
@@ -137,6 +154,7 @@ fn cmd_search(rest: &[String]) -> anyhow::Result<()> {
         .opt("target-bits", "5", "B-bar for Algorithm 1 (rc)")
         .opt("out", "", "write best config JSON here")
         .opt("backend", "", BACKEND_HELP)
+        .opt("threads", "", THREADS_HELP)
         .flag("paper-scale", "use the paper's 400-episode schedule")
         .flag("no-relabel", "disable HIRO goal relabeling (ablation)")
         .parse(rest)?;
@@ -192,6 +210,7 @@ fn cmd_sweep(rest: &[String]) -> anyhow::Result<()> {
         .opt("workers", "2", "worker threads, each with its own runtime/backend")
         .opt("out-dir", "reports/sweep", "one JobReport JSON per cell lands here")
         .opt("backend", "", BACKEND_HELP)
+        .opt("threads", "", "eval threads per worker (default: split cores across workers)")
         .flag("paper-scale", "use the paper's 400-episode schedule")
         .flag("no-relabel", "disable HIRO goal relabeling (ablation)")
         .parse(rest)?;
@@ -216,6 +235,7 @@ fn cmd_sweep(rest: &[String]) -> anyhow::Result<()> {
         workers: a.get_usize("workers")?,
         out_dir: Some(PathBuf::from(a.get("out-dir"))),
         backend: backend_arg(&a)?,
+        threads: threads_arg(&a)?,
     };
     let result = sweep.run(&Coordinator::default_dir())?;
     println!(
@@ -255,6 +275,7 @@ fn cmd_finetune(rest: &[String]) -> anyhow::Result<()> {
         .opt("config", "", "searched config JSON (from search --out)")
         .opt("steps", "200", "fine-tune steps")
         .opt("backend", "", BACKEND_HELP)
+        .opt("threads", "", THREADS_HELP)
         .parse(rest)?;
     let model = a.get("model");
     let cfgf = a.get("config");
@@ -281,6 +302,7 @@ fn cmd_eval(rest: &[String]) -> anyhow::Result<()> {
         .opt("config", "", "optional searched config JSON")
         .opt("batches", "4", "val batches")
         .opt("backend", "", BACKEND_HELP)
+        .opt("threads", "", THREADS_HELP)
         .parse(rest)?;
     let model = a.get("model");
     let mut builder = JobSpec::eval(&model).batches(a.get_usize("batches")?);
@@ -302,6 +324,7 @@ fn cmd_sim(rest: &[String]) -> anyhow::Result<()> {
         .opt("model", "cif10", "zoo model name")
         .opt("config", "", "searched config JSON")
         .opt("backend", "", BACKEND_HELP)
+        .opt("threads", "", THREADS_HELP)
         .parse(rest)?;
     let model = a.get("model");
     let mut builder = JobSpec::sim(&model);
@@ -325,7 +348,10 @@ fn cmd_sim(rest: &[String]) -> anyhow::Result<()> {
 }
 
 fn cmd_stats(rest: &[String]) -> anyhow::Result<()> {
-    let a = Args::new("stats").opt("backend", "", BACKEND_HELP).parse(rest)?;
+    let a = Args::new("stats")
+        .opt("backend", "", BACKEND_HELP)
+        .opt("threads", "", THREADS_HELP)
+        .parse(rest)?;
     let mut coord = open_coord(&a)?;
     println!("{}", coord.runtime().stats_report());
     Ok(())

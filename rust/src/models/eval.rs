@@ -4,6 +4,12 @@
 //! assignment on held-out validation batches via `{model}_eval_{mode}`
 //! (whose quantize/binarize inner loops are the L1 Pallas kernels on the
 //! PJRT backend, and the `runtime::reference` interpreter otherwise).
+//! All validation batches are built up front and dispatched through the
+//! runtime's batch seam, so the reference backend fans them across its
+//! worker pool; parameter `Value`s are cached on the runner and borrowed
+//! per dispatch instead of re-cloning every tensor per call (§Perf).
+
+use std::cell::{Ref, RefCell};
 
 use crate::cost::hardware::Mode;
 use crate::data::synth::{Batch, Split, SynthDataset};
@@ -12,8 +18,13 @@ use crate::runtime::{ModelMeta, Runtime, Tensor, Value};
 
 pub struct ModelRunner {
     pub meta: ModelMeta,
+    /// Mutate only through `train_step` (or call `invalidate_param_cache`
+    /// afterwards) so cached dispatch values stay in sync.
     pub params: ParamStore,
     pub momenta: ParamStore,
+    /// Dispatch-ready copies of `params`, built on first use and dropped
+    /// whenever the parameters change.
+    param_cache: RefCell<Option<Vec<Value>>>,
 }
 
 /// Bit config in evaluation form (f32 vectors, network channel order).
@@ -32,13 +43,32 @@ impl ModelRunner {
     pub fn new(meta: ModelMeta, params: ParamStore) -> anyhow::Result<ModelRunner> {
         params.check_layout(&meta.params)?;
         let momenta = params.zeros_like();
-        Ok(ModelRunner { meta, params, momenta })
+        Ok(ModelRunner { meta, params, momenta, param_cache: RefCell::new(None) })
     }
 
     pub fn init(meta: ModelMeta, rng: &mut crate::util::rng::Rng) -> ModelRunner {
         let params = ParamStore::init(&meta.params, rng);
         let momenta = params.zeros_like();
-        ModelRunner { meta, params, momenta }
+        ModelRunner { meta, params, momenta, param_cache: RefCell::new(None) }
+    }
+
+    /// Dispatch-ready parameter values, cloned from `params` once and
+    /// reused by every eval until the next `train_step` — the per-episode
+    /// `Tensor::clone` of the whole parameter set used to dominate
+    /// `eval_config` setup.
+    pub fn param_values(&self) -> Ref<'_, Vec<Value>> {
+        // A live `Ref` from an earlier call implies the cache is filled, so
+        // the mutable borrow below only ever happens unobserved.
+        if self.param_cache.borrow().is_none() {
+            *self.param_cache.borrow_mut() =
+                Some(self.params.tensors.iter().map(|t| Value::F32(t.clone())).collect());
+        }
+        Ref::map(self.param_cache.borrow(), |c| c.as_ref().expect("filled above"))
+    }
+
+    /// Drop the cached dispatch values after mutating `params` directly.
+    pub fn invalidate_param_cache(&mut self) {
+        *self.param_cache.get_mut() = None;
     }
 
     fn artifact(&self, kind: &str, mode: Mode) -> String {
@@ -68,26 +98,39 @@ impl ModelRunner {
         anyhow::ensure!(abits.len() == self.meta.a_channels, "abits len");
         let name = self.artifact("eval", mode);
         let eb = self.meta.eval_batch;
-        // Parameter/bit values are built once and borrowed per dispatch —
-        // only the batch tensors change across iterations (§Perf).
-        let param_vals: Vec<Value> =
-            self.params.tensors.iter().map(|t| Value::F32(t.clone())).collect();
+        // Parameter values come from the runner's cache and bit vectors
+        // are built once — every dispatch borrows them (§Perf).
+        let param_vals = self.param_values();
         let wb_val = Value::f32(vec![wbits.len()], bits_to_f32(wbits));
         let ab_val = Value::f32(vec![abits.len()], bits_to_f32(abits));
-        let mut correct = 0.0f64;
-        let mut loss = 0.0f64;
+        // Build every validation batch up front so the whole set goes
+        // through the batch seam in one dispatch — independent batches fan
+        // out across the reference backend's worker pool.
+        let mut batch_vals: Vec<(Value, Value)> = Vec::with_capacity(n_batches);
         for bi in 0..n_batches {
             let batch = data.batch(split, (bi * eb) as u64, eb);
-            let (img, lbl) = self.batch_values(&batch, eb)?;
-            let mut inputs: Vec<&Value> = Vec::with_capacity(param_vals.len() + 4);
-            inputs.extend(param_vals.iter());
-            inputs.push(&img);
-            inputs.push(&lbl);
-            inputs.push(&wb_val);
-            inputs.push(&ab_val);
-            let outs = rt.exec(&name, &inputs)?;
-            correct += outs[0].scalar_f32()? as f64;
-            loss += outs[1].scalar_f32()? as f64;
+            batch_vals.push(self.batch_values(&batch, eb)?);
+        }
+        let inputs: Vec<Vec<&Value>> = batch_vals
+            .iter()
+            .map(|(img, lbl)| {
+                let mut row: Vec<&Value> = Vec::with_capacity(param_vals.len() + 4);
+                row.extend(param_vals.iter());
+                row.push(img);
+                row.push(lbl);
+                row.push(&wb_val);
+                row.push(&ab_val);
+                row
+            })
+            .collect();
+        let outs = rt.exec_batch(&name, &inputs)?;
+        // Reduce in batch-index order — worker scheduling never reorders
+        // this sum, keeping results byte-identical at every thread count.
+        let mut correct = 0.0f64;
+        let mut loss = 0.0f64;
+        for out in &outs {
+            correct += out[0].scalar_f32()? as f64;
+            loss += out[1].scalar_f32()? as f64;
         }
         let images = n_batches * eb;
         Ok(EvalResult {
@@ -149,6 +192,7 @@ impl ModelRunner {
                 self.momenta.tensors[i - np] = t;
             }
         }
+        self.invalidate_param_cache();
         Ok(loss)
     }
 

@@ -21,6 +21,7 @@ pub fn cmd_repro(rest: &[String]) -> anyhow::Result<()> {
         .opt("runs", "3", "independent runs for fig8")
         .opt("seed", "1", "base seed")
         .opt("backend", "", "pjrt|reference (default: $AUTOQ_BACKEND, else auto)")
+        .opt("threads", "", "eval worker threads (default: $AUTOQ_THREADS, else all cores)")
         .flag("fresh", "ignore cached searched configs")
         .flag("paper-scale", "paper's 400-episode schedule")
         .parse(rest)?;
@@ -38,9 +39,11 @@ pub fn cmd_repro(rest: &[String]) -> anyhow::Result<()> {
     let runs = a.get_usize("runs")?;
 
     let backend = crate::runtime::BackendKind::parse_opt(&a.get("backend"))?;
-    let mut coord = crate::coordinator::Coordinator::open_with(
+    let threads = crate::runtime::Parallelism::parse_opt(&a.get("threads"))?;
+    let mut coord = crate::coordinator::Coordinator::open_with_opts(
         &crate::coordinator::Coordinator::default_dir(),
         backend,
+        threads,
     )?;
     match what.as_str() {
         "fig1" => fig1(),

@@ -24,6 +24,15 @@ pub trait Executable {
     /// output order.  Input arity is validated by [`Runtime`] before
     /// dispatch.
     fn execute(&mut self, inputs: &[&Value]) -> anyhow::Result<Vec<Value>>;
+
+    /// Run many **independent** input sets, outputs in input order.  The
+    /// default is the serial loop; stateless executables may fan out
+    /// across worker threads, but must stay byte-identical to the serial
+    /// path at every thread count (the reference eval interpreter does —
+    /// see `util::pool` and `tests/determinism.rs`).
+    fn execute_batch(&mut self, batches: &[Vec<&Value>]) -> anyhow::Result<Vec<Vec<Value>>> {
+        batches.iter().map(|b| self.execute(b)).collect()
+    }
 }
 
 /// An execution engine: turns manifest artifacts into executables.
@@ -36,6 +45,13 @@ pub trait Backend {
         spec: &ArtifactSpec,
         manifest: &Manifest,
     ) -> anyhow::Result<Box<dyn Executable>>;
+
+    /// Worker threads for `execute_batch` fan-out in executables loaded
+    /// from now on (`Runtime::open_with_opts` calls this before any
+    /// load).  Backends that always run serially ignore it.
+    fn set_parallelism(&mut self, threads: usize) {
+        let _ = threads;
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -21,6 +21,8 @@ pub use manifest::{AgentMeta, ArtifactSpec, LayerMeta, Manifest, ModelMeta, Para
 pub use tensor::Tensor;
 pub use value::Value;
 
+pub use crate::util::pool::Parallelism;
+
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
@@ -41,6 +43,7 @@ pub struct ExecStats {
 pub struct Runtime {
     backend: Box<dyn Backend>,
     kind: BackendKind,
+    threads: usize,
     pub manifest: Manifest,
     cache: HashMap<String, Box<dyn Executable>>,
     stats: HashMap<String, ExecStats>,
@@ -52,11 +55,24 @@ impl Runtime {
         Self::open_with(dir, BackendKind::resolve(dir, None)?)
     }
 
-    /// Open with an explicit backend.  The reference backend synthesizes
-    /// its manifest from the built-in model zoo and never touches `dir`;
-    /// PJRT loads `dir/manifest.json` and compiles HLO from `dir`.
+    /// Open with an explicit backend and auto-resolved parallelism
+    /// (`$AUTOQ_THREADS`, else all cores).
     pub fn open_with(dir: &Path, kind: BackendKind) -> anyhow::Result<Runtime> {
-        let (backend, manifest): (Box<dyn Backend>, Manifest) = match kind {
+        Self::open_with_opts(dir, kind, None)
+    }
+
+    /// Open with an explicit backend and worker-thread budget (`None` =
+    /// `$AUTOQ_THREADS`, else all cores — see [`Parallelism::resolve`]).
+    /// The reference backend synthesizes its manifest from the built-in
+    /// model zoo and never touches `dir`; PJRT loads `dir/manifest.json`
+    /// and compiles HLO from `dir`.
+    pub fn open_with_opts(
+        dir: &Path,
+        kind: BackendKind,
+        threads: Option<Parallelism>,
+    ) -> anyhow::Result<Runtime> {
+        let par = Parallelism::resolve(threads)?;
+        let (mut backend, manifest): (Box<dyn Backend>, Manifest) = match kind {
             BackendKind::Reference => (
                 Box::new(reference::RefBackend::new()),
                 reference::builtin_manifest(),
@@ -74,10 +90,12 @@ impl Runtime {
                 );
             }
         };
-        crate::info!("runtime up: backend={}", kind.as_str());
+        backend.set_parallelism(par.get());
+        crate::info!("runtime up: backend={} threads={}", kind.as_str(), par.get());
         Ok(Runtime {
             backend,
             kind,
+            threads: par.get(),
             manifest,
             cache: HashMap::new(),
             stats: HashMap::new(),
@@ -102,6 +120,11 @@ impl Runtime {
         self.backend.name()
     }
 
+    /// Resolved worker-thread budget for `exec_batch` fan-out.
+    pub fn parallelism(&self) -> usize {
+        self.threads
+    }
+
     /// Load (once) the executable for `name` into the cache.
     pub fn load(&mut self, name: &str) -> anyhow::Result<()> {
         if !self.cache.contains_key(name) {
@@ -116,6 +139,31 @@ impl Runtime {
         Ok(())
     }
 
+    /// Arity-check every input set against the manifest, then hand back
+    /// the loaded executable — the shared front half of `exec`/`exec_batch`.
+    fn load_for_dispatch(
+        &mut self,
+        name: &str,
+        set_lens: impl Iterator<Item = usize>,
+    ) -> anyhow::Result<&mut Box<dyn Executable>> {
+        let expected = self.manifest.artifact(name)?.inputs.len();
+        for (bi, len) in set_lens.enumerate() {
+            anyhow::ensure!(
+                len == expected,
+                "artifact {name} batch {bi}: got {len} inputs, manifest says {expected}"
+            );
+        }
+        self.load(name)?;
+        Ok(self.cache.get_mut(name).expect("loaded above"))
+    }
+
+    /// Shared back half of `exec`/`exec_batch`: stats bookkeeping.
+    fn note_calls(&mut self, name: &str, calls: u64, t0: Instant) {
+        let st = self.stats.entry(name.to_string()).or_default();
+        st.calls += calls;
+        st.total_secs += t0.elapsed().as_secs_f64();
+    }
+
     /// Execute artifact `name` on host values; returns the decomposed
     /// output tuple.  Input arity is validated against the manifest.
     /// Accepts owned or borrowed values (`&[Value]` / `&[&Value]`) —
@@ -126,20 +174,33 @@ impl Runtime {
         name: &str,
         inputs: &[V],
     ) -> anyhow::Result<Vec<Value>> {
-        let expected = self.manifest.artifact(name)?.inputs.len();
-        anyhow::ensure!(
-            inputs.len() == expected,
-            "artifact {name}: got {} inputs, manifest says {expected}",
-            inputs.len()
-        );
-        self.load(name)?;
-        let t0 = Instant::now();
         let refs: Vec<&Value> = inputs.iter().map(|v| v.borrow()).collect();
-        let exe = self.cache.get_mut(name).expect("loaded above");
+        let exe = self.load_for_dispatch(name, std::iter::once(refs.len()))?;
+        let t0 = Instant::now();
         let outs = exe.execute(&refs)?;
-        let st = self.stats.entry(name.to_string()).or_default();
-        st.calls += 1;
-        st.total_secs += t0.elapsed().as_secs_f64();
+        self.note_calls(name, 1, t0);
+        Ok(outs)
+    }
+
+    /// Execute artifact `name` once per input set, outputs in input order
+    /// — the batch seam `eval_config` fans out through.  Arity of every
+    /// set is validated up front; on the reference backend independent
+    /// sets run across the worker pool with byte-identical results to a
+    /// serial `exec` loop (deterministic reduction, see `util::pool`).
+    /// Stats count one call per input set against the fan-out's wall
+    /// clock, so `mean(ms)` reads as wall time per set (throughput), not
+    /// CPU time, when threads > 1.
+    pub fn exec_batch<V: std::borrow::Borrow<Value>>(
+        &mut self,
+        name: &str,
+        batches: &[Vec<V>],
+    ) -> anyhow::Result<Vec<Vec<Value>>> {
+        let refs: Vec<Vec<&Value>> =
+            batches.iter().map(|b| b.iter().map(|v| v.borrow()).collect()).collect();
+        let exe = self.load_for_dispatch(name, refs.iter().map(Vec::len))?;
+        let t0 = Instant::now();
+        let outs = exe.execute_batch(&refs)?;
+        self.note_calls(name, batches.len() as u64, t0);
         Ok(outs)
     }
 

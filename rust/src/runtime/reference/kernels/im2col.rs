@@ -1,0 +1,111 @@
+//! Patch shuffles for the convolution lowering: SAME-padding geometry,
+//! im2col (NHWC image → patch-row matrix) and its scatter-add inverse
+//! (col2im).  Pure data movement — all arithmetic happens in the matmul
+//! kernels these matrices feed.
+
+/// SAME-padding geometry: (out, pad_lo, pad_hi).
+pub fn same_pad(inp: usize, k: usize, s: usize) -> (usize, usize, usize) {
+    let out = (inp + s - 1) / s;
+    let total = ((out - 1) * s + k).saturating_sub(inp);
+    (out, total / 2, total - total / 2)
+}
+
+/// im2col for one image: rows = ho·wo, cols = k·k·cin ordered [kh][kw][ci]
+/// to match the (k,k,cin,cout) weight layout flattened row-major.
+pub fn im2col(img: &[f32], h: usize, w: usize, cin: usize, k: usize, s: usize, out: &mut [f32]) {
+    let (ho, pad_t, _) = same_pad(h, k, s);
+    let (wo, pad_l, _) = same_pad(w, k, s);
+    let cols = k * k * cin;
+    debug_assert_eq!(out.len(), ho * wo * cols);
+    out.fill(0.0);
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let row = &mut out[(oy * wo + ox) * cols..(oy * wo + ox + 1) * cols];
+            for ky in 0..k {
+                let iy = (oy * s + ky) as isize - pad_t as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for kx in 0..k {
+                    let ix = (ox * s + kx) as isize - pad_l as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    let src = ((iy as usize) * w + ix as usize) * cin;
+                    let dst = (ky * k + kx) * cin;
+                    row[dst..dst + cin].copy_from_slice(&img[src..src + cin]);
+                }
+            }
+        }
+    }
+}
+
+/// Scatter-add of a patch-gradient matrix back to the image (col2im).
+pub fn col2im_acc(
+    dpatch: &[f32],
+    h: usize,
+    w: usize,
+    cin: usize,
+    k: usize,
+    s: usize,
+    dimg: &mut [f32],
+) {
+    let (ho, pad_t, _) = same_pad(h, k, s);
+    let (wo, pad_l, _) = same_pad(w, k, s);
+    let cols = k * k * cin;
+    debug_assert_eq!(dpatch.len(), ho * wo * cols);
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let row = &dpatch[(oy * wo + ox) * cols..(oy * wo + ox + 1) * cols];
+            for ky in 0..k {
+                let iy = (oy * s + ky) as isize - pad_t as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for kx in 0..k {
+                    let ix = (ox * s + kx) as isize - pad_l as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    let dst = ((iy as usize) * w + ix as usize) * cin;
+                    let src = (ky * k + kx) * cin;
+                    for ci in 0..cin {
+                        dimg[dst + ci] += row[src + ci];
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_pad_matches_xla() {
+        assert_eq!(same_pad(32, 3, 1), (32, 1, 1));
+        assert_eq!(same_pad(32, 3, 2), (16, 0, 1));
+        assert_eq!(same_pad(32, 1, 1), (32, 0, 0));
+        assert_eq!(same_pad(5, 3, 2), (3, 1, 1));
+    }
+
+    #[test]
+    fn im2col_col2im_are_adjoint() {
+        // ⟨im2col(x), y⟩ == ⟨x, col2im(y)⟩ — the linear-map adjoint pair
+        // the conv forward/backward relies on.
+        let (h, w, cin, k, s) = (4usize, 5usize, 2usize, 3usize, 1usize);
+        let (ho, _, _) = same_pad(h, k, s);
+        let (wo, _, _) = same_pad(w, k, s);
+        let cols = k * k * cin;
+        let x: Vec<f32> = (0..h * w * cin).map(|i| (i as f32 * 0.37).sin()).collect();
+        let y: Vec<f32> = (0..ho * wo * cols).map(|i| (i as f32 * 0.11).cos()).collect();
+        let mut px = vec![0.0f32; ho * wo * cols];
+        im2col(&x, h, w, cin, k, s, &mut px);
+        let mut cy = vec![0.0f32; h * w * cin];
+        col2im_acc(&y, h, w, cin, k, s, &mut cy);
+        let lhs: f64 = px.iter().zip(&y).map(|(a, b)| (a * b) as f64).sum();
+        let rhs: f64 = x.iter().zip(&cy).map(|(a, b)| (a * b) as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");
+    }
+}

@@ -1,0 +1,276 @@
+//! Packed, cache-blocked matmul family behind one entry point per
+//! contraction shape.  Each public kernel dispatches between a blocked
+//! path (large operands) and the naive triple loop (small operands, panel
+//! already L1-resident) — both produce bit-identical output because the
+//! per-element accumulation order never changes (see module docs in
+//! `kernels/mod.rs`).
+
+/// Reduction-dimension rows per packed B panel (`matmul_acc`) and per C
+/// tile (`matmul_at_b_acc`).
+pub const KC: usize = 64;
+
+/// Columns per packed B panel / C tile: `KC × NC` f32 = 32 KiB, sized to
+/// stay L1-resident while every row of A streams against it.
+pub const NC: usize = 128;
+
+/// B-row chunk for the `a @ bᵀ` kernel: `MC` rows of B are reused across
+/// all rows of A before moving on.
+pub const MC: usize = 64;
+
+/// The unblocked reference kernels.  These are the semantics: the blocked
+/// paths above must match them bit-for-bit (`tests/properties.rs`), and
+/// the bench compares throughput against them.
+pub mod naive {
+    /// c += a @ b for a (m,k), b (k,n), c (m,n).
+    pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(c.len(), m * n);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                let brow = &b[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+
+    /// c += aᵀ @ b for a (m,k), b (m,n), c (k,n).
+    pub fn matmul_at_b_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), m * n);
+        debug_assert_eq!(c.len(), k * n);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let brow = &b[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                let crow = &mut c[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+
+    /// a @ bᵀ for a (m,n), b (k,n) → (m,k): rows of a dotted with rows of b.
+    pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+        debug_assert_eq!(a.len(), m * n);
+        debug_assert_eq!(b.len(), k * n);
+        let mut c = vec![0.0f32; m * k];
+        for i in 0..m {
+            let arow = &a[i * n..(i + 1) * n];
+            let crow = &mut c[i * k..(i + 1) * k];
+            for (kk, cv) in crow.iter_mut().enumerate() {
+                let brow = &b[kk * n..(kk + 1) * n];
+                let mut acc = 0.0f32;
+                for j in 0..n {
+                    acc += arow[j] * brow[j];
+                }
+                *cv = acc;
+            }
+        }
+        c
+    }
+}
+
+/// c += a @ b for a (m,k), b (k,n), c (m,n).
+///
+/// Blocked path (k or n beyond one panel): pack B into row-major `KC×NC`
+/// panels and stream every A row against the hot panel (GEBP order
+/// `jc → pc → i`).  For each element c\[i]\[j] the k-index still ascends
+/// 0..k across panels, so the result is bit-identical to the naive loop.
+pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if k <= KC && n <= NC {
+        return naive::matmul_acc(c, a, b, m, k, n);
+    }
+    let mut packed = vec![0.0f32; KC.min(k) * NC.min(n)];
+    let mut jc = 0;
+    while jc < n {
+        let nb = NC.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kb = KC.min(k - pc);
+            // Pack b[pc..pc+kb, jc..jc+nb] into a contiguous panel.
+            for kk in 0..kb {
+                let src = (pc + kk) * n + jc;
+                packed[kk * nb..(kk + 1) * nb].copy_from_slice(&b[src..src + nb]);
+            }
+            let panel = &packed[..kb * nb];
+            for i in 0..m {
+                let arow = &a[i * k + pc..i * k + pc + kb];
+                let crow = &mut c[i * n + jc..i * n + jc + nb];
+                for (kk, &av) in arow.iter().enumerate() {
+                    let brow = &panel[kk * nb..(kk + 1) * nb];
+                    for j in 0..nb {
+                        crow[j] += av * brow[j];
+                    }
+                }
+            }
+            pc += KC;
+        }
+        jc += NC;
+    }
+}
+
+/// a @ b for a (m,k), b (k,n) → (m,n).
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    matmul_acc(&mut c, a, b, m, k, n);
+    c
+}
+
+/// c += aᵀ @ b for a (m,k), b (m,n), c (k,n).
+///
+/// Blocked path: tile C into `KC×NC` blocks kept hot across the full
+/// reduction sweep over i.  Per element the i-index still ascends 0..m, so
+/// the result is bit-identical to the naive loop.
+pub fn matmul_at_b_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(c.len(), k * n);
+    if k <= KC && n <= NC {
+        return naive::matmul_at_b_acc(c, a, b, m, k, n);
+    }
+    let mut jc = 0;
+    while jc < n {
+        let nb = NC.min(n - jc);
+        let mut kc = 0;
+        while kc < k {
+            let kb = KC.min(k - kc);
+            for i in 0..m {
+                let arow = &a[i * k + kc..i * k + kc + kb];
+                let brow = &b[i * n + jc..i * n + jc + nb];
+                for (kk, &av) in arow.iter().enumerate() {
+                    let crow = &mut c[(kc + kk) * n + jc..(kc + kk) * n + jc + nb];
+                    for j in 0..nb {
+                        crow[j] += av * brow[j];
+                    }
+                }
+            }
+            kc += KC;
+        }
+        jc += NC;
+    }
+}
+
+/// a @ bᵀ for a (m,n), b (k,n) → (m,k): rows of a dotted with rows of b.
+///
+/// Blocked path: chunks of `MC` B-rows are reused across every A row
+/// before the next chunk loads.  Each output element is one whole dot
+/// product with j ascending, exactly as in the naive loop.
+pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    if k <= MC {
+        return naive::matmul_a_bt(a, b, m, n, k);
+    }
+    let mut c = vec![0.0f32; m * k];
+    let mut kc = 0;
+    while kc < k {
+        let kb = MC.min(k - kc);
+        for i in 0..m {
+            let arow = &a[i * n..(i + 1) * n];
+            let crow = &mut c[i * k + kc..i * k + kc + kb];
+            for (kk, cv) in crow.iter_mut().enumerate() {
+                let brow = &b[(kc + kk) * n..(kc + kk + 1) * n];
+                let mut acc = 0.0f32;
+                for j in 0..n {
+                    acc += arow[j] * brow[j];
+                }
+                *cv = acc;
+            }
+        }
+        kc += MC;
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn fill(r: &mut Rng, len: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; len];
+        r.fill_normal_f32(&mut v, 1.0);
+        v
+    }
+
+    /// Shapes that straddle every dispatch cutoff and tile edge.
+    fn shapes() -> Vec<(usize, usize, usize)> {
+        vec![
+            (1, 1, 1),
+            (3, 5, 2),
+            (7, KC, NC),
+            (4, KC + 1, NC + 1),
+            (9, 2 * KC + 3, 5),
+            (2, 5, 2 * NC + 7),
+            (5, KC + 9, NC + 17),
+            (3, MC + 2, MC + 2),
+        ]
+    }
+
+    #[test]
+    fn blocked_matmul_acc_is_bit_exact() {
+        let mut r = Rng::new(11);
+        for (m, k, n) in shapes() {
+            let a = fill(&mut r, m * k);
+            let b = fill(&mut r, k * n);
+            let init = fill(&mut r, m * n);
+            let mut c_blocked = init.clone();
+            let mut c_naive = init;
+            matmul_acc(&mut c_blocked, &a, &b, m, k, n);
+            naive::matmul_acc(&mut c_naive, &a, &b, m, k, n);
+            for (x, y) in c_blocked.iter().zip(&c_naive) {
+                assert_eq!(x.to_bits(), y.to_bits(), "({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_at_b_acc_is_bit_exact() {
+        let mut r = Rng::new(13);
+        for (m, k, n) in shapes() {
+            let a = fill(&mut r, m * k);
+            let b = fill(&mut r, m * n);
+            let init = fill(&mut r, k * n);
+            let mut c_blocked = init.clone();
+            let mut c_naive = init;
+            matmul_at_b_acc(&mut c_blocked, &a, &b, m, k, n);
+            naive::matmul_at_b_acc(&mut c_naive, &a, &b, m, k, n);
+            for (x, y) in c_blocked.iter().zip(&c_naive) {
+                assert_eq!(x.to_bits(), y.to_bits(), "({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_a_bt_is_bit_exact() {
+        let mut r = Rng::new(17);
+        for (m, n, k) in shapes() {
+            let a = fill(&mut r, m * n);
+            let b = fill(&mut r, k * n);
+            let c_blocked = matmul_a_bt(&a, &b, m, n, k);
+            let c_naive = naive::matmul_a_bt(&a, &b, m, n, k);
+            for (x, y) in c_blocked.iter().zip(&c_naive) {
+                assert_eq!(x.to_bits(), y.to_bits(), "({m},{n},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        // (2,3) @ (3,2) — the nn.rs identity, now owned by the kernels.
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0];
+        assert_eq!(matmul(&a, &b, 2, 3, 2), vec![58.0, 64.0, 139.0, 154.0]);
+        let abt = matmul_a_bt(&a, &b, 2, 3, 2);
+        assert_eq!(abt, vec![50.0, 68.0, 122.0, 167.0]);
+    }
+}

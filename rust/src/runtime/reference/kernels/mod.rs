@@ -1,0 +1,28 @@
+//! The reference backend's compute kernels: packed, cache-blocked matmul
+//! variants plus the im2col/col2im patch shuffles every convolution lowers
+//! to.  `nn.rs` is layer logic over this API; nothing above the kernels
+//! touches a raw triple loop.
+//!
+//! # Determinism contract
+//!
+//! Every kernel here is **bit-exact** against its naive reference
+//! counterpart (`naive::*`): blocking only re-tiles the *independent* loop
+//! dimensions, while the floating-point accumulation order of each output
+//! element is left untouched (reduction index ascending, one `mul` + one
+//! `add` per term, never fused or reassociated).  `tests/properties.rs`
+//! enforces this across randomized shapes including edge tiles, and the
+//! parallel batch executor above relies on it for byte-identical results
+//! at every thread count.
+//!
+//! # Packing layout and tile sizes
+//!
+//! `matmul_acc` packs B into row-major `KC×NC` panels (`KC = 64` rows,
+//! `NC = 128` columns → 32 KiB per panel, L1-resident) and streams every
+//! row of A against the hot panel — the GEBP loop order `jc → pc → i`.
+//! Packing is pure data movement; see DESIGN.md §Reference kernels.
+
+pub mod im2col;
+pub mod matmul;
+
+pub use im2col::{col2im_acc, im2col};
+pub use matmul::{matmul, matmul_a_bt, matmul_acc, matmul_at_b_acc, naive, KC, MC, NC};

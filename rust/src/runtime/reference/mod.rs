@@ -9,8 +9,15 @@
 //! Numerics track the JAX graphs within float tolerance (same padding
 //! rules, GroupNorm groups/ε, ties-to-even rounding in the quantizers);
 //! the opt-in PJRT CI lane cross-checks eval accuracy between backends.
+//!
+//! Compute routes through the packed, cache-blocked kernels in `kernels/`,
+//! and independent eval batches fan out across the backend's persistent
+//! worker pool (`execute_batch`) — both bit-exact against the serial naive
+//! path at every thread count (`tests/determinism.rs`,
+//! `tests/properties.rs`).
 
 pub mod agent_exec;
+pub mod kernels;
 pub mod model_exec;
 pub mod nn;
 pub mod quantize;
@@ -18,23 +25,41 @@ pub mod zoo;
 
 pub use zoo::builtin_manifest;
 
+use std::sync::Arc;
+
 use crate::runtime::backend::{Backend, Executable};
 use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::util::pool::WorkerPool;
 
-/// The reference backend carries no state: every executable is
+/// The reference backend owns the persistent worker pool its eval
+/// executables fan batches across; everything else about an executable is
 /// self-contained (graph + mode), built straight from the builtin zoo.
-#[derive(Debug, Default)]
-pub struct RefBackend;
+#[derive(Debug)]
+pub struct RefBackend {
+    pool: Arc<WorkerPool>,
+}
 
 impl RefBackend {
+    /// Serial until [`Backend::set_parallelism`] hands over the resolved
+    /// thread budget (the `Runtime` does so before any load).
     pub fn new() -> RefBackend {
-        RefBackend
+        RefBackend { pool: Arc::new(WorkerPool::new(1)) }
+    }
+}
+
+impl Default for RefBackend {
+    fn default() -> RefBackend {
+        RefBackend::new()
     }
 }
 
 impl Backend for RefBackend {
     fn name(&self) -> &'static str {
         "reference"
+    }
+
+    fn set_parallelism(&mut self, threads: usize) {
+        self.pool = Arc::new(WorkerPool::new(threads));
     }
 
     fn load(
@@ -65,7 +90,7 @@ impl Backend for RefBackend {
                 return Ok(if is_train {
                     Box::new(model_exec::RefModelTrain { graph, binar })
                 } else {
-                    Box::new(model_exec::RefModelEval { graph, binar })
+                    Box::new(model_exec::RefModelEval::new(graph, binar, self.pool.clone()))
                 });
             }
         }

@@ -8,6 +8,8 @@
 //! as identity (`q = x + stop_gradient(q − x)`), so weight gradients are
 //! taken at the quantized point and flow to the raw parameters unchanged.
 
+use std::sync::Arc;
+
 use crate::runtime::backend::Executable;
 use crate::runtime::reference::nn::{
     add_bias, bias_bwd, cmajor_to_nhwc, cmajor_to_w, conv2d, conv2d_bwd, dwconv2d, dwconv2d_bwd,
@@ -18,6 +20,7 @@ use crate::runtime::reference::quantize::quantize_rows;
 use crate::runtime::reference::zoo::{LType, ModelGraph, Node};
 use crate::runtime::tensor::Tensor;
 use crate::runtime::value::Value;
+use crate::util::pool::WorkerPool;
 
 /// Activation flowing through the walk: NHWC feature maps, or the flat
 /// (n, c) form after global average pooling.
@@ -421,10 +424,19 @@ fn backward(
 pub struct RefModelEval {
     pub graph: ModelGraph,
     pub binar: bool,
+    /// Shared fan-out pool (from the owning `RefBackend`); `execute_batch`
+    /// spreads independent batches across it.
+    pool: Arc<WorkerPool>,
 }
 
-impl Executable for RefModelEval {
-    fn execute(&mut self, inputs: &[&Value]) -> anyhow::Result<Vec<Value>> {
+impl RefModelEval {
+    pub fn new(graph: ModelGraph, binar: bool, pool: Arc<WorkerPool>) -> RefModelEval {
+        RefModelEval { graph, binar, pool }
+    }
+
+    /// One batch through forward + the accuracy/loss head.  Immutable so
+    /// the pool can run many batches against one executable concurrently.
+    fn run_one(&self, inputs: &[&Value]) -> anyhow::Result<Vec<Value>> {
         let np = self.graph.params.len();
         anyhow::ensure!(inputs.len() == np + 4, "eval arity");
         let params: Vec<&Tensor> =
@@ -438,6 +450,24 @@ impl Executable for RefModelEval {
         anyhow::ensure!(labels.len() == n, "labels len {} vs batch {n}", labels.len());
         let (correct, loss, _) = softmax_xent(&logits, n, classes, labels, false);
         Ok(vec![Value::scalar(correct), Value::scalar(loss)])
+    }
+}
+
+impl Executable for RefModelEval {
+    fn execute(&mut self, inputs: &[&Value]) -> anyhow::Result<Vec<Value>> {
+        self.run_one(inputs)
+    }
+
+    /// Independent batches fan out across the worker pool.  Each batch
+    /// runs the exact serial `run_one` and results come back in batch
+    /// order, so output bytes match a serial `execute` loop at every
+    /// thread count (enforced by `tests/determinism.rs`).
+    fn execute_batch(&mut self, batches: &[Vec<&Value>]) -> anyhow::Result<Vec<Vec<Value>>> {
+        let this = &*self;
+        this.pool
+            .run_indexed(batches.len(), |i| this.run_one(&batches[i]))
+            .into_iter()
+            .collect()
     }
 }
 
@@ -606,7 +636,7 @@ mod tests {
         inputs.push(Value::f32(vec![g.w_channels], vec![4.0; g.w_channels]));
         inputs.push(Value::f32(vec![g.a_channels], vec![4.0; g.a_channels]));
         let refs: Vec<&Value> = inputs.iter().collect();
-        let mut exe = RefModelEval { graph: g, binar: false };
+        let mut exe = RefModelEval::new(g, false, Arc::new(WorkerPool::new(1)));
         let outs = exe.execute(&refs).unwrap();
         assert_eq!(outs.len(), 2);
         let correct = outs[0].scalar_f32().unwrap();
@@ -614,6 +644,57 @@ mod tests {
         assert!((0.0..=n as f32).contains(&correct));
         assert!(loss.is_finite() && loss > 0.0);
         assert_eq!(inputs.len(), np + 4);
+    }
+
+    #[test]
+    fn execute_batch_fans_out_bit_identically() {
+        // Three distinct batches through a 1-thread and a 3-thread pool:
+        // outputs must match the serial execute loop bit-for-bit and stay
+        // in batch order.
+        let g = model_graph("cif10").unwrap();
+        let ps = graph_params(&g, 31);
+        let base: Vec<Value> = ps.tensors.iter().map(|t| Value::F32(t.clone())).collect();
+        let wbits = Value::f32(vec![g.w_channels], vec![5.0; g.w_channels]);
+        let abits = Value::f32(vec![g.a_channels], vec![4.0; g.a_channels]);
+        let n = 4;
+        let batches_owned: Vec<(Value, Value)> = (0..3u64)
+            .map(|bi| {
+                let images = tiny_images(n, 100 + bi);
+                let labels: Vec<i32> = (0..n as i32).map(|i| (i + bi as i32) % 10).collect();
+                (Value::F32(images), Value::i32(vec![n], labels))
+            })
+            .collect();
+        let batches: Vec<Vec<&Value>> = batches_owned
+            .iter()
+            .map(|(img, lbl)| {
+                let mut row: Vec<&Value> = base.iter().collect();
+                row.push(img);
+                row.push(lbl);
+                row.push(&wbits);
+                row.push(&abits);
+                row
+            })
+            .collect();
+        let mut serial = RefModelEval::new(g.clone(), false, Arc::new(WorkerPool::new(1)));
+        let mut parallel = RefModelEval::new(g, false, Arc::new(WorkerPool::new(3)));
+        let expect: Vec<Vec<Value>> =
+            batches.iter().map(|b| serial.execute(b).unwrap()).collect();
+        for exe in [&mut serial, &mut parallel] {
+            let outs = exe.execute_batch(&batches).unwrap();
+            assert_eq!(outs.len(), 3);
+            for (o, e) in outs.iter().zip(&expect) {
+                let (oc, ec) =
+                    (o[0].scalar_f32().unwrap(), e[0].scalar_f32().unwrap());
+                let (ol, el) =
+                    (o[1].scalar_f32().unwrap(), e[1].scalar_f32().unwrap());
+                assert_eq!(oc.to_bits(), ec.to_bits());
+                assert_eq!(ol.to_bits(), el.to_bits());
+            }
+        }
+        // Distinct batches should actually differ (order is observable).
+        let l0 = expect[0][1].scalar_f32().unwrap();
+        let l1 = expect[1][1].scalar_f32().unwrap();
+        assert_ne!(l0.to_bits(), l1.to_bits(), "batches too similar to detect reordering");
     }
 
     #[test]

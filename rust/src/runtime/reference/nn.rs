@@ -1,12 +1,19 @@
-//! Dense NHWC tensor ops (forward + backward) for the reference
-//! interpreter: conv / depthwise conv (SAME padding), matmul, GroupNorm,
-//! ReLU, 2×2 max-pool, global average pool, softmax cross-entropy.
+//! Dense NHWC layer ops (forward + backward) for the reference
+//! interpreter: conv / depthwise conv (SAME padding), GroupNorm, ReLU,
+//! 2×2 max-pool, global average pool, softmax cross-entropy.
 //!
 //! Semantics mirror the JAX graphs in `python/compile/model.py`: SAME
 //! padding splits the total pad floor/ceil, GroupNorm uses 8 groups when
 //! the channel count divides (else 1) with ε = 1e-5, pooling is VALID.
-//! Convolutions lower to im2col + a cache-friendly (i,k,j) matmul so the
-//! hot loops autovectorize; everything is f32 like the artifacts.
+//! All compute-heavy contractions route through the packed, cache-blocked
+//! kernels in `kernels/` (convs lower to im2col + matmul); this module is
+//! layer logic over that API.  Everything is f32 like the artifacts.
+
+// The kernel entry points double as this module's matmul/pad API so layer
+// code and the executables import from one place.
+pub use crate::runtime::reference::kernels::{
+    col2im_acc, im2col, im2col::same_pad, matmul, matmul_a_bt, matmul_acc, matmul_at_b_acc,
+};
 
 /// NHWC activation dims.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -21,78 +28,6 @@ impl Dims {
     pub fn elems(&self) -> usize {
         self.n * self.h * self.w * self.c
     }
-}
-
-/// SAME-padding geometry: (out, pad_lo, pad_hi).
-pub fn same_pad(inp: usize, k: usize, s: usize) -> (usize, usize, usize) {
-    let out = (inp + s - 1) / s;
-    let total = ((out - 1) * s + k).saturating_sub(inp);
-    (out, total / 2, total - total / 2)
-}
-
-// ---------------------------------------------------------------------------
-// Matmul family
-// ---------------------------------------------------------------------------
-
-/// c += a @ b for a (m,k), b (k,n), c (m,n).
-pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            let brow = &b[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
-        }
-    }
-}
-
-/// a @ b for a (m,k), b (k,n) → (m,n).
-pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut c = vec![0.0f32; m * n];
-    matmul_acc(&mut c, a, b, m, k, n);
-    c
-}
-
-/// c += aᵀ @ b for a (m,k), b (m,n), c (k,n).
-pub fn matmul_at_b_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), m * n);
-    debug_assert_eq!(c.len(), k * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let brow = &b[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            let crow = &mut c[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
-        }
-    }
-}
-
-/// a @ bᵀ for a (m,n), b (k,n) → (m,k): rows of a dotted with rows of b.
-pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * n);
-    debug_assert_eq!(b.len(), k * n);
-    let mut c = vec![0.0f32; m * k];
-    for i in 0..m {
-        let arow = &a[i * n..(i + 1) * n];
-        let crow = &mut c[i * k..(i + 1) * k];
-        for (kk, cv) in crow.iter_mut().enumerate() {
-            let brow = &b[kk * n..(kk + 1) * n];
-            let mut acc = 0.0f32;
-            for j in 0..n {
-                acc += arow[j] * brow[j];
-            }
-            *cv = acc;
-        }
-    }
-    c
 }
 
 // ---------------------------------------------------------------------------
@@ -150,66 +85,6 @@ pub fn cmajor_to_w(w2: &[f32], rest: usize, cout: usize) -> Vec<f32> {
 // ---------------------------------------------------------------------------
 // Convolutions
 // ---------------------------------------------------------------------------
-
-/// im2col for one image: rows = ho·wo, cols = k·k·cin ordered [kh][kw][ci]
-/// to match the (k,k,cin,cout) weight layout flattened row-major.
-fn im2col(img: &[f32], h: usize, w: usize, cin: usize, k: usize, s: usize, out: &mut [f32]) {
-    let (ho, pad_t, _) = same_pad(h, k, s);
-    let (wo, pad_l, _) = same_pad(w, k, s);
-    let cols = k * k * cin;
-    debug_assert_eq!(out.len(), ho * wo * cols);
-    out.fill(0.0);
-    for oy in 0..ho {
-        for ox in 0..wo {
-            let row = &mut out[(oy * wo + ox) * cols..(oy * wo + ox + 1) * cols];
-            for ky in 0..k {
-                let iy = (oy * s + ky) as isize - pad_t as isize;
-                if iy < 0 || iy >= h as isize {
-                    continue;
-                }
-                for kx in 0..k {
-                    let ix = (ox * s + kx) as isize - pad_l as isize;
-                    if ix < 0 || ix >= w as isize {
-                        continue;
-                    }
-                    let src = ((iy as usize) * w + ix as usize) * cin;
-                    let dst = (ky * k + kx) * cin;
-                    row[dst..dst + cin].copy_from_slice(&img[src..src + cin]);
-                }
-            }
-        }
-    }
-}
-
-/// Scatter-add of a patch-gradient matrix back to the image (col2im).
-fn col2im_acc(dpatch: &[f32], h: usize, w: usize, cin: usize, k: usize, s: usize, dimg: &mut [f32]) {
-    let (ho, pad_t, _) = same_pad(h, k, s);
-    let (wo, pad_l, _) = same_pad(w, k, s);
-    let cols = k * k * cin;
-    debug_assert_eq!(dpatch.len(), ho * wo * cols);
-    for oy in 0..ho {
-        for ox in 0..wo {
-            let row = &dpatch[(oy * wo + ox) * cols..(oy * wo + ox + 1) * cols];
-            for ky in 0..k {
-                let iy = (oy * s + ky) as isize - pad_t as isize;
-                if iy < 0 || iy >= h as isize {
-                    continue;
-                }
-                for kx in 0..k {
-                    let ix = (ox * s + kx) as isize - pad_l as isize;
-                    if ix < 0 || ix >= w as isize {
-                        continue;
-                    }
-                    let dst = ((iy as usize) * w + ix as usize) * cin;
-                    let src = (ky * k + kx) * cin;
-                    for ci in 0..cin {
-                        dimg[dst + ci] += row[src + ci];
-                    }
-                }
-            }
-        }
-    }
-}
 
 /// Dense conv, SAME padding: x NHWC, w (k,k,cin,cout) row-major.
 pub fn conv2d(x: &[f32], d: Dims, w: &[f32], k: usize, s: usize, cout: usize) -> (Vec<f32>, Dims) {
@@ -624,28 +499,15 @@ mod tests {
     use super::*;
 
     #[test]
-    fn same_pad_matches_xla() {
-        assert_eq!(same_pad(32, 3, 1), (32, 1, 1));
-        assert_eq!(same_pad(32, 3, 2), (16, 0, 1));
-        assert_eq!(same_pad(32, 1, 1), (32, 0, 0));
-        assert_eq!(same_pad(5, 3, 2), (3, 1, 1));
-    }
-
-    #[test]
-    fn matmul_identities() {
-        // (2,3) @ (3,2)
+    fn matmul_reexports_are_the_kernel_entry_points() {
+        // aᵀ @ a is symmetric — smoke that the re-exported kernel API is
+        // wired; the kernels module owns the real matmul tests.
         let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
-        let b = vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0];
-        let c = matmul(&a, &b, 2, 3, 2);
-        assert_eq!(c, vec![58.0, 64.0, 139.0, 154.0]);
-        // aᵀ @ a is symmetric.
         let mut ata = vec![0.0; 9];
         matmul_at_b_acc(&mut ata, &a, &a, 2, 3, 3);
         assert_eq!(ata[1], ata[3]);
         assert_eq!(ata[2], ata[6]);
-        // a @ bᵀ where b == b: (2,3)@(2,3)ᵀ = (2,2).
-        let abt = matmul_a_bt(&a, &b, 2, 3, 2);
-        assert_eq!(abt, vec![50.0, 68.0, 122.0, 167.0]);
+        assert_eq!(same_pad(32, 3, 2), (16, 0, 1));
     }
 
     #[test]

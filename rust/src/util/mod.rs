@@ -1,12 +1,13 @@
-//! From-scratch substrates: JSON, RNG, CLI parsing, statistics, logging and
-//! property-based testing.  The offline vendor set ships only `xla`,
-//! `anyhow` and `thiserror`, so everything else the coordinator needs is
-//! implemented here (see DESIGN.md).
+//! From-scratch substrates: JSON, RNG, CLI parsing, statistics, logging,
+//! property-based testing and the deterministic worker pool.  The offline
+//! vendor set ships only `xla`, `anyhow` and `thiserror`, so everything
+//! else the coordinator needs is implemented here (see DESIGN.md).
 
 pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod logging;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,177 @@
+//! Deterministic fan-out worker pool and the `--threads` resolution rules
+//! (rayon is not in the offline vendor set).
+//!
+//! [`WorkerPool::run_indexed`] maps an index range through a job closure
+//! on scoped worker threads, handing out indices from a shared atomic
+//! cursor and returning results **in index order** — scheduling decides
+//! only *who* computes an index, never the value or the reduction order,
+//! so a pure-per-index job gives byte-identical output at every thread
+//! count.  The pool object itself is persistent (owned by the reference
+//! backend and shared into its executables); worker threads are scoped to
+//! each fan-out, which keeps every borrow compiler-checked and costs
+//! microseconds against batch evaluations measured in milliseconds.
+//!
+//! [`Parallelism`] mirrors `BackendKind` selection: explicit caller choice
+//! (`--threads` / `open_with_opts`) > `$AUTOQ_THREADS` > auto (all
+//! available cores).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// A resolved worker-thread count (≥ 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Parallelism(usize);
+
+impl Parallelism {
+    pub fn new(threads: usize) -> Parallelism {
+        Parallelism(threads.max(1))
+    }
+
+    pub fn get(self) -> usize {
+        self.0
+    }
+
+    /// All available cores (1 if the OS won't say).
+    pub fn auto() -> Parallelism {
+        Parallelism::new(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    }
+
+    /// Parse an optional CLI value: empty, `auto` or `0` mean
+    /// "auto-resolve".  The single parser behind every `--threads` flag.
+    pub fn parse_opt(s: &str) -> anyhow::Result<Option<Parallelism>> {
+        let t = s.trim().to_ascii_lowercase();
+        if t.is_empty() || t == "auto" || t == "0" {
+            return Ok(None);
+        }
+        let n: usize = t
+            .parse()
+            .map_err(|_| anyhow::anyhow!("expected a thread count or 'auto', got {s:?}"))?;
+        Ok(Some(Parallelism::new(n)))
+    }
+
+    /// `$AUTOQ_THREADS`, if set and non-empty (`auto`/`0` count as unset).
+    pub fn from_env() -> anyhow::Result<Option<Parallelism>> {
+        match std::env::var("AUTOQ_THREADS") {
+            Ok(s) if !s.trim().is_empty() => Self::parse_opt(&s),
+            _ => Ok(None),
+        }
+    }
+
+    /// Resolve a thread count: explicit choice beats `$AUTOQ_THREADS`
+    /// beats auto (all cores).
+    pub fn resolve(explicit: Option<Parallelism>) -> anyhow::Result<Parallelism> {
+        if let Some(p) = explicit {
+            return Ok(p);
+        }
+        if let Some(p) = Self::from_env()? {
+            return Ok(p);
+        }
+        Ok(Self::auto())
+    }
+}
+
+/// Fan-out pool with a fixed thread budget and deterministic reduction
+/// order (see module docs).
+#[derive(Debug)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl WorkerPool {
+    pub fn new(threads: usize) -> WorkerPool {
+        WorkerPool { threads: threads.max(1) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Map `0..n` through `f`, results in index order.  Runs serially
+    /// when the budget (or `n`) is 1 — that path is the exact loop a
+    /// pool-free caller would write, so thread count never changes
+    /// results for pure-per-index jobs.  Panics in `f` propagate.
+    pub fn run_indexed<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        let workers = self.threads.min(n);
+        if workers <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let cursor = AtomicUsize::new(0);
+        let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    let cursor = &cursor;
+                    let f = &f;
+                    s.spawn(move || {
+                        let mut got: Vec<(usize, R)> = Vec::new();
+                        loop {
+                            let i = cursor.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            got.push((i, f(i)));
+                        }
+                        got
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (i, r) in h.join().expect("worker pool job panicked") {
+                    slots[i] = Some(r);
+                }
+            }
+        });
+        slots.into_iter().map(|r| r.expect("cursor covered every index")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_arrive_in_index_order_at_any_width() {
+        for threads in [1usize, 2, 3, 8] {
+            let pool = WorkerPool::new(threads);
+            let out = pool.run_indexed(17, |i| i * i);
+            assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_oversized_budgets() {
+        let pool = WorkerPool::new(8);
+        assert!(pool.run_indexed(0, |i| i).is_empty());
+        assert_eq!(pool.run_indexed(1, |i| i + 1), vec![1]);
+        assert_eq!(WorkerPool::new(0).threads(), 1, "budget clamps to 1");
+    }
+
+    #[test]
+    fn fallible_jobs_compose_with_results() {
+        let pool = WorkerPool::new(4);
+        let out: anyhow::Result<Vec<usize>> =
+            pool.run_indexed(9, |i| anyhow::Ok(i * 2)).into_iter().collect();
+        assert_eq!(out.unwrap(), (0..9).map(|i| i * 2).collect::<Vec<_>>());
+        let bad: anyhow::Result<Vec<usize>> = pool
+            .run_indexed(9, |i| if i == 5 { anyhow::bail!("boom") } else { Ok(i) })
+            .into_iter()
+            .collect();
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn parallelism_parse_and_clamp() {
+        assert_eq!(Parallelism::parse_opt("").unwrap(), None);
+        assert_eq!(Parallelism::parse_opt("auto").unwrap(), None);
+        assert_eq!(Parallelism::parse_opt("0").unwrap(), None);
+        assert_eq!(Parallelism::parse_opt("4").unwrap(), Some(Parallelism::new(4)));
+        assert!(Parallelism::parse_opt("four").is_err());
+        assert_eq!(Parallelism::new(0).get(), 1);
+        assert!(Parallelism::auto().get() >= 1);
+        assert_eq!(Parallelism::resolve(Some(Parallelism::new(3))).unwrap().get(), 3);
+    }
+}

@@ -3,17 +3,21 @@
 //! * The same `JobSpec` + seed through two freshly-opened `Coordinator`s
 //!   yields byte-identical `JobReport` JSON (wall-clock `secs` zeroed —
 //!   the only intentionally non-deterministic field).
+//! * The reference backend's parallel eval path is **byte-identical** to
+//!   the serial interpreter at every thread count — both at the
+//!   `eval_config` level and for whole search `JobReport`s.
 //! * With `AUTOQ_REQUIRE_ARTIFACTS=1` (the opt-in PJRT lane), the
-//!   reference interpreter and the PJRT backend agree on eval
-//!   accuracy/loss within tolerance for identical parameters.
+//!   reference interpreter and the PJRT backend agree within tolerance
+//!   for identical inputs on eval, `train_step` and the DDPG update.
 
 use std::path::{Path, PathBuf};
 
+use autoq::agent::{DdpgAgent, DdpgHyper, ReplayBuffer, Transition};
 use autoq::coordinator::{Coordinator, JobSpec};
 use autoq::cost::Mode;
 use autoq::data::synth::{Split, SynthDataset};
 use autoq::models::{ModelRunner, ParamStore};
-use autoq::runtime::{BackendKind, Runtime};
+use autoq::runtime::{BackendKind, Parallelism, Runtime};
 use autoq::search::{Granularity, Protocol};
 use autoq::util::rng::Rng;
 
@@ -78,6 +82,89 @@ fn pretrain_then_eval_is_deterministic_across_coordinators() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The parallel eval path must be *byte*-identical to the serial
+/// interpreter: same params + data through runtimes at 1/2/4 threads give
+/// `EvalResult`s whose f64 bit patterns match exactly.
+#[test]
+fn reference_eval_is_byte_identical_across_thread_counts() {
+    let dir = temp_dir("par_eval");
+    let data = SynthDataset::new(42);
+    let mut results = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let mut rt = Runtime::open_with_opts(
+            &dir,
+            BackendKind::Reference,
+            Some(Parallelism::new(threads)),
+        )
+        .unwrap();
+        assert_eq!(rt.parallelism(), threads);
+        let meta = rt.manifest.model("cif10").unwrap().clone();
+        let params = ParamStore::init(&meta.params, &mut Rng::new(42));
+        let wbits = vec![5u8; meta.w_channels];
+        let abits = vec![4u8; meta.a_channels];
+        let runner = ModelRunner::new(meta, params).unwrap();
+        let res = runner
+            .eval_config(&mut rt, Mode::Quant, &wbits, &abits, &data, Split::Val, 3)
+            .unwrap();
+        results.push(res);
+    }
+    for res in &results[1..] {
+        assert_eq!(
+            res.accuracy.to_bits(),
+            results[0].accuracy.to_bits(),
+            "accuracy diverged: {} vs {}",
+            res.accuracy,
+            results[0].accuracy
+        );
+        assert_eq!(
+            res.loss.to_bits(),
+            results[0].loss.to_bits(),
+            "loss diverged: {} vs {}",
+            res.loss,
+            results[0].loss
+        );
+        assert_eq!(res.images, results[0].images);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Whole-job determinism across thread counts: a search `JobReport` (which
+/// funnels every episode through the parallel eval path) serializes to the
+/// same bytes at 1 and 3 threads.
+#[test]
+fn search_report_is_byte_identical_across_thread_counts() {
+    let dir = temp_dir("par_search");
+    {
+        let mut coord = Coordinator::open_with(&dir, Some(BackendKind::Reference)).unwrap();
+        let spec = JobSpec::pretrain("cif10").steps(3).build().unwrap();
+        coord.run(&spec).unwrap();
+    }
+    let spec = JobSpec::search("cif10")
+        .mode(Mode::Quant)
+        .protocol(Protocol::resource_constrained(5.0))
+        .granularity(Granularity::Channel)
+        .episodes(2)
+        .warmup(1)
+        .eval_batches(2)
+        .seed(9)
+        .build()
+        .unwrap();
+    let mut jsons = Vec::new();
+    for threads in [1usize, 3] {
+        let mut coord = Coordinator::open_with_opts(
+            &dir,
+            Some(BackendKind::Reference),
+            Some(Parallelism::new(threads)),
+        )
+        .unwrap();
+        let mut report = coord.run(&spec).unwrap();
+        report.secs = 0.0;
+        jsons.push(report.to_json().to_string());
+    }
+    assert_eq!(jsons[0], jsons[1], "thread count leaked into the JobReport");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// Cross-backend numerics smoke test (opt-in lane): identical params →
 /// eval accuracy/loss agree between the reference interpreter and PJRT
 /// within float-reassociation tolerance.
@@ -122,5 +209,117 @@ fn cross_backend_eval_accuracy_agrees() {
             a.loss,
             b.loss
         );
+    }
+}
+
+/// Cross-backend `train_step` agreement (opt-in PJRT lane): one SGD step
+/// from identical params yields matching losses and parameters that stay
+/// within float-reassociation tolerance elementwise.
+#[test]
+fn cross_backend_train_step_agrees() {
+    if std::env::var("AUTOQ_REQUIRE_ARTIFACTS").is_err() {
+        return; // PJRT lane not requested; reference-only CI stays green
+    }
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut rt_ref = Runtime::open_with(&dir, BackendKind::Reference).unwrap();
+    let mut rt_pjrt = Runtime::open_with(&dir, BackendKind::Pjrt).unwrap();
+
+    let meta_ref = rt_ref.manifest.model("cif10").unwrap().clone();
+    let meta_pjrt = rt_pjrt.manifest.model("cif10").unwrap().clone();
+    let params = ParamStore::init(&meta_ref.params, &mut Rng::new(42));
+    let mut runner_ref = ModelRunner::new(meta_ref, params.clone()).unwrap();
+    let mut runner_pjrt = ModelRunner::new(meta_pjrt, params).unwrap();
+
+    let data = SynthDataset::new(42);
+    let wbits = vec![6u8; runner_ref.meta.w_channels];
+    let abits = vec![5u8; runner_ref.meta.a_channels];
+    let batch = data.batch(Split::Train, 0, runner_ref.meta.train_batch);
+    for step in 0..2u64 {
+        let l_ref = runner_ref
+            .train_step(&mut rt_ref, Mode::Quant, &batch, &wbits, &abits, 0.01)
+            .unwrap();
+        let l_pjrt = runner_pjrt
+            .train_step(&mut rt_pjrt, Mode::Quant, &batch, &wbits, &abits, 0.01)
+            .unwrap();
+        assert!(
+            (l_ref - l_pjrt).abs() <= 0.05 * (1.0 + l_pjrt.abs()),
+            "step {step} loss diverged: reference {l_ref} vs pjrt {l_pjrt}"
+        );
+    }
+    for (i, (a, b)) in runner_ref
+        .params
+        .tensors
+        .iter()
+        .zip(&runner_pjrt.params.tensors)
+        .enumerate()
+    {
+        let max_diff = a
+            .data
+            .iter()
+            .zip(&b.data)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff <= 1e-2, "param {i} diverged after 2 steps: max |Δ| = {max_diff}");
+    }
+}
+
+/// Cross-backend DDPG update agreement (opt-in PJRT lane): same-seeded
+/// agents fed the same replay sample stay within tolerance on losses and
+/// on the post-update policy.
+#[test]
+fn cross_backend_ddpg_update_agrees() {
+    if std::env::var("AUTOQ_REQUIRE_ARTIFACTS").is_err() {
+        return; // PJRT lane not requested; reference-only CI stays green
+    }
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut rt_ref = Runtime::open_with(&dir, BackendKind::Reference).unwrap();
+    let mut rt_pjrt = Runtime::open_with(&dir, BackendKind::Pjrt).unwrap();
+
+    let meta_ref = rt_ref.manifest.agent(16).unwrap().clone();
+    let meta_pjrt = rt_pjrt.manifest.agent(16).unwrap().clone();
+    let s_dim = meta_ref.s_dim;
+    let upd_batch = meta_ref.upd_batch;
+    let mut ag_ref = DdpgAgent::new(meta_ref, DdpgHyper::default(), &mut Rng::new(7));
+    let mut ag_pjrt = DdpgAgent::new(meta_pjrt, DdpgHyper::default(), &mut Rng::new(7));
+
+    // Identical replay contents on both sides.
+    let mut replay_rng = Rng::new(11);
+    let mut replay = ReplayBuffer::new(2 * upd_batch);
+    for _ in 0..2 * upd_batch {
+        let s: Vec<f32> = (0..s_dim).map(|_| replay_rng.f32()).collect();
+        let s2: Vec<f32> = (0..s_dim).map(|_| replay_rng.f32()).collect();
+        replay.push(Transition {
+            s,
+            a: replay_rng.f32() * 32.0,
+            r: replay_rng.f32() - 0.5,
+            s2,
+            done: replay_rng.below(8) == 0,
+        });
+    }
+    // Same sampling seed → the update sees the same minibatch.
+    ag_ref.update(&mut rt_ref, &replay, &mut Rng::new(13)).unwrap();
+    ag_pjrt.update(&mut rt_pjrt, &replay, &mut Rng::new(13)).unwrap();
+    assert!(
+        (ag_ref.last_critic_loss - ag_pjrt.last_critic_loss).abs()
+            <= 0.05 * (1.0 + ag_pjrt.last_critic_loss.abs()),
+        "critic loss diverged: reference {} vs pjrt {}",
+        ag_ref.last_critic_loss,
+        ag_pjrt.last_critic_loss
+    );
+    assert!(
+        (ag_ref.last_actor_loss - ag_pjrt.last_actor_loss).abs()
+            <= 0.05 * (1.0 + ag_pjrt.last_actor_loss.abs()),
+        "actor loss diverged: reference {} vs pjrt {}",
+        ag_ref.last_actor_loss,
+        ag_pjrt.last_actor_loss
+    );
+    // The updated policies must agree on fresh states.
+    let mut state_rng = Rng::new(17);
+    let n = 4;
+    let states: Vec<f32> = (0..n * s_dim).map(|_| state_rng.f32()).collect();
+    let mu_ref = ag_ref.act(&mut rt_ref, &states, n).unwrap();
+    let mu_pjrt = ag_pjrt.act(&mut rt_pjrt, &states, n).unwrap();
+    for (i, (a, b)) in mu_ref.iter().zip(&mu_pjrt).enumerate() {
+        assert!((a - b).abs() <= 0.05 * (1.0 + b.abs()), "action {i}: {a} vs {b}");
     }
 }

@@ -1,12 +1,14 @@
 //! Property tests over the deterministic substrate (`util::prop::forall`):
 //! FPGA-simulator conservation laws, latency/energy monotonicity in the
-//! bit-widths, and bit-config persistence round-trips (JSON `SavedConfig`
-//! vs the §3.4 6-bit packed form).
+//! bit-widths, bit-config persistence round-trips (JSON `SavedConfig`
+//! vs the §3.4 6-bit packed form), and bit-exactness of the blocked
+//! matmul kernels against their naive references.
 
 use autoq::cost::logic::model_cost;
 use autoq::cost::Mode;
 use autoq::models::storage::{pack6, unpack6};
 use autoq::quant::{load_config, save_config};
+use autoq::runtime::reference::kernels;
 use autoq::runtime::LayerMeta;
 use autoq::search::{EpisodeOutcome, LayerBits};
 use autoq::sim::{Arch, FpgaSim};
@@ -188,6 +190,77 @@ fn prop_saved_config_json_and_packed_form_agree() {
             out
         },
     );
+}
+
+/// Random matmul shape straddling the kernel tile sizes: mostly small
+/// (edge tiles narrower than one block), with dimensions beyond one and
+/// two blocks mixed in so every pack/dispatch path runs.
+fn gen_matmul_case(r: &mut Rng) -> (usize, usize, usize, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let dim = |r: &mut Rng, block: usize| match r.below(4) {
+        0 => 1 + r.below(7),             // far below one tile
+        1 => block - 2 + r.below(5),     // straddling the tile edge
+        2 => block + 1 + r.below(block), // between one and two tiles
+        _ => 2 * block + 1 + r.below(9), // beyond two tiles
+    };
+    let m = 1 + r.below(16); // small m keeps the per-case flop budget down
+    let k = dim(r, kernels::KC);
+    let n = dim(r, kernels::NC); // arm 3 reaches 3+ column panels (> 2·NC)
+    let mut a = vec![0.0f32; m * k];
+    let mut b = vec![0.0f32; k * n];
+    let mut c0 = vec![0.0f32; m * n];
+    r.fill_normal_f32(&mut a, 1.0);
+    r.fill_normal_f32(&mut b, 1.0);
+    r.fill_normal_f32(&mut c0, 0.5); // nonzero accumulator exercises +=
+    (m, k, n, a, b, c0)
+}
+
+#[test]
+fn prop_blocked_matmul_bit_exact_vs_naive() {
+    // The packed, cache-blocked kernels must agree with the naive triple
+    // loop to the last bit on every shape — including edge tiles smaller
+    // than one block — or parallel/serial byte-identity collapses.
+    forall_ns(105, gen_matmul_case, |(m, k, n, a, b, c0)| {
+        let (m, k, n) = (*m, *k, *n);
+        let mut c_blocked = c0.clone();
+        let mut c_naive = c0.clone();
+        kernels::matmul_acc(&mut c_blocked, a, b, m, k, n);
+        kernels::naive::matmul_acc(&mut c_naive, a, b, m, k, n);
+        for (i, (x, y)) in c_blocked.iter().zip(&c_naive).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("matmul_acc ({m},{k},{n}) elem {i}: {x} vs {y}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_blocked_transpose_matmuls_bit_exact_vs_naive() {
+    // Same contract for the training-path contractions: aᵀ@b accumulation
+    // and a@bᵀ (shape roles reinterpreted from the generated case).
+    forall_ns(106, gen_matmul_case, |(m, k, n, a, b, c0)| {
+        let (m, k, n) = (*m, *k, *n);
+        // aᵀ @ b: a is (k, m) here, b is (k, n), c (m, n).
+        let mut c_blocked = c0.clone();
+        let mut c_naive = c0.clone();
+        kernels::matmul_at_b_acc(&mut c_blocked, a, b, k, m, n);
+        kernels::naive::matmul_at_b_acc(&mut c_naive, a, b, k, m, n);
+        for (i, (x, y)) in c_blocked.iter().zip(&c_naive).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("at_b_acc ({k},{m},{n}) elem {i}: {x} vs {y}"));
+            }
+        }
+        // a @ bᵀ: a is (m, k), b is (n, k) — reuse b by reading it as rows.
+        let bt = &b[..n * k];
+        let c_blocked = kernels::matmul_a_bt(a, bt, m, k, n);
+        let c_naive = kernels::naive::matmul_a_bt(a, bt, m, k, n);
+        for (i, (x, y)) in c_blocked.iter().zip(&c_naive).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("a_bt ({m},{k},{n}) elem {i}: {x} vs {y}"));
+            }
+        }
+        Ok(())
+    });
 }
 
 #[test]
