@@ -3,11 +3,15 @@
 //! The search hot path: `eval_config` scores a candidate per-channel bit
 //! assignment on held-out validation batches via `{model}_eval_{mode}`
 //! (whose quantize/binarize inner loops are the L1 Pallas kernels on the
-//! PJRT backend, and the `runtime::reference` interpreter otherwise).
-//! All validation batches are built up front and dispatched through the
-//! runtime's batch seam, so the reference backend fans them across its
-//! worker pool; parameter `Value`s are cached on the runner and borrowed
-//! per dispatch instead of re-cloning every tensor per call (§Perf).
+//! PJRT backend, and the `runtime::reference` planned execution engine
+//! otherwise).  All validation batches are built up front and dispatched
+//! through the runtime's batch seam, so the reference backend fans them
+//! across its worker pool, each worker replaying the compiled
+//! `ExecutionPlan` against its reused `Workspace` — steady-state batches
+//! allocate no intermediate buffers (`tests/plan_engine.rs` pins this via
+//! `Runtime::scratch_stats`).  Parameter `Value`s are cached on the
+//! runner and borrowed per dispatch instead of re-cloning every tensor
+//! per call (§Perf).
 
 use std::cell::{Ref, RefCell};
 

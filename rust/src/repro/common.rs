@@ -2,14 +2,16 @@
 //! `repro fig9` can reuse the searches `repro table2` ran), report sinks,
 //! and the coordinator-backed search-or-load entry point.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use crate::coordinator::{Coordinator, JobOutcome, JobSpec};
 use crate::cost::Mode;
 use crate::data::synth::SynthDataset;
 use crate::models::ModelRunner;
 use crate::quant::{load_config, save_config, SavedConfig};
+use crate::runtime::{BackendKind, Parallelism};
 use crate::search::{run_search, Granularity, Protocol, SearchConfig, SearchResult};
+use crate::util::pool::WorkerPool;
 
 pub fn reports_dir() -> PathBuf {
     let d = PathBuf::from("reports");
@@ -49,6 +51,13 @@ pub struct ReproCtx {
     pub seed: u64,
     pub fresh: bool,
     pub paper_scale: bool,
+    /// Outer workers for the per-cell fine-tune fan-out (`--workers`).
+    pub workers: usize,
+    /// Backend each fine-tune worker opens (`--backend`).
+    pub backend: Option<BackendKind>,
+    /// Inner eval threads per worker (`--threads`; `None` = split the
+    /// machine budget evenly across workers, the `Sweep` rule).
+    pub threads: Option<Parallelism>,
 }
 
 impl Default for ReproCtx {
@@ -61,6 +70,9 @@ impl Default for ReproCtx {
             seed: 1,
             fresh: false,
             paper_scale: false,
+            workers: 2,
+            backend: None,
+            threads: None,
         }
     }
 }
@@ -152,4 +164,47 @@ pub fn finetuned_accuracy(
     let rep = crate::finetune::train(c.runtime(), &mut runner, &data, &tc)?;
     // Fine-tuning can only help; guard against a regression run.
     Ok(rep.final_eval.accuracy.max(saved.accuracy))
+}
+
+/// Fine-tune many searched cells in parallel — the `Sweep` worker scheme
+/// routed through `util::pool`: outer per-cell workers each own a
+/// `Coordinator` (built inside the worker thread and reused across every
+/// cell that worker processes), inner eval threads get an even share of
+/// the machine budget unless `ctx.threads` pins one, so the fan-out never
+/// oversubscribes cores.  Each cell's fine-tune is deterministic given the
+/// persisted pre-trained params (callers run the searches first, which
+/// persists them), so results in cell order are identical to a serial
+/// `finetuned_accuracy` loop at any worker count.
+pub fn finetuned_accuracies(
+    dir: &Path,
+    cells: &[(String, SavedConfig)],
+    ctx: &ReproCtx,
+) -> anyhow::Result<Vec<f64>> {
+    if cells.is_empty() {
+        return Ok(Vec::new());
+    }
+    if ctx.finetune_steps == 0 {
+        return Ok(cells.iter().map(|(_, saved)| saved.accuracy).collect());
+    }
+    let workers = ctx.workers.max(1).min(cells.len());
+    let inner = match ctx.threads {
+        Some(p) => p,
+        None => Parallelism::new(Parallelism::resolve(None)?.get() / workers),
+    };
+    crate::info!(
+        "repro: fine-tuning {} cell(s) on {workers} worker(s) × {} eval thread(s)",
+        cells.len(),
+        inner.get()
+    );
+    let pool = WorkerPool::new(workers);
+    let backend = ctx.backend;
+    let results: Vec<anyhow::Result<f64>> = pool.run_indexed_with(
+        cells.len(),
+        || Coordinator::open_with_opts(dir, backend, Some(inner)),
+        |coord, i| match coord {
+            Ok(c) => finetuned_accuracy(c, &cells[i].0, &cells[i].1, ctx),
+            Err(e) => Err(anyhow::anyhow!("fine-tune worker failed to open runtime: {e:#}")),
+        },
+    );
+    results.into_iter().collect()
 }

@@ -20,11 +20,14 @@ pub fn cmd_repro(rest: &[String]) -> anyhow::Result<()> {
         .opt("models", "cif10", "comma-separated models for table2/3")
         .opt("runs", "3", "independent runs for fig8")
         .opt("seed", "1", "base seed")
+        .opt("workers", "2", "parallel per-cell fine-tune workers for table rows")
         .opt("backend", "", "pjrt|reference (default: $AUTOQ_BACKEND, else auto)")
-        .opt("threads", "", "eval worker threads (default: $AUTOQ_THREADS, else all cores)")
+        .opt("threads", "", "eval threads per worker (default: split cores across workers)")
         .flag("fresh", "ignore cached searched configs")
         .flag("paper-scale", "paper's 400-episode schedule")
         .parse(rest)?;
+    let backend = crate::runtime::BackendKind::parse_opt(&a.get("backend"))?;
+    let threads = crate::runtime::Parallelism::parse_opt(&a.get("threads"))?;
     let ctx = ReproCtx {
         episodes: a.get_usize("episodes")?,
         warmup: a.get_usize("warmup")?,
@@ -33,13 +36,13 @@ pub fn cmd_repro(rest: &[String]) -> anyhow::Result<()> {
         seed: a.get_u64("seed")?,
         fresh: a.get_bool("fresh"),
         paper_scale: a.get_bool("paper-scale"),
+        workers: a.get_usize("workers")?,
+        backend,
+        threads,
     };
     let models: Vec<String> = a.get("models").split(',').map(str::to_string).collect();
     let what = a.positional.first().cloned().unwrap_or_else(|| "help".into());
     let runs = a.get_usize("runs")?;
-
-    let backend = crate::runtime::BackendKind::parse_opt(&a.get("backend"))?;
-    let threads = crate::runtime::Parallelism::parse_opt(&a.get("threads"))?;
     let mut coord = crate::coordinator::Coordinator::open_with_opts(
         &crate::coordinator::Coordinator::default_dir(),
         backend,

@@ -5,12 +5,53 @@ use crate::coordinator::Coordinator;
 use crate::cost::logic::model_cost;
 use crate::cost::Mode;
 use crate::data::synth::{Split, SynthDataset};
-use crate::repro::common::{finetuned_accuracy, search_or_cached, Report, ReproCtx};
+use crate::quant::SavedConfig;
+use crate::repro::common::{finetuned_accuracies, search_or_cached, Report, ReproCtx};
 use crate::search::{Granularity, Protocol};
 
+const TABLE_GRANS: [Granularity; 3] =
+    [Granularity::Network(5), Granularity::Layer, Granularity::Channel];
+
+fn table_protocols() -> [Protocol; 2] {
+    [Protocol::resource_constrained(5.0), Protocol::accuracy_guaranteed()]
+}
+
 /// Tables 2 (quant) / 3 (binar): F / N / L / C rows × RC / AG protocols.
-pub fn table(c: &mut Coordinator, mode: Mode, models: &[String], ctx: &ReproCtx) -> anyhow::Result<()> {
+///
+/// Two phases: the searches run first (cache-backed, serial, through the
+/// shared coordinator — this also persists every model's pre-trained
+/// params), then every cell's fine-tune fans out across `ctx.workers`
+/// pool workers à la `Sweep`.  Results are identical to the old serial
+/// loop at any worker count — each cell is deterministic in isolation.
+pub fn table(
+    c: &mut Coordinator,
+    mode: Mode,
+    models: &[String],
+    ctx: &ReproCtx,
+) -> anyhow::Result<()> {
     let tid = if mode == Mode::Quant { "table2" } else { "table3" };
+
+    // Phase 1 — fp32 reference rows + searched configs, grid order.
+    let mut fp_accs: Vec<f64> = Vec::with_capacity(models.len());
+    let mut cells: Vec<(String, SavedConfig)> = Vec::new();
+    for model in models {
+        let runner = c.fresh_runner(model)?;
+        let data = SynthDataset::new(42);
+        let fp = runner.eval_fp32(c.runtime(), &data, Split::Val, ctx.eval_batches)?;
+        fp_accs.push(fp.accuracy);
+        for gran in TABLE_GRANS {
+            for protocol in table_protocols() {
+                let saved = search_or_cached(c, model, mode, protocol, gran, ctx)?;
+                cells.push((model.clone(), saved));
+            }
+        }
+    }
+
+    // Phase 2 — per-cell fine-tunes across the worker pool.
+    let dir = c.dir().to_path_buf();
+    let accs = finetuned_accuracies(&dir, &cells, ctx)?;
+
+    // Phase 3 — emit the report rows in grid order.
     let mut rep = Report::new(tid);
     rep.line(format!(
         "Table {} — Network {} by AutoQ (this testbed; synthetic 10-class data)",
@@ -23,26 +64,24 @@ pub fn table(c: &mut Coordinator, mode: Mode, models: &[String], ctx: &ReproCtx)
         "model", "RC err%", "actQ", "weiQ", "AG err%", "actQ", "weiQ"
     ));
     rep.line("-".repeat(62));
-
-    for model in models {
-        let runner = c.fresh_runner(model)?;
-        let data = SynthDataset::new(42);
-        let fp = runner.eval_fp32(c.runtime(), &data, Split::Val, ctx.eval_batches)?;
+    let mut ci = 0usize;
+    for (model, &fp_acc) in models.iter().zip(&fp_accs) {
         rep.line(format!(
             "{:<10} | {:>8.2} {:>6} {:>6} | {:>8.2} {:>6} {:>6}",
             format!("{model}-F"),
-            (1.0 - fp.accuracy) * 100.0,
+            (1.0 - fp_acc) * 100.0,
             "-",
             "-",
-            (1.0 - fp.accuracy) * 100.0,
+            (1.0 - fp_acc) * 100.0,
             "-",
             "-"
         ));
-        for gran in [Granularity::Network(5), Granularity::Layer, Granularity::Channel] {
+        for gran in TABLE_GRANS {
             let mut row = vec![format!("{model}-{}", gran.tag())];
-            for protocol in [Protocol::resource_constrained(5.0), Protocol::accuracy_guaranteed()] {
-                let saved = search_or_cached(c, model, mode, protocol, gran, ctx)?;
-                let acc = finetuned_accuracy(c, model, &saved, ctx)?;
+            for _protocol in table_protocols() {
+                let (_, saved) = &cells[ci];
+                let acc = accs[ci];
+                ci += 1;
                 let meta = c.manifest().model(model)?.clone();
                 let avg = |bits: &[u8]| {
                     bits.iter().map(|&b| b as f64).sum::<f64>() / bits.len() as f64
@@ -64,54 +103,44 @@ pub fn table(c: &mut Coordinator, mode: Mode, models: &[String], ctx: &ReproCtx)
 }
 
 /// Table 4: AutoQ vs ReLeQ / AMC / HAQ (ΔAcc and normalized logic ops).
+/// Same two-phase shape as [`table`]: searches first, then all six
+/// fine-tunes (baseline + AutoQ per row) across the worker pool.
 pub fn table4(c: &mut Coordinator, ctx: &ReproCtx) -> anyhow::Result<()> {
-    let mut rep = Report::new("table4");
-    rep.line("Table 4 — Comparison against ReLeQ, AMC and HAQ (this testbed)");
-    rep.line("ΔAcc = searched-and-finetuned accuracy − full-precision accuracy");
-    rep.line(format!(
-        "{:<10} {:<10} {:<10} {:>8} {:>12}",
-        "dataset", "model", "scheme", "ΔAcc%", "norm.logic%"
-    ));
-    rep.line("-".repeat(56));
-
     // Pairings mirror the paper (Res50→res18 substitute — DESIGN.md).
-    let cells: Vec<(&str, BaselinePolicy)> = vec![
+    let pairings: Vec<(&str, BaselinePolicy)> = vec![
         ("cif10", BaselinePolicy::Releq),
         ("res18", BaselinePolicy::Amc),
         ("monet", BaselinePolicy::Haq),
     ];
-    for (model, policy) in cells {
+
+    // Phase 1 — fp32 reference + baseline & AutoQ searches per pairing.
+    let mut fp_accs: Vec<f64> = Vec::new();
+    let mut norm_logic: Vec<(f64, f64)> = Vec::new(); // (baseline, autoq)
+    let mut cells: Vec<(String, SavedConfig)> = Vec::new();
+    for (model, policy) in &pairings {
         let runner = c.fresh_runner(model)?;
         let data = SynthDataset::new(42);
         let fp = runner.eval_fp32(c.runtime(), &data, Split::Val, ctx.eval_batches)?;
+        fp_accs.push(fp.accuracy);
         // Baseline search (AG / FLOP protocol per the original papers).
         let protocol = match policy {
             BaselinePolicy::Amc => Protocol::flop_reward(),
             _ => Protocol::accuracy_guaranteed(),
         };
-        let mut bcfg = BaselineConfig::quick(policy, Mode::Quant, protocol);
+        let mut bcfg = BaselineConfig::quick(*policy, Mode::Quant, protocol);
         bcfg.episodes = ctx.episodes;
         bcfg.warmup = ctx.warmup;
         bcfg.eval_batches = ctx.eval_batches;
         bcfg.seed = ctx.seed;
         let bres = run_baseline(c.runtime(), &runner, &data, &bcfg)?;
-        let bsaved = crate::quant::SavedConfig {
-            model: model.into(),
+        let bsaved = SavedConfig {
+            model: (*model).into(),
             mode: Mode::Quant,
             wbits: bres.best.wbits.clone(),
             abits: bres.best.abits.clone(),
             accuracy: bres.best.accuracy,
             score: bres.best.score,
         };
-        let bacc = finetuned_accuracy(c, model, &bsaved, ctx)?;
-        rep.line(format!(
-            "{:<10} {:<10} {:<10} {:>8.2} {:>12.2}",
-            "synth10",
-            model,
-            policy.name(),
-            (bacc - fp.accuracy) * 100.0,
-            bres.best.cost.norm_logic() * 100.0
-        ));
         // AutoQ channel-level AG on the same cell.
         let saved = search_or_cached(
             c,
@@ -121,16 +150,44 @@ pub fn table4(c: &mut Coordinator, ctx: &ReproCtx) -> anyhow::Result<()> {
             Granularity::Channel,
             ctx,
         )?;
-        let acc = finetuned_accuracy(c, model, &saved, ctx)?;
         let meta = c.manifest().model(model)?.clone();
         let cost = model_cost(&meta.layers, &saved.wbits, &saved.abits);
+        norm_logic.push((bres.best.cost.norm_logic(), cost.norm_logic()));
+        cells.push(((*model).to_string(), bsaved));
+        cells.push(((*model).to_string(), saved));
+    }
+
+    // Phase 2 — all fine-tunes (2 per pairing) across the worker pool.
+    let dir = c.dir().to_path_buf();
+    let accs = finetuned_accuracies(&dir, &cells, ctx)?;
+
+    // Phase 3 — rows.
+    let mut rep = Report::new("table4");
+    rep.line("Table 4 — Comparison against ReLeQ, AMC and HAQ (this testbed)");
+    rep.line("ΔAcc = searched-and-finetuned accuracy − full-precision accuracy");
+    rep.line(format!(
+        "{:<10} {:<10} {:<10} {:>8} {:>12}",
+        "dataset", "model", "scheme", "ΔAcc%", "norm.logic%"
+    ));
+    rep.line("-".repeat(56));
+    for (i, (model, policy)) in pairings.iter().enumerate() {
+        let fp_acc = fp_accs[i];
+        let (b_logic, a_logic) = norm_logic[i];
+        rep.line(format!(
+            "{:<10} {:<10} {:<10} {:>8.2} {:>12.2}",
+            "synth10",
+            model,
+            policy.name(),
+            (accs[2 * i] - fp_acc) * 100.0,
+            b_logic * 100.0
+        ));
         rep.line(format!(
             "{:<10} {:<10} {:<10} {:>8.2} {:>12.2}",
             "synth10",
             model,
             "AutoQ",
-            (acc - fp.accuracy) * 100.0,
-            cost.norm_logic() * 100.0
+            (accs[2 * i + 1] - fp_acc) * 100.0,
+            a_logic * 100.0
         ));
     }
     let p = rep.finish()?;

@@ -18,6 +18,20 @@ use std::path::Path;
 use crate::runtime::manifest::{ArtifactSpec, Manifest};
 use crate::runtime::value::Value;
 
+/// Resident scratch owned by an executable's planned-execution engine —
+/// the workspace-reuse regression guard reads this through
+/// `Runtime::scratch_stats` to assert steady-state dispatches allocate
+/// nothing new.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ScratchStats {
+    /// Workspaces ever created (≤ peak concurrent workers).
+    pub workspaces: usize,
+    /// Total resident f32 elements across those workspaces.
+    pub f32_len: usize,
+    /// Total resident u32 elements (pool argmax tapes).
+    pub u32_len: usize,
+}
+
 /// One compiled/loaded artifact, ready to dispatch.
 pub trait Executable {
     /// Run on host values; returns the decomposed output tuple in manifest
@@ -32,6 +46,14 @@ pub trait Executable {
     /// see `util::pool` and `tests/determinism.rs`).
     fn execute_batch(&mut self, batches: &[Vec<&Value>]) -> anyhow::Result<Vec<Vec<Value>>> {
         batches.iter().map(|b| self.execute(b)).collect()
+    }
+
+    /// Resident planned-execution scratch, when this executable keeps any
+    /// (`None` for backends without a workspace engine, e.g. PJRT).
+    /// Quiescent between dispatches by contract: all workspaces are
+    /// checked back in whenever no dispatch is in flight.
+    fn scratch_stats(&self) -> Option<ScratchStats> {
+        None
     }
 }
 

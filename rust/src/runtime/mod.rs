@@ -16,7 +16,7 @@ pub mod reference;
 pub mod tensor;
 pub mod value;
 
-pub use backend::{Backend, BackendKind, Executable};
+pub use backend::{Backend, BackendKind, Executable, ScratchStats};
 pub use manifest::{AgentMeta, ArtifactSpec, LayerMeta, Manifest, ModelMeta, ParamSpec, TensorSpec};
 pub use tensor::Tensor;
 pub use value::Value;
@@ -206,6 +206,14 @@ impl Runtime {
 
     pub fn stats(&self) -> &HashMap<String, ExecStats> {
         &self.stats
+    }
+
+    /// Resident planned-execution scratch of a loaded executable (`None`
+    /// when `name` isn't loaded or its backend keeps no workspaces).  The
+    /// workspace-reuse regression test reads this through `eval_config` to
+    /// assert zero steady-state allocation growth.
+    pub fn scratch_stats(&self, name: &str) -> Option<backend::ScratchStats> {
+        self.cache.get(name).and_then(|e| e.scratch_stats())
     }
 
     pub fn stats_report(&self) -> String {

@@ -3,9 +3,22 @@
 //! `python/compile/agent.py`: 2×300-unit ReLU hidden layers, sigmoid·32
 //! actor head, fused TD(0) critic + deterministic-policy-gradient actor
 //! update with Adam for both and τ-soft target updates.
+//!
+//! Both executables run through the planned-execution machinery
+//! (`plan.rs`): the fixed MLP dataflow compiles at build time into a
+//! [`Planner`]-assigned slot layout (released slots are recycled across
+//! the update's three forward / three backward passes), and dispatch
+//! executes against one reusable [`Workspace`] — steady-state calls
+//! allocate only the returned output tensors.  The arithmetic and its
+//! ordering are exactly the PR 3 walk's; skipping the walk's *discarded*
+//! results (target-net hidden caches it never reread, input-gradients it
+//! dropped, the 6 full parameter-set clones per call) is output-invariant.
 
-use crate::runtime::backend::Executable;
-use crate::runtime::reference::nn::{matmul_a_bt, matmul_at_b_acc, relu_bwd};
+use crate::runtime::backend::{Executable, ScratchStats};
+use crate::runtime::reference::nn::{
+    matmul_a_bt_into, matmul_acc_scratch, matmul_at_b_acc, matmul_panel_len, relu, relu_bwd,
+};
+use crate::runtime::reference::plan::{Planner, Slot, Workspace};
 use crate::runtime::reference::zoo::ACTION_SCALE;
 use crate::runtime::tensor::Tensor;
 use crate::runtime::value::Value;
@@ -44,41 +57,54 @@ impl<'a> Mlp<'a> {
     fn hidden(&self) -> usize {
         self.w1.shape[1]
     }
+
+    /// Parameter element counts, [w1, b1, w2, b2, w3, b3] order.
+    fn lens(&self) -> [usize; 6] {
+        [
+            self.w1.data.len(),
+            self.b1.data.len(),
+            self.w2.data.len(),
+            self.b2.data.len(),
+            self.w3.data.len(),
+            self.b3.data.len(),
+        ]
+    }
 }
 
-/// Forward cache for the backward pass: post-ReLU hiddens + linear output.
-struct MlpCache {
-    h1: Vec<f32>,
-    h2: Vec<f32>,
-    /// z = h2·w3 + b3, pre-head (B, 1).
-    z: Vec<f32>,
+/// Matmul packing scratch one MLP forward needs (max over its two
+/// hidden-layer contractions).
+fn mlp_panel_len(din: usize, h: usize) -> usize {
+    matmul_panel_len(din, h).max(matmul_panel_len(h, h))
 }
 
-/// x (B, in) → z (B, 1); `relu(x·w1+b1) → relu(·w2+b2) → ·w3+b3`.
-fn mlp_forward(p: &Mlp, x: &[f32], b: usize) -> MlpCache {
+/// x (B, in) → z (B, 1) into caller slices (all fully overwritten):
+/// `relu(x·w1+b1) → relu(·w2+b2) → ·w3+b3`.  `panel` is packing scratch
+/// of ≥ [`mlp_panel_len`] elements.
+fn mlp_forward_into(
+    p: &Mlp,
+    x: &[f32],
+    b: usize,
+    h1: &mut [f32],
+    h2: &mut [f32],
+    z: &mut [f32],
+    panel: &mut [f32],
+) {
     let (din, h) = (p.in_dim(), p.hidden());
     debug_assert_eq!(x.len(), b * din);
-    let mut h1 = vec![0.0f32; b * h];
+    debug_assert_eq!(h1.len(), b * h);
+    debug_assert_eq!(h2.len(), b * h);
+    debug_assert_eq!(z.len(), b);
+    debug_assert!(panel.len() >= mlp_panel_len(din, h));
     for i in 0..b {
         h1[i * h..(i + 1) * h].copy_from_slice(&p.b1.data);
     }
-    crate::runtime::reference::nn::matmul_acc(&mut h1, x, &p.w1.data, b, din, h);
-    for v in h1.iter_mut() {
-        if *v < 0.0 {
-            *v = 0.0;
-        }
-    }
-    let mut h2 = vec![0.0f32; b * h];
+    matmul_acc_scratch(h1, x, &p.w1.data, b, din, h, &mut panel[..matmul_panel_len(din, h)]);
+    relu(h1);
     for i in 0..b {
         h2[i * h..(i + 1) * h].copy_from_slice(&p.b2.data);
     }
-    crate::runtime::reference::nn::matmul_acc(&mut h2, &h1, &p.w2.data, b, h, h);
-    for v in h2.iter_mut() {
-        if *v < 0.0 {
-            *v = 0.0;
-        }
-    }
-    let mut z = vec![0.0f32; b];
+    matmul_acc_scratch(h2, h1, &p.w2.data, b, h, h, &mut panel[..matmul_panel_len(h, h)]);
+    relu(h2);
     for i in 0..b {
         let row = &h2[i * h..(i + 1) * h];
         let mut acc = p.b3.data[0];
@@ -87,76 +113,108 @@ fn mlp_forward(p: &Mlp, x: &[f32], b: usize) -> MlpCache {
         }
         z[i] = acc;
     }
-    MlpCache { h1, h2, z }
 }
 
-/// Backward through the MLP given dz (B, 1): returns param grads in
-/// [w1, b1, w2, b2, w3, b3] order plus the input gradient (B, in).
-fn mlp_backward(p: &Mlp, x: &[f32], b: usize, cache: &MlpCache, dz: &[f32]) -> (Vec<Vec<f32>>, Vec<f32>) {
-    let (din, h) = (p.in_dim(), p.hidden());
-    // Head: z = h2·w3 + b3.
-    let mut dw3 = vec![0.0f32; h];
-    let mut db3 = 0.0f32;
-    let mut dh2 = vec![0.0f32; b * h];
-    for i in 0..b {
-        let g = dz[i];
-        db3 += g;
-        let h2row = &cache.h2[i * h..(i + 1) * h];
-        let drow = &mut dh2[i * h..(i + 1) * h];
-        for j in 0..h {
-            dw3[j] += h2row[j] * g;
-            drow[j] = p.w3.data[j] * g;
-        }
-    }
-    relu_bwd(&mut dh2, &cache.h2);
-    // Layer 2: h2 = relu(h1·w2 + b2).
-    let mut dw2 = vec![0.0f32; h * h];
-    matmul_at_b_acc(&mut dw2, &cache.h1, &dh2, b, h, h);
-    let db2 = col_sums(&dh2, b, h);
-    let mut dh1 = matmul_a_bt(&dh2, &p.w2.data, b, h, h);
-    relu_bwd(&mut dh1, &cache.h1);
-    // Layer 1: h1 = relu(x·w1 + b1).
-    let mut dw1 = vec![0.0f32; din * h];
-    matmul_at_b_acc(&mut dw1, x, &dh1, b, din, h);
-    let db1 = col_sums(&dh1, b, h);
-    let dx = matmul_a_bt(&dh1, &p.w1.data, b, h, din);
-    (vec![dw1, db1, dw2, db2, dw3, vec![db3]], dx)
+/// Mutable views of one MLP's six gradient buffers.
+struct MlpGrads<'a> {
+    w1: &'a mut [f32],
+    b1: &'a mut [f32],
+    w2: &'a mut [f32],
+    b2: &'a mut [f32],
+    w3: &'a mut [f32],
+    b3: &'a mut [f32],
 }
 
-fn refs(ts: &[Tensor]) -> Vec<&Tensor> {
-    ts.iter().collect()
-}
-
-fn col_sums(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; cols];
+/// Column sums of x (rows, cols) into `out` (zero-filled first).
+fn col_sums_into(x: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), cols);
+    out.fill(0.0);
     for r in 0..rows {
         for c in 0..cols {
             out[c] += x[r * cols + c];
         }
     }
-    out
+}
+
+/// Backward through the MLP given dz (B, 1): fills `g` with parameter
+/// gradients and (when wanted) `dx` with the input gradient.  `dh1`/`dh2`
+/// are (B, hidden) scratch; `h1`/`h2` are the forward's post-ReLU hiddens.
+#[allow(clippy::too_many_arguments)]
+fn mlp_backward_into(
+    p: &Mlp,
+    x: &[f32],
+    b: usize,
+    h1: &[f32],
+    h2: &[f32],
+    dz: &[f32],
+    dh1: &mut [f32],
+    dh2: &mut [f32],
+    g: &mut MlpGrads<'_>,
+    dx: Option<&mut [f32]>,
+) {
+    let (din, h) = (p.in_dim(), p.hidden());
+    // Head: z = h2·w3 + b3.
+    g.w3.fill(0.0);
+    let mut db3 = 0.0f32;
+    for i in 0..b {
+        let gz = dz[i];
+        db3 += gz;
+        let h2row = &h2[i * h..(i + 1) * h];
+        let drow = &mut dh2[i * h..(i + 1) * h];
+        for j in 0..h {
+            g.w3[j] += h2row[j] * gz;
+            drow[j] = p.w3.data[j] * gz;
+        }
+    }
+    g.b3[0] = db3;
+    relu_bwd(dh2, h2);
+    // Layer 2: h2 = relu(h1·w2 + b2).
+    g.w2.fill(0.0);
+    matmul_at_b_acc(g.w2, h1, dh2, b, h, h);
+    col_sums_into(dh2, b, h, g.b2);
+    matmul_a_bt_into(dh1, dh2, &p.w2.data, b, h, h);
+    relu_bwd(dh1, h1);
+    // Layer 1: h1 = relu(x·w1 + b1).
+    g.w1.fill(0.0);
+    matmul_at_b_acc(g.w1, x, dh1, b, din, h);
+    col_sums_into(dh1, b, h, g.b1);
+    if let Some(dx) = dx {
+        matmul_a_bt_into(dx, dh1, &p.w1.data, b, h, din);
+    }
 }
 
 fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
 }
 
-/// μ(s) = sigmoid(z)·32 for each row; returns (actions, sigmoids).
-fn actor_head(z: &[f32]) -> (Vec<f32>, Vec<f32>) {
-    let sig: Vec<f32> = z.iter().map(|&v| sigmoid(v)).collect();
-    let act: Vec<f32> = sig.iter().map(|&s| s * ACTION_SCALE as f32).collect();
-    (act, sig)
+/// μ(s) = sigmoid(z)·32 per row, into `act` (and `sig` when kept for the
+/// policy-gradient chain).
+fn actor_head_into(z: &[f32], act: &mut [f32], mut sig: Option<&mut [f32]>) {
+    for (j, &v) in z.iter().enumerate() {
+        let s = sigmoid(v);
+        if let Some(sig) = sig.as_mut() {
+            sig[j] = s;
+        }
+        act[j] = s * ACTION_SCALE as f32;
+    }
 }
 
-/// Critic input: concat(s, a/32) row-wise.
-fn critic_input(s: &[f32], a: &[f32], b: usize, s_dim: usize) -> Vec<f32> {
-    let mut x = vec![0.0f32; b * (s_dim + 1)];
+/// Borrow the next six parameter tensors from the input list.
+fn take6<'a>(inputs: &'a [&'a Value], i: &mut usize) -> anyhow::Result<Vec<&'a Tensor>> {
+    let out: anyhow::Result<Vec<&Tensor>> =
+        inputs[*i..*i + 6].iter().map(|v| v.as_f32()).collect();
+    *i += 6;
+    out
+}
+
+/// Critic input: concat(s, a/32) row-wise into `x` (full overwrite).
+fn critic_input_into(s: &[f32], a: &[f32], b: usize, s_dim: usize, x: &mut [f32]) {
+    debug_assert_eq!(x.len(), b * (s_dim + 1));
     for i in 0..b {
         x[i * (s_dim + 1)..i * (s_dim + 1) + s_dim]
             .copy_from_slice(&s[i * s_dim..(i + 1) * s_dim]);
         x[i * (s_dim + 1) + s_dim] = a[i] / ACTION_SCALE as f32;
     }
-    x
 }
 
 // ---------------------------------------------------------------------------
@@ -164,8 +222,33 @@ fn critic_input(s: &[f32], a: &[f32], b: usize, s_dim: usize) -> Vec<f32> {
 // ---------------------------------------------------------------------------
 
 /// `ddpg_act_s{S}`: (actor(6), states (B, S)) → actions (B, 1) ∈ [0, 32].
+///
+/// Plan: four slots (h1, h2, z, packing panel), re-sized when the batch
+/// **or the actor's hidden width** changes — keying on both keeps a
+/// mismatched caller a clean re-plan, not an out-of-bounds index; the
+/// output actions are written directly into the returned tensor.
 pub struct RefDdpgAct {
-    pub s_dim: usize,
+    s_dim: usize,
+    b: usize,
+    h: usize,
+    caps: Vec<usize>,
+    ws: Workspace,
+}
+
+const ACT_H1: Slot = 0;
+const ACT_H2: Slot = 1;
+const ACT_Z: Slot = 2;
+const ACT_PAN: Slot = 3;
+
+fn act_caps(s_dim: usize, h: usize, b: usize) -> Vec<usize> {
+    // max(1): a zero-capacity slot would trip the take-twice guard.
+    vec![b * h, b * h, b, mlp_panel_len(s_dim, h).max(1)]
+}
+
+impl RefDdpgAct {
+    pub fn new(s_dim: usize, hidden: usize, b: usize) -> RefDdpgAct {
+        RefDdpgAct { s_dim, b, h: hidden, caps: act_caps(s_dim, hidden, b), ws: Workspace::new() }
+    }
 }
 
 impl Executable for RefDdpgAct {
@@ -176,36 +259,249 @@ impl Executable for RefDdpgAct {
         let actor = Mlp::from(&params)?;
         let states = inputs[6].as_f32()?;
         anyhow::ensure!(states.shape.len() == 2 && states.shape[1] == self.s_dim, "states shape");
+        anyhow::ensure!(actor.in_dim() == self.s_dim, "actor input dim");
         let b = states.shape[0];
-        let cache = mlp_forward(&actor, &states.data, b);
-        let (actions, _) = actor_head(&cache.z);
+        let h = actor.hidden();
+        if b != self.b || h != self.h {
+            self.b = b;
+            self.h = h;
+            self.caps = act_caps(self.s_dim, h, b);
+        }
+        self.ws.ensure_caps(&self.caps, &[]);
+        let mut h1 = self.ws.take(ACT_H1);
+        let mut h2 = self.ws.take(ACT_H2);
+        let mut z = self.ws.take(ACT_Z);
+        let mut pan = self.ws.take(ACT_PAN);
+        mlp_forward_into(
+            &actor,
+            &states.data,
+            b,
+            &mut h1[..b * h],
+            &mut h2[..b * h],
+            &mut z[..b],
+            &mut pan,
+        );
+        let mut actions = vec![0.0f32; b];
+        actor_head_into(&z[..b], &mut actions, None);
+        self.ws.put(ACT_H1, h1);
+        self.ws.put(ACT_H2, h2);
+        self.ws.put(ACT_Z, z);
+        self.ws.put(ACT_PAN, pan);
         Ok(vec![Value::f32(vec![b, 1], actions)])
+    }
+
+    fn scratch_stats(&self) -> Option<ScratchStats> {
+        let f32_len = self.ws.f32_len();
+        Some(ScratchStats { workspaces: usize::from(f32_len > 0), f32_len, u32_len: 0 })
+    }
+}
+
+/// Slot layout for one fused DDPG update, compiled by [`compile_update`].
+/// Lifetimes follow the walk's dataflow; released slots are recycled by
+/// the planner, so the whole update runs in a fraction of the buffers the
+/// walk allocated.
+struct UpdatePlan {
+    b: usize,
+    h: usize,
+    caps: Vec<usize>,
+    /// Matmul packing panel shared by all five MLP forwards.
+    pan: Slot,
+    // target critic path
+    t_h1: Slot,
+    t_h2: Slot,
+    t_z: Slot,
+    a2: Slot,
+    x2: Slot,
+    t2_h1: Slot,
+    t2_h2: Slot,
+    q2: Slot,
+    q_tgt: Slot,
+    // critic TD regression
+    xc: Slot,
+    qc_h1: Slot,
+    qc_h2: Slot,
+    qc_z: Slot,
+    dq: Slot,
+    dh1: Slot,
+    dh2: Slot,
+    cg: [Slot; 6],
+    // actor policy gradient
+    pa_h1: Slot,
+    pa_h2: Slot,
+    pa_z: Slot,
+    sig: Slot,
+    mu: Slot,
+    xa: Slot,
+    qa_h1: Slot,
+    qa_h2: Slot,
+    qa_z: Slot,
+    dqa: Slot,
+    sg: [Slot; 6],
+    dxa: Slot,
+    dz: Slot,
+    ag: [Slot; 6],
+}
+
+/// Compile the update's slot layout for batch `b`.  Alloc/release order
+/// mirrors `RefDdpgUpdate::execute` step for step — a slot is released
+/// exactly when its last reader has run, never earlier.
+fn compile_update(
+    b: usize,
+    h: usize,
+    s_dim: usize,
+    a_lens: [usize; 6],
+    c_lens: [usize; 6],
+) -> UpdatePlan {
+    let mut p = Planner::new();
+    let bh = b * h;
+    let bs1 = b * (s_dim + 1);
+    let alloc6 = |p: &mut Planner, lens: [usize; 6]| -> [Slot; 6] {
+        [
+            p.alloc(lens[0]),
+            p.alloc(lens[1]),
+            p.alloc(lens[2]),
+            p.alloc(lens[3]),
+            p.alloc(lens[4]),
+            p.alloc(lens[5]),
+        ]
+    };
+    // Packing panel for every MLP forward (actor nets read s_dim inputs,
+    // critic nets s_dim+1); live until the last forward (Q(s, μ(s))).
+    let pan = p.alloc(mlp_panel_len(s_dim, h).max(mlp_panel_len(s_dim + 1, h)).max(1));
+    // 1. μ'(s2) through the target actor.
+    let t_h1 = p.alloc(bh);
+    let t_h2 = p.alloc(bh);
+    let t_z = p.alloc(b);
+    p.release(t_h1);
+    p.release(t_h2);
+    let a2 = p.alloc(b);
+    p.release(t_z);
+    // 2. Q'(s2, a2) through the target critic.
+    let x2 = p.alloc(bs1);
+    p.release(a2);
+    let t2_h1 = p.alloc(bh);
+    let t2_h2 = p.alloc(bh);
+    let q2 = p.alloc(b);
+    p.release(t2_h1);
+    p.release(t2_h2);
+    p.release(x2);
+    let q_tgt = p.alloc(b);
+    p.release(q2);
+    // 3. Critic TD(0): forward + backward (cache and input live through
+    //    the backward).
+    let xc = p.alloc(bs1);
+    let qc_h1 = p.alloc(bh);
+    let qc_h2 = p.alloc(bh);
+    let qc_z = p.alloc(b);
+    let dq = p.alloc(b);
+    p.release(q_tgt);
+    let dh1 = p.alloc(bh);
+    let dh2 = p.alloc(bh);
+    let cg = alloc6(&mut p, c_lens);
+    p.release(dq);
+    p.release(qc_z);
+    p.release(qc_h1);
+    p.release(qc_h2);
+    p.release(xc);
+    // 4. Actor policy gradient: μ(s), Q(s, μ(s)), chain through the head.
+    let pa_h1 = p.alloc(bh);
+    let pa_h2 = p.alloc(bh);
+    let pa_z = p.alloc(b);
+    let sig = p.alloc(b);
+    let mu = p.alloc(b);
+    p.release(pa_z);
+    let xa = p.alloc(bs1);
+    p.release(mu);
+    let qa_h1 = p.alloc(bh);
+    let qa_h2 = p.alloc(bh);
+    let qa_z = p.alloc(b);
+    p.release(pan); // last MLP forward done
+    let dqa = p.alloc(b);
+    let sg = alloc6(&mut p, c_lens);
+    let dxa = p.alloc(bs1);
+    p.release(dqa);
+    p.release(qa_z);
+    p.release(qa_h1);
+    p.release(qa_h2);
+    p.release(xa);
+    for s in sg {
+        p.release(s);
+    }
+    let dz = p.alloc(b);
+    p.release(sig);
+    p.release(dxa);
+    let ag = alloc6(&mut p, a_lens);
+    p.release(dz);
+    p.release(pa_h1);
+    p.release(pa_h2);
+    p.release(dh1);
+    p.release(dh2);
+    UpdatePlan {
+        b,
+        h,
+        caps: p.finish(),
+        pan,
+        t_h1,
+        t_h2,
+        t_z,
+        a2,
+        x2,
+        t2_h1,
+        t2_h2,
+        q2,
+        q_tgt,
+        xc,
+        qc_h1,
+        qc_h2,
+        qc_z,
+        dq,
+        dh1,
+        dh2,
+        cg,
+        pa_h1,
+        pa_h2,
+        pa_z,
+        sig,
+        mu,
+        xa,
+        qa_h1,
+        qa_h2,
+        qa_z,
+        dqa,
+        sg,
+        dxa,
+        dz,
+        ag,
     }
 }
 
 /// `ddpg_update_s{S}`: one fused off-policy step (python `update_fn`).
 pub struct RefDdpgUpdate {
-    pub s_dim: usize,
+    s_dim: usize,
+    plan: Option<UpdatePlan>,
+    ws: Workspace,
+}
+
+impl RefDdpgUpdate {
+    pub fn new(s_dim: usize) -> RefDdpgUpdate {
+        RefDdpgUpdate { s_dim, plan: None, ws: Workspace::new() }
+    }
 }
 
 impl Executable for RefDdpgUpdate {
     fn execute(&mut self, inputs: &[&Value]) -> anyhow::Result<Vec<Value>> {
         anyhow::ensure!(inputs.len() == 58, "update arity");
         let mut i = 0usize;
-        let mut take6 = |inputs: &[&Value]| -> anyhow::Result<Vec<Tensor>> {
-            let out: anyhow::Result<Vec<Tensor>> =
-                inputs[i..i + 6].iter().map(|v| Ok(v.as_f32()?.clone())).collect();
-            i += 6;
-            out
-        };
-        let actor = take6(inputs)?;
-        let critic = take6(inputs)?;
-        let t_actor = take6(inputs)?;
-        let t_critic = take6(inputs)?;
-        let m_a = take6(inputs)?;
-        let v_a = take6(inputs)?;
-        let m_c = take6(inputs)?;
-        let v_c = take6(inputs)?;
+        // Hold borrows — no parameter-set clones (the walk cloned all
+        // eight 6-tensor groups per call).
+        let actor = take6(inputs, &mut i)?;
+        let critic = take6(inputs, &mut i)?;
+        let t_actor = take6(inputs, &mut i)?;
+        let t_critic = take6(inputs, &mut i)?;
+        let m_a = take6(inputs, &mut i)?;
+        let v_a = take6(inputs, &mut i)?;
+        let m_c = take6(inputs, &mut i)?;
+        let v_c = take6(inputs, &mut i)?;
         let t = inputs[i].scalar_f32()?;
         let s = inputs[i + 1].as_f32()?;
         let a = inputs[i + 2].as_f32()?;
@@ -222,56 +518,241 @@ impl Executable for RefDdpgUpdate {
         anyhow::ensure!(s.shape == vec![b, s_dim] && s2.shape == vec![b, s_dim], "state shapes");
         anyhow::ensure!(a.data.len() == b && r.data.len() == b && done.data.len() == b, "batch");
 
+        let ac = Mlp::from(&actor)?;
+        let cr = Mlp::from(&critic)?;
+        let ta = Mlp::from(&t_actor)?;
+        let tc = Mlp::from(&t_critic)?;
+        let h = ac.hidden();
+        // Mismatched widths get a clean error here, never a slot overrun.
+        anyhow::ensure!(
+            cr.hidden() == h && ta.hidden() == h && tc.hidden() == h,
+            "hidden width mismatch across actor/critic/target nets"
+        );
+        anyhow::ensure!(ac.in_dim() == s_dim && ta.in_dim() == s_dim, "actor input dim");
+        anyhow::ensure!(
+            cr.in_dim() == s_dim + 1 && tc.in_dim() == s_dim + 1,
+            "critic input dim"
+        );
+        let bh = b * h;
+        let bs1 = b * (s_dim + 1);
+        if self.plan.as_ref().map(|p| (p.b, p.h)) != Some((b, h)) {
+            self.plan = Some(compile_update(b, h, s_dim, ac.lens(), cr.lens()));
+        }
+        let plan = self.plan.as_ref().expect("compiled above");
+        self.ws.ensure_caps(&plan.caps, &[]);
+        let ws = &mut self.ws;
+
         // --- critic target: r + γ(1−done)·Q'(s2, μ'(s2)), stop-gradient ----
-        let ta = Mlp::from(&refs(&t_actor))?;
-        let tc = Mlp::from(&refs(&t_critic))?;
-        let c2 = mlp_forward(&ta, &s2.data, b);
-        let (a2, _) = actor_head(&c2.z);
-        let x2 = critic_input(&s2.data, &a2, b, s_dim);
-        let q2 = mlp_forward(&tc, &x2, b).z;
-        let q_tgt: Vec<f32> = (0..b)
-            .map(|j| r.data[j] + gamma * (1.0 - done.data[j]) * q2[j])
-            .collect();
+        let mut pan = ws.take(plan.pan);
+        let mut h1 = ws.take(plan.t_h1);
+        let mut h2 = ws.take(plan.t_h2);
+        let mut z = ws.take(plan.t_z);
+        mlp_forward_into(&ta, &s2.data, b, &mut h1[..bh], &mut h2[..bh], &mut z[..b], &mut pan);
+        ws.put(plan.t_h1, h1);
+        ws.put(plan.t_h2, h2);
+        let mut a2 = ws.take(plan.a2);
+        actor_head_into(&z[..b], &mut a2[..b], None);
+        ws.put(plan.t_z, z);
+        let mut x2 = ws.take(plan.x2);
+        critic_input_into(&s2.data, &a2[..b], b, s_dim, &mut x2[..bs1]);
+        ws.put(plan.a2, a2);
+        let mut h1 = ws.take(plan.t2_h1);
+        let mut h2 = ws.take(plan.t2_h2);
+        let mut q2 = ws.take(plan.q2);
+        mlp_forward_into(&tc, &x2[..bs1], b, &mut h1[..bh], &mut h2[..bh], &mut q2[..b], &mut pan);
+        ws.put(plan.t2_h1, h1);
+        ws.put(plan.t2_h2, h2);
+        ws.put(plan.x2, x2);
+        let mut q_tgt = ws.take(plan.q_tgt);
+        for j in 0..b {
+            q_tgt[j] = r.data[j] + gamma * (1.0 - done.data[j]) * q2[j];
+        }
+        ws.put(plan.q2, q2);
 
         // --- critic: TD(0) regression --------------------------------------
-        let cr = Mlp::from(&refs(&critic))?;
-        let xc = critic_input(&s.data, &a.data, b, s_dim);
-        let qc = mlp_forward(&cr, &xc, b);
-        let closs = qc
-            .z
+        let mut xc = ws.take(plan.xc);
+        critic_input_into(&s.data, &a.data, b, s_dim, &mut xc[..bs1]);
+        let mut qc_h1 = ws.take(plan.qc_h1);
+        let mut qc_h2 = ws.take(plan.qc_h2);
+        let mut qc_z = ws.take(plan.qc_z);
+        mlp_forward_into(
+            &cr,
+            &xc[..bs1],
+            b,
+            &mut qc_h1[..bh],
+            &mut qc_h2[..bh],
+            &mut qc_z[..b],
+            &mut pan,
+        );
+        let closs = qc_z[..b]
             .iter()
-            .zip(&q_tgt)
+            .zip(&q_tgt[..b])
             .map(|(&q, &qt)| {
                 let d = q - qt;
                 (d * d) as f64
             })
             .sum::<f64>() as f32
             / b as f32;
-        let dq: Vec<f32> = qc.z.iter().zip(&q_tgt).map(|(&q, &qt)| 2.0 * (q - qt) / b as f32).collect();
-        let (cgrads, _) = mlp_backward(&cr, &xc, b, &qc, &dq);
+        let mut dq = ws.take(plan.dq);
+        for j in 0..b {
+            dq[j] = 2.0 * (qc_z[j] - q_tgt[j]) / b as f32;
+        }
+        ws.put(plan.q_tgt, q_tgt);
+        let mut dh1 = ws.take(plan.dh1);
+        let mut dh2 = ws.take(plan.dh2);
+        let c_lens = cr.lens();
+        let mut cg_bufs: Vec<Vec<f32>> = plan.cg.iter().map(|&sl| ws.take(sl)).collect();
+        {
+            let [g0, g1, g2, g3, g4, g5] = &mut cg_bufs[..] else { unreachable!() };
+            let mut grads = MlpGrads {
+                w1: &mut g0[..c_lens[0]],
+                b1: &mut g1[..c_lens[1]],
+                w2: &mut g2[..c_lens[2]],
+                b2: &mut g3[..c_lens[3]],
+                w3: &mut g4[..c_lens[4]],
+                b3: &mut g5[..c_lens[5]],
+            };
+            mlp_backward_into(
+                &cr,
+                &xc[..bs1],
+                b,
+                &qc_h1[..bh],
+                &qc_h2[..bh],
+                &dq[..b],
+                &mut dh1[..bh],
+                &mut dh2[..bh],
+                &mut grads,
+                None, // the walk discarded the critic-input gradient here
+            );
+        }
+        ws.put(plan.dq, dq);
+        ws.put(plan.qc_z, qc_z);
+        ws.put(plan.qc_h1, qc_h1);
+        ws.put(plan.qc_h2, qc_h2);
+        ws.put(plan.xc, xc);
 
         // --- actor: deterministic policy gradient through the critic -------
-        let ac = Mlp::from(&refs(&actor))?;
-        let pa = mlp_forward(&ac, &s.data, b);
-        let (mu, sig) = actor_head(&pa.z);
-        let xa = critic_input(&s.data, &mu, b, s_dim);
-        let qa = mlp_forward(&cr, &xa, b);
-        let aloss = -(qa.z.iter().map(|&q| q as f64).sum::<f64>() as f32) / b as f32;
-        let dqa: Vec<f32> = vec![-1.0 / b as f32; b];
-        let (_, dxa) = mlp_backward(&cr, &xa, b, &qa, &dqa);
+        let mut pa_h1 = ws.take(plan.pa_h1);
+        let mut pa_h2 = ws.take(plan.pa_h2);
+        let mut pa_z = ws.take(plan.pa_z);
+        mlp_forward_into(
+            &ac,
+            &s.data,
+            b,
+            &mut pa_h1[..bh],
+            &mut pa_h2[..bh],
+            &mut pa_z[..b],
+            &mut pan,
+        );
+        let mut sig = ws.take(plan.sig);
+        let mut mu = ws.take(plan.mu);
+        actor_head_into(&pa_z[..b], &mut mu[..b], Some(&mut sig[..b]));
+        ws.put(plan.pa_z, pa_z);
+        let mut xa = ws.take(plan.xa);
+        critic_input_into(&s.data, &mu[..b], b, s_dim, &mut xa[..bs1]);
+        ws.put(plan.mu, mu);
+        let mut qa_h1 = ws.take(plan.qa_h1);
+        let mut qa_h2 = ws.take(plan.qa_h2);
+        let mut qa_z = ws.take(plan.qa_z);
+        mlp_forward_into(
+            &cr,
+            &xa[..bs1],
+            b,
+            &mut qa_h1[..bh],
+            &mut qa_h2[..bh],
+            &mut qa_z[..b],
+            &mut pan,
+        );
+        ws.put(plan.pan, pan); // last MLP forward done
+        let aloss = -(qa_z[..b].iter().map(|&q| q as f64).sum::<f64>() as f32) / b as f32;
+        let mut dqa = ws.take(plan.dqa);
+        dqa[..b].fill(-1.0 / b as f32);
+        let mut sg_bufs: Vec<Vec<f32>> = plan.sg.iter().map(|&sl| ws.take(sl)).collect();
+        let mut dxa = ws.take(plan.dxa);
+        {
+            let [g0, g1, g2, g3, g4, g5] = &mut sg_bufs[..] else { unreachable!() };
+            let mut grads = MlpGrads {
+                w1: &mut g0[..c_lens[0]],
+                b1: &mut g1[..c_lens[1]],
+                w2: &mut g2[..c_lens[2]],
+                b2: &mut g3[..c_lens[3]],
+                w3: &mut g4[..c_lens[4]],
+                b3: &mut g5[..c_lens[5]],
+            };
+            mlp_backward_into(
+                &cr,
+                &xa[..bs1],
+                b,
+                &qa_h1[..bh],
+                &qa_h2[..bh],
+                &dqa[..b],
+                &mut dh1[..bh],
+                &mut dh2[..bh],
+                &mut grads, // discarded — only dxa is consumed
+                Some(&mut dxa[..bs1]),
+            );
+        }
+        ws.put(plan.dqa, dqa);
+        ws.put(plan.qa_z, qa_z);
+        ws.put(plan.qa_h1, qa_h1);
+        ws.put(plan.qa_h2, qa_h2);
+        ws.put(plan.xa, xa);
+        for (&sl, buf) in plan.sg.iter().zip(sg_bufs) {
+            ws.put(sl, buf);
+        }
         // d(action) = dx[:, s_dim] / 32; through sigmoid·32 head: ·32·σ(1−σ).
-        let dz: Vec<f32> = (0..b)
-            .map(|j| {
-                let da = dxa[j * (s_dim + 1) + s_dim] / ACTION_SCALE as f32;
-                da * ACTION_SCALE as f32 * sig[j] * (1.0 - sig[j])
-            })
-            .collect();
-        let (agrads, _) = mlp_backward(&ac, &s.data, b, &pa, &dz);
+        let mut dz = ws.take(plan.dz);
+        for j in 0..b {
+            let da = dxa[j * (s_dim + 1) + s_dim] / ACTION_SCALE as f32;
+            dz[j] = da * ACTION_SCALE as f32 * sig[j] * (1.0 - sig[j]);
+        }
+        ws.put(plan.sig, sig);
+        ws.put(plan.dxa, dxa);
+        let a_lens = ac.lens();
+        let mut ag_bufs: Vec<Vec<f32>> = plan.ag.iter().map(|&sl| ws.take(sl)).collect();
+        {
+            let [g0, g1, g2, g3, g4, g5] = &mut ag_bufs[..] else { unreachable!() };
+            let mut grads = MlpGrads {
+                w1: &mut g0[..a_lens[0]],
+                b1: &mut g1[..a_lens[1]],
+                w2: &mut g2[..a_lens[2]],
+                b2: &mut g3[..a_lens[3]],
+                w3: &mut g4[..a_lens[4]],
+                b3: &mut g5[..a_lens[5]],
+            };
+            mlp_backward_into(
+                &ac,
+                &s.data,
+                b,
+                &pa_h1[..bh],
+                &pa_h2[..bh],
+                &dz[..b],
+                &mut dh1[..bh],
+                &mut dh2[..bh],
+                &mut grads,
+                None, // the walk discarded the state gradient
+            );
+        }
+        ws.put(plan.dz, dz);
+        ws.put(plan.pa_h1, pa_h1);
+        ws.put(plan.pa_h2, pa_h2);
+        ws.put(plan.dh1, dh1);
+        ws.put(plan.dh2, dh2);
 
         // --- Adam + soft target updates ------------------------------------
         let t1 = t + 1.0;
-        let (new_critic, m_c, v_c) = adam(&critic, &cgrads, &m_c, &v_c, t1, lr_c);
-        let (new_actor, m_a, v_a) = adam(&actor, &agrads, &m_a, &v_a, t1, lr_a);
+        let cg_slices: Vec<&[f32]> =
+            cg_bufs.iter().zip(c_lens).map(|(buf, l)| &buf[..l]).collect();
+        let ag_slices: Vec<&[f32]> =
+            ag_bufs.iter().zip(a_lens).map(|(buf, l)| &buf[..l]).collect();
+        let (new_critic, m_c, v_c) = adam(&critic, &cg_slices, &m_c, &v_c, t1, lr_c);
+        let (new_actor, m_a, v_a) = adam(&actor, &ag_slices, &m_a, &v_a, t1, lr_a);
+        for (&sl, buf) in plan.cg.iter().zip(cg_bufs) {
+            ws.put(sl, buf);
+        }
+        for (&sl, buf) in plan.ag.iter().zip(ag_bufs) {
+            ws.put(sl, buf);
+        }
         let new_t_actor = soft_update(&new_actor, &t_actor, tau);
         let new_t_critic = soft_update(&new_critic, &t_critic, tau);
 
@@ -286,14 +767,19 @@ impl Executable for RefDdpgUpdate {
         outs.push(Value::scalar(aloss));
         Ok(outs)
     }
+
+    fn scratch_stats(&self) -> Option<ScratchStats> {
+        let f32_len = self.ws.f32_len();
+        Some(ScratchStats { workspaces: usize::from(f32_len > 0), f32_len, u32_len: 0 })
+    }
 }
 
 /// Bias-corrected Adam step (python `_adam`): returns (params, m, v).
 fn adam(
-    params: &[Tensor],
-    grads: &[Vec<f32>],
-    m: &[Tensor],
-    v: &[Tensor],
+    params: &[&Tensor],
+    grads: &[&[f32]],
+    m: &[&Tensor],
+    v: &[&Tensor],
     t1: f32,
     lr: f32,
 ) -> (Vec<Tensor>, Vec<Tensor>, Vec<Tensor>) {
@@ -303,7 +789,7 @@ fn adam(
     let mut new_m = Vec::with_capacity(params.len());
     let mut new_v = Vec::with_capacity(params.len());
     for idx in 0..params.len() {
-        let g = &grads[idx];
+        let g = grads[idx];
         let mut mi = m[idx].data.clone();
         let mut vi = v[idx].data.clone();
         let mut pi = params[idx].data.clone();
@@ -322,7 +808,7 @@ fn adam(
 }
 
 /// τ·p + (1−τ)·target, element-wise per tensor.
-fn soft_update(p: &[Tensor], target: &[Tensor], tau: f32) -> Vec<Tensor> {
+fn soft_update(p: &[Tensor], target: &[&Tensor], tau: f32) -> Vec<Tensor> {
     p.iter()
         .zip(target)
         .map(|(pi, ti)| {
@@ -336,15 +822,19 @@ fn soft_update(p: &[Tensor], target: &[Tensor], tau: f32) -> Vec<Tensor> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::reference::zoo::{actor_shapes, critic_shapes, ACT_BATCH, UPD_BATCH};
+    use crate::runtime::reference::zoo::{actor_shapes, critic_shapes, ACT_BATCH, HIDDEN, UPD_BATCH};
 
     fn zeros_of(shapes: &[Vec<usize>]) -> Vec<Value> {
         shapes.iter().map(|s| Value::F32(Tensor::zeros(s.clone()))).collect()
     }
 
+    fn act_exe(s_dim: usize) -> RefDdpgAct {
+        RefDdpgAct::new(s_dim, HIDDEN, ACT_BATCH)
+    }
+
     #[test]
     fn zero_actor_emits_midrange_actions() {
-        let mut exe = RefDdpgAct { s_dim: 16 };
+        let mut exe = act_exe(16);
         let mut inputs = zeros_of(&actor_shapes(16));
         inputs.push(Value::F32(Tensor::zeros(vec![ACT_BATCH, 16])));
         let refs: Vec<&Value> = inputs.iter().collect();
@@ -360,7 +850,7 @@ mod tests {
     #[test]
     fn actions_stay_in_range_for_random_params() {
         let mut rng = crate::util::rng::Rng::new(3);
-        let mut exe = RefDdpgAct { s_dim: 17 };
+        let mut exe = act_exe(17);
         let mut inputs: Vec<Value> = actor_shapes(17)
             .iter()
             .map(|s| {
@@ -377,6 +867,12 @@ mod tests {
         for &x in &outs[0].as_f32().unwrap().data {
             assert!((0.0..=32.0).contains(&x));
         }
+        // A second call with a smaller batch reuses the workspace.
+        let mut small: Vec<Value> = inputs[..6].to_vec();
+        small.push(Value::F32(Tensor::zeros(vec![4, 17])));
+        let refs: Vec<&Value> = small.iter().collect();
+        assert_eq!(exe.execute(&refs).unwrap()[0].shape(), &[4, 1]);
+        assert_eq!(exe.scratch_stats().unwrap().workspaces, 1);
     }
 
     /// Build a full 58-input update call with small random nets.
@@ -426,7 +922,7 @@ mod tests {
 
     #[test]
     fn update_shapes_losses_and_time_counter() {
-        let mut exe = RefDdpgUpdate { s_dim: 16 };
+        let mut exe = RefDdpgUpdate::new(16);
         let inputs = update_inputs(16, 5);
         let refs: Vec<&Value> = inputs.iter().collect();
         let outs = exe.execute(&refs).unwrap();
@@ -447,14 +943,23 @@ mod tests {
     }
 
     #[test]
-    fn repeated_updates_reduce_critic_loss() {
-        // Fixed batch, fixed target values → TD regression must descend.
-        let mut exe = RefDdpgUpdate { s_dim: 16 };
+    fn repeated_updates_reduce_critic_loss_with_flat_workspace() {
+        // Fixed batch, fixed target values → TD regression must descend;
+        // the planned workspace must not grow after the first call.
+        let mut exe = RefDdpgUpdate::new(16);
         let mut inputs = update_inputs(16, 11);
         let mut losses = Vec::new();
-        for _ in 0..30 {
+        let mut warm_len = 0usize;
+        for step in 0..30 {
             let refs: Vec<&Value> = inputs.iter().collect();
             let outs = exe.execute(&refs).unwrap();
+            let stats = exe.scratch_stats().unwrap();
+            if step == 0 {
+                warm_len = stats.f32_len;
+                assert!(warm_len > 0);
+            } else {
+                assert_eq!(stats.f32_len, warm_len, "workspace grew at step {step}");
+            }
             losses.push(outs[49].scalar_f32().unwrap());
             for (j, v) in outs.into_iter().take(49).enumerate() {
                 inputs[j] = v; // feed nets, moments and t back in
@@ -471,8 +976,37 @@ mod tests {
     #[test]
     fn soft_update_interpolates() {
         let p = vec![Tensor::full(vec![2], 1.0)];
-        let t = vec![Tensor::full(vec![2], 0.0)];
-        let out = soft_update(&p, &t, 0.25);
+        let t = Tensor::full(vec![2], 0.0);
+        let out = soft_update(&p, &[&t], 0.25);
         assert_eq!(out[0].data, vec![0.25, 0.25]);
+    }
+
+    #[test]
+    fn update_slot_plan_recycles_buffers() {
+        // The planner must fold the update's ~40 virtual buffers onto far
+        // fewer physical slots than a no-reuse layout would need.
+        let b = UPD_BATCH;
+        let a6: Vec<usize> = actor_shapes(16).iter().map(|s| s.iter().product()).collect();
+        let c6: Vec<usize> = critic_shapes(16).iter().map(|s| s.iter().product()).collect();
+        let plan = compile_update(
+            b,
+            HIDDEN,
+            16,
+            [a6[0], a6[1], a6[2], a6[3], a6[4], a6[5]],
+            [c6[0], c6[1], c6[2], c6[3], c6[4], c6[5]],
+        );
+        let total: usize = plan.caps.len();
+        assert!(total < 30, "expected heavy slot reuse, got {total} slots");
+        // Against the no-reuse footprint (every virtual buffer distinct):
+        // 5 MLP forward caches, dh scratch, three grad sets, three critic
+        // inputs and the small b-sized vectors.
+        let virtual_total: usize = 5 * (2 * b * HIDDEN + b)
+            + 2 * b * HIDDEN
+            + 2 * c6.iter().sum::<usize>()
+            + a6.iter().sum::<usize>()
+            + 3 * b * (16 + 1)
+            + 8 * b;
+        let planned: usize = plan.caps.iter().sum();
+        assert!(planned < virtual_total, "planned {planned} vs no-reuse {virtual_total}");
     }
 }

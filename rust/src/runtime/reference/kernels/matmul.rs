@@ -55,11 +55,11 @@ pub mod naive {
         }
     }
 
-    /// a @ bᵀ for a (m,n), b (k,n) → (m,k): rows of a dotted with rows of b.
-    pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    /// a @ bᵀ into caller storage: full overwrite of c (m,k).
+    pub fn matmul_a_bt_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, n: usize, k: usize) {
         debug_assert_eq!(a.len(), m * n);
         debug_assert_eq!(b.len(), k * n);
-        let mut c = vec![0.0f32; m * k];
+        debug_assert_eq!(c.len(), m * k);
         for i in 0..m {
             let arow = &a[i * n..(i + 1) * n];
             let crow = &mut c[i * k..(i + 1) * k];
@@ -72,24 +72,52 @@ pub mod naive {
                 *cv = acc;
             }
         }
+    }
+
+    /// a @ bᵀ for a (m,n), b (k,n) → (m,k): rows of a dotted with rows of b.
+    pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * k];
+        matmul_a_bt_into(&mut c, a, b, m, n, k);
         c
     }
 }
 
-/// c += a @ b for a (m,k), b (k,n), c (m,n).
+/// Packed-panel scratch length for [`matmul_acc_scratch`]'s blocked path
+/// (0 when the shape dispatches to the naive loop and never packs).
+pub fn matmul_panel_len(k: usize, n: usize) -> usize {
+    if k <= KC && n <= NC {
+        0
+    } else {
+        KC.min(k) * NC.min(n)
+    }
+}
+
+/// c += a @ b for a (m,k), b (k,n), c (m,n), with caller-provided packing
+/// scratch of [`matmul_panel_len`] elements (ignored on the naive path) —
+/// the planned execution engine feeds a workspace slot here so the hot
+/// path packs without allocating.
 ///
 /// Blocked path (k or n beyond one panel): pack B into row-major `KC×NC`
 /// panels and stream every A row against the hot panel (GEBP order
 /// `jc → pc → i`).  For each element c\[i]\[j] the k-index still ascends
-/// 0..k across panels, so the result is bit-identical to the naive loop.
-pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+/// 0..k across panels, so the result is bit-identical to the naive loop
+/// (every panel element read is written first — stale scratch is safe).
+pub fn matmul_acc_scratch(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    packed: &mut [f32],
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
     if k <= KC && n <= NC {
         return naive::matmul_acc(c, a, b, m, k, n);
     }
-    let mut packed = vec![0.0f32; KC.min(k) * NC.min(n)];
+    debug_assert_eq!(packed.len(), KC.min(k) * NC.min(n));
     let mut jc = 0;
     while jc < n {
         let nb = NC.min(n - jc);
@@ -116,6 +144,13 @@ pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: us
         }
         jc += NC;
     }
+}
+
+/// c += a @ b for a (m,k), b (k,n), c (m,n), allocating the packing panel
+/// when the blocked path needs one.
+pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    let mut packed = vec![0.0f32; matmul_panel_len(k, n)];
+    matmul_acc_scratch(c, a, b, m, k, n, &mut packed);
 }
 
 /// a @ b for a (m,k), b (k,n) → (m,n).
@@ -159,18 +194,19 @@ pub fn matmul_at_b_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, 
     }
 }
 
-/// a @ bᵀ for a (m,n), b (k,n) → (m,k): rows of a dotted with rows of b.
+/// a @ bᵀ into caller storage (full overwrite of c (m,k)): rows of a
+/// dotted with rows of b (k,n).
 ///
 /// Blocked path: chunks of `MC` B-rows are reused across every A row
 /// before the next chunk loads.  Each output element is one whole dot
 /// product with j ascending, exactly as in the naive loop.
-pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+pub fn matmul_a_bt_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, n: usize, k: usize) {
     debug_assert_eq!(a.len(), m * n);
     debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * k);
     if k <= MC {
-        return naive::matmul_a_bt(a, b, m, n, k);
+        return naive::matmul_a_bt_into(c, a, b, m, n, k);
     }
-    let mut c = vec![0.0f32; m * k];
     let mut kc = 0;
     while kc < k {
         let kb = MC.min(k - kc);
@@ -188,6 +224,12 @@ pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f3
         }
         kc += MC;
     }
+}
+
+/// a @ bᵀ for a (m,n), b (k,n) → (m,k), allocating the output.
+pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * k];
+    matmul_a_bt_into(&mut c, a, b, m, n, k);
     c
 }
 

@@ -25,4 +25,7 @@ pub mod im2col;
 pub mod matmul;
 
 pub use im2col::{col2im_acc, im2col};
-pub use matmul::{matmul, matmul_a_bt, matmul_acc, matmul_at_b_acc, naive, KC, MC, NC};
+pub use matmul::{
+    matmul, matmul_a_bt, matmul_a_bt_into, matmul_acc, matmul_acc_scratch, matmul_at_b_acc,
+    matmul_panel_len, naive, KC, MC, NC,
+};

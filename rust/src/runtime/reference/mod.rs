@@ -15,11 +15,20 @@
 //! worker pool (`execute_batch`) — both bit-exact against the serial naive
 //! path at every thread count (`tests/determinism.rs`,
 //! `tests/properties.rs`).
+//!
+//! Model and agent graphs execute through the **planned engine**
+//! (`plan.rs`): each graph compiles once — at `Executable` build time —
+//! into a flat step list with liveness-assigned buffer slots, then
+//! dispatches against reusable per-worker `Workspace` arenas handed out by
+//! `util::pool::ScratchArena`, so steady-state batches allocate nothing.
+//! Planned output is byte-identical to the retained tree-walk
+//! (`tests/plan_engine.rs`).
 
 pub mod agent_exec;
 pub mod kernels;
 pub mod model_exec;
 pub mod nn;
+pub mod plan;
 pub mod quantize;
 pub mod zoo;
 
@@ -70,11 +79,11 @@ impl Backend for RefBackend {
         let name = spec.name.as_str();
         if let Some(s) = name.strip_prefix("ddpg_act_s") {
             let s_dim: usize = s.parse()?;
-            return Ok(Box::new(agent_exec::RefDdpgAct { s_dim }));
+            return Ok(Box::new(agent_exec::RefDdpgAct::new(s_dim, zoo::HIDDEN, zoo::ACT_BATCH)));
         }
         if let Some(s) = name.strip_prefix("ddpg_update_s") {
             let s_dim: usize = s.parse()?;
-            return Ok(Box::new(agent_exec::RefDdpgUpdate { s_dim }));
+            return Ok(Box::new(agent_exec::RefDdpgUpdate::new(s_dim)));
         }
         // "{model}_{eval|train}_{quant|binar}"
         for (infix, is_train) in [("_eval_", false), ("_train_", true)] {
@@ -88,7 +97,7 @@ impl Backend for RefBackend {
                 };
                 let graph = zoo::model_graph(model)?;
                 return Ok(if is_train {
-                    Box::new(model_exec::RefModelTrain { graph, binar })
+                    Box::new(model_exec::RefModelTrain::new(graph, binar))
                 } else {
                     Box::new(model_exec::RefModelEval::new(graph, binar, self.pool.clone()))
                 });

@@ -7,20 +7,32 @@
 //! quantized weights/activations, the backward pass treats both quantizers
 //! as identity (`q = x + stop_gradient(q − x)`), so weight gradients are
 //! taken at the quantized point and flow to the raw parameters unchanged.
+//!
+//! Since PR 4 the executables dispatch through the **planned execution
+//! engine** (`plan.rs`): graphs compile once into slot-assigned step lists
+//! and execute against reusable per-worker workspaces.  The original
+//! allocate-per-call tree-walk below (`forward`/`backward`) is retained as
+//! the semantic reference — `run_walk` exposes it, and
+//! `tests/plan_engine.rs` asserts planned output is byte-identical to it
+//! for every model × mode × thread count.
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
-use crate::runtime::backend::Executable;
+use crate::runtime::backend::{Executable, ScratchStats};
 use crate::runtime::reference::nn::{
     add_bias, bias_bwd, cmajor_to_nhwc, cmajor_to_w, conv2d, conv2d_bwd, dwconv2d, dwconv2d_bwd,
     gap, gap_bwd, group_norm, group_norm_bwd, matmul, matmul_a_bt, matmul_at_b_acc, maxpool2,
     maxpool2_bwd, nhwc_to_cmajor, relu, relu_bwd, softmax_xent, w_to_cmajor, Dims, GnCache,
 };
-use crate::runtime::reference::quantize::quantize_rows;
-use crate::runtime::reference::zoo::{LType, ModelGraph, Node};
+use crate::runtime::reference::plan::{
+    compile_eval, compile_train, run_eval, run_train, Plan, Workspace,
+};
+use crate::runtime::reference::quantize::{is_passthrough, quantize_rows};
+use crate::runtime::reference::zoo::{LType, ModelGraph, Node, EVAL_BATCH, TRAIN_BATCH};
 use crate::runtime::tensor::Tensor;
 use crate::runtime::value::Value;
-use crate::util::pool::WorkerPool;
+use crate::util::pool::{ScratchArena, WorkerPool};
 
 /// Activation flowing through the walk: NHWC feature maps, or the flat
 /// (n, c) form after global average pooling.
@@ -93,26 +105,40 @@ fn layer_fwd(
     let ab = &abits[l.a_off..l.a_off + l.a_len];
 
     // Per-input-channel activation quantization (fc: one shared channel).
+    // Exact-passthrough bit slices (≥ 24 bits, quant mode) skip the
+    // channel-major round-trip — the quantized copy equals the source
+    // bit-for-bit, so the skip preserves byte-identity.
     let xq: ActT = match &x {
         ActT::A4(d, data) => {
             debug_assert_eq!(d.c, l.a_len, "{}: activation channels", l.name);
-            let mut cm = nhwc_to_cmajor(data, *d);
-            quantize_rows(&mut cm, d.c, d.n * d.h * d.w, ab, binar);
-            ActT::A4(*d, cmajor_to_nhwc(&cm, *d))
+            if is_passthrough(ab, binar) {
+                ActT::A4(*d, data.clone())
+            } else {
+                let mut cm = nhwc_to_cmajor(data, *d);
+                quantize_rows(&mut cm, d.c, d.n * d.h * d.w, ab, binar);
+                ActT::A4(*d, cmajor_to_nhwc(&cm, *d))
+            }
         }
         ActT::A2 { n, c, data } => {
             let mut q = data.clone();
-            quantize_rows(&mut q, 1, n * c, ab, binar);
+            if !is_passthrough(ab, binar) {
+                quantize_rows(&mut q, 1, n * c, ab, binar);
+            }
             ActT::A2 { n: *n, c: *c, data: q }
         }
     };
 
-    // Per-output-channel weight quantization.
+    // Per-output-channel weight quantization (same passthrough skip: one
+    // clone instead of two full-weight transposed copies + quantize scan).
     let w = params[l.p_w];
-    let rest = w.data.len() / l.w_len;
-    let mut w2 = w_to_cmajor(&w.data, rest, l.w_len);
-    quantize_rows(&mut w2, l.w_len, rest, wb, binar);
-    let wq = cmajor_to_w(&w2, rest, l.w_len);
+    let wq = if is_passthrough(wb, binar) {
+        w.data.clone()
+    } else {
+        let rest = w.data.len() / l.w_len;
+        let mut w2 = w_to_cmajor(&w.data, rest, l.w_len);
+        quantize_rows(&mut w2, l.w_len, rest, wb, binar);
+        cmajor_to_w(&w2, rest, l.w_len)
+    };
 
     match l.typ {
         LType::Fc => {
@@ -421,30 +447,73 @@ fn backward(
 // Executables
 // ---------------------------------------------------------------------------
 
+/// Parsed `{model}_eval_{mode}` inputs: (params, images, labels, wbits,
+/// abits).
+type EvalInputs<'a> = (Vec<&'a Tensor>, &'a Tensor, &'a [i32], &'a Tensor, &'a Tensor);
+
+fn parse_eval_inputs<'a>(np: usize, inputs: &'a [&Value]) -> anyhow::Result<EvalInputs<'a>> {
+    anyhow::ensure!(inputs.len() == np + 4, "eval arity");
+    let params: Vec<&Tensor> =
+        inputs[..np].iter().map(|v| v.as_f32()).collect::<anyhow::Result<_>>()?;
+    let images = inputs[np].as_f32()?;
+    anyhow::ensure!(images.shape.len() == 4, "images must be NHWC");
+    let labels = inputs[np + 1].as_i32()?;
+    Ok((params, images, labels, inputs[np + 2].as_f32()?, inputs[np + 3].as_f32()?))
+}
+
 pub struct RefModelEval {
     pub graph: ModelGraph,
     pub binar: bool,
     /// Shared fan-out pool (from the owning `RefBackend`); `execute_batch`
     /// spreads independent batches across it.
     pool: Arc<WorkerPool>,
+    /// Compiled plans per batch size (the manifest batch is compiled at
+    /// build time; odd sizes — small test batches — compile on first use).
+    plans: Mutex<HashMap<usize, Arc<Plan>>>,
+    /// Per-worker workspace handout; bounded by the pool's peak width and
+    /// flat across steady-state batches.
+    arena: ScratchArena<Workspace>,
 }
 
 impl RefModelEval {
     pub fn new(graph: ModelGraph, binar: bool, pool: Arc<WorkerPool>) -> RefModelEval {
-        RefModelEval { graph, binar, pool }
+        let mut plans = HashMap::new();
+        plans.insert(EVAL_BATCH, Arc::new(compile_eval(&graph, EVAL_BATCH)));
+        RefModelEval { graph, binar, pool, plans: Mutex::new(plans), arena: ScratchArena::new() }
     }
 
-    /// One batch through forward + the accuracy/loss head.  Immutable so
-    /// the pool can run many batches against one executable concurrently.
-    fn run_one(&self, inputs: &[&Value]) -> anyhow::Result<Vec<Value>> {
-        let np = self.graph.params.len();
-        anyhow::ensure!(inputs.len() == np + 4, "eval arity");
-        let params: Vec<&Tensor> =
-            inputs[..np].iter().map(|v| v.as_f32()).collect::<anyhow::Result<_>>()?;
-        let images = inputs[np].as_f32()?;
-        let labels = inputs[np + 1].as_i32()?;
-        let wbits = inputs[np + 2].as_f32()?;
-        let abits = inputs[np + 3].as_f32()?;
+    fn plan_for(&self, n: usize) -> Arc<Plan> {
+        let mut plans = self.plans.lock().expect("plan cache poisoned");
+        plans.entry(n).or_insert_with(|| Arc::new(compile_eval(&self.graph, n))).clone()
+    }
+
+    /// One batch through the planned engine against a worker-owned
+    /// workspace.  Immutable so the pool can run many batches against one
+    /// executable concurrently.
+    fn run_one(&self, inputs: &[&Value], ws: &mut Workspace) -> anyhow::Result<Vec<Value>> {
+        let (params, images, labels, wbits, abits) =
+            parse_eval_inputs(self.graph.params.len(), inputs)?;
+        let plan = self.plan_for(images.shape[0]);
+        let (correct, loss) = run_eval(
+            &plan,
+            &self.graph,
+            self.binar,
+            &params,
+            images,
+            labels,
+            &wbits.data,
+            &abits.data,
+            ws,
+        )?;
+        Ok(vec![Value::scalar(correct), Value::scalar(loss)])
+    }
+
+    /// The PR 3 allocate-per-call tree-walk — kept as the semantic
+    /// reference the planned engine is byte-compared against
+    /// (`tests/plan_engine.rs`).
+    pub fn run_walk(&self, inputs: &[&Value]) -> anyhow::Result<Vec<Value>> {
+        let (params, images, labels, wbits, abits) =
+            parse_eval_inputs(self.graph.params.len(), inputs)?;
         let (logits, n, classes, _) =
             forward(&self.graph, &params, images, &wbits.data, &abits.data, self.binar, false)?;
         anyhow::ensure!(labels.len() == n, "labels len {} vs batch {n}", labels.len());
@@ -455,41 +524,87 @@ impl RefModelEval {
 
 impl Executable for RefModelEval {
     fn execute(&mut self, inputs: &[&Value]) -> anyhow::Result<Vec<Value>> {
-        self.run_one(inputs)
+        let mut ws = self.arena.checkout(Workspace::new);
+        let out = self.run_one(inputs, &mut ws);
+        self.arena.give_back(ws);
+        out
     }
 
-    /// Independent batches fan out across the worker pool.  Each batch
-    /// runs the exact serial `run_one` and results come back in batch
-    /// order, so output bytes match a serial `execute` loop at every
+    /// Independent batches fan out across the worker pool, each worker
+    /// reusing one checked-out workspace for every batch it processes.
+    /// Each batch runs the exact serial `run_one` and results come back in
+    /// batch order, so output bytes match a serial `execute` loop at every
     /// thread count (enforced by `tests/determinism.rs`).
     fn execute_batch(&mut self, batches: &[Vec<&Value>]) -> anyhow::Result<Vec<Vec<Value>>> {
         let this = &*self;
         this.pool
-            .run_indexed(batches.len(), |i| this.run_one(&batches[i]))
+            .run_indexed_scratch(batches.len(), &this.arena, Workspace::new, |ws, i| {
+                this.run_one(&batches[i], ws)
+            })
             .into_iter()
             .collect()
     }
+
+    fn scratch_stats(&self) -> Option<ScratchStats> {
+        let (f32_len, u32_len) = self
+            .arena
+            .peek(|ws| ws.iter().fold((0, 0), |(f, u), w| (f + w.f32_len(), u + w.u32_len())));
+        Some(ScratchStats { workspaces: self.arena.created(), f32_len, u32_len })
+    }
+}
+
+/// Parsed `{model}_train_{mode}` inputs.
+type TrainInputs<'a> = (
+    Vec<&'a Tensor>,
+    Vec<&'a Tensor>,
+    &'a Tensor,
+    &'a [i32],
+    &'a Tensor,
+    &'a Tensor,
+    f32,
+);
+
+fn parse_train_inputs<'a>(np: usize, inputs: &'a [&Value]) -> anyhow::Result<TrainInputs<'a>> {
+    anyhow::ensure!(inputs.len() == 2 * np + 5, "train arity");
+    let params: Vec<&Tensor> =
+        inputs[..np].iter().map(|v| v.as_f32()).collect::<anyhow::Result<_>>()?;
+    let momenta: Vec<&Tensor> =
+        inputs[np..2 * np].iter().map(|v| v.as_f32()).collect::<anyhow::Result<_>>()?;
+    let images = inputs[2 * np].as_f32()?;
+    anyhow::ensure!(images.shape.len() == 4, "images must be NHWC");
+    Ok((
+        params,
+        momenta,
+        images,
+        inputs[2 * np + 1].as_i32()?,
+        inputs[2 * np + 2].as_f32()?,
+        inputs[2 * np + 3].as_f32()?,
+        inputs[2 * np + 4].scalar_f32()?,
+    ))
 }
 
 pub struct RefModelTrain {
     pub graph: ModelGraph,
     pub binar: bool,
+    /// Compiled train plan (rebuilt only when the batch size changes —
+    /// effectively once, for the manifest's train batch).
+    plan: Arc<Plan>,
+    /// Reusable workspace; train executes serially, so one suffices.
+    ws: Workspace,
 }
 
-impl Executable for RefModelTrain {
-    fn execute(&mut self, inputs: &[&Value]) -> anyhow::Result<Vec<Value>> {
-        let np = self.graph.params.len();
-        anyhow::ensure!(inputs.len() == 2 * np + 5, "train arity");
-        let params: Vec<&Tensor> =
-            inputs[..np].iter().map(|v| v.as_f32()).collect::<anyhow::Result<_>>()?;
-        let momenta: Vec<&Tensor> =
-            inputs[np..2 * np].iter().map(|v| v.as_f32()).collect::<anyhow::Result<_>>()?;
-        let images = inputs[2 * np].as_f32()?;
-        let labels = inputs[2 * np + 1].as_i32()?;
-        let wbits = inputs[2 * np + 2].as_f32()?;
-        let abits = inputs[2 * np + 3].as_f32()?;
-        let lr = inputs[2 * np + 4].scalar_f32()?;
+impl RefModelTrain {
+    pub fn new(graph: ModelGraph, binar: bool) -> RefModelTrain {
+        let plan = Arc::new(compile_train(&graph, TRAIN_BATCH));
+        RefModelTrain { graph, binar, plan, ws: Workspace::new() }
+    }
 
+    /// The PR 3 tree-walk train step — the semantic reference for
+    /// `tests/plan_engine.rs`.
+    pub fn run_walk(&self, inputs: &[&Value]) -> anyhow::Result<Vec<Value>> {
+        let np = self.graph.params.len();
+        let (params, momenta, images, labels, wbits, abits, lr) =
+            parse_train_inputs(np, inputs)?;
         let (logits, n, classes, tapes) =
             forward(&self.graph, &params, images, &wbits.data, &abits.data, self.binar, true)?;
         anyhow::ensure!(labels.len() == n, "labels len {} vs batch {n}", labels.len());
@@ -522,6 +637,38 @@ impl Executable for RefModelTrain {
         outs.extend(new_momenta);
         outs.push(Value::scalar(loss));
         Ok(outs)
+    }
+}
+
+impl Executable for RefModelTrain {
+    fn execute(&mut self, inputs: &[&Value]) -> anyhow::Result<Vec<Value>> {
+        let np = self.graph.params.len();
+        let (params, momenta, images, labels, wbits, abits, lr) =
+            parse_train_inputs(np, inputs)?;
+        if self.plan.batch() != images.shape[0] {
+            self.plan = Arc::new(compile_train(&self.graph, images.shape[0]));
+        }
+        run_train(
+            &self.plan,
+            &self.graph,
+            self.binar,
+            &params,
+            &momenta,
+            images,
+            labels,
+            &wbits.data,
+            &abits.data,
+            lr,
+            &mut self.ws,
+        )
+    }
+
+    fn scratch_stats(&self) -> Option<ScratchStats> {
+        Some(ScratchStats {
+            workspaces: 1,
+            f32_len: self.ws.f32_len(),
+            u32_len: self.ws.u32_len(),
+        })
     }
 }
 
@@ -590,7 +737,7 @@ mod tests {
         let img_v = Value::F32(images);
         let lbl_v = Value::i32(vec![n], labels);
         let lr = Value::scalar(0.05);
-        let mut exe = RefModelTrain { graph: g.clone(), binar: false };
+        let mut exe = RefModelTrain::new(g.clone(), false);
         let np = g.params.len();
         let mut losses = Vec::new();
         for _ in 0..6 {
@@ -695,6 +842,64 @@ mod tests {
         let l0 = expect[0][1].scalar_f32().unwrap();
         let l1 = expect[1][1].scalar_f32().unwrap();
         assert_ne!(l0.to_bits(), l1.to_bits(), "batches too similar to detect reordering");
+    }
+
+    #[test]
+    fn planned_eval_matches_walk_bitwise() {
+        // Quick in-crate guard (full sweep lives in tests/plan_engine.rs):
+        // the planned engine must reproduce the tree-walk to the bit.
+        let g = model_graph("cif10").unwrap();
+        let ps = graph_params(&g, 41);
+        let n = 3;
+        let mut inputs: Vec<Value> = ps.tensors.iter().map(|t| Value::F32(t.clone())).collect();
+        inputs.push(Value::F32(tiny_images(n, 43)));
+        inputs.push(Value::i32(vec![n], (0..n as i32).map(|i| i % 10).collect()));
+        inputs.push(Value::f32(vec![g.w_channels], vec![5.0; g.w_channels]));
+        inputs.push(Value::f32(vec![g.a_channels], vec![4.0; g.a_channels]));
+        let refs: Vec<&Value> = inputs.iter().collect();
+        let mut exe = RefModelEval::new(g, false, Arc::new(WorkerPool::new(1)));
+        let planned = exe.execute(&refs).unwrap();
+        let walk = exe.run_walk(&refs).unwrap();
+        for (p, w) in planned.iter().zip(&walk) {
+            assert_eq!(
+                p.scalar_f32().unwrap().to_bits(),
+                w.scalar_f32().unwrap().to_bits()
+            );
+        }
+        // Second dispatch reuses the warm workspace with identical bytes.
+        let again = exe.execute(&refs).unwrap();
+        assert_eq!(again, planned);
+        let stats = exe.scratch_stats().unwrap();
+        assert_eq!(stats.workspaces, 1, "serial eval must reuse one workspace");
+    }
+
+    #[test]
+    fn planned_train_matches_walk_bitwise() {
+        let g = model_graph("cif10").unwrap();
+        let ps = graph_params(&g, 47);
+        let momenta = ps.zeros_like();
+        let n = 2;
+        let np = g.params.len();
+        let mut inputs: Vec<Value> = Vec::with_capacity(2 * np + 5);
+        inputs.extend(ps.tensors.iter().map(|t| Value::F32(t.clone())));
+        inputs.extend(momenta.tensors.iter().map(|t| Value::F32(t.clone())));
+        inputs.push(Value::F32(tiny_images(n, 53)));
+        inputs.push(Value::i32(vec![n], (0..n as i32).map(|i| i % 10).collect()));
+        inputs.push(Value::f32(vec![g.w_channels], vec![6.0; g.w_channels]));
+        inputs.push(Value::f32(vec![g.a_channels], vec![5.0; g.a_channels]));
+        inputs.push(Value::scalar(0.05));
+        let refs: Vec<&Value> = inputs.iter().collect();
+        let mut exe = RefModelTrain::new(g, false);
+        let planned = exe.execute(&refs).unwrap();
+        let walk = exe.run_walk(&refs).unwrap();
+        assert_eq!(planned.len(), walk.len());
+        for (i, (p, w)) in planned.iter().zip(&walk).enumerate() {
+            let (pt, wt) = (p.as_f32().unwrap(), w.as_f32().unwrap());
+            assert_eq!(pt.shape, wt.shape, "output {i}");
+            for (a, b) in pt.data.iter().zip(&wt.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "output {i}");
+            }
+        }
     }
 
     #[test]

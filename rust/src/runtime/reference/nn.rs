@@ -8,11 +8,20 @@
 //! All compute-heavy contractions route through the packed, cache-blocked
 //! kernels in `kernels/` (convs lower to im2col + matmul); this module is
 //! layer logic over that API.  Everything is f32 like the artifacts.
+//!
+//! Every op's core is an `_into` function writing caller-provided output
+//! slices — the planned execution engine (`plan.rs`) feeds them workspace
+//! buffers so steady-state batches allocate nothing.  The original
+//! allocating signatures remain as thin wrappers (used by the reference
+//! tree-walk the plan engine is verified against, and by tests).  Each
+//! `_into` op either fully overwrites its outputs or zero-fills before
+//! accumulating, so stale workspace contents can never leak into results.
 
 // The kernel entry points double as this module's matmul/pad API so layer
 // code and the executables import from one place.
 pub use crate::runtime::reference::kernels::{
-    col2im_acc, im2col, im2col::same_pad, matmul, matmul_a_bt, matmul_acc, matmul_at_b_acc,
+    col2im_acc, im2col, im2col::same_pad, matmul, matmul_a_bt, matmul_a_bt_into, matmul_acc,
+    matmul_acc_scratch, matmul_at_b_acc, matmul_panel_len,
 };
 
 /// NHWC activation dims.
@@ -34,51 +43,76 @@ impl Dims {
 // Layout shuffles (channel-major views for the per-channel quantizers)
 // ---------------------------------------------------------------------------
 
-/// NHWC → channel-major (c, n·h·w), rows ordered by the (n,h,w) scan.
-pub fn nhwc_to_cmajor(x: &[f32], d: Dims) -> Vec<f32> {
+/// NHWC → channel-major (c, n·h·w) into caller storage (full overwrite),
+/// rows ordered by the (n,h,w) scan.
+pub fn nhwc_to_cmajor_into(x: &[f32], d: Dims, out: &mut [f32]) {
     let rows = d.n * d.h * d.w;
-    let mut out = vec![0.0f32; x.len()];
+    debug_assert_eq!(out.len(), x.len());
     for r in 0..rows {
         for c in 0..d.c {
             out[c * rows + r] = x[r * d.c + c];
         }
     }
+}
+
+/// NHWC → channel-major (c, n·h·w), allocating.
+pub fn nhwc_to_cmajor(x: &[f32], d: Dims) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    nhwc_to_cmajor_into(x, d, &mut out);
     out
 }
 
-/// Inverse of [`nhwc_to_cmajor`].
-pub fn cmajor_to_nhwc(xc: &[f32], d: Dims) -> Vec<f32> {
+/// Inverse of [`nhwc_to_cmajor_into`] (full overwrite of `out`).
+pub fn cmajor_to_nhwc_into(xc: &[f32], d: Dims, out: &mut [f32]) {
     let rows = d.n * d.h * d.w;
-    let mut out = vec![0.0f32; xc.len()];
+    debug_assert_eq!(out.len(), xc.len());
     for c in 0..d.c {
         for r in 0..rows {
             out[r * d.c + c] = xc[c * rows + r];
         }
     }
+}
+
+/// Inverse of [`nhwc_to_cmajor`], allocating.
+pub fn cmajor_to_nhwc(xc: &[f32], d: Dims) -> Vec<f32> {
+    let mut out = vec![0.0f32; xc.len()];
+    cmajor_to_nhwc_into(xc, d, &mut out);
     out
 }
 
-/// Weight (…, cout) row-major → channel-major (cout, rest).
-pub fn w_to_cmajor(w: &[f32], rest: usize, cout: usize) -> Vec<f32> {
+/// Weight (…, cout) row-major → channel-major (cout, rest), full overwrite.
+pub fn w_to_cmajor_into(w: &[f32], rest: usize, cout: usize, out: &mut [f32]) {
     debug_assert_eq!(w.len(), rest * cout);
-    let mut out = vec![0.0f32; w.len()];
+    debug_assert_eq!(out.len(), w.len());
     for r in 0..rest {
         for co in 0..cout {
             out[co * rest + r] = w[r * cout + co];
         }
     }
+}
+
+/// Weight (…, cout) row-major → channel-major (cout, rest), allocating.
+pub fn w_to_cmajor(w: &[f32], rest: usize, cout: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; w.len()];
+    w_to_cmajor_into(w, rest, cout, &mut out);
     out
 }
 
-/// Inverse of [`w_to_cmajor`].
-pub fn cmajor_to_w(w2: &[f32], rest: usize, cout: usize) -> Vec<f32> {
+/// Inverse of [`w_to_cmajor_into`] (full overwrite of `out`).
+pub fn cmajor_to_w_into(w2: &[f32], rest: usize, cout: usize, out: &mut [f32]) {
     debug_assert_eq!(w2.len(), rest * cout);
-    let mut out = vec![0.0f32; w2.len()];
+    debug_assert_eq!(out.len(), w2.len());
     for co in 0..cout {
         for r in 0..rest {
             out[r * cout + co] = w2[co * rest + r];
         }
     }
+}
+
+/// Inverse of [`w_to_cmajor`], allocating.
+pub fn cmajor_to_w(w2: &[f32], rest: usize, cout: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; w2.len()];
+    cmajor_to_w_into(w2, rest, cout, &mut out);
     out
 }
 
@@ -86,29 +120,119 @@ pub fn cmajor_to_w(w2: &[f32], rest: usize, cout: usize) -> Vec<f32> {
 // Convolutions
 // ---------------------------------------------------------------------------
 
-/// Dense conv, SAME padding: x NHWC, w (k,k,cin,cout) row-major.
-pub fn conv2d(x: &[f32], d: Dims, w: &[f32], k: usize, s: usize, cout: usize) -> (Vec<f32>, Dims) {
+/// Scratch size for the im2col patch matrix of a conv over `d` (0 for the
+/// pointwise path, which never materializes patches).
+pub fn conv_patch_len(d: Dims, k: usize, s: usize) -> usize {
+    if k == 1 && s == 1 {
+        return 0;
+    }
+    let (ho, _, _) = same_pad(d.h, k, s);
+    let (wo, _, _) = same_pad(d.w, k, s);
+    ho * wo * k * k * d.c
+}
+
+/// Scratch size for the matmul packing panel of a conv over `d`
+/// (reduction dim = `k·k·cin` — which is just `cin` on the pointwise
+/// path — against `cout` output columns).
+pub fn conv_panel_len(d: Dims, k: usize, cout: usize) -> usize {
+    matmul_panel_len(k * k * d.c, cout)
+}
+
+/// Dense conv, SAME padding, into caller storage: x NHWC, w (k,k,cin,cout)
+/// row-major; `out` is fully overwritten, `patches` is im2col scratch of
+/// [`conv_patch_len`] (ignored on the pointwise path) and `panel` is
+/// matmul packing scratch of [`conv_panel_len`] (ignored on small
+/// shapes).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_into(
+    x: &[f32],
+    d: Dims,
+    w: &[f32],
+    k: usize,
+    s: usize,
+    cout: usize,
+    out: &mut [f32],
+    patches: &mut [f32],
+    panel: &mut [f32],
+) -> Dims {
     let (ho, _, _) = same_pad(d.h, k, s);
     let (wo, _, _) = same_pad(d.w, k, s);
     let od = Dims { n: d.n, h: ho, w: wo, c: cout };
+    debug_assert_eq!(out.len(), od.elems());
     if k == 1 && s == 1 {
         // Pointwise conv == matmul over flattened pixels.
         let m = d.n * d.h * d.w;
-        return (matmul(x, w, m, d.c, cout), od);
+        out.fill(0.0);
+        matmul_acc_scratch(out, x, w, m, d.c, cout, panel);
+        return od;
     }
     let cols = k * k * d.c;
     let img_elems = d.h * d.w * d.c;
-    let mut out = vec![0.0f32; od.elems()];
-    let mut patches = vec![0.0f32; ho * wo * cols];
+    debug_assert_eq!(patches.len(), ho * wo * cols);
+    out.fill(0.0);
     for ni in 0..d.n {
-        im2col(&x[ni * img_elems..(ni + 1) * img_elems], d.h, d.w, d.c, k, s, &mut patches);
+        im2col(&x[ni * img_elems..(ni + 1) * img_elems], d.h, d.w, d.c, k, s, patches);
         let dst = &mut out[ni * ho * wo * cout..(ni + 1) * ho * wo * cout];
-        matmul_acc(dst, &patches, w, ho * wo, cols, cout);
+        matmul_acc_scratch(dst, patches, w, ho * wo, cols, cout, panel);
     }
+    od
+}
+
+/// Dense conv, SAME padding, allocating: x NHWC, w (k,k,cin,cout) row-major.
+pub fn conv2d(x: &[f32], d: Dims, w: &[f32], k: usize, s: usize, cout: usize) -> (Vec<f32>, Dims) {
+    let (ho, _, _) = same_pad(d.h, k, s);
+    let (wo, _, _) = same_pad(d.w, k, s);
+    let mut out = vec![0.0f32; d.n * ho * wo * cout];
+    let mut patches = vec![0.0f32; conv_patch_len(d, k, s)];
+    let mut panel = vec![0.0f32; conv_panel_len(d, k, cout)];
+    let od = conv2d_into(x, d, w, k, s, cout, &mut out, &mut patches, &mut panel);
     (out, od)
 }
 
-/// Dense conv backward: returns (dx, dw) for quantized inputs x / weight w.
+/// Dense conv backward into caller storage: writes dx (fully), accumulates
+/// dw (caller zero-fills for a plain gradient).  `patches`/`dpatch` are
+/// per-image scratch of [`conv_patch_len`] each (ignored on the pointwise
+/// path).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_bwd_into(
+    x: &[f32],
+    d: Dims,
+    w: &[f32],
+    k: usize,
+    s: usize,
+    cout: usize,
+    dy: &[f32],
+    dx: &mut [f32],
+    dw_acc: &mut [f32],
+    patches: &mut [f32],
+    dpatch: &mut [f32],
+) {
+    debug_assert_eq!(dx.len(), x.len());
+    debug_assert_eq!(dw_acc.len(), w.len());
+    if k == 1 && s == 1 {
+        let m = d.n * d.h * d.w;
+        matmul_at_b_acc(dw_acc, x, dy, m, d.c, cout);
+        matmul_a_bt_into(dx, dy, w, m, cout, d.c);
+        return;
+    }
+    let (ho, _, _) = same_pad(d.h, k, s);
+    let (wo, _, _) = same_pad(d.w, k, s);
+    let cols = k * k * d.c;
+    let img_elems = d.h * d.w * d.c;
+    debug_assert_eq!(patches.len(), ho * wo * cols);
+    debug_assert_eq!(dpatch.len(), ho * wo * cols);
+    dx.fill(0.0);
+    for ni in 0..d.n {
+        let dy_img = &dy[ni * ho * wo * cout..(ni + 1) * ho * wo * cout];
+        im2col(&x[ni * img_elems..(ni + 1) * img_elems], d.h, d.w, d.c, k, s, patches);
+        matmul_at_b_acc(dw_acc, patches, dy_img, ho * wo, cols, cout);
+        matmul_a_bt_into(dpatch, dy_img, w, ho * wo, cout, cols);
+        col2im_acc(dpatch, d.h, d.w, d.c, k, s, &mut dx[ni * img_elems..(ni + 1) * img_elems]);
+    }
+}
+
+/// Dense conv backward, allocating: returns (dx, dw) for quantized inputs
+/// x / weight w.
 pub fn conv2d_bwd(
     x: &[f32],
     d: Dims,
@@ -118,39 +242,23 @@ pub fn conv2d_bwd(
     cout: usize,
     dy: &[f32],
 ) -> (Vec<f32>, Vec<f32>) {
-    if k == 1 && s == 1 {
-        let m = d.n * d.h * d.w;
-        let dw = {
-            let mut dw = vec![0.0f32; d.c * cout];
-            matmul_at_b_acc(&mut dw, x, dy, m, d.c, cout);
-            dw
-        };
-        let dx = matmul_a_bt(dy, w, m, cout, d.c);
-        return (dx, dw);
-    }
-    let (ho, _, _) = same_pad(d.h, k, s);
-    let (wo, _, _) = same_pad(d.w, k, s);
-    let cols = k * k * d.c;
-    let img_elems = d.h * d.w * d.c;
     let mut dx = vec![0.0f32; x.len()];
     let mut dw = vec![0.0f32; w.len()];
-    let mut patches = vec![0.0f32; ho * wo * cols];
-    for ni in 0..d.n {
-        let dy_img = &dy[ni * ho * wo * cout..(ni + 1) * ho * wo * cout];
-        im2col(&x[ni * img_elems..(ni + 1) * img_elems], d.h, d.w, d.c, k, s, &mut patches);
-        matmul_at_b_acc(&mut dw, &patches, dy_img, ho * wo, cols, cout);
-        let dpatch = matmul_a_bt(dy_img, w, ho * wo, cout, cols);
-        col2im_acc(&dpatch, d.h, d.w, d.c, k, s, &mut dx[ni * img_elems..(ni + 1) * img_elems]);
-    }
+    let plen = conv_patch_len(d, k, s);
+    let mut patches = vec![0.0f32; plen];
+    let mut dpatch = vec![0.0f32; plen];
+    conv2d_bwd_into(x, d, w, k, s, cout, dy, &mut dx, &mut dw, &mut patches, &mut dpatch);
     (dx, dw)
 }
 
-/// Depthwise conv (feature_group_count = cin): w (k,k,1,cin).
-pub fn dwconv2d(x: &[f32], d: Dims, w: &[f32], k: usize, s: usize) -> (Vec<f32>, Dims) {
+/// Depthwise conv (feature_group_count = cin) into caller storage
+/// (zero-filled then accumulated): w (k,k,1,cin).
+pub fn dwconv2d_into(x: &[f32], d: Dims, w: &[f32], k: usize, s: usize, out: &mut [f32]) -> Dims {
     let (ho, pad_t, _) = same_pad(d.h, k, s);
     let (wo, pad_l, _) = same_pad(d.w, k, s);
     let od = Dims { n: d.n, h: ho, w: wo, c: d.c };
-    let mut out = vec![0.0f32; od.elems()];
+    debug_assert_eq!(out.len(), od.elems());
+    out.fill(0.0);
     let img_elems = d.h * d.w * d.c;
     for ni in 0..d.n {
         let img = &x[ni * img_elems..(ni + 1) * img_elems];
@@ -178,22 +286,36 @@ pub fn dwconv2d(x: &[f32], d: Dims, w: &[f32], k: usize, s: usize) -> (Vec<f32>,
             }
         }
     }
+    od
+}
+
+/// Depthwise conv (feature_group_count = cin), allocating: w (k,k,1,cin).
+pub fn dwconv2d(x: &[f32], d: Dims, w: &[f32], k: usize, s: usize) -> (Vec<f32>, Dims) {
+    let (ho, _, _) = same_pad(d.h, k, s);
+    let (wo, _, _) = same_pad(d.w, k, s);
+    let mut out = vec![0.0f32; d.n * ho * wo * d.c];
+    let od = dwconv2d_into(x, d, w, k, s, &mut out);
     (out, od)
 }
 
-/// Depthwise conv backward: (dx, dw).
-pub fn dwconv2d_bwd(
+/// Depthwise conv backward into caller storage: writes dx (zero-filled
+/// then scatter-accumulated), accumulates dw (caller zero-fills for a
+/// plain gradient).
+pub fn dwconv2d_bwd_into(
     x: &[f32],
     d: Dims,
     w: &[f32],
     k: usize,
     s: usize,
     dy: &[f32],
-) -> (Vec<f32>, Vec<f32>) {
+    dx: &mut [f32],
+    dw_acc: &mut [f32],
+) {
     let (ho, pad_t, _) = same_pad(d.h, k, s);
     let (wo, pad_l, _) = same_pad(d.w, k, s);
-    let mut dx = vec![0.0f32; x.len()];
-    let mut dw = vec![0.0f32; w.len()];
+    debug_assert_eq!(dx.len(), x.len());
+    debug_assert_eq!(dw_acc.len(), w.len());
+    dx.fill(0.0);
     let img_elems = d.h * d.w * d.c;
     for ni in 0..d.n {
         let img = &x[ni * img_elems..(ni + 1) * img_elems];
@@ -216,13 +338,27 @@ pub fn dwconv2d_bwd(
                         let wi = (ky * k + kx) * d.c;
                         for c in 0..d.c {
                             dimg[src + c] += drow[c] * w[wi + c];
-                            dw[wi + c] += img[src + c] * drow[c];
+                            dw_acc[wi + c] += img[src + c] * drow[c];
                         }
                     }
                 }
             }
         }
     }
+}
+
+/// Depthwise conv backward, allocating: (dx, dw).
+pub fn dwconv2d_bwd(
+    x: &[f32],
+    d: Dims,
+    w: &[f32],
+    k: usize,
+    s: usize,
+    dy: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let mut dx = vec![0.0f32; x.len()];
+    let mut dw = vec![0.0f32; w.len()];
+    dwconv2d_bwd_into(x, d, w, k, s, dy, &mut dx, &mut dw);
     (dx, dw)
 }
 
@@ -246,14 +382,26 @@ pub struct GnCache {
     pub istd: Vec<f32>,
 }
 
-/// y = xn·γ + β with per-(n, group) statistics over (h, w, c/groups).
-pub fn group_norm(x: &[f32], d: Dims, gamma: &[f32], beta: &[f32]) -> (Vec<f32>, GnCache) {
+/// y = xn·γ + β with per-(n, group) statistics over (h, w, c/groups),
+/// into caller storage (full overwrite of `y`).  `cache` = (xn, istd)
+/// slices filled for the backward pass when present; the values of `y`
+/// are bit-identical either way (eval paths skip the cache entirely).
+pub fn group_norm_into(
+    x: &[f32],
+    d: Dims,
+    gamma: &[f32],
+    beta: &[f32],
+    y: &mut [f32],
+    mut cache: Option<(&mut [f32], &mut [f32])>,
+) {
     let gr = gn_groups(d.c);
     let cg = d.c / gr;
     let m = (d.h * d.w * cg) as f64;
-    let mut xn = vec![0.0f32; x.len()];
-    let mut istd = vec![0.0f32; d.n * gr];
-    let mut y = vec![0.0f32; x.len()];
+    debug_assert_eq!(y.len(), x.len());
+    if let Some((xn, istd)) = &cache {
+        debug_assert_eq!(xn.len(), x.len());
+        debug_assert_eq!(istd.len(), d.n * gr);
+    }
     let img = d.h * d.w * d.c;
     for ni in 0..d.n {
         for g in 0..gr {
@@ -269,35 +417,55 @@ pub fn group_norm(x: &[f32], d: Dims, gamma: &[f32], beta: &[f32]) -> (Vec<f32>,
             let mu = sum / m;
             let var = (sq / m - mu * mu).max(0.0);
             let is = 1.0 / (var + 1e-5).sqrt();
-            istd[ni * gr + g] = is as f32;
+            if let Some((_, istd)) = &mut cache {
+                istd[ni * gr + g] = is as f32;
+            }
             for p in 0..d.h * d.w {
                 let base = ni * img + p * d.c + g * cg;
                 for j in 0..cg {
                     let c = g * cg + j;
                     let v = ((x[base + j] as f64 - mu) * is) as f32;
-                    xn[base + j] = v;
+                    if let Some((xn, _)) = &mut cache {
+                        xn[base + j] = v;
+                    }
                     y[base + j] = v * gamma[c] + beta[c];
                 }
             }
         }
     }
+}
+
+/// y = xn·γ + β, allocating, with the backward cache.
+pub fn group_norm(x: &[f32], d: Dims, gamma: &[f32], beta: &[f32]) -> (Vec<f32>, GnCache) {
+    let gr = gn_groups(d.c);
+    let mut xn = vec![0.0f32; x.len()];
+    let mut istd = vec![0.0f32; d.n * gr];
+    let mut y = vec![0.0f32; x.len()];
+    group_norm_into(x, d, gamma, beta, &mut y, Some((&mut xn, &mut istd)));
     (y, GnCache { xn, istd })
 }
 
-/// GroupNorm backward: (dx, dγ, dβ).
-pub fn group_norm_bwd(
+/// GroupNorm backward into caller storage: writes dx (fully), accumulates
+/// dγ/dβ (callers zero-fill for plain gradients).  `xn`/`istd` are the
+/// forward cache slices.
+#[allow(clippy::too_many_arguments)]
+pub fn group_norm_bwd_into(
     dy: &[f32],
     d: Dims,
     gamma: &[f32],
-    cache: &GnCache,
-) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    xn_c: &[f32],
+    istd_c: &[f32],
+    dx: &mut [f32],
+    dgamma: &mut [f32],
+    dbeta: &mut [f32],
+) {
     let gr = gn_groups(d.c);
     let cg = d.c / gr;
     let m = (d.h * d.w * cg) as f64;
     let img = d.h * d.w * d.c;
-    let mut dx = vec![0.0f32; dy.len()];
-    let mut dgamma = vec![0.0f32; d.c];
-    let mut dbeta = vec![0.0f32; d.c];
+    debug_assert_eq!(dx.len(), dy.len());
+    debug_assert_eq!(dgamma.len(), d.c);
+    debug_assert_eq!(dbeta.len(), d.c);
     for ni in 0..d.n {
         for g in 0..gr {
             // dxn = dy·γ; group sums of dxn and dxn·xn.
@@ -307,7 +475,7 @@ pub fn group_norm_bwd(
                 for j in 0..cg {
                     let c = g * cg + j;
                     let dyv = dy[base + j];
-                    let xnv = cache.xn[base + j];
+                    let xnv = xn_c[base + j];
                     dgamma[c] += dyv * xnv;
                     dbeta[c] += dyv;
                     let dxn = (dyv * gamma[c]) as f64;
@@ -315,7 +483,7 @@ pub fn group_norm_bwd(
                     s2 += dxn * xnv as f64;
                 }
             }
-            let is = cache.istd[ni * gr + g] as f64;
+            let is = istd_c[ni * gr + g] as f64;
             let mean1 = s1 / m;
             let mean2 = s2 / m;
             for p in 0..d.h * d.w {
@@ -323,12 +491,25 @@ pub fn group_norm_bwd(
                 for j in 0..cg {
                     let c = g * cg + j;
                     let dxn = (dy[base + j] * gamma[c]) as f64;
-                    let xnv = cache.xn[base + j] as f64;
+                    let xnv = xn_c[base + j] as f64;
                     dx[base + j] = (is * (dxn - mean1 - xnv * mean2)) as f32;
                 }
             }
         }
     }
+}
+
+/// GroupNorm backward, allocating: (dx, dγ, dβ).
+pub fn group_norm_bwd(
+    dy: &[f32],
+    d: Dims,
+    gamma: &[f32],
+    cache: &GnCache,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut dx = vec![0.0f32; dy.len()];
+    let mut dgamma = vec![0.0f32; d.c];
+    let mut dbeta = vec![0.0f32; d.c];
+    group_norm_bwd_into(dy, d, gamma, &cache.xn, &cache.istd, &mut dx, &mut dgamma, &mut dbeta);
     (dx, dgamma, dbeta)
 }
 
@@ -342,14 +523,21 @@ pub fn add_bias(y: &mut [f32], c: usize, bias: &[f32]) {
     }
 }
 
-/// dβ for a bias add: channel sums of dy.
-pub fn bias_bwd(dy: &[f32], c: usize) -> Vec<f32> {
-    let mut db = vec![0.0f32; c];
+/// dβ for a bias add, accumulated into caller storage (callers zero-fill
+/// for a plain gradient): channel sums of dy.
+pub fn bias_bwd_acc(dy: &[f32], c: usize, db: &mut [f32]) {
+    debug_assert_eq!(db.len(), c);
     for row in dy.chunks_exact(c) {
         for (d, &v) in db.iter_mut().zip(row) {
             *d += v;
         }
     }
+}
+
+/// dβ for a bias add, allocating: channel sums of dy.
+pub fn bias_bwd(dy: &[f32], c: usize) -> Vec<f32> {
+    let mut db = vec![0.0f32; c];
+    bias_bwd_acc(dy, c, &mut db);
     db
 }
 
@@ -370,13 +558,17 @@ pub fn relu_bwd(dy: &mut [f32], out: &[f32]) {
     }
 }
 
-/// 2×2 max pool, stride 2, VALID.  Returns (y, argmax flat indices, dims).
-pub fn maxpool2(x: &[f32], d: Dims) -> (Vec<f32>, Vec<u32>, Dims) {
+/// 2×2 max pool, stride 2, VALID, into caller storage (full overwrite of
+/// `y`).  `idx` records argmax flat indices for the backward pass when
+/// present; `y` is bit-identical either way.
+pub fn maxpool2_into(x: &[f32], d: Dims, y: &mut [f32], mut idx: Option<&mut [u32]>) -> Dims {
     let ho = d.h / 2;
     let wo = d.w / 2;
     let od = Dims { n: d.n, h: ho, w: wo, c: d.c };
-    let mut y = vec![0.0f32; od.elems()];
-    let mut idx = vec![0u32; od.elems()];
+    debug_assert_eq!(y.len(), od.elems());
+    if let Some(idx) = &idx {
+        debug_assert_eq!(idx.len(), od.elems());
+    }
     for ni in 0..d.n {
         for oy in 0..ho {
             for ox in 0..wo {
@@ -395,26 +587,47 @@ pub fn maxpool2(x: &[f32], d: Dims) -> (Vec<f32>, Vec<u32>, Dims) {
                     }
                     let dst = ((ni * ho + oy) * wo + ox) * d.c + c;
                     y[dst] = best;
-                    idx[dst] = bi as u32;
+                    if let Some(idx) = &mut idx {
+                        idx[dst] = bi as u32;
+                    }
                 }
             }
         }
     }
+    od
+}
+
+/// 2×2 max pool, stride 2, VALID, allocating.  Returns (y, argmax flat
+/// indices, dims).
+pub fn maxpool2(x: &[f32], d: Dims) -> (Vec<f32>, Vec<u32>, Dims) {
+    let od = Dims { n: d.n, h: d.h / 2, w: d.w / 2, c: d.c };
+    let mut y = vec![0.0f32; od.elems()];
+    let mut idx = vec![0u32; od.elems()];
+    maxpool2_into(x, d, &mut y, Some(&mut idx));
     (y, idx, od)
+}
+
+/// Max-pool backward into caller storage: dx zero-filled then
+/// scatter-accumulated through the argmax indices.
+pub fn maxpool2_bwd_into(dy: &[f32], idx: &[u32], dx: &mut [f32]) {
+    dx.fill(0.0);
+    for (d, &i) in dy.iter().zip(idx) {
+        dx[i as usize] += d;
+    }
 }
 
 pub fn maxpool2_bwd(dy: &[f32], idx: &[u32], in_elems: usize) -> Vec<f32> {
     let mut dx = vec![0.0f32; in_elems];
-    for (d, &i) in dy.iter().zip(idx) {
-        dx[i as usize] += d;
-    }
+    maxpool2_bwd_into(dy, idx, &mut dx);
     dx
 }
 
-/// Global average pool over (h, w): NHWC → (n, c).
-pub fn gap(x: &[f32], d: Dims) -> Vec<f32> {
+/// Global average pool over (h, w) into caller storage (zero-filled then
+/// accumulated): NHWC → (n, c).
+pub fn gap_into(x: &[f32], d: Dims, y: &mut [f32]) {
     let hw = (d.h * d.w) as f32;
-    let mut y = vec![0.0f32; d.n * d.c];
+    debug_assert_eq!(y.len(), d.n * d.c);
+    y.fill(0.0);
     for ni in 0..d.n {
         let dst = &mut y[ni * d.c..(ni + 1) * d.c];
         for p in 0..d.h * d.w {
@@ -427,12 +640,19 @@ pub fn gap(x: &[f32], d: Dims) -> Vec<f32> {
             *v /= hw;
         }
     }
+}
+
+/// Global average pool over (h, w), allocating: NHWC → (n, c).
+pub fn gap(x: &[f32], d: Dims) -> Vec<f32> {
+    let mut y = vec![0.0f32; d.n * d.c];
+    gap_into(x, d, &mut y);
     y
 }
 
-pub fn gap_bwd(dy: &[f32], d: Dims) -> Vec<f32> {
+/// GAP backward into caller storage (full overwrite).
+pub fn gap_bwd_into(dy: &[f32], d: Dims, dx: &mut [f32]) {
     let hw = (d.h * d.w) as f32;
-    let mut dx = vec![0.0f32; d.elems()];
+    debug_assert_eq!(dx.len(), d.elems());
     for ni in 0..d.n {
         let g = &dy[ni * d.c..(ni + 1) * d.c];
         for p in 0..d.h * d.w {
@@ -442,6 +662,11 @@ pub fn gap_bwd(dy: &[f32], d: Dims) -> Vec<f32> {
             }
         }
     }
+}
+
+pub fn gap_bwd(dy: &[f32], d: Dims) -> Vec<f32> {
+    let mut dx = vec![0.0f32; d.elems()];
+    gap_bwd_into(dy, d, &mut dx);
     dx
 }
 
@@ -449,20 +674,23 @@ pub fn gap_bwd(dy: &[f32], d: Dims) -> Vec<f32> {
 // Loss head
 // ---------------------------------------------------------------------------
 
-/// Softmax cross-entropy head: (correct count, mean loss, optional
-/// d(logits) when `want_grad`).  `logits` is (n, c) row-major.
-pub fn softmax_xent(
+/// Softmax cross-entropy head into caller storage: (correct count, mean
+/// loss); `grad` is fully overwritten with d(logits) when present.
+/// `logits` is (n, c) row-major.
+pub fn softmax_xent_into(
     logits: &[f32],
     n: usize,
     c: usize,
     labels: &[i32],
-    want_grad: bool,
-) -> (f32, f32, Option<Vec<f32>>) {
+    mut grad: Option<&mut [f32]>,
+) -> (f32, f32) {
     debug_assert_eq!(logits.len(), n * c);
     debug_assert_eq!(labels.len(), n);
+    if let Some(g) = &grad {
+        debug_assert_eq!(g.len(), n * c);
+    }
     let mut correct = 0.0f32;
     let mut loss = 0.0f64;
-    let mut grad = if want_grad { Some(vec![0.0f32; n * c]) } else { None };
     for i in 0..n {
         let row = &logits[i * c..(i + 1) * c];
         let mut maxv = f32::NEG_INFINITY;
@@ -491,7 +719,21 @@ pub fn softmax_xent(
             }
         }
     }
-    (correct, (loss / n as f64) as f32, grad)
+    (correct, (loss / n as f64) as f32)
+}
+
+/// Softmax cross-entropy head, allocating: (correct count, mean loss,
+/// optional d(logits) when `want_grad`).  `logits` is (n, c) row-major.
+pub fn softmax_xent(
+    logits: &[f32],
+    n: usize,
+    c: usize,
+    labels: &[i32],
+    want_grad: bool,
+) -> (f32, f32, Option<Vec<f32>>) {
+    let mut grad = if want_grad { Some(vec![0.0f32; n * c]) } else { None };
+    let (correct, loss) = softmax_xent_into(logits, n, c, labels, grad.as_deref_mut());
+    (correct, loss, grad)
 }
 
 #[cfg(test)]

@@ -1,0 +1,1638 @@
+//! Two-phase planned execution engine for the reference backend.
+//!
+//! **Phase 1 (compile, at `Executable` build time):** [`compile_eval`] /
+//! [`compile_train`] walk a [`ModelGraph`] once and lower it to a [`Plan`]
+//! — a flat [`Step`] list with every shape statically resolved and every
+//! intermediate assigned a **buffer slot**.  A liveness pass
+//! ([`assign_slots`]) maps the virtual buffers onto a minimal set of
+//! physical slots: a buffer's slot is recycled as soon as its last reader
+//! has run, so non-overlapping intermediates share storage (training tapes
+//! stay live from their forward def to their backward use automatically —
+//! liveness sees the backward read).
+//!
+//! **Phase 2 (dispatch):** [`run_eval`] / [`run_train`] execute the plan
+//! against a reusable [`Workspace`] arena (one per worker, handed out by
+//! `util::pool::ScratchArena`).  Steps write into workspace slots through
+//! the `_into` kernels of `nn.rs`, so steady-state batches perform zero
+//! heap allocation for intermediates.
+//!
+//! # Determinism contract
+//!
+//! A plan computes **exactly** the arithmetic of the PR 3 tree-walk
+//! (`model_exec::forward`/`backward`), in the same per-element order: every
+//! step either fully overwrites its output slot or zero-fills before
+//! accumulating, replicating what a freshly `vec![0.0; _]`-allocated
+//! buffer would hold.  Planned output is therefore byte-identical to the
+//! walk at every thread count — `tests/plan_engine.rs` enforces this for
+//! all zoo models × quant/binar × eval/train.
+//!
+//! The one *compute* short-cut is shared with the walk: when a per-channel
+//! bit slice is an exact passthrough (`quantize::is_passthrough`, bits
+//! ≥ 24 in quant mode), the channel-major round-trip and quantize scan are
+//! skipped and the tensor is copied through unchanged — bit-identical by
+//! construction since the transpose pair is a pure permutation and the
+//! quantizer is the identity on every row.
+
+use crate::runtime::reference::nn::{
+    add_bias, bias_bwd_acc, cmajor_to_nhwc_into, cmajor_to_w_into, conv2d_bwd_into, conv2d_into,
+    conv_panel_len, conv_patch_len, dwconv2d_bwd_into, dwconv2d_into, gap_bwd_into, gap_into,
+    gn_groups, group_norm_bwd_into, group_norm_into, matmul_a_bt_into, matmul_acc_scratch,
+    matmul_at_b_acc, matmul_panel_len, maxpool2_bwd_into, maxpool2_into, nhwc_to_cmajor_into,
+    relu, relu_bwd, same_pad, softmax_xent_into, w_to_cmajor_into, Dims,
+};
+use crate::runtime::reference::quantize::{is_passthrough, quantize_rows};
+use crate::runtime::reference::zoo::{LType, ModelGraph, Node};
+use crate::runtime::tensor::Tensor;
+use crate::runtime::value::Value;
+
+/// Physical f32 buffer-slot id (index into `Workspace::bufs`).
+pub type Slot = usize;
+
+/// Physical u32 buffer-slot id (pool argmax tapes).
+pub type USlot = usize;
+
+// ---------------------------------------------------------------------------
+// Workspace
+// ---------------------------------------------------------------------------
+
+/// Per-worker scratch arena a plan executes against.  Buffers grow to the
+/// plan's slot capacities on first use and are never shrunk, so a warm
+/// workspace re-runs any already-seen plan with zero allocation.  Contents
+/// between dispatches are garbage by contract — every step fully
+/// overwrites or zero-fills what it writes.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    bufs: Vec<Vec<f32>>,
+    ubufs: Vec<Vec<u32>>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Grow to satisfy `plan` (monotonic; no-op when already warm).
+    pub fn ensure(&mut self, plan: &Plan) {
+        self.ensure_caps(&plan.slot_caps, &plan.uslot_caps);
+    }
+
+    /// Grow to raw slot capacities (the agent plans carry these directly).
+    pub fn ensure_caps(&mut self, f32_caps: &[usize], u32_caps: &[usize]) {
+        if self.bufs.len() < f32_caps.len() {
+            self.bufs.resize_with(f32_caps.len(), Vec::new);
+        }
+        for (b, &cap) in self.bufs.iter_mut().zip(f32_caps) {
+            if b.len() < cap {
+                b.resize(cap, 0.0);
+            }
+        }
+        if self.ubufs.len() < u32_caps.len() {
+            self.ubufs.resize_with(u32_caps.len(), Vec::new);
+        }
+        for (b, &cap) in self.ubufs.iter_mut().zip(u32_caps) {
+            if b.len() < cap {
+                b.resize(cap, 0);
+            }
+        }
+    }
+
+    /// Move a slot's buffer out for the duration of a step (no allocation
+    /// — swaps in an empty `Vec`).  Must be paired with [`Workspace::put`].
+    pub(crate) fn take(&mut self, s: Slot) -> Vec<f32> {
+        let v = std::mem::take(&mut self.bufs[s]);
+        debug_assert!(!v.is_empty(), "slot {s} taken twice (or workspace not ensured)");
+        v
+    }
+
+    pub(crate) fn put(&mut self, s: Slot, v: Vec<f32>) {
+        self.bufs[s] = v;
+    }
+
+    fn take_u(&mut self, s: USlot) -> Vec<u32> {
+        std::mem::take(&mut self.ubufs[s])
+    }
+
+    fn put_u(&mut self, s: USlot, v: Vec<u32>) {
+        self.ubufs[s] = v;
+    }
+
+    fn slice(&self, s: Slot, len: usize) -> &[f32] {
+        &self.bufs[s][..len]
+    }
+
+    /// Total resident f32 elements — flat across steady-state batches (the
+    /// workspace-reuse regression guard reads this via `scratch_stats`).
+    pub fn f32_len(&self) -> usize {
+        self.bufs.iter().map(Vec::len).sum()
+    }
+
+    /// Total resident u32 elements.
+    pub fn u32_len(&self) -> usize {
+        self.ubufs.iter().map(Vec::len).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Slot planner (physical-slot allocator)
+// ---------------------------------------------------------------------------
+
+/// Free-list allocator for physical slots.  `alloc` prefers the smallest
+/// free slot that already fits (best fit), else grows the largest free
+/// slot, else mints a new one; `release` returns a slot for reuse.
+/// Deterministic: the slot layout is a pure function of the call sequence.
+#[derive(Debug, Default)]
+pub struct Planner {
+    caps: Vec<usize>,
+    free: Vec<Slot>,
+}
+
+impl Planner {
+    pub fn new() -> Planner {
+        Planner::default()
+    }
+
+    pub fn alloc(&mut self, len: usize) -> Slot {
+        let mut best: Option<usize> = None; // position in `free`, cap >= len
+        let mut largest: Option<usize> = None;
+        for (pos, &s) in self.free.iter().enumerate() {
+            if self.caps[s] >= len {
+                let tighter = match best {
+                    None => true,
+                    Some(b) => self.caps[self.free[b]] > self.caps[s],
+                };
+                if tighter {
+                    best = Some(pos);
+                }
+            }
+            let bigger = match largest {
+                None => true,
+                Some(b) => self.caps[self.free[b]] < self.caps[s],
+            };
+            if bigger {
+                largest = Some(pos);
+            }
+        }
+        let pos = match best.or(largest) {
+            Some(p) => p,
+            None => {
+                self.caps.push(len);
+                return self.caps.len() - 1;
+            }
+        };
+        let s = self.free.swap_remove(pos);
+        if self.caps[s] < len {
+            self.caps[s] = len;
+        }
+        s
+    }
+
+    pub fn release(&mut self, s: Slot) {
+        debug_assert!(!self.free.contains(&s), "slot {s} double-released");
+        self.free.push(s);
+    }
+
+    /// Final per-slot capacities (f32 elements).
+    pub fn finish(self) -> Vec<usize> {
+        self.caps
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Steps
+// ---------------------------------------------------------------------------
+
+/// Where an activation-quantize step reads from: the dispatch's images
+/// input, or an earlier step's output slot.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum Src {
+    Images,
+    Slot(Slot),
+}
+
+fn expect_slot(src: Src) -> Slot {
+    match src {
+        Src::Slot(s) => s,
+        Src::Images => panic!("plan: node consumes raw images (zoo graphs start with a conv)"),
+    }
+}
+
+/// One planned operation.  Layer steps carry the layer index `li` so the
+/// executor can read kernel geometry and parameter offsets from the graph;
+/// all activation geometry is resolved at compile time.
+#[derive(Debug, Clone)]
+pub(crate) enum Step {
+    /// Per-input-channel activation quantize, NHWC via channel-major
+    /// scratch `cm` (skipped wholesale on passthrough bits).
+    ActQ4 { src: Src, dst: Slot, cm: Slot, d: Dims, a_off: usize },
+    /// Flat (n, c) activation quantize — fc's single shared channel.
+    ActQ2 { src: Src, dst: Slot, n: usize, c: usize, a_off: usize },
+    /// Per-output-channel weight quantize of `params[l.p_w]` into `dst`
+    /// via channel-major `scratch` (copied through on passthrough bits).
+    WQ { li: usize, dst: Slot, scratch: Slot },
+    /// dst = xq @ w + bias (fc layer); `panel` is matmul packing scratch
+    /// (None when the shape stays on the naive path).
+    Fc { li: usize, xq: Slot, wq: Slot, dst: Slot, n: usize, panel: Option<Slot> },
+    /// dst = conv(xq, wq); `patches` is im2col scratch (None = pointwise),
+    /// `panel` is matmul packing scratch (None on small shapes).
+    Conv {
+        li: usize,
+        xq: Slot,
+        wq: Slot,
+        dst: Slot,
+        patches: Option<Slot>,
+        panel: Option<Slot>,
+        d: Dims,
+    },
+    /// dst = dwconv(xq, wq).
+    DwConv { li: usize, xq: Slot, wq: Slot, dst: Slot, d: Dims },
+    /// GroupNorm src → dst; `cache` = (xn, istd) tape slots when training.
+    Gn { li: usize, src: Slot, dst: Slot, d: Dims, cache: Option<(Slot, Slot)> },
+    /// In-place bias add on a conv output.
+    Bias { li: usize, buf: Slot, c: usize, len: usize },
+    /// In-place ReLU; `save` copies the post-ReLU tensor for the tape.
+    Relu { buf: Slot, save: Option<Slot>, len: usize },
+    /// 2×2 max-pool; `idx` keeps argmax indices for the backward pass.
+    Pool { src: Slot, dst: Slot, idx: Option<USlot>, d: Dims },
+    /// Global average pool: NHWC → (n, c).
+    Gap { src: Slot, dst: Slot, d: Dims },
+    /// Channel concat (Fire): dst = a ++ b.
+    Concat { a: Slot, b: Slot, dst: Slot, d_a: Dims, d_b: Dims },
+    /// buf += add (residual merges, gradient joins).
+    Add { buf: Slot, add: Slot, len: usize },
+    /// dst = src (gradient forks for residual branches).
+    Copy { src: Slot, dst: Slot, len: usize },
+
+    // --- backward (train plans only) -----------------------------------
+    /// In-place dy ⊙ 1[out > 0].
+    BRelu { dy: Slot, out: Slot, len: usize },
+    /// GroupNorm backward: dy → dst; accumulates dγ/dβ into the layer's
+    /// grad slots.
+    BGn { li: usize, dy: Slot, dst: Slot, d: Dims, xn: Slot, istd: Slot },
+    /// Bias backward: accumulates dβ into the layer's grad slot.
+    BBias { li: usize, dy: Slot, c: usize, len: usize },
+    /// Fc backward: writes dx into dst, accumulates dw/db.
+    BFc { li: usize, xq: Slot, wq: Slot, dy: Slot, dst: Slot, n: usize },
+    /// Conv backward: writes dx, accumulates dw (d = input dims).
+    BConv {
+        li: usize,
+        xq: Slot,
+        wq: Slot,
+        dy: Slot,
+        dst: Slot,
+        patches: Option<Slot>,
+        dpatch: Option<Slot>,
+        d: Dims,
+    },
+    /// Depthwise conv backward: writes dx, accumulates dw.
+    BDwConv { li: usize, xq: Slot, wq: Slot, dy: Slot, dst: Slot, d: Dims },
+    /// Max-pool backward through the forward argmax tape.
+    BPool { dy: Slot, idx: USlot, dst: Slot, in_d: Dims },
+    /// GAP backward (broadcast /hw).
+    BGap { dy: Slot, dst: Slot, d: Dims },
+    /// Channel un-concat (Fire backward): src → (a, b).
+    BSplit { src: Slot, a: Slot, b: Slot, d: Dims, ca: usize },
+}
+
+/// Visit every f32 slot id a step touches, in a fixed field order — the
+/// single source of truth for liveness scanning and physical remapping.
+fn visit_slots(step: &mut Step, f: &mut impl FnMut(&mut Slot)) {
+    match step {
+        Step::ActQ4 { src, dst, cm, .. } => {
+            if let Src::Slot(s) = src {
+                f(s);
+            }
+            f(dst);
+            f(cm);
+        }
+        Step::ActQ2 { src, dst, .. } => {
+            if let Src::Slot(s) = src {
+                f(s);
+            }
+            f(dst);
+        }
+        Step::WQ { dst, scratch, .. } => {
+            f(dst);
+            f(scratch);
+        }
+        Step::Fc { xq, wq, dst, panel, .. } => {
+            f(xq);
+            f(wq);
+            f(dst);
+            if let Some(p) = panel {
+                f(p);
+            }
+        }
+        Step::Conv { xq, wq, dst, patches, panel, .. } => {
+            f(xq);
+            f(wq);
+            f(dst);
+            if let Some(p) = patches {
+                f(p);
+            }
+            if let Some(p) = panel {
+                f(p);
+            }
+        }
+        Step::DwConv { xq, wq, dst, .. } => {
+            f(xq);
+            f(wq);
+            f(dst);
+        }
+        Step::Gn { src, dst, cache, .. } => {
+            f(src);
+            f(dst);
+            if let Some((a, b)) = cache {
+                f(a);
+                f(b);
+            }
+        }
+        Step::Bias { buf, .. } => f(buf),
+        Step::Relu { buf, save, .. } => {
+            f(buf);
+            if let Some(s) = save {
+                f(s);
+            }
+        }
+        Step::Pool { src, dst, .. } => {
+            f(src);
+            f(dst);
+        }
+        Step::Gap { src, dst, .. } => {
+            f(src);
+            f(dst);
+        }
+        Step::Concat { a, b, dst, .. } => {
+            f(a);
+            f(b);
+            f(dst);
+        }
+        Step::Add { buf, add, .. } => {
+            f(buf);
+            f(add);
+        }
+        Step::Copy { src, dst, .. } => {
+            f(src);
+            f(dst);
+        }
+        Step::BRelu { dy, out, .. } => {
+            f(dy);
+            f(out);
+        }
+        Step::BGn { dy, dst, xn, istd, .. } => {
+            f(dy);
+            f(dst);
+            f(xn);
+            f(istd);
+        }
+        Step::BBias { dy, .. } => f(dy),
+        Step::BFc { xq, wq, dy, dst, .. } => {
+            f(xq);
+            f(wq);
+            f(dy);
+            f(dst);
+        }
+        Step::BConv { xq, wq, dy, dst, patches, dpatch, .. } => {
+            f(xq);
+            f(wq);
+            f(dy);
+            f(dst);
+            if let Some(p) = patches {
+                f(p);
+            }
+            if let Some(p) = dpatch {
+                f(p);
+            }
+        }
+        Step::BDwConv { xq, wq, dy, dst, .. } => {
+            f(xq);
+            f(wq);
+            f(dy);
+            f(dst);
+        }
+        Step::BPool { dy, dst, .. } => {
+            f(dy);
+            f(dst);
+        }
+        Step::BGap { dy, dst, .. } => {
+            f(dy);
+            f(dst);
+        }
+        Step::BSplit { src, a, b, .. } => {
+            f(src);
+            f(a);
+            f(b);
+        }
+    }
+}
+
+/// Liveness pass: map virtual buffers (step fields as emitted by the
+/// builder) onto physical slots.  A virtual buffer's first appearance is
+/// always its defining write; its slot returns to the free list right
+/// after the step holding its last appearance (pinned buffers — logits,
+/// d(logits) — are read by the executor outside the step list and are
+/// never released).  Returns the virtual → physical map.
+fn assign_slots(
+    steps: &mut [Step],
+    sizes: &[usize],
+    pinned: &[bool],
+    planner: &mut Planner,
+) -> Vec<Option<Slot>> {
+    let mut last = vec![0usize; sizes.len()];
+    for (i, s) in steps.iter_mut().enumerate() {
+        visit_slots(s, &mut |v| last[*v] = i);
+    }
+    let mut map: Vec<Option<Slot>> = vec![None; sizes.len()];
+    for (i, step) in steps.iter_mut().enumerate() {
+        let mut dying: Vec<Slot> = Vec::new();
+        visit_slots(step, &mut |v| {
+            if map[*v].is_none() {
+                map[*v] = Some(planner.alloc(sizes[*v]));
+            }
+            if last[*v] == i && !pinned[*v] {
+                dying.push(map[*v].expect("assigned above"));
+            }
+        });
+        visit_slots(step, &mut |v| *v = map[*v].expect("assigned above"));
+        dying.sort_unstable();
+        dying.dedup();
+        for s in dying {
+            planner.release(s);
+        }
+    }
+    map
+}
+
+// ---------------------------------------------------------------------------
+// Plan + compiler
+// ---------------------------------------------------------------------------
+
+/// A compiled model graph: flat step list over physical buffer slots.
+#[derive(Debug)]
+pub struct Plan {
+    steps: Vec<Step>,
+    /// Steps `[..fwd_len]` are the forward pass; the rest (train plans)
+    /// are the backward pass, separated by the executor-run loss head.
+    fwd_len: usize,
+    /// Physical f32 slot capacities (elements).
+    pub slot_caps: Vec<usize>,
+    /// Physical u32 slot capacities (pool argmax tapes).
+    pub uslot_caps: Vec<usize>,
+    /// Per-parameter gradient slots (train plans; pinned).
+    grad_slots: Vec<Slot>,
+    logits: Slot,
+    dlogits: Slot,
+    n: usize,
+    classes: usize,
+    d0: Dims,
+}
+
+impl Plan {
+    /// Batch size this plan was compiled for.
+    pub fn batch(&self) -> usize {
+        self.n
+    }
+
+    /// Number of planned steps (fwd, bwd).
+    pub fn step_counts(&self) -> (usize, usize) {
+        (self.fwd_len, self.steps.len() - self.fwd_len)
+    }
+}
+
+/// Activation shape flowing through the planner (mirrors the walk's ActT).
+#[derive(Debug, Clone, Copy)]
+enum Shape {
+    A4(Dims),
+    A2 { n: usize, c: usize },
+}
+
+impl Shape {
+    fn channels(&self) -> usize {
+        match *self {
+            Shape::A4(d) => d.c,
+            Shape::A2 { c, .. } => c,
+        }
+    }
+
+    fn elems(&self) -> usize {
+        match *self {
+            Shape::A4(d) => d.elems(),
+            Shape::A2 { n, c } => n * c,
+        }
+    }
+}
+
+/// Planner-side tape of one primitive layer (slot ids, not data).
+#[derive(Debug, Clone)]
+struct PLayer {
+    li: usize,
+    xq: Slot,
+    xq_shape: Shape,
+    wq: Slot,
+    gn: Option<(Slot, Slot)>,
+    relu_out: Option<Slot>,
+    out_d: Dims,
+}
+
+/// Planner-side tape of one graph node.
+#[derive(Debug, Clone)]
+enum PTape {
+    Layer(PLayer),
+    Pool { idx: USlot, in_d: Dims },
+    Gap { d: Dims },
+    Basic { c1: PLayer, c2: PLayer, proj: Option<PLayer>, relu_out: Slot, out_d: Dims },
+    Fire { sq: PLayer, e1: PLayer, e3: PLayer, ca: usize, out_d: Dims },
+    Irb { expand: Option<PLayer>, dw: PLayer, project: PLayer, residual: bool, out_d: Dims },
+}
+
+struct PlanBuilder<'g> {
+    g: &'g ModelGraph,
+    train: bool,
+    steps: Vec<Step>,
+    sizes: Vec<usize>,
+    pinned: Vec<bool>,
+    usizes: Vec<usize>,
+    tapes: Vec<PTape>,
+}
+
+impl<'g> PlanBuilder<'g> {
+    /// New virtual f32 buffer of `len` elements.
+    fn vb(&mut self, len: usize) -> Slot {
+        self.sizes.push(len);
+        self.pinned.push(false);
+        self.sizes.len() - 1
+    }
+
+    /// New u32 buffer (u32 buffers are few; no liveness reuse).
+    fn uvb(&mut self, len: usize) -> USlot {
+        self.usizes.push(len);
+        self.usizes.len() - 1
+    }
+
+    fn pin(&mut self, v: Slot) {
+        self.pinned[v] = true;
+    }
+
+    /// Plan one primitive layer (mirrors `model_exec::layer_fwd`):
+    /// quantize activation + weight, contraction, norm/bias, ReLU.
+    fn plan_layer(&mut self, li: usize, cur: (Src, Shape)) -> ((Src, Shape), PLayer) {
+        let l = &self.g.layers[li];
+        let (src, shape) = cur;
+        let (xq, xq_shape) = match shape {
+            Shape::A4(d) => {
+                debug_assert_eq!(d.c, l.a_len, "{}: activation channels", l.name);
+                let xq = self.vb(d.elems());
+                let cm = self.vb(d.elems());
+                self.steps.push(Step::ActQ4 { src, dst: xq, cm, d, a_off: l.a_off });
+                (xq, Shape::A4(d))
+            }
+            Shape::A2 { n, c } => {
+                let xq = self.vb(n * c);
+                self.steps.push(Step::ActQ2 { src, dst: xq, n, c, a_off: l.a_off });
+                (xq, shape)
+            }
+        };
+        let wlen: usize = self.g.params[l.p_w].shape.iter().product();
+        let wq = self.vb(wlen);
+        let scratch = self.vb(wlen);
+        self.steps.push(Step::WQ { li, dst: wq, scratch });
+
+        match l.typ {
+            LType::Fc => {
+                let Shape::A2 { n, c } = xq_shape else { panic!("fc expects flat input") };
+                debug_assert_eq!(c, l.cin);
+                let dst = self.vb(n * l.cout);
+                let pan = matmul_panel_len(l.cin, l.cout);
+                let panel = (pan > 0).then(|| self.vb(pan));
+                self.steps.push(Step::Fc { li, xq, wq, dst, n, panel });
+                let out_d = Dims { n, h: 1, w: 1, c: l.cout };
+                let tape = PLayer { li, xq, xq_shape, wq, gn: None, relu_out: None, out_d };
+                ((Src::Slot(dst), Shape::A2 { n, c: l.cout }), tape)
+            }
+            LType::Conv | LType::DwConv => {
+                let Shape::A4(d) = xq_shape else { panic!("conv expects NHWC input") };
+                let (ho, _, _) = same_pad(d.h, l.k, l.s);
+                let (wo, _, _) = same_pad(d.w, l.k, l.s);
+                let oc = if l.typ == LType::DwConv { d.c } else { l.cout };
+                let od = Dims { n: d.n, h: ho, w: wo, c: oc };
+                let dst = self.vb(od.elems());
+                if l.typ == LType::DwConv {
+                    self.steps.push(Step::DwConv { li, xq, wq, dst, d });
+                } else {
+                    let plen = conv_patch_len(d, l.k, l.s);
+                    let patches = (plen > 0).then(|| self.vb(plen));
+                    let pan = conv_panel_len(d, l.k, l.cout);
+                    let panel = (pan > 0).then(|| self.vb(pan));
+                    self.steps.push(Step::Conv { li, xq, wq, dst, patches, panel, d });
+                }
+                let (out, gn) = if l.norm {
+                    let gdst = self.vb(od.elems());
+                    let cache = self
+                        .train
+                        .then(|| (self.vb(od.elems()), self.vb(od.n * gn_groups(od.c))));
+                    self.steps.push(Step::Gn { li, src: dst, dst: gdst, d: od, cache });
+                    (gdst, cache)
+                } else {
+                    self.steps.push(Step::Bias { li, buf: dst, c: od.c, len: od.elems() });
+                    (dst, None)
+                };
+                let relu_out = if l.relu {
+                    let save = self.train.then(|| self.vb(od.elems()));
+                    self.steps.push(Step::Relu { buf: out, save, len: od.elems() });
+                    save
+                } else {
+                    None
+                };
+                let tape = PLayer { li, xq, xq_shape, wq, gn, relu_out, out_d: od };
+                ((Src::Slot(out), Shape::A4(od)), tape)
+            }
+        }
+    }
+
+    /// Plan the backward of one primitive layer (mirrors
+    /// `model_exec::layer_bwd`); returns the input-gradient slot + shape.
+    fn plan_layer_bwd(&mut self, t: &PLayer, mut dy: Slot) -> (Slot, Shape) {
+        let l = &self.g.layers[t.li];
+        match l.typ {
+            LType::Fc => {
+                let Shape::A2 { n, c } = t.xq_shape else { panic!("fc tape") };
+                let dst = self.vb(n * c);
+                self.steps.push(Step::BFc { li: t.li, xq: t.xq, wq: t.wq, dy, dst, n });
+                (dst, t.xq_shape)
+            }
+            LType::Conv | LType::DwConv => {
+                if let Some(out) = t.relu_out {
+                    self.steps.push(Step::BRelu { dy, out, len: t.out_d.elems() });
+                }
+                if l.norm {
+                    let (xn, istd) = t.gn.expect("norm layer planned with cache");
+                    let dst = self.vb(t.out_d.elems());
+                    self.steps.push(Step::BGn { li: t.li, dy, dst, d: t.out_d, xn, istd });
+                    dy = dst;
+                } else {
+                    self.steps.push(Step::BBias {
+                        li: t.li,
+                        dy,
+                        c: t.out_d.c,
+                        len: t.out_d.elems(),
+                    });
+                }
+                let Shape::A4(din) = t.xq_shape else { panic!("conv tape") };
+                let dst = self.vb(din.elems());
+                if l.typ == LType::DwConv {
+                    self.steps.push(Step::BDwConv {
+                        li: t.li,
+                        xq: t.xq,
+                        wq: t.wq,
+                        dy,
+                        dst,
+                        d: din,
+                    });
+                } else {
+                    let plen = conv_patch_len(din, l.k, l.s);
+                    let (patches, dpatch) = if plen > 0 {
+                        (Some(self.vb(plen)), Some(self.vb(plen)))
+                    } else {
+                        (None, None)
+                    };
+                    self.steps.push(Step::BConv {
+                        li: t.li,
+                        xq: t.xq,
+                        wq: t.wq,
+                        dy,
+                        dst,
+                        patches,
+                        dpatch,
+                        d: din,
+                    });
+                }
+                (dst, t.xq_shape)
+            }
+        }
+    }
+
+    /// Plan the whole backward walk (mirrors `model_exec::backward`).
+    fn plan_backward(&mut self, tapes: &[PTape], dlogits: Slot, n: usize, classes: usize) {
+        let mut dy: (Slot, Shape) = (dlogits, Shape::A2 { n, c: classes });
+        for tape in tapes.iter().rev() {
+            dy = match tape {
+                PTape::Layer(t) => self.plan_layer_bwd(t, dy.0),
+                PTape::Pool { idx, in_d } => {
+                    let dst = self.vb(in_d.elems());
+                    self.steps.push(Step::BPool { dy: dy.0, idx: *idx, dst, in_d: *in_d });
+                    (dst, Shape::A4(*in_d))
+                }
+                PTape::Gap { d } => {
+                    let dst = self.vb(d.elems());
+                    self.steps.push(Step::BGap { dy: dy.0, dst, d: *d });
+                    (dst, Shape::A4(*d))
+                }
+                PTape::Basic { c1, c2, proj, relu_out, out_d } => {
+                    self.steps.push(Step::BRelu { dy: dy.0, out: *relu_out, len: out_d.elems() });
+                    let d_sc = self.vb(out_d.elems());
+                    self.steps.push(Step::Copy { src: dy.0, dst: d_sc, len: out_d.elems() });
+                    let (dy1, _) = self.plan_layer_bwd(c2, dy.0);
+                    let (dinp, din_shape) = self.plan_layer_bwd(c1, dy1);
+                    let dinp_b = match proj {
+                        Some(tp) => self.plan_layer_bwd(tp, d_sc).0,
+                        None => d_sc,
+                    };
+                    self.steps.push(Step::Add {
+                        buf: dinp,
+                        add: dinp_b,
+                        len: din_shape.elems(),
+                    });
+                    (dinp, din_shape)
+                }
+                PTape::Fire { sq, e1, e3, ca, out_d } => {
+                    let pixels = out_d.n * out_d.h * out_d.w;
+                    let cb = out_d.c - ca;
+                    let da = self.vb(pixels * ca);
+                    let db = self.vb(pixels * cb);
+                    self.steps.push(Step::BSplit { src: dy.0, a: da, b: db, d: *out_d, ca: *ca });
+                    let (dsq, dsq_shape) = self.plan_layer_bwd(e1, da);
+                    let (dsq2, _) = self.plan_layer_bwd(e3, db);
+                    self.steps.push(Step::Add { buf: dsq, add: dsq2, len: dsq_shape.elems() });
+                    self.plan_layer_bwd(sq, dsq)
+                }
+                PTape::Irb { expand, dw, project, residual, out_d } => {
+                    let dres = if *residual {
+                        let s = self.vb(out_d.elems());
+                        self.steps.push(Step::Copy { src: dy.0, dst: s, len: out_d.elems() });
+                        Some(s)
+                    } else {
+                        None
+                    };
+                    let (d1, _) = self.plan_layer_bwd(project, dy.0);
+                    let (d2, d2_shape) = self.plan_layer_bwd(dw, d1);
+                    let (dx, dx_shape) = match expand {
+                        Some(te) => self.plan_layer_bwd(te, d2),
+                        None => (d2, d2_shape),
+                    };
+                    if let Some(r) = dres {
+                        self.steps.push(Step::Add { buf: dx, add: r, len: dx_shape.elems() });
+                    }
+                    (dx, dx_shape)
+                }
+            };
+        }
+    }
+}
+
+/// Shared compile: forward walk (+ backward for train) → liveness →
+/// physical plan.
+fn compile(g: &ModelGraph, n: usize, train: bool) -> Plan {
+    let mut b = PlanBuilder {
+        g,
+        train,
+        steps: Vec::new(),
+        sizes: Vec::new(),
+        pinned: Vec::new(),
+        usizes: Vec::new(),
+        tapes: Vec::new(),
+    };
+    let d0 = Dims { n, h: g.layers[0].h_in, w: g.layers[0].w_in, c: g.layers[0].cin };
+    let mut cur: (Src, Shape) = (Src::Images, Shape::A4(d0));
+    let mut li = 0usize;
+    for node in &g.nodes {
+        match *node {
+            Node::Conv { .. } | Node::Fc { .. } => {
+                let (next, tape) = b.plan_layer(li, cur);
+                li += 1;
+                cur = next;
+                if train {
+                    b.tapes.push(PTape::Layer(tape));
+                }
+            }
+            Node::Pool => {
+                let Shape::A4(d) = cur.1 else { panic!("pool expects NHWC") };
+                let src = expect_slot(cur.0);
+                let od = Dims { n: d.n, h: d.h / 2, w: d.w / 2, c: d.c };
+                let dst = b.vb(od.elems());
+                let idx = train.then(|| b.uvb(od.elems()));
+                b.steps.push(Step::Pool { src, dst, idx, d });
+                if train {
+                    b.tapes.push(PTape::Pool { idx: idx.expect("train pool tape"), in_d: d });
+                }
+                cur = (Src::Slot(dst), Shape::A4(od));
+            }
+            Node::Gap => {
+                let Shape::A4(d) = cur.1 else { panic!("gap expects NHWC") };
+                let src = expect_slot(cur.0);
+                let dst = b.vb(d.n * d.c);
+                b.steps.push(Step::Gap { src, dst, d });
+                if train {
+                    b.tapes.push(PTape::Gap { d });
+                }
+                cur = (Src::Slot(dst), Shape::A2 { n: d.n, c: d.c });
+            }
+            Node::Basic { cout, s } => {
+                let proj = s != 1 || cur.1.channels() != cout;
+                let inp = cur;
+                let (y1, t1) = b.plan_layer(li, inp);
+                let (y2, t2) = b.plan_layer(li + 1, y1);
+                let (sc, tp) = if proj {
+                    let (sc, tp) = b.plan_layer(li + 2, inp);
+                    (sc, Some(tp))
+                } else {
+                    (inp, None)
+                };
+                li += if proj { 3 } else { 2 };
+                let Shape::A4(od) = y2.1 else { panic!("basic block output") };
+                let buf = expect_slot(y2.0);
+                b.steps.push(Step::Add { buf, add: expect_slot(sc.0), len: od.elems() });
+                let save = train.then(|| b.vb(od.elems()));
+                b.steps.push(Step::Relu { buf, save, len: od.elems() });
+                if train {
+                    b.tapes.push(PTape::Basic {
+                        c1: t1,
+                        c2: t2,
+                        proj: tp,
+                        relu_out: save.expect("train basic tape"),
+                        out_d: od,
+                    });
+                }
+                cur = (Src::Slot(buf), Shape::A4(od));
+            }
+            Node::Fire { .. } => {
+                let (sqz, tsq) = b.plan_layer(li, cur);
+                let (ya, te1) = b.plan_layer(li + 1, sqz);
+                let (yb, te3) = b.plan_layer(li + 2, sqz);
+                li += 3;
+                let Shape::A4(da) = ya.1 else { panic!("fire expand1 output") };
+                let Shape::A4(db) = yb.1 else { panic!("fire expand3 output") };
+                let od = Dims { n: da.n, h: da.h, w: da.w, c: da.c + db.c };
+                let dst = b.vb(od.elems());
+                b.steps.push(Step::Concat {
+                    a: expect_slot(ya.0),
+                    b: expect_slot(yb.0),
+                    dst,
+                    d_a: da,
+                    d_b: db,
+                });
+                if train {
+                    b.tapes.push(PTape::Fire { sq: tsq, e1: te1, e3: te3, ca: da.c, out_d: od });
+                }
+                cur = (Src::Slot(dst), Shape::A4(od));
+            }
+            Node::Irb { t, cout, s } => {
+                let residual = s == 1 && cur.1.channels() == cout;
+                let inp = cur;
+                let mut mid = cur;
+                let texp = if t != 1 {
+                    let (y, tp) = b.plan_layer(li, mid);
+                    li += 1;
+                    mid = y;
+                    Some(tp)
+                } else {
+                    None
+                };
+                let (y, tdw) = b.plan_layer(li, mid);
+                li += 1;
+                let (y, tpr) = b.plan_layer(li, y);
+                li += 1;
+                let Shape::A4(od) = y.1 else { panic!("irb output") };
+                let buf = expect_slot(y.0);
+                if residual {
+                    b.steps.push(Step::Add { buf, add: expect_slot(inp.0), len: od.elems() });
+                }
+                if train {
+                    b.tapes.push(PTape::Irb {
+                        expand: texp,
+                        dw: tdw,
+                        project: tpr,
+                        residual,
+                        out_d: od,
+                    });
+                }
+                cur = (Src::Slot(buf), Shape::A4(od));
+            }
+        }
+    }
+    assert_eq!(li, g.layers.len(), "plan walk diverged from layer list");
+    let Shape::A2 { n: out_n, c: classes } = cur.1 else {
+        panic!("model {} does not end in a flat head", g.name)
+    };
+    debug_assert_eq!(out_n, n);
+    let logits_vb = expect_slot(cur.0);
+    b.pin(logits_vb);
+
+    let fwd_len = b.steps.len();
+    let mut dlogits_vb = usize::MAX;
+    if train {
+        dlogits_vb = b.vb(n * classes);
+        b.pin(dlogits_vb);
+        let tapes = std::mem::take(&mut b.tapes);
+        b.plan_backward(&tapes, dlogits_vb, n, classes);
+    }
+
+    let mut planner = Planner::new();
+    // Gradient slots first: pinned, read by the SGD epilogue outside the
+    // step list, so they must never enter the free list.
+    let grad_slots: Vec<Slot> = if train {
+        g.params.iter().map(|p| planner.alloc(p.shape.iter().product())).collect()
+    } else {
+        Vec::new()
+    };
+    let map = assign_slots(&mut b.steps, &b.sizes, &b.pinned, &mut planner);
+    let logits = map[logits_vb].expect("logits slot assigned");
+    let dlogits = if train { map[dlogits_vb].expect("dlogits slot assigned") } else { 0 };
+    Plan {
+        steps: b.steps,
+        fwd_len,
+        slot_caps: planner.finish(),
+        uslot_caps: b.usizes,
+        grad_slots,
+        logits,
+        dlogits,
+        n,
+        classes,
+        d0,
+    }
+}
+
+/// Compile the eval graph (forward + accuracy/loss head) for batch `n`.
+pub fn compile_eval(g: &ModelGraph, n: usize) -> Plan {
+    compile(g, n, false)
+}
+
+/// Compile the train graph (forward with tapes, STE backward, SGD) for
+/// batch `n`.
+pub fn compile_train(g: &ModelGraph, n: usize) -> Plan {
+    compile(g, n, true)
+}
+
+// ---------------------------------------------------------------------------
+// Executor
+// ---------------------------------------------------------------------------
+
+fn add_vec(a: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x += y;
+    }
+}
+
+/// Per-dispatch context shared by every step.
+struct Ctx<'a> {
+    g: &'a ModelGraph,
+    binar: bool,
+    params: &'a [&'a Tensor],
+    images: &'a [f32],
+    wbits: &'a [f32],
+    abits: &'a [f32],
+    grad_slots: &'a [Slot],
+}
+
+fn exec_steps(steps: &[Step], cx: &Ctx, ws: &mut Workspace) {
+    for step in steps {
+        exec_step(step, cx, ws);
+    }
+}
+
+fn exec_step(step: &Step, cx: &Ctx, ws: &mut Workspace) {
+    match *step {
+        Step::ActQ4 { src, dst, cm, d, a_off } => {
+            let len = d.elems();
+            let ab = &cx.abits[a_off..a_off + d.c];
+            let srcv = match src {
+                Src::Slot(s) => Some(ws.take(s)),
+                Src::Images => None,
+            };
+            let sref: &[f32] = match &srcv {
+                Some(v) => &v[..len],
+                None => &cx.images[..len],
+            };
+            let mut dstv = ws.take(dst);
+            if is_passthrough(ab, cx.binar) {
+                dstv[..len].copy_from_slice(sref);
+            } else {
+                let mut cmv = ws.take(cm);
+                nhwc_to_cmajor_into(sref, d, &mut cmv[..len]);
+                quantize_rows(&mut cmv[..len], d.c, d.n * d.h * d.w, ab, cx.binar);
+                cmajor_to_nhwc_into(&cmv[..len], d, &mut dstv[..len]);
+                ws.put(cm, cmv);
+            }
+            ws.put(dst, dstv);
+            if let (Src::Slot(s), Some(v)) = (src, srcv) {
+                ws.put(s, v);
+            }
+        }
+        Step::ActQ2 { src, dst, n, c, a_off } => {
+            let len = n * c;
+            let ab = &cx.abits[a_off..a_off + 1];
+            let srcv = match src {
+                Src::Slot(s) => Some(ws.take(s)),
+                Src::Images => None,
+            };
+            let sref: &[f32] = match &srcv {
+                Some(v) => &v[..len],
+                None => &cx.images[..len],
+            };
+            let mut dstv = ws.take(dst);
+            dstv[..len].copy_from_slice(sref);
+            if !is_passthrough(ab, cx.binar) {
+                quantize_rows(&mut dstv[..len], 1, len, ab, cx.binar);
+            }
+            ws.put(dst, dstv);
+            if let (Src::Slot(s), Some(v)) = (src, srcv) {
+                ws.put(s, v);
+            }
+        }
+        Step::WQ { li, dst, scratch } => {
+            let l = &cx.g.layers[li];
+            let w = &cx.params[l.p_w].data;
+            let wb = &cx.wbits[l.w_off..l.w_off + l.w_len];
+            let rest = w.len() / l.w_len;
+            let mut dstv = ws.take(dst);
+            if is_passthrough(wb, cx.binar) {
+                dstv[..w.len()].copy_from_slice(w);
+            } else {
+                let mut sc = ws.take(scratch);
+                w_to_cmajor_into(w, rest, l.w_len, &mut sc[..w.len()]);
+                quantize_rows(&mut sc[..w.len()], l.w_len, rest, wb, cx.binar);
+                cmajor_to_w_into(&sc[..w.len()], rest, l.w_len, &mut dstv[..w.len()]);
+                ws.put(scratch, sc);
+            }
+            ws.put(dst, dstv);
+        }
+        Step::Fc { li, xq, wq, dst, n, panel } => {
+            let l = &cx.g.layers[li];
+            let wlen = cx.params[l.p_w].data.len();
+            let xqv = ws.take(xq);
+            let wqv = ws.take(wq);
+            let mut dstv = ws.take(dst);
+            let mut panv = panel.map(|p| ws.take(p));
+            let pan_len = matmul_panel_len(l.cin, l.cout);
+            let pan_s: &mut [f32] = match &mut panv {
+                Some(v) => &mut v[..pan_len],
+                None => &mut [],
+            };
+            let out = &mut dstv[..n * l.cout];
+            out.fill(0.0);
+            matmul_acc_scratch(out, &xqv[..n * l.cin], &wqv[..wlen], n, l.cin, l.cout, pan_s);
+            add_bias(out, l.cout, &cx.params[l.p_w + 1].data);
+            if let (Some(p), Some(v)) = (panel, panv) {
+                ws.put(p, v);
+            }
+            ws.put(xq, xqv);
+            ws.put(wq, wqv);
+            ws.put(dst, dstv);
+        }
+        Step::Conv { li, xq, wq, dst, patches, panel, d } => {
+            let l = &cx.g.layers[li];
+            let wlen = cx.params[l.p_w].data.len();
+            let (ho, _, _) = same_pad(d.h, l.k, l.s);
+            let (wo, _, _) = same_pad(d.w, l.k, l.s);
+            let od_len = d.n * ho * wo * l.cout;
+            let xqv = ws.take(xq);
+            let wqv = ws.take(wq);
+            let mut dstv = ws.take(dst);
+            let mut pv = patches.map(|p| ws.take(p));
+            let mut panv = panel.map(|p| ws.take(p));
+            let patch_len = conv_patch_len(d, l.k, l.s);
+            let pan_len = conv_panel_len(d, l.k, l.cout);
+            let patches_s: &mut [f32] = match &mut pv {
+                Some(v) => &mut v[..patch_len],
+                None => &mut [],
+            };
+            let pan_s: &mut [f32] = match &mut panv {
+                Some(v) => &mut v[..pan_len],
+                None => &mut [],
+            };
+            conv2d_into(
+                &xqv[..d.elems()],
+                d,
+                &wqv[..wlen],
+                l.k,
+                l.s,
+                l.cout,
+                &mut dstv[..od_len],
+                patches_s,
+                pan_s,
+            );
+            if let (Some(p), Some(v)) = (patches, pv) {
+                ws.put(p, v);
+            }
+            if let (Some(p), Some(v)) = (panel, panv) {
+                ws.put(p, v);
+            }
+            ws.put(xq, xqv);
+            ws.put(wq, wqv);
+            ws.put(dst, dstv);
+        }
+        Step::DwConv { li, xq, wq, dst, d } => {
+            let l = &cx.g.layers[li];
+            let wlen = cx.params[l.p_w].data.len();
+            let (ho, _, _) = same_pad(d.h, l.k, l.s);
+            let (wo, _, _) = same_pad(d.w, l.k, l.s);
+            let od_len = d.n * ho * wo * d.c;
+            let xqv = ws.take(xq);
+            let wqv = ws.take(wq);
+            let mut dstv = ws.take(dst);
+            dwconv2d_into(&xqv[..d.elems()], d, &wqv[..wlen], l.k, l.s, &mut dstv[..od_len]);
+            ws.put(xq, xqv);
+            ws.put(wq, wqv);
+            ws.put(dst, dstv);
+        }
+        Step::Gn { li, src, dst, d, cache } => {
+            let l = &cx.g.layers[li];
+            let gamma = &cx.params[l.p_w + 1].data;
+            let beta = &cx.params[l.p_w + 2].data;
+            let len = d.elems();
+            let srcv = ws.take(src);
+            let mut dstv = ws.take(dst);
+            match cache {
+                Some((xn, istd)) => {
+                    let glen = d.n * gn_groups(d.c);
+                    let mut xnv = ws.take(xn);
+                    let mut isv = ws.take(istd);
+                    group_norm_into(
+                        &srcv[..len],
+                        d,
+                        gamma,
+                        beta,
+                        &mut dstv[..len],
+                        Some((&mut xnv[..len], &mut isv[..glen])),
+                    );
+                    ws.put(xn, xnv);
+                    ws.put(istd, isv);
+                }
+                None => {
+                    group_norm_into(&srcv[..len], d, gamma, beta, &mut dstv[..len], None);
+                }
+            }
+            ws.put(src, srcv);
+            ws.put(dst, dstv);
+        }
+        Step::Bias { li, buf, c, len } => {
+            let l = &cx.g.layers[li];
+            let mut bufv = ws.take(buf);
+            add_bias(&mut bufv[..len], c, &cx.params[l.p_w + 1].data);
+            ws.put(buf, bufv);
+        }
+        Step::Relu { buf, save, len } => {
+            let mut bufv = ws.take(buf);
+            relu(&mut bufv[..len]);
+            if let Some(s) = save {
+                let mut sv = ws.take(s);
+                sv[..len].copy_from_slice(&bufv[..len]);
+                ws.put(s, sv);
+            }
+            ws.put(buf, bufv);
+        }
+        Step::Pool { src, dst, idx, d } => {
+            let od_len = d.n * (d.h / 2) * (d.w / 2) * d.c;
+            let srcv = ws.take(src);
+            let mut dstv = ws.take(dst);
+            match idx {
+                Some(u) => {
+                    let mut uv = ws.take_u(u);
+                    let idx_out = Some(&mut uv[..od_len]);
+                    maxpool2_into(&srcv[..d.elems()], d, &mut dstv[..od_len], idx_out);
+                    ws.put_u(u, uv);
+                }
+                None => {
+                    maxpool2_into(&srcv[..d.elems()], d, &mut dstv[..od_len], None);
+                }
+            }
+            ws.put(src, srcv);
+            ws.put(dst, dstv);
+        }
+        Step::Gap { src, dst, d } => {
+            let srcv = ws.take(src);
+            let mut dstv = ws.take(dst);
+            gap_into(&srcv[..d.elems()], d, &mut dstv[..d.n * d.c]);
+            ws.put(src, srcv);
+            ws.put(dst, dstv);
+        }
+        Step::Concat { a, b, dst, d_a, d_b } => {
+            let av = ws.take(a);
+            let bv = ws.take(b);
+            let mut dstv = ws.take(dst);
+            let oc = d_a.c + d_b.c;
+            for p in 0..d_a.n * d_a.h * d_a.w {
+                dstv[p * oc..p * oc + d_a.c].copy_from_slice(&av[p * d_a.c..(p + 1) * d_a.c]);
+                dstv[p * oc + d_a.c..(p + 1) * oc]
+                    .copy_from_slice(&bv[p * d_b.c..(p + 1) * d_b.c]);
+            }
+            ws.put(a, av);
+            ws.put(b, bv);
+            ws.put(dst, dstv);
+        }
+        Step::Add { buf, add, len } => {
+            let mut bufv = ws.take(buf);
+            let addv = ws.take(add);
+            add_vec(&mut bufv[..len], &addv[..len]);
+            ws.put(buf, bufv);
+            ws.put(add, addv);
+        }
+        Step::Copy { src, dst, len } => {
+            let srcv = ws.take(src);
+            let mut dstv = ws.take(dst);
+            dstv[..len].copy_from_slice(&srcv[..len]);
+            ws.put(src, srcv);
+            ws.put(dst, dstv);
+        }
+        Step::BRelu { dy, out, len } => {
+            let mut dyv = ws.take(dy);
+            let outv = ws.take(out);
+            relu_bwd(&mut dyv[..len], &outv[..len]);
+            ws.put(dy, dyv);
+            ws.put(out, outv);
+        }
+        Step::BGn { li, dy, dst, d, xn, istd } => {
+            let l = &cx.g.layers[li];
+            let gamma = &cx.params[l.p_w + 1].data;
+            let len = d.elems();
+            let glen = d.n * gn_groups(d.c);
+            let dyv = ws.take(dy);
+            let mut dstv = ws.take(dst);
+            let xnv = ws.take(xn);
+            let isv = ws.take(istd);
+            let mut g1 = ws.take(cx.grad_slots[l.p_w + 1]);
+            let mut g2 = ws.take(cx.grad_slots[l.p_w + 2]);
+            g1[..d.c].fill(0.0);
+            g2[..d.c].fill(0.0);
+            group_norm_bwd_into(
+                &dyv[..len],
+                d,
+                gamma,
+                &xnv[..len],
+                &isv[..glen],
+                &mut dstv[..len],
+                &mut g1[..d.c],
+                &mut g2[..d.c],
+            );
+            ws.put(cx.grad_slots[l.p_w + 1], g1);
+            ws.put(cx.grad_slots[l.p_w + 2], g2);
+            ws.put(dy, dyv);
+            ws.put(dst, dstv);
+            ws.put(xn, xnv);
+            ws.put(istd, isv);
+        }
+        Step::BBias { li, dy, c, len } => {
+            let l = &cx.g.layers[li];
+            let dyv = ws.take(dy);
+            let mut g = ws.take(cx.grad_slots[l.p_w + 1]);
+            g[..c].fill(0.0);
+            bias_bwd_acc(&dyv[..len], c, &mut g[..c]);
+            ws.put(cx.grad_slots[l.p_w + 1], g);
+            ws.put(dy, dyv);
+        }
+        Step::BFc { li, xq, wq, dy, dst, n } => {
+            let l = &cx.g.layers[li];
+            let wlen = cx.params[l.p_w].data.len();
+            let xqv = ws.take(xq);
+            let wqv = ws.take(wq);
+            let dyv = ws.take(dy);
+            let mut dstv = ws.take(dst);
+            let mut gb = ws.take(cx.grad_slots[l.p_w + 1]);
+            gb[..l.cout].fill(0.0);
+            bias_bwd_acc(&dyv[..n * l.cout], l.cout, &mut gb[..l.cout]);
+            ws.put(cx.grad_slots[l.p_w + 1], gb);
+            let mut gw = ws.take(cx.grad_slots[l.p_w]);
+            gw[..wlen].fill(0.0);
+            let (xqs, dys) = (&xqv[..n * l.cin], &dyv[..n * l.cout]);
+            matmul_at_b_acc(&mut gw[..wlen], xqs, dys, n, l.cin, l.cout);
+            ws.put(cx.grad_slots[l.p_w], gw);
+            matmul_a_bt_into(
+                &mut dstv[..n * l.cin],
+                &dyv[..n * l.cout],
+                &wqv[..wlen],
+                n,
+                l.cout,
+                l.cin,
+            );
+            ws.put(xq, xqv);
+            ws.put(wq, wqv);
+            ws.put(dy, dyv);
+            ws.put(dst, dstv);
+        }
+        Step::BConv { li, xq, wq, dy, dst, patches, dpatch, d } => {
+            let l = &cx.g.layers[li];
+            let wlen = cx.params[l.p_w].data.len();
+            let (ho, _, _) = same_pad(d.h, l.k, l.s);
+            let (wo, _, _) = same_pad(d.w, l.k, l.s);
+            let dy_len = d.n * ho * wo * l.cout;
+            let xqv = ws.take(xq);
+            let wqv = ws.take(wq);
+            let dyv = ws.take(dy);
+            let mut dstv = ws.take(dst);
+            let mut gw = ws.take(cx.grad_slots[l.p_w]);
+            gw[..wlen].fill(0.0);
+            match (patches, dpatch) {
+                (Some(p), Some(dp)) => {
+                    let plen = conv_patch_len(d, l.k, l.s);
+                    let mut pv = ws.take(p);
+                    let mut dpv = ws.take(dp);
+                    conv2d_bwd_into(
+                        &xqv[..d.elems()],
+                        d,
+                        &wqv[..wlen],
+                        l.k,
+                        l.s,
+                        l.cout,
+                        &dyv[..dy_len],
+                        &mut dstv[..d.elems()],
+                        &mut gw[..wlen],
+                        &mut pv[..plen],
+                        &mut dpv[..plen],
+                    );
+                    ws.put(p, pv);
+                    ws.put(dp, dpv);
+                }
+                _ => {
+                    conv2d_bwd_into(
+                        &xqv[..d.elems()],
+                        d,
+                        &wqv[..wlen],
+                        l.k,
+                        l.s,
+                        l.cout,
+                        &dyv[..dy_len],
+                        &mut dstv[..d.elems()],
+                        &mut gw[..wlen],
+                        &mut [],
+                        &mut [],
+                    );
+                }
+            }
+            ws.put(cx.grad_slots[l.p_w], gw);
+            ws.put(xq, xqv);
+            ws.put(wq, wqv);
+            ws.put(dy, dyv);
+            ws.put(dst, dstv);
+        }
+        Step::BDwConv { li, xq, wq, dy, dst, d } => {
+            let l = &cx.g.layers[li];
+            let wlen = cx.params[l.p_w].data.len();
+            let (ho, _, _) = same_pad(d.h, l.k, l.s);
+            let (wo, _, _) = same_pad(d.w, l.k, l.s);
+            let dy_len = d.n * ho * wo * d.c;
+            let xqv = ws.take(xq);
+            let wqv = ws.take(wq);
+            let dyv = ws.take(dy);
+            let mut dstv = ws.take(dst);
+            let mut gw = ws.take(cx.grad_slots[l.p_w]);
+            gw[..wlen].fill(0.0);
+            dwconv2d_bwd_into(
+                &xqv[..d.elems()],
+                d,
+                &wqv[..wlen],
+                l.k,
+                l.s,
+                &dyv[..dy_len],
+                &mut dstv[..d.elems()],
+                &mut gw[..wlen],
+            );
+            ws.put(cx.grad_slots[l.p_w], gw);
+            ws.put(xq, xqv);
+            ws.put(wq, wqv);
+            ws.put(dy, dyv);
+            ws.put(dst, dstv);
+        }
+        Step::BPool { dy, idx, dst, in_d } => {
+            let dy_len = in_d.n * (in_d.h / 2) * (in_d.w / 2) * in_d.c;
+            let dyv = ws.take(dy);
+            let mut dstv = ws.take(dst);
+            let uv = ws.take_u(idx);
+            maxpool2_bwd_into(&dyv[..dy_len], &uv[..dy_len], &mut dstv[..in_d.elems()]);
+            ws.put_u(idx, uv);
+            ws.put(dy, dyv);
+            ws.put(dst, dstv);
+        }
+        Step::BGap { dy, dst, d } => {
+            let dyv = ws.take(dy);
+            let mut dstv = ws.take(dst);
+            gap_bwd_into(&dyv[..d.n * d.c], d, &mut dstv[..d.elems()]);
+            ws.put(dy, dyv);
+            ws.put(dst, dstv);
+        }
+        Step::BSplit { src, a, b, d, ca } => {
+            let pixels = d.n * d.h * d.w;
+            let cb = d.c - ca;
+            let srcv = ws.take(src);
+            let mut av = ws.take(a);
+            let mut bv = ws.take(b);
+            for p in 0..pixels {
+                av[p * ca..(p + 1) * ca].copy_from_slice(&srcv[p * d.c..p * d.c + ca]);
+                bv[p * cb..(p + 1) * cb].copy_from_slice(&srcv[p * d.c + ca..(p + 1) * d.c]);
+            }
+            ws.put(src, srcv);
+            ws.put(a, av);
+            ws.put(b, bv);
+        }
+    }
+}
+
+/// Shared input validation for both executors.
+fn check_inputs(
+    plan: &Plan,
+    g: &ModelGraph,
+    images: &Tensor,
+    labels: &[i32],
+    wbits: &[f32],
+    abits: &[f32],
+) -> anyhow::Result<()> {
+    let d0 = plan.d0;
+    anyhow::ensure!(
+        images.shape == vec![d0.n, d0.h, d0.w, d0.c],
+        "images shape {:?} vs plan {:?}",
+        images.shape,
+        [d0.n, d0.h, d0.w, d0.c]
+    );
+    anyhow::ensure!(wbits.len() == g.w_channels, "wbits len {} vs {}", wbits.len(), g.w_channels);
+    anyhow::ensure!(abits.len() == g.a_channels, "abits len {} vs {}", abits.len(), g.a_channels);
+    anyhow::ensure!(labels.len() == plan.n, "labels len {} vs batch {}", labels.len(), plan.n);
+    Ok(())
+}
+
+/// Execute an eval plan: forward + accuracy/loss head.  Returns (correct,
+/// loss) — byte-identical to the tree-walk.
+#[allow(clippy::too_many_arguments)]
+pub fn run_eval(
+    plan: &Plan,
+    g: &ModelGraph,
+    binar: bool,
+    params: &[&Tensor],
+    images: &Tensor,
+    labels: &[i32],
+    wbits: &[f32],
+    abits: &[f32],
+    ws: &mut Workspace,
+) -> anyhow::Result<(f32, f32)> {
+    check_inputs(plan, g, images, labels, wbits, abits)?;
+    ws.ensure(plan);
+    let cx = Ctx {
+        g,
+        binar,
+        params,
+        images: &images.data,
+        wbits,
+        abits,
+        grad_slots: &plan.grad_slots,
+    };
+    exec_steps(&plan.steps[..plan.fwd_len], &cx, ws);
+    let logits = ws.take(plan.logits);
+    let (correct, loss) =
+        softmax_xent_into(&logits[..plan.n * plan.classes], plan.n, plan.classes, labels, None);
+    ws.put(plan.logits, logits);
+    Ok((correct, loss))
+}
+
+/// Execute a train plan: forward with tapes, loss head with gradient, STE
+/// backward, SGD-momentum update.  Returns the artifact outputs
+/// `(new_params…, new_momenta…, loss)` — byte-identical to the tree-walk.
+#[allow(clippy::too_many_arguments)]
+pub fn run_train(
+    plan: &Plan,
+    g: &ModelGraph,
+    binar: bool,
+    params: &[&Tensor],
+    momenta: &[&Tensor],
+    images: &Tensor,
+    labels: &[i32],
+    wbits: &[f32],
+    abits: &[f32],
+    lr: f32,
+    ws: &mut Workspace,
+) -> anyhow::Result<Vec<Value>> {
+    check_inputs(plan, g, images, labels, wbits, abits)?;
+    anyhow::ensure!(momenta.len() == params.len(), "momenta arity");
+    ws.ensure(plan);
+    let cx = Ctx {
+        g,
+        binar,
+        params,
+        images: &images.data,
+        wbits,
+        abits,
+        grad_slots: &plan.grad_slots,
+    };
+    exec_steps(&plan.steps[..plan.fwd_len], &cx, ws);
+
+    let (n, classes) = (plan.n, plan.classes);
+    let logits = ws.take(plan.logits);
+    let mut dlogits = ws.take(plan.dlogits);
+    let (_, loss) = softmax_xent_into(
+        &logits[..n * classes],
+        n,
+        classes,
+        labels,
+        Some(&mut dlogits[..n * classes]),
+    );
+    ws.put(plan.logits, logits);
+    ws.put(plan.dlogits, dlogits);
+
+    exec_steps(&plan.steps[plan.fwd_len..], &cx, ws);
+
+    // SGD with momentum 0.9 (same loop as the walk): new_m = 0.9·m + g,
+    // new_p = p − lr·new_m.  Outputs are necessarily fresh allocations.
+    let np = params.len();
+    let mut outs: Vec<Value> = Vec::with_capacity(2 * np + 1);
+    let mut new_momenta: Vec<Value> = Vec::with_capacity(np);
+    for i in 0..np {
+        let grad = ws.slice(plan.grad_slots[i], params[i].data.len());
+        let mut m = momenta[i].data.clone();
+        for (mv, &gv) in m.iter_mut().zip(grad) {
+            *mv = 0.9 * *mv + gv;
+        }
+        let mut p = params[i].data.clone();
+        for (pv, &mv) in p.iter_mut().zip(&m) {
+            *pv -= lr * mv;
+        }
+        outs.push(Value::f32(params[i].shape.clone(), p));
+        new_momenta.push(Value::f32(momenta[i].shape.clone(), m));
+    }
+    outs.extend(new_momenta);
+    outs.push(Value::scalar(loss));
+    Ok(outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::reference::zoo::model_graph;
+
+    #[test]
+    fn planner_reuses_released_slots_best_fit() {
+        let mut p = Planner::new();
+        let a = p.alloc(100);
+        let b = p.alloc(50);
+        let c = p.alloc(10);
+        assert_eq!([a, b, c], [0, 1, 2]);
+        p.release(a);
+        p.release(c);
+        // 40 fits best into the 100-cap? best fit picks the smallest cap
+        // ≥ len — that's slot a (100) vs c (10): c too small, a chosen.
+        assert_eq!(p.alloc(40), a);
+        // 5 best-fits into c.
+        assert_eq!(p.alloc(5), c);
+        // Nothing free: grows a new slot.
+        assert_eq!(p.alloc(7), 3);
+        p.release(b);
+        // Oversized request grows the largest free slot instead of minting.
+        assert_eq!(p.alloc(500), b);
+        let caps = p.finish();
+        assert_eq!(caps, vec![100, 500, 10, 7]);
+    }
+
+    #[test]
+    fn eval_plans_reuse_slots_aggressively() {
+        for name in crate::runtime::reference::zoo::MODEL_NAMES {
+            let g = model_graph(name).unwrap();
+            let plan = compile_eval(&g, 4);
+            let (fwd, bwd) = plan.step_counts();
+            assert!(fwd > 0, "{name}");
+            assert_eq!(bwd, 0, "{name}");
+            assert!(plan.uslot_caps.is_empty(), "{name}: eval keeps no pool tape");
+            assert!(plan.grad_slots.is_empty(), "{name}");
+            // Liveness must compress well below one-slot-per-intermediate:
+            // each layer emits ≥ 4 virtual buffers but only a handful can
+            // overlap.
+            assert!(
+                plan.slot_caps.len() < 4 * g.layers.len(),
+                "{name}: {} slots for {} layers",
+                plan.slot_caps.len(),
+                g.layers.len()
+            );
+        }
+    }
+
+    #[test]
+    fn train_plans_pin_tapes_and_grads() {
+        let g = model_graph("cif10").unwrap();
+        let plan = compile_train(&g, 2);
+        let (fwd, bwd) = plan.step_counts();
+        assert!(fwd > 0 && bwd > 0);
+        assert_eq!(plan.grad_slots.len(), g.params.len());
+        // Grad slots are distinct physical slots.
+        let mut gs = plan.grad_slots.clone();
+        gs.sort_unstable();
+        gs.dedup();
+        assert_eq!(gs.len(), g.params.len());
+        // logits / dlogits never alias (both pinned).
+        assert_ne!(plan.logits, plan.dlogits);
+        // sqnet train keeps its two pool argmax tapes.
+        let sq = compile_train(&model_graph("sqnet").unwrap(), 2);
+        assert_eq!(sq.uslot_caps.len(), 2);
+    }
+
+    #[test]
+    fn workspace_grows_monotonically_and_reports_footprint() {
+        let g = model_graph("cif10").unwrap();
+        let small = compile_eval(&g, 2);
+        let big = compile_eval(&g, 4);
+        let mut ws = Workspace::new();
+        ws.ensure(&small);
+        let f_small = ws.f32_len();
+        assert!(f_small > 0);
+        ws.ensure(&big);
+        let f_big = ws.f32_len();
+        assert!(f_big >= f_small);
+        // Re-ensuring either plan is a no-op once warm.
+        ws.ensure(&small);
+        ws.ensure(&big);
+        assert_eq!(ws.f32_len(), f_big);
+    }
+}

@@ -60,6 +60,16 @@ fn binarize_row(row: &mut [f32], bits: f32) {
     }
 }
 
+/// True when the mode's quantizer is an exact identity for every channel:
+/// linear fake-quant with all bit-widths rounding to ≥ 24 (beyond the f32
+/// mantissa — see [`fake_quant_row`]).  Residual binarization always
+/// perturbs values, so binar mode never passes through.  Callers use this
+/// to skip the full-tensor channel-major round-trip and quantized copy —
+/// the output would equal the input bit-for-bit.
+pub fn is_passthrough(bits: &[f32], binar: bool) -> bool {
+    !binar && bits.iter().all(|&b| round_te(b) >= 24.0)
+}
+
 /// Apply the mode's quantizer to every row of a channel-major `(rows, cols)`
 /// matrix; `bits[c]` governs row `c`.
 pub fn quantize_rows(x: &mut [f32], rows: usize, cols: usize, bits: &[f32], binar: bool) {
@@ -137,6 +147,20 @@ mod tests {
         let mut zeroed = orig.clone();
         binarize_row(&mut zeroed, 0.0);
         assert!(zeroed.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn passthrough_detection_matches_row_semantics() {
+        // ≥ 24 bits everywhere (after ties-to-even rounding) ⇒ identity.
+        assert!(is_passthrough(&[32.0, 24.0, 23.5], false)); // 23.5 rounds to 24
+        assert!(!is_passthrough(&[32.0, 23.0], false));
+        assert!(!is_passthrough(&[32.0, 0.0], false));
+        assert!(!is_passthrough(&[32.0, 32.0], true), "binar always perturbs");
+        // Agreement with quantize_rows: a passthrough matrix is unchanged.
+        let orig = vec![0.1f32, -2.5, 3.25, 0.0, 1.5, -0.75];
+        let mut x = orig.clone();
+        quantize_rows(&mut x, 2, 3, &[32.0, 25.0], false);
+        assert_eq!(x, orig);
     }
 
     #[test]

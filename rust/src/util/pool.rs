@@ -16,6 +16,7 @@
 //! available cores).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// A resolved worker-thread count (≥ 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -69,6 +70,53 @@ impl Parallelism {
     }
 }
 
+/// Per-worker scratch handout: a checkout/give-back store of reusable
+/// scratch states (planned-execution `Workspace`s, per-worker
+/// `Coordinator`s, …).  A fan-out checks one item out per worker, reuses
+/// it across every index that worker processes, and returns it at the
+/// end — so steady state creates nothing new and the store never grows
+/// past the peak concurrent worker count.
+///
+/// Scratch contents must never influence results (planned executors fully
+/// overwrite every buffer they read), so the nondeterministic
+/// checkout order cannot break the pool's byte-identity contract.
+#[derive(Debug, Default)]
+pub struct ScratchArena<W> {
+    store: Mutex<Vec<W>>,
+    created: AtomicUsize,
+}
+
+impl<W> ScratchArena<W> {
+    pub fn new() -> ScratchArena<W> {
+        ScratchArena { store: Mutex::new(Vec::new()), created: AtomicUsize::new(0) }
+    }
+
+    /// Pop an idle item, or build a fresh one with `mk` (counted).
+    pub fn checkout(&self, mk: impl FnOnce() -> W) -> W {
+        if let Some(w) = self.store.lock().expect("scratch arena poisoned").pop() {
+            return w;
+        }
+        self.created.fetch_add(1, Ordering::Relaxed);
+        mk()
+    }
+
+    /// Return an item for the next checkout to reuse.
+    pub fn give_back(&self, w: W) {
+        self.store.lock().expect("scratch arena poisoned").push(w);
+    }
+
+    /// How many items were ever built — flat across steady-state batches
+    /// (the workspace-reuse regression guard).
+    pub fn created(&self) -> usize {
+        self.created.load(Ordering::Relaxed)
+    }
+
+    /// Inspect the idle store (all items are idle once a fan-out returns).
+    pub fn peek<R>(&self, f: impl FnOnce(&[W]) -> R) -> R {
+        f(&self.store.lock().expect("scratch arena poisoned"))
+    }
+}
+
 /// Fan-out pool with a fixed thread budget and deterministic reduction
 /// order (see module docs).
 #[derive(Debug)]
@@ -85,18 +133,28 @@ impl WorkerPool {
         self.threads
     }
 
-    /// Map `0..n` through `f`, results in index order.  Runs serially
-    /// when the budget (or `n`) is 1 — that path is the exact loop a
-    /// pool-free caller would write, so thread count never changes
-    /// results for pure-per-index jobs.  Panics in `f` propagate.
-    pub fn run_indexed<R, F>(&self, n: usize, f: F) -> Vec<R>
+    /// The one fan-out implementation behind every `run_indexed*` entry
+    /// point: indices stream off a shared atomic cursor, results come
+    /// back in index order, and each worker wraps its run in
+    /// `init`/`done` for per-worker state (built and finished on the
+    /// worker's own thread, so `W` needs no `Send`).  Panics in `f`
+    /// propagate.
+    fn fan_out<W, R, I, D, F>(&self, n: usize, init: I, done: D, f: F) -> Vec<R>
     where
         R: Send,
-        F: Fn(usize) -> R + Sync,
+        I: Fn() -> W + Sync,
+        D: Fn(W) + Sync,
+        F: Fn(&mut W, usize) -> R + Sync,
     {
+        if n == 0 {
+            return Vec::new(); // don't build worker state for no work
+        }
         let workers = self.threads.min(n);
         if workers <= 1 {
-            return (0..n).map(f).collect();
+            let mut w = init();
+            let out: Vec<R> = (0..n).map(|i| f(&mut w, i)).collect();
+            done(w);
+            return out;
         }
         let cursor = AtomicUsize::new(0);
         let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
@@ -106,15 +164,19 @@ impl WorkerPool {
                 .map(|_| {
                     let cursor = &cursor;
                     let f = &f;
+                    let init = &init;
+                    let done = &done;
                     s.spawn(move || {
+                        let mut w = init();
                         let mut got: Vec<(usize, R)> = Vec::new();
                         loop {
                             let i = cursor.fetch_add(1, Ordering::Relaxed);
                             if i >= n {
                                 break;
                             }
-                            got.push((i, f(i)));
+                            got.push((i, f(&mut w, i)));
                         }
+                        done(w);
                         got
                     })
                 })
@@ -126,6 +188,56 @@ impl WorkerPool {
             }
         });
         slots.into_iter().map(|r| r.expect("cursor covered every index")).collect()
+    }
+
+    /// Map `0..n` through `f`, results in index order.  Runs serially
+    /// when the budget (or `n`) is 1 — that path is the exact loop a
+    /// pool-free caller would write, so thread count never changes
+    /// results for pure-per-index jobs.  Panics in `f` propagate.
+    pub fn run_indexed<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        self.fan_out(n, || (), drop, |_w, i| f(i))
+    }
+
+    /// [`run_indexed`](WorkerPool::run_indexed) with per-worker state
+    /// built **inside** each worker thread by `init` and dropped when the
+    /// fan-out drains — for states that are not `Send` (e.g. a worker's
+    /// own `Coordinator`, the `Sweep` scheme).  Results come back in index
+    /// order under the same determinism contract: state must never leak
+    /// into results.
+    pub fn run_indexed_with<W, R, I, F>(&self, n: usize, init: I, f: F) -> Vec<R>
+    where
+        R: Send,
+        I: Fn() -> W + Sync,
+        F: Fn(&mut W, usize) -> R + Sync,
+    {
+        self.fan_out(n, init, drop, f)
+    }
+
+    /// [`run_indexed`](WorkerPool::run_indexed) with a per-worker scratch
+    /// state from `arena`: every worker checks one `W` out (building it
+    /// with `mk` only when the arena is empty), reuses it for every index
+    /// it processes, and gives it back when the fan-out drains — so
+    /// scratch persists **across** fan-outs, bounded by the peak worker
+    /// count.  Results come back in index order under the same determinism
+    /// contract — scratch must never leak into results.
+    pub fn run_indexed_scratch<W, R, M, F>(
+        &self,
+        n: usize,
+        arena: &ScratchArena<W>,
+        mk: M,
+        f: F,
+    ) -> Vec<R>
+    where
+        W: Send,
+        R: Send,
+        M: Fn() -> W + Sync,
+        F: Fn(&mut W, usize) -> R + Sync,
+    {
+        self.fan_out(n, || arena.checkout(&mk), |w| arena.give_back(w), f)
     }
 }
 
@@ -161,6 +273,53 @@ mod tests {
             .into_iter()
             .collect();
         assert!(bad.is_err());
+    }
+
+    #[test]
+    fn scratch_arena_reuses_instead_of_rebuilding() {
+        let arena: ScratchArena<Vec<u8>> = ScratchArena::new();
+        let a = arena.checkout(|| vec![1, 2, 3]);
+        arena.give_back(a);
+        let b = arena.checkout(|| vec![9, 9]); // reuses, mk not consulted
+        assert_eq!(b, vec![1, 2, 3]);
+        assert_eq!(arena.created(), 1);
+        arena.give_back(b);
+        assert_eq!(arena.peek(|ws| ws.len()), 1);
+    }
+
+    #[test]
+    fn per_worker_state_fanout_is_index_ordered_without_send() {
+        // Rc is !Send: run_indexed_with must still work because each
+        // worker builds and drops its state on its own thread.
+        use std::rc::Rc;
+        for threads in [1usize, 4] {
+            let pool = WorkerPool::new(threads);
+            let out = pool.run_indexed_with(
+                9,
+                || Rc::new(5usize),
+                |state, i| i * **state,
+            );
+            assert_eq!(out, (0..9).map(|i| i * 5).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn scratch_fanout_is_index_ordered_and_bounds_creation() {
+        for threads in [1usize, 3, 8] {
+            let pool = WorkerPool::new(threads);
+            let arena: ScratchArena<usize> = ScratchArena::new();
+            for _round in 0..3 {
+                let out = pool.run_indexed_scratch(13, &arena, || 0usize, |w, i| {
+                    *w += 1; // per-worker call count — must not leak into results
+                    i * 3
+                });
+                assert_eq!(out, (0..13).map(|i| i * 3).collect::<Vec<_>>());
+            }
+            assert!(arena.created() <= threads.min(13), "threads={threads}");
+            assert!(arena.created() >= 1);
+            // Everything checked back in between fan-outs.
+            assert_eq!(arena.peek(|ws| ws.len()), arena.created());
+        }
     }
 
     #[test]

@@ -1,0 +1,182 @@
+//! Planned-execution engine contracts:
+//!
+//! * **Byte-identity**: the two-phase plan/workspace engine reproduces the
+//!   PR 3 allocate-per-call tree-walk bit-for-bit — eval for every zoo
+//!   model × quant/binar × 1/2/4 worker threads, train for every model ×
+//!   mode.
+//! * **Workspace reuse**: after one warm-up `eval_config`, further calls
+//!   grow neither the workspace count nor the resident buffer footprint —
+//!   steady-state batches allocate no new scratch.
+
+use std::sync::Arc;
+
+use autoq::cost::Mode;
+use autoq::data::synth::{Split, SynthDataset};
+use autoq::models::{ModelRunner, ParamStore};
+use autoq::runtime::reference::model_exec::{RefModelEval, RefModelTrain};
+use autoq::runtime::reference::zoo::{model_graph, IMAGE_HW, MODEL_NAMES};
+use autoq::runtime::{BackendKind, Parallelism, Runtime, Tensor, Value};
+use autoq::util::pool::WorkerPool;
+use autoq::util::rng::Rng;
+
+fn images(n: usize, seed: u64) -> Value {
+    let mut rng = Rng::new(seed);
+    let mut data = vec![0.0f32; n * IMAGE_HW * IMAGE_HW * 3];
+    rng.fill_normal_f32(&mut data, 0.5);
+    Value::F32(Tensor::new(vec![n, IMAGE_HW, IMAGE_HW, 3], data))
+}
+
+fn labels(n: usize, shift: i32) -> Value {
+    Value::i32(vec![n], (0..n as i32).map(|i| (i + shift) % 10).collect())
+}
+
+/// Mixed bit vector: live low-bit channels with pruned and passthrough
+/// channels sprinkled in, so every quantizer path (0-bit, low-bit, ≥24
+/// passthrough) runs under the plan engine.
+fn mixed_bits(len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..len)
+        .map(|_| match rng.below(8) {
+            0 => 0.0,
+            1 => 32.0,
+            b => b as f32,
+        })
+        .collect()
+}
+
+#[test]
+fn planned_eval_matches_walk_for_all_models_modes_threads() {
+    for name in MODEL_NAMES {
+        let g = model_graph(name).unwrap();
+        let ps = ParamStore::init(&g.params, &mut Rng::new(7));
+        let base: Vec<Value> = ps.tensors.iter().map(|t| Value::F32(t.clone())).collect();
+        let wbits = Value::f32(vec![g.w_channels], mixed_bits(g.w_channels, 11));
+        let abits = Value::f32(vec![g.a_channels], mixed_bits(g.a_channels, 13));
+        let n = 4;
+        let batches_owned: Vec<(Value, Value)> =
+            (0..3u64).map(|bi| (images(n, 100 + bi), labels(n, bi as i32))).collect();
+        let batches: Vec<Vec<&Value>> = batches_owned
+            .iter()
+            .map(|(img, lbl)| {
+                let mut row: Vec<&Value> = base.iter().collect();
+                row.push(img);
+                row.push(lbl);
+                row.push(&wbits);
+                row.push(&abits);
+                row
+            })
+            .collect();
+        for binar in [false, true] {
+            // The retained tree-walk is the semantic reference.
+            let walker = RefModelEval::new(g.clone(), binar, Arc::new(WorkerPool::new(1)));
+            let expect: Vec<Vec<Value>> =
+                batches.iter().map(|b| walker.run_walk(b).unwrap()).collect();
+            for threads in [1usize, 2, 4] {
+                let mut exe =
+                    RefModelEval::new(g.clone(), binar, Arc::new(WorkerPool::new(threads)));
+                // Twice: cold workspaces, then warm reuse.
+                for round in 0..2 {
+                    let outs = autoq::runtime::Executable::execute_batch(&mut exe, &batches)
+                        .unwrap();
+                    assert_eq!(outs.len(), expect.len());
+                    for (bi, (o, e)) in outs.iter().zip(&expect).enumerate() {
+                        for k in 0..2 {
+                            assert_eq!(
+                                o[k].scalar_f32().unwrap().to_bits(),
+                                e[k].scalar_f32().unwrap().to_bits(),
+                                "{name} binar={binar} threads={threads} round={round} \
+                                 batch={bi} out={k}"
+                            );
+                        }
+                    }
+                }
+                let stats = autoq::runtime::Executable::scratch_stats(&exe).unwrap();
+                assert!(stats.workspaces <= threads.min(batches.len()), "{name}");
+            }
+        }
+    }
+}
+
+#[test]
+fn planned_train_matches_walk_for_all_models_modes() {
+    for name in MODEL_NAMES {
+        let g = model_graph(name).unwrap();
+        let ps = ParamStore::init(&g.params, &mut Rng::new(19));
+        let momenta = ps.zeros_like();
+        let n = 2;
+        let np = g.params.len();
+        let mut inputs: Vec<Value> = Vec::with_capacity(2 * np + 5);
+        inputs.extend(ps.tensors.iter().map(|t| Value::F32(t.clone())));
+        inputs.extend(momenta.tensors.iter().map(|t| Value::F32(t.clone())));
+        inputs.push(images(n, 23));
+        inputs.push(labels(n, 1));
+        inputs.push(Value::f32(vec![g.w_channels], mixed_bits(g.w_channels, 29)));
+        inputs.push(Value::f32(vec![g.a_channels], mixed_bits(g.a_channels, 31)));
+        inputs.push(Value::scalar(0.05));
+        let refs: Vec<&Value> = inputs.iter().collect();
+        for binar in [false, true] {
+            let mut exe = RefModelTrain::new(g.clone(), binar);
+            let walk = exe.run_walk(&refs).unwrap();
+            // Twice: cold plan + workspace, then warm reuse.
+            for round in 0..2 {
+                let planned = autoq::runtime::Executable::execute(&mut exe, &refs).unwrap();
+                assert_eq!(planned.len(), walk.len(), "{name}");
+                for (i, (p, w)) in planned.iter().zip(&walk).enumerate() {
+                    let (pt, wt) = (p.as_f32().unwrap(), w.as_f32().unwrap());
+                    assert_eq!(pt.shape, wt.shape, "{name} out {i}");
+                    for (j, (a, b)) in pt.data.iter().zip(&wt.data).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{name} binar={binar} round={round} out {i} elem {j}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Steady-state `eval_config` allocates no new scratch: the executable's
+/// workspace arena is created on the warm-up batch set and stays flat —
+/// same workspace count, same resident element footprint — over further
+/// evaluations (including a different bit config).
+#[test]
+fn eval_config_workspace_is_flat_after_warmup() {
+    let dir = std::env::temp_dir().join(format!("autoq_plan_ws_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let data = SynthDataset::new(42);
+    let mut rt =
+        Runtime::open_with_opts(&dir, BackendKind::Reference, Some(Parallelism::new(2))).unwrap();
+    let meta = rt.manifest.model("cif10").unwrap().clone();
+    let params = ParamStore::init(&meta.params, &mut Rng::new(42));
+    let wbits = vec![5u8; meta.w_channels];
+    let abits = vec![4u8; meta.a_channels];
+    let runner = ModelRunner::new(meta, params).unwrap();
+
+    // Warm-up: first batch set builds plans + workspaces.
+    let warm = runner
+        .eval_config(&mut rt, Mode::Quant, &wbits, &abits, &data, Split::Val, 3)
+        .unwrap();
+    let stats0 = rt.scratch_stats("cif10_eval_quant").expect("planned executable");
+    assert!(stats0.workspaces >= 1 && stats0.workspaces <= 2);
+    assert!(stats0.f32_len > 0);
+
+    // Steady state: repeat evals (same config, then a different one) must
+    // not grow the arena.
+    for round in 0..3 {
+        let res = runner
+            .eval_config(&mut rt, Mode::Quant, &wbits, &abits, &data, Split::Val, 3)
+            .unwrap();
+        assert_eq!(res.accuracy.to_bits(), warm.accuracy.to_bits(), "round {round}");
+        let stats = rt.scratch_stats("cif10_eval_quant").unwrap();
+        assert_eq!(stats, stats0, "workspace grew on round {round}: {stats:?}");
+    }
+    let wb32 = vec![32u8; wbits.len()];
+    let ab32 = vec![32u8; abits.len()];
+    runner.eval_config(&mut rt, Mode::Quant, &wb32, &ab32, &data, Split::Val, 3).unwrap();
+    let stats = rt.scratch_stats("cif10_eval_quant").unwrap();
+    assert_eq!(stats, stats0, "different bit config must reuse the same workspaces");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
