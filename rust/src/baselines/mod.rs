@@ -97,6 +97,12 @@ pub fn run_baseline(
     data: &SynthDataset,
     cfg: &BaselineConfig,
 ) -> anyhow::Result<SearchResult> {
+    // Same contract as `run_search`: a zero-episode config must be a
+    // structured error, not a post-loop `expect` panic.
+    anyhow::ensure!(
+        cfg.episodes >= 1,
+        "baseline needs at least one episode, got episodes == 0"
+    );
     let t0 = std::time::Instant::now();
     let meta = runner.meta.clone();
     let wvar = runner.weight_variances();
@@ -276,11 +282,10 @@ pub fn run_baseline(
         }
     }
 
-    Ok(SearchResult {
-        best: best.expect("episodes > 0"),
-        history,
-        secs: t0.elapsed().as_secs_f64(),
-    })
+    let best = best.ok_or_else(|| {
+        anyhow::anyhow!("baseline finished without completing a single episode")
+    })?;
+    Ok(SearchResult { best, history, secs: t0.elapsed().as_secs_f64() })
 }
 
 #[cfg(test)]

@@ -32,7 +32,7 @@ use crate::cost::Mode;
 use crate::data::synth::{Split, SynthDataset};
 use crate::finetune::TrainConfig;
 use crate::models::{ModelRunner, ParamStore};
-use crate::runtime::{BackendKind, Manifest, Parallelism, Runtime};
+use crate::runtime::{BackendKind, Manifest, Parallelism, Runtime, RuntimeOpts};
 use crate::search::SearchConfig;
 use crate::sim::{Arch, FpgaSim};
 use crate::util::rng::Rng;
@@ -78,8 +78,19 @@ impl Coordinator {
         backend: Option<BackendKind>,
         threads: Option<Parallelism>,
     ) -> anyhow::Result<Coordinator> {
+        Self::open_full(dir, backend, RuntimeOpts::threads(threads))
+    }
+
+    /// Open with the full option set (mirroring
+    /// `--backend`/`--threads`/`--shard-workers`; every `None`
+    /// auto-resolves).
+    pub fn open_full(
+        dir: &Path,
+        backend: Option<BackendKind>,
+        opts: RuntimeOpts,
+    ) -> anyhow::Result<Coordinator> {
         let kind = BackendKind::resolve(dir, backend)?;
-        let rt = Runtime::open_with_opts(dir, kind, threads)?;
+        let rt = Runtime::open_full(dir, kind, opts)?;
         // The reference backend needs no artifacts, but trained params still
         // persist under the artifact dir — make sure it exists.
         std::fs::create_dir_all(dir)?;

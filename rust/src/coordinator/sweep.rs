@@ -11,8 +11,11 @@
 //!
 //! Outer per-cell workers compose with the reference backend's inner
 //! per-batch eval threads: unless `threads` pins a per-worker budget, the
-//! machine's thread budget is split evenly across workers so the grid
-//! never oversubscribes cores.
+//! machine's thread budget is split evenly across workers (never below
+//! one thread each) so the grid never oversubscribes cores.  With the
+//! shard backend each worker's budget is in turn the total its process
+//! pool splits, so `cells × processes × threads` stays inside the same
+//! machine budget.
 
 use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
@@ -25,7 +28,7 @@ use crate::coordinator::observer::LogObserver;
 use crate::coordinator::report::JobReport;
 use crate::coordinator::Coordinator;
 use crate::cost::Mode;
-use crate::runtime::{BackendKind, Parallelism};
+use crate::runtime::{BackendKind, Parallelism, RuntimeOpts};
 use crate::search::{Granularity, Protocol, ProtocolKind};
 
 /// Cell-key token for a protocol: unlike `Protocol::tag`, distinguishes
@@ -73,6 +76,12 @@ pub struct Sweep {
     /// thread budget evenly across workers, so outer per-cell and inner
     /// per-batch parallelism compose without oversubscription).
     pub threads: Option<Parallelism>,
+    /// Worker **processes** per sweep worker when `backend` is
+    /// [`BackendKind::Shard`] (`None` = `$AUTOQ_SHARD_WORKERS`, else 2);
+    /// ignored by other backends.  The per-worker thread budget above is
+    /// the total each shard pool splits across its processes, so the full
+    /// grid runs `cells × processes × threads` under one machine budget.
+    pub shard_workers: Option<usize>,
 }
 
 impl Default for Sweep {
@@ -92,8 +101,32 @@ impl Default for Sweep {
             out_dir: None,
             backend: None,
             threads: None,
+            shard_workers: None,
         }
     }
+}
+
+/// Thread budget for the serial pre-warm: the grid's whole budget —
+/// workers × per-worker threads when pinned (saturating: a pathological
+/// `--threads` × `--workers` product must clamp, not overflow), the
+/// resolved machine budget otherwise.
+fn prewarm_budget(threads: Option<Parallelism>, workers: usize) -> anyhow::Result<Parallelism> {
+    Ok(match threads {
+        Some(p) => Parallelism::new(p.get().saturating_mul(workers.max(1))),
+        None => Parallelism::resolve(None)?,
+    })
+}
+
+/// Per-worker inner eval-thread budget: pinned explicitly, else an even
+/// share of the machine budget with [`Parallelism::share_of`]'s ≥ 1 floor
+/// — `workers > cores` must give every worker one thread, never a `0`
+/// that downstream `Parallelism` parsing would re-read as "all cores"
+/// (the oversubscription the split exists to prevent).
+fn inner_budget(threads: Option<Parallelism>, workers: usize) -> anyhow::Result<Parallelism> {
+    Ok(match threads {
+        Some(p) => p,
+        None => Parallelism::share_of(Parallelism::resolve(None)?.get(), workers),
+    })
 }
 
 /// Everything a finished sweep produced, reports in grid order.
@@ -176,26 +209,17 @@ impl Sweep {
             .filter(|m| !Coordinator::params_path_in(dir, m).exists())
             .collect();
         if !missing.is_empty() {
-            // The serial pre-warm gets the grid's whole thread budget:
-            // workers × per-worker threads when pinned, the machine
-            // otherwise.
-            let warm = match self.threads {
-                Some(p) => Parallelism::new(p.get() * workers),
-                None => Parallelism::resolve(None)?,
-            };
-            let mut coord = Coordinator::open_with_opts(dir, self.backend, Some(warm))?;
+            let warm = prewarm_budget(self.threads, workers)?;
+            let opts = RuntimeOpts { threads: Some(warm), shard_workers: self.shard_workers };
+            let mut coord = Coordinator::open_full(dir, self.backend, opts)?;
             for model in missing {
                 coord.ensure_pretrained(model)?;
             }
         }
 
         // Compose outer (per-cell) with inner (per-batch) parallelism
-        // without oversubscription: pinned via `threads`, else an even
-        // share of the resolved machine budget per worker.
-        let inner = match self.threads {
-            Some(p) => p,
-            None => Parallelism::new(Parallelism::resolve(None)?.get() / workers),
-        };
+        // without oversubscription.
+        let inner = inner_budget(self.threads, workers)?;
         crate::info!(
             "sweep: {} jobs on {} worker(s) × {} eval thread(s)",
             jobs.len(),
@@ -210,8 +234,10 @@ impl Sweep {
                 let next = &next;
                 let jobs = &jobs;
                 let backend = self.backend;
+                let opts =
+                    RuntimeOpts { threads: Some(inner), shard_workers: self.shard_workers };
                 s.spawn(move || {
-                    let mut coord = match Coordinator::open_with_opts(dir, backend, Some(inner)) {
+                    let mut coord = match Coordinator::open_full(dir, backend, opts) {
                         Ok(c) => c,
                         Err(e) => {
                             // Don't claim queue slots: healthy workers drain
@@ -343,5 +369,38 @@ mod tests {
         let mut sw = grid();
         sw.granularities.clear();
         assert!(sw.jobs().is_err());
+    }
+
+    /// Regression: `workers > cores` used to be able to resolve the even
+    /// split to `0` inner threads, which `Parallelism` parsing reads as
+    /// "auto = all cores" — i.e. every worker grabbing the whole machine.
+    #[test]
+    fn inner_budget_never_drops_to_zero_when_workers_exceed_cores() {
+        let cores = Parallelism::resolve(None).unwrap().get();
+        for workers in [1, 2, cores, cores + 1, 2 * cores + 3, usize::MAX] {
+            let inner = inner_budget(None, workers).unwrap();
+            assert!(inner.get() >= 1, "workers={workers} resolved to a zero share");
+            assert!(
+                inner.get() <= cores.max(1),
+                "workers={workers} share {} exceeds the machine budget {cores}",
+                inner.get()
+            );
+        }
+        // A pinned per-worker budget is taken verbatim.
+        assert_eq!(inner_budget(Some(Parallelism::new(3)), 64).unwrap().get(), 3);
+    }
+
+    /// Regression: the serial pre-warm's `threads × workers` product must
+    /// saturate instead of overflowing (and clamp to ≥ 1).
+    #[test]
+    fn prewarm_budget_saturates_and_floors() {
+        assert_eq!(prewarm_budget(Some(Parallelism::new(3)), 4).unwrap().get(), 12);
+        assert_eq!(prewarm_budget(Some(Parallelism::new(2)), 0).unwrap().get(), 2);
+        assert_eq!(
+            prewarm_budget(Some(Parallelism::new(usize::MAX)), usize::MAX).unwrap().get(),
+            usize::MAX,
+            "overflow must saturate, not wrap to a tiny budget"
+        );
+        assert!(prewarm_budget(None, usize::MAX).unwrap().get() >= 1);
     }
 }

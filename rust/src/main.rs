@@ -20,16 +20,20 @@ use std::path::PathBuf;
 
 use autoq::coordinator::{Coordinator, JobOutcome, JobSpec, Sweep};
 use autoq::cost::Mode;
-use autoq::runtime::{BackendKind, Parallelism};
+use autoq::runtime::{shard, BackendKind, Parallelism, RuntimeOpts};
 use autoq::search::{Granularity, Protocol, ProtocolKind};
 use autoq::util::cli::Args;
 
-/// Shared `--backend` option help (pjrt|reference; empty = auto).
-const BACKEND_HELP: &str = "pjrt|reference (default: $AUTOQ_BACKEND, else auto)";
+/// Shared `--backend` option help (pjrt|reference|shard; empty = auto).
+const BACKEND_HELP: &str = "pjrt|reference|shard (default: $AUTOQ_BACKEND, else auto)";
 
 /// Shared `--threads` option help (empty/auto/0 = auto-resolve).
 const THREADS_HELP: &str =
     "reference-backend eval worker threads (default: $AUTOQ_THREADS, else all cores)";
+
+/// Shared `--shard-workers` option help (empty/auto/0 = auto-resolve).
+const SHARD_WORKERS_HELP: &str =
+    "worker processes for --backend shard (default: $AUTOQ_SHARD_WORKERS, else 2)";
 
 /// Parse the shared `--backend` option (empty string = auto-resolve).
 fn backend_arg(a: &Args) -> anyhow::Result<Option<BackendKind>> {
@@ -41,10 +45,20 @@ fn threads_arg(a: &Args) -> anyhow::Result<Option<Parallelism>> {
     Parallelism::parse_opt(&a.get("threads"))
 }
 
-/// Open the default-artifact-dir coordinator honouring `--backend` and
-/// `--threads`.
+/// Parse the shared `--shard-workers` option (empty/auto/0 = auto-resolve).
+fn shard_workers_arg(a: &Args) -> anyhow::Result<Option<usize>> {
+    shard::parse_workers_opt(&a.get("shard-workers"))
+}
+
+/// The shared runtime knobs behind `--threads`/`--shard-workers`.
+fn runtime_opts(a: &Args) -> anyhow::Result<RuntimeOpts> {
+    Ok(RuntimeOpts { threads: threads_arg(a)?, shard_workers: shard_workers_arg(a)? })
+}
+
+/// Open the default-artifact-dir coordinator honouring `--backend`,
+/// `--threads` and `--shard-workers`.
 fn open_coord(a: &Args) -> anyhow::Result<Coordinator> {
-    Coordinator::open_with_opts(&Coordinator::default_dir(), backend_arg(a)?, threads_arg(a)?)
+    Coordinator::open_full(&Coordinator::default_dir(), backend_arg(a)?, runtime_opts(a)?)
 }
 
 fn main() {
@@ -72,6 +86,10 @@ fn run(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
         "sim" => cmd_sim(rest),
         "repro" => autoq::repro::cmd_repro(rest),
         "stats" => cmd_stats(rest),
+        // Hidden: the shard backend's subprocess entry point.  Speaks the
+        // length-prefixed JSON protocol on stdin/stdout (see
+        // runtime/shard/proto.rs) — never invoked by hand.
+        "worker" => cmd_worker(rest),
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
             Ok(())
@@ -96,14 +114,19 @@ commands:
   repro    <fig1|table2|table3|table4|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|storage|all>
   stats                                        runtime executable stats
 
-Every command takes --backend {pjrt,reference} (or $AUTOQ_BACKEND): `pjrt`
-executes the AOT HLO artifacts, `reference` interprets the same graphs in
-pure Rust — no artifacts, no XLA library, runs anywhere.  Default: pjrt
-iff compiled in and artifacts exist, else reference.
+Every command takes --backend {pjrt,reference,shard} (or $AUTOQ_BACKEND):
+`pjrt` executes the AOT HLO artifacts, `reference` interprets the same
+graphs in pure Rust — no artifacts, no XLA library, runs anywhere — and
+`shard` fans exec calls across `--shard-workers` worker *processes* (or
+$AUTOQ_SHARD_WORKERS; default 2) that each run a reference runtime, with
+results byte-identical to `reference` at every worker count.  Default:
+pjrt iff compiled in and artifacts exist, else reference (never shard —
+multi-process fan-out is an explicit opt-in).
 
 Every command also takes --threads N (or $AUTOQ_THREADS; default all
 cores): the reference backend fans independent eval batches across N
-worker threads with byte-identical results at any N.  For `sweep`,
+worker threads with byte-identical results at any N; for `shard`, N is
+the total budget split evenly across the worker processes.  For `sweep`,
 --threads is the per-worker eval budget (default: cores split evenly
 across --workers, so the grid never oversubscribes).
 
@@ -124,6 +147,7 @@ fn cmd_pretrain(rest: &[String]) -> anyhow::Result<()> {
         .opt("seed", "42", "dataset seed")
         .opt("backend", "", BACKEND_HELP)
         .opt("threads", "", THREADS_HELP)
+        .opt("shard-workers", "", SHARD_WORKERS_HELP)
         .parse(rest)?;
     let model = a.get("model");
     let spec = JobSpec::pretrain(&model)
@@ -155,6 +179,7 @@ fn cmd_search(rest: &[String]) -> anyhow::Result<()> {
         .opt("out", "", "write best config JSON here")
         .opt("backend", "", BACKEND_HELP)
         .opt("threads", "", THREADS_HELP)
+        .opt("shard-workers", "", SHARD_WORKERS_HELP)
         .flag("paper-scale", "use the paper's 400-episode schedule")
         .flag("no-relabel", "disable HIRO goal relabeling (ablation)")
         .parse(rest)?;
@@ -211,6 +236,7 @@ fn cmd_sweep(rest: &[String]) -> anyhow::Result<()> {
         .opt("out-dir", "reports/sweep", "one JobReport JSON per cell lands here")
         .opt("backend", "", BACKEND_HELP)
         .opt("threads", "", "eval threads per worker (default: split cores across workers)")
+        .opt("shard-workers", "", SHARD_WORKERS_HELP)
         .flag("paper-scale", "use the paper's 400-episode schedule")
         .flag("no-relabel", "disable HIRO goal relabeling (ablation)")
         .parse(rest)?;
@@ -236,6 +262,7 @@ fn cmd_sweep(rest: &[String]) -> anyhow::Result<()> {
         out_dir: Some(PathBuf::from(a.get("out-dir"))),
         backend: backend_arg(&a)?,
         threads: threads_arg(&a)?,
+        shard_workers: shard_workers_arg(&a)?,
     };
     let result = sweep.run(&Coordinator::default_dir())?;
     println!(
@@ -276,6 +303,7 @@ fn cmd_finetune(rest: &[String]) -> anyhow::Result<()> {
         .opt("steps", "200", "fine-tune steps")
         .opt("backend", "", BACKEND_HELP)
         .opt("threads", "", THREADS_HELP)
+        .opt("shard-workers", "", SHARD_WORKERS_HELP)
         .parse(rest)?;
     let model = a.get("model");
     let cfgf = a.get("config");
@@ -303,6 +331,7 @@ fn cmd_eval(rest: &[String]) -> anyhow::Result<()> {
         .opt("batches", "4", "val batches")
         .opt("backend", "", BACKEND_HELP)
         .opt("threads", "", THREADS_HELP)
+        .opt("shard-workers", "", SHARD_WORKERS_HELP)
         .parse(rest)?;
     let model = a.get("model");
     let mut builder = JobSpec::eval(&model).batches(a.get_usize("batches")?);
@@ -325,6 +354,7 @@ fn cmd_sim(rest: &[String]) -> anyhow::Result<()> {
         .opt("config", "", "searched config JSON")
         .opt("backend", "", BACKEND_HELP)
         .opt("threads", "", THREADS_HELP)
+        .opt("shard-workers", "", SHARD_WORKERS_HELP)
         .parse(rest)?;
     let model = a.get("model");
     let mut builder = JobSpec::sim(&model);
@@ -347,10 +377,21 @@ fn cmd_sim(rest: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Hidden `autoq worker` entry point: serve shard-protocol frames over
+/// stdio until EOF/exit.  `--threads` is this process's inner eval
+/// budget (the shard client passes its per-worker share of the total).
+fn cmd_worker(rest: &[String]) -> anyhow::Result<()> {
+    let a = Args::new("worker")
+        .opt("threads", "", THREADS_HELP)
+        .parse(rest)?;
+    autoq::runtime::shard::worker::run(threads_arg(&a)?)
+}
+
 fn cmd_stats(rest: &[String]) -> anyhow::Result<()> {
     let a = Args::new("stats")
         .opt("backend", "", BACKEND_HELP)
         .opt("threads", "", THREADS_HELP)
+        .opt("shard-workers", "", SHARD_WORKERS_HELP)
         .parse(rest)?;
     let mut coord = open_coord(&a)?;
     println!("{}", coord.runtime().stats_report());

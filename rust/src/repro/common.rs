@@ -58,6 +58,9 @@ pub struct ReproCtx {
     /// Inner eval threads per worker (`--threads`; `None` = split the
     /// machine budget evenly across workers, the `Sweep` rule).
     pub threads: Option<Parallelism>,
+    /// Worker processes per fine-tune worker when `backend` is the shard
+    /// backend (`--shard-workers`); ignored otherwise.
+    pub shard_workers: Option<usize>,
 }
 
 impl Default for ReproCtx {
@@ -73,6 +76,7 @@ impl Default for ReproCtx {
             workers: 2,
             backend: None,
             threads: None,
+            shard_workers: None,
         }
     }
 }
@@ -187,9 +191,11 @@ pub fn finetuned_accuracies(
         return Ok(cells.iter().map(|(_, saved)| saved.accuracy).collect());
     }
     let workers = ctx.workers.max(1).min(cells.len());
+    // The Sweep rule: an even share of the machine budget per worker,
+    // never below one thread (`workers > cores` must not oversubscribe).
     let inner = match ctx.threads {
         Some(p) => p,
-        None => Parallelism::new(Parallelism::resolve(None)?.get() / workers),
+        None => Parallelism::share_of(Parallelism::resolve(None)?.get(), workers),
     };
     crate::info!(
         "repro: fine-tuning {} cell(s) on {workers} worker(s) × {} eval thread(s)",
@@ -198,9 +204,11 @@ pub fn finetuned_accuracies(
     );
     let pool = WorkerPool::new(workers);
     let backend = ctx.backend;
+    let opts =
+        crate::runtime::RuntimeOpts { threads: Some(inner), shard_workers: ctx.shard_workers };
     let results: Vec<anyhow::Result<f64>> = pool.run_indexed_with(
         cells.len(),
-        || Coordinator::open_with_opts(dir, backend, Some(inner)),
+        || Coordinator::open_full(dir, backend, opts),
         |coord, i| match coord {
             Ok(c) => finetuned_accuracy(c, &cells[i].0, &cells[i].1, ctx),
             Err(e) => Err(anyhow::anyhow!("fine-tune worker failed to open runtime: {e:#}")),

@@ -21,13 +21,19 @@ pub fn cmd_repro(rest: &[String]) -> anyhow::Result<()> {
         .opt("runs", "3", "independent runs for fig8")
         .opt("seed", "1", "base seed")
         .opt("workers", "2", "parallel per-cell fine-tune workers for table rows")
-        .opt("backend", "", "pjrt|reference (default: $AUTOQ_BACKEND, else auto)")
+        .opt("backend", "", "pjrt|reference|shard (default: $AUTOQ_BACKEND, else auto)")
         .opt("threads", "", "eval threads per worker (default: split cores across workers)")
+        .opt(
+            "shard-workers",
+            "",
+            "worker processes for --backend shard (default: $AUTOQ_SHARD_WORKERS, else 2)",
+        )
         .flag("fresh", "ignore cached searched configs")
         .flag("paper-scale", "paper's 400-episode schedule")
         .parse(rest)?;
     let backend = crate::runtime::BackendKind::parse_opt(&a.get("backend"))?;
     let threads = crate::runtime::Parallelism::parse_opt(&a.get("threads"))?;
+    let shard_workers = crate::runtime::shard::parse_workers_opt(&a.get("shard-workers"))?;
     let ctx = ReproCtx {
         episodes: a.get_usize("episodes")?,
         warmup: a.get_usize("warmup")?,
@@ -39,14 +45,15 @@ pub fn cmd_repro(rest: &[String]) -> anyhow::Result<()> {
         workers: a.get_usize("workers")?,
         backend,
         threads,
+        shard_workers,
     };
     let models: Vec<String> = a.get("models").split(',').map(str::to_string).collect();
     let what = a.positional.first().cloned().unwrap_or_else(|| "help".into());
     let runs = a.get_usize("runs")?;
-    let mut coord = crate::coordinator::Coordinator::open_with_opts(
+    let mut coord = crate::coordinator::Coordinator::open_full(
         &crate::coordinator::Coordinator::default_dir(),
         backend,
-        threads,
+        crate::runtime::RuntimeOpts { threads, shard_workers },
     )?;
     match what.as_str() {
         "fig1" => fig1(),

@@ -1,17 +1,22 @@
 //! The execution-backend abstraction: [`Backend`] produces [`Executable`]s
 //! for manifest artifacts, [`BackendKind`] selects an implementation.
 //!
-//! Two backends exist:
+//! Three backends exist:
 //!   * `pjrt` (feature-gated) — compiles AOT'd HLO-text artifacts through
 //!     the XLA PJRT CPU client (`runtime/client.rs`).  Requires `make
 //!     artifacts` and the XLA extension library.
 //!   * `reference` — a pure-Rust interpreter of the same graphs
 //!     (`runtime/reference/`).  Needs no artifacts, no native library, no
 //!     python: the whole search pipeline runs anywhere `cargo test` does.
+//!   * `shard` — fans `exec` calls across `autoq worker` subprocesses that
+//!     each run an in-process reference runtime (`runtime/shard/`), with
+//!     results byte-identical to `reference` at every worker count.
 //!
 //! Selection precedence: explicit caller choice (`--backend` /
 //! `Runtime::open_with`) > `$AUTOQ_BACKEND` > auto (PJRT iff compiled in
-//! and `manifest.json` exists in the artifact dir, else reference).
+//! and `manifest.json` exists in the artifact dir, else reference; the
+//! auto rule never picks `shard` — multi-process fan-out is always an
+//! explicit opt-in).
 
 use std::path::Path;
 
@@ -82,6 +87,10 @@ pub enum BackendKind {
     Reference,
     /// PJRT over AOT HLO artifacts (needs the `pjrt` cargo feature).
     Pjrt,
+    /// Multi-process fan-out over `autoq worker` reference runtimes
+    /// (always available; worker count from `--shard-workers` /
+    /// `$AUTOQ_SHARD_WORKERS`).
+    Shard,
 }
 
 impl BackendKind {
@@ -89,6 +98,7 @@ impl BackendKind {
         match self {
             BackendKind::Reference => "reference",
             BackendKind::Pjrt => "pjrt",
+            BackendKind::Shard => "shard",
         }
     }
 
@@ -96,7 +106,8 @@ impl BackendKind {
         match s.trim().to_ascii_lowercase().as_str() {
             "reference" | "ref" => Ok(BackendKind::Reference),
             "pjrt" | "xla" => Ok(BackendKind::Pjrt),
-            other => anyhow::bail!("unknown backend {other:?} (expected pjrt|reference)"),
+            "shard" | "sharded" => Ok(BackendKind::Shard),
+            other => anyhow::bail!("unknown backend {other:?} (expected pjrt|reference|shard)"),
         }
     }
 
@@ -145,6 +156,8 @@ mod tests {
         assert_eq!(BackendKind::parse("reference").unwrap(), BackendKind::Reference);
         assert_eq!(BackendKind::parse("REF").unwrap(), BackendKind::Reference);
         assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert_eq!(BackendKind::parse("shard").unwrap(), BackendKind::Shard);
+        assert_eq!(BackendKind::parse("Sharded").unwrap(), BackendKind::Shard);
         assert!(BackendKind::parse("cuda").is_err());
     }
 

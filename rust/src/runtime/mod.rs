@@ -4,15 +4,17 @@
 //! tensors/values.
 //!
 //! Backends: `reference` (pure-Rust interpreter, always available — see
-//! `reference/`) and `pjrt` (XLA PJRT over AOT HLO artifacts, behind the
-//! `pjrt` cargo feature — see `client.rs`).  DESIGN.md §Execution backends
-//! documents the numerics and the selection rules.
+//! `reference/`), `pjrt` (XLA PJRT over AOT HLO artifacts, behind the
+//! `pjrt` cargo feature — see `client.rs`) and `shard` (multi-process
+//! fan-out over reference-runtime workers — see `shard/`).  DESIGN.md
+//! §Execution backends documents the numerics and the selection rules.
 
 pub mod backend;
 #[cfg(feature = "pjrt")]
 pub mod client;
 pub mod manifest;
 pub mod reference;
+pub mod shard;
 pub mod tensor;
 pub mod value;
 
@@ -33,6 +35,27 @@ pub struct ExecStats {
     pub calls: u64,
     pub total_secs: f64,
     pub compile_secs: f64,
+}
+
+/// Optional runtime knobs beyond the backend choice.  Every field
+/// auto-resolves from the environment when `None`, so
+/// `RuntimeOpts::default()` reproduces the historical behaviour exactly.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RuntimeOpts {
+    /// Worker threads for `exec_batch` fan-out (`--threads` /
+    /// `$AUTOQ_THREADS`, else all cores).  For the shard backend this is
+    /// the **total** budget across all worker processes.
+    pub threads: Option<Parallelism>,
+    /// Worker processes for the shard backend (`--shard-workers` /
+    /// `$AUTOQ_SHARD_WORKERS`, else 2).  Ignored by other backends.
+    pub shard_workers: Option<usize>,
+}
+
+impl RuntimeOpts {
+    /// Opts carrying only a thread budget (the pre-shard signature).
+    pub fn threads(threads: Option<Parallelism>) -> RuntimeOpts {
+        RuntimeOpts { threads, ..Default::default() }
+    }
 }
 
 /// The execution facade every subsystem holds: one backend, one manifest,
@@ -63,18 +86,33 @@ impl Runtime {
 
     /// Open with an explicit backend and worker-thread budget (`None` =
     /// `$AUTOQ_THREADS`, else all cores — see [`Parallelism::resolve`]).
-    /// The reference backend synthesizes its manifest from the built-in
-    /// model zoo and never touches `dir`; PJRT loads `dir/manifest.json`
-    /// and compiles HLO from `dir`.
+    /// Shard worker-process count auto-resolves; use [`Runtime::open_full`]
+    /// to pin it.
     pub fn open_with_opts(
         dir: &Path,
         kind: BackendKind,
         threads: Option<Parallelism>,
     ) -> anyhow::Result<Runtime> {
-        let par = Parallelism::resolve(threads)?;
+        Self::open_full(dir, kind, RuntimeOpts::threads(threads))
+    }
+
+    /// Open with an explicit backend and the full option set.  The
+    /// reference backend synthesizes its manifest from the built-in model
+    /// zoo and never touches `dir`; PJRT loads `dir/manifest.json` and
+    /// compiles HLO from `dir`; shard spawns `opts.shard_workers`
+    /// reference-runtime subprocesses (lazily, on first dispatch) and
+    /// splits the thread budget evenly across them.
+    pub fn open_full(dir: &Path, kind: BackendKind, opts: RuntimeOpts) -> anyhow::Result<Runtime> {
+        let par = Parallelism::resolve(opts.threads)?;
         let (mut backend, manifest): (Box<dyn Backend>, Manifest) = match kind {
             BackendKind::Reference => (
                 Box::new(reference::RefBackend::new()),
+                reference::builtin_manifest(),
+            ),
+            // Shard workers interpret the same builtin zoo the reference
+            // backend does, so the parent shares its manifest.
+            BackendKind::Shard => (
+                Box::new(shard::ShardBackend::new(shard::resolve_workers(opts.shard_workers)?)?),
                 reference::builtin_manifest(),
             ),
             #[cfg(feature = "pjrt")]

@@ -1,0 +1,276 @@
+//! Parent side of the shard backend: a pool of `autoq worker` subprocesses
+//! plus the [`Executable`] that fans `exec` calls across them.
+//!
+//! Scheduling mirrors `util::pool`: batches are partitioned into balanced
+//! contiguous chunks, chunk *c* goes to worker *c*, and chunk results are
+//! concatenated in chunk order — so outputs come back in input order and,
+//! because every worker runs the same pure reference interpreter on the
+//! same bytes, the merged result is **byte-identical** to the in-process
+//! reference backend at every worker count.
+//!
+//! Crash handling: a transport failure (worker died, stream closed) kills
+//! and respawns that worker, then replays the in-flight request exactly
+//! once — sound because requests are self-contained (see `worker.rs`) and
+//! a replayed request recomputes the same bytes.  Application errors
+//! reported by a live worker are deterministic and surface immediately,
+//! never replayed.
+
+use std::io::BufReader;
+use std::path::PathBuf;
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::runtime::backend::Executable;
+use crate::runtime::shard::proto;
+use crate::runtime::value::Value;
+use crate::util::json::Json;
+use crate::util::pool::Parallelism;
+
+/// Worker binary: `$AUTOQ_WORKER_EXE` override (integration tests point
+/// this at the built `autoq` binary — their own executable is the test
+/// harness), else this process's image.
+pub fn worker_exe() -> anyhow::Result<PathBuf> {
+    match std::env::var("AUTOQ_WORKER_EXE") {
+        Ok(p) if !p.trim().is_empty() => Ok(PathBuf::from(p)),
+        _ => Ok(std::env::current_exe()?),
+    }
+}
+
+/// One live worker subprocess with its pipe endpoints.
+struct WorkerProc {
+    child: Child,
+    tx: ChildStdin,
+    rx: BufReader<ChildStdout>,
+}
+
+impl WorkerProc {
+    /// One request/response exchange.  Any error here is a transport
+    /// failure — the worker itself reports application errors inside a
+    /// successful response frame.
+    fn roundtrip(&mut self, req: &Json) -> anyhow::Result<Json> {
+        proto::write_frame(&mut self.tx, req)?;
+        proto::read_frame(&mut self.rx)?
+            .ok_or_else(|| anyhow::anyhow!("worker closed its stream mid-request"))
+    }
+}
+
+/// The process pool: lazily spawned workers, one mutex per slot so
+/// concurrent chunk dispatches to distinct workers proceed in parallel.
+pub struct ShardClient {
+    exe: PathBuf,
+    slots: Vec<Mutex<Option<WorkerProc>>>,
+    /// Inner eval-thread budget per worker process (the even share of the
+    /// backend's total — see [`ShardClient::set_total_threads`]).
+    threads_per_worker: AtomicUsize,
+    /// Round-robin cursor for single-set execs.
+    rr: AtomicUsize,
+    /// Workers respawned after a transport failure (test/observability hook).
+    restarts: AtomicUsize,
+}
+
+impl ShardClient {
+    pub fn new(exe: PathBuf, workers: usize) -> ShardClient {
+        ShardClient {
+            exe,
+            slots: (0..workers.max(1)).map(|_| Mutex::new(None)).collect(),
+            threads_per_worker: AtomicUsize::new(1),
+            rr: AtomicUsize::new(0),
+            restarts: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// How many workers were respawned after dying mid-request.
+    pub fn restarts(&self) -> usize {
+        self.restarts.load(Ordering::Relaxed)
+    }
+
+    /// Split the backend's total thread budget evenly across the worker
+    /// processes (≥ 1 each — `workers > total` must oversubscribe by the
+    /// explicit one-thread floor, never resolve to "auto = all cores").
+    /// Takes effect for workers spawned from now on; the `Runtime` calls
+    /// this before any artifact loads, i.e. before the first spawn.
+    pub fn set_total_threads(&self, total: usize) {
+        let per = Parallelism::share_of(total, self.workers()).get();
+        self.threads_per_worker.store(per, Ordering::Relaxed);
+    }
+
+    fn spawn(&self, idx: usize) -> anyhow::Result<WorkerProc> {
+        let threads = self.threads_per_worker.load(Ordering::Relaxed);
+        let mut child = Command::new(&self.exe)
+            .arg("worker")
+            .arg("--threads")
+            .arg(threads.to_string())
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .map_err(|e| anyhow::anyhow!("failed to spawn shard worker {:?}: {e}", self.exe))?;
+        let tx = child.stdin.take().expect("stdin piped");
+        let rx = BufReader::new(child.stdout.take().expect("stdout piped"));
+        let mut wp = WorkerProc { child, tx, rx };
+        // Handshake: the first frame back must be an ok ping response, so a
+        // misconfigured binary fails loudly here instead of corrupting an
+        // exec exchange later.
+        let resp = wp.roundtrip(&proto::ping_json()).map_err(|e| {
+            let _ = wp.child.kill();
+            let _ = wp.child.wait();
+            anyhow::anyhow!("shard worker {idx} failed its spawn handshake: {e:#}")
+        })?;
+        proto::response_outputs(&resp)?;
+        crate::debug!(
+            "shard worker {idx} up (pid {}, {} inner thread(s))",
+            wp.child.id(),
+            threads
+        );
+        Ok(wp)
+    }
+
+    /// Send `req` to worker `idx`, spawning it if needed.  On a transport
+    /// failure the worker is respawned and the request replayed exactly
+    /// once; a second failure propagates.
+    fn request_on(&self, idx: usize, req: &Json) -> anyhow::Result<Json> {
+        let mut slot = self.slots[idx].lock().expect("shard worker slot poisoned");
+        for attempt in 0..2u32 {
+            if slot.is_none() {
+                *slot = Some(self.spawn(idx)?);
+            }
+            let wp = slot.as_mut().expect("spawned above");
+            match wp.roundtrip(req) {
+                Ok(resp) => return Ok(resp),
+                Err(e) => {
+                    let mut dead = slot.take().expect("held above");
+                    let _ = dead.child.kill();
+                    let _ = dead.child.wait();
+                    anyhow::ensure!(
+                        attempt == 0,
+                        "shard worker {idx} failed twice on one request: {e:#}"
+                    );
+                    // Counted only when a respawn-and-replay actually
+                    // follows — a terminal failure above is not a restart.
+                    self.restarts.fetch_add(1, Ordering::Relaxed);
+                    crate::warn_!(
+                        "shard worker {idx} died mid-request ({e:#}); respawning and replaying"
+                    );
+                }
+            }
+        }
+        unreachable!("the retry loop returns or bails")
+    }
+
+    /// Exec one chunk on one worker and validate the output arity.
+    fn exec_chunk(
+        &self,
+        idx: usize,
+        artifact: &str,
+        chunk: &[Vec<&Value>],
+    ) -> anyhow::Result<Vec<Vec<Value>>> {
+        let resp = self.request_on(idx, &proto::exec_json(artifact, chunk))?;
+        let outs = proto::response_outputs(&resp)?;
+        anyhow::ensure!(
+            outs.len() == chunk.len(),
+            "worker {idx} returned {} output sets for {} input sets",
+            outs.len(),
+            chunk.len()
+        );
+        Ok(outs)
+    }
+
+    /// Run `artifact` once per input set, outputs in input order — the
+    /// chunked fan-out described in the module docs.
+    pub fn exec_batch(
+        &self,
+        artifact: &str,
+        batches: &[Vec<&Value>],
+    ) -> anyhow::Result<Vec<Vec<Value>>> {
+        if batches.is_empty() {
+            return Ok(Vec::new());
+        }
+        let w = self.workers().min(batches.len());
+        if w <= 1 {
+            let idx = self.rr.fetch_add(1, Ordering::Relaxed) % self.workers();
+            return self.exec_chunk(idx, artifact, batches);
+        }
+        // Balanced contiguous partition: chunk c gets base + 1 extra while
+        // remainder lasts, exactly covering 0..n.
+        let (base, extra) = (batches.len() / w, batches.len() % w);
+        let mut bounds = Vec::with_capacity(w + 1);
+        bounds.push(0usize);
+        for c in 0..w {
+            bounds.push(bounds[c] + base + usize::from(c < extra));
+        }
+        let chunk_results: Vec<anyhow::Result<Vec<Vec<Value>>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..w)
+                .map(|c| {
+                    let chunk = &batches[bounds[c]..bounds[c + 1]];
+                    s.spawn(move || self.exec_chunk(c, artifact, chunk))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard dispatch thread panicked"))
+                .collect()
+        });
+        let mut merged = Vec::with_capacity(batches.len());
+        for res in chunk_results {
+            merged.extend(res?);
+        }
+        Ok(merged)
+    }
+
+    /// Fault injection for the crash-replay tests: SIGKILL worker `idx`
+    /// (if it is running) and leave the corpse in its slot, so the next
+    /// request discovers the death through the normal transport-error
+    /// path.
+    pub fn kill_worker(&self, idx: usize) {
+        if let Some(wp) = self.slots[idx].lock().expect("shard worker slot poisoned").as_mut() {
+            let _ = wp.child.kill();
+            let _ = wp.child.wait(); // reap; Child caches the exit status
+        }
+    }
+}
+
+impl Drop for ShardClient {
+    fn drop(&mut self) {
+        for slot in &self.slots {
+            let Ok(mut guard) = slot.lock() else { continue };
+            if let Some(mut wp) = guard.take() {
+                // Best-effort graceful stop; dropping tx closes the pipe,
+                // which ends the worker loop even if the frame was lost.
+                let _ = proto::write_frame(&mut wp.tx, &proto::exit_json());
+                drop(wp.tx);
+                let _ = wp.child.wait();
+            }
+        }
+    }
+}
+
+/// [`Executable`] forwarding to the process pool.  Stateless by
+/// construction — all model/agent state travels through the inputs — so
+/// any worker can serve any call.
+pub struct ShardExecutable {
+    client: Arc<ShardClient>,
+    name: String,
+}
+
+impl ShardExecutable {
+    pub fn new(client: Arc<ShardClient>, name: String) -> ShardExecutable {
+        ShardExecutable { client, name }
+    }
+}
+
+impl Executable for ShardExecutable {
+    fn execute(&mut self, inputs: &[&Value]) -> anyhow::Result<Vec<Value>> {
+        let mut outs = self.client.exec_batch(&self.name, &[inputs.to_vec()])?;
+        anyhow::ensure!(outs.len() == 1, "single exec returned {} output sets", outs.len());
+        Ok(outs.pop().expect("checked above"))
+    }
+
+    fn execute_batch(&mut self, batches: &[Vec<&Value>]) -> anyhow::Result<Vec<Vec<Value>>> {
+        self.client.exec_batch(&self.name, batches)
+    }
+}

@@ -1,0 +1,136 @@
+//! The `shard` execution backend: fans `exec` calls across `autoq worker`
+//! subprocesses so paper-scale sweeps scale past one address space.
+//!
+//! Layout mirrors the transport split:
+//! * [`proto`] — length-prefixed JSON framing + bit-exact `Value` codec,
+//!   written against `io::Read`/`Write` only (a TCP transport for
+//!   multi-host fan-out drops in without touching it);
+//! * [`worker`] — the subprocess loop behind the hidden `autoq worker`
+//!   subcommand (one in-process reference `Runtime` per worker);
+//! * [`client`] — the parent's process pool: balanced chunk partition,
+//!   index-ordered merge, restart-on-crash with single replay.
+//!
+//! Determinism rule: every worker runs the pure reference interpreter,
+//! the codec preserves f32 bit patterns, and chunk results merge in input
+//! order — so `--backend shard` output is **byte-identical** to
+//! `--backend reference` at every worker count (`tests/shard_backend.rs`).
+//!
+//! Budget rule: the backend's thread budget (`--threads`, resolved by the
+//! `Runtime`) is the *total* across the pool — each worker process gets an
+//! even share of at least one inner eval thread, composing with `Sweep`'s
+//! outer per-cell split so `cells × processes × threads` never
+//! oversubscribes by more than the explicit ≥ 1 floors.
+
+pub mod client;
+pub mod proto;
+pub mod worker;
+
+pub use client::{worker_exe, ShardClient, ShardExecutable};
+
+use std::sync::Arc;
+
+use crate::runtime::backend::{Backend, Executable};
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+
+/// Default worker-process count when neither `--shard-workers` nor
+/// `$AUTOQ_SHARD_WORKERS` chooses one.
+pub const DEFAULT_WORKERS: usize = 2;
+
+/// Parse an optional `--shard-workers` value: empty, `auto` or `0` mean
+/// "auto-resolve".  The single parser behind every CLI occurrence.
+pub fn parse_workers_opt(s: &str) -> anyhow::Result<Option<usize>> {
+    let t = s.trim().to_ascii_lowercase();
+    if t.is_empty() || t == "auto" || t == "0" {
+        return Ok(None);
+    }
+    let n: usize = t
+        .parse()
+        .map_err(|_| anyhow::anyhow!("expected a worker count or 'auto', got {s:?}"))?;
+    Ok(Some(n))
+}
+
+/// Resolve the worker-process count: explicit (`--shard-workers`) >
+/// `$AUTOQ_SHARD_WORKERS` > [`DEFAULT_WORKERS`].  Always ≥ 1.
+pub fn resolve_workers(explicit: Option<usize>) -> anyhow::Result<usize> {
+    let n = match explicit {
+        Some(n) => Some(n),
+        None => match std::env::var("AUTOQ_SHARD_WORKERS") {
+            Ok(s) if !s.trim().is_empty() => parse_workers_opt(&s)?,
+            _ => None,
+        },
+    };
+    Ok(n.unwrap_or(DEFAULT_WORKERS).max(1))
+}
+
+/// The shard backend: owns the process pool and hands out forwarding
+/// executables.  Workers interpret the same builtin zoo the reference
+/// backend does, so the parent's manifest is `builtin_manifest()` and
+/// artifact validation happens before `load` is ever called.
+pub struct ShardBackend {
+    pool: Arc<ShardClient>,
+}
+
+impl ShardBackend {
+    /// Build a pool of `workers` subprocesses (spawned lazily on first
+    /// dispatch, after the `Runtime` has handed over the thread budget).
+    pub fn new(workers: usize) -> anyhow::Result<ShardBackend> {
+        let pool = Arc::new(ShardClient::new(worker_exe()?, workers));
+        crate::info!("shard backend: {} worker process(es)", pool.workers());
+        Ok(ShardBackend { pool })
+    }
+
+    /// The process pool (crash-injection hooks for tests live here).
+    pub fn pool(&self) -> &Arc<ShardClient> {
+        &self.pool
+    }
+}
+
+impl Backend for ShardBackend {
+    fn name(&self) -> &'static str {
+        "shard"
+    }
+
+    /// The resolved budget is the pool **total**; each worker process gets
+    /// an even share, never below one thread.
+    fn set_parallelism(&mut self, threads: usize) {
+        self.pool.set_total_threads(threads);
+    }
+
+    fn load(
+        &mut self,
+        spec: &ArtifactSpec,
+        _manifest: &Manifest,
+    ) -> anyhow::Result<Box<dyn Executable>> {
+        Ok(Box::new(ShardExecutable::new(self.pool.clone(), spec.name.clone())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_count_parse_and_clamp() {
+        assert_eq!(parse_workers_opt("").unwrap(), None);
+        assert_eq!(parse_workers_opt("auto").unwrap(), None);
+        assert_eq!(parse_workers_opt("0").unwrap(), None);
+        assert_eq!(parse_workers_opt("4").unwrap(), Some(4));
+        assert!(parse_workers_opt("four").is_err());
+        assert_eq!(resolve_workers(Some(3)).unwrap(), 3);
+        // NOTE: relies on AUTOQ_SHARD_WORKERS being unset or numeric in the
+        // test environment; explicit choices above bypass it either way.
+    }
+
+    #[test]
+    fn backend_hands_out_forwarding_executables() {
+        let m = crate::runtime::reference::builtin_manifest();
+        let spec = m.artifact("cif10_eval_quant").unwrap().clone();
+        let mut b = ShardBackend::new(2).unwrap();
+        b.set_parallelism(4);
+        // Loading must not spawn anything — workers come up on first
+        // dispatch, so a backend that is opened but never dispatched costs
+        // no processes.
+        assert!(b.load(&spec, &m).is_ok());
+        assert_eq!(b.pool().restarts(), 0);
+    }
+}

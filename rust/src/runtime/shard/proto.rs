@@ -1,0 +1,342 @@
+//! Wire protocol of the shard backend: length-prefixed JSON frames and a
+//! **bit-exact** [`Value`] codec.
+//!
+//! Framing is a 4-byte little-endian length followed by that many bytes of
+//! UTF-8 JSON.  Both halves are written against plain `io::Read`/`Write`,
+//! so the same protocol runs over pipes today and a TCP stream tomorrow —
+//! nothing in this module knows about processes or stdio.
+//!
+//! The codec must preserve every f32 **bit pattern** (the shard backend's
+//! contract is byte-identical results to the in-process reference
+//! backend, and eval can legitimately produce -0.0 or propagate NaN), so
+//! f32 tensors travel as their `to_bits()` u32 payloads — integers ≤ 2^32
+//! are exact in the JSON substrate's f64 numbers, where a decimal float
+//! round-trip would lose NaN payloads and JSON cannot carry NaN/inf at
+//! all.
+
+use std::io::{Read, Write};
+
+use crate::runtime::value::Value;
+use crate::util::json::Json;
+
+/// Upper bound on one frame (1 GiB).  A length prefix beyond this is
+/// treated as stream corruption, not an allocation request.
+pub const MAX_FRAME: usize = 1 << 30;
+
+// ---- framing --------------------------------------------------------------
+
+/// Write one `len(u32 LE) + JSON` frame and flush it.  An oversized body
+/// is a hard error — a truncated `as u32` length prefix would silently
+/// desync the stream instead.
+pub fn write_frame(w: &mut impl Write, msg: &Json) -> anyhow::Result<()> {
+    let body = msg.to_string().into_bytes();
+    anyhow::ensure!(
+        body.len() <= MAX_FRAME,
+        "frame body {} bytes exceeds cap {MAX_FRAME} (split the batch)",
+        body.len()
+    );
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(&body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame.  `Ok(None)` on clean EOF (stream closed between
+/// frames); errors on truncation mid-frame, oversized lengths, or a body
+/// that is not valid JSON.
+pub fn read_frame(r: &mut impl Read) -> anyhow::Result<Option<Json>> {
+    let mut len4 = [0u8; 4];
+    match r.read_exact(&mut len4) {
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        res => res?,
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    anyhow::ensure!(len <= MAX_FRAME, "frame length {len} exceeds cap {MAX_FRAME}");
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    let text = std::str::from_utf8(&body)?;
+    Ok(Some(Json::parse(text)?))
+}
+
+// ---- value codec ----------------------------------------------------------
+
+/// Encode a [`Value`] bit-exactly: f32 data as `to_bits()` u32s, s32 data
+/// as plain integers (both exact in f64).
+pub fn value_to_json(v: &Value) -> Json {
+    let shape = |s: &[usize]| Json::Arr(s.iter().map(|&d| Json::Num(d as f64)).collect());
+    match v {
+        Value::F32(t) => Json::obj(vec![
+            ("t", "f32".into()),
+            ("shape", shape(&t.shape)),
+            ("bits", Json::Arr(t.data.iter().map(|x| Json::Num(x.to_bits() as f64)).collect())),
+        ]),
+        Value::I32 { shape: s, data } => Json::obj(vec![
+            ("t", "s32".into()),
+            ("shape", shape(s)),
+            ("data", Json::Arr(data.iter().map(|&x| Json::Num(x as f64)).collect())),
+        ]),
+    }
+}
+
+fn shape_from(j: &Json) -> anyhow::Result<Vec<usize>> {
+    j.req("shape")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("value shape must be an array"))?
+        .iter()
+        .map(|d| {
+            let n = d.as_f64().ok_or_else(|| anyhow::anyhow!("non-numeric shape dim"))?;
+            anyhow::ensure!(n >= 0.0 && n.fract() == 0.0, "bad shape dim {n}");
+            Ok(n as usize)
+        })
+        .collect()
+}
+
+/// Decode a [`value_to_json`] payload, validating dtype, shape and the
+/// integer range of every element.
+pub fn value_from_json(j: &Json) -> anyhow::Result<Value> {
+    let shape = shape_from(j)?;
+    let elems = shape.iter().product::<usize>().max(1);
+    match j.req("t")?.as_str() {
+        Some("f32") => {
+            let bits = j
+                .req("bits")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("f32 value needs a bits array"))?;
+            anyhow::ensure!(bits.len() == elems, "shape {shape:?} vs {} bit words", bits.len());
+            let data = bits
+                .iter()
+                .map(|b| {
+                    let n = b.as_f64().ok_or_else(|| anyhow::anyhow!("non-numeric bits"))?;
+                    anyhow::ensure!(
+                        (0.0..=u32::MAX as f64).contains(&n) && n.fract() == 0.0,
+                        "bit word {n} out of u32 range"
+                    );
+                    Ok(f32::from_bits(n as u32))
+                })
+                .collect::<anyhow::Result<Vec<f32>>>()?;
+            Ok(Value::f32(shape, data))
+        }
+        Some("s32") => {
+            let raw = j
+                .req("data")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("s32 value needs a data array"))?;
+            anyhow::ensure!(raw.len() == elems, "shape {shape:?} vs {} ints", raw.len());
+            let data = raw
+                .iter()
+                .map(|x| {
+                    let n = x.as_f64().ok_or_else(|| anyhow::anyhow!("non-numeric s32"))?;
+                    anyhow::ensure!(
+                        (i32::MIN as f64..=i32::MAX as f64).contains(&n) && n.fract() == 0.0,
+                        "s32 element {n} out of range"
+                    );
+                    Ok(n as i32)
+                })
+                .collect::<anyhow::Result<Vec<i32>>>()?;
+            Ok(Value::i32(shape, data))
+        }
+        other => anyhow::bail!("unknown value dtype {other:?}"),
+    }
+}
+
+// ---- requests -------------------------------------------------------------
+
+/// A parsed parent→worker request (the worker's side of the protocol; the
+/// client builds frames with the `*_json` helpers below to avoid cloning
+/// its borrowed input values).
+#[derive(Debug)]
+pub enum Request {
+    /// Liveness/handshake probe.
+    Ping,
+    /// Run `artifact` once per input set, outputs in input order.
+    Exec { artifact: String, batches: Vec<Vec<Value>> },
+    /// Drain and exit the worker loop (no response frame).
+    Exit,
+}
+
+pub fn ping_json() -> Json {
+    Json::obj(vec![("op", "ping".into())])
+}
+
+pub fn exit_json() -> Json {
+    Json::obj(vec![("op", "exit".into())])
+}
+
+/// Build an exec request from borrowed input sets (`&[Vec<&Value>]` or
+/// owned vectors — mirrors `Runtime::exec_batch`).
+pub fn exec_json<V: std::borrow::Borrow<Value>>(artifact: &str, batches: &[Vec<V>]) -> Json {
+    let sets = batches
+        .iter()
+        .map(|set| Json::Arr(set.iter().map(|v| value_to_json(v.borrow())).collect()))
+        .collect();
+    Json::obj(vec![
+        ("op", "exec".into()),
+        ("artifact", artifact.into()),
+        ("batches", Json::Arr(sets)),
+    ])
+}
+
+pub fn request_from_json(j: &Json) -> anyhow::Result<Request> {
+    match j.req("op")?.as_str() {
+        Some("ping") => Ok(Request::Ping),
+        Some("exit") => Ok(Request::Exit),
+        Some("exec") => {
+            let artifact = j
+                .req("artifact")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("exec artifact must be a string"))?
+                .to_string();
+            let batches = j
+                .req("batches")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("exec batches must be an array"))?
+                .iter()
+                .map(|set| {
+                    set.as_arr()
+                        .ok_or_else(|| anyhow::anyhow!("input set must be an array"))?
+                        .iter()
+                        .map(value_from_json)
+                        .collect()
+                })
+                .collect::<anyhow::Result<Vec<Vec<Value>>>>()?;
+            Ok(Request::Exec { artifact, batches })
+        }
+        other => anyhow::bail!("unknown request op {other:?}"),
+    }
+}
+
+// ---- responses ------------------------------------------------------------
+
+/// Success response carrying output tuples in input order.
+pub fn ok_json(outputs: &[Vec<Value>]) -> Json {
+    let outs = outputs
+        .iter()
+        .map(|set| Json::Arr(set.iter().map(value_to_json).collect()))
+        .collect();
+    Json::obj(vec![("ok", true.into()), ("outputs", Json::Arr(outs))])
+}
+
+/// Success response with no payload (ping); carries the worker pid so the
+/// client can log which process answered.
+pub fn ok_empty_json(pid: u32) -> Json {
+    Json::obj(vec![("ok", true.into()), ("pid", (pid as usize).into())])
+}
+
+/// Application-level failure (deterministic — the client must surface it,
+/// never replay it).
+pub fn err_json(msg: &str) -> Json {
+    Json::obj(vec![("ok", false.into()), ("error", msg.into())])
+}
+
+/// Parse a response frame into output tuples.  A missing `outputs` field
+/// on a success (ping) is an empty result; `ok: false` surfaces the
+/// worker's error message.
+pub fn response_outputs(j: &Json) -> anyhow::Result<Vec<Vec<Value>>> {
+    match j.req("ok")?.as_bool() {
+        Some(true) => {}
+        Some(false) => {
+            let msg = j.get("error").and_then(Json::as_str).unwrap_or("unknown worker error");
+            anyhow::bail!("shard worker reported: {msg}");
+        }
+        None => anyhow::bail!("response ok field must be a bool"),
+    }
+    match j.get("outputs") {
+        None => Ok(Vec::new()),
+        Some(outs) => outs
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("outputs must be an array"))?
+            .iter()
+            .map(|set| {
+                set.as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("output set must be an array"))?
+                    .iter()
+                    .map(value_from_json)
+                    .collect()
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::tensor::Tensor;
+
+    #[test]
+    fn frames_roundtrip_over_a_buffer() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &ping_json()).unwrap();
+        write_frame(&mut buf, &exit_json()).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), ping_json());
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), exit_json());
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn truncated_and_oversized_frames_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &ping_json()).unwrap();
+        buf.truncate(buf.len() - 2);
+        assert!(read_frame(&mut &buf[..]).is_err(), "mid-frame truncation");
+        let huge = (MAX_FRAME as u32 + 1).to_le_bytes().to_vec();
+        assert!(read_frame(&mut &huge[..]).is_err(), "length cap");
+    }
+
+    #[test]
+    fn value_codec_is_bit_exact_including_nan_and_negzero() {
+        let specials = vec![
+            0.0f32,
+            -0.0,
+            1.5,
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::MIN_POSITIVE,
+            f32::from_bits(0x7fc0_1234), // NaN with payload
+            -3.25e-38,
+        ];
+        let v = Value::F32(Tensor::new(vec![3, 3], specials.clone()));
+        let back = value_from_json(&Json::parse(&value_to_json(&v).to_string()).unwrap()).unwrap();
+        let t = back.as_f32().unwrap();
+        assert_eq!(t.shape, vec![3, 3]);
+        for (a, b) in specials.iter().zip(&t.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} lost its bit pattern");
+        }
+
+        let iv = Value::i32(vec![4], vec![i32::MIN, -1, 0, i32::MAX]);
+        let iback =
+            value_from_json(&Json::parse(&value_to_json(&iv).to_string()).unwrap()).unwrap();
+        assert_eq!(iback.as_i32().unwrap(), &[i32::MIN, -1, 0, i32::MAX]);
+    }
+
+    #[test]
+    fn exec_request_roundtrips_batches_in_order() {
+        let a = Value::scalar(1.0);
+        let b = Value::i32(vec![2], vec![7, 8]);
+        let batches: Vec<Vec<&Value>> = vec![vec![&a, &b], vec![&b]];
+        let j = Json::parse(&exec_json("cif10_eval_quant", &batches).to_string()).unwrap();
+        let Request::Exec { artifact, batches: back } = request_from_json(&j).unwrap() else {
+            panic!("wrong op");
+        };
+        assert_eq!(artifact, "cif10_eval_quant");
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].len(), 2);
+        assert_eq!(back[0][1].as_i32().unwrap(), &[7, 8]);
+        assert_eq!(back[1].len(), 1);
+    }
+
+    #[test]
+    fn responses_distinguish_app_errors_from_payloads() {
+        let outs = vec![vec![Value::scalar(2.5)], vec![Value::scalar(-0.0)]];
+        let j = Json::parse(&ok_json(&outs).to_string()).unwrap();
+        let back = response_outputs(&j).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[1][0].scalar_f32().unwrap().to_bits(), (-0.0f32).to_bits());
+
+        assert!(response_outputs(&ok_empty_json(1)).unwrap().is_empty());
+        let err = response_outputs(&err_json("boom")).unwrap_err();
+        assert!(format!("{err:#}").contains("boom"));
+        assert!(request_from_json(&Json::obj(vec![("op", "nope".into())])).is_err());
+    }
+}

@@ -1,0 +1,101 @@
+//! The shard worker loop: the body of the hidden `autoq worker`
+//! subcommand.
+//!
+//! A worker owns one in-process **reference** [`Runtime`] and serves
+//! [`proto`] frames over stdio — requests on stdin, responses on stdout,
+//! logging (stderr) untouched.  Artifacts load lazily through the normal
+//! `Runtime` cache on first exec, so a respawned worker needs no state
+//! replay: every request is self-contained (the executables are pure —
+//! parameters, optimizer moments and RNG-derived inputs all travel as
+//! values), which is what makes the client's crash-replay sound.
+//!
+//! The backend is pinned to `reference` regardless of `$AUTOQ_BACKEND`, so
+//! a worker can never recursively open another shard pool.
+
+use std::io::{BufWriter, Write};
+
+use crate::runtime::shard::proto::{self, Request};
+use crate::runtime::{BackendKind, Parallelism, Runtime};
+
+/// Serve requests until `exit` or EOF.  `threads` is this worker's inner
+/// eval-thread budget (the client passes its per-process share of the
+/// total via `--threads`).
+pub fn run(threads: Option<Parallelism>) -> anyhow::Result<()> {
+    let mut rt =
+        Runtime::open_with_opts(&Runtime::default_dir(), BackendKind::Reference, threads)?;
+    let stdin = std::io::stdin();
+    let mut rx = stdin.lock();
+    let stdout = std::io::stdout();
+    let mut tx = BufWriter::new(stdout.lock());
+    serve(&mut rt, &mut rx, &mut tx)
+}
+
+/// The transport-agnostic loop behind [`run`]: one response frame per
+/// request frame, in order.  Split out so tests (and a future TCP
+/// transport) can drive it over any `Read`/`Write` pair.
+pub fn serve(
+    rt: &mut Runtime,
+    rx: &mut impl std::io::Read,
+    tx: &mut impl Write,
+) -> anyhow::Result<()> {
+    while let Some(msg) = proto::read_frame(rx)? {
+        let resp = match proto::request_from_json(&msg) {
+            Ok(Request::Exit) => break,
+            Ok(Request::Ping) => proto::ok_empty_json(std::process::id()),
+            Ok(Request::Exec { artifact, batches }) => match rt.exec_batch(&artifact, &batches) {
+                Ok(outs) => proto::ok_json(&outs),
+                // Deterministic application failure: report it, stay up.
+                Err(e) => proto::err_json(&format!("{e:#}")),
+            },
+            Err(e) => proto::err_json(&format!("malformed request: {e:#}")),
+        };
+        proto::write_frame(tx, &resp)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::value::Value;
+
+    fn roundtrip(requests: &[crate::util::json::Json]) -> Vec<crate::util::json::Json> {
+        let mut rt = Runtime::open_with_opts(
+            &std::env::temp_dir(),
+            BackendKind::Reference,
+            Some(Parallelism::new(1)),
+        )
+        .unwrap();
+        let mut input = Vec::new();
+        for req in requests {
+            proto::write_frame(&mut input, req).unwrap();
+        }
+        let mut out = Vec::new();
+        serve(&mut rt, &mut &input[..], &mut out).unwrap();
+        let mut frames = Vec::new();
+        let mut r = &out[..];
+        while let Some(f) = proto::read_frame(&mut r).unwrap() {
+            frames.push(f);
+        }
+        frames
+    }
+
+    #[test]
+    fn serves_ping_then_stops_at_exit() {
+        let frames = roundtrip(&[proto::ping_json(), proto::exit_json(), proto::ping_json()]);
+        assert_eq!(frames.len(), 1, "exit must stop the loop before the trailing ping");
+        assert!(proto::response_outputs(&frames[0]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn bad_artifacts_are_app_errors_not_loop_failures() {
+        let bogus = Value::scalar(1.0);
+        let frames = roundtrip(&[
+            proto::exec_json("no_such_artifact_eval_quant", &[vec![&bogus]]),
+            proto::ping_json(),
+        ]);
+        assert_eq!(frames.len(), 2, "the loop must survive an exec failure");
+        assert!(proto::response_outputs(&frames[0]).is_err());
+        assert!(proto::response_outputs(&frames[1]).is_ok());
+    }
+}

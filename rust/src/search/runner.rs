@@ -136,6 +136,13 @@ pub fn run_search_with(
     cfg: &SearchConfig,
     on_episode: &mut dyn FnMut(&EpisodeStats, usize, bool),
 ) -> anyhow::Result<SearchResult> {
+    // `JobSpec::build` rejects this, but `SearchConfig` is also driven
+    // directly (repro tables, benches, tests) — a structured error here
+    // beats the old `best.expect(..)` panic after a zero-iteration loop.
+    anyhow::ensure!(
+        cfg.episodes >= 1,
+        "search needs at least one episode, got episodes == 0"
+    );
     let t0 = std::time::Instant::now();
     let wvar = runner.weight_variances();
     let sb = StateBuilder::new(&runner.meta, &wvar);
@@ -198,9 +205,8 @@ pub fn run_search_with(
         on_episode(&stats, episodes, better);
     }
 
-    Ok(SearchResult {
-        best: best.expect("at least one episode"),
-        history,
-        secs: t0.elapsed().as_secs_f64(),
-    })
+    let best = best.ok_or_else(|| {
+        anyhow::anyhow!("search finished without completing a single episode")
+    })?;
+    Ok(SearchResult { best, history, secs: t0.elapsed().as_secs_f64() })
 }

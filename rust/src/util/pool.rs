@@ -68,6 +68,18 @@ impl Parallelism {
         }
         Ok(Self::auto())
     }
+
+    /// Even split of `total` across `parts` consumers, never below one —
+    /// the no-oversubscription budget rule shared by `Sweep` (outer
+    /// per-cell workers × inner eval threads) and the shard backend
+    /// (worker processes × inner threads).  The explicit `.max(1)` floors
+    /// matter: `parts > total` must resolve to one thread each (mild,
+    /// bounded oversubscription), not to `0` — which [`Parallelism`]'s
+    /// parsers read as "auto = all cores", i.e. every consumer grabbing
+    /// the whole machine, the exact blow-up the split exists to prevent.
+    pub fn share_of(total: usize, parts: usize) -> Parallelism {
+        Parallelism::new((total / parts.max(1)).max(1))
+    }
 }
 
 /// Per-worker scratch handout: a checkout/give-back store of reusable
@@ -332,5 +344,16 @@ mod tests {
         assert_eq!(Parallelism::new(0).get(), 1);
         assert!(Parallelism::auto().get() >= 1);
         assert_eq!(Parallelism::resolve(Some(Parallelism::new(3))).unwrap().get(), 3);
+    }
+
+    #[test]
+    fn share_of_floors_at_one_thread() {
+        assert_eq!(Parallelism::share_of(8, 2).get(), 4);
+        assert_eq!(Parallelism::share_of(7, 2).get(), 3, "integer share, no rounding up");
+        // More consumers than threads: the regression this guards — a 0
+        // share would be re-read as "auto = all cores" downstream.
+        assert_eq!(Parallelism::share_of(2, 64).get(), 1);
+        assert_eq!(Parallelism::share_of(0, 4).get(), 1);
+        assert_eq!(Parallelism::share_of(4, 0).get(), 4, "zero consumers clamp to one");
     }
 }

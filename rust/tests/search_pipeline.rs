@@ -53,6 +53,36 @@ fn quick_cfg(gran: Granularity, protocol: Protocol) -> SearchConfig {
     cfg
 }
 
+/// Regression: `episodes == 0` used to fall through the episode loop and
+/// panic on `best.expect(..)`.  Both entry layers must reject it as a
+/// structured error instead — the `JobSpec` builder at `build()` time,
+/// and `run_search`/`run_baseline` for callers that drive a
+/// `SearchConfig`/`BaselineConfig` directly (repro tables, benches).
+#[test]
+fn zero_episode_search_errors_instead_of_panicking() {
+    assert!(autoq::coordinator::JobSpec::search("cif10").episodes(0).build().is_err());
+
+    for mut rt in runtimes() {
+        let runner = quick_runner(&mut rt);
+        let data = SynthDataset::new(7);
+        let mut cfg = quick_cfg(Granularity::Channel, Protocol::accuracy_guaranteed());
+        cfg.episodes = 0;
+        cfg.warmup = 0;
+        let err = run_search(&mut rt, &runner, &data, &cfg)
+            .map(|_| ())
+            .expect_err("zero episodes must be an error, not a panic");
+        assert!(format!("{err:#}").contains("episode"), "unhelpful error: {err:#}");
+
+        let mut bcfg = BaselineConfig::quick(
+            BaselinePolicy::Amc,
+            Mode::Quant,
+            Protocol::accuracy_guaranteed(),
+        );
+        bcfg.episodes = 0;
+        assert!(run_baseline(&mut rt, &runner, &data, &bcfg).is_err());
+    }
+}
+
 #[test]
 fn channel_search_produces_valid_config() {
     for mut rt in runtimes() {

@@ -1,0 +1,274 @@
+//! Byte-identity between the in-process `reference` backend and the
+//! multi-process `shard` backend, plus the crash-replay contract.
+//!
+//! The shard determinism rule (DESIGN.md §Sharded backend): every worker
+//! process runs the same pure reference interpreter, the wire codec
+//! preserves f32 bit patterns, and chunk results merge in input order —
+//! so every result below must match the reference backend **bit for
+//! bit** at 1, 2 and 4 worker processes.
+//!
+//! Worker binary: the test harness points `$AUTOQ_WORKER_EXE` at the
+//! `autoq` binary Cargo builds for integration tests — the tests' own
+//! executable is the libtest harness, not a shard worker.
+
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+
+use autoq::coordinator::{Coordinator, JobSpec, Sweep};
+use autoq::cost::Mode;
+use autoq::data::synth::{Split, SynthDataset};
+use autoq::models::{ModelRunner, ParamStore};
+use autoq::runtime::shard::ShardClient;
+use autoq::runtime::{BackendKind, Parallelism, Runtime, RuntimeOpts, Value};
+use autoq::search::{run_search, Granularity, Protocol, SearchConfig};
+use autoq::util::rng::Rng;
+
+/// Point the shard client at the real `autoq` binary (once per process).
+///
+/// Ordering contract: every test in this binary calls `worker_exe()` (or
+/// `open_rt`, which does) as its **first** action, so every environment
+/// read in this process happens-after the single `set_var` below — the
+/// `OnceLock` blocks late arrivals until the first caller's init (and its
+/// `set_var`) completes, which is what makes the process-global mutation
+/// safe under libtest's parallel test threads.
+fn worker_exe() -> PathBuf {
+    static EXE: OnceLock<PathBuf> = OnceLock::new();
+    EXE.get_or_init(|| {
+        let exe = PathBuf::from(env!("CARGO_BIN_EXE_autoq"));
+        std::env::set_var("AUTOQ_WORKER_EXE", &exe);
+        exe
+    })
+    .clone()
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("autoq_shard_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Open a runtime on `kind`, with `workers` processes when sharded.
+fn open_rt(dir: &Path, kind: BackendKind, workers: usize) -> Runtime {
+    worker_exe();
+    let opts = RuntimeOpts {
+        threads: Some(Parallelism::new(2)),
+        shard_workers: Some(workers),
+    };
+    Runtime::open_full(dir, kind, opts).expect("runtime open")
+}
+
+/// `EvalResult` bits must match the reference backend at every worker
+/// count — including with more batches than workers (chunked fan-out) and
+/// fewer (idle workers).
+#[test]
+fn eval_is_byte_identical_to_reference_at_1_2_4_workers() {
+    let dir = temp_dir("eval");
+    let data = SynthDataset::new(42);
+    let eval = |rt: &mut Runtime, batches: usize| {
+        let meta = rt.manifest.model("cif10").unwrap().clone();
+        let params = ParamStore::init(&meta.params, &mut Rng::new(42));
+        let wbits = vec![5u8; meta.w_channels];
+        let abits = vec![4u8; meta.a_channels];
+        let runner = ModelRunner::new(meta, params).unwrap();
+        runner
+            .eval_config(rt, Mode::Quant, &wbits, &abits, &data, Split::Val, batches)
+            .unwrap()
+    };
+    let mut rt_ref = open_rt(&dir, BackendKind::Reference, 1);
+    for batches in [1usize, 3] {
+        let want = eval(&mut rt_ref, batches);
+        for workers in [1usize, 2, 4] {
+            let mut rt = open_rt(&dir, BackendKind::Shard, workers);
+            let got = eval(&mut rt, batches);
+            assert_eq!(
+                got.accuracy.to_bits(),
+                want.accuracy.to_bits(),
+                "accuracy diverged at {workers} workers / {batches} batches: {} vs {}",
+                got.accuracy,
+                want.accuracy
+            );
+            assert_eq!(
+                got.loss.to_bits(),
+                want.loss.to_bits(),
+                "loss diverged at {workers} workers / {batches} batches"
+            );
+            assert_eq!(got.images, want.images);
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Whole `JobReport` JSONs from the `Coordinator` must be byte-identical
+/// between `--backend reference` and `--backend shard` at 1/2/4 workers.
+/// (Network granularity keeps the agent traffic out of this matrix test;
+/// the channel-granularity search below exercises DDPG act/update over
+/// the wire.)
+#[test]
+fn search_job_reports_are_byte_identical_at_1_2_4_workers() {
+    let dir = temp_dir("search");
+    worker_exe();
+    // Seed pretrained params once so every run loads the same bytes.
+    {
+        let mut coord = Coordinator::open_with(&dir, Some(BackendKind::Reference)).unwrap();
+        coord.run(&JobSpec::pretrain("cif10").steps(3).build().unwrap()).unwrap();
+    }
+    let spec = JobSpec::search("cif10")
+        .mode(Mode::Quant)
+        .protocol(Protocol::resource_constrained(5.0))
+        .granularity(Granularity::Network(5))
+        .eval_batches(2)
+        .seed(11)
+        .build()
+        .unwrap();
+    let run = |backend: BackendKind, workers: usize| {
+        let opts = RuntimeOpts {
+            threads: Some(Parallelism::new(2)),
+            shard_workers: Some(workers),
+        };
+        let mut coord = Coordinator::open_full(&dir, Some(backend), opts).unwrap();
+        let mut report = coord.run(&spec).unwrap();
+        report.secs = 0.0; // wall clock is the one legitimately varying field
+        report.to_json().to_string()
+    };
+    let want = run(BackendKind::Reference, 1);
+    assert!(want.contains("\"wbits\""), "sanity: report carries a config");
+    for workers in [1usize, 2, 4] {
+        let got = run(BackendKind::Shard, workers);
+        assert_eq!(got, want, "JobReport JSON diverged at {workers} worker(s)");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Channel-granularity search drives the full agent loop — DDPG act and
+/// the 58-input update — through the wire codec.  `llc_updates_div` is
+/// raised so the test ships a bounded number of (megabyte-sized) update
+/// round-trips; byte-identity is checked on the complete `SearchResult`
+/// surface at the 2-worker point.
+#[test]
+fn channel_search_with_agent_traffic_matches_reference() {
+    let dir = temp_dir("channel");
+    let run = |rt: &mut Runtime| {
+        let meta = rt.manifest.model("cif10").unwrap().clone();
+        let params = ParamStore::init(&meta.params, &mut Rng::new(5));
+        let runner = ModelRunner::new(meta, params).unwrap();
+        let data = SynthDataset::new(7);
+        let mut cfg = SearchConfig::quick(
+            Mode::Quant,
+            Protocol::resource_constrained(5.0),
+            Granularity::Channel,
+        );
+        cfg.episodes = 2;
+        cfg.warmup = 1;
+        cfg.eval_batches = 1;
+        cfg.seed = 3;
+        cfg.llc_updates_div = 1 << 20; // one LLC update per episode
+        run_search(rt, &runner, &data, &cfg).unwrap()
+    };
+    let want = run(&mut open_rt(&dir, BackendKind::Reference, 1));
+    let got = run(&mut open_rt(&dir, BackendKind::Shard, 2));
+    assert_eq!(got.best.wbits, want.best.wbits, "searched weight bits diverged");
+    assert_eq!(got.best.abits, want.best.abits, "searched activation bits diverged");
+    assert_eq!(got.best.reward.to_bits(), want.best.reward.to_bits(), "reward bits diverged");
+    assert_eq!(got.best.accuracy.to_bits(), want.best.accuracy.to_bits());
+    assert_eq!(got.history.len(), want.history.len());
+    for (g, w) in got.history.iter().zip(&want.history) {
+        assert_eq!(g.reward.to_bits(), w.reward.to_bits(), "episode {} diverged", w.episode);
+        assert_eq!(g.accuracy.to_bits(), w.accuracy.to_bits());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `Sweep` on the shard backend: every cell's report must match the
+/// reference sweep byte for byte (outer cell workers × inner worker
+/// processes composing under one budget).
+#[test]
+fn sweep_reports_are_byte_identical_between_backends() {
+    let dir = temp_dir("sweep");
+    worker_exe();
+    {
+        let mut coord = Coordinator::open_with(&dir, Some(BackendKind::Reference)).unwrap();
+        coord.run(&JobSpec::pretrain("cif10").steps(3).build().unwrap()).unwrap();
+    }
+    let run = |backend: BackendKind, workers: usize, out: &str| {
+        let sweep = Sweep {
+            protocols: vec![Protocol::resource_constrained(5.0), Protocol::accuracy_guaranteed()],
+            granularities: vec![Granularity::Network(4)],
+            eval_batches: 2,
+            base_seed: 21,
+            workers: 2,
+            out_dir: Some(dir.join(out)),
+            backend: Some(backend),
+            threads: Some(Parallelism::new(1)),
+            shard_workers: Some(workers),
+            ..Sweep::default()
+        };
+        let result = sweep.run(&dir).unwrap();
+        assert!(result.failures.is_empty(), "sweep failures: {:?}", result.failures);
+        result
+            .reports
+            .into_iter()
+            .map(|mut r| {
+                r.secs = 0.0;
+                r.to_json().to_string()
+            })
+            .collect::<Vec<_>>()
+    };
+    let want = run(BackendKind::Reference, 1, "ref");
+    assert_eq!(want.len(), 2);
+    for workers in [1usize, 2] {
+        let got = run(BackendKind::Shard, workers, &format!("shard{workers}"));
+        assert_eq!(got, want, "sweep reports diverged at {workers} shard worker(s)");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Crash-replay: kill one worker between dispatches, then assert the next
+/// batch replays onto a respawned worker and the merged result is
+/// unchanged — and that exactly one restart happened.
+#[test]
+fn killed_worker_is_respawned_and_the_batch_replayed_unchanged() {
+    let exe = worker_exe();
+    let client = ShardClient::new(exe, 2);
+    client.set_total_threads(2);
+
+    // Synthesize valid inputs straight from the builtin manifest spec —
+    // the codec and fan-out don't care that the network is random.
+    let manifest = autoq::runtime::reference::builtin_manifest();
+    let spec = manifest.artifact("ddpg_act_s16").unwrap().clone();
+    let mut rng = Rng::new(123);
+    let values: Vec<Vec<Value>> = (0..6)
+        .map(|_| {
+            spec.inputs
+                .iter()
+                .map(|t| {
+                    let data = (0..t.elems()).map(|_| rng.f32() - 0.5).collect();
+                    Value::f32(t.shape.clone(), data)
+                })
+                .collect()
+        })
+        .collect();
+    let batches: Vec<Vec<&Value>> =
+        values.iter().map(|set| set.iter().collect()).collect();
+
+    let baseline = client.exec_batch(&spec.name, &batches).unwrap();
+    assert_eq!(baseline.len(), batches.len());
+    assert_eq!(client.restarts(), 0, "healthy run must not restart anything");
+
+    client.kill_worker(0);
+    let replayed = client.exec_batch(&spec.name, &batches).unwrap();
+    assert_eq!(client.restarts(), 1, "exactly the killed worker must restart");
+    assert_eq!(replayed.len(), baseline.len());
+    for (i, (got, want)) in replayed.iter().zip(&baseline).enumerate() {
+        assert_eq!(got.len(), want.len(), "batch {i} arity changed");
+        for (g, w) in got.iter().zip(want) {
+            let (g, w) = (g.as_f32().unwrap(), w.as_f32().unwrap());
+            assert_eq!(g.shape, w.shape);
+            let diverged = g
+                .data
+                .iter()
+                .zip(&w.data)
+                .any(|(a, b)| a.to_bits() != b.to_bits());
+            assert!(!diverged, "batch {i} bytes changed after the crash replay");
+        }
+    }
+}
