@@ -20,12 +20,13 @@ pub mod report;
 pub mod sweep;
 
 pub use job::{granularity_token, init_seed, JobBuilder, JobKind, JobSpec, SearchParams};
-pub use observer::{LogObserver, NullObserver, Observer};
+pub use observer::{FanOut, LogObserver, NullObserver, Observer};
 pub use report::{JobOutcome, JobReport, SimCell};
 pub use sweep::{derive_seed, Sweep, SweepResult};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::cost::Mode;
@@ -34,6 +35,7 @@ use crate::finetune::TrainConfig;
 use crate::models::{ModelRunner, ParamStore};
 use crate::runtime::{BackendKind, Manifest, Parallelism, Runtime, RuntimeOpts};
 use crate::search::SearchConfig;
+use crate::serve::cache::CacheHandle;
 use crate::sim::{Arch, FpgaSim};
 use crate::util::rng::Rng;
 
@@ -51,6 +53,10 @@ pub struct Coordinator {
     rt: Runtime,
     dir: PathBuf,
     runners: HashMap<String, ModelRunner>,
+    /// Content-addressed eval memoization shared with every runner this
+    /// coordinator creates (`autoq serve` attaches one per scheduler
+    /// worker; `None` = uncached, the historical behavior).
+    eval_cache: Option<Arc<CacheHandle>>,
 }
 
 impl Coordinator {
@@ -94,7 +100,29 @@ impl Coordinator {
         // The reference backend needs no artifacts, but trained params still
         // persist under the artifact dir — make sure it exists.
         std::fs::create_dir_all(dir)?;
-        Ok(Coordinator { rt, dir: dir.to_path_buf(), runners: HashMap::new() })
+        Ok(Coordinator { rt, dir: dir.to_path_buf(), runners: HashMap::new(), eval_cache: None })
+    }
+
+    /// Attach a content-addressed eval cache: every cached and future
+    /// runner routes `eval_config` through it.  Results stay byte-identical
+    /// — the cache replays exact stored `EvalResult`s — so reports from a
+    /// cached run must equal an uncached run's (`tests/eval_cache.rs`).
+    pub fn set_eval_cache(&mut self, cache: Arc<CacheHandle>) {
+        for runner in self.runners.values_mut() {
+            runner.set_eval_cache(Some(cache.clone()));
+        }
+        self.eval_cache = Some(cache);
+    }
+
+    pub fn eval_cache(&self) -> Option<&Arc<CacheHandle>> {
+        self.eval_cache.as_ref()
+    }
+
+    /// Hand the configured cache (if any) to a runner this coordinator made.
+    fn attach_cache(&self, runner: &mut ModelRunner) {
+        if let Some(cache) = &self.eval_cache {
+            runner.set_eval_cache(Some(cache.clone()));
+        }
     }
 
     pub fn open_default() -> anyhow::Result<Coordinator> {
@@ -139,7 +167,7 @@ impl Coordinator {
         }
         let meta = self.rt.manifest.model(model)?.clone();
         let path = self.params_path(model);
-        let runner = if path.exists() {
+        let mut runner = if path.exists() {
             ModelRunner::new(meta, ParamStore::load(&path)?)?
         } else {
             crate::info!("no trained params for {model}; pre-training now ({AUTO_PRETRAIN_STEPS} steps)");
@@ -151,6 +179,7 @@ impl Coordinator {
             r.params.save(&path)?;
             r
         };
+        self.attach_cache(&mut runner);
         self.runners.insert(model.to_string(), runner);
         Ok(())
     }
@@ -160,7 +189,9 @@ impl Coordinator {
     pub fn fresh_runner(&mut self, model: &str) -> anyhow::Result<ModelRunner> {
         self.ensure_pretrained(model)?;
         let cached = self.runners.get(model).expect("ensured above");
-        ModelRunner::new(cached.meta.clone(), cached.params.clone())
+        let mut runner = ModelRunner::new(cached.meta.clone(), cached.params.clone())?;
+        self.attach_cache(&mut runner);
+        Ok(runner)
     }
 
     /// Run a job with default stderr logging.
@@ -177,10 +208,15 @@ impl Coordinator {
     ) -> anyhow::Result<JobReport> {
         let t0 = Instant::now();
         obs.job_started(spec);
+        // Snapshot cache counters so the per-job delta can be surfaced as
+        // an observer message (never in the JobReport itself — report JSON
+        // must stay byte-identical between cached and uncached runs).
+        let cache_snap = self.eval_cache.as_ref().map(|c| c.counts());
         let outcome = match &spec.kind {
             JobKind::Pretrain { steps, data_seed, persist } => {
                 let meta = self.rt.manifest.model(&spec.model)?.clone();
                 let mut runner = ModelRunner::init(meta, &mut Rng::new(spec.seed));
+                self.attach_cache(&mut runner);
                 let data = SynthDataset::new(*data_seed);
                 let cfg = TrainConfig::pretrain_for(&spec.model, *steps);
                 let rep = crate::finetune::train(&mut self.rt, &mut runner, &data, &cfg)?;
@@ -292,6 +328,10 @@ impl Coordinator {
                 JobOutcome::Sim(rows)
             }
         };
+        if let (Some((h0, m0)), Some(cache)) = (cache_snap, &self.eval_cache) {
+            let (h1, m1) = cache.counts();
+            obs.message(spec, &format!("eval cache: {} hit(s) / {} miss(es)", h1 - h0, m1 - m0));
+        }
         let report = JobReport { spec: spec.clone(), secs: t0.elapsed().as_secs_f64(), outcome };
         obs.job_finished(spec, &report);
         Ok(report)

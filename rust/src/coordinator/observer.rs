@@ -33,6 +33,45 @@ pub struct NullObserver;
 
 impl Observer for NullObserver {}
 
+/// Forwards every event to each inner observer, in order — the serve
+/// daemon tees job progress into stderr logging *and* the wire-event
+/// stream with one of these.
+pub struct FanOut<'a> {
+    observers: Vec<&'a mut dyn Observer>,
+}
+
+impl<'a> FanOut<'a> {
+    pub fn new(observers: Vec<&'a mut dyn Observer>) -> FanOut<'a> {
+        FanOut { observers }
+    }
+}
+
+impl Observer for FanOut<'_> {
+    fn job_started(&mut self, job: &JobSpec) {
+        for obs in &mut self.observers {
+            obs.job_started(job);
+        }
+    }
+
+    fn episode_done(&mut self, job: &JobSpec, stats: &EpisodeStats, episodes: usize, new_best: bool) {
+        for obs in &mut self.observers {
+            obs.episode_done(job, stats, episodes, new_best);
+        }
+    }
+
+    fn message(&mut self, job: &JobSpec, text: &str) {
+        for obs in &mut self.observers {
+            obs.message(job, text);
+        }
+    }
+
+    fn job_finished(&mut self, job: &JobSpec, report: &JobReport) {
+        for obs in &mut self.observers {
+            obs.job_finished(job, report);
+        }
+    }
+}
+
 /// Logs events through the crate logger (stderr), tagged with the job id —
 /// the default observer for `Coordinator::run` and sweep workers.
 #[derive(Debug, Clone)]
@@ -83,6 +122,21 @@ mod tests {
         fn message(&mut self, _job: &JobSpec, text: &str) {
             self.events.push(format!("msg:{text}"));
         }
+    }
+
+    #[test]
+    fn fanout_forwards_to_every_observer_in_order() {
+        let spec = JobSpec::eval("cif10").build().unwrap();
+        let mut a = Recorder::default();
+        let mut b = Recorder::default();
+        {
+            let mut fan = FanOut::new(vec![&mut a, &mut b]);
+            fan.job_started(&spec);
+            fan.message(&spec, "x");
+        }
+        let want = vec!["start:eval_cif10_fp32_s1".to_string(), "msg:x".into()];
+        assert_eq!(a.events, want);
+        assert_eq!(b.events, want);
     }
 
     #[test]

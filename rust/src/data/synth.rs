@@ -57,6 +57,15 @@ impl Split {
             Split::Test => 0x33,
         }
     }
+
+    /// Stable token used in eval-cache keys and logs.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Split::Train => "train",
+            Split::Val => "val",
+            Split::Test => "test",
+        }
+    }
 }
 
 impl SynthDataset {
@@ -90,6 +99,12 @@ impl SynthDataset {
         // fp32 ≈ 0.95+, graceful degradation through 4→2 bits (the regime
         // the RL search discriminates in), chance at 1 bit.
         SynthDataset { protos, seed, noise: 0.85 }
+    }
+
+    /// The generator seed this dataset was built from (every sample is a
+    /// pure function of it — the eval cache keys on it).
+    pub fn seed(&self) -> u64 {
+        self.seed
     }
 
     /// Render sample `index` of `split` — O(HW²), deterministic.

@@ -21,6 +21,7 @@ pub mod quant;
 pub mod repro;
 pub mod reward;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;
 

@@ -22,7 +22,9 @@ use autoq::coordinator::{Coordinator, JobOutcome, JobSpec, Sweep};
 use autoq::cost::Mode;
 use autoq::runtime::{shard, BackendKind, Parallelism, RuntimeOpts};
 use autoq::search::{Granularity, Protocol, ProtocolKind};
-use autoq::util::cli::Args;
+use autoq::serve::{run_sweep_via_daemon, DaemonClient, ServeConfig, Server};
+use autoq::util::cli::{Args, HelpRequested, UsageError};
+use autoq::util::json::Json;
 
 /// Shared `--backend` option help (pjrt|reference|shard; empty = auto).
 const BACKEND_HELP: &str = "pjrt|reference|shard (default: $AUTOQ_BACKEND, else auto)";
@@ -66,8 +68,19 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = argv.first().cloned().unwrap_or_else(|| "help".to_string());
     let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
+    // Exit codes: 0 success (including --help), 1 job/runtime failure
+    // (structured errors like a rejected spec or a failed daemon job),
+    // 2 caller mistakes (unknown command/option, malformed values).
     let code = match run(&cmd, rest) {
         Ok(()) => 0,
+        Err(e) if e.downcast_ref::<HelpRequested>().is_some() => {
+            println!("{e}");
+            0
+        }
+        Err(e) if e.downcast_ref::<UsageError>().is_some() => {
+            eprintln!("error: {e}");
+            2
+        }
         Err(e) => {
             eprintln!("error: {e:#}");
             1
@@ -86,6 +99,9 @@ fn run(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
         "sim" => cmd_sim(rest),
         "repro" => autoq::repro::cmd_repro(rest),
         "stats" => cmd_stats(rest),
+        "serve" => cmd_serve(rest),
+        "submit" => cmd_submit(rest),
+        "status" => cmd_status(rest),
         // Hidden: the shard backend's subprocess entry point.  Speaks the
         // length-prefixed JSON protocol on stdin/stdout (see
         // runtime/shard/proto.rs) — never invoked by hand.
@@ -94,7 +110,9 @@ fn run(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
             println!("{}", HELP);
             Ok(())
         }
-        other => anyhow::bail!("unknown command {other:?}\n{HELP}"),
+        other => Err(anyhow::Error::new(UsageError(format!(
+            "unknown command {other:?}\n{HELP}"
+        )))),
     }
 }
 
@@ -113,6 +131,16 @@ commands:
   sim      --model M --config FILE            FPGA simulator report
   repro    <fig1|table2|table3|table4|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|storage|all>
   stats                                        runtime executable stats
+  serve    --listen ADDR --workers K           job-queue daemon with a shared
+                                               content-addressed eval cache
+                                               (DESIGN.md §Serve daemon)
+  submit   --addr ADDR --kind search|... [job options]  submit a job to a
+                                               daemon; --wait blocks for the
+                                               result (failed job = exit 1)
+  status   --addr ADDR [--job job-N]           query a daemon's queue/job
+
+exit codes: 0 success (and --help), 1 job or runtime failure, 2 bad usage
+(unknown command/option, malformed values).
 
 Every command takes --backend {pjrt,reference,shard} (or $AUTOQ_BACKEND):
 `pjrt` executes the AOT HLO artifacts, `reference` interprets the same
@@ -234,6 +262,7 @@ fn cmd_sweep(rest: &[String]) -> anyhow::Result<()> {
         .opt("target-bits", "5", "B-bar for Algorithm 1 (rc cells)")
         .opt("workers", "2", "worker threads, each with its own runtime/backend")
         .opt("out-dir", "reports/sweep", "one JobReport JSON per cell lands here")
+        .opt("daemon", "", "route every cell through an autoq serve daemon at this address")
         .opt("backend", "", BACKEND_HELP)
         .opt("threads", "", "eval threads per worker (default: split cores across workers)")
         .opt("shard-workers", "", SHARD_WORKERS_HELP)
@@ -264,6 +293,31 @@ fn cmd_sweep(rest: &[String]) -> anyhow::Result<()> {
         threads: threads_arg(&a)?,
         shard_workers: shard_workers_arg(&a)?,
     };
+    let daemon = a.get("daemon");
+    if !daemon.is_empty() {
+        // Same grid, same ids, same report bytes — but evaluated by the
+        // daemon's warm workers and shared eval cache.
+        let result = run_sweep_via_daemon(&daemon, &sweep)?;
+        for (id, path) in &result.written {
+            println!("{id}  ->  {}", path.display());
+        }
+        println!(
+            "{} job(s) done, {} failure(s); eval cache {} hit(s) / {} miss(es)",
+            result.written.len(),
+            result.failures.len(),
+            result.cache.0,
+            result.cache.1
+        );
+        for (id, err) in &result.failures {
+            eprintln!("FAILED {id}: {err}");
+        }
+        anyhow::ensure!(
+            result.failures.is_empty(),
+            "{} sweep job(s) failed",
+            result.failures.len()
+        );
+        return Ok(());
+    }
     let result = sweep.run(&Coordinator::default_dir())?;
     println!(
         "{:<44} {:>15} {:>8} {:>8} {:>7} {:>7}",
@@ -377,6 +431,168 @@ fn cmd_sim(rest: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
+    let a = Args::new("serve")
+        .opt("listen", "127.0.0.1:7070", "listen address (port 0 picks a free port)")
+        .opt("workers", "2", "scheduler workers = jobs run concurrently")
+        .opt("backend", "", BACKEND_HELP)
+        .opt("threads", "", "eval threads per worker (default: split cores across workers)")
+        .opt("shard-workers", "", SHARD_WORKERS_HELP)
+        .parse(rest)?;
+    // SIGINT/SIGTERM flip a flag the accept loop polls: in-flight jobs
+    // drain, shard subprocesses get their exit frames, then we return.
+    autoq::util::signal::install_shutdown_flag();
+    let cfg = ServeConfig {
+        dir: Coordinator::default_dir(),
+        backend: backend_arg(&a)?,
+        threads: threads_arg(&a)?,
+        shard_workers: shard_workers_arg(&a)?,
+        workers: a.get_usize("workers")?,
+    };
+    let server = Server::bind(&a.get("listen"), cfg)?;
+    // Scripts and tests parse this line for the resolved port-0 address.
+    println!("autoq serve listening on {}", server.local_addr());
+    use std::io::Write;
+    std::io::stdout().flush().ok();
+    server.run()
+}
+
+/// Build the JobSpec for `autoq submit` from `--kind` + the job options.
+fn submit_spec(a: &Args) -> anyhow::Result<JobSpec> {
+    let model = a.get("model");
+    let cfgf = a.get("config");
+    match a.get("kind").as_str() {
+        "search" => {
+            let mut protocol = Protocol::parse(&a.get("protocol"))?;
+            protocol.target_bits = a.get_f64("target-bits")?;
+            JobSpec::search(&model)
+                .mode(Mode::parse(&a.get("mode"))?)
+                .protocol(protocol)
+                .granularity(Granularity::parse(&a.get("granularity"))?)
+                .episodes(a.get_usize("episodes")?)
+                .warmup(a.get_usize("warmup")?)
+                .eval_batches(a.get_usize("eval-batches")?)
+                .seed(a.get_u64("seed")?)
+                .relabel(!a.get_bool("no-relabel"))
+                .paper_scale(a.get_bool("paper-scale"))
+                .build()
+        }
+        "pretrain" => JobSpec::pretrain(&model)
+            .steps(a.get_usize("steps")?)
+            .data_seed(a.get_u64("data-seed")?)
+            .build(),
+        "finetune" => {
+            anyhow::ensure!(!cfgf.is_empty(), "--config required for --kind finetune");
+            JobSpec::finetune(&model, PathBuf::from(&cfgf))
+                .steps(a.get_usize("steps")?)
+                .build()
+        }
+        "eval" => {
+            let mut b = JobSpec::eval(&model).batches(a.get_usize("batches")?);
+            if !cfgf.is_empty() {
+                b = b.config(PathBuf::from(&cfgf));
+            }
+            b.build()
+        }
+        "sim" => {
+            let mut b = JobSpec::sim(&model);
+            if !cfgf.is_empty() {
+                b = b.config(PathBuf::from(&cfgf));
+            }
+            b.build()
+        }
+        other => Err(anyhow::Error::new(UsageError(format!(
+            "--kind must be search|pretrain|finetune|eval|sim, got {other:?}"
+        )))),
+    }
+}
+
+fn cmd_submit(rest: &[String]) -> anyhow::Result<()> {
+    let a = Args::new("submit")
+        .opt("addr", "127.0.0.1:7070", "autoq serve address")
+        .opt("kind", "search", "search|pretrain|finetune|eval|sim")
+        .opt("model", "cif10", "zoo model name")
+        .opt("mode", "quant", "quant|binar (search)")
+        .opt("protocol", "rc", "rc|ag|fr (search)")
+        .opt("granularity", "c", "n|l|c (search)")
+        .opt("episodes", "40", "search episodes")
+        .opt("warmup", "10", "constant-noise episodes (search)")
+        .opt("eval-batches", "2", "val batches per evaluation (search)")
+        .opt("seed", "1", "agent seed (search)")
+        .opt("target-bits", "5", "B-bar for Algorithm 1 (rc)")
+        .opt("steps", "300", "steps (pretrain/finetune)")
+        .opt("data-seed", "42", "dataset seed (pretrain)")
+        .opt("config", "", "config JSON path (finetune/eval/sim)")
+        .opt("batches", "4", "val batches (eval)")
+        .flag("wait", "block until the job finishes (failed job = exit 1)")
+        .flag("paper-scale", "use the paper's 400-episode schedule")
+        .flag("no-relabel", "disable HIRO goal relabeling (ablation)")
+        .parse(rest)?;
+    let spec = submit_spec(&a)?;
+    let mut client = DaemonClient::connect(&a.get("addr"))?;
+    let handle = client.submit(&spec)?;
+    println!("submitted {} as {handle}", spec.id());
+    if a.get_bool("wait") {
+        let row = client.result(&handle, true)?;
+        print_job_row(&row)?;
+        let state = row.req("state")?.as_str().unwrap_or("?");
+        anyhow::ensure!(state == "done", "job {handle} ended {state}");
+    }
+    Ok(())
+}
+
+/// Print one job's status/result row (state, cache counters, error).
+fn print_job_row(row: &Json) -> anyhow::Result<()> {
+    let handle = row.req("job")?.as_str().unwrap_or("?").to_string();
+    let id = row.req("id")?.as_str().unwrap_or("?").to_string();
+    let state = row.req("state")?.as_str().unwrap_or("?").to_string();
+    println!("{handle}  {id}  {state}");
+    if let Some(c) = row.get("cache") {
+        println!(
+            "eval cache: {} hit(s) / {} miss(es)",
+            c.get("hits").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            c.get("misses").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+        );
+    }
+    if let Some(err) = row.get("error").and_then(Json::as_str) {
+        eprintln!("error: {err}");
+    }
+    Ok(())
+}
+
+fn cmd_status(rest: &[String]) -> anyhow::Result<()> {
+    let a = Args::new("status")
+        .opt("addr", "127.0.0.1:7070", "autoq serve address")
+        .opt("job", "", "job handle (job-N); empty = whole queue")
+        .parse(rest)?;
+    let mut client = DaemonClient::connect(&a.get("addr"))?;
+    let job = a.get("job");
+    if job.is_empty() {
+        let reply = client.status(None)?;
+        for row in reply.req("jobs")?.as_arr().unwrap_or(&[]) {
+            println!(
+                "{}  {}  {}",
+                row.req("job")?.as_str().unwrap_or("?"),
+                row.req("id")?.as_str().unwrap_or("?"),
+                row.req("state")?.as_str().unwrap_or("?"),
+            );
+        }
+        let cache = reply.req("cache")?;
+        println!(
+            "{} queued, {} running, {} finished; eval cache {} entr(ies), {} hit(s) / {} miss(es)",
+            reply.req("queued")?.as_usize().unwrap_or(0),
+            reply.req("running")?.as_usize().unwrap_or(0),
+            reply.req("finished")?.as_usize().unwrap_or(0),
+            reply.req("cache_entries")?.as_usize().unwrap_or(0),
+            cache.get("hits").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            cache.get("misses").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+        );
+    } else {
+        print_job_row(&client.status(Some(&job))?)?;
+    }
+    Ok(())
+}
+
 /// Hidden `autoq worker` entry point: serve shard-protocol frames over
 /// stdio until EOF/exit.  `--threads` is this process's inner eval
 /// budget (the shard client passes its per-worker share of the total).
@@ -384,6 +600,12 @@ fn cmd_worker(rest: &[String]) -> anyhow::Result<()> {
     let a = Args::new("worker")
         .opt("threads", "", THREADS_HELP)
         .parse(rest)?;
+    // A Ctrl-C in the leader's terminal reaches the whole process group;
+    // workers must outlive the signal so in-flight exec frames finish and
+    // the leader's drain can complete.  Lifecycle stays EOF/exit-frame
+    // driven (`ShardClient::Drop`), so ignoring the signal cannot orphan
+    // a worker — the pipe closing always takes it down.
+    autoq::util::signal::ignore_termination();
     autoq::runtime::shard::worker::run(threads_arg(&a)?)
 }
 

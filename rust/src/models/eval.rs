@@ -14,11 +14,13 @@
 //! per call (§Perf).
 
 use std::cell::{Ref, RefCell};
+use std::sync::Arc;
 
 use crate::cost::hardware::Mode;
 use crate::data::synth::{Batch, Split, SynthDataset};
 use crate::models::params::ParamStore;
 use crate::runtime::{ModelMeta, Runtime, Tensor, Value};
+use crate::serve::cache::{self, CacheHandle};
 
 pub struct ModelRunner {
     pub meta: ModelMeta,
@@ -29,6 +31,12 @@ pub struct ModelRunner {
     /// Dispatch-ready copies of `params`, built on first use and dropped
     /// whenever the parameters change.
     param_cache: RefCell<Option<Vec<Value>>>,
+    /// Content-addressed eval memoization (`autoq serve` or
+    /// `Coordinator::set_eval_cache`); `None` = every eval computes.
+    eval_cache: Option<Arc<CacheHandle>>,
+    /// Cached `cache::param_fingerprint` of `params`, invalidated together
+    /// with `param_cache` so cache keys always reflect the live weights.
+    param_fp: RefCell<Option<u64>>,
 }
 
 /// Bit config in evaluation form (f32 vectors, network channel order).
@@ -47,13 +55,49 @@ impl ModelRunner {
     pub fn new(meta: ModelMeta, params: ParamStore) -> anyhow::Result<ModelRunner> {
         params.check_layout(&meta.params)?;
         let momenta = params.zeros_like();
-        Ok(ModelRunner { meta, params, momenta, param_cache: RefCell::new(None) })
+        Ok(ModelRunner {
+            meta,
+            params,
+            momenta,
+            param_cache: RefCell::new(None),
+            eval_cache: None,
+            param_fp: RefCell::new(None),
+        })
     }
 
     pub fn init(meta: ModelMeta, rng: &mut crate::util::rng::Rng) -> ModelRunner {
         let params = ParamStore::init(&meta.params, rng);
         let momenta = params.zeros_like();
-        ModelRunner { meta, params, momenta, param_cache: RefCell::new(None) }
+        ModelRunner {
+            meta,
+            params,
+            momenta,
+            param_cache: RefCell::new(None),
+            eval_cache: None,
+            param_fp: RefCell::new(None),
+        }
+    }
+
+    /// Attach (or detach) the content-addressed eval cache.  The handle is
+    /// shared: hits/misses this runner produces show up on its counters.
+    pub fn set_eval_cache(&mut self, cache: Option<Arc<CacheHandle>>) {
+        self.eval_cache = cache;
+    }
+
+    pub fn eval_cache(&self) -> Option<&Arc<CacheHandle>> {
+        self.eval_cache.as_ref()
+    }
+
+    /// Fingerprint of the current parameter tensors, cached until the next
+    /// `train_step`/`invalidate_param_cache` (hashing every weight per eval
+    /// would erase the cache's win on the search hot path).
+    pub fn param_fingerprint(&self) -> u64 {
+        if let Some(fp) = *self.param_fp.borrow() {
+            return fp;
+        }
+        let fp = cache::param_fingerprint(&self.params.names, &self.params.tensors);
+        *self.param_fp.borrow_mut() = Some(fp);
+        fp
     }
 
     /// Dispatch-ready parameter values, cloned from `params` once and
@@ -70,9 +114,11 @@ impl ModelRunner {
         Ref::map(self.param_cache.borrow(), |c| c.as_ref().expect("filled above"))
     }
 
-    /// Drop the cached dispatch values after mutating `params` directly.
+    /// Drop the cached dispatch values (and the cache-key fingerprint)
+    /// after mutating `params` directly.
     pub fn invalidate_param_cache(&mut self) {
         *self.param_cache.get_mut() = None;
+        *self.param_fp.get_mut() = None;
     }
 
     fn artifact(&self, kind: &str, mode: Mode) -> String {
@@ -102,6 +148,30 @@ impl ModelRunner {
         anyhow::ensure!(abits.len() == self.meta.a_channels, "abits len");
         let name = self.artifact("eval", mode);
         let eb = self.meta.eval_batch;
+        // Content-addressed memoization: both deterministic backends are
+        // byte-identical at every thread count, so a key over the eval's
+        // actual inputs can return the stored result verbatim.
+        let cache_key = self.eval_cache.as_ref().map(|handle| {
+            let key = cache::eval_key(
+                rt.backend_name(),
+                &self.meta.name,
+                mode.as_str(),
+                wbits,
+                abits,
+                data.seed(),
+                data.noise,
+                split.as_str(),
+                n_batches,
+                eb,
+                self.param_fingerprint(),
+            );
+            (handle.clone(), key)
+        });
+        if let Some((handle, key)) = &cache_key {
+            if let Some(hit) = handle.get(*key) {
+                return Ok(hit);
+            }
+        }
         // Parameter values come from the runner's cache and bit vectors
         // are built once — every dispatch borrows them (§Perf).
         let param_vals = self.param_values();
@@ -137,11 +207,15 @@ impl ModelRunner {
             loss += out[1].scalar_f32()? as f64;
         }
         let images = n_batches * eb;
-        Ok(EvalResult {
+        let result = EvalResult {
             accuracy: correct / images as f64,
             loss: loss / n_batches as f64,
             images,
-        })
+        };
+        if let Some((handle, key)) = &cache_key {
+            handle.insert(*key, result);
+        }
+        Ok(result)
     }
 
     /// Full-precision accuracy = all channels at 32 bits (quant path is an

@@ -1,0 +1,298 @@
+//! Content-addressed eval cache: exact memoization of
+//! `ModelRunner::eval_config` results, shared by every scheduler worker of
+//! one `autoq serve` daemon.
+//!
+//! Why this is sound: both deterministic backends (`reference`, `shard`)
+//! produce **byte-identical** `EvalResult`s for the same inputs at every
+//! thread/worker count (DESIGN.md §Determinism), so an evaluation is a pure
+//! function of its content — not of who computed it or when.  The cache key
+//! is therefore built from exactly the inputs that determine the result:
+//!
+//!   backend kind, model name, cost mode, the full per-channel
+//!   wbits/abits vectors, dataset (seed, noise), split, batch schedule
+//!   (n_batches × eval_batch), and a fingerprint of the parameter tensors.
+//!
+//! Search seed and protocol are deliberately **not** in the key: they decide
+//! *which* configs the agent evaluates, never the value of an evaluation —
+//! that is what makes the cache content-addressed rather than run-addressed.
+//! Thread counts are excluded too (byte-identity makes them irrelevant);
+//! backend kind is included because PJRT results are only
+//! tolerance-identical to the reference interpreter, so a PJRT daemon must
+//! never serve reference-computed numbers or vice versa.
+//!
+//! Keys hash with FNV-1a over a canonical little-endian byte encoding —
+//! the same process-independent construction as `sweep::derive_seed`, and
+//! **not** `std::collections::hash_map::DefaultHasher`, whose per-process
+//! random state would break the "same spec → same key across processes"
+//! contract that `tests/eval_cache.rs` pins.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::models::EvalResult;
+
+/// Incremental FNV-1a 64 over a canonical byte encoding.  Every variable-
+/// length field is length-prefixed so adjacent fields can never alias
+/// (`"ab" + "c"` vs `"a" + "bc"`).
+#[derive(Debug, Clone, Copy)]
+pub struct KeyHasher(u64);
+
+impl KeyHasher {
+    pub fn new() -> KeyHasher {
+        KeyHasher(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn bytes(&mut self, bytes: &[u8]) -> &mut Self {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        self
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.bytes(&v.to_le_bytes())
+    }
+
+    /// Length-prefixed string.
+    pub fn str(&mut self, s: &str) -> &mut Self {
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes())
+    }
+
+    /// Length-prefixed byte slice (bit-width vectors).
+    pub fn blob(&mut self, bytes: &[u8]) -> &mut Self {
+        self.u64(bytes.len() as u64);
+        self.bytes(bytes)
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for KeyHasher {
+    fn default() -> Self {
+        KeyHasher::new()
+    }
+}
+
+/// The canonical eval-cache key.  Field order is part of the wire-level
+/// contract (DESIGN.md §Serve daemon — cache key definition); changing it
+/// invalidates every persisted expectation, so `tests/eval_cache.rs`
+/// re-derives the encoding independently.
+#[allow(clippy::too_many_arguments)]
+pub fn eval_key(
+    backend: &str,
+    model: &str,
+    mode: &str,
+    wbits: &[u8],
+    abits: &[u8],
+    data_seed: u64,
+    data_noise: f32,
+    split: &str,
+    n_batches: usize,
+    eval_batch: usize,
+    param_fp: u64,
+) -> u64 {
+    let mut h = KeyHasher::new();
+    h.str(backend)
+        .str(model)
+        .str(mode)
+        .blob(wbits)
+        .blob(abits)
+        .u64(data_seed)
+        .u64(data_noise.to_bits() as u64)
+        .str(split)
+        .u64(n_batches as u64)
+        .u64(eval_batch as u64)
+        .u64(param_fp);
+    h.finish()
+}
+
+/// Fingerprint of a parameter set: FNV-1a over every tensor's name, shape
+/// and exact f32 bit patterns.  Covers "which trained weights" — and
+/// therefore subsumes pretrain seed/steps — so a fine-tuned runner can
+/// never alias its pre-trained ancestor.
+pub fn param_fingerprint(names: &[String], tensors: &[crate::runtime::Tensor]) -> u64 {
+    let mut h = KeyHasher::new();
+    h.u64(names.len() as u64);
+    for (name, t) in names.iter().zip(tensors) {
+        h.str(name);
+        h.u64(t.shape.len() as u64);
+        for &d in &t.shape {
+            h.u64(d as u64);
+        }
+        h.u64(t.data.len() as u64);
+        for &x in &t.data {
+            h.u64(x.to_bits() as u64);
+        }
+    }
+    h.finish()
+}
+
+/// The daemon-wide store: one map, global hit/miss counters.  Entries are
+/// tiny (three scalars), so there is no eviction — a search that evaluates
+/// ten thousand configs stores ~240 KB.
+#[derive(Debug, Default)]
+pub struct EvalCache {
+    map: Mutex<HashMap<u64, EvalResult>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl EvalCache {
+    pub fn new() -> EvalCache {
+        EvalCache::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("eval cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Daemon-lifetime (hits, misses) across every worker.
+    pub fn counts(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    fn get(&self, key: u64) -> Option<EvalResult> {
+        let hit = self.map.lock().expect("eval cache poisoned").get(&key).copied();
+        match hit {
+            Some(r) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(r)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    fn insert(&self, key: u64, result: EvalResult) {
+        self.map.lock().expect("eval cache poisoned").insert(key, result);
+    }
+}
+
+/// One worker's view of the shared cache, with its own monotonic counters
+/// so the scheduler can report per-job deltas (each worker runs jobs
+/// serially, so a snapshot before/after `run_observed` is race-free).
+#[derive(Debug)]
+pub struct CacheHandle {
+    cache: Arc<EvalCache>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl CacheHandle {
+    pub fn new(cache: Arc<EvalCache>) -> Arc<CacheHandle> {
+        Arc::new(CacheHandle { cache, hits: AtomicU64::new(0), misses: AtomicU64::new(0) })
+    }
+
+    /// A handle over a private cache — the in-process path used by tests
+    /// and `Coordinator::set_eval_cache` callers outside the daemon.
+    pub fn private() -> Arc<CacheHandle> {
+        CacheHandle::new(Arc::new(EvalCache::new()))
+    }
+
+    pub fn cache(&self) -> &Arc<EvalCache> {
+        &self.cache
+    }
+
+    /// This handle's monotonic (hits, misses).
+    pub fn counts(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    pub fn get(&self, key: u64) -> Option<EvalResult> {
+        let hit = self.cache.get(key);
+        match hit {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        hit
+    }
+
+    pub fn insert(&self, key: u64, result: EvalResult) {
+        self.cache.insert(key, result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_key() -> u64 {
+        eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 77)
+    }
+
+    #[test]
+    fn key_is_deterministic_and_field_sensitive() {
+        assert_eq!(base_key(), base_key());
+        let variants = [
+            eval_key("shard", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 77),
+            eval_key("reference", "res18", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 77),
+            eval_key("reference", "cif10", "binar", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 77),
+            eval_key("reference", "cif10", "quant", &[5, 5], &[4], 42, 0.85, "val", 2, 256, 77),
+            eval_key("reference", "cif10", "quant", &[5, 4], &[5], 42, 0.85, "val", 2, 256, 77),
+            eval_key("reference", "cif10", "quant", &[5, 4], &[4], 43, 0.85, "val", 2, 256, 77),
+            eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.9, "val", 2, 256, 77),
+            eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "train", 2, 256, 77),
+            eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 3, 256, 77),
+            eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 128, 77),
+            eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 78),
+        ];
+        for (i, v) in variants.iter().enumerate() {
+            assert_ne!(*v, base_key(), "variant {i} must change the key");
+        }
+    }
+
+    #[test]
+    fn length_prefixing_prevents_field_aliasing() {
+        // Moving a bit between the two vectors must not alias.
+        let a = eval_key("r", "m", "q", &[5, 4], &[3], 1, 0.0, "val", 1, 1, 0);
+        let b = eval_key("r", "m", "q", &[5], &[4, 3], 1, 0.0, "val", 1, 1, 0);
+        assert_ne!(a, b);
+        let mut h1 = KeyHasher::new();
+        h1.str("ab").str("c");
+        let mut h2 = KeyHasher::new();
+        h2.str("a").str("bc");
+        assert_ne!(h1.finish(), h2.finish());
+    }
+
+    #[test]
+    fn cache_counts_hits_and_misses() {
+        let handle = CacheHandle::private();
+        let r = EvalResult { accuracy: 0.5, loss: 1.0, images: 256 };
+        assert!(handle.get(9).is_none());
+        handle.insert(9, r);
+        assert_eq!(handle.get(9), Some(r));
+        assert_eq!(handle.counts(), (1, 1));
+        assert_eq!(handle.cache().counts(), (1, 1));
+        assert_eq!(handle.cache().len(), 1);
+        // A second handle over the same store keeps its own counters.
+        let other = CacheHandle::new(handle.cache().clone());
+        assert_eq!(other.get(9), Some(r));
+        assert_eq!(other.counts(), (1, 0));
+        assert_eq!(handle.counts(), (1, 1));
+        assert_eq!(handle.cache().counts(), (2, 1));
+    }
+
+    #[test]
+    fn param_fingerprint_tracks_content() {
+        use crate::runtime::Tensor;
+        let names = vec!["l1.w".to_string()];
+        let t = |x: f32| vec![Tensor::new(vec![2], vec![x, 1.0])];
+        let a = param_fingerprint(&names, &t(0.5));
+        assert_eq!(a, param_fingerprint(&names, &t(0.5)));
+        assert_ne!(a, param_fingerprint(&names, &t(0.25)));
+        assert_ne!(a, param_fingerprint(&["l2.w".to_string()], &t(0.5)));
+        // -0.0 and 0.0 are distinct bit patterns on purpose.
+        assert_ne!(param_fingerprint(&names, &t(0.0)), param_fingerprint(&names, &t(-0.0)));
+    }
+}

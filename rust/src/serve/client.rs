@@ -1,0 +1,155 @@
+//! Client side of the serve protocol: a thin typed wrapper over one TCP
+//! connection (`autoq submit` / `autoq status`), plus the daemon-backed
+//! sweep driver behind `autoq sweep --daemon`.
+
+use std::net::TcpStream;
+
+use crate::coordinator::{JobSpec, Sweep};
+use crate::runtime::shard::proto::{read_frame, write_frame};
+use crate::serve::wire;
+use crate::util::json::Json;
+
+/// One connection to an `autoq serve` daemon.  Every method is a
+/// frame round-trip; an `{ok:false}` response surfaces as `Err` with the
+/// daemon's error text.
+pub struct DaemonClient {
+    stream: TcpStream,
+}
+
+impl DaemonClient {
+    pub fn connect(addr: &str) -> anyhow::Result<DaemonClient> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| anyhow::anyhow!("cannot reach autoq serve at {addr}: {e}"))?;
+        Ok(DaemonClient { stream })
+    }
+
+    /// Send one request frame, read one response frame, reject `{ok:false}`.
+    fn roundtrip(&mut self, req: &Json) -> anyhow::Result<Json> {
+        write_frame(&mut self.stream, req)?;
+        let reply = read_frame(&mut self.stream)?
+            .ok_or_else(|| anyhow::anyhow!("daemon closed the connection"))?;
+        match reply.req("ok")?.as_bool() {
+            Some(true) => Ok(reply),
+            _ => {
+                let msg = reply
+                    .get("error")
+                    .and_then(Json::as_str)
+                    .unwrap_or("daemon reported an error");
+                anyhow::bail!("{msg}")
+            }
+        }
+    }
+
+    /// Liveness probe; returns the daemon's pid.
+    pub fn ping(&mut self) -> anyhow::Result<u32> {
+        let reply = self.roundtrip(&wire::ping_json())?;
+        Ok(reply.req("pid")?.as_f64().unwrap_or(0.0) as u32)
+    }
+
+    /// Submit a job; returns the queue-assigned handle (`job-<n>`).
+    pub fn submit(&mut self, spec: &JobSpec) -> anyhow::Result<String> {
+        let reply = self.roundtrip(&wire::submit_json(spec))?;
+        reply
+            .req("job")?
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| anyhow::anyhow!("malformed submit reply"))
+    }
+
+    /// One job's status row, or the whole queue + cache totals.
+    pub fn status(&mut self, job: Option<&str>) -> anyhow::Result<Json> {
+        self.roundtrip(&wire::status_json(job))
+    }
+
+    /// A job's result row; `wait` blocks until the job is terminal.  The
+    /// reply is `Ok` even for a *failed job* — the transport worked; check
+    /// `state`/`error` in the row (the CLI turns failed states into its
+    /// exit code).
+    pub fn result(&mut self, job: &str, wait: bool) -> anyhow::Result<Json> {
+        self.roundtrip(&wire::result_json(job, wait))
+    }
+
+    /// Ask the daemon to stop; `drain` finishes queued jobs first.  Blocks
+    /// until the daemon is quiescent (the op responds after draining).
+    pub fn shutdown(&mut self, drain: bool) -> anyhow::Result<Json> {
+        self.roundtrip(&wire::shutdown_json(drain))
+    }
+}
+
+/// Outcome of a daemon-backed sweep (the `--daemon` analogue of
+/// `SweepResult`).
+#[derive(Debug)]
+pub struct DaemonSweepResult {
+    /// (spec id, report path) per finished job, submission order.
+    pub written: Vec<(String, std::path::PathBuf)>,
+    /// (spec id, error) per failed job.
+    pub failures: Vec<(String, String)>,
+    /// Summed per-job eval-cache (hits, misses) deltas.
+    pub cache: (u64, u64),
+}
+
+/// Run a sweep through a daemon: expand the grid locally (same
+/// `Sweep::jobs` expansion — same ids, same derived seeds), submit every
+/// cell, wait for each result in submission order, and write each verbatim
+/// report to `out_dir/<id>.json` exactly as `Sweep::run` would.
+///
+/// Scheduling, thread budgets and the artifact dir are the daemon's
+/// business; `workers`, `threads`, and `shard_workers` on the sweep are
+/// ignored here.
+pub fn run_sweep_via_daemon(addr: &str, sweep: &Sweep) -> anyhow::Result<DaemonSweepResult> {
+    let specs = sweep.jobs()?;
+    anyhow::ensure!(!specs.is_empty(), "sweep expands to zero jobs");
+    // Same default report dir as `Sweep::run`.
+    let out_dir = sweep
+        .out_dir
+        .clone()
+        .unwrap_or_else(|| std::path::PathBuf::from("reports").join("sweep"));
+    std::fs::create_dir_all(&out_dir)
+        .map_err(|e| anyhow::anyhow!("cannot create {}: {e}", out_dir.display()))?;
+    let mut client = DaemonClient::connect(addr)?;
+    let mut handles = Vec::with_capacity(specs.len());
+    for spec in &specs {
+        let handle = client.submit(spec)?;
+        crate::info!("[{}] submitted as {handle}", spec.id());
+        handles.push(handle);
+    }
+    let mut written = Vec::new();
+    let mut failures = Vec::new();
+    let mut cache = (0u64, 0u64);
+    for (spec, handle) in specs.iter().zip(&handles) {
+        let row = client.result(handle, true)?;
+        if let Some(c) = row.get("cache") {
+            cache.0 += c.get("hits").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            cache.1 += c.get("misses").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        }
+        match row.req("state")?.as_str() {
+            Some("done") => {
+                let path = out_dir.join(format!("{}.json", spec.id()));
+                // The report is written verbatim — byte-identical to what a
+                // daemon-free `Sweep::run` of the same grid produces
+                // (modulo wall-clock `secs`).
+                std::fs::write(&path, row.req("report")?.to_string())
+                    .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", path.display()))?;
+                written.push((spec.id(), path));
+            }
+            Some(state) => {
+                let err = row
+                    .get("error")
+                    .and_then(Json::as_str)
+                    .unwrap_or(state)
+                    .to_string();
+                crate::warn_!("[{}] {state}: {err}", spec.id());
+                failures.push((spec.id(), err));
+            }
+            None => anyhow::bail!("malformed result row for {handle}"),
+        }
+    }
+    crate::info!(
+        "daemon sweep: {} written, {} failed, eval cache {} hit(s) / {} miss(es)",
+        written.len(),
+        failures.len(),
+        cache.0,
+        cache.1
+    );
+    Ok(DaemonSweepResult { written, failures, cache })
+}

@@ -1,0 +1,31 @@
+//! `autoq serve`: a long-running job-queue coordinator daemon with a
+//! content-addressed eval cache.
+//!
+//! The daemon accepts JSON job submissions over a TCP socket (the shard
+//! backend's length-prefixed framing, [`wire`]), validates them into
+//! builder-checked `JobSpec`s, schedules them FIFO across a pool of
+//! coordinator workers under one shared thread budget
+//! (`Parallelism::share_of`, [`server`]), streams per-episode `Observer`
+//! events to subscribed clients ([`queue`]), and serves status/result
+//! queries.  In front of every worker's `eval_config` sits a shared
+//! exact-memoization cache keyed on the full semantic identity of an
+//! evaluation ([`cache`]) — model params, bit config, data identity, split
+//! and backend — so repeated configs across episodes, jobs and clients are
+//! answered from memory, with hit/miss counters surfaced per job.
+//!
+//! Determinism contract: caching never changes results (exact memoization
+//! on deterministic backends) and never changes report bytes — counters
+//! ride the wire envelope, not `JobReport::to_json()`.  DESIGN.md §Serve
+//! daemon specifies the protocol, the scheduling rule and the cache key.
+
+pub mod cache;
+pub mod client;
+pub mod queue;
+pub mod server;
+pub mod wire;
+
+pub use cache::{CacheHandle, EvalCache};
+pub use client::{run_sweep_via_daemon, DaemonClient, DaemonSweepResult};
+pub use queue::{JobQueue, JobState};
+pub use server::{worker_thread_budget, ServeConfig, Server};
+pub use wire::ServeRequest;

@@ -1,0 +1,397 @@
+//! The daemon's job queue: submissions in, FIFO scheduling out, terminal
+//! states and event fan-out in between.
+//!
+//! One mutex + condvar guards everything; every state change does a
+//! `notify_all`, so scheduler workers blocked in [`JobQueue::next_job`] and
+//! connection handlers blocked in [`JobQueue::wait_terminal`] both wake on
+//! the transitions they care about.  Job handles are queue-assigned
+//! (`job-<seq>`), not spec ids — two clients may legitimately submit the
+//! same spec (that is what the eval cache is for) and each must be able to
+//! query its own submission.
+//!
+//! Shutdown has two flavors (DESIGN.md §Serve daemon):
+//!   * **drain** (`shutdown` op default): no new submissions, workers run
+//!     the queue dry, then exit.
+//!   * **now** (SIGINT/SIGTERM): queued jobs are cancelled, in-flight jobs
+//!     finish — the daemon never kills a running job half way.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+
+use crate::coordinator::JobSpec;
+use crate::util::json::Json;
+
+/// Lifecycle of one submission.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobState {
+    Queued,
+    Running,
+    /// Finished OK: the verbatim `JobReport::to_json()` plus this job's
+    /// cache (hits, misses) delta — kept outside the report on purpose.
+    Done { report: Json, cache: (u64, u64) },
+    /// Finished with a structured error.
+    Failed { error: String, cache: (u64, u64) },
+    /// Never ran (immediate shutdown or explicit drain cancel).
+    Cancelled,
+}
+
+impl JobState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done { .. } => "done",
+            JobState::Failed { .. } => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done { .. } | JobState::Failed { .. } | JobState::Cancelled)
+    }
+}
+
+struct JobEntry {
+    handle: String,
+    spec: JobSpec,
+    state: JobState,
+    /// Live event subscribers; senders whose receiver hung up are pruned
+    /// on the next publish.
+    subscribers: Vec<mpsc::Sender<Json>>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Shutdown {
+    No,
+    /// Run the queue dry, then stop.
+    Drain,
+    /// Cancel queued jobs, finish in-flight ones, stop.
+    Now,
+}
+
+struct Inner {
+    jobs: Vec<JobEntry>,
+    pending: VecDeque<usize>,
+    running: usize,
+    shutdown: Shutdown,
+}
+
+pub struct JobQueue {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl Default for JobQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JobQueue {
+    pub fn new() -> JobQueue {
+        JobQueue {
+            inner: Mutex::new(Inner {
+                jobs: Vec::new(),
+                pending: VecDeque::new(),
+                running: 0,
+                shutdown: Shutdown::No,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().expect("job queue poisoned")
+    }
+
+    /// Enqueue a validated spec; returns the queue-assigned handle.
+    /// Rejected once shutdown has begun.
+    pub fn submit(&self, spec: JobSpec) -> anyhow::Result<String> {
+        let mut g = self.lock();
+        anyhow::ensure!(g.shutdown == Shutdown::No, "daemon is shutting down");
+        let idx = g.jobs.len();
+        let handle = format!("job-{idx}");
+        g.jobs.push(JobEntry {
+            handle: handle.clone(),
+            spec,
+            state: JobState::Queued,
+            subscribers: Vec::new(),
+        });
+        g.pending.push_back(idx);
+        drop(g);
+        self.cv.notify_all();
+        Ok(handle)
+    }
+
+    /// Blocking FIFO dequeue for scheduler workers.  Marks the job Running
+    /// and returns `(index, spec)`; `None` means "shut down" — either the
+    /// queue ran dry under a drain, or an immediate shutdown was requested.
+    pub fn next_job(&self) -> Option<(usize, JobSpec)> {
+        let mut g = self.lock();
+        loop {
+            if g.shutdown == Shutdown::Now {
+                return None;
+            }
+            if let Some(idx) = g.pending.pop_front() {
+                g.jobs[idx].state = JobState::Running;
+                g.running += 1;
+                let spec = g.jobs[idx].spec.clone();
+                drop(g);
+                self.cv.notify_all();
+                return Some((idx, spec));
+            }
+            if g.shutdown == Shutdown::Drain {
+                return None;
+            }
+            g = self.cv.wait(g).expect("job queue poisoned");
+        }
+    }
+
+    /// Record a job's terminal state and fan the `finished` event out to
+    /// its subscribers.
+    pub fn finish(&self, idx: usize, outcome: Result<Json, String>, cache: (u64, u64)) {
+        let event = crate::serve::wire::event_finished(
+            &format!("job-{idx}"),
+            &outcome,
+            cache,
+        );
+        let mut g = self.lock();
+        g.jobs[idx].state = match outcome {
+            Ok(report) => JobState::Done { report, cache },
+            Err(error) => JobState::Failed { error, cache },
+        };
+        g.running -= 1;
+        let subs: Vec<mpsc::Sender<Json>> = std::mem::take(&mut g.jobs[idx].subscribers);
+        drop(g);
+        for sub in subs {
+            let _ = sub.send(event.clone());
+        }
+        self.cv.notify_all();
+    }
+
+    /// Fan a progress event (started/episode/message) out to subscribers.
+    /// `publish` and `finish` for one job are only ever called from the
+    /// worker running that job, so taking the subscriber list out of the
+    /// lock for the sends cannot race a concurrent `finish`.
+    pub fn publish(&self, idx: usize, event: Json) {
+        let mut g = self.lock();
+        let subs = std::mem::take(&mut g.jobs[idx].subscribers);
+        drop(g);
+        let mut live: Vec<mpsc::Sender<Json>> = subs
+            .into_iter()
+            .filter(|sub| sub.send(event.clone()).is_ok())
+            .collect();
+        let mut g = self.lock();
+        g.jobs[idx].subscribers.append(&mut live);
+    }
+
+    /// Register an event subscriber.  Terminal jobs get their `finished`
+    /// event replayed immediately, so subscribing is never a lost race.
+    pub fn subscribe(&self, handle: &str, sender: mpsc::Sender<Json>) -> anyhow::Result<()> {
+        let mut g = self.lock();
+        let idx = Self::index_of(&g, handle)?;
+        match &g.jobs[idx].state {
+            JobState::Done { report, cache } => {
+                let ev =
+                    crate::serve::wire::event_finished(handle, &Ok(report.clone()), *cache);
+                let _ = sender.send(ev);
+            }
+            JobState::Failed { error, cache } => {
+                let ev =
+                    crate::serve::wire::event_finished(handle, &Err(error.clone()), *cache);
+                let _ = sender.send(ev);
+            }
+            JobState::Cancelled => {
+                let ev = crate::serve::wire::event_finished(
+                    handle,
+                    &Err("job was cancelled".to_string()),
+                    (0, 0),
+                );
+                let _ = sender.send(ev);
+            }
+            _ => g.jobs[idx].subscribers.push(sender),
+        }
+        Ok(())
+    }
+
+    fn index_of(g: &Inner, handle: &str) -> anyhow::Result<usize> {
+        g.jobs
+            .iter()
+            .position(|j| j.handle == handle)
+            .ok_or_else(|| anyhow::anyhow!("unknown job {handle:?}"))
+    }
+
+    /// One job's `(spec id, state)` snapshot.
+    pub fn state_of(&self, handle: &str) -> anyhow::Result<(String, JobState)> {
+        let g = self.lock();
+        let idx = Self::index_of(&g, handle)?;
+        Ok((g.jobs[idx].spec.id(), g.jobs[idx].state.clone()))
+    }
+
+    /// Block until `handle` reaches a terminal state; returns it.
+    pub fn wait_terminal(&self, handle: &str) -> anyhow::Result<(String, JobState)> {
+        let mut g = self.lock();
+        let idx = Self::index_of(&g, handle)?;
+        while !g.jobs[idx].state.is_terminal() {
+            g = self.cv.wait(g).expect("job queue poisoned");
+        }
+        Ok((g.jobs[idx].spec.id(), g.jobs[idx].state.clone()))
+    }
+
+    /// `(handle, spec id, state name)` rows for the status op, submission
+    /// order.
+    pub fn snapshot(&self) -> Vec<(String, String, &'static str)> {
+        let g = self.lock();
+        g.jobs
+            .iter()
+            .map(|j| (j.handle.clone(), j.spec.id(), j.state.name()))
+            .collect()
+    }
+
+    /// Counts of (queued, running, finished) jobs.
+    pub fn load(&self) -> (usize, usize, usize) {
+        let g = self.lock();
+        let queued = g.pending.len();
+        let done = g.jobs.len() - queued - g.running;
+        (queued, g.running, done)
+    }
+
+    /// Begin shutdown.  `drain` keeps queued jobs; otherwise they are
+    /// cancelled (their subscribers get a terminal event).
+    pub fn begin_shutdown(&self, drain: bool) {
+        let mut g = self.lock();
+        // Never downgrade Now back to Drain (signal beats a later op).
+        if g.shutdown == Shutdown::No || (g.shutdown == Shutdown::Drain && !drain) {
+            g.shutdown = if drain { Shutdown::Drain } else { Shutdown::Now };
+        }
+        let mut cancelled: Vec<(usize, Vec<mpsc::Sender<Json>>)> = Vec::new();
+        if g.shutdown == Shutdown::Now {
+            while let Some(idx) = g.pending.pop_front() {
+                g.jobs[idx].state = JobState::Cancelled;
+                cancelled.push((idx, std::mem::take(&mut g.jobs[idx].subscribers)));
+            }
+        }
+        drop(g);
+        for (idx, subs) in cancelled {
+            let ev = crate::serve::wire::event_finished(
+                &format!("job-{idx}"),
+                &Err("job was cancelled by shutdown".to_string()),
+                (0, 0),
+            );
+            for sub in subs {
+                let _ = sub.send(ev.clone());
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    pub fn shutting_down(&self) -> bool {
+        self.lock().shutdown != Shutdown::No
+    }
+
+    /// Block until shutdown has begun **and** nothing is queued or running
+    /// (the `shutdown` op responds only once the daemon is quiescent).
+    pub fn wait_drained(&self) {
+        let mut g = self.lock();
+        while g.shutdown == Shutdown::No || g.running > 0 || !g.pending.is_empty() {
+            g = self.cv.wait(g).expect("job queue poisoned");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> JobSpec {
+        JobSpec::eval("cif10").batches(1).build().unwrap()
+    }
+
+    #[test]
+    fn fifo_order_and_states() {
+        let q = JobQueue::new();
+        let a = q.submit(spec()).unwrap();
+        let b = q.submit(spec()).unwrap();
+        assert_eq!((a.as_str(), b.as_str()), ("job-0", "job-1"));
+        assert_eq!(q.load(), (2, 0, 0));
+        let (i0, _) = q.next_job().unwrap();
+        assert_eq!(i0, 0);
+        assert_eq!(q.state_of(&a).unwrap().1, JobState::Running);
+        q.finish(i0, Ok(Json::Null), (3, 1));
+        let (_, st) = q.state_of(&a).unwrap();
+        assert_eq!(st.name(), "done");
+        let JobState::Done { cache, .. } = st else { panic!() };
+        assert_eq!(cache, (3, 1));
+        assert_eq!(q.state_of(&b).unwrap().1, JobState::Queued);
+        assert!(q.state_of("job-9").is_err());
+    }
+
+    #[test]
+    fn drain_shutdown_runs_queue_dry_then_stops() {
+        let q = std::sync::Arc::new(JobQueue::new());
+        q.submit(spec()).unwrap();
+        q.submit(spec()).unwrap();
+        q.begin_shutdown(true);
+        assert!(q.submit(spec()).is_err(), "submissions rejected after shutdown");
+        let (i, _) = q.next_job().unwrap();
+        q.finish(i, Err("x".into()), (0, 0));
+        let (i, _) = q.next_job().unwrap();
+        q.finish(i, Ok(Json::Null), (0, 0));
+        assert!(q.next_job().is_none(), "dry queue + drain = stop");
+        q.wait_drained(); // must not block
+    }
+
+    #[test]
+    fn immediate_shutdown_cancels_queued_jobs() {
+        let q = JobQueue::new();
+        let a = q.submit(spec()).unwrap();
+        let (i, _) = q.next_job().unwrap();
+        let b = q.submit(spec()).unwrap();
+        q.begin_shutdown(false);
+        assert!(q.next_job().is_none());
+        assert_eq!(q.state_of(&b).unwrap().1, JobState::Cancelled);
+        // In-flight job still finishes and is recorded.
+        q.finish(i, Ok(Json::Null), (0, 0));
+        assert_eq!(q.state_of(&a).unwrap().1.name(), "done");
+        // A later drain request must not resurrect the queue.
+        q.begin_shutdown(true);
+        assert!(q.next_job().is_none());
+    }
+
+    #[test]
+    fn wait_terminal_blocks_until_finish() {
+        let q = std::sync::Arc::new(JobQueue::new());
+        let h = q.submit(spec()).unwrap();
+        let (i, _) = q.next_job().unwrap();
+        let q2 = q.clone();
+        let h2 = h.clone();
+        let waiter = std::thread::spawn(move || q2.wait_terminal(&h2).unwrap());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.finish(i, Ok(Json::Bool(true)), (1, 0));
+        let (_, st) = waiter.join().unwrap();
+        let JobState::Done { report, cache } = st else { panic!("not done") };
+        assert_eq!(report, Json::Bool(true));
+        assert_eq!(cache, (1, 0));
+    }
+
+    #[test]
+    fn subscribers_get_live_and_replayed_events() {
+        let q = JobQueue::new();
+        let h = q.submit(spec()).unwrap();
+        let (i, _) = q.next_job().unwrap();
+        let (tx, rx) = mpsc::channel();
+        q.subscribe(&h, tx).unwrap();
+        q.publish(i, Json::Str("ev".into()));
+        assert_eq!(rx.recv().unwrap(), Json::Str("ev".into()));
+        q.finish(i, Ok(Json::Null), (0, 0));
+        let fin = rx.recv().unwrap();
+        assert_eq!(fin.req("event").unwrap().as_str(), Some("finished"));
+        // Late subscriber: terminal event replays immediately.
+        let (tx2, rx2) = mpsc::channel();
+        q.subscribe(&h, tx2).unwrap();
+        let fin = rx2.recv().unwrap();
+        assert_eq!(fin.req("event").unwrap().as_str(), Some("finished"));
+        assert_eq!(fin.req("ok").unwrap().as_bool(), Some(true));
+    }
+}

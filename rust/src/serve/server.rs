@@ -1,0 +1,481 @@
+//! The `autoq serve` daemon: a TCP accept loop, a pool of scheduler
+//! workers, and the shared content-addressed eval cache.
+//!
+//! Threading model:
+//!   * the caller's thread runs [`Server::run`]: a non-blocking accept loop
+//!     that polls the shutdown flag between accepts;
+//!   * each connection gets a handler thread speaking the length-prefixed
+//!     frame protocol (`runtime::shard::proto`);
+//!   * `workers` scheduler threads each own a full `Coordinator` (and so a
+//!     runtime — PJRT executables are not shared across threads, mirroring
+//!     `Sweep`) and pull jobs FIFO from the [`JobQueue`].
+//!
+//! Thread budget: unless `--threads` pins a per-worker budget, the
+//! machine's budget is split evenly across the scheduler workers via
+//! [`Parallelism::share_of`] — the same no-oversubscription rule as
+//! `Sweep` and the shard pool, so `workers × threads` (or, on the shard
+//! backend, `workers × processes × threads`) stays inside one machine.
+//!
+//! Model pre-training is serialized by a warm lock: the first job that
+//! needs a model's params trains them while every other worker needing the
+//! same model waits, then loads the persisted bytes — workers never race a
+//! pretrain (same invariant `Sweep::run` establishes with its serial
+//! pre-warm phase).
+//!
+//! Shutdown: SIGINT/SIGTERM (via `util::signal`) or a `shutdown` op stop
+//! the accept loop, cancel or drain queued jobs ([`JobQueue`]'s two
+//! flavors), let in-flight jobs finish, then join the workers — dropping
+//! each worker's `Coordinator`, whose shard pool `Drop` sends exit frames
+//! to its worker processes.  No job is ever killed mid-run and no `autoq
+//! worker` subprocess is orphaned.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::{Coordinator, FanOut, JobKind, JobSpec, LogObserver, Observer};
+use crate::runtime::shard::proto::{read_frame, write_frame};
+use crate::runtime::{BackendKind, Parallelism, RuntimeOpts};
+use crate::search::EpisodeStats;
+use crate::serve::cache::{CacheHandle, EvalCache};
+use crate::serve::queue::{JobQueue, JobState};
+use crate::serve::wire::{self, ServeRequest};
+use crate::util::json::Json;
+
+/// How the daemon opens its coordinators (mirrors the CLI's shared
+/// `--backend`/`--threads`/`--shard-workers` knobs plus `--workers`).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Artifact directory every scheduler worker opens.
+    pub dir: PathBuf,
+    /// Execution backend (`None` = auto-resolve).
+    pub backend: Option<BackendKind>,
+    /// Per-worker eval threads (`None` = split the machine budget evenly
+    /// across workers via `Parallelism::share_of`).
+    pub threads: Option<Parallelism>,
+    /// Shard worker processes per scheduler worker (shard backend only).
+    pub shard_workers: Option<usize>,
+    /// Scheduler workers (concurrent jobs).
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            dir: crate::runtime::Runtime::default_dir(),
+            backend: None,
+            threads: None,
+            shard_workers: None,
+            workers: 2,
+        }
+    }
+}
+
+/// Per-worker inner thread budget under one shared machine budget —
+/// `Sweep::inner_budget`'s rule, applied to the daemon's worker pool.
+pub fn worker_thread_budget(
+    threads: Option<Parallelism>,
+    workers: usize,
+) -> anyhow::Result<Parallelism> {
+    Ok(match threads {
+        Some(p) => p,
+        None => Parallelism::share_of(Parallelism::resolve(None)?.get(), workers),
+    })
+}
+
+pub struct Server {
+    listener: TcpListener,
+    addr: SocketAddr,
+    cfg: ServeConfig,
+    queue: Arc<JobQueue>,
+    cache: Arc<EvalCache>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind the listen socket (port 0 picks a free port — tests and
+    /// `--listen 127.0.0.1:0` both rely on the resolved address being
+    /// printed/queryable before any client connects).
+    pub fn bind(listen: &str, cfg: ServeConfig) -> anyhow::Result<Server> {
+        anyhow::ensure!(cfg.workers >= 1, "serve needs at least one worker");
+        let listener = TcpListener::bind(listen)
+            .map_err(|e| anyhow::anyhow!("cannot listen on {listen}: {e}"))?;
+        let addr = listener.local_addr()?;
+        Ok(Server {
+            listener,
+            addr,
+            cfg,
+            queue: Arc::new(JobQueue::new()),
+            cache: Arc::new(EvalCache::new()),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Shared queue handle — lets embedders/tests inspect job states after
+    /// `run` returns.
+    pub fn queue(&self) -> Arc<JobQueue> {
+        self.queue.clone()
+    }
+
+    /// Shared cache handle (global hit/miss counters).
+    pub fn cache(&self) -> Arc<EvalCache> {
+        self.cache.clone()
+    }
+
+    /// Flag that stops the accept loop; trip it from another thread (or
+    /// let SIGINT/SIGTERM do it through `util::signal`).
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Serve until shutdown, then drain and return.  Consumes the server:
+    /// when this returns, every scheduler worker has exited and every
+    /// shard subprocess has been told to exit.
+    pub fn run(self) -> anyhow::Result<()> {
+        let inner = worker_thread_budget(self.cfg.threads, self.cfg.workers)?;
+        crate::info!(
+            "serve: listening on {} with {} worker(s) × {} eval thread(s), backend {:?}",
+            self.addr,
+            self.cfg.workers,
+            inner.get(),
+            self.cfg.backend
+        );
+        let warm_lock = Arc::new(Mutex::new(()));
+        let conns = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| -> anyhow::Result<()> {
+            // Scheduler workers.
+            for wid in 0..self.cfg.workers {
+                let queue = self.queue.clone();
+                let cache = self.cache.clone();
+                let warm_lock = warm_lock.clone();
+                let cfg = self.cfg.clone();
+                s.spawn(move || worker_loop(wid, &cfg, inner, queue, cache, warm_lock));
+            }
+
+            // Accept loop: non-blocking so the shutdown flag is honoured
+            // within one poll interval even when no client ever connects.
+            self.listener.set_nonblocking(true)?;
+            loop {
+                if self.stop.load(Ordering::SeqCst)
+                    || crate::util::signal::shutdown_requested()
+                {
+                    // Signal path: cancel queued jobs, finish in-flight.
+                    self.queue.begin_shutdown(false);
+                    break;
+                }
+                if self.queue.shutting_down() {
+                    // `shutdown` op path: the handler already chose a flavor.
+                    break;
+                }
+                match self.listener.accept() {
+                    Ok((stream, peer)) => {
+                        crate::debug!("serve: connection from {peer}");
+                        let queue = self.queue.clone();
+                        let cache = self.cache.clone();
+                        let conns = conns.clone();
+                        conns.fetch_add(1, Ordering::SeqCst);
+                        // Detached, not scoped: a client idling in
+                        // `read_frame` must not hold the shutdown join
+                        // hostage — the grace loop below waits briefly for
+                        // handlers still writing a response, then exits.
+                        std::thread::spawn(move || {
+                            if let Err(e) = handle_connection(stream, &queue, &cache) {
+                                crate::debug!("serve: connection ended: {e:#}");
+                            }
+                            conns.fetch_sub(1, Ordering::SeqCst);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(25));
+                    }
+                    Err(e) => {
+                        self.queue.begin_shutdown(false);
+                        anyhow::bail!("accept failed: {e}");
+                    }
+                }
+            }
+            crate::info!("serve: shutting down — draining in-flight jobs");
+            // Workers exit via `next_job() == None`; their `Coordinator`s
+            // drop here, sending exit frames to any shard subprocesses.
+            // (The scope joins the worker threads automatically.)
+            Ok(())
+        })?;
+        // Give response-writing handler threads a moment to flush before
+        // the process exits; a handler stuck on an idle client does not
+        // hold the daemon open.
+        for _ in 0..80 {
+            if conns.load(Ordering::SeqCst) == 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(25));
+        }
+        let (hits, misses) = self.cache.counts();
+        crate::info!(
+            "serve: stopped ({} cache entr(ies), {hits} hit(s) / {misses} miss(es))",
+            self.cache.len()
+        );
+        Ok(())
+    }
+}
+
+/// Streams job progress onto the wire as typed events.
+struct WireObserver {
+    queue: Arc<JobQueue>,
+    idx: usize,
+    handle: String,
+}
+
+impl Observer for WireObserver {
+    fn job_started(&mut self, job: &JobSpec) {
+        self.queue.publish(self.idx, wire::event_started(&self.handle, &job.id()));
+    }
+
+    fn episode_done(&mut self, _job: &JobSpec, stats: &EpisodeStats, episodes: usize, new_best: bool) {
+        self.queue
+            .publish(self.idx, wire::event_episode(&self.handle, stats, episodes, new_best));
+    }
+
+    fn message(&mut self, _job: &JobSpec, text: &str) {
+        self.queue.publish(self.idx, wire::event_message(&self.handle, text));
+    }
+}
+
+/// One scheduler worker: own coordinator, own cache handle (per-job
+/// counter deltas), jobs pulled FIFO until shutdown.
+fn worker_loop(
+    wid: usize,
+    cfg: &ServeConfig,
+    inner: Parallelism,
+    queue: Arc<JobQueue>,
+    cache: Arc<EvalCache>,
+    warm_lock: Arc<Mutex<()>>,
+) {
+    let opts = RuntimeOpts { threads: Some(inner), shard_workers: cfg.shard_workers };
+    let mut coord = match Coordinator::open_full(&cfg.dir, cfg.backend, opts) {
+        Ok(c) => c,
+        Err(e) => {
+            // A worker that cannot open its runtime would strand queued
+            // jobs silently; fail the whole daemon loudly instead.
+            crate::warn_!("serve worker {wid} failed to open runtime: {e:#}");
+            queue.begin_shutdown(false);
+            return;
+        }
+    };
+    let handle = CacheHandle::new(cache);
+    coord.set_eval_cache(handle.clone());
+    while let Some((idx, spec)) = queue.next_job() {
+        let job_handle = format!("job-{idx}");
+        // Serialize pretrain-on-first-use across workers.
+        if matches!(
+            spec.kind,
+            JobKind::Search(_) | JobKind::Eval { .. } | JobKind::Finetune { .. }
+        ) {
+            let guard = warm_lock.lock().expect("warm lock poisoned");
+            if let Err(e) = coord.ensure_pretrained(&spec.model) {
+                drop(guard);
+                queue.finish(idx, Err(format!("{e:#}")), (0, 0));
+                continue;
+            }
+        }
+        let snap = handle.counts();
+        let mut log = LogObserver::default();
+        let mut wire_obs =
+            WireObserver { queue: queue.clone(), idx, handle: job_handle.clone() };
+        let res = {
+            let mut fan = FanOut::new(vec![&mut log, &mut wire_obs]);
+            coord.run_observed(&spec, &mut fan)
+        };
+        let (h1, m1) = handle.counts();
+        let delta = (h1 - snap.0, m1 - snap.1);
+        match res {
+            Ok(report) => queue.finish(idx, Ok(report.to_json()), delta),
+            Err(e) => queue.finish(idx, Err(format!("{e:#}")), delta),
+        }
+    }
+    crate::debug!("serve worker {wid} exiting");
+}
+
+/// One connection: frames in, frames out.  Application-level errors
+/// (unknown op, invalid spec, unknown job) answer `{ok:false}` and keep
+/// the connection; framing/JSON corruption ends the connection — but
+/// never the daemon.
+fn handle_connection(
+    stream: TcpStream,
+    queue: &Arc<JobQueue>,
+    cache: &Arc<EvalCache>,
+) -> anyhow::Result<()> {
+    let mut reader = stream.try_clone()?;
+    let mut writer = stream;
+    while let Some(frame) = read_frame(&mut reader)? {
+        let request = match wire::request_from_json(&frame) {
+            Ok(r) => r,
+            Err(e) => {
+                write_frame(&mut writer, &wire::err_json(&format!("{e:#}")))?;
+                continue;
+            }
+        };
+        match request {
+            ServeRequest::Ping => {
+                write_frame(
+                    &mut writer,
+                    &wire::ok_json(vec![("pid", (std::process::id() as usize).into())]),
+                )?;
+            }
+            ServeRequest::Submit(spec) => {
+                let reply = match queue.submit(spec.clone()) {
+                    Ok(handle) => wire::ok_json(vec![
+                        ("job", handle.into()),
+                        ("id", spec.id().into()),
+                    ]),
+                    Err(e) => wire::err_json(&format!("{e:#}")),
+                };
+                write_frame(&mut writer, &reply)?;
+            }
+            ServeRequest::Status { job: Some(handle) } => {
+                let reply = match queue.state_of(&handle) {
+                    Ok((id, state)) => status_row(&handle, &id, &state),
+                    Err(e) => wire::err_json(&format!("{e:#}")),
+                };
+                write_frame(&mut writer, &reply)?;
+            }
+            ServeRequest::Status { job: None } => {
+                let rows = queue
+                    .snapshot()
+                    .into_iter()
+                    .map(|(handle, id, state)| {
+                        Json::obj(vec![
+                            ("job", handle.into()),
+                            ("id", id.into()),
+                            ("state", state.into()),
+                        ])
+                    })
+                    .collect();
+                let (queued, running, finished) = queue.load();
+                let (hits, misses) = cache.counts();
+                write_frame(
+                    &mut writer,
+                    &wire::ok_json(vec![
+                        ("jobs", Json::Arr(rows)),
+                        ("queued", queued.into()),
+                        ("running", running.into()),
+                        ("finished", finished.into()),
+                        ("cache", wire::cache_json(hits, misses)),
+                        ("cache_entries", cache.len().into()),
+                    ]),
+                )?;
+            }
+            ServeRequest::Result { job: handle, wait } => {
+                let looked_up = if wait {
+                    queue.wait_terminal(&handle)
+                } else {
+                    queue.state_of(&handle)
+                };
+                let reply = match looked_up {
+                    Ok((id, state)) => status_row(&handle, &id, &state),
+                    Err(e) => wire::err_json(&format!("{e:#}")),
+                };
+                write_frame(&mut writer, &reply)?;
+            }
+            ServeRequest::Subscribe { job: handle } => {
+                let (tx, rx) = mpsc::channel::<Json>();
+                match queue.subscribe(&handle, tx) {
+                    Ok(()) => {
+                        write_frame(&mut writer, &wire::ok_json(vec![]))?;
+                        // Stream until the terminal event (or client drop).
+                        for event in rx {
+                            let terminal =
+                                event.get("event").and_then(Json::as_str) == Some("finished");
+                            write_frame(&mut writer, &event)?;
+                            if terminal {
+                                break;
+                            }
+                        }
+                    }
+                    Err(e) => write_frame(&mut writer, &wire::err_json(&format!("{e:#}")))?,
+                }
+            }
+            ServeRequest::Shutdown { drain } => {
+                queue.begin_shutdown(drain);
+                // Respond only once quiescent, so a client's `shutdown`
+                // round-trip doubles as "wait for my jobs".
+                queue.wait_drained();
+                let (queued, running, finished) = queue.load();
+                debug_assert_eq!((queued, running), (0, 0));
+                write_frame(&mut writer, &wire::ok_json(vec![("finished", finished.into())]))?;
+                return Ok(());
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `{ok, job, id, state [, report, cache | error, cache]}` — the shared
+/// shape of single-job `status` and `result` replies.
+fn status_row(handle: &str, id: &str, state: &JobState) -> Json {
+    let mut pairs: Vec<(&str, Json)> =
+        vec![("job", handle.into()), ("id", id.into()), ("state", state.name().into())];
+    match state {
+        JobState::Done { report, cache } => {
+            pairs.push(("report", report.clone()));
+            pairs.push(("cache", wire::cache_json(cache.0, cache.1)));
+        }
+        JobState::Failed { error, cache } => {
+            pairs.push(("error", error.as_str().into()));
+            pairs.push(("cache", wire::cache_json(cache.0, cache.1)));
+        }
+        _ => {}
+    }
+    wire::ok_json(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_budget_splits_or_pins() {
+        let cores = Parallelism::resolve(None).unwrap().get();
+        // Pinned budgets are taken verbatim.
+        assert_eq!(worker_thread_budget(Some(Parallelism::new(3)), 8).unwrap().get(), 3);
+        // Unpinned: an even share_of split, floored at one.
+        for workers in [1usize, 2, cores, cores + 5] {
+            let b = worker_thread_budget(None, workers).unwrap().get();
+            assert!(b >= 1);
+            assert!(b <= cores.max(1));
+            assert_eq!(b, Parallelism::share_of(cores, workers).get());
+        }
+    }
+
+    #[test]
+    fn bind_rejects_zero_workers_and_bad_addrs() {
+        let cfg = ServeConfig { workers: 0, ..ServeConfig::default() };
+        assert!(Server::bind("127.0.0.1:0", cfg).is_err());
+        assert!(Server::bind("not-an-addr", ServeConfig::default()).is_err());
+    }
+
+    #[test]
+    fn bind_resolves_port_zero() {
+        let srv = Server::bind("127.0.0.1:0", ServeConfig::default()).unwrap();
+        assert_ne!(srv.local_addr().port(), 0);
+    }
+
+    #[test]
+    fn status_row_embeds_terminal_payloads() {
+        let done = JobState::Done { report: Json::Bool(true), cache: (2, 1) };
+        let j = status_row("job-0", "eval_cif10_fp32_s1", &done);
+        assert_eq!(j.req("state").unwrap().as_str(), Some("done"));
+        assert_eq!(j.req("report").unwrap(), &Json::Bool(true));
+        assert_eq!(j.req("cache").unwrap().req("hits").unwrap().as_usize(), Some(2));
+        let failed = JobState::Failed { error: "boom".into(), cache: (0, 0) };
+        let j = status_row("job-1", "x", &failed);
+        assert_eq!(j.req("error").unwrap().as_str(), Some("boom"));
+        assert!(j.get("report").is_none());
+    }
+}

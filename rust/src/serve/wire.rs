@@ -1,0 +1,428 @@
+//! Wire types of the `autoq serve` protocol: requests, responses and
+//! streamed job events.
+//!
+//! Transport is the shard backend's length-prefixed JSON framing
+//! (`runtime::shard::proto::{read_frame, write_frame}`) over TCP — one
+//! request frame in, one response frame out, except `subscribe`, which
+//! answers `{ok:true}` and then streams event frames until the job's
+//! terminal `finished` event.
+//!
+//! Parsing follows the untyped → typed progression: a frame arrives as the
+//! substrate's untyped [`Json`], gets its `op` discriminant inspected, and
+//! is then lifted field-by-field into the typed [`ServeRequest`] enum —
+//! with job submissions lifted all the way into the crate's
+//! builder-validated [`JobSpec`], so a spec that reaches the queue has
+//! passed exactly the same validation as one built by the CLI.
+//!
+//! Determinism contract: the `report` object inside a `result` response is
+//! the job's `JobReport::to_json()` **verbatim** — cache hit/miss counters
+//! ride the response *envelope* (and `status`/event frames), never the
+//! report, so a daemon-served report is byte-identical to one written by a
+//! daemon-free run of the same spec (modulo the wall-clock `secs` field,
+//! exactly as between backends in `tests/shard_backend.rs`).
+
+use std::path::PathBuf;
+
+use crate::coordinator::{JobKind, JobSpec};
+use crate::cost::Mode;
+use crate::search::{Granularity, Protocol, ProtocolKind};
+use crate::util::json::Json;
+
+/// A parsed client→daemon request.
+#[derive(Debug)]
+pub enum ServeRequest {
+    /// Liveness probe; answers `{ok, pid}` like the shard handshake.
+    Ping,
+    /// Enqueue a validated job; answers `{ok, job, id}`.
+    Submit(JobSpec),
+    /// One job's state, or the whole queue plus cache totals.
+    Status { job: Option<String> },
+    /// A job's terminal state; `wait` blocks until the job finishes.
+    Result { job: String, wait: bool },
+    /// Stream this job's events until it finishes.
+    Subscribe { job: String },
+    /// Stop the daemon; `drain` finishes every queued job first, otherwise
+    /// queued jobs are cancelled and only in-flight jobs complete.
+    Shutdown { drain: bool },
+}
+
+fn req_str(j: &Json, key: &str) -> anyhow::Result<String> {
+    j.req(key)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| anyhow::anyhow!("{key} must be a string"))
+}
+
+fn opt_bool(j: &Json, key: &str, default: bool) -> anyhow::Result<bool> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(v) => v.as_bool().ok_or_else(|| anyhow::anyhow!("{key} must be a bool")),
+    }
+}
+
+fn opt_usize(j: &Json, key: &str) -> anyhow::Result<Option<usize>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            let n = v.as_f64().ok_or_else(|| anyhow::anyhow!("{key} must be a number"))?;
+            anyhow::ensure!(n >= 0.0 && n.fract() == 0.0, "{key} must be a non-negative integer");
+            Ok(Some(n as usize))
+        }
+    }
+}
+
+/// Lift an untyped request frame into a [`ServeRequest`].  Unknown ops and
+/// malformed fields are application errors (the connection answers
+/// `{ok:false}` and keeps serving) — only framing/JSON corruption drops a
+/// connection.
+pub fn request_from_json(j: &Json) -> anyhow::Result<ServeRequest> {
+    match j.req("op")?.as_str() {
+        Some("ping") => Ok(ServeRequest::Ping),
+        Some("submit") => Ok(ServeRequest::Submit(job_from_json(j.req("spec")?)?)),
+        Some("status") => Ok(ServeRequest::Status {
+            job: j.get("job").and_then(Json::as_str).map(str::to_string),
+        }),
+        Some("result") => Ok(ServeRequest::Result {
+            job: req_str(j, "job")?,
+            wait: opt_bool(j, "wait", false)?,
+        }),
+        Some("subscribe") => Ok(ServeRequest::Subscribe { job: req_str(j, "job")? }),
+        Some("shutdown") => Ok(ServeRequest::Shutdown { drain: opt_bool(j, "drain", true)? }),
+        other => anyhow::bail!("unknown serve op {other:?}"),
+    }
+}
+
+// ---- job spec codec -------------------------------------------------------
+
+/// Parse the `granularity_token` form ("n5" | "l" | "c") produced by
+/// `JobSpec::to_json`, falling back to the CLI's `Granularity::parse`
+/// spellings ("network:B" | "n" | "l" | "c") so hand-written submissions
+/// work too.
+pub fn granularity_from_token(s: &str) -> anyhow::Result<Granularity> {
+    if let Some(bits) = s.strip_prefix('n') {
+        if !bits.is_empty() {
+            if let Ok(b) = bits.parse::<u8>() {
+                return Ok(Granularity::Network(b));
+            }
+        }
+    }
+    Granularity::parse(s)
+}
+
+/// Inverse of [`JobSpec::to_json`]: lift an untyped spec object into a
+/// **builder-validated** `JobSpec`.  Every constraint the CLI enforces
+/// (episodes > 0, warmup ≤ episodes, rc target bits in range, …) applies
+/// to daemon submissions identically, because the lift goes through the
+/// same `JobBuilder::build`.
+pub fn job_from_json(j: &Json) -> anyhow::Result<JobSpec> {
+    let model = req_str(j, "model")?;
+    let kind = req_str(j, "kind")?;
+    // Seeds travel as decimal strings (u64 > 2^53 would round in f64).
+    let seed: Option<u64> = match j.get("seed") {
+        None => None,
+        Some(v) => Some(
+            v.as_str()
+                .ok_or_else(|| anyhow::anyhow!("seed must be a decimal string"))?
+                .parse()
+                .map_err(|_| anyhow::anyhow!("seed is not a u64"))?,
+        ),
+    };
+    let spec = match kind.as_str() {
+        "search" => {
+            let mut b = JobSpec::search(&model);
+            if let Some(m) = j.get("mode").and_then(Json::as_str) {
+                b = b.mode(Mode::parse(m)?);
+            }
+            if let Some(p) = j.get("protocol").and_then(Json::as_str) {
+                b = b.protocol(Protocol::parse(p)?);
+            }
+            if let Some(t) = j.get("target_bits").and_then(Json::as_f64) {
+                b = b.target_bits(t);
+            }
+            if let Some(g) = j.get("granularity").and_then(Json::as_str) {
+                b = b.granularity(granularity_from_token(g)?);
+            }
+            if let Some(e) = opt_usize(j, "episodes")? {
+                b = b.episodes(e);
+            }
+            if let Some(w) = opt_usize(j, "warmup")? {
+                b = b.warmup(w);
+            }
+            if let Some(eb) = opt_usize(j, "eval_batches")? {
+                b = b.eval_batches(eb);
+            }
+            if let Some(r) = j.get("relabel").and_then(Json::as_bool) {
+                b = b.relabel(r);
+            }
+            if let Some(p) = j.get("paper_scale").and_then(Json::as_bool) {
+                b = b.paper_scale(p);
+            }
+            if let Some(s) = seed {
+                b = b.seed(s);
+            }
+            b.build()?
+        }
+        "pretrain" => {
+            let mut b = JobSpec::pretrain(&model);
+            if let Some(s) = opt_usize(j, "steps")? {
+                b = b.steps(s);
+            }
+            if let Some(ds) = j.get("data_seed").and_then(Json::as_str) {
+                b = b.data_seed(
+                    ds.parse().map_err(|_| anyhow::anyhow!("data_seed is not a u64"))?,
+                );
+            }
+            if let Some(p) = j.get("persist").and_then(Json::as_bool) {
+                b = b.persist(p);
+            }
+            if let Some(s) = seed {
+                b = b.seed(s);
+            }
+            b.build()?
+        }
+        "finetune" => {
+            let config = req_str(j, "config")?;
+            let mut b = JobSpec::finetune(&model, PathBuf::from(config));
+            if let Some(s) = opt_usize(j, "steps")? {
+                b = b.steps(s);
+            }
+            if let Some(s) = seed {
+                b = b.seed(s);
+            }
+            b.build()?
+        }
+        "eval" => {
+            let mut b = JobSpec::eval(&model);
+            if let Some(c) = j.get("config").and_then(Json::as_str) {
+                b = b.config(PathBuf::from(c));
+            }
+            if let Some(n) = opt_usize(j, "batches")? {
+                b = b.batches(n);
+            }
+            if let Some(s) = seed {
+                b = b.seed(s);
+            }
+            b.build()?
+        }
+        "sim" => {
+            let mut b = JobSpec::sim(&model);
+            if let Some(c) = j.get("config").and_then(Json::as_str) {
+                b = b.config(PathBuf::from(c));
+            }
+            if let Some(s) = seed {
+                b = b.seed(s);
+            }
+            b.build()?
+        }
+        other => anyhow::bail!("unknown job kind {other:?}"),
+    };
+    Ok(spec)
+}
+
+// ---- request builders (client side) ---------------------------------------
+
+pub fn ping_json() -> Json {
+    Json::obj(vec![("op", "ping".into())])
+}
+
+pub fn submit_json(spec: &JobSpec) -> Json {
+    Json::obj(vec![("op", "submit".into()), ("spec", spec.to_json())])
+}
+
+pub fn status_json(job: Option<&str>) -> Json {
+    let mut pairs = vec![("op", "status".into())];
+    if let Some(job) = job {
+        pairs.push(("job", job.into()));
+    }
+    Json::obj(pairs)
+}
+
+pub fn result_json(job: &str, wait: bool) -> Json {
+    Json::obj(vec![("op", "result".into()), ("job", job.into()), ("wait", wait.into())])
+}
+
+pub fn subscribe_json(job: &str) -> Json {
+    Json::obj(vec![("op", "subscribe".into()), ("job", job.into())])
+}
+
+pub fn shutdown_json(drain: bool) -> Json {
+    Json::obj(vec![("op", "shutdown".into()), ("drain", drain.into())])
+}
+
+// ---- response/event builders (daemon side) --------------------------------
+
+pub fn ok_json(mut extra: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![("ok", true.into())];
+    pairs.append(&mut extra);
+    Json::obj(pairs)
+}
+
+pub fn err_json(msg: &str) -> Json {
+    Json::obj(vec![("ok", false.into()), ("error", msg.into())])
+}
+
+pub fn cache_json(hits: u64, misses: u64) -> Json {
+    // Counters are masked into f64-exact range; a daemon would need ~2^53
+    // lookups to wrap, and the JSON substrate cannot carry more exactly.
+    Json::obj(vec![
+        ("hits", ((hits & 0x1F_FFFF_FFFF_FFFF) as usize).into()),
+        ("misses", ((misses & 0x1F_FFFF_FFFF_FFFF) as usize).into()),
+    ])
+}
+
+pub fn event_started(job: &str, id: &str) -> Json {
+    Json::obj(vec![("event", "started".into()), ("job", job.into()), ("id", id.into())])
+}
+
+pub fn event_episode(
+    job: &str,
+    stats: &crate::search::EpisodeStats,
+    episodes: usize,
+    new_best: bool,
+) -> Json {
+    Json::obj(vec![
+        ("event", "episode".into()),
+        ("job", job.into()),
+        ("episode", stats.episode.into()),
+        ("episodes", episodes.into()),
+        ("accuracy", stats.accuracy.into()),
+        ("reward", stats.reward.into()),
+        ("avg_wbits", stats.avg_wbits.into()),
+        ("avg_abits", stats.avg_abits.into()),
+        ("norm_logic", stats.norm_logic.into()),
+        ("new_best", new_best.into()),
+    ])
+}
+
+pub fn event_message(job: &str, text: &str) -> Json {
+    Json::obj(vec![("event", "message".into()), ("job", job.into()), ("text", text.into())])
+}
+
+/// Terminal event: `ok` + the verbatim report on success, `error` on
+/// failure; cache counters are the job's delta on this worker.
+pub fn event_finished(
+    job: &str,
+    outcome: &Result<Json, String>,
+    cache: (u64, u64),
+) -> Json {
+    let mut pairs = vec![("event", Json::from("finished")), ("job", job.into())];
+    match outcome {
+        Ok(report) => {
+            pairs.push(("ok", true.into()));
+            pairs.push(("report", report.clone()));
+        }
+        Err(e) => {
+            pairs.push(("ok", false.into()));
+            pairs.push(("error", e.as_str().into()));
+        }
+    }
+    pairs.push(("cache", cache_json(cache.0, cache.1)));
+    Json::obj(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_roundtrips_through_builder_validation() {
+        let spec = JobSpec::search("cif10")
+            .granularity(Granularity::Network(5))
+            .episodes(7)
+            .warmup(3)
+            .eval_batches(1)
+            .seed(u64::MAX - 3)
+            .build()
+            .unwrap();
+        let frame = Json::parse(&submit_json(&spec).to_string()).unwrap();
+        let ServeRequest::Submit(back) = request_from_json(&frame).unwrap() else {
+            panic!("wrong op");
+        };
+        assert_eq!(back.id(), spec.id());
+        assert_eq!(back.seed, spec.seed);
+        assert_eq!(back.to_json().to_string(), spec.to_json().to_string());
+    }
+
+    #[test]
+    fn every_job_kind_roundtrips() {
+        let specs = vec![
+            JobSpec::pretrain("cif10").steps(5).data_seed(9).persist(false).build().unwrap(),
+            JobSpec::finetune("cif10", "cfg.json").steps(3).seed(2).build().unwrap(),
+            JobSpec::eval("cif10").config("cfg.json").batches(3).build().unwrap(),
+            JobSpec::eval("cif10").batches(1).build().unwrap(),
+            JobSpec::sim("cif10").build().unwrap(),
+        ];
+        for spec in specs {
+            let back = job_from_json(&spec.to_json()).unwrap();
+            assert_eq!(back.to_json().to_string(), spec.to_json().to_string(), "{}", spec.id());
+        }
+    }
+
+    #[test]
+    fn invalid_specs_are_rejected_by_the_builder() {
+        // episodes == 0 — the PR 5 structured-error case, now rejected at
+        // the wire boundary by the same builder validation.
+        let j = Json::parse(
+            r#"{"op":"submit","spec":{"model":"cif10","kind":"search","episodes":0}}"#,
+        )
+        .unwrap();
+        let err = request_from_json(&j).unwrap_err();
+        assert!(format!("{err:#}").contains("episodes"), "{err:#}");
+        // Unknown kind.
+        let j = Json::parse(r#"{"op":"submit","spec":{"model":"cif10","kind":"nope"}}"#).unwrap();
+        assert!(request_from_json(&j).is_err());
+        // Missing model.
+        let j = Json::parse(r#"{"op":"submit","spec":{"kind":"search"}}"#).unwrap();
+        assert!(request_from_json(&j).is_err());
+        // Seed as a JSON number would round above 2^53 — strings only.
+        let j = Json::parse(
+            r#"{"op":"submit","spec":{"model":"cif10","kind":"search","seed":12}}"#,
+        )
+        .unwrap();
+        assert!(request_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn granularity_tokens_parse_both_spellings() {
+        assert_eq!(granularity_from_token("n5").unwrap(), Granularity::Network(5));
+        assert_eq!(granularity_from_token("n12").unwrap(), Granularity::Network(12));
+        assert_eq!(granularity_from_token("l").unwrap(), Granularity::Layer);
+        assert_eq!(granularity_from_token("c").unwrap(), Granularity::Channel);
+        assert_eq!(granularity_from_token("network:4").unwrap(), Granularity::Network(4));
+        // Bare "n" is the CLI default spelling, not a token.
+        assert_eq!(granularity_from_token("n").unwrap(), Granularity::Network(5));
+        assert!(granularity_from_token("x").is_err());
+        assert!(granularity_from_token("n999").is_err());
+    }
+
+    #[test]
+    fn rc_target_bits_survive_the_roundtrip() {
+        let spec = JobSpec::search("cif10")
+            .protocol(Protocol::resource_constrained(4.0))
+            .build()
+            .unwrap();
+        let back = job_from_json(&spec.to_json()).unwrap();
+        let JobKind::Search(p) = &back.kind else { panic!("wrong kind") };
+        assert_eq!(p.protocol.kind, ProtocolKind::ResourceConstrained);
+        assert_eq!(p.protocol.target_bits, 4.0);
+    }
+
+    #[test]
+    fn ops_parse_with_defaults() {
+        let j = Json::parse(r#"{"op":"status"}"#).unwrap();
+        assert!(matches!(request_from_json(&j).unwrap(), ServeRequest::Status { job: None }));
+        let j = Json::parse(r#"{"op":"result","job":"job-3"}"#).unwrap();
+        let ServeRequest::Result { job, wait } = request_from_json(&j).unwrap() else {
+            panic!("wrong op");
+        };
+        assert_eq!(job, "job-3");
+        assert!(!wait);
+        let j = Json::parse(r#"{"op":"shutdown"}"#).unwrap();
+        assert!(matches!(
+            request_from_json(&j).unwrap(),
+            ServeRequest::Shutdown { drain: true }
+        ));
+        assert!(request_from_json(&Json::parse(r#"{"op":"nope"}"#).unwrap()).is_err());
+        assert!(request_from_json(&Json::parse(r#"{"no_op":1}"#).unwrap()).is_err());
+    }
+}

@@ -4,6 +4,38 @@
 //! typed getters and a generated `--help`.
 
 use std::collections::BTreeMap;
+use std::fmt;
+
+/// Marker error: the invocation itself is wrong (unknown option/command,
+/// missing value, unparsable number).  `main` downcasts to this to exit
+/// with code 2, distinguishing caller mistakes from job failures (code 1).
+#[derive(Debug)]
+pub struct UsageError(pub String);
+
+impl fmt::Display for UsageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for UsageError {}
+
+/// Marker error: the user asked for `--help`; carries the usage text and
+/// exits 0 — help is not a failure.
+#[derive(Debug)]
+pub struct HelpRequested(pub String);
+
+impl fmt::Display for HelpRequested {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for HelpRequested {}
+
+fn usage_err(msg: String) -> anyhow::Error {
+    anyhow::Error::new(UsageError(msg))
+}
 
 #[derive(Debug, Clone)]
 pub struct ArgSpec {
@@ -49,13 +81,14 @@ impl Args {
         s
     }
 
-    /// Parse raw args (after the subcommand).  Unknown `--keys` are errors.
+    /// Parse raw args (after the subcommand).  Unknown `--keys` are
+    /// [`UsageError`]s (exit 2); `--help` is a [`HelpRequested`] (exit 0).
     pub fn parse(mut self, raw: &[String]) -> anyhow::Result<Self> {
         let mut i = 0;
         while i < raw.len() {
             let a = &raw[i];
             if a == "--help" || a == "-h" {
-                anyhow::bail!("{}", self.usage());
+                return Err(anyhow::Error::new(HelpRequested(self.usage())));
             }
             if let Some(rest) = a.strip_prefix("--") {
                 let (key, inline_val) = match rest.split_once('=') {
@@ -66,7 +99,7 @@ impl Args {
                     .specs
                     .iter()
                     .find(|s| s.name == key)
-                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key}\n{}", self.usage()))?
+                    .ok_or_else(|| usage_err(format!("unknown option --{key}\n{}", self.usage())))?
                     .clone();
                 let val = if spec.is_flag {
                     inline_val.unwrap_or_else(|| "true".to_string())
@@ -75,7 +108,7 @@ impl Args {
                 } else {
                     i += 1;
                     raw.get(i)
-                        .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?
+                        .ok_or_else(|| usage_err(format!("--{key} needs a value")))?
                         .clone()
                 };
                 self.values.insert(key, val);
@@ -103,17 +136,17 @@ impl Args {
     pub fn get_usize(&self, name: &str) -> anyhow::Result<usize> {
         let v = self.get(name);
         v.parse()
-            .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v:?}"))
+            .map_err(|_| usage_err(format!("--{name} expects an integer, got {v:?}")))
     }
     pub fn get_f64(&self, name: &str) -> anyhow::Result<f64> {
         let v = self.get(name);
         v.parse()
-            .map_err(|_| anyhow::anyhow!("--{name} expects a number, got {v:?}"))
+            .map_err(|_| usage_err(format!("--{name} expects a number, got {v:?}")))
     }
     pub fn get_u64(&self, name: &str) -> anyhow::Result<u64> {
         let v = self.get(name);
         v.parse()
-            .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v:?}"))
+            .map_err(|_| usage_err(format!("--{name} expects an integer, got {v:?}")))
     }
     pub fn get_bool(&self, name: &str) -> bool {
         matches!(self.raw(name).as_deref(), Some("true" | "1" | "yes"))
@@ -153,19 +186,28 @@ mod tests {
     }
 
     #[test]
-    fn unknown_option_errors() {
-        assert!(Args::new("t").parse(&v(&["--nope", "1"])).is_err());
+    fn unknown_option_is_a_usage_error() {
+        let err = Args::new("t").parse(&v(&["--nope", "1"])).unwrap_err();
+        assert!(err.downcast_ref::<UsageError>().is_some());
+    }
+
+    #[test]
+    fn help_is_not_a_usage_error() {
+        let err = Args::new("t").opt("x", "1", "").parse(&v(&["--help"])).unwrap_err();
+        assert!(err.downcast_ref::<HelpRequested>().is_some());
+        assert!(err.downcast_ref::<UsageError>().is_none());
+        assert!(format!("{err}").contains("--x"));
+    }
+
+    #[test]
+    fn bad_number_is_a_usage_error() {
+        let a = Args::new("t").opt("n", "1", "").parse(&v(&["--n", "abc"])).unwrap();
+        assert!(a.get_usize("n").unwrap_err().downcast_ref::<UsageError>().is_some());
     }
 
     #[test]
     fn positional_collected() {
         let a = Args::new("t").parse(&v(&["x", "y"])).unwrap();
         assert_eq!(a.positional, vec!["x", "y"]);
-    }
-
-    #[test]
-    fn bad_number_errors() {
-        let a = Args::new("t").opt("n", "1", "").parse(&v(&["--n", "abc"])).unwrap();
-        assert!(a.get_usize("n").is_err());
     }
 }

@@ -10,4 +10,5 @@ pub mod logging;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod signal;
 pub mod stats;

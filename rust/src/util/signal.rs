@@ -1,0 +1,102 @@
+//! Minimal POSIX signal plumbing (no `libc`/`signal-hook` crates in the
+//! offline vendor set — `std` already links the platform libc, so the two
+//! symbols we need are declared by hand).
+//!
+//! Two consumers:
+//!   * `autoq serve` installs a **shutdown flag**: SIGINT/SIGTERM flip one
+//!     process-global atomic that the accept loop polls, so the daemon
+//!     drains in-flight jobs and exits cleanly instead of dying mid-job.
+//!   * `autoq worker` **ignores** SIGINT/SIGTERM: a Ctrl-C delivered to the
+//!     foreground process group must stop the *parent* gracefully, not rip
+//!     the shard workers out from under its drain — workers exit on stdin
+//!     EOF / an `exit` frame, which the parent's `ShardClient::drop` always
+//!     sends (that, not signals, is the no-orphan contract).
+//!
+//! Only async-signal-safe work happens in the handler (one atomic store).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+/// True once SIGINT/SIGTERM arrived after [`install_shutdown_flag`].
+pub fn shutdown_requested() -> bool {
+    SHUTDOWN.load(Ordering::SeqCst)
+}
+
+/// Test/daemon hook: trip the flag as if a signal had arrived.
+pub fn request_shutdown() {
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+#[cfg(unix)]
+mod imp {
+    use super::SHUTDOWN;
+    use std::sync::atomic::Ordering;
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    const SIG_IGN: usize = 1;
+
+    extern "C" {
+        /// POSIX `signal(2)`.  The handler travels as a `usize` because it
+        /// is either `SIG_IGN` or a function address; `std` links libc, so
+        /// no new dependency is introduced.
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    extern "C" fn on_terminate(_sig: i32) {
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+
+    pub fn install_shutdown_flag() {
+        unsafe {
+            signal(SIGINT, on_terminate as usize);
+            signal(SIGTERM, on_terminate as usize);
+        }
+    }
+
+    pub fn ignore_termination() {
+        unsafe {
+            signal(SIGINT, SIG_IGN);
+            signal(SIGTERM, SIG_IGN);
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod imp {
+    pub fn install_shutdown_flag() {}
+    pub fn ignore_termination() {}
+}
+
+/// Route SIGINT/SIGTERM into [`shutdown_requested`] (daemon entry point).
+pub fn install_shutdown_flag() {
+    imp::install_shutdown_flag()
+}
+
+/// Ignore SIGINT/SIGTERM entirely (shard worker entry point).
+pub fn ignore_termination() {
+    imp::ignore_termination()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_starts_clear_and_latches() {
+        // Cannot assert the initial state: another test in this binary may
+        // have tripped the process-global flag already.
+        request_shutdown();
+        assert!(shutdown_requested());
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn handlers_install_without_crashing() {
+        install_shutdown_flag();
+        ignore_termination();
+        // Restore default-ish behavior for the rest of the test binary.
+        install_shutdown_flag();
+    }
+}

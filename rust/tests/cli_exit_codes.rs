@@ -1,0 +1,69 @@
+//! The CLI exit-code contract (documented in `autoq help`):
+//!   0 — success, including `--help`
+//!   1 — job or runtime failure (structured errors: rejected spec,
+//!       missing model, failed daemon job)
+//!   2 — caller mistakes (unknown command/option, malformed values)
+//!
+//! These are subprocess tests: the contract lives in `main()`'s error
+//! triage, which unit tests cannot reach.
+
+use std::process::{Command, Output};
+
+fn autoq(args: &[&str]) -> Output {
+    let dir = std::env::temp_dir().join(format!("autoq_exit_{}", std::process::id()));
+    Command::new(env!("CARGO_BIN_EXE_autoq"))
+        .args(args)
+        .env("AUTOQ_ARTIFACTS", &dir)
+        .output()
+        .expect("spawn autoq")
+}
+
+fn code(out: &Output) -> i32 {
+    out.status.code().expect("no exit code (signal?)")
+}
+
+#[test]
+fn help_exits_zero() {
+    let out = autoq(&["help"]);
+    assert_eq!(code(&out), 0);
+    assert!(String::from_utf8_lossy(&out.stdout).contains("exit codes"));
+    // Subcommand --help is also help, not an error.
+    let out = autoq(&["search", "--help"]);
+    assert_eq!(code(&out), 0, "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("--episodes"));
+}
+
+#[test]
+fn unknown_command_and_option_exit_two() {
+    let out = autoq(&["frobnicate"]);
+    assert_eq!(code(&out), 2);
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+
+    let out = autoq(&["search", "--nope", "1"]);
+    assert_eq!(code(&out), 2);
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown option"));
+
+    let out = autoq(&["search", "--episodes", "abc"]);
+    assert_eq!(code(&out), 2);
+    assert!(String::from_utf8_lossy(&out.stderr).contains("expects an integer"));
+
+    let out = autoq(&["submit", "--kind", "nope"]);
+    assert_eq!(code(&out), 2);
+}
+
+/// Structured job errors (the PR 5 episodes==0 case) are failures, not
+/// usage mistakes — and decidedly not success.
+#[test]
+fn rejected_specs_and_missing_models_exit_one() {
+    let out = autoq(&["search", "--episodes", "0"]);
+    assert_eq!(code(&out), 1, "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("episodes"));
+
+    let out = autoq(&["eval", "--model", "no_such_model"]);
+    assert_eq!(code(&out), 1);
+
+    // A dead daemon address is a runtime failure too.
+    let out = autoq(&["status", "--addr", "127.0.0.1:1"]);
+    assert_eq!(code(&out), 1);
+    assert!(String::from_utf8_lossy(&out.stderr).contains("cannot reach"));
+}

@@ -1,0 +1,202 @@
+//! The content-addressed eval cache (`serve::cache`): key stability and
+//! encoding, invalidation on every semantic field, the `ModelRunner`
+//! memoization seam, and — the load-bearing contract — byte-identical
+//! `JobReport` JSON between cached and uncached coordinator runs.
+
+use std::path::{Path, PathBuf};
+
+use autoq::coordinator::{Coordinator, JobSpec};
+use autoq::cost::Mode;
+use autoq::data::synth::{Split, SynthDataset};
+use autoq::models::{ModelRunner, ParamStore};
+use autoq::runtime::{BackendKind, Parallelism, Runtime, RuntimeOpts};
+use autoq::search::{Granularity, Protocol};
+use autoq::serve::cache::{eval_key, CacheHandle};
+use autoq::util::rng::Rng;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("autoq_cache_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn open_ref(dir: &Path) -> Runtime {
+    let opts = RuntimeOpts { threads: Some(Parallelism::new(2)), shard_workers: None };
+    Runtime::open_full(dir, BackendKind::Reference, opts).expect("runtime open")
+}
+
+/// Independent re-derivation of the documented key encoding (DESIGN.md
+/// §Serve daemon): FNV-1a 64 over length-prefixed little-endian fields in
+/// canonical order.  Rebuilding the hash from the byte layout — without
+/// `KeyHasher` — proves the key is a pure function of the spec with no
+/// per-process state (std's `DefaultHasher` would fail this by design),
+/// i.e. the same spec hashes identically across processes and machines.
+#[test]
+fn key_encoding_is_pinned_and_process_independent() {
+    let (backend, model, mode) = ("reference", "cif10", "quant");
+    let (wbits, abits): (&[u8], &[u8]) = (&[5, 4, 3], &[4, 4]);
+    let (data_seed, data_noise) = (42u64, 0.85f32);
+    let (split, n_batches, eval_batch, param_fp) = ("val", 2usize, 256usize, 77u64);
+
+    let mut bytes: Vec<u8> = Vec::new();
+    let push_u64 = |bytes: &mut Vec<u8>, v: u64| bytes.extend_from_slice(&v.to_le_bytes());
+    let push_str = |bytes: &mut Vec<u8>, s: &str| {
+        push_u64(bytes, s.len() as u64);
+        bytes.extend_from_slice(s.as_bytes());
+    };
+    let push_blob = |bytes: &mut Vec<u8>, b: &[u8]| {
+        push_u64(bytes, b.len() as u64);
+        bytes.extend_from_slice(b);
+    };
+    push_str(&mut bytes, backend);
+    push_str(&mut bytes, model);
+    push_str(&mut bytes, mode);
+    push_blob(&mut bytes, wbits);
+    push_blob(&mut bytes, abits);
+    push_u64(&mut bytes, data_seed);
+    push_u64(&mut bytes, data_noise.to_bits() as u64);
+    push_str(&mut bytes, split);
+    push_u64(&mut bytes, n_batches as u64);
+    push_u64(&mut bytes, eval_batch as u64);
+    push_u64(&mut bytes, param_fp);
+
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+
+    let key = eval_key(
+        backend, model, mode, wbits, abits, data_seed, data_noise, split, n_batches,
+        eval_batch, param_fp,
+    );
+    assert_eq!(h, key, "encoding drifted from the documented canonical form");
+    // And the derivation is stable call-to-call.
+    let again = eval_key(
+        backend, model, mode, wbits, abits, data_seed, data_noise, split, n_batches,
+        eval_batch, param_fp,
+    );
+    assert_eq!(key, again);
+}
+
+/// Every semantic field must invalidate: flipping any one input yields a
+/// different key (bit-config, seeds, backend, split, batch schedule,
+/// params).
+#[test]
+fn any_field_change_invalidates_the_key() {
+    let base = || eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 77);
+    let variants: Vec<(&str, u64)> = vec![
+        ("backend", eval_key("shard", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 77)),
+        ("model", eval_key("reference", "res18", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 77)),
+        ("mode", eval_key("reference", "cif10", "binar", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 77)),
+        ("wbits", eval_key("reference", "cif10", "quant", &[6, 4], &[4], 42, 0.85, "val", 2, 256, 77)),
+        ("abits", eval_key("reference", "cif10", "quant", &[5, 4], &[3], 42, 0.85, "val", 2, 256, 77)),
+        ("data_seed", eval_key("reference", "cif10", "quant", &[5, 4], &[4], 7, 0.85, "val", 2, 256, 77)),
+        ("split", eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "test", 2, 256, 77)),
+        ("n_batches", eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 4, 256, 77)),
+        ("param_fp", eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 78)),
+    ];
+    for (field, v) in variants {
+        assert_ne!(v, base(), "changing {field} must change the key");
+    }
+}
+
+/// The `ModelRunner::eval_config` seam: identical evals hit, different
+/// configs miss, mutated params miss — and a hit returns bit-identical
+/// numbers to an uncached runner.
+#[test]
+fn eval_config_memoizes_through_the_runner_seam() {
+    let dir = temp_dir("seam");
+    let mut rt = open_ref(&dir);
+    let meta = rt.manifest.model("cif10").unwrap().clone();
+    let params = ParamStore::init(&meta.params, &mut Rng::new(42));
+    let plain = ModelRunner::new(meta.clone(), params.clone()).unwrap();
+    let mut runner = ModelRunner::new(meta, params).unwrap();
+    let handle = CacheHandle::private();
+    runner.set_eval_cache(Some(handle.clone()));
+
+    let data = SynthDataset::new(42);
+    let wbits = vec![5u8; runner.meta.w_channels];
+    let abits = vec![4u8; runner.meta.a_channels];
+    let eval = |r: &ModelRunner, rt: &mut Runtime, wb: &[u8]| {
+        r.eval_config(rt, Mode::Quant, wb, &abits, &data, Split::Val, 2).unwrap()
+    };
+
+    let cold = eval(&runner, &mut rt, &wbits);
+    assert_eq!(handle.counts(), (0, 1), "first eval must miss");
+    let warm = eval(&runner, &mut rt, &wbits);
+    assert_eq!(handle.counts(), (1, 1), "second identical eval must hit");
+    assert_eq!(warm.accuracy.to_bits(), cold.accuracy.to_bits());
+    assert_eq!(warm.loss.to_bits(), cold.loss.to_bits());
+    assert_eq!(warm.images, cold.images);
+
+    // A cache hit returns exactly what an uncached runner computes.
+    let bare = eval(&plain, &mut rt, &wbits);
+    assert_eq!(bare.accuracy.to_bits(), warm.accuracy.to_bits());
+    assert_eq!(bare.loss.to_bits(), warm.loss.to_bits());
+
+    // A different bit-config is a different content address.
+    let wb6 = vec![6u8; runner.meta.w_channels];
+    eval(&runner, &mut rt, &wb6);
+    assert_eq!(handle.counts(), (1, 2), "new config must miss");
+
+    // Mutating the weights changes the param fingerprint: the old entry
+    // must not be served for the new weights.
+    runner.params.tensors[0].data[0] += 0.5;
+    runner.invalidate_param_cache();
+    let retrained = eval(&runner, &mut rt, &wbits);
+    assert_eq!(handle.counts(), (1, 3), "mutated params must miss");
+    assert_ne!(
+        (retrained.accuracy.to_bits(), retrained.loss.to_bits()),
+        (cold.accuracy.to_bits(), cold.loss.to_bits()),
+        "sanity: the mutation actually changed the eval"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The determinism contract end-to-end: a search on a cache-attached
+/// coordinator produces byte-identical `JobReport` JSON to an uncached
+/// one (wall-clock `secs` zeroed, as in tests/shard_backend.rs), and a
+/// repeat of the same job is served with >0 hits.
+#[test]
+fn cached_search_reports_are_byte_identical_with_hits() {
+    let dir = temp_dir("coord");
+    // Persist cheap trained params once so every coordinator loads the
+    // same bytes instead of auto-pretraining 300 steps.
+    {
+        let mut coord = Coordinator::open_with(&dir, Some(BackendKind::Reference)).unwrap();
+        coord.run(&JobSpec::pretrain("cif10").steps(3).build().unwrap()).unwrap();
+    }
+    let spec = JobSpec::search("cif10")
+        .mode(Mode::Quant)
+        .protocol(Protocol::resource_constrained(5.0))
+        .granularity(Granularity::Network(5))
+        .eval_batches(2)
+        .seed(11)
+        .build()
+        .unwrap();
+    let run = |coord: &mut Coordinator| {
+        let mut report = coord.run(&spec).unwrap();
+        report.secs = 0.0;
+        report.to_json().to_string()
+    };
+
+    let mut cold = Coordinator::open_with(&dir, Some(BackendKind::Reference)).unwrap();
+    let want = run(&mut cold);
+    assert!(want.contains("\"wbits\""), "sanity: report carries a config");
+
+    let mut warm = Coordinator::open_with(&dir, Some(BackendKind::Reference)).unwrap();
+    let handle = CacheHandle::private();
+    warm.set_eval_cache(handle.clone());
+    let first = run(&mut warm);
+    let (h1, m1) = handle.counts();
+    let second = run(&mut warm);
+    let (h2, m2) = handle.counts();
+
+    assert_eq!(first, want, "caching must not change report bytes (cold cache)");
+    assert_eq!(second, want, "caching must not change report bytes (warm cache)");
+    assert!(h2 > h1, "repeat of the same job must produce cache hits");
+    assert!(m1 > 0, "sanity: the first run populated the cache");
+    assert_eq!(m2, m1, "a byte-identical repeat must add no misses");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,468 @@
+//! End-to-end tests of the `autoq serve` daemon: the socket protocol
+//! (submit → status → result → subscribe → shutdown), concurrent
+//! scheduling, malformed-frame handling, signal-flag shutdown, the
+//! no-orphan contract with the shard backend — and the acceptance
+//! contract: a sweep run twice against one daemon reports cache hits on
+//! the repeat and byte-identical reports to a daemon-free sweep.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::process::Stdio;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, OnceLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use autoq::coordinator::{Coordinator, JobSpec, Sweep};
+use autoq::cost::Mode;
+use autoq::runtime::{BackendKind, Parallelism};
+use autoq::search::{Granularity, Protocol};
+use autoq::serve::{run_sweep_via_daemon, DaemonClient, JobQueue, ServeConfig, Server};
+use autoq::util::json::Json;
+
+/// Point shard pools at the real `autoq` binary (same ordering contract as
+/// tests/shard_backend.rs: first action of every test that may shard).
+fn worker_exe() -> PathBuf {
+    static EXE: OnceLock<PathBuf> = OnceLock::new();
+    EXE.get_or_init(|| {
+        let exe = PathBuf::from(env!("CARGO_BIN_EXE_autoq"));
+        std::env::set_var("AUTOQ_WORKER_EXE", &exe);
+        exe
+    })
+    .clone()
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("autoq_serve_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Persist cheap (3-step) trained params so daemon workers load identical
+/// bytes instead of auto-pretraining 300 steps mid-test.
+fn seed_params(dir: &Path) {
+    let mut coord = Coordinator::open_with(dir, Some(BackendKind::Reference)).unwrap();
+    coord.run(&JobSpec::pretrain("cif10").steps(3).build().unwrap()).unwrap();
+}
+
+struct Daemon {
+    addr: String,
+    queue: Arc<JobQueue>,
+    thread: JoinHandle<anyhow::Result<()>>,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+}
+
+/// Bind on port 0 and run an in-process daemon on `backend`.
+fn start_daemon(dir: &Path, workers: usize, backend: BackendKind, shard_workers: Option<usize>) -> Daemon {
+    let cfg = ServeConfig {
+        dir: dir.to_path_buf(),
+        backend: Some(backend),
+        threads: Some(Parallelism::new(2)),
+        shard_workers,
+        workers,
+    };
+    let server = Server::bind("127.0.0.1:0", cfg).unwrap();
+    let addr = server.local_addr().to_string();
+    let queue = server.queue();
+    let stop = server.stop_flag();
+    let thread = std::thread::spawn(move || server.run());
+    Daemon { addr, queue, thread, stop }
+}
+
+fn quick_eval() -> JobSpec {
+    JobSpec::eval("cif10").batches(1).build().unwrap()
+}
+
+fn quick_search(seed: u64) -> JobSpec {
+    JobSpec::search("cif10")
+        .mode(Mode::Quant)
+        .protocol(Protocol::resource_constrained(5.0))
+        .granularity(Granularity::Network(5))
+        .episodes(2)
+        .warmup(1)
+        .eval_batches(1)
+        .seed(seed)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn e2e_submit_status_result_over_the_socket() {
+    let dir = temp_dir("e2e");
+    seed_params(&dir);
+    let daemon = start_daemon(&dir, 1, BackendKind::Reference, None);
+    let mut client = DaemonClient::connect(&daemon.addr).unwrap();
+
+    assert_eq!(client.ping().unwrap(), std::process::id());
+
+    let spec = quick_eval();
+    let handle = client.submit(&spec).unwrap();
+    assert_eq!(handle, "job-0");
+
+    // Status for the whole queue names the job with its spec id.
+    let status = client.status(None).unwrap();
+    let rows = status.req("jobs").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 1);
+    assert_eq!(rows[0].req("id").unwrap().as_str(), Some(spec.id().as_str()));
+
+    // Blocking result: terminal state, verbatim report, cache counters in
+    // the envelope (and meaningless zeros are fine — it's an fp32 eval).
+    let row = client.result(&handle, true).unwrap();
+    assert_eq!(row.req("state").unwrap().as_str(), Some("done"));
+    let report = row.req("report").unwrap();
+    assert_eq!(report.req("id").unwrap().as_str(), Some(spec.id().as_str()));
+    assert!(report.get("eval").is_some(), "eval job must return an eval outcome");
+    assert!(row.get("cache").is_some(), "cache counters ride the envelope");
+    assert!(report.get("cache").is_none(), "…and never the report");
+
+    // Unknown jobs are application errors, not dropped connections.
+    assert!(client.result("job-99", false).is_err());
+    assert!(client.status(Some("nope")).is_err());
+    // The same connection keeps serving after those errors.
+    assert_eq!(client.ping().unwrap(), std::process::id());
+
+    client.shutdown(true).unwrap();
+    daemon.thread.join().unwrap().unwrap();
+    assert_eq!(daemon.queue.load(), (0, 0, 1));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn concurrent_submissions_all_complete_with_shared_results() {
+    let dir = temp_dir("conc");
+    seed_params(&dir);
+    // Two scheduler workers, three jobs: at least one pair runs
+    // concurrently, the third queues behind the budget.
+    let daemon = start_daemon(&dir, 2, BackendKind::Reference, None);
+    let mut client = DaemonClient::connect(&daemon.addr).unwrap();
+
+    let specs = [quick_search(7), quick_search(7), quick_eval()];
+    let handles: Vec<String> =
+        specs.iter().map(|s| client.submit(s).unwrap()).collect();
+    let mut reports = Vec::new();
+    for handle in &handles {
+        let row = client.result(handle, true).unwrap();
+        assert_eq!(row.req("state").unwrap().as_str(), Some("done"), "{handle}");
+        reports.push(row.req("report").unwrap().clone());
+    }
+    // Identical specs (same seed) must produce identical reports, whether
+    // or not their evals were served from the shared cache.
+    let zero_secs = |j: &Json| {
+        let mut j = j.clone();
+        if let Json::Obj(m) = &mut j {
+            m.insert("secs".to_string(), Json::Num(0.0));
+        }
+        j.to_string()
+    };
+    assert_eq!(zero_secs(&reports[0]), zero_secs(&reports[1]));
+
+    client.shutdown(true).unwrap();
+    daemon.thread.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Framing corruption drops that connection only; application-level junk
+/// answers an error frame on a live connection.  Either way the daemon
+/// keeps serving everyone else.
+#[test]
+fn malformed_frames_do_not_kill_the_daemon() {
+    let dir = temp_dir("junk");
+    seed_params(&dir);
+    let daemon = start_daemon(&dir, 1, BackendKind::Reference, None);
+
+    // 1. Oversized length prefix: the daemon rejects the frame and drops
+    //    the connection (our read sees EOF).
+    {
+        let mut s = TcpStream::connect(&daemon.addr).unwrap();
+        s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        s.flush().unwrap();
+        let mut buf = [0u8; 16];
+        let n = s.read(&mut buf).unwrap_or(0);
+        assert_eq!(n, 0, "corrupt framing must close the connection");
+    }
+    // 2. Valid frame, junk JSON body: same — the frame codec fails, the
+    //    connection dies, the daemon survives.
+    {
+        let mut s = TcpStream::connect(&daemon.addr).unwrap();
+        let junk = b"{not json!";
+        s.write_all(&(junk.len() as u32).to_le_bytes()).unwrap();
+        s.write_all(junk).unwrap();
+        s.flush().unwrap();
+        let mut buf = [0u8; 16];
+        let n = s.read(&mut buf).unwrap_or(0);
+        assert_eq!(n, 0, "junk JSON must close the connection");
+    }
+    // 3. Well-formed JSON, unknown op: an application error — `{ok:false}`
+    //    comes back and the SAME connection keeps working.
+    {
+        let mut client = DaemonClient::connect(&daemon.addr).unwrap();
+        // (client helpers only send valid ops; drive the wire by hand)
+        let mut s = TcpStream::connect(&daemon.addr).unwrap();
+        let req = br#"{"op":"frobnicate"}"#;
+        s.write_all(&(req.len() as u32).to_le_bytes()).unwrap();
+        s.write_all(req).unwrap();
+        let mut len = [0u8; 4];
+        s.read_exact(&mut len).unwrap();
+        let mut body = vec![0u8; u32::from_le_bytes(len) as usize];
+        s.read_exact(&mut body).unwrap();
+        let reply = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(reply.req("ok").unwrap().as_bool(), Some(false));
+        // Invalid spec (episodes == 0): also an app error, connection lives.
+        assert!(client.ping().is_ok());
+    }
+    // 4. After all that abuse, the daemon still runs jobs end to end.
+    let mut client = DaemonClient::connect(&daemon.addr).unwrap();
+    let handle = client.submit(&quick_eval()).unwrap();
+    let row = client.result(&handle, true).unwrap();
+    assert_eq!(row.req("state").unwrap().as_str(), Some("done"));
+
+    client.shutdown(true).unwrap();
+    daemon.thread.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Subscribe streams started/episode/finished events; a late subscriber
+/// gets the terminal event replayed.
+#[test]
+fn subscribe_streams_job_events() {
+    let dir = temp_dir("events");
+    seed_params(&dir);
+    let daemon = start_daemon(&dir, 1, BackendKind::Reference, None);
+    let mut client = DaemonClient::connect(&daemon.addr).unwrap();
+    let handle = client.submit(&quick_search(3)).unwrap();
+
+    // Raw subscribe on a second connection.
+    let mut s = TcpStream::connect(&daemon.addr).unwrap();
+    let req = format!(r#"{{"job":"{handle}","op":"subscribe"}}"#);
+    s.write_all(&(req.len() as u32).to_le_bytes()).unwrap();
+    s.write_all(req.as_bytes()).unwrap();
+    let mut read_json = |s: &mut TcpStream| {
+        let mut len = [0u8; 4];
+        s.read_exact(&mut len).unwrap();
+        let mut body = vec![0u8; u32::from_le_bytes(len) as usize];
+        s.read_exact(&mut body).unwrap();
+        Json::parse(std::str::from_utf8(&body).unwrap()).unwrap()
+    };
+    let ack = read_json(&mut s);
+    assert_eq!(ack.req("ok").unwrap().as_bool(), Some(true));
+    let mut kinds = Vec::new();
+    loop {
+        let ev = read_json(&mut s);
+        let kind = ev.req("event").unwrap().as_str().unwrap().to_string();
+        let done = kind == "finished";
+        kinds.push(kind);
+        if done {
+            assert_eq!(ev.req("ok").unwrap().as_bool(), Some(true));
+            assert!(ev.get("report").is_some());
+            assert!(ev.get("cache").is_some());
+            break;
+        }
+    }
+    assert!(kinds.contains(&"episode".to_string()), "events: {kinds:?}");
+    assert_eq!(kinds.last().map(String::as_str), Some("finished"));
+
+    // Late subscriber: terminal event replays immediately.
+    let mut s2 = TcpStream::connect(&daemon.addr).unwrap();
+    s2.write_all(&(req.len() as u32).to_le_bytes()).unwrap();
+    s2.write_all(req.as_bytes()).unwrap();
+    let ack = read_json(&mut s2);
+    assert_eq!(ack.req("ok").unwrap().as_bool(), Some(true));
+    let ev = read_json(&mut s2);
+    assert_eq!(ev.req("event").unwrap().as_str(), Some("finished"));
+
+    client.shutdown(true).unwrap();
+    daemon.thread.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The acceptance contract: one daemon, the same sweep grid twice — the
+/// repeat is served with >0 cache hits, and every report (both runs) is
+/// byte-identical to a daemon-free `Sweep::run` of the same grid.
+#[test]
+fn sweep_twice_against_one_daemon_hits_and_stays_byte_identical() {
+    let dir = temp_dir("sweep");
+    seed_params(&dir);
+
+    let grid = |out: &str| Sweep {
+        protocols: vec![Protocol::resource_constrained(5.0), Protocol::accuracy_guaranteed()],
+        granularities: vec![Granularity::Network(4)],
+        episodes: 4,
+        warmup: 1,
+        eval_batches: 2,
+        base_seed: 21,
+        workers: 2,
+        out_dir: Some(dir.join(out)),
+        backend: Some(BackendKind::Reference),
+        threads: Some(Parallelism::new(1)),
+        ..Sweep::default()
+    };
+
+    // Reports as id → secs-zeroed JSON bytes.
+    let canon = |out: &str| -> Vec<(String, String)> {
+        let mut rows: Vec<(String, String)> = std::fs::read_dir(dir.join(out))
+            .unwrap()
+            .map(|e| {
+                let path = e.unwrap().path();
+                let mut j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+                if let Json::Obj(m) = &mut j {
+                    m.insert("secs".to_string(), Json::Num(0.0));
+                }
+                (path.file_name().unwrap().to_string_lossy().into_owned(), j.to_string())
+            })
+            .collect();
+        rows.sort();
+        rows
+    };
+
+    // Daemon-free baseline.
+    grid("local").run(&dir).unwrap();
+    let want = canon("local");
+    assert_eq!(want.len(), 2, "grid must expand to two cells");
+
+    // One daemon, same grid twice.
+    let daemon = start_daemon(&dir, 2, BackendKind::Reference, None);
+    let r1 = run_sweep_via_daemon(&daemon.addr, &grid("warm1")).unwrap();
+    assert!(r1.failures.is_empty(), "{:?}", r1.failures);
+    let r2 = run_sweep_via_daemon(&daemon.addr, &grid("warm2")).unwrap();
+    assert!(r2.failures.is_empty(), "{:?}", r2.failures);
+
+    assert_eq!(canon("warm1"), want, "first daemon sweep diverged from local");
+    assert_eq!(canon("warm2"), want, "second daemon sweep diverged from local");
+    assert!(
+        r2.cache.0 > 0,
+        "second sweep must be served with cache hits (got {:?})",
+        r2.cache
+    );
+    assert_eq!(r2.cache.1, 0, "a byte-identical repeat must add no misses");
+
+    let mut client = DaemonClient::connect(&daemon.addr).unwrap();
+    client.shutdown(true).unwrap();
+    daemon.thread.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The signal path minus the signal: tripping the server's stop flag (what
+/// SIGINT/SIGTERM do through `util::signal`) stops the accept loop and
+/// shuts the queue down without a client having to ask.
+#[test]
+fn stop_flag_shuts_the_daemon_down() {
+    let dir = temp_dir("stop");
+    seed_params(&dir);
+    let daemon = start_daemon(&dir, 1, BackendKind::Reference, None);
+    let mut client = DaemonClient::connect(&daemon.addr).unwrap();
+    assert!(client.ping().is_ok());
+
+    daemon.stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    daemon.thread.join().unwrap().unwrap();
+    assert!(daemon.queue.shutting_down());
+    assert!(
+        daemon.queue.submit(quick_eval()).is_err(),
+        "submissions must be rejected after a signal shutdown"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The real signal path, end to end: spawn the `autoq serve` binary, talk
+/// to it over its advertised address, SIGTERM it, and require a clean
+/// (code 0) exit — the satellite contract for Ctrl-C'd daemons.
+#[cfg(unix)]
+#[test]
+fn serve_binary_exits_cleanly_on_sigterm() {
+    let exe = worker_exe();
+    let dir = temp_dir("sig");
+    seed_params(&dir);
+    let mut child = std::process::Command::new(&exe)
+        .args(["serve", "--listen", "127.0.0.1:0", "--workers", "1", "--backend", "reference"])
+        .env("AUTOQ_ARTIFACTS", &dir)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    // The first stdout line advertises the resolved port-0 address.
+    let mut line = String::new();
+    BufReader::new(child.stdout.take().unwrap()).read_line(&mut line).unwrap();
+    let addr = line.trim().rsplit(' ').next().unwrap_or("").to_string();
+    assert!(line.contains("listening on"), "unexpected banner: {line:?}");
+
+    let mut client = DaemonClient::connect(&addr).unwrap();
+    assert_eq!(client.ping().unwrap(), child.id());
+    let handle = client.submit(&quick_eval()).unwrap();
+    let row = client.result(&handle, true).unwrap();
+    assert_eq!(row.req("state").unwrap().as_str(), Some("done"));
+
+    let killed = std::process::Command::new("kill")
+        .args(["-TERM", &child.id().to_string()])
+        .status()
+        .unwrap();
+    assert!(killed.success());
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let status = loop {
+        if let Some(st) = child.try_wait().unwrap() {
+            break st;
+        }
+        assert!(Instant::now() < deadline, "daemon did not exit after SIGTERM");
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert!(status.success(), "SIGTERM must drain and exit 0, got {status:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The no-orphan contract on the shard backend: a daemon whose workers own
+/// shard subprocess pools must leave zero `autoq worker` processes behind
+/// after a drain shutdown.
+#[test]
+fn shard_daemon_drains_without_orphaning_workers() {
+    let exe = worker_exe();
+    let dir = temp_dir("shard");
+    seed_params(&dir);
+    let daemon = start_daemon(&dir, 1, BackendKind::Shard, Some(2));
+    let mut client = DaemonClient::connect(&daemon.addr).unwrap();
+
+    let handle = client.submit(&quick_eval()).unwrap();
+    let row = client.result(&handle, true).unwrap();
+    assert_eq!(row.req("state").unwrap().as_str(), Some("done"));
+
+    client.shutdown(true).unwrap();
+    daemon.thread.join().unwrap().unwrap();
+
+    // Every shard subprocess must be gone once run() returns (their pipes
+    // closed on Coordinator drop; give slow exits a moment).
+    #[cfg(target_os = "linux")]
+    {
+        let exe_name = exe.to_string_lossy().into_owned();
+        let orphans = |deadline: Instant| -> Vec<String> {
+            loop {
+                let mut found = Vec::new();
+                for entry in std::fs::read_dir("/proc").unwrap().flatten() {
+                    let pid = entry.file_name().to_string_lossy().into_owned();
+                    if !pid.chars().all(|c| c.is_ascii_digit()) {
+                        continue;
+                    }
+                    let Ok(cmd) = std::fs::read(format!("/proc/{pid}/cmdline")) else {
+                        continue;
+                    };
+                    let cmd = String::from_utf8_lossy(&cmd).replace('\0', " ");
+                    let Ok(stat) = std::fs::read_to_string(format!("/proc/{pid}/stat")) else {
+                        continue;
+                    };
+                    let ppid_ours = stat
+                        .split_whitespace()
+                        .nth(3)
+                        .map(|p| p == std::process::id().to_string())
+                        .unwrap_or(false);
+                    if ppid_ours && cmd.contains(&exe_name) && cmd.contains(" worker") {
+                        found.push(format!("{pid}: {cmd}"));
+                    }
+                }
+                if found.is_empty() || Instant::now() > deadline {
+                    return found;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        };
+        let left = orphans(Instant::now() + Duration::from_secs(5));
+        assert!(left.is_empty(), "orphaned shard workers: {left:?}");
+    }
+    let _ = exe;
+    std::fs::remove_dir_all(&dir).ok();
+}
