@@ -82,6 +82,14 @@ pub struct Sweep {
     /// the total each shard pool splits across its processes, so the full
     /// grid runs `cells × processes × threads` under one machine budget.
     pub shard_workers: Option<usize>,
+    /// Remote `autoq worker --listen` hosts for the shard backend
+    /// (`None` = `$AUTOQ_SHARD_HOSTS`).  Resolved once up front, then
+    /// round-robined into **disjoint** per-worker buckets — a listening
+    /// worker serves one session at a time, so sweep workers must not
+    /// share hosts.  The serial pre-warm may use the full list.
+    pub shard_hosts: Option<Vec<String>>,
+    /// Shard wire encoding (`None` = `$AUTOQ_SHARD_ENCODING`, else binary).
+    pub shard_encoding: Option<crate::runtime::shard::Encoding>,
 }
 
 impl Default for Sweep {
@@ -102,6 +110,8 @@ impl Default for Sweep {
             backend: None,
             threads: None,
             shard_workers: None,
+            shard_hosts: None,
+            shard_encoding: None,
         }
     }
 }
@@ -201,6 +211,10 @@ impl Sweep {
 
         let workers = self.workers.max(1).min(jobs.len());
 
+        // Resolve the remote host list once so the env is read exactly one
+        // time, then deal disjoint buckets to the workers below.
+        let shard_hosts = crate::runtime::shard::resolve_hosts(self.shard_hosts.clone())?;
+
         // Pre-warm trained params serially so workers never race a pretrain.
         // Only worth opening a runtime when some model's params are missing.
         let models: BTreeSet<&str> = jobs.iter().map(|j| j.model.as_str()).collect();
@@ -210,7 +224,13 @@ impl Sweep {
             .collect();
         if !missing.is_empty() {
             let warm = prewarm_budget(self.threads, workers)?;
-            let opts = RuntimeOpts { threads: Some(warm), shard_workers: self.shard_workers };
+            // The pre-warm runs alone, so it may dial the whole fleet.
+            let opts = RuntimeOpts {
+                threads: Some(warm),
+                shard_workers: self.shard_workers,
+                shard_hosts: Some(shard_hosts.clone()),
+                shard_encoding: self.shard_encoding,
+            };
             let mut coord = Coordinator::open_full(dir, self.backend, opts)?;
             for model in missing {
                 coord.ensure_pretrained(model)?;
@@ -227,15 +247,24 @@ impl Sweep {
             inner.get()
         );
         let next = AtomicUsize::new(0);
+        // Disjoint host buckets: worker w may only dial host_parts[w]
+        // (possibly empty — its shard pool then falls back to local
+        // subprocesses), so two sweep workers never serialize behind one
+        // single-session listener.
+        let host_parts = crate::runtime::shard::partition_hosts(&shard_hosts, workers);
         let (tx, rx) = mpsc::channel::<(usize, Result<JobReport, String>)>();
         std::thread::scope(|s| {
-            for _ in 0..workers {
+            for w in 0..workers {
                 let tx = tx.clone();
                 let next = &next;
                 let jobs = &jobs;
                 let backend = self.backend;
-                let opts =
-                    RuntimeOpts { threads: Some(inner), shard_workers: self.shard_workers };
+                let opts = RuntimeOpts {
+                    threads: Some(inner),
+                    shard_workers: self.shard_workers,
+                    shard_hosts: Some(host_parts[w].clone()),
+                    shard_encoding: self.shard_encoding,
+                };
                 s.spawn(move || {
                     let mut coord = match Coordinator::open_full(dir, backend, opts) {
                         Ok(c) => c,

@@ -37,6 +37,14 @@ const THREADS_HELP: &str =
 const SHARD_WORKERS_HELP: &str =
     "worker processes for --backend shard (default: $AUTOQ_SHARD_WORKERS, else 2)";
 
+/// Shared `--shard-hosts` option help (empty = env, no hosts by default).
+const SHARD_HOSTS_HELP: &str = "comma-separated host:port list of remote `autoq worker --listen` \
+     peers for --backend shard (default: $AUTOQ_SHARD_HOSTS)";
+
+/// Shared `--shard-encoding` option help (empty/auto = env, else binary).
+const SHARD_ENCODING_HELP: &str =
+    "shard wire encoding json|binary (default: $AUTOQ_SHARD_ENCODING, else binary)";
+
 /// Parse the shared `--backend` option (empty string = auto-resolve).
 fn backend_arg(a: &Args) -> anyhow::Result<Option<BackendKind>> {
     BackendKind::parse_opt(&a.get("backend"))
@@ -52,9 +60,24 @@ fn shard_workers_arg(a: &Args) -> anyhow::Result<Option<usize>> {
     shard::parse_workers_opt(&a.get("shard-workers"))
 }
 
-/// The shared runtime knobs behind `--threads`/`--shard-workers`.
+/// Parse the shared `--shard-hosts` option (empty = env-resolve).
+fn shard_hosts_arg(a: &Args) -> anyhow::Result<Option<Vec<String>>> {
+    shard::parse_hosts_opt(&a.get("shard-hosts"))
+}
+
+/// Parse the shared `--shard-encoding` option (empty/auto = env-resolve).
+fn shard_encoding_arg(a: &Args) -> anyhow::Result<Option<shard::Encoding>> {
+    shard::Encoding::parse_opt(&a.get("shard-encoding"))
+}
+
+/// The shared runtime knobs behind `--threads`/`--shard-*`.
 fn runtime_opts(a: &Args) -> anyhow::Result<RuntimeOpts> {
-    Ok(RuntimeOpts { threads: threads_arg(a)?, shard_workers: shard_workers_arg(a)? })
+    Ok(RuntimeOpts {
+        threads: threads_arg(a)?,
+        shard_workers: shard_workers_arg(a)?,
+        shard_hosts: shard_hosts_arg(a)?,
+        shard_encoding: shard_encoding_arg(a)?,
+    })
 }
 
 /// Open the default-artifact-dir coordinator honouring `--backend`,
@@ -151,6 +174,14 @@ results byte-identical to `reference` at every worker count.  Default:
 pjrt iff compiled in and artifacts exist, else reference (never shard —
 multi-process fan-out is an explicit opt-in).
 
+The shard pool also scales across machines: start `autoq worker --listen
+HOST:PORT` on each remote box and point any command at the fleet with
+--shard-hosts h1:p,h2:p (or $AUTOQ_SHARD_HOSTS); remote slots compose
+with local --shard-workers slots in one pool (with hosts given, the local
+count defaults to 0).  --shard-encoding {json,binary} (or
+$AUTOQ_SHARD_ENCODING; default binary) picks the wire encoding — results
+stay byte-identical across transports and encodings.
+
 Every command also takes --threads N (or $AUTOQ_THREADS; default all
 cores): the reference backend fans independent eval batches across N
 worker threads with byte-identical results at any N; for `shard`, N is
@@ -176,6 +207,8 @@ fn cmd_pretrain(rest: &[String]) -> anyhow::Result<()> {
         .opt("backend", "", BACKEND_HELP)
         .opt("threads", "", THREADS_HELP)
         .opt("shard-workers", "", SHARD_WORKERS_HELP)
+        .opt("shard-hosts", "", SHARD_HOSTS_HELP)
+        .opt("shard-encoding", "", SHARD_ENCODING_HELP)
         .parse(rest)?;
     let model = a.get("model");
     let spec = JobSpec::pretrain(&model)
@@ -208,6 +241,8 @@ fn cmd_search(rest: &[String]) -> anyhow::Result<()> {
         .opt("backend", "", BACKEND_HELP)
         .opt("threads", "", THREADS_HELP)
         .opt("shard-workers", "", SHARD_WORKERS_HELP)
+        .opt("shard-hosts", "", SHARD_HOSTS_HELP)
+        .opt("shard-encoding", "", SHARD_ENCODING_HELP)
         .flag("paper-scale", "use the paper's 400-episode schedule")
         .flag("no-relabel", "disable HIRO goal relabeling (ablation)")
         .parse(rest)?;
@@ -266,6 +301,8 @@ fn cmd_sweep(rest: &[String]) -> anyhow::Result<()> {
         .opt("backend", "", BACKEND_HELP)
         .opt("threads", "", "eval threads per worker (default: split cores across workers)")
         .opt("shard-workers", "", SHARD_WORKERS_HELP)
+        .opt("shard-hosts", "", SHARD_HOSTS_HELP)
+        .opt("shard-encoding", "", SHARD_ENCODING_HELP)
         .flag("paper-scale", "use the paper's 400-episode schedule")
         .flag("no-relabel", "disable HIRO goal relabeling (ablation)")
         .parse(rest)?;
@@ -292,6 +329,8 @@ fn cmd_sweep(rest: &[String]) -> anyhow::Result<()> {
         backend: backend_arg(&a)?,
         threads: threads_arg(&a)?,
         shard_workers: shard_workers_arg(&a)?,
+        shard_hosts: shard_hosts_arg(&a)?,
+        shard_encoding: shard_encoding_arg(&a)?,
     };
     let daemon = a.get("daemon");
     if !daemon.is_empty() {
@@ -358,6 +397,8 @@ fn cmd_finetune(rest: &[String]) -> anyhow::Result<()> {
         .opt("backend", "", BACKEND_HELP)
         .opt("threads", "", THREADS_HELP)
         .opt("shard-workers", "", SHARD_WORKERS_HELP)
+        .opt("shard-hosts", "", SHARD_HOSTS_HELP)
+        .opt("shard-encoding", "", SHARD_ENCODING_HELP)
         .parse(rest)?;
     let model = a.get("model");
     let cfgf = a.get("config");
@@ -386,6 +427,8 @@ fn cmd_eval(rest: &[String]) -> anyhow::Result<()> {
         .opt("backend", "", BACKEND_HELP)
         .opt("threads", "", THREADS_HELP)
         .opt("shard-workers", "", SHARD_WORKERS_HELP)
+        .opt("shard-hosts", "", SHARD_HOSTS_HELP)
+        .opt("shard-encoding", "", SHARD_ENCODING_HELP)
         .parse(rest)?;
     let model = a.get("model");
     let mut builder = JobSpec::eval(&model).batches(a.get_usize("batches")?);
@@ -409,6 +452,8 @@ fn cmd_sim(rest: &[String]) -> anyhow::Result<()> {
         .opt("backend", "", BACKEND_HELP)
         .opt("threads", "", THREADS_HELP)
         .opt("shard-workers", "", SHARD_WORKERS_HELP)
+        .opt("shard-hosts", "", SHARD_HOSTS_HELP)
+        .opt("shard-encoding", "", SHARD_ENCODING_HELP)
         .parse(rest)?;
     let model = a.get("model");
     let mut builder = JobSpec::sim(&model);
@@ -438,16 +483,23 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         .opt("backend", "", BACKEND_HELP)
         .opt("threads", "", "eval threads per worker (default: split cores across workers)")
         .opt("shard-workers", "", SHARD_WORKERS_HELP)
+        .opt("shard-hosts", "", SHARD_HOSTS_HELP)
+        .opt("shard-encoding", "", SHARD_ENCODING_HELP)
+        .opt("idle-secs", "600", "drop client connections silent this long (0 = never)")
         .parse(rest)?;
     // SIGINT/SIGTERM flip a flag the accept loop polls: in-flight jobs
     // drain, shard subprocesses get their exit frames, then we return.
     autoq::util::signal::install_shutdown_flag();
+    let idle = a.get_usize("idle-secs")?;
     let cfg = ServeConfig {
         dir: Coordinator::default_dir(),
         backend: backend_arg(&a)?,
         threads: threads_arg(&a)?,
         shard_workers: shard_workers_arg(&a)?,
+        shard_hosts: shard_hosts_arg(&a)?,
+        shard_encoding: shard_encoding_arg(&a)?,
         workers: a.get_usize("workers")?,
+        idle_timeout: (idle > 0).then(|| std::time::Duration::from_secs(idle as u64)),
     };
     let server = Server::bind(&a.get("listen"), cfg)?;
     // Scripts and tests parse this line for the resolved port-0 address.
@@ -593,20 +645,38 @@ fn cmd_status(rest: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Hidden `autoq worker` entry point: serve shard-protocol frames over
-/// stdio until EOF/exit.  `--threads` is this process's inner eval
-/// budget (the shard client passes its per-worker share of the total).
+/// The `autoq worker` entry point.  Without `--listen` (the hidden
+/// subprocess mode) it serves shard-protocol frames over stdio until
+/// EOF/exit; with `--listen ADDR` it accepts TCP sessions — one at a
+/// time — so remote `--shard-hosts` clients can dial in.  `--threads` is
+/// this process's inner eval budget (the local shard client passes its
+/// per-worker share of the total; a listening worker sizes itself).
 fn cmd_worker(rest: &[String]) -> anyhow::Result<()> {
     let a = Args::new("worker")
         .opt("threads", "", THREADS_HELP)
+        .opt("listen", "", "serve the shard protocol over TCP at host:port (port 0 = free port)")
+        .opt("idle-secs", "600", "drop TCP sessions silent this long (0 = never)")
         .parse(rest)?;
-    // A Ctrl-C in the leader's terminal reaches the whole process group;
-    // workers must outlive the signal so in-flight exec frames finish and
-    // the leader's drain can complete.  Lifecycle stays EOF/exit-frame
-    // driven (`ShardClient::Drop`), so ignoring the signal cannot orphan
-    // a worker — the pipe closing always takes it down.
-    autoq::util::signal::ignore_termination();
-    autoq::runtime::shard::worker::run(threads_arg(&a)?)
+    let listen = a.get("listen");
+    if listen.is_empty() {
+        // A Ctrl-C in the leader's terminal reaches the whole process
+        // group; stdio workers must outlive the signal so in-flight exec
+        // frames finish and the leader's drain can complete.  Lifecycle
+        // stays EOF/exit-frame driven (`ShardClient::Drop`), so ignoring
+        // the signal cannot orphan a worker — the pipe closing always
+        // takes it down.
+        autoq::util::signal::ignore_termination();
+        return autoq::runtime::shard::worker::run(threads_arg(&a)?);
+    }
+    // A listening worker has no parent pipe to take it down, so SIGTERM
+    // must actually stop the accept loop (same flag the daemon polls).
+    autoq::util::signal::install_shutdown_flag();
+    let idle = a.get_usize("idle-secs")?;
+    autoq::runtime::shard::worker::run_listen(
+        &listen,
+        threads_arg(&a)?,
+        (idle > 0).then(|| std::time::Duration::from_secs(idle as u64)),
+    )
 }
 
 fn cmd_stats(rest: &[String]) -> anyhow::Result<()> {
@@ -614,6 +684,8 @@ fn cmd_stats(rest: &[String]) -> anyhow::Result<()> {
         .opt("backend", "", BACKEND_HELP)
         .opt("threads", "", THREADS_HELP)
         .opt("shard-workers", "", SHARD_WORKERS_HELP)
+        .opt("shard-hosts", "", SHARD_HOSTS_HELP)
+        .opt("shard-encoding", "", SHARD_ENCODING_HELP)
         .parse(rest)?;
     let mut coord = open_coord(&a)?;
     println!("{}", coord.runtime().stats_report());

@@ -61,6 +61,13 @@ pub struct ReproCtx {
     /// Worker processes per fine-tune worker when `backend` is the shard
     /// backend (`--shard-workers`); ignored otherwise.
     pub shard_workers: Option<usize>,
+    /// Remote `autoq worker --listen` hosts for the shard backend
+    /// (`--shard-hosts`; `None` = `$AUTOQ_SHARD_HOSTS`).  Dealt out as
+    /// disjoint buckets across the fine-tune workers, the `Sweep` rule.
+    pub shard_hosts: Option<Vec<String>>,
+    /// Shard wire encoding (`--shard-encoding`; `None` =
+    /// `$AUTOQ_SHARD_ENCODING`, else binary).
+    pub shard_encoding: Option<crate::runtime::shard::Encoding>,
 }
 
 impl Default for ReproCtx {
@@ -77,6 +84,8 @@ impl Default for ReproCtx {
             backend: None,
             threads: None,
             shard_workers: None,
+            shard_hosts: None,
+            shard_encoding: None,
         }
     }
 }
@@ -204,11 +213,25 @@ pub fn finetuned_accuracies(
     );
     let pool = WorkerPool::new(workers);
     let backend = ctx.backend;
-    let opts =
-        crate::runtime::RuntimeOpts { threads: Some(inner), shard_workers: ctx.shard_workers };
+    // Disjoint remote-host buckets per worker (a listening worker serves
+    // one session at a time).  The pool's init closure carries no worker
+    // index, so buckets are dealt first-come — disjointness is what
+    // matters, not which worker gets which bucket.
+    let hosts = crate::runtime::shard::resolve_hosts(ctx.shard_hosts.clone())?;
+    let host_parts = crate::runtime::shard::partition_hosts(&hosts, workers);
+    let next_bucket = std::sync::atomic::AtomicUsize::new(0);
     let results: Vec<anyhow::Result<f64>> = pool.run_indexed_with(
         cells.len(),
-        || Coordinator::open_full(dir, backend, opts),
+        || {
+            let b = next_bucket.fetch_add(1, std::sync::atomic::Ordering::Relaxed) % workers;
+            let opts = crate::runtime::RuntimeOpts {
+                threads: Some(inner),
+                shard_workers: ctx.shard_workers,
+                shard_hosts: Some(host_parts[b].clone()),
+                shard_encoding: ctx.shard_encoding,
+            };
+            Coordinator::open_full(dir, backend, opts)
+        },
         |coord, i| match coord {
             Ok(c) => finetuned_accuracy(c, &cells[i].0, &cells[i].1, ctx),
             Err(e) => Err(anyhow::anyhow!("fine-tune worker failed to open runtime: {e:#}")),

@@ -28,12 +28,24 @@ pub fn cmd_repro(rest: &[String]) -> anyhow::Result<()> {
             "",
             "worker processes for --backend shard (default: $AUTOQ_SHARD_WORKERS, else 2)",
         )
+        .opt(
+            "shard-hosts",
+            "",
+            "remote worker host:port list for --backend shard (default: $AUTOQ_SHARD_HOSTS)",
+        )
+        .opt(
+            "shard-encoding",
+            "",
+            "shard wire encoding json|binary (default: $AUTOQ_SHARD_ENCODING, else binary)",
+        )
         .flag("fresh", "ignore cached searched configs")
         .flag("paper-scale", "paper's 400-episode schedule")
         .parse(rest)?;
     let backend = crate::runtime::BackendKind::parse_opt(&a.get("backend"))?;
     let threads = crate::runtime::Parallelism::parse_opt(&a.get("threads"))?;
     let shard_workers = crate::runtime::shard::parse_workers_opt(&a.get("shard-workers"))?;
+    let shard_hosts = crate::runtime::shard::parse_hosts_opt(&a.get("shard-hosts"))?;
+    let shard_encoding = crate::runtime::shard::Encoding::parse_opt(&a.get("shard-encoding"))?;
     let ctx = ReproCtx {
         episodes: a.get_usize("episodes")?,
         warmup: a.get_usize("warmup")?,
@@ -46,6 +58,8 @@ pub fn cmd_repro(rest: &[String]) -> anyhow::Result<()> {
         backend,
         threads,
         shard_workers,
+        shard_hosts: shard_hosts.clone(),
+        shard_encoding,
     };
     let models: Vec<String> = a.get("models").split(',').map(str::to_string).collect();
     let what = a.positional.first().cloned().unwrap_or_else(|| "help".into());
@@ -53,7 +67,7 @@ pub fn cmd_repro(rest: &[String]) -> anyhow::Result<()> {
     let mut coord = crate::coordinator::Coordinator::open_full(
         &crate::coordinator::Coordinator::default_dir(),
         backend,
-        crate::runtime::RuntimeOpts { threads, shard_workers },
+        crate::runtime::RuntimeOpts { threads, shard_workers, shard_hosts, shard_encoding },
     )?;
     match what.as_str() {
         "fig1" => fig1(),

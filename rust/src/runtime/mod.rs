@@ -40,15 +40,25 @@ pub struct ExecStats {
 /// Optional runtime knobs beyond the backend choice.  Every field
 /// auto-resolves from the environment when `None`, so
 /// `RuntimeOpts::default()` reproduces the historical behaviour exactly.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct RuntimeOpts {
     /// Worker threads for `exec_batch` fan-out (`--threads` /
     /// `$AUTOQ_THREADS`, else all cores).  For the shard backend this is
-    /// the **total** budget across all worker processes.
+    /// the **total** budget across the local worker processes.
     pub threads: Option<Parallelism>,
-    /// Worker processes for the shard backend (`--shard-workers` /
-    /// `$AUTOQ_SHARD_WORKERS`, else 2).  Ignored by other backends.
+    /// Local worker processes for the shard backend (`--shard-workers` /
+    /// `$AUTOQ_SHARD_WORKERS`, else 2 — or 0 once hosts are given).
+    /// Ignored by other backends.
     pub shard_workers: Option<usize>,
+    /// Remote `autoq worker --listen` peers for the shard backend
+    /// (`--shard-hosts` / `$AUTOQ_SHARD_HOSTS`).  `Some(vec![])` is an
+    /// explicit "no hosts" that beats the env — coordinators partitioning
+    /// a fleet across workers pass each worker its own (possibly empty)
+    /// bucket this way.  Ignored by other backends.
+    pub shard_hosts: Option<Vec<String>>,
+    /// Wire encoding the shard client requests at handshake
+    /// (`--shard-encoding` / `$AUTOQ_SHARD_ENCODING`, else binary).
+    pub shard_encoding: Option<shard::Encoding>,
 }
 
 impl RuntimeOpts {
@@ -112,7 +122,11 @@ impl Runtime {
             // Shard workers interpret the same builtin zoo the reference
             // backend does, so the parent shares its manifest.
             BackendKind::Shard => (
-                Box::new(shard::ShardBackend::new(shard::resolve_workers(opts.shard_workers)?)?),
+                Box::new(shard::ShardBackend::with_opts(&shard::ShardOpts {
+                    workers: opts.shard_workers,
+                    hosts: opts.shard_hosts.clone(),
+                    encoding: opts.shard_encoding,
+                })?),
                 reference::builtin_manifest(),
             ),
             #[cfg(feature = "pjrt")]

@@ -1,0 +1,776 @@
+//! Compact binary body encoding for the shard protocol (lib0-style).
+//!
+//! The JSON codec in [`super::proto`] is the debug/interop mode; this
+//! module is the wire-efficient default, negotiated at handshake (see
+//! `proto::Encoding`).  Bodies are tagged structs over four primitives in
+//! the style of y-crdt's `lib0`: LEB128 varints for lengths and unsigned
+//! ints, zigzag varints for signed ints, length-prefixed UTF-8 for
+//! strings, and raw little-endian `f32::to_bits()` words for float
+//! payloads — bit patterns (NaN payloads, -0.0) survive by construction.
+//!
+//! Two size levers beyond raw words, both lossless and deterministic:
+//!
+//! - **Intra-frame value dedup.**  `eval_config` repeats the same borrowed
+//!   parameter `Value`s in every input set of a batch; the encoder indexes
+//!   values by pointer identity and emits a `VAL_REF` backreference for
+//!   repeats, so N input sets carry the parameter tensors once.  Sound
+//!   because every encoded value is borrowed for the whole encode call —
+//!   addresses cannot be reused mid-frame.
+//! - **Exponent-plane Huffman.**  For f32 payloads the bits are rotated
+//!   left by one (`bits.rotate_left(1)`) so the top byte becomes the full
+//!   8-bit exponent (the sign bit lands in the raw low plane) — nearly
+//!   constant across a tensor drawn from one distribution (entropy ≈ 2–3
+//!   bits) — and that byte plane is canonical-Huffman coded while the
+//!   noisy mantissa+sign low 24 bits travel raw.  The encoder
+//!   decodes its own stream before committing and falls back to raw words
+//!   on any mismatch, so a codec bug can cost bytes but never correctness.
+//!
+//! Nothing here is a general-purpose serializer: the format covers exactly
+//! the shard protocol's request/response frames and is versioned by the
+//! handshake (a worker that does not ack `"enc":"bin"` keeps JSON).
+
+use std::borrow::Borrow;
+use std::collections::HashMap;
+
+use crate::runtime::tensor::Tensor;
+use crate::runtime::value::Value;
+
+use super::proto::{Request, MAX_FRAME};
+
+// Frame tags (request high bit clear, response high bit set).
+const REQ_PING: u8 = 0x01;
+const REQ_EXIT: u8 = 0x02;
+const REQ_EXEC: u8 = 0x03;
+const RESP_OK_EMPTY: u8 = 0x81;
+const RESP_OK_OUTPUTS: u8 = 0x82;
+const RESP_ERR: u8 = 0x83;
+
+// Value tags.
+const VAL_FULL: u8 = 0x11;
+const VAL_REF: u8 = 0x10;
+
+// Dtypes.
+const DT_F32: u8 = 0x00;
+const DT_S32: u8 = 0x01;
+
+// f32 payload modes.
+const F32_RAW: u8 = 0x00;
+const F32_HUFF: u8 = 0x01;
+const F32_CONST: u8 = 0x02;
+
+/// Huffman only pays once the 256-byte length table amortizes.
+const HUFF_MIN_ELEMS: usize = 64;
+/// Canonical codes longer than this fall back to raw (fits in u32).
+const MAX_CODE_LEN: u32 = 32;
+
+// ---- primitives -----------------------------------------------------------
+
+fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            break;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn varint_len(v: u64) -> usize {
+    (64 - v.leading_zeros() as usize).div_ceil(7).max(1)
+}
+
+fn zigzag(v: i32) -> u32 {
+    (v.wrapping_shl(1) ^ (v >> 31)) as u32
+}
+
+fn unzigzag(z: u32) -> i32 {
+    ((z >> 1) as i32) ^ -((z & 1) as i32)
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_varint(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked cursor over a frame body.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        anyhow::ensure!(self.pos < self.buf.len(), "truncated binary frame");
+        self.pos += 1;
+        Ok(self.buf[self.pos - 1])
+    }
+
+    fn bytes(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(self.remaining() >= n, "truncated binary frame ({n} bytes short)");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn varint(&mut self) -> anyhow::Result<u64> {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let b = self.u8()?;
+            anyhow::ensure!(shift < 64, "varint overflows u64");
+            v |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    fn usize(&mut self) -> anyhow::Result<usize> {
+        usize::try_from(self.varint()?).map_err(|_| anyhow::anyhow!("length overflows usize"))
+    }
+
+    fn str(&mut self) -> anyhow::Result<&'a str> {
+        let n = self.usize()?;
+        Ok(std::str::from_utf8(self.bytes(n)?)?)
+    }
+}
+
+// ---- shapes ---------------------------------------------------------------
+
+fn put_shape(out: &mut Vec<u8>, shape: &[usize]) {
+    put_varint(out, shape.len() as u64);
+    for &d in shape {
+        put_varint(out, d as u64);
+    }
+}
+
+/// Read a shape and its (overflow-checked, frame-capped) element count.
+fn get_shape(r: &mut Reader) -> anyhow::Result<(Vec<usize>, usize)> {
+    let ndim = r.usize()?;
+    anyhow::ensure!(ndim <= 64, "shape rank {ndim} is implausible");
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        shape.push(r.usize()?);
+    }
+    let elems = shape
+        .iter()
+        .try_fold(1usize, |a, &d| a.checked_mul(d))
+        .ok_or_else(|| anyhow::anyhow!("shape {shape:?} element count overflows"))?;
+    anyhow::ensure!(elems <= MAX_FRAME / 4, "shape {shape:?} exceeds the frame cap");
+    Ok((shape, elems))
+}
+
+// ---- f32 payload: raw / const / exponent-plane huffman --------------------
+
+fn rot_hi(bits: u32) -> u8 {
+    (bits.rotate_left(1) >> 24) as u8
+}
+
+fn put_f32_payload(out: &mut Vec<u8>, data: &[f32]) {
+    let n = data.len();
+    if n >= 2 && data.iter().all(|x| x.to_bits() == data[0].to_bits()) {
+        out.push(F32_CONST);
+        out.extend_from_slice(&data[0].to_bits().to_le_bytes());
+        return;
+    }
+    if n >= HUFF_MIN_ELEMS {
+        if let Some(huff) = huff_encode(data) {
+            out.push(F32_HUFF);
+            out.extend_from_slice(&huff);
+            return;
+        }
+    }
+    out.push(F32_RAW);
+    for x in data {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+fn get_f32_payload(r: &mut Reader, n: usize) -> anyhow::Result<Vec<f32>> {
+    match r.u8()? {
+        F32_RAW => {
+            let raw = r.bytes(4 * n)?;
+            Ok(raw
+                .chunks_exact(4)
+                .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+                .collect())
+        }
+        F32_CONST => {
+            let w = r.bytes(4)?;
+            Ok(vec![f32::from_bits(u32::from_le_bytes([w[0], w[1], w[2], w[3]])); n])
+        }
+        F32_HUFF => huff_decode(r, n),
+        m => anyhow::bail!("unknown f32 payload mode {m:#04x}"),
+    }
+}
+
+/// Deterministic Huffman code lengths over the hi-byte alphabet, or `None`
+/// when a code would exceed [`MAX_CODE_LEN`].  Tie-breaking is by node
+/// creation order (leaves in symbol order first), so identical inputs
+/// produce identical tables on every host.
+fn huff_code_lengths(freq: &[u64; 256]) -> Option<[u8; 256]> {
+    struct Node {
+        parent: usize,
+    }
+    let mut lens = [0u8; 256];
+    let syms: Vec<usize> = (0..256).filter(|&s| freq[s] > 0).collect();
+    match syms.len() {
+        0 => return None,
+        1 => {
+            lens[syms[0]] = 1;
+            return Some(lens);
+        }
+        _ => {}
+    }
+    let mut nodes: Vec<Node> = syms.iter().map(|_| Node { parent: usize::MAX }).collect();
+    // (freq, node id) of every live root; merging the two smallest by
+    // (freq, id) is the standard construction with deterministic ties.
+    let mut roots: Vec<(u64, usize)> = syms.iter().enumerate().map(|(i, &s)| (freq[s], i)).collect();
+    while roots.len() > 1 {
+        roots.sort_unstable();
+        let (f1, a) = roots.remove(0);
+        let (f2, b) = roots.remove(0);
+        let merged = nodes.len();
+        nodes[a].parent = merged;
+        nodes[b].parent = merged;
+        nodes.push(Node { parent: usize::MAX });
+        roots.push((f1 + f2, merged));
+    }
+    for (i, &s) in syms.iter().enumerate() {
+        let mut depth = 0u32;
+        let mut p = nodes[i].parent;
+        while p != usize::MAX {
+            depth += 1;
+            p = nodes[p].parent;
+        }
+        if depth > MAX_CODE_LEN {
+            return None;
+        }
+        lens[s] = depth as u8;
+    }
+    Some(lens)
+}
+
+/// Canonical codes from a length table: symbols sorted by (len, symbol),
+/// codes assigned in that order — fully determined by the lengths, so only
+/// the 256-byte length table travels.
+fn canonical_codes(lens: &[u8; 256]) -> [(u32, u8); 256] {
+    let mut order: Vec<usize> = (0..256).filter(|&s| lens[s] > 0).collect();
+    order.sort_by_key(|&s| (lens[s], s));
+    let mut codes = [(0u32, 0u8); 256];
+    let mut code = 0u64;
+    let mut prev = 0u8;
+    for &s in &order {
+        code <<= lens[s] - prev;
+        prev = lens[s];
+        codes[s] = (code as u32, prev);
+        code += 1;
+    }
+    codes
+}
+
+/// Canonical decoder tables rebuilt from the wire's length table; all
+/// inputs are untrusted, so Kraft validity is checked up front.
+struct HuffDecoder {
+    first: [u64; 33],
+    count: [u64; 33],
+    offset: [u32; 33],
+    syms: Vec<u8>,
+}
+
+impl HuffDecoder {
+    fn build(lens: &[u8; 256]) -> anyhow::Result<HuffDecoder> {
+        let mut count = [0u64; 33];
+        let mut order: Vec<usize> = Vec::new();
+        for (s, &l) in lens.iter().enumerate() {
+            anyhow::ensure!(l as u32 <= MAX_CODE_LEN, "huffman code length {l} too long");
+            if l > 0 {
+                count[l as usize] += 1;
+                order.push(s);
+            }
+        }
+        anyhow::ensure!(!order.is_empty(), "empty huffman table");
+        order.sort_by_key(|&s| (lens[s], s));
+        let syms = order.iter().map(|&s| s as u8).collect();
+        let mut first = [0u64; 33];
+        let mut offset = [0u32; 33];
+        let mut code = 0u64;
+        let mut off = 0u32;
+        for l in 1..=32usize {
+            first[l] = code;
+            offset[l] = off;
+            off += count[l] as u32;
+            anyhow::ensure!(code + count[l] <= 1u64 << l, "huffman table violates Kraft");
+            code = (code + count[l]) << 1;
+        }
+        Ok(HuffDecoder { first, count, offset, syms })
+    }
+
+    fn decode(&self, bits: &mut BitReader) -> anyhow::Result<u8> {
+        let mut code = 0u64;
+        for l in 1..=32usize {
+            code = (code << 1) | bits.bit()? as u64;
+            if code >= self.first[l] && code - self.first[l] < self.count[l] {
+                let idx = self.offset[l] as u64 + (code - self.first[l]);
+                return Ok(self.syms[idx as usize]);
+            }
+        }
+        anyhow::bail!("corrupt huffman stream")
+    }
+}
+
+/// MSB-first bit cursor over a packed byte slice.
+struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    nbits: usize,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(buf: &'a [u8], nbits: usize) -> BitReader<'a> {
+        BitReader { buf, pos: 0, nbits }
+    }
+
+    fn bit(&mut self) -> anyhow::Result<u8> {
+        anyhow::ensure!(self.pos < self.nbits, "huffman stream exhausted");
+        let b = (self.buf[self.pos >> 3] >> (7 - (self.pos & 7))) & 1;
+        self.pos += 1;
+        Ok(b)
+    }
+}
+
+/// Huffman-encode the hi plane; layout `[256-byte len table][varint
+/// nbits][packed hi bits][3n raw lo24 bytes]`.  Returns `None` when raw is
+/// no bigger, a code overflows, or (defensively) self-verification fails.
+fn huff_encode(data: &[f32]) -> Option<Vec<u8>> {
+    let n = data.len();
+    let mut freq = [0u64; 256];
+    for x in data {
+        freq[rot_hi(x.to_bits()) as usize] += 1;
+    }
+    let lens = huff_code_lengths(&freq)?;
+    let total_bits: u64 = (0..256).map(|s| freq[s] * lens[s] as u64).sum();
+    let est = 256 + varint_len(total_bits) + (total_bits as usize).div_ceil(8) + 3 * n;
+    if est >= 4 * n {
+        return None;
+    }
+    let codes = canonical_codes(&lens);
+    let mut out = Vec::with_capacity(est + 8);
+    out.extend_from_slice(&lens);
+    put_varint(&mut out, total_bits);
+    let packed_at = out.len();
+    let mut acc = 0u64;
+    let mut nacc = 0u32;
+    for x in data {
+        let (code, len) = codes[rot_hi(x.to_bits()) as usize];
+        acc = (acc << len) | code as u64;
+        nacc += len as u32;
+        while nacc >= 8 {
+            nacc -= 8;
+            out.push((acc >> nacc) as u8);
+        }
+    }
+    if nacc > 0 {
+        out.push((acc << (8 - nacc)) as u8);
+    }
+    // Self-verify the compressed plane before trusting it on the wire: a
+    // table/packing bug becomes a size regression, never wrong bytes.
+    let dec = HuffDecoder::build(&lens).ok()?;
+    let mut bits = BitReader::new(&out[packed_at..], total_bits as usize);
+    for x in data {
+        if dec.decode(&mut bits).ok()? != rot_hi(x.to_bits()) {
+            return None;
+        }
+    }
+    if bits.pos != total_bits as usize {
+        return None;
+    }
+    for x in data {
+        let r = x.to_bits().rotate_left(1);
+        out.extend_from_slice(&[r as u8, (r >> 8) as u8, (r >> 16) as u8]);
+    }
+    Some(out)
+}
+
+fn huff_decode(r: &mut Reader, n: usize) -> anyhow::Result<Vec<f32>> {
+    let table = r.bytes(256)?;
+    let mut lens = [0u8; 256];
+    lens.copy_from_slice(table);
+    let total_bits = r.usize()?;
+    anyhow::ensure!(total_bits >= n, "huffman stream shorter than element count");
+    let packed = r.bytes(total_bits.div_ceil(8))?;
+    let dec = HuffDecoder::build(&lens)?;
+    let mut bits = BitReader::new(packed, total_bits);
+    let mut hi = Vec::with_capacity(n);
+    for _ in 0..n {
+        hi.push(dec.decode(&mut bits)?);
+    }
+    anyhow::ensure!(bits.pos == total_bits, "huffman stream has trailing bits");
+    let lo = r.bytes(3 * n)?;
+    Ok((0..n)
+        .map(|i| {
+            let rot = lo[3 * i] as u32
+                | (lo[3 * i + 1] as u32) << 8
+                | (lo[3 * i + 2] as u32) << 16
+                | (hi[i] as u32) << 24;
+            f32::from_bits(rot.rotate_right(1))
+        })
+        .collect())
+}
+
+// ---- values ---------------------------------------------------------------
+
+/// Encoder-side dedup state: values already emitted in this frame, keyed
+/// by address, mapped to their frame-order index.
+#[derive(Default)]
+struct ValueEncoder {
+    seen: HashMap<usize, u64>,
+    next: u64,
+}
+
+impl ValueEncoder {
+    fn put_value(&mut self, out: &mut Vec<u8>, v: &Value) {
+        let key = v as *const Value as usize;
+        if let Some(&idx) = self.seen.get(&key) {
+            out.push(VAL_REF);
+            put_varint(out, idx);
+            return;
+        }
+        self.seen.insert(key, self.next);
+        self.next += 1;
+        out.push(VAL_FULL);
+        match v {
+            Value::F32(t) => {
+                out.push(DT_F32);
+                put_shape(out, &t.shape);
+                put_f32_payload(out, &t.data);
+            }
+            Value::I32 { shape, data } => {
+                out.push(DT_S32);
+                put_shape(out, shape);
+                for &x in data {
+                    put_varint(out, zigzag(x) as u64);
+                }
+            }
+        }
+    }
+}
+
+/// Decoder-side pool mirroring the encoder's frame-order indices.
+fn get_value(r: &mut Reader, pool: &mut Vec<Value>) -> anyhow::Result<Value> {
+    match r.u8()? {
+        VAL_REF => {
+            let idx = r.usize()?;
+            let v = pool
+                .get(idx)
+                .ok_or_else(|| anyhow::anyhow!("value backref {idx} out of range"))?;
+            Ok(v.clone())
+        }
+        VAL_FULL => {
+            let v = match r.u8()? {
+                DT_F32 => {
+                    let (shape, elems) = get_shape(r)?;
+                    Value::F32(Tensor::new(shape, get_f32_payload(r, elems)?))
+                }
+                DT_S32 => {
+                    let (shape, elems) = get_shape(r)?;
+                    anyhow::ensure!(elems <= r.remaining().max(1), "s32 payload short");
+                    let mut data = Vec::with_capacity(elems);
+                    for _ in 0..elems {
+                        let z = u32_checked(r.varint()?)?;
+                        data.push(unzigzag(z));
+                    }
+                    Value::I32 { shape, data }
+                }
+                d => anyhow::bail!("unknown dtype tag {d:#04x}"),
+            };
+            pool.push(v.clone());
+            Ok(v)
+        }
+        t => anyhow::bail!("unknown value tag {t:#04x}"),
+    }
+}
+
+fn u32_checked(v: u64) -> anyhow::Result<u32> {
+    u32::try_from(v).map_err(|_| anyhow::anyhow!("zigzag word {v} overflows u32"))
+}
+
+fn put_sets<V: Borrow<Value>>(out: &mut Vec<u8>, sets: &[Vec<V>]) {
+    put_varint(out, sets.len() as u64);
+    let mut enc = ValueEncoder::default();
+    for set in sets {
+        put_varint(out, set.len() as u64);
+        for v in set {
+            enc.put_value(out, v.borrow());
+        }
+    }
+}
+
+fn get_sets(r: &mut Reader) -> anyhow::Result<Vec<Vec<Value>>> {
+    let nsets = r.usize()?;
+    anyhow::ensure!(nsets <= r.remaining().max(1), "set count exceeds frame");
+    let mut pool: Vec<Value> = Vec::new();
+    let mut sets = Vec::with_capacity(nsets);
+    for _ in 0..nsets {
+        let nvals = r.usize()?;
+        anyhow::ensure!(nvals <= r.remaining().max(1), "value count exceeds frame");
+        let mut set = Vec::with_capacity(nvals);
+        for _ in 0..nvals {
+            set.push(get_value(r, &mut pool)?);
+        }
+        sets.push(set);
+    }
+    Ok(sets)
+}
+
+// ---- requests -------------------------------------------------------------
+
+pub fn ping_bytes() -> Vec<u8> {
+    vec![REQ_PING]
+}
+
+pub fn exit_bytes() -> Vec<u8> {
+    vec![REQ_EXIT]
+}
+
+/// Binary counterpart of `proto::exec_json` — same borrowed-input shape,
+/// with repeated values (the parameter set) deduplicated per frame.
+pub fn exec_bytes<V: Borrow<Value>>(artifact: &str, batches: &[Vec<V>]) -> Vec<u8> {
+    let mut out = vec![REQ_EXEC];
+    put_str(&mut out, artifact);
+    put_sets(&mut out, batches);
+    out
+}
+
+pub fn request_from_bytes(buf: &[u8]) -> anyhow::Result<Request> {
+    let mut r = Reader::new(buf);
+    let req = match r.u8()? {
+        REQ_PING => Request::Ping,
+        REQ_EXIT => Request::Exit,
+        REQ_EXEC => {
+            let artifact = r.str()?.to_string();
+            Request::Exec { artifact, batches: get_sets(&mut r)? }
+        }
+        t => anyhow::bail!("unknown request tag {t:#04x}"),
+    };
+    anyhow::ensure!(r.done(), "trailing bytes after request");
+    Ok(req)
+}
+
+// ---- responses ------------------------------------------------------------
+
+pub fn ok_bytes(outputs: &[Vec<Value>]) -> Vec<u8> {
+    let mut out = vec![RESP_OK_OUTPUTS];
+    put_sets(&mut out, outputs);
+    out
+}
+
+pub fn ok_empty_bytes(pid: u32) -> Vec<u8> {
+    let mut out = vec![RESP_OK_EMPTY];
+    put_varint(&mut out, pid as u64);
+    out
+}
+
+pub fn err_bytes(msg: &str) -> Vec<u8> {
+    let mut out = vec![RESP_ERR];
+    put_str(&mut out, msg);
+    out
+}
+
+/// Binary counterpart of `proto::response_outputs`: ping acks decode to an
+/// empty result, `RESP_ERR` surfaces the worker's message as an app error
+/// (same text shape as the JSON path, so callers treat both alike).
+pub fn response_from_bytes(buf: &[u8]) -> anyhow::Result<Vec<Vec<Value>>> {
+    let mut r = Reader::new(buf);
+    match r.u8()? {
+        RESP_OK_EMPTY => {
+            let _pid = r.varint()?;
+            anyhow::ensure!(r.done(), "trailing bytes after response");
+            Ok(Vec::new())
+        }
+        RESP_OK_OUTPUTS => {
+            let outs = get_sets(&mut r)?;
+            anyhow::ensure!(r.done(), "trailing bytes after response");
+            Ok(outs)
+        }
+        RESP_ERR => {
+            let msg = r.str()?;
+            anyhow::bail!("shard worker reported: {msg}");
+        }
+        t => anyhow::bail!("unknown response tag {t:#04x}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_value(v: &Value) -> Value {
+        let bytes = ok_bytes(std::slice::from_ref(&vec![v.clone()]));
+        let mut outs = response_from_bytes(&bytes).unwrap();
+        assert_eq!(outs.len(), 1);
+        outs.pop().unwrap().pop().unwrap()
+    }
+
+    fn bits_of(v: &Value) -> Vec<u32> {
+        v.as_f32().unwrap().data.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn varints_and_zigzag_roundtrip() {
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX] {
+            let mut out = Vec::new();
+            put_varint(&mut out, v);
+            assert_eq!(out.len(), varint_len(v));
+            assert_eq!(Reader::new(&out).varint().unwrap(), v);
+        }
+        for v in [0i32, 1, -1, 63, -64, i32::MAX, i32::MIN] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+    }
+
+    #[test]
+    fn f32_specials_are_bit_exact() {
+        let specials = vec![
+            0.0f32,
+            -0.0,
+            1.5,
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::MIN_POSITIVE,
+            f32::from_bits(0x7fc0_1234),
+            -3.25e-38,
+        ];
+        let v = Value::f32(vec![3, 3], specials.clone());
+        let back = roundtrip_value(&v);
+        assert_eq!(back.shape(), &[3, 3]);
+        for (a, b) in specials.iter().zip(&back.as_f32().unwrap().data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} lost its bit pattern");
+        }
+    }
+
+    #[test]
+    fn zero_element_tensors_roundtrip_binary() {
+        for v in [
+            Value::f32(vec![0], vec![]),
+            Value::f32(vec![0, 5], vec![]),
+            Value::i32(vec![0], vec![]),
+        ] {
+            assert_eq!(roundtrip_value(&v), v);
+        }
+    }
+
+    #[test]
+    fn s32_and_scalars_roundtrip() {
+        let iv = Value::i32(vec![4], vec![i32::MIN, -1, 0, i32::MAX]);
+        assert_eq!(roundtrip_value(&iv), iv);
+        let s = Value::scalar(-0.0);
+        assert_eq!(bits_of(&roundtrip_value(&s)), bits_of(&s));
+    }
+
+    #[test]
+    fn repeated_values_are_deduplicated_and_restored() {
+        let shared = Value::f32(vec![128], (0..128).map(|i| i as f32 * 0.25 - 7.0).collect());
+        let uniq_a = Value::i32(vec![2], vec![3, 4]);
+        let uniq_b = Value::i32(vec![2], vec![5, 6]);
+        let sets: Vec<Vec<&Value>> = vec![vec![&shared, &uniq_a], vec![&shared, &uniq_b]];
+        let with_dedup = exec_bytes("m", &sets);
+        // A copy at a different address must encode in full.
+        let shared2 = shared.clone();
+        let sets2: Vec<Vec<&Value>> = vec![vec![&shared, &uniq_a], vec![&shared2, &uniq_b]];
+        let without = exec_bytes("m", &sets2);
+        assert!(
+            with_dedup.len() + 64 < without.len(),
+            "dedup must shrink the frame ({} vs {})",
+            with_dedup.len(),
+            without.len()
+        );
+        for frame in [with_dedup, without] {
+            let Request::Exec { artifact, batches } = request_from_bytes(&frame).unwrap() else {
+                panic!("wrong request kind");
+            };
+            assert_eq!(artifact, "m");
+            assert_eq!(batches.len(), 2);
+            assert_eq!(batches[0][0], shared);
+            assert_eq!(batches[1][0], shared);
+            assert_eq!(batches[1][1], uniq_b);
+        }
+    }
+
+    #[test]
+    fn constant_tensors_collapse_to_one_word() {
+        let v = Value::f32(vec![4096], vec![-0.0; 4096]);
+        let bytes = ok_bytes(std::slice::from_ref(&vec![v.clone()]));
+        assert!(bytes.len() < 64, "const mode must collapse {} bytes", bytes.len());
+        assert_eq!(bits_of(&roundtrip_value(&v)), bits_of(&v));
+    }
+
+    #[test]
+    fn huffman_payload_shrinks_and_roundtrips() {
+        // One distribution, > HUFF_MIN_ELEMS, not constant: the huffman
+        // path must engage and stay bit-exact.
+        let mut x = 0x2545_f491u32;
+        let data: Vec<f32> = (0..10_000)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 17;
+                x ^= x << 5;
+                (x as f64 / u32::MAX as f64) as f32 - 0.5
+            })
+            .collect();
+        let v = Value::f32(vec![10_000], data);
+        let bytes = ok_bytes(std::slice::from_ref(&vec![v.clone()]));
+        assert!(
+            bytes.len() < 4 * 10_000,
+            "huffman must beat raw words ({} bytes)",
+            bytes.len()
+        );
+        assert_eq!(bits_of(&roundtrip_value(&v)), bits_of(&v));
+    }
+
+    #[test]
+    fn ping_exit_and_errors_roundtrip() {
+        assert!(matches!(request_from_bytes(&ping_bytes()).unwrap(), Request::Ping));
+        assert!(matches!(request_from_bytes(&exit_bytes()).unwrap(), Request::Exit));
+        assert!(response_from_bytes(&ok_empty_bytes(42)).unwrap().is_empty());
+        let err = response_from_bytes(&err_bytes("boom")).unwrap_err();
+        assert!(format!("{err:#}").contains("shard worker reported: boom"));
+    }
+
+    #[test]
+    fn malformed_frames_error_cleanly() {
+        assert!(request_from_bytes(&[]).is_err(), "empty frame");
+        assert!(request_from_bytes(&[0x7f]).is_err(), "unknown tag");
+        let mut trailing = ping_bytes();
+        trailing.push(0);
+        assert!(request_from_bytes(&trailing).is_err(), "trailing bytes");
+        let mut exec = exec_bytes("m", &[vec![&Value::scalar(1.0)]]);
+        exec.truncate(exec.len() - 2);
+        assert!(request_from_bytes(&exec).is_err(), "truncated exec");
+        // Backref pointing forward must not panic.
+        let mut bad = vec![RESP_OK_OUTPUTS];
+        put_varint(&mut bad, 1); // one set
+        put_varint(&mut bad, 1); // one value
+        bad.push(VAL_REF);
+        put_varint(&mut bad, 7);
+        assert!(response_from_bytes(&bad).is_err(), "dangling backref");
+    }
+}

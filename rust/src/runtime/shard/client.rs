@@ -1,28 +1,39 @@
-//! Parent side of the shard backend: a pool of `autoq worker` subprocesses
-//! plus the [`Executable`] that fans `exec` calls across them.
+//! Parent side of the shard backend: a pool of worker **slots** — local
+//! `autoq worker` subprocesses over stdio pipes and/or remote
+//! `autoq worker --listen` peers over TCP — plus the [`Executable`] that
+//! fans `exec` calls across them.
 //!
 //! Scheduling mirrors `util::pool`: batches are partitioned into balanced
-//! contiguous chunks, chunk *c* goes to worker *c*, and chunk results are
+//! contiguous chunks, chunk *c* goes to slot *c*, and chunk results are
 //! concatenated in chunk order — so outputs come back in input order and,
 //! because every worker runs the same pure reference interpreter on the
 //! same bytes, the merged result is **byte-identical** to the in-process
-//! reference backend at every worker count.
+//! reference backend at every slot count, local or remote.
 //!
-//! Crash handling: a transport failure (worker died, stream closed) kills
-//! and respawns that worker, then replays the in-flight request exactly
-//! once — sound because requests are self-contained (see `worker.rs`) and
-//! a replayed request recomputes the same bytes.  Application errors
-//! reported by a live worker are deterministic and surface immediately,
-//! never replayed.
+//! Crash handling: a transport failure (worker died, stream closed,
+//! connection reset) tears the slot down, re-establishes it — respawn for
+//! a local slot, reconnect for a remote one — and replays the in-flight
+//! request exactly once.  Sound because requests are self-contained (see
+//! `worker.rs`) and a replayed request recomputes the same bytes.
+//! Application errors reported by a live worker are deterministic and
+//! surface immediately, never replayed — the decode happens *outside* the
+//! retry loop, so only genuine transport failures trigger replay.
+//!
+//! Encoding: each session negotiates at handshake (see
+//! `proto::Encoding`) — the handshake itself is always JSON, so old
+//! workers interoperate by simply not acking the binary hint.
 
 use std::io::BufReader;
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
 use std::path::PathBuf;
 use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::runtime::backend::Executable;
-use crate::runtime::shard::proto;
+use crate::runtime::shard::proto::{self, Encoding};
+use crate::runtime::shard::bin;
 use crate::runtime::value::Value;
 use crate::util::json::Json;
 use crate::util::pool::Parallelism;
@@ -37,69 +48,262 @@ pub fn worker_exe() -> anyhow::Result<PathBuf> {
     }
 }
 
-/// One live worker subprocess with its pipe endpoints.
-struct WorkerProc {
-    child: Child,
-    tx: ChildStdin,
-    rx: BufReader<ChildStdout>,
+/// Establishing a TCP session (connect + handshake) gets a hard deadline;
+/// steady-state reads are unbounded — a healthy long exec can legitimately
+/// take minutes, and idle protection is the listening side's job.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// What a slot talks to.
+enum SlotKind {
+    /// Spawn a local subprocess, frames over stdio pipes.
+    Local,
+    /// Connect to `host:port`, frames over TCP.
+    Remote(String),
 }
 
-impl WorkerProc {
-    /// One request/response exchange.  Any error here is a transport
-    /// failure — the worker itself reports application errors inside a
-    /// successful response frame.
-    fn roundtrip(&mut self, req: &Json) -> anyhow::Result<Json> {
-        proto::write_frame(&mut self.tx, req)?;
-        proto::read_frame(&mut self.rx)?
-            .ok_or_else(|| anyhow::anyhow!("worker closed its stream mid-request"))
+/// A live transport to one worker.
+enum Transport {
+    Proc { child: Child, tx: ChildStdin, rx: BufReader<ChildStdout> },
+    Tcp { tx: TcpStream, rx: BufReader<TcpStream> },
+}
+
+impl Transport {
+    fn writer(&mut self) -> &mut dyn std::io::Write {
+        match self {
+            Transport::Proc { tx, .. } => tx,
+            Transport::Tcp { tx, .. } => tx,
+        }
+    }
+
+    fn reader(&mut self) -> &mut dyn std::io::Read {
+        match self {
+            Transport::Proc { rx, .. } => rx,
+            Transport::Tcp { rx, .. } => rx,
+        }
+    }
+
+    /// Hard-stop the transport and reap what needs reaping.
+    fn teardown(self) {
+        match self {
+            Transport::Proc { mut child, .. } => {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+            Transport::Tcp { tx, .. } => {
+                let _ = tx.shutdown(Shutdown::Both);
+            }
+        }
+    }
+
+    fn describe(&self) -> String {
+        match self {
+            Transport::Proc { child, .. } => format!("pid {}", child.id()),
+            Transport::Tcp { tx, .. } => match tx.peer_addr() {
+                Ok(a) => format!("tcp {a}"),
+                Err(_) => "tcp <disconnected>".to_string(),
+            },
+        }
     }
 }
 
-/// The process pool: lazily spawned workers, one mutex per slot so
-/// concurrent chunk dispatches to distinct workers proceed in parallel.
+/// One established worker session: a transport plus the encoding the
+/// handshake settled on.
+struct Conn {
+    transport: Transport,
+    enc: Encoding,
+}
+
+/// A request not yet committed to an encoding — encoded per-connection at
+/// send time, so a replay onto a fresh session re-encodes under whatever
+/// that session negotiated.
+enum WireReq<'a> {
+    Ping,
+    Exec { artifact: &'a str, chunk: &'a [Vec<&'a Value>] },
+}
+
+/// A raw response frame; decoding is deferred past the retry loop so app
+/// errors are never mistaken for transport failures.
+enum Frame {
+    Json(Json),
+    Bin(Vec<u8>),
+}
+
+impl Frame {
+    fn outputs(&self) -> anyhow::Result<Vec<Vec<Value>>> {
+        match self {
+            Frame::Json(j) => proto::response_outputs(j),
+            Frame::Bin(b) => bin::response_from_bytes(b),
+        }
+    }
+}
+
+impl Conn {
+    /// One request/response exchange.  Any error here is a transport
+    /// failure — the worker itself reports application errors inside a
+    /// successful response frame.
+    fn roundtrip(&mut self, req: &WireReq) -> anyhow::Result<Frame> {
+        match self.enc {
+            Encoding::Json => {
+                let msg = match req {
+                    WireReq::Ping => proto::ping_json(),
+                    WireReq::Exec { artifact, chunk } => proto::exec_json(artifact, chunk),
+                };
+                proto::write_frame(self.transport.writer(), &msg)?;
+                let resp = proto::read_frame(self.transport.reader())?
+                    .ok_or_else(|| anyhow::anyhow!("worker closed its stream mid-request"))?;
+                Ok(Frame::Json(resp))
+            }
+            Encoding::Binary => {
+                let body = match req {
+                    WireReq::Ping => bin::ping_bytes(),
+                    WireReq::Exec { artifact, chunk } => bin::exec_bytes(artifact, chunk),
+                };
+                proto::write_frame_bytes(self.transport.writer(), &body)?;
+                let resp = proto::read_frame_bytes(self.transport.reader())?
+                    .ok_or_else(|| anyhow::anyhow!("worker closed its stream mid-request"))?;
+                Ok(Frame::Bin(resp))
+            }
+        }
+    }
+
+    /// Best-effort graceful stop in whatever encoding the session speaks.
+    fn send_exit(&mut self) {
+        let _ = match self.enc {
+            Encoding::Json => proto::write_frame(self.transport.writer(), &proto::exit_json()),
+            Encoding::Binary => {
+                proto::write_frame_bytes(self.transport.writer(), &bin::exit_bytes())
+            }
+        };
+    }
+
+    /// Handshake (always JSON): ping the worker, optionally asking for the
+    /// binary encoding; switch the session iff the worker acks.
+    fn handshake(&mut self, want: Encoding) -> anyhow::Result<()> {
+        let ping = match want {
+            Encoding::Json => proto::ping_json(),
+            Encoding::Binary => Json::obj(vec![
+                ("op", "ping".into()),
+                ("enc", Encoding::Binary.as_str().into()),
+            ]),
+        };
+        proto::write_frame(self.transport.writer(), &ping)?;
+        let resp = proto::read_frame(self.transport.reader())?
+            .ok_or_else(|| anyhow::anyhow!("worker closed its stream during handshake"))?;
+        proto::response_outputs(&resp)?;
+        if want == Encoding::Binary
+            && resp.get("enc").and_then(Json::as_str) == Some(Encoding::Binary.as_str())
+        {
+            self.enc = Encoding::Binary;
+        }
+        Ok(())
+    }
+}
+
+/// The slot pool: lazily established worker sessions, one mutex per slot
+/// so concurrent chunk dispatches to distinct slots proceed in parallel.
 pub struct ShardClient {
     exe: PathBuf,
-    slots: Vec<Mutex<Option<WorkerProc>>>,
-    /// Inner eval-thread budget per worker process (the even share of the
-    /// backend's total — see [`ShardClient::set_total_threads`]).
+    kinds: Vec<SlotKind>,
+    slots: Vec<Mutex<Option<Conn>>>,
+    /// Encoding to request at handshake (sessions fall back to JSON when
+    /// the peer does not ack).
+    encoding: Encoding,
+    /// Inner eval-thread budget per **local** worker process (the even
+    /// share of the backend's total — see [`ShardClient::set_total_threads`]).
     threads_per_worker: AtomicUsize,
     /// Round-robin cursor for single-set execs.
     rr: AtomicUsize,
-    /// Workers respawned after a transport failure (test/observability hook).
+    /// Slots re-established (respawn or reconnect) after a transport
+    /// failure (test/observability hook).
     restarts: AtomicUsize,
 }
 
 impl ShardClient {
+    /// Local-only pool (the classic shape): `workers` subprocess slots.
     pub fn new(exe: PathBuf, workers: usize) -> ShardClient {
+        let enc = super::resolve_encoding(None).unwrap_or(Encoding::Binary);
+        ShardClient::with_opts(exe, workers.max(1), Vec::new(), enc)
+    }
+
+    /// Mixed pool: `local` subprocess slots (first, so thread budgeting and
+    /// chunk order stay stable) plus one remote slot per host.  An entirely
+    /// empty pool degenerates to one local slot.
+    pub fn with_opts(
+        exe: PathBuf,
+        local: usize,
+        hosts: Vec<String>,
+        encoding: Encoding,
+    ) -> ShardClient {
+        let mut kinds: Vec<SlotKind> = (0..local).map(|_| SlotKind::Local).collect();
+        kinds.extend(hosts.into_iter().map(SlotKind::Remote));
+        if kinds.is_empty() {
+            kinds.push(SlotKind::Local);
+        }
+        let slots = kinds.iter().map(|_| Mutex::new(None)).collect();
         ShardClient {
             exe,
-            slots: (0..workers.max(1)).map(|_| Mutex::new(None)).collect(),
+            kinds,
+            slots,
+            encoding,
             threads_per_worker: AtomicUsize::new(1),
             rr: AtomicUsize::new(0),
             restarts: AtomicUsize::new(0),
         }
     }
 
+    /// Total slots (local + remote).
     pub fn workers(&self) -> usize {
         self.slots.len()
     }
 
-    /// How many workers were respawned after dying mid-request.
+    /// Local subprocess slots (the ones whose threads this host pays for).
+    pub fn local_workers(&self) -> usize {
+        self.kinds.iter().filter(|k| matches!(k, SlotKind::Local)).count()
+    }
+
+    /// How many slots were re-established after dying mid-request.
     pub fn restarts(&self) -> usize {
         self.restarts.load(Ordering::Relaxed)
     }
 
-    /// Split the backend's total thread budget evenly across the worker
-    /// processes (≥ 1 each — `workers > total` must oversubscribe by the
-    /// explicit one-thread floor, never resolve to "auto = all cores").
-    /// Takes effect for workers spawned from now on; the `Runtime` calls
-    /// this before any artifact loads, i.e. before the first spawn.
+    /// Split the backend's total thread budget evenly across the **local**
+    /// worker processes (≥ 1 each — `workers > total` must oversubscribe
+    /// by the explicit one-thread floor, never resolve to "auto = all
+    /// cores").  Remote workers size themselves (`worker --listen
+    /// --threads`); their share of this machine's budget is zero.  Takes
+    /// effect for workers spawned from now on; the `Runtime` calls this
+    /// before any artifact loads, i.e. before the first session.
     pub fn set_total_threads(&self, total: usize) {
-        let per = Parallelism::share_of(total, self.workers()).get();
+        let per = Parallelism::share_of(total, self.local_workers().max(1)).get();
         self.threads_per_worker.store(per, Ordering::Relaxed);
     }
 
-    fn spawn(&self, idx: usize) -> anyhow::Result<WorkerProc> {
+    /// Establish slot `idx`: spawn-and-handshake for a local slot,
+    /// connect-and-handshake for a remote one.
+    fn establish(&self, idx: usize) -> anyhow::Result<Conn> {
+        let transport = match &self.kinds[idx] {
+            SlotKind::Local => self.spawn_local(idx)?,
+            SlotKind::Remote(host) => connect_remote(host)?,
+        };
+        let mut conn = Conn { transport, enc: Encoding::Json };
+        if let Err(e) = conn.handshake(self.encoding) {
+            conn.transport.teardown();
+            anyhow::bail!("shard worker {idx} failed its handshake: {e:#}");
+        }
+        // Handshake done: steady-state reads wait as long as the work
+        // takes (the connect-phase timeout must not kill long execs).
+        if let Transport::Tcp { tx, .. } = &conn.transport {
+            tx.set_read_timeout(None).ok();
+        }
+        crate::debug!(
+            "shard worker {idx} up ({}, {} encoding)",
+            conn.transport.describe(),
+            conn.enc.as_str()
+        );
+        Ok(conn)
+    }
+
+    fn spawn_local(&self, idx: usize) -> anyhow::Result<Transport> {
         let threads = self.threads_per_worker.load(Ordering::Relaxed);
         let mut child = Command::new(&self.exe)
             .arg("worker")
@@ -109,52 +313,40 @@ impl ShardClient {
             .stdout(Stdio::piped())
             .stderr(Stdio::inherit())
             .spawn()
-            .map_err(|e| anyhow::anyhow!("failed to spawn shard worker {:?}: {e}", self.exe))?;
+            .map_err(|e| {
+                anyhow::anyhow!("failed to spawn shard worker {idx} {:?}: {e}", self.exe)
+            })?;
         let tx = child.stdin.take().expect("stdin piped");
         let rx = BufReader::new(child.stdout.take().expect("stdout piped"));
-        let mut wp = WorkerProc { child, tx, rx };
-        // Handshake: the first frame back must be an ok ping response, so a
-        // misconfigured binary fails loudly here instead of corrupting an
-        // exec exchange later.
-        let resp = wp.roundtrip(&proto::ping_json()).map_err(|e| {
-            let _ = wp.child.kill();
-            let _ = wp.child.wait();
-            anyhow::anyhow!("shard worker {idx} failed its spawn handshake: {e:#}")
-        })?;
-        proto::response_outputs(&resp)?;
-        crate::debug!(
-            "shard worker {idx} up (pid {}, {} inner thread(s))",
-            wp.child.id(),
-            threads
-        );
-        Ok(wp)
+        Ok(Transport::Proc { child, tx, rx })
     }
 
-    /// Send `req` to worker `idx`, spawning it if needed.  On a transport
-    /// failure the worker is respawned and the request replayed exactly
-    /// once; a second failure propagates.
-    fn request_on(&self, idx: usize, req: &Json) -> anyhow::Result<Json> {
+    /// Send `req` to slot `idx`, establishing the session if needed.  On a
+    /// transport failure the slot is re-established (respawn/reconnect)
+    /// and the request replayed exactly once; a second failure propagates.
+    /// Returns the raw frame — decode (where app errors surface) happens
+    /// at the caller, outside this retry loop.
+    fn request_on(&self, idx: usize, req: &WireReq) -> anyhow::Result<Frame> {
         let mut slot = self.slots[idx].lock().expect("shard worker slot poisoned");
         for attempt in 0..2u32 {
             if slot.is_none() {
-                *slot = Some(self.spawn(idx)?);
+                *slot = Some(self.establish(idx)?);
             }
-            let wp = slot.as_mut().expect("spawned above");
-            match wp.roundtrip(req) {
+            let conn = slot.as_mut().expect("established above");
+            match conn.roundtrip(req) {
                 Ok(resp) => return Ok(resp),
                 Err(e) => {
-                    let mut dead = slot.take().expect("held above");
-                    let _ = dead.child.kill();
-                    let _ = dead.child.wait();
+                    let dead = slot.take().expect("held above");
+                    dead.transport.teardown();
                     anyhow::ensure!(
                         attempt == 0,
                         "shard worker {idx} failed twice on one request: {e:#}"
                     );
-                    // Counted only when a respawn-and-replay actually
-                    // follows — a terminal failure above is not a restart.
+                    // Counted only when a replay actually follows — a
+                    // terminal failure above is not a restart.
                     self.restarts.fetch_add(1, Ordering::Relaxed);
                     crate::warn_!(
-                        "shard worker {idx} died mid-request ({e:#}); respawning and replaying"
+                        "shard worker {idx} died mid-request ({e:#}); re-establishing and replaying"
                     );
                 }
             }
@@ -162,15 +354,15 @@ impl ShardClient {
         unreachable!("the retry loop returns or bails")
     }
 
-    /// Exec one chunk on one worker and validate the output arity.
+    /// Exec one chunk on one slot and validate the output arity.
     fn exec_chunk(
         &self,
         idx: usize,
         artifact: &str,
         chunk: &[Vec<&Value>],
     ) -> anyhow::Result<Vec<Vec<Value>>> {
-        let resp = self.request_on(idx, &proto::exec_json(artifact, chunk))?;
-        let outs = proto::response_outputs(&resp)?;
+        let frame = self.request_on(idx, &WireReq::Exec { artifact, chunk })?;
+        let outs = frame.outputs()?;
         anyhow::ensure!(
             outs.len() == chunk.len(),
             "worker {idx} returned {} output sets for {} input sets",
@@ -222,34 +414,65 @@ impl ShardClient {
         Ok(merged)
     }
 
-    /// Fault injection for the crash-replay tests: SIGKILL worker `idx`
-    /// (if it is running) and leave the corpse in its slot, so the next
-    /// request discovers the death through the normal transport-error
-    /// path.
+    /// Fault injection for the crash-replay tests: hard-kill slot `idx`'s
+    /// transport (SIGKILL for a local worker, socket shutdown for a remote
+    /// session) and leave the corpse in its slot, so the next request
+    /// discovers the death through the normal transport-error path.
     pub fn kill_worker(&self, idx: usize) {
-        if let Some(wp) = self.slots[idx].lock().expect("shard worker slot poisoned").as_mut() {
-            let _ = wp.child.kill();
-            let _ = wp.child.wait(); // reap; Child caches the exit status
+        if let Some(conn) = self.slots[idx].lock().expect("shard worker slot poisoned").as_mut() {
+            match &mut conn.transport {
+                Transport::Proc { child, .. } => {
+                    let _ = child.kill();
+                    let _ = child.wait(); // reap; Child caches the exit status
+                }
+                Transport::Tcp { tx, .. } => {
+                    let _ = tx.shutdown(Shutdown::Both);
+                }
+            }
         }
     }
+}
+
+/// Resolve and connect with a deadline, nodelay on (frames are small
+/// request/response exchanges), and a read timeout that covers only the
+/// handshake — `establish` lifts it once the session is up.
+fn connect_remote(host: &str) -> anyhow::Result<Transport> {
+    let addr = host
+        .to_socket_addrs()
+        .map_err(|e| anyhow::anyhow!("cannot resolve shard host {host:?}: {e}"))?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("shard host {host:?} resolves to no address"))?;
+    let tx = TcpStream::connect_timeout(&addr, CONNECT_TIMEOUT)
+        .map_err(|e| anyhow::anyhow!("cannot connect to shard host {host}: {e}"))?;
+    tx.set_nodelay(true).ok();
+    tx.set_read_timeout(Some(CONNECT_TIMEOUT))?;
+    let rx = BufReader::new(tx.try_clone()?);
+    Ok(Transport::Tcp { tx, rx })
 }
 
 impl Drop for ShardClient {
     fn drop(&mut self) {
         for slot in &self.slots {
             let Ok(mut guard) = slot.lock() else { continue };
-            if let Some(mut wp) = guard.take() {
-                // Best-effort graceful stop; dropping tx closes the pipe,
-                // which ends the worker loop even if the frame was lost.
-                let _ = proto::write_frame(&mut wp.tx, &proto::exit_json());
-                drop(wp.tx);
-                let _ = wp.child.wait();
+            if let Some(mut conn) = guard.take() {
+                // Best-effort graceful stop; closing the transport ends
+                // the worker's session even if the frame was lost.
+                conn.send_exit();
+                match conn.transport {
+                    Transport::Proc { mut child, tx, .. } => {
+                        drop(tx); // EOF on the worker's stdin
+                        let _ = child.wait();
+                    }
+                    // Dropping the stream closes the session; the remote
+                    // worker stays up for its next client.
+                    Transport::Tcp { .. } => {}
+                }
             }
         }
     }
 }
 
-/// [`Executable`] forwarding to the process pool.  Stateless by
+/// [`Executable`] forwarding to the slot pool.  Stateless by
 /// construction — all model/agent state travels through the inputs — so
 /// any worker can serve any call.
 pub struct ShardExecutable {

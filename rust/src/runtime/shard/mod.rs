@@ -1,39 +1,50 @@
 //! The `shard` execution backend: fans `exec` calls across `autoq worker`
-//! subprocesses so paper-scale sweeps scale past one address space.
+//! peers — local subprocesses and/or remote TCP hosts — so paper-scale
+//! sweeps scale past one address space (and past one machine).
 //!
 //! Layout mirrors the transport split:
-//! * [`proto`] — length-prefixed JSON framing + bit-exact `Value` codec,
-//!   written against `io::Read`/`Write` only (a TCP transport for
-//!   multi-host fan-out drops in without touching it);
-//! * [`worker`] — the subprocess loop behind the hidden `autoq worker`
-//!   subcommand (one in-process reference `Runtime` per worker);
-//! * [`client`] — the parent's process pool: balanced chunk partition,
-//!   index-ordered merge, restart-on-crash with single replay.
+//! * [`proto`] — length-prefixed framing + the JSON `Value` codec, written
+//!   against `io::Read`/`Write` only (stdio pipes and TCP streams use the
+//!   same frame loop);
+//! * [`bin`] — the compact binary body codec (varints, raw `f32::to_bits`
+//!   payloads, intra-frame dedup), negotiated per session at handshake;
+//! * [`worker`] — the worker loop behind the hidden `autoq worker`
+//!   subcommand: stdio by default, a one-session-at-a-time TCP accept
+//!   loop under `--listen`;
+//! * [`client`] — the parent's slot pool: balanced chunk partition,
+//!   index-ordered merge, re-establish-on-crash (respawn or reconnect)
+//!   with single replay.
 //!
 //! Determinism rule: every worker runs the pure reference interpreter,
-//! the codec preserves f32 bit patterns, and chunk results merge in input
+//! both codecs preserve f32 bit patterns, and chunk results merge in input
 //! order — so `--backend shard` output is **byte-identical** to
-//! `--backend reference` at every worker count (`tests/shard_backend.rs`).
+//! `--backend reference` at every slot count, over every transport, in
+//! either encoding (`tests/shard_backend.rs`).
 //!
 //! Budget rule: the backend's thread budget (`--threads`, resolved by the
-//! `Runtime`) is the *total* across the pool — each worker process gets an
-//! even share of at least one inner eval thread, composing with `Sweep`'s
-//! outer per-cell split so `cells × processes × threads` never
-//! oversubscribes by more than the explicit ≥ 1 floors.
+//! `Runtime`) is the *total* across the **local** workers — each local
+//! process gets an even share of at least one inner eval thread, composing
+//! with `Sweep`'s outer per-cell split so `cells × processes × threads`
+//! never oversubscribes by more than the explicit ≥ 1 floors.  Remote
+//! workers size themselves via `worker --listen --threads`.
 
+pub mod bin;
 pub mod client;
 pub mod proto;
 pub mod worker;
 
 pub use client::{worker_exe, ShardClient, ShardExecutable};
+pub use proto::Encoding;
 
 use std::sync::Arc;
 
 use crate::runtime::backend::{Backend, Executable};
 use crate::runtime::manifest::{ArtifactSpec, Manifest};
 
-/// Default worker-process count when neither `--shard-workers` nor
-/// `$AUTOQ_SHARD_WORKERS` chooses one.
+/// Default local worker-process count when neither `--shard-workers` nor
+/// `$AUTOQ_SHARD_WORKERS` chooses one **and no remote hosts are given**.
+/// With hosts present the local count defaults to zero — pointing a run at
+/// a fleet should not also fork subprocesses unless asked to.
 pub const DEFAULT_WORKERS: usize = 2;
 
 /// Parse an optional `--shard-workers` value: empty, `auto` or `0` mean
@@ -49,9 +60,56 @@ pub fn parse_workers_opt(s: &str) -> anyhow::Result<Option<usize>> {
     Ok(Some(n))
 }
 
-/// Resolve the worker-process count: explicit (`--shard-workers`) >
-/// `$AUTOQ_SHARD_WORKERS` > [`DEFAULT_WORKERS`].  Always ≥ 1.
-pub fn resolve_workers(explicit: Option<usize>) -> anyhow::Result<usize> {
+/// Parse an optional `--shard-hosts` value: a comma-separated list of
+/// `host:port` entries; empty means "unset" (fall through to the env).
+pub fn parse_hosts_opt(s: &str) -> anyhow::Result<Option<Vec<String>>> {
+    let t = s.trim();
+    if t.is_empty() {
+        return Ok(None);
+    }
+    let hosts: Vec<String> =
+        t.split(',').map(str::trim).filter(|h| !h.is_empty()).map(String::from).collect();
+    if hosts.is_empty() {
+        return Ok(None);
+    }
+    for h in &hosts {
+        anyhow::ensure!(h.contains(':'), "shard host {h:?} is not of the form host:port");
+    }
+    Ok(Some(hosts))
+}
+
+/// Resolve the remote host list: explicit (`--shard-hosts`, including an
+/// explicitly **empty** list meaning "no hosts, I said so") >
+/// `$AUTOQ_SHARD_HOSTS` > none.
+pub fn resolve_hosts(explicit: Option<Vec<String>>) -> anyhow::Result<Vec<String>> {
+    if let Some(hosts) = explicit {
+        return Ok(hosts);
+    }
+    match std::env::var("AUTOQ_SHARD_HOSTS") {
+        Ok(s) if !s.trim().is_empty() => Ok(parse_hosts_opt(&s)?.unwrap_or_default()),
+        _ => Ok(Vec::new()),
+    }
+}
+
+/// Resolve the wire encoding: explicit (`--shard-encoding`) >
+/// `$AUTOQ_SHARD_ENCODING` > binary.  (Sessions still fall back to JSON
+/// per-connection when the peer does not ack the binary handshake.)
+pub fn resolve_encoding(explicit: Option<Encoding>) -> Option<Encoding> {
+    if explicit.is_some() {
+        return explicit;
+    }
+    match std::env::var("AUTOQ_SHARD_ENCODING") {
+        Ok(s) if !s.trim().is_empty() => Encoding::parse_opt(&s).ok().flatten(),
+        _ => None,
+    }
+}
+
+/// Resolve the **local** worker-process count: explicit
+/// (`--shard-workers`) > `$AUTOQ_SHARD_WORKERS` > default.  The default is
+/// [`DEFAULT_WORKERS`] for a purely local pool, but **zero** when remote
+/// hosts are in play (the hosts are the pool; local forks are opt-in).
+/// The client still clamps the *total* pool to ≥ 1 slot.
+pub fn resolve_workers(explicit: Option<usize>, have_hosts: bool) -> anyhow::Result<usize> {
     let n = match explicit {
         Some(n) => Some(n),
         None => match std::env::var("AUTOQ_SHARD_WORKERS") {
@@ -59,10 +117,39 @@ pub fn resolve_workers(explicit: Option<usize>) -> anyhow::Result<usize> {
             _ => None,
         },
     };
-    Ok(n.unwrap_or(DEFAULT_WORKERS).max(1))
+    Ok(n.unwrap_or(if have_hosts { 0 } else { DEFAULT_WORKERS }))
 }
 
-/// The shard backend: owns the process pool and hands out forwarding
+/// Round-robin a host list into `parts` disjoint sublists (host *i* →
+/// bucket *i* mod `parts`).  Multiple coordinators sharing a fleet (serve
+/// workers, sweep cells) must not share hosts — a listening worker serves
+/// **one session at a time**, so two pools dialing the same host would
+/// serialize behind each other.  Buckets may come back empty when
+/// `parts > hosts`; pass the possibly-empty bucket on explicitly so the
+/// env does not re-resolve underneath.
+pub fn partition_hosts(hosts: &[String], parts: usize) -> Vec<Vec<String>> {
+    let parts = parts.max(1);
+    let mut buckets: Vec<Vec<String>> = vec![Vec::new(); parts];
+    for (i, h) in hosts.iter().enumerate() {
+        buckets[i % parts].push(h.clone());
+    }
+    buckets
+}
+
+/// Everything that shapes a shard pool, pre-resolution.  `None` fields
+/// fall through to their env vars and defaults.
+#[derive(Debug, Clone, Default)]
+pub struct ShardOpts {
+    /// Local subprocess count (`--shard-workers`).
+    pub workers: Option<usize>,
+    /// Remote `host:port` peers (`--shard-hosts`); `Some(vec![])` is an
+    /// explicit "no hosts" that beats the env.
+    pub hosts: Option<Vec<String>>,
+    /// Wire encoding to request at handshake (`--shard-encoding`).
+    pub encoding: Option<Encoding>,
+}
+
+/// The shard backend: owns the slot pool and hands out forwarding
 /// executables.  Workers interpret the same builtin zoo the reference
 /// backend does, so the parent's manifest is `builtin_manifest()` and
 /// artifact validation happens before `load` is ever called.
@@ -71,15 +158,30 @@ pub struct ShardBackend {
 }
 
 impl ShardBackend {
-    /// Build a pool of `workers` subprocesses (spawned lazily on first
+    /// Local-only pool of `workers` subprocesses (spawned lazily on first
     /// dispatch, after the `Runtime` has handed over the thread budget).
     pub fn new(workers: usize) -> anyhow::Result<ShardBackend> {
-        let pool = Arc::new(ShardClient::new(worker_exe()?, workers));
-        crate::info!("shard backend: {} worker process(es)", pool.workers());
+        ShardBackend::with_opts(&ShardOpts { workers: Some(workers), ..ShardOpts::default() })
+    }
+
+    /// Resolve `opts` (explicit > env > default per field) and build the
+    /// pool: local slots first, then one remote slot per host.
+    pub fn with_opts(opts: &ShardOpts) -> anyhow::Result<ShardBackend> {
+        let hosts = resolve_hosts(opts.hosts.clone())?;
+        let local = resolve_workers(opts.workers, !hosts.is_empty())?;
+        let enc = resolve_encoding(opts.encoding).unwrap_or(Encoding::Binary);
+        let n_hosts = hosts.len();
+        let pool = Arc::new(ShardClient::with_opts(worker_exe()?, local, hosts, enc));
+        crate::info!(
+            "shard backend: {} local worker(s), {} remote host(s), {} encoding",
+            pool.local_workers(),
+            n_hosts,
+            enc.as_str()
+        );
         Ok(ShardBackend { pool })
     }
 
-    /// The process pool (crash-injection hooks for tests live here).
+    /// The slot pool (crash-injection hooks for tests live here).
     pub fn pool(&self) -> &Arc<ShardClient> {
         &self.pool
     }
@@ -90,8 +192,8 @@ impl Backend for ShardBackend {
         "shard"
     }
 
-    /// The resolved budget is the pool **total**; each worker process gets
-    /// an even share, never below one thread.
+    /// The resolved budget is the **local** pool total; each local worker
+    /// process gets an even share, never below one thread.
     fn set_parallelism(&mut self, threads: usize) {
         self.pool.set_total_threads(threads);
     }
@@ -116,9 +218,36 @@ mod tests {
         assert_eq!(parse_workers_opt("0").unwrap(), None);
         assert_eq!(parse_workers_opt("4").unwrap(), Some(4));
         assert!(parse_workers_opt("four").is_err());
-        assert_eq!(resolve_workers(Some(3)).unwrap(), 3);
+        assert_eq!(resolve_workers(Some(3), false).unwrap(), 3);
+        assert_eq!(resolve_workers(Some(3), true).unwrap(), 3);
         // NOTE: relies on AUTOQ_SHARD_WORKERS being unset or numeric in the
         // test environment; explicit choices above bypass it either way.
+    }
+
+    #[test]
+    fn host_lists_parse_and_partition() {
+        assert_eq!(parse_hosts_opt("").unwrap(), None);
+        assert_eq!(parse_hosts_opt("  ,  ").unwrap(), None);
+        assert_eq!(
+            parse_hosts_opt("a:1, b:2 ,c:3").unwrap(),
+            Some(vec!["a:1".to_string(), "b:2".to_string(), "c:3".to_string()])
+        );
+        assert!(parse_hosts_opt("no-port").is_err());
+        // Explicit empty beats any env value.
+        assert_eq!(resolve_hosts(Some(Vec::new())).unwrap(), Vec::<String>::new());
+
+        let hosts: Vec<String> = ["a:1", "b:2", "c:3", "d:4", "e:5"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let parts = partition_hosts(&hosts, 2);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0], vec!["a:1", "c:3", "e:5"]);
+        assert_eq!(parts[1], vec!["b:2", "d:4"]);
+        // More parts than hosts: trailing buckets are empty, never panics.
+        let sparse = partition_hosts(&hosts[..1], 3);
+        assert_eq!(sparse[0], vec!["a:1"]);
+        assert!(sparse[1].is_empty() && sparse[2].is_empty());
     }
 
     #[test]
@@ -132,5 +261,6 @@ mod tests {
         // no processes.
         assert!(b.load(&spec, &m).is_ok());
         assert_eq!(b.pool().restarts(), 0);
+        assert_eq!(b.pool().local_workers(), 2);
     }
 }

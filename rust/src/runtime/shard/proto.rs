@@ -1,18 +1,21 @@
-//! Wire protocol of the shard backend: length-prefixed JSON frames and a
-//! **bit-exact** [`Value`] codec.
+//! Wire protocol of the shard backend: length-prefixed frames, a
+//! **bit-exact** JSON [`Value`] codec, and the encoding negotiation shared
+//! by the JSON and binary (`super::bin`) codecs.
 //!
-//! Framing is a 4-byte little-endian length followed by that many bytes of
-//! UTF-8 JSON.  Both halves are written against plain `io::Read`/`Write`,
-//! so the same protocol runs over pipes today and a TCP stream tomorrow —
-//! nothing in this module knows about processes or stdio.
+//! Framing is a 4-byte little-endian length followed by that many body
+//! bytes — UTF-8 JSON in [`Encoding::Json`] mode, the compact tagged
+//! format of `super::bin` in [`Encoding::Binary`] mode.  Both halves are
+//! written against plain `io::Read`/`Write`, so the same protocol runs
+//! over stdio pipes and TCP streams alike — nothing in this module knows
+//! about processes or sockets.
 //!
-//! The codec must preserve every f32 **bit pattern** (the shard backend's
-//! contract is byte-identical results to the in-process reference
-//! backend, and eval can legitimately produce -0.0 or propagate NaN), so
-//! f32 tensors travel as their `to_bits()` u32 payloads — integers ≤ 2^32
-//! are exact in the JSON substrate's f64 numbers, where a decimal float
-//! round-trip would lose NaN payloads and JSON cannot carry NaN/inf at
-//! all.
+//! The JSON codec must preserve every f32 **bit pattern** (the shard
+//! backend's contract is byte-identical results to the in-process
+//! reference backend, and eval can legitimately produce -0.0 or propagate
+//! NaN), so f32 tensors travel as their `to_bits()` u32 payloads —
+//! integers ≤ 2^32 are exact in the JSON substrate's f64 numbers, where a
+//! decimal float round-trip would lose NaN payloads and JSON cannot carry
+//! NaN/inf at all.
 
 use std::io::{Read, Write};
 
@@ -23,28 +26,62 @@ use crate::util::json::Json;
 /// treated as stream corruption, not an allocation request.
 pub const MAX_FRAME: usize = 1 << 30;
 
+// ---- encodings ------------------------------------------------------------
+
+/// Session body encoding.  Every session starts in `Json`; the client's
+/// handshake ping may carry `"enc":"bin"`, and a worker that acks it
+/// (`"enc":"bin"` echoed on the ping response) switches both directions of
+/// the session to `Binary` from the next frame on.  Workers that predate
+/// the binary codec ignore the hint, so negotiation is backward-safe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Encoding {
+    /// Debug/interop mode: UTF-8 JSON bodies (`value_to_json` codec).
+    Json,
+    /// Compact tagged binary bodies (`super::bin` codec).
+    Binary,
+}
+
+impl Encoding {
+    /// Wire token (also the `--shard-encoding` CLI token).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Encoding::Json => "json",
+            Encoding::Binary => "bin",
+        }
+    }
+
+    /// Parse a CLI/env token; empty and `auto` mean "no preference"
+    /// (caller applies the default, which is `Binary`).
+    pub fn parse_opt(s: &str) -> anyhow::Result<Option<Encoding>> {
+        match s.trim() {
+            "" | "auto" => Ok(None),
+            "json" => Ok(Some(Encoding::Json)),
+            "bin" | "binary" => Ok(Some(Encoding::Binary)),
+            other => anyhow::bail!("bad encoding {other:?} (expected json|binary|auto)"),
+        }
+    }
+}
+
 // ---- framing --------------------------------------------------------------
 
-/// Write one `len(u32 LE) + JSON` frame and flush it.  An oversized body
+/// Write one `len(u32 LE) + body` frame and flush it.  An oversized body
 /// is a hard error — a truncated `as u32` length prefix would silently
 /// desync the stream instead.
-pub fn write_frame(w: &mut impl Write, msg: &Json) -> anyhow::Result<()> {
-    let body = msg.to_string().into_bytes();
+pub fn write_frame_bytes(w: &mut impl Write, body: &[u8]) -> anyhow::Result<()> {
     anyhow::ensure!(
         body.len() <= MAX_FRAME,
         "frame body {} bytes exceeds cap {MAX_FRAME} (split the batch)",
         body.len()
     );
     w.write_all(&(body.len() as u32).to_le_bytes())?;
-    w.write_all(&body)?;
+    w.write_all(body)?;
     w.flush()?;
     Ok(())
 }
 
-/// Read one frame.  `Ok(None)` on clean EOF (stream closed between
-/// frames); errors on truncation mid-frame, oversized lengths, or a body
-/// that is not valid JSON.
-pub fn read_frame(r: &mut impl Read) -> anyhow::Result<Option<Json>> {
+/// Read one raw frame body.  `Ok(None)` on clean EOF (stream closed
+/// between frames); errors on truncation mid-frame or oversized lengths.
+pub fn read_frame_bytes(r: &mut impl Read) -> anyhow::Result<Option<Vec<u8>>> {
     let mut len4 = [0u8; 4];
     match r.read_exact(&mut len4) {
         Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
@@ -54,8 +91,36 @@ pub fn read_frame(r: &mut impl Read) -> anyhow::Result<Option<Json>> {
     anyhow::ensure!(len <= MAX_FRAME, "frame length {len} exceeds cap {MAX_FRAME}");
     let mut body = vec![0u8; len];
     r.read_exact(&mut body)?;
-    let text = std::str::from_utf8(&body)?;
-    Ok(Some(Json::parse(text)?))
+    Ok(Some(body))
+}
+
+/// Write one JSON frame.
+pub fn write_frame(w: &mut impl Write, msg: &Json) -> anyhow::Result<()> {
+    write_frame_bytes(w, msg.to_string().as_bytes())
+}
+
+/// Read one JSON frame (errors additionally on a body that is not valid
+/// JSON — in JSON mode that is stream corruption, not an app error).
+pub fn read_frame(r: &mut impl Read) -> anyhow::Result<Option<Json>> {
+    match read_frame_bytes(r)? {
+        None => Ok(None),
+        Some(body) => {
+            let text = std::str::from_utf8(&body)?;
+            Ok(Some(Json::parse(text)?))
+        }
+    }
+}
+
+/// Does this error chain bottom out in a socket read timeout?  Read
+/// timeouts surface as `WouldBlock` (Unix `SO_RCVTIMEO`) or `TimedOut`
+/// from `read_exact`, wrapped in anyhow context by the framing layer.
+pub fn is_timeout(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| {
+        matches!(
+            c.downcast_ref::<std::io::Error>().map(std::io::Error::kind),
+            Some(std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+        )
+    })
 }
 
 // ---- value codec ----------------------------------------------------------
@@ -95,7 +160,9 @@ fn shape_from(j: &Json) -> anyhow::Result<Vec<usize>> {
 /// integer range of every element.
 pub fn value_from_json(j: &Json) -> anyhow::Result<Value> {
     let shape = shape_from(j)?;
-    let elems = shape.iter().product::<usize>().max(1);
+    // No `.max(1)`: a scalar's empty shape products to 1 on its own, and a
+    // zero dim means a legitimate zero-element tensor (0 payload words).
+    let elems = shape.iter().product::<usize>();
     match j.req("t")?.as_str() {
         Some("f32") => {
             let bits = j
@@ -308,6 +375,40 @@ mod tests {
         let iback =
             value_from_json(&Json::parse(&value_to_json(&iv).to_string()).unwrap()).unwrap();
         assert_eq!(iback.as_i32().unwrap(), &[i32::MIN, -1, 0, i32::MAX]);
+    }
+
+    #[test]
+    fn zero_element_tensors_roundtrip_json() {
+        for (v, shape) in [
+            (Value::f32(vec![0], vec![]), vec![0]),
+            (Value::f32(vec![0, 5], vec![]), vec![0, 5]),
+            (Value::i32(vec![0], vec![]), vec![0]),
+        ] {
+            let back =
+                value_from_json(&Json::parse(&value_to_json(&v).to_string()).unwrap()).unwrap();
+            assert_eq!(back.shape(), &shape[..], "shape survives");
+            assert_eq!(back, v, "zero-element value must roundtrip");
+        }
+    }
+
+    #[test]
+    fn encoding_tokens_parse() {
+        assert_eq!(Encoding::parse_opt("").unwrap(), None);
+        assert_eq!(Encoding::parse_opt("auto").unwrap(), None);
+        assert_eq!(Encoding::parse_opt("json").unwrap(), Some(Encoding::Json));
+        assert_eq!(Encoding::parse_opt("bin").unwrap(), Some(Encoding::Binary));
+        assert_eq!(Encoding::parse_opt("binary").unwrap(), Some(Encoding::Binary));
+        assert!(Encoding::parse_opt("msgpack").is_err());
+        assert_eq!(Encoding::Binary.as_str(), "bin");
+    }
+
+    #[test]
+    fn timeouts_are_detected_through_anyhow_chains() {
+        let raw = std::io::Error::new(std::io::ErrorKind::WouldBlock, "timed out");
+        let wrapped = anyhow::Error::from(raw).context("reading frame");
+        assert!(is_timeout(&wrapped));
+        let other = anyhow::anyhow!("plain failure");
+        assert!(!is_timeout(&other));
     }
 
     #[test]

@@ -2,24 +2,37 @@
 //! subcommand.
 //!
 //! A worker owns one in-process **reference** [`Runtime`] and serves
-//! [`proto`] frames over stdio — requests on stdin, responses on stdout,
-//! logging (stderr) untouched.  Artifacts load lazily through the normal
-//! `Runtime` cache on first exec, so a respawned worker needs no state
+//! [`proto`] frames over a transport — stdio by default (requests on
+//! stdin, responses on stdout, logging/stderr untouched), or TCP via
+//! `autoq worker --listen <addr>` (accept loop, **one session at a
+//! time**; `exit` or EOF ends the session, not the process).  Artifacts
+//! load lazily through the normal `Runtime` cache on first exec, so a
+//! respawned worker — or a reconnecting TCP client — needs no state
 //! replay: every request is self-contained (the executables are pure —
 //! parameters, optimizer moments and RNG-derived inputs all travel as
 //! values), which is what makes the client's crash-replay sound.
 //!
+//! Sessions start in JSON; a handshake ping carrying `"enc":"bin"` is
+//! acked and switches the session to the binary codec (`super::bin`).  In
+//! binary mode a malformed request body is an app error (`RESP_ERR`, stay
+//! up), while undecodable JSON remains connection-fatal — in JSON mode a
+//! broken body means the framing itself has desynced.
+//!
 //! The backend is pinned to `reference` regardless of `$AUTOQ_BACKEND`, so
 //! a worker can never recursively open another shard pool.
 
-use std::io::{BufWriter, Write};
+use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpListener;
+use std::time::Duration;
 
-use crate::runtime::shard::proto::{self, Request};
+use crate::runtime::shard::bin;
+use crate::runtime::shard::proto::{self, Encoding, Request};
 use crate::runtime::{BackendKind, Parallelism, Runtime};
+use crate::util::json::Json;
 
-/// Serve requests until `exit` or EOF.  `threads` is this worker's inner
-/// eval-thread budget (the client passes its per-process share of the
-/// total via `--threads`).
+/// Serve stdio requests until `exit` or EOF.  `threads` is this worker's
+/// inner eval-thread budget (the client passes its per-process share of
+/// the total via `--threads`).
 pub fn run(threads: Option<Parallelism>) -> anyhow::Result<()> {
     let mut rt =
         Runtime::open_with_opts(&Runtime::default_dir(), BackendKind::Reference, threads)?;
@@ -30,28 +43,127 @@ pub fn run(threads: Option<Parallelism>) -> anyhow::Result<()> {
     serve(&mut rt, &mut rx, &mut tx)
 }
 
-/// The transport-agnostic loop behind [`run`]: one response frame per
-/// request frame, in order.  Split out so tests (and a future TCP
-/// transport) can drive it over any `Read`/`Write` pair.
+/// Serve the shard protocol over TCP: bind `listen`, print the resolved
+/// address (so `--listen 127.0.0.1:0` callers can discover the port), then
+/// accept one session at a time until a shutdown signal.  `idle` is the
+/// per-session read timeout — a client that stalls mid-frame or goes
+/// silent for that long is dropped and the accept loop continues
+/// (`None` = wait forever).
+pub fn run_listen(
+    listen: &str,
+    threads: Option<Parallelism>,
+    idle: Option<Duration>,
+) -> anyhow::Result<()> {
+    let mut rt =
+        Runtime::open_with_opts(&Runtime::default_dir(), BackendKind::Reference, threads)?;
+    let listener = TcpListener::bind(listen)
+        .map_err(|e| anyhow::anyhow!("worker cannot bind {listen}: {e}"))?;
+    let addr = listener.local_addr()?;
+    println!("autoq worker listening on {addr}");
+    std::io::stdout().flush().ok();
+    // Nonblocking accept so the loop can poll the shutdown flag between
+    // connection attempts (same shape as the serve daemon's accept loop).
+    listener.set_nonblocking(true)?;
+    loop {
+        if crate::util::signal::shutdown_requested() {
+            crate::info!("worker: shutdown signal, leaving accept loop");
+            return Ok(());
+        }
+        let (stream, peer) = match listener.accept() {
+            Ok(conn) => conn,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+                continue;
+            }
+            Err(e) => return Err(anyhow::anyhow!("worker accept failed: {e}")),
+        };
+        stream.set_nonblocking(false)?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(idle)?;
+        crate::debug!("worker: session from {peer}");
+        let mut rx = BufReader::new(stream.try_clone()?);
+        let mut tx = BufWriter::new(stream);
+        match serve(&mut rt, &mut rx, &mut tx) {
+            Ok(()) => crate::debug!("worker: session from {peer} ended cleanly"),
+            Err(e) if proto::is_timeout(&e) => {
+                crate::warn_!("worker: session from {peer} idle-timed out, dropping it");
+            }
+            Err(e) => crate::warn_!("worker: session from {peer} failed: {e:#}"),
+        }
+    }
+}
+
+/// The transport-agnostic loop behind [`run`]/[`run_listen`]: one response
+/// frame per request frame, in order, with per-session encoding
+/// negotiation.  Split out so tests can drive it over any `Read`/`Write`
+/// pair.
 pub fn serve(
     rt: &mut Runtime,
     rx: &mut impl std::io::Read,
     tx: &mut impl Write,
 ) -> anyhow::Result<()> {
-    while let Some(msg) = proto::read_frame(rx)? {
-        let resp = match proto::request_from_json(&msg) {
-            Ok(Request::Exit) => break,
-            Ok(Request::Ping) => proto::ok_empty_json(std::process::id()),
-            Ok(Request::Exec { artifact, batches }) => match rt.exec_batch(&artifact, &batches) {
-                Ok(outs) => proto::ok_json(&outs),
-                // Deterministic application failure: report it, stay up.
-                Err(e) => proto::err_json(&format!("{e:#}")),
-            },
-            Err(e) => proto::err_json(&format!("malformed request: {e:#}")),
-        };
-        proto::write_frame(tx, &resp)?;
+    let mut enc = Encoding::Json;
+    while let Some(raw) = proto::read_frame_bytes(rx)? {
+        match enc {
+            Encoding::Json => {
+                // Invalid JSON here is framing desync: connection-fatal.
+                let msg = Json::parse(std::str::from_utf8(&raw)?)?;
+                if is_binary_handshake(&msg) {
+                    proto::write_frame(tx, &binary_ack_json(std::process::id()))?;
+                    enc = Encoding::Binary;
+                    continue;
+                }
+                let resp = match proto::request_from_json(&msg) {
+                    Ok(Request::Exit) => break,
+                    Ok(Request::Ping) => proto::ok_empty_json(std::process::id()),
+                    Ok(Request::Exec { artifact, batches }) => {
+                        match rt.exec_batch(&artifact, &batches) {
+                            Ok(outs) => proto::ok_json(&outs),
+                            // Deterministic application failure: report
+                            // it, stay up.
+                            Err(e) => proto::err_json(&format!("{e:#}")),
+                        }
+                    }
+                    Err(e) => proto::err_json(&format!("malformed request: {e:#}")),
+                };
+                proto::write_frame(tx, &resp)?;
+            }
+            Encoding::Binary => {
+                let resp = match bin::request_from_bytes(&raw) {
+                    Ok(Request::Exit) => break,
+                    Ok(Request::Ping) => bin::ok_empty_bytes(std::process::id()),
+                    Ok(Request::Exec { artifact, batches }) => {
+                        match rt.exec_batch(&artifact, &batches) {
+                            Ok(outs) => bin::ok_bytes(&outs),
+                            Err(e) => bin::err_bytes(&format!("{e:#}")),
+                        }
+                    }
+                    // Tagged bodies cannot desync the length-prefixed
+                    // framing, so a bad body is an app error: stay up.
+                    Err(e) => bin::err_bytes(&format!("malformed request: {e:#}")),
+                };
+                proto::write_frame_bytes(tx, &resp)?;
+            }
+        }
     }
     Ok(())
+}
+
+/// A ping carrying `"enc":"bin"` — the upgrade request.  Old workers parse
+/// it as a plain ping (`request_from_json` ignores unknown fields), which
+/// is exactly the backward-compatible non-ack.
+fn is_binary_handshake(msg: &Json) -> bool {
+    msg.get("op").and_then(Json::as_str) == Some("ping")
+        && msg.get("enc").and_then(Json::as_str) == Some(Encoding::Binary.as_str())
+}
+
+/// Ping ack that also echoes the accepted encoding.
+fn binary_ack_json(pid: u32) -> Json {
+    Json::obj(vec![
+        ("ok", true.into()),
+        ("pid", (pid as usize).into()),
+        ("enc", Encoding::Binary.as_str().into()),
+    ])
 }
 
 #[cfg(test)]
@@ -59,13 +171,17 @@ mod tests {
     use super::*;
     use crate::runtime::value::Value;
 
-    fn roundtrip(requests: &[crate::util::json::Json]) -> Vec<crate::util::json::Json> {
-        let mut rt = Runtime::open_with_opts(
+    fn test_rt() -> Runtime {
+        Runtime::open_with_opts(
             &std::env::temp_dir(),
             BackendKind::Reference,
             Some(Parallelism::new(1)),
         )
-        .unwrap();
+        .unwrap()
+    }
+
+    fn roundtrip(requests: &[crate::util::json::Json]) -> Vec<crate::util::json::Json> {
+        let mut rt = test_rt();
         let mut input = Vec::new();
         for req in requests {
             proto::write_frame(&mut input, req).unwrap();
@@ -97,5 +213,37 @@ mod tests {
         assert_eq!(frames.len(), 2, "the loop must survive an exec failure");
         assert!(proto::response_outputs(&frames[0]).is_err());
         assert!(proto::response_outputs(&frames[1]).is_ok());
+    }
+
+    #[test]
+    fn binary_handshake_switches_the_session_encoding() {
+        let mut rt = test_rt();
+        let mut input = Vec::new();
+        let upgrade =
+            Json::obj(vec![("op", "ping".into()), ("enc", Encoding::Binary.as_str().into())]);
+        proto::write_frame(&mut input, &upgrade).unwrap();
+        // After the ack everything must be binary — including errors.
+        proto::write_frame_bytes(&mut input, &bin::ping_bytes()).unwrap();
+        proto::write_frame_bytes(&mut input, &[0x7f]).unwrap(); // malformed
+        proto::write_frame_bytes(&mut input, &bin::exit_bytes()).unwrap();
+        let mut out = Vec::new();
+        serve(&mut rt, &mut &input[..], &mut out).unwrap();
+        let mut r = &out[..];
+        let ack = proto::read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(ack.get("enc").and_then(Json::as_str), Some("bin"), "ack echoes encoding");
+        assert!(proto::response_outputs(&ack).unwrap().is_empty());
+        let pong = proto::read_frame_bytes(&mut r).unwrap().unwrap();
+        assert!(bin::response_from_bytes(&pong).unwrap().is_empty());
+        let err = proto::read_frame_bytes(&mut r).unwrap().unwrap();
+        let msg = bin::response_from_bytes(&err).unwrap_err();
+        assert!(format!("{msg:#}").contains("malformed request"), "bad body is an app error");
+        assert!(proto::read_frame_bytes(&mut r).unwrap().is_none(), "exit ends the session");
+    }
+
+    #[test]
+    fn plain_ping_does_not_upgrade() {
+        let frames = roundtrip(&[proto::ping_json(), proto::exit_json()]);
+        assert_eq!(frames.len(), 1);
+        assert_eq!(frames[0].get("enc"), None, "no enc hint → no ack, session stays JSON");
     }
 }

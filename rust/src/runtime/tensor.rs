@@ -11,9 +11,11 @@ pub struct Tensor {
 }
 
 impl Tensor {
+    /// Scalars use shape `[]` (empty product = 1 element); a zero anywhere
+    /// in the shape means a legitimate zero-element tensor.
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(
-            shape.iter().product::<usize>().max(1),
+            shape.iter().product::<usize>(),
             data.len(),
             "shape {shape:?} vs data len {}",
             data.len()
@@ -22,12 +24,12 @@ impl Tensor {
     }
 
     pub fn zeros(shape: Vec<usize>) -> Self {
-        let n = shape.iter().product::<usize>().max(1);
+        let n = shape.iter().product::<usize>();
         Tensor { shape, data: vec![0.0; n] }
     }
 
     pub fn full(shape: Vec<usize>, v: f32) -> Self {
-        let n = shape.iter().product::<usize>().max(1);
+        let n = shape.iter().product::<usize>();
         Tensor { shape, data: vec![v; n] }
     }
 
@@ -66,6 +68,15 @@ mod tests {
     #[should_panic]
     fn tensor_rejects_bad_shape() {
         let _ = Tensor::new(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn zero_element_tensors_construct() {
+        let t = Tensor::new(vec![0], vec![]);
+        assert_eq!(t.elems(), 0);
+        let t = Tensor::zeros(vec![0, 5]);
+        assert_eq!(t.elems(), 0);
+        assert_eq!(t.shape, vec![0, 5]);
     }
 
     #[test]

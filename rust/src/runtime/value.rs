@@ -26,7 +26,7 @@ impl Value {
 
     pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Value {
         assert_eq!(
-            shape.iter().product::<usize>().max(1),
+            shape.iter().product::<usize>(),
             data.len(),
             "shape {shape:?} vs data len {}",
             data.len()

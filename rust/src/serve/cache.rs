@@ -132,19 +132,63 @@ pub fn param_fingerprint(names: &[String], tensors: &[crate::runtime::Tensor]) -
     h.finish()
 }
 
-/// The daemon-wide store: one map, global hit/miss counters.  Entries are
-/// tiny (three scalars), so there is no eviction — a search that evaluates
-/// ten thousand configs stores ~240 KB.
-#[derive(Debug, Default)]
+/// One cached evaluation plus the logical time of its last touch (an
+/// LRU-ish recency stamp — see [`EvalCache::insert`]).
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    result: EvalResult,
+    tick: u64,
+}
+
+/// Default entry cap when `$AUTOQ_CACHE_MAX` is unset.  Entries are tiny
+/// (three scalars + a stamp, ~40 bytes), so the default is generous — a
+/// million entries is ~40 MB, far beyond what any sane sweep evaluates —
+/// while still bounding a daemon that runs for weeks.
+const DEFAULT_MAX_ENTRIES: usize = 1 << 20;
+
+/// The daemon-wide store: one map, global hit/miss counters, and an entry
+/// cap with least-recently-used eviction.  The cap comes from
+/// `$AUTOQ_CACHE_MAX` (`0` = unlimited), else [`DEFAULT_MAX_ENTRIES`].
+/// Eviction only ever drops entries — a surviving key still returns the
+/// same byte-identical `EvalResult`, so hit/miss *semantics* and cached-
+/// report byte-identity are unaffected; only the hit *rate* can change.
+#[derive(Debug)]
 pub struct EvalCache {
-    map: Mutex<HashMap<u64, EvalResult>>,
+    map: Mutex<HashMap<u64, Entry>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// `u64::MAX` plays "unlimited" so the hot path is one compare.
+    max_entries: usize,
+    /// Logical clock: bumped on every get/insert, stamped onto entries.
+    tick: AtomicU64,
 }
 
 impl EvalCache {
     pub fn new() -> EvalCache {
-        EvalCache::default()
+        let max = match std::env::var("AUTOQ_CACHE_MAX") {
+            Ok(s) if !s.trim().is_empty() => match s.trim().parse::<usize>() {
+                Ok(0) => usize::MAX,
+                Ok(n) => n,
+                Err(_) => {
+                    crate::warn_!("ignoring non-numeric AUTOQ_CACHE_MAX={s:?}");
+                    DEFAULT_MAX_ENTRIES
+                }
+            },
+            _ => DEFAULT_MAX_ENTRIES,
+        };
+        EvalCache::with_cap(max)
+    }
+
+    /// A cache holding at most `max_entries` (tests pin small caps;
+    /// `usize::MAX` = unlimited).
+    pub fn with_cap(max_entries: usize) -> EvalCache {
+        EvalCache {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            max_entries: max_entries.max(1),
+            tick: AtomicU64::new(0),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -161,7 +205,14 @@ impl EvalCache {
     }
 
     fn get(&self, key: u64) -> Option<EvalResult> {
-        let hit = self.map.lock().expect("eval cache poisoned").get(&key).copied();
+        let now = self.tick.fetch_add(1, Ordering::Relaxed);
+        let hit = {
+            let mut map = self.map.lock().expect("eval cache poisoned");
+            map.get_mut(&key).map(|e| {
+                e.tick = now; // refresh recency on hit
+                e.result
+            })
+        };
         match hit {
             Some(r) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
@@ -175,7 +226,30 @@ impl EvalCache {
     }
 
     fn insert(&self, key: u64, result: EvalResult) {
-        self.map.lock().expect("eval cache poisoned").insert(key, result);
+        let now = self.tick.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.map.lock().expect("eval cache poisoned");
+        if map.len() >= self.max_entries && !map.contains_key(&key) {
+            // At capacity: drop the oldest ~1/8 (at least one) in one
+            // sweep, so eviction cost amortizes instead of running a full
+            // scan per insert right at the cap.
+            let drop_n = (self.max_entries / 8).max(1);
+            let mut ticks: Vec<u64> = map.values().map(|e| e.tick).collect();
+            ticks.sort_unstable();
+            let cutoff = ticks[(drop_n - 1).min(ticks.len() - 1)];
+            map.retain(|_, e| e.tick > cutoff);
+            crate::debug!(
+                "eval cache at cap {}: evicted {} least-recently-used entr(ies)",
+                self.max_entries,
+                ticks.len() - map.len()
+            );
+        }
+        map.insert(key, Entry { result, tick: now });
+    }
+}
+
+impl Default for EvalCache {
+    fn default() -> EvalCache {
+        EvalCache::new()
     }
 }
 
@@ -281,6 +355,45 @@ mod tests {
         assert_eq!(other.counts(), (1, 0));
         assert_eq!(handle.counts(), (1, 1));
         assert_eq!(handle.cache().counts(), (2, 1));
+    }
+
+    #[test]
+    fn capped_cache_evicts_least_recently_used() {
+        let cache = Arc::new(EvalCache::with_cap(8));
+        let handle = CacheHandle::new(cache.clone());
+        let r = |i: usize| EvalResult { accuracy: i as f64, loss: 0.0, images: 1 };
+        for i in 0..8u64 {
+            handle.insert(i, r(i as usize));
+        }
+        assert_eq!(cache.len(), 8);
+        // Touch key 0 so it is the most recently used, then overflow.
+        assert!(handle.get(0).is_some());
+        handle.insert(100, r(100));
+        // The cap holds, the recently-touched key survives, the stalest
+        // keys (1, 2, ...) are the ones that went.
+        assert!(cache.len() <= 8);
+        assert!(handle.get(0).is_some(), "recently-used entry must survive eviction");
+        assert!(handle.get(100).is_some(), "the new entry must be present");
+        assert!(handle.get(1).is_none(), "the least-recently-used entry must be gone");
+        // Semantics of surviving entries are untouched.
+        assert_eq!(handle.get(0).unwrap(), r(0));
+    }
+
+    #[test]
+    fn reinserting_an_existing_key_never_evicts() {
+        let cache = Arc::new(EvalCache::with_cap(4));
+        let handle = CacheHandle::new(cache.clone());
+        let r = EvalResult { accuracy: 0.1, loss: 0.2, images: 3 };
+        for i in 0..4u64 {
+            handle.insert(i, r);
+        }
+        for _ in 0..10 {
+            handle.insert(2, r); // overwrite in place, no eviction sweep
+        }
+        assert_eq!(cache.len(), 4);
+        for i in 0..4u64 {
+            assert!(handle.get(i).is_some(), "key {i} must still be cached");
+        }
     }
 
     #[test]

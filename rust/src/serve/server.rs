@@ -45,7 +45,7 @@ use crate::serve::wire::{self, ServeRequest};
 use crate::util::json::Json;
 
 /// How the daemon opens its coordinators (mirrors the CLI's shared
-/// `--backend`/`--threads`/`--shard-workers` knobs plus `--workers`).
+/// `--backend`/`--threads`/`--shard-*` knobs plus `--workers`).
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// Artifact directory every scheduler worker opens.
@@ -57,8 +57,20 @@ pub struct ServeConfig {
     pub threads: Option<Parallelism>,
     /// Shard worker processes per scheduler worker (shard backend only).
     pub shard_workers: Option<usize>,
+    /// Remote `autoq worker --listen` hosts for the shard backend (`None`
+    /// = `$AUTOQ_SHARD_HOSTS`).  Resolved once, then round-robined into
+    /// disjoint per-scheduler-worker buckets — a listening worker serves
+    /// one session at a time, so daemon workers must not share hosts.
+    pub shard_hosts: Option<Vec<String>>,
+    /// Shard wire encoding (`None` = `$AUTOQ_SHARD_ENCODING`, else binary).
+    pub shard_encoding: Option<crate::runtime::shard::Encoding>,
     /// Scheduler workers (concurrent jobs).
     pub workers: usize,
+    /// Per-connection read timeout: a client silent this long is dropped
+    /// cleanly while the daemon keeps serving (`None` = wait forever).
+    /// Generous by default — `submit --wait` round-trips legitimately sit
+    /// idle for the length of a job.
+    pub idle_timeout: Option<Duration>,
 }
 
 impl Default for ServeConfig {
@@ -68,7 +80,10 @@ impl Default for ServeConfig {
             backend: None,
             threads: None,
             shard_workers: None,
+            shard_hosts: None,
+            shard_encoding: None,
             workers: 2,
+            idle_timeout: Some(Duration::from_secs(600)),
         }
     }
 }
@@ -149,6 +164,11 @@ impl Server {
         );
         let warm_lock = Arc::new(Mutex::new(()));
         let conns = Arc::new(AtomicUsize::new(0));
+        // Resolve the remote shard-host list once, then deal disjoint
+        // buckets to the scheduler workers (single-session listeners must
+        // not be shared — two pools on one host would serialize).
+        let shard_hosts = crate::runtime::shard::resolve_hosts(self.cfg.shard_hosts.clone())?;
+        let host_parts = crate::runtime::shard::partition_hosts(&shard_hosts, self.cfg.workers);
         std::thread::scope(|s| -> anyhow::Result<()> {
             // Scheduler workers.
             for wid in 0..self.cfg.workers {
@@ -156,7 +176,8 @@ impl Server {
                 let cache = self.cache.clone();
                 let warm_lock = warm_lock.clone();
                 let cfg = self.cfg.clone();
-                s.spawn(move || worker_loop(wid, &cfg, inner, queue, cache, warm_lock));
+                let hosts = host_parts[wid].clone();
+                s.spawn(move || worker_loop(wid, &cfg, inner, hosts, queue, cache, warm_lock));
             }
 
             // Accept loop: non-blocking so the shutdown flag is honoured
@@ -180,14 +201,23 @@ impl Server {
                         let queue = self.queue.clone();
                         let cache = self.cache.clone();
                         let conns = conns.clone();
+                        let idle = self.cfg.idle_timeout;
                         conns.fetch_add(1, Ordering::SeqCst);
                         // Detached, not scoped: a client idling in
                         // `read_frame` must not hold the shutdown join
                         // hostage — the grace loop below waits briefly for
                         // handlers still writing a response, then exits.
                         std::thread::spawn(move || {
-                            if let Err(e) = handle_connection(stream, &queue, &cache) {
-                                crate::debug!("serve: connection ended: {e:#}");
+                            match handle_connection(stream, idle, &queue, &cache) {
+                                Ok(()) => {}
+                                // A stalled client is a clean drop, not a
+                                // failure — the daemon keeps serving.
+                                Err(e) if crate::runtime::shard::proto::is_timeout(&e) => {
+                                    crate::debug!(
+                                        "serve: dropping idle connection from {peer}"
+                                    );
+                                }
+                                Err(e) => crate::debug!("serve: connection ended: {e:#}"),
                             }
                             conns.fetch_sub(1, Ordering::SeqCst);
                         });
@@ -215,6 +245,15 @@ impl Server {
                 break;
             }
             std::thread::sleep(Duration::from_millis(25));
+        }
+        let abandoned = conns.load(Ordering::SeqCst);
+        if abandoned > 0 {
+            // Visible, not silent: these detached handlers die with the
+            // process mid-write — clients see a dropped connection.
+            crate::warn_!(
+                "serve: abandoning {abandoned} connection handler(s) still live after the \
+                 drain grace period"
+            );
         }
         let (hits, misses) = self.cache.counts();
         crate::info!(
@@ -253,11 +292,19 @@ fn worker_loop(
     wid: usize,
     cfg: &ServeConfig,
     inner: Parallelism,
+    shard_hosts: Vec<String>,
     queue: Arc<JobQueue>,
     cache: Arc<EvalCache>,
     warm_lock: Arc<Mutex<()>>,
 ) {
-    let opts = RuntimeOpts { threads: Some(inner), shard_workers: cfg.shard_workers };
+    // The explicit (possibly empty) host bucket stops the shard backend
+    // from re-reading $AUTOQ_SHARD_HOSTS and un-partitioning the fleet.
+    let opts = RuntimeOpts {
+        threads: Some(inner),
+        shard_workers: cfg.shard_workers,
+        shard_hosts: Some(shard_hosts),
+        shard_encoding: cfg.shard_encoding,
+    };
     let mut coord = match Coordinator::open_full(&cfg.dir, cfg.backend, opts) {
         Ok(c) => c,
         Err(e) => {
@@ -308,9 +355,13 @@ fn worker_loop(
 /// never the daemon.
 fn handle_connection(
     stream: TcpStream,
+    idle: Option<Duration>,
     queue: &Arc<JobQueue>,
     cache: &Arc<EvalCache>,
 ) -> anyhow::Result<()> {
+    // A silent client times the read out; the caller recognizes it via
+    // `proto::is_timeout` and drops the connection cleanly.
+    stream.set_read_timeout(idle)?;
     let mut reader = stream.try_clone()?;
     let mut writer = stream;
     while let Some(frame) = read_frame(&mut reader)? {

@@ -21,7 +21,7 @@ fn temp_dir(tag: &str) -> PathBuf {
 }
 
 fn open_ref(dir: &Path) -> Runtime {
-    let opts = RuntimeOpts { threads: Some(Parallelism::new(2)), shard_workers: None };
+    let opts = RuntimeOpts { threads: Some(Parallelism::new(2)), ..Default::default() };
     Runtime::open_full(dir, BackendKind::Reference, opts).expect("runtime open")
 }
 

@@ -60,6 +60,7 @@ fn start_daemon(dir: &Path, workers: usize, backend: BackendKind, shard_workers:
         threads: Some(Parallelism::new(2)),
         shard_workers,
         workers,
+        ..ServeConfig::default()
     };
     let server = Server::bind("127.0.0.1:0", cfg).unwrap();
     let addr = server.local_addr().to_string();
@@ -218,6 +219,41 @@ fn malformed_frames_do_not_kill_the_daemon() {
 
     client.shutdown(true).unwrap();
     daemon.thread.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Satellite contract: a connection that goes silent is dropped by the
+/// read timeout instead of pinning its handler forever, and the daemon
+/// keeps serving fresh clients afterwards.
+#[test]
+fn idle_connections_are_dropped_and_the_daemon_keeps_serving() {
+    let dir = temp_dir("idle");
+    seed_params(&dir);
+    let cfg = ServeConfig {
+        dir: dir.clone(),
+        backend: Some(BackendKind::Reference),
+        threads: Some(Parallelism::new(2)),
+        workers: 1,
+        idle_timeout: Some(Duration::from_millis(150)),
+        ..ServeConfig::default()
+    };
+    let server = Server::bind("127.0.0.1:0", cfg).unwrap();
+    let addr = server.local_addr().to_string();
+    let thread = std::thread::spawn(move || server.run());
+
+    // Connect and say nothing: the daemon's read timeout fires and the
+    // connection closes from the far side (our read sees EOF, not a hang).
+    let mut silent = TcpStream::connect(&addr).unwrap();
+    silent.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut buf = [0u8; 8];
+    let n = silent.read(&mut buf).unwrap_or(0);
+    assert_eq!(n, 0, "idle connection must be dropped by the daemon");
+
+    // …and the daemon still answers a fresh, talkative client.
+    let mut client = DaemonClient::connect(&addr).unwrap();
+    assert_eq!(client.ping().unwrap(), std::process::id());
+    client.shutdown(true).unwrap();
+    thread.join().unwrap().unwrap();
     std::fs::remove_dir_all(&dir).ok();
 }
 

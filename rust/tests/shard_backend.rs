@@ -1,24 +1,28 @@
 //! Byte-identity between the in-process `reference` backend and the
-//! multi-process `shard` backend, plus the crash-replay contract.
+//! multi-process `shard` backend, plus the crash-replay contract — over
+//! both transports (subprocess stdio, TCP loopback) and both wire
+//! encodings (JSON, binary).
 //!
 //! The shard determinism rule (DESIGN.md §Sharded backend): every worker
-//! process runs the same pure reference interpreter, the wire codec
-//! preserves f32 bit patterns, and chunk results merge in input order —
-//! so every result below must match the reference backend **bit for
-//! bit** at 1, 2 and 4 worker processes.
+//! runs the same pure reference interpreter, both codecs preserve f32 bit
+//! patterns, and chunk results merge in input order — so every result
+//! below must match the reference backend **bit for bit** at 1, 2 and 4
+//! workers, whatever the transport or encoding.
 //!
 //! Worker binary: the test harness points `$AUTOQ_WORKER_EXE` at the
 //! `autoq` binary Cargo builds for integration tests — the tests' own
 //! executable is the libtest harness, not a shard worker.
 
+use std::io::BufRead;
 use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
 use std::sync::OnceLock;
 
 use autoq::coordinator::{Coordinator, JobSpec, Sweep};
 use autoq::cost::Mode;
 use autoq::data::synth::{Split, SynthDataset};
 use autoq::models::{ModelRunner, ParamStore};
-use autoq::runtime::shard::ShardClient;
+use autoq::runtime::shard::{Encoding, ShardClient};
 use autoq::runtime::{BackendKind, Parallelism, Runtime, RuntimeOpts, Value};
 use autoq::search::{run_search, Granularity, Protocol, SearchConfig};
 use autoq::util::rng::Rng;
@@ -53,8 +57,103 @@ fn open_rt(dir: &Path, kind: BackendKind, workers: usize) -> Runtime {
     let opts = RuntimeOpts {
         threads: Some(Parallelism::new(2)),
         shard_workers: Some(workers),
+        ..Default::default()
     };
     Runtime::open_full(dir, kind, opts).expect("runtime open")
+}
+
+/// A live `autoq worker --listen` process on the loopback interface.
+/// Readiness is synced by parsing the "listening on" line the worker
+/// prints (and flushes) once bound, so `--listen 127.0.0.1:0` callers
+/// learn the resolved port before any client dials in.
+struct TcpWorker {
+    child: Child,
+    addr: String,
+}
+
+impl TcpWorker {
+    fn spawn(exe: &Path, listen: &str) -> TcpWorker {
+        let mut child = Command::new(exe)
+            .arg("worker")
+            .arg("--listen")
+            .arg(listen)
+            .arg("--threads")
+            .arg("1")
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn tcp worker");
+        let stdout = child.stdout.take().expect("stdout piped");
+        let mut lines = std::io::BufReader::new(stdout).lines();
+        let addr = loop {
+            let line = lines
+                .next()
+                .expect("worker exited before announcing its address")
+                .expect("read worker stdout");
+            if let Some(rest) = line.strip_prefix("autoq worker listening on ") {
+                break rest.trim().to_string();
+            }
+        };
+        TcpWorker { child, addr }
+    }
+
+    /// SIGKILL the worker and reap it — the mid-run "machine fell over".
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for TcpWorker {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// Shard-backend opts for a given transport/encoding cell: `hosts` empty
+/// means local subprocesses, else pure-TCP (zero local slots, passed
+/// explicitly so `$AUTOQ_SHARD_WORKERS` in CI cannot re-add them).
+fn shard_opts(workers: usize, hosts: Vec<String>, enc: Encoding) -> RuntimeOpts {
+    let local = if hosts.is_empty() { workers } else { 0 };
+    RuntimeOpts {
+        threads: Some(Parallelism::new(2)),
+        shard_workers: Some(local),
+        shard_hosts: Some(hosts),
+        shard_encoding: Some(enc),
+    }
+}
+
+/// Synthesize valid inputs for `artifact` straight from the builtin
+/// manifest spec — codec and fan-out don't care that the data is random.
+fn synth_batches(artifact: &str, sets: usize, seed: u64) -> Vec<Vec<Value>> {
+    let manifest = autoq::runtime::reference::builtin_manifest();
+    let spec = manifest.artifact(artifact).unwrap().clone();
+    let mut rng = Rng::new(seed);
+    (0..sets)
+        .map(|_| {
+            spec.inputs
+                .iter()
+                .map(|t| {
+                    let data = (0..t.elems()).map(|_| rng.f32() - 0.5).collect();
+                    Value::f32(t.shape.clone(), data)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Assert two exec_batch results carry identical f32 bit patterns.
+fn assert_bits_equal(got: &[Vec<Value>], want: &[Vec<Value>], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: set count changed");
+    for (i, (g_set, w_set)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g_set.len(), w_set.len(), "{what}: batch {i} arity changed");
+        for (g, w) in g_set.iter().zip(w_set) {
+            let (g, w) = (g.as_f32().unwrap(), w.as_f32().unwrap());
+            assert_eq!(g.shape, w.shape, "{what}: batch {i} shape changed");
+            let diverged = g.data.iter().zip(&w.data).any(|(a, b)| a.to_bits() != b.to_bits());
+            assert!(!diverged, "{what}: batch {i} bytes changed");
+        }
+    }
 }
 
 /// `EvalResult` bits must match the reference backend at every worker
@@ -124,6 +223,7 @@ fn search_job_reports_are_byte_identical_at_1_2_4_workers() {
         let opts = RuntimeOpts {
             threads: Some(Parallelism::new(2)),
             shard_workers: Some(workers),
+            ..Default::default()
         };
         let mut coord = Coordinator::open_full(&dir, Some(backend), opts).unwrap();
         let mut report = coord.run(&spec).unwrap();
@@ -231,44 +331,157 @@ fn killed_worker_is_respawned_and_the_batch_replayed_unchanged() {
     let client = ShardClient::new(exe, 2);
     client.set_total_threads(2);
 
-    // Synthesize valid inputs straight from the builtin manifest spec —
-    // the codec and fan-out don't care that the network is random.
-    let manifest = autoq::runtime::reference::builtin_manifest();
-    let spec = manifest.artifact("ddpg_act_s16").unwrap().clone();
-    let mut rng = Rng::new(123);
-    let values: Vec<Vec<Value>> = (0..6)
-        .map(|_| {
-            spec.inputs
-                .iter()
-                .map(|t| {
-                    let data = (0..t.elems()).map(|_| rng.f32() - 0.5).collect();
-                    Value::f32(t.shape.clone(), data)
-                })
-                .collect()
-        })
-        .collect();
+    let values = synth_batches("ddpg_act_s16", 6, 123);
     let batches: Vec<Vec<&Value>> =
         values.iter().map(|set| set.iter().collect()).collect();
 
-    let baseline = client.exec_batch(&spec.name, &batches).unwrap();
+    let baseline = client.exec_batch("ddpg_act_s16", &batches).unwrap();
     assert_eq!(baseline.len(), batches.len());
     assert_eq!(client.restarts(), 0, "healthy run must not restart anything");
 
     client.kill_worker(0);
-    let replayed = client.exec_batch(&spec.name, &batches).unwrap();
+    let replayed = client.exec_batch("ddpg_act_s16", &batches).unwrap();
     assert_eq!(client.restarts(), 1, "exactly the killed worker must restart");
-    assert_eq!(replayed.len(), baseline.len());
-    for (i, (got, want)) in replayed.iter().zip(&baseline).enumerate() {
-        assert_eq!(got.len(), want.len(), "batch {i} arity changed");
-        for (g, w) in got.iter().zip(want) {
-            let (g, w) = (g.as_f32().unwrap(), w.as_f32().unwrap());
-            assert_eq!(g.shape, w.shape);
-            let diverged = g
-                .data
-                .iter()
-                .zip(&w.data)
-                .any(|(a, b)| a.to_bits() != b.to_bits());
-            assert!(!diverged, "batch {i} bytes changed after the crash replay");
+    assert_bits_equal(&replayed, &baseline, "crash replay");
+}
+
+/// The transport × encoding matrix: subprocess and TCP-loopback pools, in
+/// JSON and binary, at 1/2/4 workers, must all reproduce the reference
+/// backend's `EvalResult` bit for bit.  The four listening workers are
+/// spawned once and re-dialed per cell — a client `Drop` ends its TCP
+/// *session*, not the worker, so reuse also exercises session turnover.
+#[test]
+fn eval_is_byte_identical_across_transports_and_encodings() {
+    let dir = temp_dir("matrix");
+    let exe = worker_exe();
+    let data = SynthDataset::new(42);
+    let eval = |rt: &mut Runtime| {
+        let meta = rt.manifest.model("cif10").unwrap().clone();
+        let params = ParamStore::init(&meta.params, &mut Rng::new(42));
+        let wbits = vec![5u8; meta.w_channels];
+        let abits = vec![4u8; meta.a_channels];
+        let runner = ModelRunner::new(meta, params).unwrap();
+        runner.eval_config(rt, Mode::Quant, &wbits, &abits, &data, Split::Val, 3).unwrap()
+    };
+    let want = eval(&mut open_rt(&dir, BackendKind::Reference, 1));
+
+    let fleet: Vec<TcpWorker> =
+        (0..4).map(|_| TcpWorker::spawn(&exe, "127.0.0.1:0")).collect();
+    for enc in [Encoding::Json, Encoding::Binary] {
+        for workers in [1usize, 2, 4] {
+            for tcp in [false, true] {
+                let hosts = if tcp {
+                    fleet[..workers].iter().map(|w| w.addr.clone()).collect()
+                } else {
+                    Vec::new()
+                };
+                let label = format!(
+                    "{} / {} / {workers} worker(s)",
+                    if tcp { "tcp" } else { "subprocess" },
+                    enc.as_str()
+                );
+                let opts = shard_opts(workers, hosts, enc);
+                let mut rt = Runtime::open_full(&dir, BackendKind::Shard, opts)
+                    .expect("shard runtime open");
+                let got = eval(&mut rt);
+                assert_eq!(
+                    got.accuracy.to_bits(),
+                    want.accuracy.to_bits(),
+                    "accuracy diverged at {label}"
+                );
+                assert_eq!(got.loss.to_bits(), want.loss.to_bits(), "loss diverged at {label}");
+                assert_eq!(got.images, want.images, "image count diverged at {label}");
+            }
         }
     }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Whole search `JobReport` JSONs across the three transport/encoding
+/// combinations the CI lanes pin: subprocess/JSON, subprocess/binary and
+/// TCP-loopback/binary must all emit the reference report byte for byte.
+#[test]
+fn search_job_reports_match_across_transport_and_encoding() {
+    let dir = temp_dir("search_matrix");
+    let exe = worker_exe();
+    {
+        let mut coord = Coordinator::open_with(&dir, Some(BackendKind::Reference)).unwrap();
+        coord.run(&JobSpec::pretrain("cif10").steps(3).build().unwrap()).unwrap();
+    }
+    let spec = JobSpec::search("cif10")
+        .mode(Mode::Quant)
+        .protocol(Protocol::resource_constrained(5.0))
+        .granularity(Granularity::Network(5))
+        .eval_batches(2)
+        .seed(11)
+        .build()
+        .unwrap();
+    let run = |backend: Option<BackendKind>, opts: RuntimeOpts| {
+        let mut coord = Coordinator::open_full(&dir, backend, opts).unwrap();
+        let mut report = coord.run(&spec).unwrap();
+        report.secs = 0.0; // wall clock is the one legitimately varying field
+        report.to_json().to_string()
+    };
+    let ref_opts = RuntimeOpts { threads: Some(Parallelism::new(2)), ..Default::default() };
+    let want = run(Some(BackendKind::Reference), ref_opts);
+
+    let fleet: Vec<TcpWorker> = (0..2).map(|_| TcpWorker::spawn(&exe, "127.0.0.1:0")).collect();
+    let hosts: Vec<String> = fleet.iter().map(|w| w.addr.clone()).collect();
+    let combos = [
+        ("subprocess/json", shard_opts(2, Vec::new(), Encoding::Json)),
+        ("subprocess/binary", shard_opts(2, Vec::new(), Encoding::Binary)),
+        ("tcp/binary", shard_opts(2, hosts, Encoding::Binary)),
+    ];
+    for (label, opts) in combos {
+        let got = run(Some(BackendKind::Shard), opts);
+        assert_eq!(got, want, "JobReport JSON diverged on {label}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Mid-run TCP worker death: SIGKILL the remote worker, bring a
+/// replacement up on the **same** port, and assert the next batch rides
+/// the reconnect-and-replay path to an unchanged result with exactly one
+/// restart — the remote twin of the subprocess crash test above.
+#[test]
+fn killed_tcp_worker_is_reconnected_and_the_batch_replayed_unchanged() {
+    let exe = worker_exe();
+    let mut first = TcpWorker::spawn(&exe, "127.0.0.1:0");
+    let addr = first.addr.clone();
+    let client = ShardClient::with_opts(exe.clone(), 0, vec![addr.clone()], Encoding::Binary);
+
+    let values = synth_batches("ddpg_act_s16", 6, 123);
+    let batches: Vec<Vec<&Value>> = values.iter().map(|set| set.iter().collect()).collect();
+
+    let baseline = client.exec_batch("ddpg_act_s16", &batches).unwrap();
+    assert_eq!(client.restarts(), 0, "healthy run must not reconnect anything");
+
+    // The worker machine "falls over" and comes back on the same address
+    // (std's TCP bind sets SO_REUSEADDR on Unix, so the port is reusable
+    // immediately); the client only finds out mid-request.
+    first.kill();
+    let _second = TcpWorker::spawn(&exe, &addr);
+
+    let replayed = client.exec_batch("ddpg_act_s16", &batches).unwrap();
+    assert_eq!(client.restarts(), 1, "exactly one reconnect must happen");
+    assert_bits_equal(&replayed, &baseline, "tcp reconnect replay");
+}
+
+/// Session-level failure (our socket dies, the worker survives): the
+/// client must reconnect to the *same* worker and replay.  Also proves a
+/// listening worker outlives its sessions.
+#[test]
+fn dropped_tcp_session_reconnects_to_the_same_worker() {
+    let exe = worker_exe();
+    let worker = TcpWorker::spawn(&exe, "127.0.0.1:0");
+    let client = ShardClient::with_opts(exe.clone(), 0, vec![worker.addr.clone()], Encoding::Binary);
+
+    let values = synth_batches("ddpg_act_s16", 4, 321);
+    let batches: Vec<Vec<&Value>> = values.iter().map(|set| set.iter().collect()).collect();
+
+    let baseline = client.exec_batch("ddpg_act_s16", &batches).unwrap();
+    client.kill_worker(0); // shuts down the session socket, not the worker
+    let replayed = client.exec_batch("ddpg_act_s16", &batches).unwrap();
+    assert_eq!(client.restarts(), 1, "exactly one reconnect must happen");
+    assert_bits_equal(&replayed, &baseline, "session reconnect replay");
 }

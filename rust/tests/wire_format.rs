@@ -1,0 +1,129 @@
+//! Wire-format regression tests for the shard protocol's binary encoding
+//! (DESIGN.md §Wire format): a representative exec request — res18
+//! parameters + validation batches, the search hot path's payload — must
+//! shrink at least 5× against the JSON encoding, and must round-trip with
+//! every f32 bit pattern intact.
+//!
+//! The JSON side is *measured*, not materialized: one full frame for this
+//! payload is hundreds of megabytes of text, so the test sums exact
+//! per-set string lengths plus the envelope and separators instead of
+//! building the whole string.
+
+use autoq::data::synth::{Split, SynthDataset};
+use autoq::models::ParamStore;
+use autoq::runtime::shard::proto::{self, Request};
+use autoq::runtime::shard::bin;
+use autoq::runtime::Value;
+use autoq::util::json::Json;
+use autoq::util::rng::Rng;
+
+/// The shared payload: 2 eval input sets in the exact row layout
+/// `eval_config` dispatches — parameters and bit vectors shared across
+/// sets (same `&Value` pointers, which is what the binary encoder
+/// deduplicates), images/labels per set.
+struct Payload {
+    param_vals: Vec<Value>,
+    per_set: Vec<(Value, Value)>,
+    wb: Value,
+    ab: Value,
+}
+
+impl Payload {
+    fn build() -> Payload {
+        let manifest = autoq::runtime::reference::builtin_manifest();
+        let meta = manifest.model("res18").unwrap().clone();
+        let params = ParamStore::init(&meta.params, &mut Rng::new(7));
+        let param_vals: Vec<Value> =
+            params.tensors.iter().map(|t| Value::F32(t.clone())).collect();
+        let data = SynthDataset::new(42);
+        let (n, hw) = (meta.eval_batch, meta.image_hw);
+        let per_set: Vec<(Value, Value)> = (0..2)
+            .map(|i| {
+                let batch = data.batch(Split::Val, (i * n) as u64, n);
+                let img = Value::f32(vec![n, hw, hw, 3], batch.images);
+                let lbl = Value::i32(vec![n], batch.labels);
+                (img, lbl)
+            })
+            .collect();
+        let wb = Value::f32(vec![meta.w_channels], vec![5.0; meta.w_channels]);
+        let ab = Value::f32(vec![meta.a_channels], vec![4.0; meta.a_channels]);
+        Payload { param_vals, per_set, wb, ab }
+    }
+
+    fn sets(&self) -> Vec<Vec<&Value>> {
+        self.per_set
+            .iter()
+            .map(|(img, lbl)| {
+                let mut row: Vec<&Value> = self.param_vals.iter().collect();
+                row.push(img);
+                row.push(lbl);
+                row.push(&self.wb);
+                row.push(&self.ab);
+                row
+            })
+            .collect()
+    }
+}
+
+/// Exact length of the full JSON exec frame for `sets`, computed without
+/// allocating it: the empty-batches envelope, plus each set's own string
+/// length, plus one comma between adjacent sets (the serializer emits no
+/// whitespace, pinned by the envelope assertion).
+fn json_frame_len(artifact: &str, sets: &[Vec<&Value>]) -> usize {
+    let envelope = proto::exec_json::<&Value>(artifact, &[]).to_string();
+    assert!(envelope.contains("\"batches\":[]"), "envelope layout changed: {envelope}");
+    let body: usize = sets
+        .iter()
+        .map(|set| {
+            Json::Arr(set.iter().map(|v| proto::value_to_json(v)).collect())
+                .to_string()
+                .len()
+        })
+        .sum();
+    envelope.len() + body + sets.len().saturating_sub(1)
+}
+
+#[test]
+fn binary_exec_request_is_at_least_5x_smaller_than_json() {
+    let payload = Payload::build();
+    let sets = payload.sets();
+    let binary = bin::exec_bytes("res18_eval_quant", &sets);
+    let json = json_frame_len("res18_eval_quant", &sets);
+    let ratio = json as f64 / binary.len() as f64;
+    assert!(
+        ratio >= 5.0,
+        "binary exec request must be >= 5x smaller than JSON: \
+         json {json} bytes vs binary {} bytes ({ratio:.2}x)",
+        binary.len()
+    );
+}
+
+#[test]
+fn binary_exec_request_roundtrips_bit_exactly() {
+    let payload = Payload::build();
+    let sets = payload.sets();
+    let frame = bin::exec_bytes("res18_eval_quant", &sets);
+    let Request::Exec { artifact, batches } = bin::request_from_bytes(&frame).unwrap() else {
+        panic!("exec frame decoded as a different request");
+    };
+    assert_eq!(artifact, "res18_eval_quant");
+    assert_eq!(batches.len(), sets.len());
+    for (got_set, want_set) in batches.iter().zip(&sets) {
+        assert_eq!(got_set.len(), want_set.len());
+        for (got, want) in got_set.iter().zip(want_set.iter()) {
+            assert_eq!(got.shape(), want.shape());
+            match (got, want) {
+                (Value::F32(g), Value::F32(w)) => {
+                    assert_eq!(g.data.len(), w.data.len());
+                    let diverged =
+                        g.data.iter().zip(&w.data).any(|(a, b)| a.to_bits() != b.to_bits());
+                    assert!(!diverged, "f32 bits changed across the binary codec");
+                }
+                (Value::I32 { data: g, .. }, Value::I32 { data: w, .. }) => {
+                    assert_eq!(g, w, "i32 payload changed across the binary codec");
+                }
+                _ => panic!("dtype changed across the binary codec"),
+            }
+        }
+    }
+}
