@@ -37,6 +37,15 @@ const THREAD_COUNTS: [usize; 3] = [1, 2, 4];
 const TARGET_THREADS: usize = 4;
 const TARGET_SPEEDUP: f64 = 2.0;
 
+/// Int-vs-f32 kernel targets (speedup of the quantize+qgemm call over the
+/// blocked f32 matmul, same shape).  Full runs enforce the real targets;
+/// smoke's single short iteration is too noisy to grade a speedup, so it
+/// only guards against catastrophic slowdowns (e.g. a scalar fallback
+/// accidentally taking over the int path).
+const INT8_MIN_SPEEDUP: f64 = 1.2;
+const INT4_MIN_SPEEDUP: f64 = 1.0;
+const INT_SMOKE_MIN_SPEEDUP: f64 = 0.25;
+
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let smoke = args.iter().any(|a| a == "--smoke");
@@ -144,6 +153,39 @@ fn main() -> anyhow::Result<()> {
         flops / rn.min_s / 1e9
     );
 
+    // Integer kernels vs the blocked f32 path, same shape.  Weights are
+    // pre-quantized outside the timer (the runtime quantizes them once per
+    // dispatch on either path); the dynamic per-row activation quantize
+    // runs inside it (the int path pays it on every call).
+    let bits8 = vec![8.0f32; n];
+    let bits4 = vec![4.0f32; n];
+    let (qw8, sw8) = kernels::quantize_weights_alloc(&b, k, n, &bits8, kernels::WRep::I8);
+    let (qw4, sw4) = kernels::quantize_weights_alloc(&b, k, n, &bits4, kernels::WRep::I4);
+    let mut qa = vec![0i8; m * k];
+    let mut sa = vec![0.0f32; m];
+    let mut oint = vec![0.0f32; m * n];
+    let r8 = bench(&format!("qgemm int8     ({m}x{k}x{n})"), warmup, kiters, || {
+        kernels::quantize_rows_i8(&a, m, k, &mut qa, &mut sa);
+        kernels::qgemm_into(&mut oint, &qa, &sa, &qw8, &sw8, m, k, n, false);
+    });
+    let r4 = bench(&format!("qgemm int4     ({m}x{k}x{n})"), warmup, kiters, || {
+        kernels::quantize_rows_i8(&a, m, k, &mut qa, &mut sa);
+        kernels::qgemm_into(&mut oint, &qa, &sa, &qw4, &sw4, m, k, n, true);
+    });
+    let s8 = rb.min_s / r8.min_s;
+    let s4 = rb.min_s / r4.min_s;
+    println!("    -> int8 {s8:.2}x, int4 {s4:.2}x vs blocked f32");
+    let (min8, min4) = if smoke {
+        (INT_SMOKE_MIN_SPEEDUP, INT_SMOKE_MIN_SPEEDUP)
+    } else {
+        (INT8_MIN_SPEEDUP, INT4_MIN_SPEEDUP)
+    };
+    anyhow::ensure!(
+        s8 >= min8 && s4 >= min4,
+        "integer-kernel regression: int8 {s8:.2}x / int4 {s4:.2}x vs blocked f32 \
+         (thresholds {min8}x / {min4}x)"
+    );
+
     if let Some(path) = json_path {
         let doc = Json::obj(vec![
             ("bench", Json::Str("reference_eval".to_string())),
@@ -162,6 +204,18 @@ fn main() -> anyhow::Result<()> {
                     ("naive_min_s", Json::from(rn.min_s)),
                     ("blocked_gflops", Json::from(flops / rb.min_s / 1e9)),
                     ("naive_gflops", Json::from(flops / rn.min_s / 1e9)),
+                ]),
+            ),
+            (
+                "qgemm",
+                Json::obj(vec![
+                    ("f32_min_s", Json::from(rb.min_s)),
+                    ("i8_min_s", Json::from(r8.min_s)),
+                    ("i4_min_s", Json::from(r4.min_s)),
+                    ("i8_speedup", Json::from(s8)),
+                    ("i4_speedup", Json::from(s4)),
+                    ("i8_threshold", Json::from(min8)),
+                    ("i4_threshold", Json::from(min4)),
                 ]),
             ),
         ]);

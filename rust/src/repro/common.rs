@@ -11,6 +11,7 @@ use crate::models::ModelRunner;
 use crate::quant::{load_config, save_config, SavedConfig};
 use crate::runtime::{BackendKind, Parallelism};
 use crate::search::{run_search, Granularity, Protocol, SearchConfig, SearchResult};
+use crate::util::json::Json;
 use crate::util::pool::WorkerPool;
 
 pub fn reports_dir() -> PathBuf {
@@ -68,6 +69,10 @@ pub struct ReproCtx {
     /// Shard wire encoding (`--shard-encoding`; `None` =
     /// `$AUTOQ_SHARD_ENCODING`, else binary).
     pub shard_encoding: Option<crate::runtime::shard::Encoding>,
+    /// `autoq serve` address (`--daemon`); when set, searches run through
+    /// the daemon (sharing its eval cache) instead of in-process.
+    /// Fine-tunes and report assembly stay local either way.
+    pub daemon: Option<String>,
 }
 
 impl Default for ReproCtx {
@@ -86,6 +91,7 @@ impl Default for ReproCtx {
             shard_workers: None,
             shard_hosts: None,
             shard_encoding: None,
+            daemon: None,
         }
     }
 }
@@ -125,12 +131,43 @@ pub fn search_or_cached(
         .seed(ctx.seed)
         .paper_scale(ctx.paper_scale)
         .build()?;
+    if let Some(addr) = &ctx.daemon {
+        let report = crate::serve::run_job_via_daemon(addr, &spec)?;
+        save_config_from_report(&key, model, mode, &report)?;
+        return load_config(&key);
+    }
     let report = c.run(&spec)?;
     let JobOutcome::Search { best, .. } = &report.outcome else {
         anyhow::bail!("search job returned a non-search report");
     };
     save_config(&key, model, mode, best)?;
     load_config(&key)
+}
+
+/// Derive the `load_config`-compatible cache entry from a daemon search
+/// report: its `search` object (`JobOutcome::Search` as serialized by
+/// `JobReport::to_json`) is a superset of the fields `load_config` reads,
+/// so the cache entry carries the same bits/accuracy/score a local
+/// `save_config` would have written.
+fn save_config_from_report(
+    key: &Path,
+    model: &str,
+    mode: Mode,
+    report: &Json,
+) -> anyhow::Result<()> {
+    let s = report
+        .req("search")
+        .map_err(|e| anyhow::anyhow!("daemon report has no search outcome: {e}"))?;
+    let j = Json::obj(vec![
+        ("model", model.into()),
+        ("mode", mode.as_str().into()),
+        ("accuracy", s.req("accuracy")?.clone()),
+        ("score", s.req("score")?.clone()),
+        ("wbits", s.req("wbits")?.clone()),
+        ("abits", s.req("abits")?.clone()),
+    ]);
+    std::fs::write(key, j.to_string())?;
+    Ok(())
 }
 
 /// Run one cell on an externally-owned runner (fig8 shares a runner between
@@ -238,4 +275,37 @@ pub fn finetuned_accuracies(
         },
     );
     results.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn daemon_search_report_roundtrips_through_config_cache() {
+        let report = Json::parse(concat!(
+            r#"{"id":"x","secs":1.5,"spec":{"kind":"search"},"search":{"#,
+            r#""accuracy":0.875,"loss":0.4,"reward":0.7,"score":12.5,"#,
+            r#""norm_logic":0.1,"avg_wbits":3.0,"avg_abits":3.0,"#,
+            r#""wbits":[4,5,0],"abits":[3,3],"history":[]}}"#
+        ))
+        .unwrap();
+        let dir = std::env::temp_dir().join(format!("autoq_daemon_cfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let key = dir.join("cif10_quant_hier_kernel.json");
+        save_config_from_report(&key, "cif10", Mode::Quant, &report).unwrap();
+        let cfg = load_config(&key).unwrap();
+        assert_eq!(cfg.model, "cif10");
+        assert_eq!(cfg.mode, Mode::Quant);
+        assert_eq!(cfg.wbits, vec![4, 5, 0]);
+        assert_eq!(cfg.abits, vec![3, 3]);
+        assert!((cfg.accuracy - 0.875).abs() < 1e-12);
+        assert!((cfg.score - 12.5).abs() < 1e-12);
+        std::fs::remove_dir_all(&dir).ok();
+
+        // A non-search report (e.g. an eval job handed to --daemon by
+        // mistake) is rejected instead of writing a corrupt cache entry.
+        let bad = Json::parse(r#"{"id":"x","secs":1.0,"spec":{},"eval":{}}"#).unwrap();
+        assert!(save_config_from_report(&key, "cif10", Mode::Quant, &bad).is_err());
+    }
 }

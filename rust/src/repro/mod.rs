@@ -38,6 +38,11 @@ pub fn cmd_repro(rest: &[String]) -> anyhow::Result<()> {
             "",
             "shard wire encoding json|binary (default: $AUTOQ_SHARD_ENCODING, else binary)",
         )
+        .opt(
+            "daemon",
+            "",
+            "autoq serve address — run searches through the daemon's job queue + eval cache",
+        )
         .flag("fresh", "ignore cached searched configs")
         .flag("paper-scale", "paper's 400-episode schedule")
         .parse(rest)?;
@@ -46,6 +51,7 @@ pub fn cmd_repro(rest: &[String]) -> anyhow::Result<()> {
     let shard_workers = crate::runtime::shard::parse_workers_opt(&a.get("shard-workers"))?;
     let shard_hosts = crate::runtime::shard::parse_hosts_opt(&a.get("shard-hosts"))?;
     let shard_encoding = crate::runtime::shard::Encoding::parse_opt(&a.get("shard-encoding"))?;
+    let daemon = Some(a.get("daemon")).filter(|d| !d.is_empty());
     let ctx = ReproCtx {
         episodes: a.get_usize("episodes")?,
         warmup: a.get_usize("warmup")?,
@@ -60,6 +66,7 @@ pub fn cmd_repro(rest: &[String]) -> anyhow::Result<()> {
         shard_workers,
         shard_hosts: shard_hosts.clone(),
         shard_encoding,
+        daemon,
     };
     let models: Vec<String> = a.get("models").split(',').map(str::to_string).collect();
     let what = a.positional.first().cloned().unwrap_or_else(|| "help".into());

@@ -135,9 +135,9 @@ pub fn matmul_acc_scratch(
                 let crow = &mut c[i * n + jc..i * n + jc + nb];
                 for (kk, &av) in arow.iter().enumerate() {
                     let brow = &panel[kk * nb..(kk + 1) * nb];
-                    for j in 0..nb {
-                        crow[j] += av * brow[j];
-                    }
+                    // j indexes independent output elements → SIMD lanes
+                    // stay bit-identical to the scalar loop (simd.rs docs).
+                    super::simd::axpy(crow, av, brow);
                 }
             }
             pc += KC;
@@ -183,9 +183,7 @@ pub fn matmul_at_b_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, 
                 let brow = &b[i * n + jc..i * n + jc + nb];
                 for (kk, &av) in arow.iter().enumerate() {
                     let crow = &mut c[(kc + kk) * n + jc..(kc + kk) * n + jc + nb];
-                    for j in 0..nb {
-                        crow[j] += av * brow[j];
-                    }
+                    super::simd::axpy(crow, av, brow);
                 }
             }
             kc += KC;

@@ -20,12 +20,30 @@
 //! `NC = 128` columns → 32 KiB per panel, L1-resident) and streams every
 //! row of A against the hot panel — the GEBP loop order `jc → pc → i`.
 //! Packing is pure data movement; see DESIGN.md §Reference kernels.
+//!
+//! # Integer kernels
+//!
+//! `qgemm` executes low-bit layers in genuine int8/int4 arithmetic
+//! (channel-major packed weights, per-row dynamic activation scales, exact
+//! i32 accumulation, one f32 dequantize on store).  It has no f32 naive
+//! twin — its oracle is the fake-quant f32 reference under a *proven
+//! tolerance* rather than bit-equality, but its integer accumulation is
+//! exact and therefore even more strongly deterministic than the f32
+//! paths.  `simd` holds the runtime-dispatched AVX lane loop the blocked
+//! f32 kernels share; it is bit-identical to the scalar loop by
+//! construction.  See DESIGN.md §Integer kernels.
 
 pub mod im2col;
 pub mod matmul;
+pub mod qgemm;
+pub mod simd;
 
 pub use im2col::{col2im_acc, im2col};
 pub use matmul::{
     matmul, matmul_a_bt, matmul_a_bt_into, matmul_acc, matmul_acc_scratch, matmul_at_b_acc,
     matmul_panel_len, naive, KC, MC, NC,
 };
+pub use qgemm::{int_kernels_enabled, set_int_kernels_enabled, wrep, wrep_with, WRep};
+pub use qgemm::{pack_i4, packed4_row_len, qgemm_i4, qgemm_i8, qgemm_into, qweight_len};
+pub use qgemm::{quantize_rows_i8, quantize_w_i8, quantize_weights_alloc};
+pub use simd::axpy;

@@ -1,0 +1,497 @@
+//! True quantized integer GEMM: packed int8 (and bit-packed int4) kernels
+//! that execute low-bit layers in genuine integer arithmetic instead of
+//! round-tripping fake-quantized f32 through the f32 GEBP path.
+//!
+//! # Representation
+//!
+//! * **Weights** are quantized once per dispatch (the `WQ` plan step /
+//!   walk preamble) from their row-major `(rest, cout)` parameter layout
+//!   into **channel-major** `(cout, rest)` i8 codes plus one f32 scale per
+//!   output channel.  The codes and scales come from the *exact* max-abs
+//!   quantizer `quantize.rs::fake_quant_row` uses — same
+//!   [`linear_levels`]/[`linear_scale`]/[`round_te`] recipe — so
+//!   `code[c][r] as f32 * scale[c]` reproduces the fake-quant f32 weight
+//!   bit-for-bit.  When every channel's rounded bit-width fits a signed
+//!   nibble (≤ 4 → levels ≤ 7), rows are additionally **bit-packed two
+//!   codes per byte** (low nibble first, odd tail zero-padded).
+//! * **Activations** arrive already fake-quantized in f32 (their own
+//!   per-channel grid lives on the reduction side of the contraction, so
+//!   its scales cannot be hoisted out of an integer accumulator).  They
+//!   are re-quantized **dynamically per row** — per sample / output pixel —
+//!   onto a symmetric 127-level i8 grid: `sa[i] = max|row| / 127`.  This is
+//!   the int path's only approximation and is what the tolerance contract
+//!   below bounds.
+//!
+//! # Kernel shape
+//!
+//! Dot-product form with the weight matrix consumed in `MC`-row chunks
+//! (the `matmul_a_bt_into` blocking — channel-major weights make each
+//! output element one contiguous dot product):
+//!
+//! ```text
+//! out[i][j] = (sa[i] * sw[j]) * Σ_k qa[i][k] · qw[j][k]     (i32 sum)
+//! ```
+//!
+//! The i32 accumulation is **exact** (|q| ≤ 127 ⇒ |term| ≤ 16129, safe for
+//! k up to ~133 000), therefore order-independent: the kernel is freely
+//! tileable and byte-deterministic across thread counts, workers, and
+//! hosts — the same determinism contract as the f32 kernels, with a
+//! stronger proof.  A single f32 dequantize happens on store.
+//!
+//! # Tolerance contract (vs the fake-quant f32 reference)
+//!
+//! Let `A` be the fake-quantized f32 activations, `W` the fake-quantized
+//! f32 weights, `ref = A @ Wᵀ` under sequential f32 accumulation, and
+//! `int` this kernel's output.  Three error sources:
+//!
+//! 1. activation re-quantization: `|qa[i][k]·sa[i] − A[i][k]| ≤ sa[i]/2`
+//!    (ties-to-even ≤ half step; the clamp at ±127 loses ≤ half a step
+//!    because `|A| ≤ 127·sa` by construction), so ≤ `maxa_i / 254` with
+//!    `maxa_i = max_k |A[i][k]|`;
+//! 2. the f32 reference's own sequential rounding, standard `γ_k` bound
+//!    `≈ k·2⁻²⁴` relative;
+//! 3. the int path's dequantize store: one i32→f32 cast and two f32
+//!    multiplies, ≤ 3 ulp relative.
+//!
+//! With `maxw_j = max_k |W[j][k]|` this gives the per-element bound
+//!
+//! ```text
+//! |int[i][j] − ref[i][j]| ≤ k·maxa_i·maxw_j·(1/254 + (k + 4)·2⁻²³)
+//! ```
+//!
+//! (the 2⁻²³ term doubles the γ_k estimate for slack).
+//! `tests/int_kernels.rs` asserts exactly this bound across randomized
+//! shapes, and pins model-level `EvalResult` agreement on the zoo.
+//!
+//! # Dispatch rule
+//!
+//! [`wrep`] — shared verbatim by the plan executor and the tree walk so
+//! both backends pick the same representation: the int path runs only for
+//! linear fake-quant (never binar, whose quantizer is not a uniform grid),
+//! only on forward-only evaluation (training tapes need the f32 quantized
+//! operands), and only when **every** channel's rounded weight bit-width
+//! is ≤ 8 (≤ 4 selects the packed int4 form).  Everything else — including
+//! passthrough (≥ 24 bit) and the 9..23-bit range — falls back to f32.
+//! A process-wide switch (default: the `int-kernels` cargo feature) lets
+//! tests force the f32 reference.
+
+use crate::runtime::reference::quantize::{linear_levels, linear_scale, round_te};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use super::MC;
+
+/// Positive levels of the dynamic per-row activation grid (i8 full range).
+pub const I8_LEVELS: f32 = 127.0;
+
+static INT_ENABLED: AtomicBool = AtomicBool::new(cfg!(feature = "int-kernels"));
+
+/// Whether integer-kernel dispatch is enabled for this process.
+pub fn int_kernels_enabled() -> bool {
+    INT_ENABLED.load(Ordering::Relaxed)
+}
+
+/// Flip integer-kernel dispatch on/off (returns the previous value).
+/// Tests use this to compute the forced-f32 reference; serialize tests
+/// that touch it.
+pub fn set_int_kernels_enabled(on: bool) -> bool {
+    INT_ENABLED.swap(on, Ordering::Relaxed)
+}
+
+/// Weight representation chosen for one layer at dispatch time.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum WRep {
+    /// Fake-quantized f32 through the f32 GEBP kernels (the reference).
+    F32,
+    /// Channel-major i8 codes, one byte per weight.
+    I8,
+    /// Channel-major signed-nibble codes, two weights per byte.
+    I4,
+}
+
+/// The dispatch rule (module docs): pick the representation for a layer
+/// from its per-channel weight bit-widths.  Identical on the plan and
+/// tree-walk backends by construction — both call this.
+pub fn wrep(wbits: &[f32], binar: bool) -> WRep {
+    wrep_with(int_kernels_enabled(), wbits, binar)
+}
+
+/// [`wrep`] with the process switch passed explicitly (pure — testable
+/// without mutating global state).
+pub fn wrep_with(enabled: bool, wbits: &[f32], binar: bool) -> WRep {
+    if binar || !enabled {
+        return WRep::F32;
+    }
+    let mut max_b = 0.0f32;
+    for &b in wbits {
+        let r = round_te(b);
+        if r > max_b {
+            max_b = r;
+        }
+    }
+    if max_b <= 4.0 {
+        WRep::I4
+    } else if max_b <= 8.0 {
+        WRep::I8
+    } else {
+        WRep::F32
+    }
+}
+
+/// Dynamic per-row symmetric i8 quantization of a row-major `(m, k)`
+/// matrix: `qa[i*k + t] = round_te(a[i*k + t] / sa[i])` clamped to ±127,
+/// `sa[i] = max|row i| / 127` (1.0 for an all-zero row, whose codes are
+/// all zero regardless).  Fully overwrites the first `m*k` codes and `m`
+/// scales.
+pub fn quantize_rows_i8(a: &[f32], m: usize, k: usize, qa: &mut [i8], sa: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert!(qa.len() >= m * k);
+    debug_assert!(sa.len() >= m);
+    for i in 0..m {
+        let row = &a[i * k..(i + 1) * k];
+        let max_abs = row.iter().fold(0.0f32, |mx, &x| mx.max(x.abs()));
+        let scale = linear_scale(max_abs, I8_LEVELS);
+        sa[i] = scale;
+        for (q, &x) in qa[i * k..(i + 1) * k].iter_mut().zip(row) {
+            *q = round_te(x / scale).clamp(-I8_LEVELS, I8_LEVELS) as i8;
+        }
+    }
+}
+
+/// Per-output-channel symmetric int quantization of a row-major
+/// `(rest, cout)` weight into channel-major `(cout, rest)` i8 codes plus
+/// per-channel scales — the exact `fake_quant_row` grid (see module docs).
+/// Rounded bits ≤ 0 prunes the channel (zero codes, zero scale); the
+/// caller guarantees rounded bits ≤ 8 via [`wrep`].
+pub fn quantize_w_i8(
+    w: &[f32],
+    rest: usize,
+    cout: usize,
+    bits: &[f32],
+    q: &mut [i8],
+    scales: &mut [f32],
+) {
+    debug_assert_eq!(w.len(), rest * cout);
+    debug_assert_eq!(bits.len(), cout);
+    debug_assert!(q.len() >= rest * cout);
+    debug_assert!(scales.len() >= cout);
+    for co in 0..cout {
+        let b = round_te(bits[co]);
+        debug_assert!(b <= 8.0, "int path dispatched with {b} rounded bits");
+        let qrow = &mut q[co * rest..(co + 1) * rest];
+        if b <= 0.0 {
+            qrow.fill(0);
+            scales[co] = 0.0;
+            continue;
+        }
+        let levels = linear_levels(b);
+        let mut max_abs = 0.0f32;
+        for r in 0..rest {
+            max_abs = max_abs.max(w[r * cout + co].abs());
+        }
+        let scale = linear_scale(max_abs, levels);
+        scales[co] = scale;
+        for (r, qv) in qrow.iter_mut().enumerate() {
+            *qv = round_te(w[r * cout + co] / scale).clamp(-levels, levels) as i8;
+        }
+    }
+}
+
+/// Bytes per int4-packed channel row of `rest` codes.
+pub fn packed4_row_len(rest: usize) -> usize {
+    rest.div_ceil(2)
+}
+
+/// Bit-pack signed-nibble codes (each in −7..=7) two per byte along the
+/// reduction dimension: channel row `co` occupies [`packed4_row_len`]
+/// bytes from `co * packed4_row_len(rest)`, low nibble first, odd tail
+/// padded with a zero nibble.
+pub fn pack_i4(q: &[i8], rest: usize, cout: usize, out: &mut [i8]) {
+    let prow = packed4_row_len(rest);
+    debug_assert!(q.len() >= rest * cout);
+    debug_assert!(out.len() >= prow * cout);
+    for co in 0..cout {
+        let src = &q[co * rest..(co + 1) * rest];
+        let dst = &mut out[co * prow..(co + 1) * prow];
+        for (byte, pair) in dst.iter_mut().zip(src.chunks(2)) {
+            debug_assert!(pair.iter().all(|&v| (-7..=7).contains(&v)));
+            let lo = (pair[0] as u8) & 0x0f;
+            let hi = if pair.len() > 1 { (pair[1] as u8) & 0x0f } else { 0 };
+            *byte = (lo | (hi << 4)) as i8;
+        }
+    }
+}
+
+/// Sign-extend the low nibble of a packed byte.
+#[inline]
+pub fn unpack4_lo(b: i8) -> i32 {
+    ((((b as u8) << 4) as i8) >> 4) as i32
+}
+
+/// Sign-extend the high nibble of a packed byte.
+#[inline]
+pub fn unpack4_hi(b: i8) -> i32 {
+    (b >> 4) as i32
+}
+
+/// Exact i32 dot product of two i8 slices.  The fixed-width 16-lane inner
+/// chunks give LLVM a clean widen-multiply-accumulate shape to vectorize.
+#[inline]
+fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0i32;
+    let mut ca = a.chunks_exact(16);
+    let mut cb = b.chunks_exact(16);
+    for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+        let mut s = 0i32;
+        for (&x, &y) in xa.iter().zip(xb) {
+            s += i32::from(x) * i32::from(y);
+        }
+        acc += s;
+    }
+    for (&x, &y) in ca.remainder().iter().zip(cb.remainder()) {
+        acc += i32::from(x) * i32::from(y);
+    }
+    acc
+}
+
+/// Exact i32 dot product of an i8 slice against a nibble-packed row of
+/// `k` codes, unpacking on the fly.
+#[inline]
+fn dot_i8_i4(a: &[i8], wp: &[i8], k: usize) -> i32 {
+    debug_assert_eq!(a.len(), k);
+    debug_assert!(wp.len() >= packed4_row_len(k));
+    let mut acc = 0i32;
+    for (&byte, pair) in wp.iter().zip(a.chunks_exact(2)) {
+        acc += i32::from(pair[0]) * unpack4_lo(byte) + i32::from(pair[1]) * unpack4_hi(byte);
+    }
+    if k % 2 == 1 {
+        acc += i32::from(a[k - 1]) * unpack4_lo(wp[k / 2]);
+    }
+    acc
+}
+
+/// `out = dequant(QA @ QWᵀ)` for i8 activations `qa` (row-major `(m, k)`,
+/// per-row scales `sa`) against i8 weights `qw` (channel-major `(n, k)`,
+/// per-channel scales `sw`).  Full overwrite of `out` (`m × n`, row-major);
+/// exact i32 accumulation, one f32 dequantize per element (module docs).
+pub fn qgemm_i8(
+    out: &mut [f32],
+    qa: &[i8],
+    sa: &[f32],
+    qw: &[i8],
+    sw: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert!(qa.len() >= m * k);
+    debug_assert!(sa.len() >= m);
+    debug_assert!(qw.len() >= n * k);
+    debug_assert!(sw.len() >= n);
+    debug_assert!(out.len() >= m * n);
+    debug_assert!(k as u64 * 16129 <= i32::MAX as u64, "k too large for exact i32 accumulation");
+    let mut jc = 0;
+    while jc < n {
+        // MC weight rows stay hot across every activation row (the
+        // matmul_a_bt_into chunking — exactness makes re-tiling free).
+        let jb = MC.min(n - jc);
+        for i in 0..m {
+            let arow = &qa[i * k..(i + 1) * k];
+            let si = sa[i];
+            let orow = &mut out[i * n + jc..i * n + jc + jb];
+            for (jj, o) in orow.iter_mut().enumerate() {
+                let j = jc + jj;
+                let acc = dot_i8(arow, &qw[j * k..(j + 1) * k]);
+                *o = acc as f32 * (si * sw[j]);
+            }
+        }
+        jc += MC;
+    }
+}
+
+/// [`qgemm_i8`] with nibble-packed weights (`qwp`: channel-major, each row
+/// [`packed4_row_len`]`(k)` bytes).
+pub fn qgemm_i4(
+    out: &mut [f32],
+    qa: &[i8],
+    sa: &[f32],
+    qwp: &[i8],
+    sw: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let prow = packed4_row_len(k);
+    debug_assert!(qa.len() >= m * k);
+    debug_assert!(sa.len() >= m);
+    debug_assert!(qwp.len() >= n * prow);
+    debug_assert!(sw.len() >= n);
+    debug_assert!(out.len() >= m * n);
+    let mut jc = 0;
+    while jc < n {
+        let jb = MC.min(n - jc);
+        for i in 0..m {
+            let arow = &qa[i * k..(i + 1) * k];
+            let si = sa[i];
+            let orow = &mut out[i * n + jc..i * n + jc + jb];
+            for (jj, o) in orow.iter_mut().enumerate() {
+                let j = jc + jj;
+                let acc = dot_i8_i4(arow, &qwp[j * prow..(j + 1) * prow], k);
+                *o = acc as f32 * (si * sw[j]);
+            }
+        }
+        jc += MC;
+    }
+}
+
+/// Representation-dispatching GEMM: `i4` selects the nibble-packed weight
+/// kernel.  One call site shape for the plan executor and layer helpers.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_into(
+    out: &mut [f32],
+    qa: &[i8],
+    sa: &[f32],
+    qw: &[i8],
+    sw: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    i4: bool,
+) {
+    if i4 {
+        qgemm_i4(out, qa, sa, qw, sw, m, k, n);
+    } else {
+        qgemm_i8(out, qa, sa, qw, sw, m, k, n);
+    }
+}
+
+/// Number of i8 bytes the quantized weight of a layer occupies under
+/// `rep`: full codes for I8, nibble-packed rows for I4.
+pub fn qweight_len(rest: usize, cout: usize, rep: WRep) -> usize {
+    match rep {
+        WRep::I4 => packed4_row_len(rest) * cout,
+        _ => rest * cout,
+    }
+}
+
+/// Allocating weight quantizer for the tree-walk backend: row-major
+/// `(rest, cout)` f32 → (channel-major codes — packed iff `rep == I4` —
+/// and per-channel scales).
+pub fn quantize_weights_alloc(
+    w: &[f32],
+    rest: usize,
+    cout: usize,
+    bits: &[f32],
+    rep: WRep,
+) -> (Vec<i8>, Vec<f32>) {
+    let mut q = vec![0i8; rest * cout];
+    let mut scales = vec![0.0f32; cout];
+    quantize_w_i8(w, rest, cout, bits, &mut q, &mut scales);
+    if rep == WRep::I4 {
+        let mut packed = vec![0i8; packed4_row_len(rest) * cout];
+        pack_i4(&q, rest, cout, &mut packed);
+        return (packed, scales);
+    }
+    (q, scales)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nibble_pack_roundtrips() {
+        let rest = 5; // odd → zero-padded tail nibble
+        let cout = 3;
+        let codes: Vec<i8> = vec![-7, -1, 0, 3, 7, 1, -2, 5, -6, 0, 7, -7, 2, -3, 4];
+        let mut packed = vec![0i8; packed4_row_len(rest) * cout];
+        pack_i4(&codes, rest, cout, &mut packed);
+        let prow = packed4_row_len(rest);
+        for co in 0..cout {
+            for r in 0..rest {
+                let byte = packed[co * prow + r / 2];
+                let got = if r % 2 == 0 { unpack4_lo(byte) } else { unpack4_hi(byte) };
+                assert_eq!(got, i32::from(codes[co * rest + r]), "co={co} r={r}");
+            }
+            // Padded tail nibble decodes to zero.
+            assert_eq!(unpack4_hi(packed[co * prow + prow - 1]), 0);
+        }
+    }
+
+    #[test]
+    fn int8_gemm_known_values() {
+        // Power-of-two scales on both sides make every dequantize exact,
+        // so the expected outputs are reachable by hand.
+        let a = vec![127.0f32, -127.0, 254.0, 127.0]; // (2, 2): sa = [1, 2]
+        let mut qa = vec![0i8; 4];
+        let mut sa = vec![0.0f32; 2];
+        quantize_rows_i8(&a, 2, 2, &mut qa, &mut sa);
+        assert_eq!(sa, vec![1.0, 2.0]);
+        // 127/2 = 63.5 rounds ties-to-even → 64.
+        assert_eq!(qa, vec![127, -127, 127, 64]);
+        // 1-bit channels: scale = channel max-abs → [0.5, 2], codes ±1.
+        let w = vec![0.5f32, -2.0, -0.5, 2.0]; // row-major (rest=2, cout=2)
+        let (qw, sw) = quantize_weights_alloc(&w, 2, 2, &[1.0, 1.0], WRep::I8);
+        assert_eq!(sw, vec![0.5, 2.0]);
+        assert_eq!(qw, vec![1, -1, -1, 1]); // channel-major
+        let mut out = vec![0.0f32; 4];
+        qgemm_i8(&mut out, &qa, &sa, &qw, &sw, 2, 2, 2);
+        // out[i][j] = sa_i·sw_j·Σ qa·qw, exact at every step:
+        // [1·0.5·254, 1·2·(−254), 2·0.5·63, 2·2·(−63)]
+        assert_eq!(out, vec![127.0, -508.0, 63.0, -252.0]);
+    }
+
+    #[test]
+    fn pruned_and_zero_channels_are_exact_zero() {
+        let a = vec![0.5f32, -0.25, 0.0, 0.0]; // row 1 all-zero
+        let w = vec![0.3f32, 0.0, -0.7, 0.0]; // channel 1 all-zero
+        let mut qa = vec![0i8; 4];
+        let mut sa = vec![0.0f32; 2];
+        quantize_rows_i8(&a, 2, 2, &mut qa, &mut sa);
+        assert_eq!(&qa[2..], &[0, 0], "all-zero row quantizes to zero codes");
+        for rep in [WRep::I8, WRep::I4] {
+            // bits[0] = 0 prunes channel 0 entirely; channel 1 is all-zero.
+            let (qw, sw) = quantize_weights_alloc(&w, 2, 2, &[0.0, 4.0], rep);
+            let mut out = vec![1.0f32; 4];
+            qgemm_into(&mut out, &qa, &sa, &qw, &sw, 2, 2, 2, rep == WRep::I4);
+            assert_eq!(out, vec![0.0; 4], "{rep:?}");
+        }
+    }
+
+    #[test]
+    fn i4_matches_i8_on_low_bit_weights() {
+        // With every channel ≤ 4 rounded bits the packed-nibble kernel
+        // must reproduce the plain i8 kernel exactly (same codes, exact
+        // integer accumulation, identical dequantize expression).
+        let m = 3;
+        let k = 7; // odd: exercises the padded tail nibble
+        let n = 5;
+        let a: Vec<f32> = (0..m * k).map(|i| ((i * 37 % 101) as f32 / 50.0) - 1.0).collect();
+        let w: Vec<f32> = (0..k * n).map(|i| ((i * 53 % 89) as f32 / 44.0) - 1.0).collect();
+        let bits = [4.0f32, 2.0, 3.0, 1.0, 4.0];
+        let mut qa = vec![0i8; m * k];
+        let mut sa = vec![0.0f32; m];
+        quantize_rows_i8(&a, m, k, &mut qa, &mut sa);
+        let (q8, s8) = quantize_weights_alloc(&w, k, n, &bits, WRep::I8);
+        let (q4, s4) = quantize_weights_alloc(&w, k, n, &bits, WRep::I4);
+        assert_eq!(s8, s4);
+        let mut o8 = vec![0.0f32; m * n];
+        let mut o4 = vec![0.0f32; m * n];
+        qgemm_i8(&mut o8, &qa, &sa, &q8, &s8, m, k, n);
+        qgemm_i4(&mut o4, &qa, &sa, &q4, &s4, m, k, n);
+        for (x, y) in o8.iter().zip(&o4) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn wrep_follows_the_dispatch_rule() {
+        assert_eq!(wrep_with(true, &[4.0, 2.0, 0.0], false), WRep::I4);
+        assert_eq!(wrep_with(true, &[4.0, 5.0], false), WRep::I8);
+        assert_eq!(wrep_with(true, &[8.0, 8.4], false), WRep::I8, "8.4 rounds to 8");
+        assert_eq!(wrep_with(true, &[8.0, 9.0], false), WRep::F32, "9 bits exceeds i8");
+        assert_eq!(wrep_with(true, &[2.0, 32.0], false), WRep::F32, "passthrough channel");
+        assert_eq!(wrep_with(true, &[2.0, 2.0], true), WRep::F32, "binar never dispatches int");
+        assert_eq!(wrep_with(false, &[2.0, 2.0], false), WRep::F32, "switch off forces f32");
+    }
+}

@@ -1,0 +1,96 @@
+//! Explicit SIMD lane loops for the blocked f32 kernels.
+//!
+//! One helper, [`axpy`]: `c[j] += a * b[j]` over equal-length slices — the
+//! exact shape of the inner j-loop the GEBP panels in `matmul.rs` are laid
+//! out for.  The vectorized dimension indexes *independent* output
+//! elements, and each element still sees exactly one IEEE multiply followed
+//! by one IEEE add (`_mm256_mul_ps` + `_mm256_add_ps`, never an FMA), so
+//! the result is bit-identical to the scalar loop — the naive kernels stay
+//! the oracle and the existing `to_bits()` equality tests cover this path
+//! for free.
+//!
+//! The AVX path is compiled behind the `simd` cargo feature (default-on)
+//! and selected once per process by runtime CPU detection; everything else
+//! (feature off, non-x86, AVX-less hosts) takes the scalar loop.  The
+//! reduction-form kernel `matmul_a_bt_into` is *not* routed through here:
+//! its inner loop is the accumulation itself, and vectorizing it would
+//! reassociate the sum and break the determinism contract.
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86 {
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_storeu_ps,
+    };
+    use std::sync::OnceLock;
+
+    /// One-time AVX detection, cached for the life of the process.
+    pub fn available() -> bool {
+        static AVX: OnceLock<bool> = OnceLock::new();
+        *AVX.get_or_init(|| std::arch::is_x86_feature_detected!("avx"))
+    }
+
+    /// `c[j] += a * b[j]` in 8-wide AVX lanes, scalar tail.
+    ///
+    /// # Safety
+    /// The caller must have verified AVX support (see [`available`]); slices
+    /// must be equal length (checked by the safe wrapper).
+    #[target_feature(enable = "avx")]
+    pub unsafe fn axpy(c: &mut [f32], a: f32, b: &[f32]) {
+        let n = c.len();
+        let av = _mm256_set1_ps(a);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let bv = _mm256_loadu_ps(b.as_ptr().add(i));
+            let cv = _mm256_loadu_ps(c.as_ptr().add(i));
+            // mul then add as two rounded ops — keeps every element
+            // bit-identical to the scalar `c[j] += a * b[j]`.
+            _mm256_storeu_ps(c.as_mut_ptr().add(i), _mm256_add_ps(cv, _mm256_mul_ps(av, bv)));
+            i += 8;
+        }
+        for j in i..n {
+            c[j] += a * b[j];
+        }
+    }
+}
+
+/// `c[j] += a * b[j]` for equal-length slices, dispatched once per process
+/// to the widest available implementation.  Bit-identical across all
+/// implementations (see module docs).
+#[inline]
+pub fn axpy(c: &mut [f32], a: f32, b: &[f32]) {
+    debug_assert_eq!(c.len(), b.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if x86::available() {
+        // SAFETY: AVX presence verified at runtime just above.
+        unsafe { x86::axpy(c, a, b) };
+        return;
+    }
+    for (cv, &bv) in c.iter_mut().zip(b) {
+        *cv += a * bv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn axpy_matches_scalar_bitwise() {
+        let mut r = Rng::new(23);
+        // Lengths straddling the 8-lane width, including the empty slice.
+        for len in [0usize, 1, 7, 8, 9, 16, 31, 64, 100] {
+            let mut b = vec![0.0f32; len];
+            let mut c0 = vec![0.0f32; len];
+            r.fill_normal_f32(&mut b, 1.0);
+            r.fill_normal_f32(&mut c0, 1.0);
+            let a = 0.37f32;
+            let mut c1 = c0.clone();
+            axpy(&mut c1, a, &b);
+            for j in 0..len {
+                let expect = c0[j] + a * b[j];
+                assert_eq!(c1[j].to_bits(), expect.to_bits(), "len={len} j={j}");
+            }
+        }
+    }
+}

@@ -20,10 +20,12 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::runtime::backend::{Executable, ScratchStats};
+use crate::runtime::reference::kernels::{quantize_weights_alloc, wrep, WRep};
 use crate::runtime::reference::nn::{
     add_bias, bias_bwd, cmajor_to_nhwc, cmajor_to_w, conv2d, conv2d_bwd, dwconv2d, dwconv2d_bwd,
     gap, gap_bwd, group_norm, group_norm_bwd, matmul, matmul_a_bt, matmul_at_b_acc, maxpool2,
-    maxpool2_bwd, nhwc_to_cmajor, relu, relu_bwd, softmax_xent, w_to_cmajor, Dims, GnCache,
+    maxpool2_bwd, nhwc_to_cmajor, qconv2d, qfc, relu, relu_bwd, softmax_xent, w_to_cmajor, Dims,
+    GnCache,
 };
 use crate::runtime::reference::plan::{
     compile_eval, compile_train, run_eval, run_train, Plan, Workspace,
@@ -127,6 +129,43 @@ fn layer_fwd(
             ActT::A2 { n: *n, c: *c, data: q }
         }
     };
+
+    // Integer-path dispatch: same [`wrep`] rule as the plan executor (so
+    // the walk and the planned engine stay byte-identical), eval only —
+    // training tapes need the f32 quantized operands — and never for
+    // depthwise convs, which have no integer kernel.
+    let int_ok = !want_tape && l.typ != LType::DwConv;
+    let rep = if int_ok { wrep(wb, binar) } else { WRep::F32 };
+    if rep != WRep::F32 {
+        let w = params[l.p_w];
+        let rest = w.data.len() / l.w_len;
+        let (qw, sw) = quantize_weights_alloc(&w.data, rest, l.w_len, wb, rep);
+        let i4 = rep == WRep::I4;
+        return match l.typ {
+            LType::Fc => {
+                let ActT::A2 { n, c, data } = &xq else { panic!("fc expects flat input") };
+                let mut y = qfc(data, *n, *c, &qw, &sw, i4, l.cout);
+                add_bias(&mut y, l.cout, &params[l.p_w + 1].data);
+                (ActT::A2 { n: *n, c: l.cout, data: y }, None)
+            }
+            LType::Conv => {
+                let ActT::A4(d, data) = &xq else { panic!("conv expects NHWC input") };
+                let (mut y, od) = qconv2d(data, *d, &qw, &sw, i4, l.k, l.s, l.cout);
+                if l.norm {
+                    let (yy, _) =
+                        group_norm(&y, od, &params[l.p_w + 1].data, &params[l.p_w + 2].data);
+                    y = yy;
+                } else {
+                    add_bias(&mut y, od.c, &params[l.p_w + 1].data);
+                }
+                if l.relu {
+                    relu(&mut y);
+                }
+                (ActT::A4(od, y), None)
+            }
+            LType::DwConv => unreachable!("dwconv never dispatches the int path"),
+        };
+    }
 
     // Per-output-channel weight quantization (same passthrough skip: one
     // clone instead of two full-weight transposed copies + quantize scan).

@@ -23,6 +23,7 @@ pub use crate::runtime::reference::kernels::{
     col2im_acc, im2col, im2col::same_pad, matmul, matmul_a_bt, matmul_a_bt_into, matmul_acc,
     matmul_acc_scratch, matmul_at_b_acc, matmul_panel_len,
 };
+pub use crate::runtime::reference::kernels::{qgemm_into, quantize_rows_i8};
 
 /// NHWC activation dims.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -360,6 +361,141 @@ pub fn dwconv2d_bwd(
     let mut dw = vec![0.0f32; w.len()];
     dwconv2d_bwd_into(x, d, w, k, s, dy, &mut dx, &mut dw);
     (dx, dw)
+}
+
+// ---------------------------------------------------------------------------
+// Integer-path convolutions (kernels/qgemm.rs dispatch — see its docs)
+// ---------------------------------------------------------------------------
+
+/// i8 scratch size for the int conv path's quantized activation rows:
+/// the whole flattened batch for pointwise convs (quantized in one shot),
+/// otherwise one image's im2col patch matrix.
+pub fn conv_qpatch_len(d: Dims, k: usize, s: usize) -> usize {
+    if k == 1 && s == 1 {
+        d.elems()
+    } else {
+        conv_patch_len(d, k, s)
+    }
+}
+
+/// Activation rows quantized per [`qconv2d_into`] GEMM call — one dynamic
+/// i8 scale each: flattened batch pixels for pointwise convs, else one
+/// image's output pixels.
+pub fn conv_qrows(d: Dims, k: usize, s: usize) -> usize {
+    if k == 1 && s == 1 {
+        d.n * d.h * d.w
+    } else {
+        let (ho, _, _) = same_pad(d.h, k, s);
+        let (wo, _, _) = same_pad(d.w, k, s);
+        ho * wo
+    }
+}
+
+/// Dense conv on the integer path, SAME padding, into caller storage:
+/// fake-quantized f32 activations are re-quantized per row to i8
+/// (`qpatch` codes + `ascale` dynamic scales, sizes [`conv_qpatch_len`] /
+/// [`conv_qrows`]); `qw`/`sw` are channel-major int weight codes and
+/// per-channel scales from the `WQ` quantizer (`i4` selects the
+/// nibble-packed form).  `patches` is the same f32 im2col scratch as
+/// [`conv2d_into`] (ignored on the pointwise path); `out` is fully
+/// overwritten by the integer GEMM.
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d_into(
+    x: &[f32],
+    d: Dims,
+    qw: &[i8],
+    sw: &[f32],
+    i4: bool,
+    k: usize,
+    s: usize,
+    cout: usize,
+    out: &mut [f32],
+    patches: &mut [f32],
+    qpatch: &mut [i8],
+    ascale: &mut [f32],
+) -> Dims {
+    let (ho, _, _) = same_pad(d.h, k, s);
+    let (wo, _, _) = same_pad(d.w, k, s);
+    let od = Dims { n: d.n, h: ho, w: wo, c: cout };
+    debug_assert_eq!(out.len(), od.elems());
+    if k == 1 && s == 1 {
+        let m = d.n * d.h * d.w;
+        quantize_rows_i8(x, m, d.c, qpatch, ascale);
+        qgemm_into(out, qpatch, ascale, qw, sw, m, d.c, cout, i4);
+        return od;
+    }
+    let cols = k * k * d.c;
+    let img_elems = d.h * d.w * d.c;
+    debug_assert_eq!(patches.len(), ho * wo * cols);
+    for ni in 0..d.n {
+        im2col(&x[ni * img_elems..(ni + 1) * img_elems], d.h, d.w, d.c, k, s, patches);
+        quantize_rows_i8(patches, ho * wo, cols, qpatch, ascale);
+        let dst = &mut out[ni * ho * wo * cout..(ni + 1) * ho * wo * cout];
+        qgemm_into(dst, qpatch, ascale, qw, sw, ho * wo, cols, cout, i4);
+    }
+    od
+}
+
+/// Dense conv on the integer path, allocating (the tree-walk backend).
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d(
+    x: &[f32],
+    d: Dims,
+    qw: &[i8],
+    sw: &[f32],
+    i4: bool,
+    k: usize,
+    s: usize,
+    cout: usize,
+) -> (Vec<f32>, Dims) {
+    let (ho, _, _) = same_pad(d.h, k, s);
+    let (wo, _, _) = same_pad(d.w, k, s);
+    let mut out = vec![0.0f32; d.n * ho * wo * cout];
+    let mut patches = vec![0.0f32; conv_patch_len(d, k, s)];
+    let mut qpatch = vec![0i8; conv_qpatch_len(d, k, s)];
+    let mut ascale = vec![0.0f32; conv_qrows(d, k, s)];
+    let od = qconv2d_into(
+        x, d, qw, sw, i4, k, s, cout, &mut out, &mut patches, &mut qpatch, &mut ascale,
+    );
+    (out, od)
+}
+
+/// Dense (fully-connected) layer on the integer path into caller storage:
+/// per-sample dynamic i8 re-quantization of `x` (`(n, cin)` row-major)
+/// against channel-major int weights, full overwrite of `out` (`n × cout`).
+/// Bias is the caller's job, exactly as on the f32 path.
+#[allow(clippy::too_many_arguments)]
+pub fn qfc_into(
+    x: &[f32],
+    n: usize,
+    cin: usize,
+    qw: &[i8],
+    sw: &[f32],
+    i4: bool,
+    cout: usize,
+    out: &mut [f32],
+    qa: &mut [i8],
+    ascale: &mut [f32],
+) {
+    quantize_rows_i8(x, n, cin, qa, ascale);
+    qgemm_into(out, qa, ascale, qw, sw, n, cin, cout, i4);
+}
+
+/// Dense layer on the integer path, allocating (the tree-walk backend).
+pub fn qfc(
+    x: &[f32],
+    n: usize,
+    cin: usize,
+    qw: &[i8],
+    sw: &[f32],
+    i4: bool,
+    cout: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * cout];
+    let mut qa = vec![0i8; n * cin];
+    let mut ascale = vec![0.0f32; n];
+    qfc_into(x, n, cin, qw, sw, i4, cout, &mut out, &mut qa, &mut ascale);
+    out
 }
 
 // ---------------------------------------------------------------------------

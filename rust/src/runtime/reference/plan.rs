@@ -33,12 +33,14 @@
 //! construction since the transpose pair is a pure permutation and the
 //! quantizer is the identity on every row.
 
+use crate::runtime::reference::kernels::{pack_i4, packed4_row_len, quantize_w_i8, wrep, WRep};
 use crate::runtime::reference::nn::{
     add_bias, bias_bwd_acc, cmajor_to_nhwc_into, cmajor_to_w_into, conv2d_bwd_into, conv2d_into,
-    conv_panel_len, conv_patch_len, dwconv2d_bwd_into, dwconv2d_into, gap_bwd_into, gap_into,
-    gn_groups, group_norm_bwd_into, group_norm_into, matmul_a_bt_into, matmul_acc_scratch,
-    matmul_at_b_acc, matmul_panel_len, maxpool2_bwd_into, maxpool2_into, nhwc_to_cmajor_into,
-    relu, relu_bwd, same_pad, softmax_xent_into, w_to_cmajor_into, Dims,
+    conv_panel_len, conv_patch_len, conv_qpatch_len, conv_qrows, dwconv2d_bwd_into, dwconv2d_into,
+    gap_bwd_into, gap_into, gn_groups, group_norm_bwd_into, group_norm_into, matmul_a_bt_into,
+    matmul_acc_scratch, matmul_at_b_acc, matmul_panel_len, maxpool2_bwd_into, maxpool2_into,
+    nhwc_to_cmajor_into, qconv2d_into, qfc_into, relu, relu_bwd, same_pad, softmax_xent_into,
+    w_to_cmajor_into, Dims,
 };
 use crate::runtime::reference::quantize::{is_passthrough, quantize_rows};
 use crate::runtime::reference::zoo::{LType, ModelGraph, Node};
@@ -50,6 +52,10 @@ pub type Slot = usize;
 
 /// Physical u32 buffer-slot id (pool argmax tapes).
 pub type USlot = usize;
+
+/// Physical i8 buffer-slot id (integer-kernel weight codes and dynamic
+/// activation codes; eval plans only).
+pub type ISlot = usize;
 
 // ---------------------------------------------------------------------------
 // Workspace
@@ -64,6 +70,7 @@ pub type USlot = usize;
 pub struct Workspace {
     bufs: Vec<Vec<f32>>,
     ubufs: Vec<Vec<u32>>,
+    ibufs: Vec<Vec<i8>>,
 }
 
 impl Workspace {
@@ -74,6 +81,7 @@ impl Workspace {
     /// Grow to satisfy `plan` (monotonic; no-op when already warm).
     pub fn ensure(&mut self, plan: &Plan) {
         self.ensure_caps(&plan.slot_caps, &plan.uslot_caps);
+        self.ensure_icaps(&plan.islot_caps);
     }
 
     /// Grow to raw slot capacities (the agent plans carry these directly).
@@ -90,6 +98,19 @@ impl Workspace {
             self.ubufs.resize_with(u32_caps.len(), Vec::new);
         }
         for (b, &cap) in self.ubufs.iter_mut().zip(u32_caps) {
+            if b.len() < cap {
+                b.resize(cap, 0);
+            }
+        }
+    }
+
+    /// Grow the i8 arena (integer-kernel scratch; kept out of the public
+    /// two-arena [`Workspace::ensure_caps`] signature the agent plans use).
+    pub fn ensure_icaps(&mut self, i8_caps: &[usize]) {
+        if self.ibufs.len() < i8_caps.len() {
+            self.ibufs.resize_with(i8_caps.len(), Vec::new);
+        }
+        for (b, &cap) in self.ibufs.iter_mut().zip(i8_caps) {
             if b.len() < cap {
                 b.resize(cap, 0);
             }
@@ -116,6 +137,14 @@ impl Workspace {
         self.ubufs[s] = v;
     }
 
+    fn take_i(&mut self, s: ISlot) -> Vec<i8> {
+        std::mem::take(&mut self.ibufs[s])
+    }
+
+    fn put_i(&mut self, s: ISlot, v: Vec<i8>) {
+        self.ibufs[s] = v;
+    }
+
     fn slice(&self, s: Slot, len: usize) -> &[f32] {
         &self.bufs[s][..len]
     }
@@ -129,6 +158,11 @@ impl Workspace {
     /// Total resident u32 elements.
     pub fn u32_len(&self) -> usize {
         self.ubufs.iter().map(Vec::len).sum()
+    }
+
+    /// Total resident i8 bytes (integer-kernel scratch).
+    pub fn i8_len(&self) -> usize {
+        self.ibufs.iter().map(Vec::len).sum()
     }
 }
 
@@ -216,6 +250,37 @@ fn expect_slot(src: Src) -> Slot {
     }
 }
 
+/// Integer-path slots of a `WQ` step (eval plans on int-eligible layers).
+/// Bit configs arrive per dispatch, so the plan cannot know which
+/// representation [`wrep`] will pick — it reserves scratch for either and
+/// the executor writes exactly one (f32 `dst` *or* these; the unwritten
+/// twin is never read because the consuming step re-derives the same
+/// `wrep` from the same bit slice).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct IntWq {
+    /// Channel-major i8 weight codes (nibble-packed iff the dispatch
+    /// picks `WRep::I4`).
+    qdst: ISlot,
+    /// Unpacked-code scratch for the I4 pack step.
+    qscratch: ISlot,
+    /// Per-output-channel f32 scales (the exact fake-quant grid).
+    wscales: Slot,
+}
+
+/// Integer-path slots of an `Fc`/`Conv` step: the producing `WQ` step's
+/// weight codes/scales plus dynamic per-row activation scratch.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct IntGemm {
+    /// The `WQ` step's `qdst`.
+    qw: ISlot,
+    /// The `WQ` step's `wscales`.
+    wsc: Slot,
+    /// Dynamic i8 activation codes ([`conv_qpatch_len`] / `n·cin`).
+    qa: ISlot,
+    /// Dynamic per-row activation scales ([`conv_qrows`] / `n`).
+    ascale: Slot,
+}
+
 /// One planned operation.  Layer steps carry the layer index `li` so the
 /// executor can read kernel geometry and parameter offsets from the graph;
 /// all activation geometry is resolved at compile time.
@@ -227,11 +292,21 @@ pub(crate) enum Step {
     /// Flat (n, c) activation quantize — fc's single shared channel.
     ActQ2 { src: Src, dst: Slot, n: usize, c: usize, a_off: usize },
     /// Per-output-channel weight quantize of `params[l.p_w]` into `dst`
-    /// via channel-major `scratch` (copied through on passthrough bits).
-    WQ { li: usize, dst: Slot, scratch: Slot },
+    /// via channel-major `scratch` (copied through on passthrough bits),
+    /// or onto the integer grid when `int` is planned and [`wrep`] picks
+    /// an int representation at dispatch time.
+    WQ { li: usize, dst: Slot, scratch: Slot, int: Option<IntWq> },
     /// dst = xq @ w + bias (fc layer); `panel` is matmul packing scratch
     /// (None when the shape stays on the naive path).
-    Fc { li: usize, xq: Slot, wq: Slot, dst: Slot, n: usize, panel: Option<Slot> },
+    Fc {
+        li: usize,
+        xq: Slot,
+        wq: Slot,
+        dst: Slot,
+        n: usize,
+        panel: Option<Slot>,
+        int: Option<IntGemm>,
+    },
     /// dst = conv(xq, wq); `patches` is im2col scratch (None = pointwise),
     /// `panel` is matmul packing scratch (None on small shapes).
     Conv {
@@ -242,6 +317,7 @@ pub(crate) enum Step {
         patches: Option<Slot>,
         panel: Option<Slot>,
         d: Dims,
+        int: Option<IntGemm>,
     },
     /// dst = dwconv(xq, wq).
     DwConv { li: usize, xq: Slot, wq: Slot, dst: Slot, d: Dims },
@@ -310,19 +386,26 @@ fn visit_slots(step: &mut Step, f: &mut impl FnMut(&mut Slot)) {
             }
             f(dst);
         }
-        Step::WQ { dst, scratch, .. } => {
+        Step::WQ { dst, scratch, int, .. } => {
             f(dst);
             f(scratch);
+            if let Some(i) = int {
+                f(&mut i.wscales);
+            }
         }
-        Step::Fc { xq, wq, dst, panel, .. } => {
+        Step::Fc { xq, wq, dst, panel, int, .. } => {
             f(xq);
             f(wq);
             f(dst);
             if let Some(p) = panel {
                 f(p);
             }
+            if let Some(i) = int {
+                f(&mut i.wsc);
+                f(&mut i.ascale);
+            }
         }
-        Step::Conv { xq, wq, dst, patches, panel, .. } => {
+        Step::Conv { xq, wq, dst, patches, panel, int, .. } => {
             f(xq);
             f(wq);
             f(dst);
@@ -331,6 +414,10 @@ fn visit_slots(step: &mut Step, f: &mut impl FnMut(&mut Slot)) {
             }
             if let Some(p) = panel {
                 f(p);
+            }
+            if let Some(i) = int {
+                f(&mut i.wsc);
+                f(&mut i.ascale);
             }
         }
         Step::DwConv { xq, wq, dst, .. } => {
@@ -425,26 +512,45 @@ fn visit_slots(step: &mut Step, f: &mut impl FnMut(&mut Slot)) {
     }
 }
 
+/// Visit every i8 slot id a step touches — the liveness/remap twin of
+/// [`visit_slots`] for the integer-kernel arena (int-path steps only).
+fn visit_islots(step: &mut Step, f: &mut impl FnMut(&mut ISlot)) {
+    match step {
+        Step::WQ { int: Some(i), .. } => {
+            f(&mut i.qdst);
+            f(&mut i.qscratch);
+        }
+        Step::Fc { int: Some(i), .. } | Step::Conv { int: Some(i), .. } => {
+            f(&mut i.qw);
+            f(&mut i.qa);
+        }
+        _ => {}
+    }
+}
+
 /// Liveness pass: map virtual buffers (step fields as emitted by the
 /// builder) onto physical slots.  A virtual buffer's first appearance is
 /// always its defining write; its slot returns to the free list right
 /// after the step holding its last appearance (pinned buffers — logits,
 /// d(logits) — are read by the executor outside the step list and are
-/// never released).  Returns the virtual → physical map.
+/// never released).  Returns the virtual → physical map.  `visit` selects
+/// the arena: the same pass runs once over the f32 slots
+/// ([`visit_slots`]) and once over the i8 slots ([`visit_islots`]).
 fn assign_slots(
     steps: &mut [Step],
     sizes: &[usize],
     pinned: &[bool],
     planner: &mut Planner,
+    mut visit: impl FnMut(&mut Step, &mut dyn FnMut(&mut Slot)),
 ) -> Vec<Option<Slot>> {
     let mut last = vec![0usize; sizes.len()];
     for (i, s) in steps.iter_mut().enumerate() {
-        visit_slots(s, &mut |v| last[*v] = i);
+        visit(s, &mut |v| last[*v] = i);
     }
     let mut map: Vec<Option<Slot>> = vec![None; sizes.len()];
     for (i, step) in steps.iter_mut().enumerate() {
         let mut dying: Vec<Slot> = Vec::new();
-        visit_slots(step, &mut |v| {
+        visit(step, &mut |v| {
             if map[*v].is_none() {
                 map[*v] = Some(planner.alloc(sizes[*v]));
             }
@@ -452,7 +558,7 @@ fn assign_slots(
                 dying.push(map[*v].expect("assigned above"));
             }
         });
-        visit_slots(step, &mut |v| *v = map[*v].expect("assigned above"));
+        visit(step, &mut |v| *v = map[*v].expect("assigned above"));
         dying.sort_unstable();
         dying.dedup();
         for s in dying {
@@ -477,6 +583,9 @@ pub struct Plan {
     pub slot_caps: Vec<usize>,
     /// Physical u32 slot capacities (pool argmax tapes).
     pub uslot_caps: Vec<usize>,
+    /// Physical i8 slot capacities (integer-kernel scratch; empty for
+    /// train plans, whose tapes need the f32 quantized operands).
+    pub islot_caps: Vec<usize>,
     /// Per-parameter gradient slots (train plans; pinned).
     grad_slots: Vec<Slot>,
     logits: Slot,
@@ -551,6 +660,7 @@ struct PlanBuilder<'g> {
     sizes: Vec<usize>,
     pinned: Vec<bool>,
     usizes: Vec<usize>,
+    isizes: Vec<usize>,
     tapes: Vec<PTape>,
 }
 
@@ -566,6 +676,13 @@ impl<'g> PlanBuilder<'g> {
     fn uvb(&mut self, len: usize) -> USlot {
         self.usizes.push(len);
         self.usizes.len() - 1
+    }
+
+    /// New virtual i8 buffer of `len` bytes (int-path scratch; liveness
+    /// runs over these exactly like the f32 slots, never pinned).
+    fn ivb(&mut self, len: usize) -> ISlot {
+        self.isizes.push(len);
+        self.isizes.len() - 1
     }
 
     fn pin(&mut self, v: Slot) {
@@ -594,7 +711,16 @@ impl<'g> PlanBuilder<'g> {
         let wlen: usize = self.g.params[l.p_w].shape.iter().product();
         let wq = self.vb(wlen);
         let scratch = self.vb(wlen);
-        self.steps.push(Step::WQ { li, dst: wq, scratch });
+        // Int-path scratch (eval only; DwConv has no integer kernel).
+        // Which representation runs is a per-dispatch decision — the plan
+        // reserves capacity so any of them can.
+        let int_ok = !self.train && l.typ != LType::DwConv;
+        let int_wq = int_ok.then(|| IntWq {
+            qdst: self.ivb(wlen),
+            qscratch: self.ivb(wlen),
+            wscales: self.vb(l.w_len),
+        });
+        self.steps.push(Step::WQ { li, dst: wq, scratch, int: int_wq });
 
         match l.typ {
             LType::Fc => {
@@ -603,7 +729,13 @@ impl<'g> PlanBuilder<'g> {
                 let dst = self.vb(n * l.cout);
                 let pan = matmul_panel_len(l.cin, l.cout);
                 let panel = (pan > 0).then(|| self.vb(pan));
-                self.steps.push(Step::Fc { li, xq, wq, dst, n, panel });
+                let int = int_wq.map(|iw| IntGemm {
+                    qw: iw.qdst,
+                    wsc: iw.wscales,
+                    qa: self.ivb(n * l.cin),
+                    ascale: self.vb(n),
+                });
+                self.steps.push(Step::Fc { li, xq, wq, dst, n, panel, int });
                 let out_d = Dims { n, h: 1, w: 1, c: l.cout };
                 let tape = PLayer { li, xq, xq_shape, wq, gn: None, relu_out: None, out_d };
                 ((Src::Slot(dst), Shape::A2 { n, c: l.cout }), tape)
@@ -622,7 +754,13 @@ impl<'g> PlanBuilder<'g> {
                     let patches = (plen > 0).then(|| self.vb(plen));
                     let pan = conv_panel_len(d, l.k, l.cout);
                     let panel = (pan > 0).then(|| self.vb(pan));
-                    self.steps.push(Step::Conv { li, xq, wq, dst, patches, panel, d });
+                    let int = int_wq.map(|iw| IntGemm {
+                        qw: iw.qdst,
+                        wsc: iw.wscales,
+                        qa: self.ivb(conv_qpatch_len(d, l.k, l.s)),
+                        ascale: self.vb(conv_qrows(d, l.k, l.s)),
+                    });
+                    self.steps.push(Step::Conv { li, xq, wq, dst, patches, panel, d, int });
                 }
                 let (out, gn) = if l.norm {
                     let gdst = self.vb(od.elems());
@@ -788,6 +926,7 @@ fn compile(g: &ModelGraph, n: usize, train: bool) -> Plan {
         sizes: Vec::new(),
         pinned: Vec::new(),
         usizes: Vec::new(),
+        isizes: Vec::new(),
         tapes: Vec::new(),
     };
     let d0 = Dims { n, h: g.layers[0].h_in, w: g.layers[0].w_in, c: g.layers[0].cin };
@@ -933,14 +1072,23 @@ fn compile(g: &ModelGraph, n: usize, train: bool) -> Plan {
     } else {
         Vec::new()
     };
-    let map = assign_slots(&mut b.steps, &b.sizes, &b.pinned, &mut planner);
+    let map = assign_slots(&mut b.steps, &b.sizes, &b.pinned, &mut planner, |s, f| {
+        visit_slots(s, &mut |v| f(v))
+    });
     let logits = map[logits_vb].expect("logits slot assigned");
     let dlogits = if train { map[dlogits_vb].expect("dlogits slot assigned") } else { 0 };
+    // Second liveness pass over the disjoint i8 arena (no pinned slots).
+    let mut iplanner = Planner::new();
+    let ipinned = vec![false; b.isizes.len()];
+    assign_slots(&mut b.steps, &b.isizes, &ipinned, &mut iplanner, |s, f| {
+        visit_islots(s, &mut |v| f(v))
+    });
     Plan {
         steps: b.steps,
         fwd_len,
         slot_caps: planner.finish(),
         uslot_caps: b.usizes,
+        islot_caps: iplanner.finish(),
         grad_slots,
         logits,
         dlogits,
@@ -1038,11 +1186,32 @@ fn exec_step(step: &Step, cx: &Ctx, ws: &mut Workspace) {
                 ws.put(s, v);
             }
         }
-        Step::WQ { li, dst, scratch } => {
+        Step::WQ { li, dst, scratch, int } => {
             let l = &cx.g.layers[li];
             let w = &cx.params[l.p_w].data;
             let wb = &cx.wbits[l.w_off..l.w_off + l.w_len];
             let rest = w.len() / l.w_len;
+            let rep = if int.is_some() { wrep(wb, cx.binar) } else { WRep::F32 };
+            if let (Some(iw), false) = (int, rep == WRep::F32) {
+                // Integer path: quantize straight onto the int grid (the
+                // same codes/scales `fake_quant_row` would produce).  The
+                // f32 `dst` slot keeps garbage — the consuming Fc/Conv
+                // re-derives the same `rep` and never reads it.
+                let mut qv = ws.take_i(iw.qdst);
+                let mut sv = ws.take(iw.wscales);
+                if rep == WRep::I4 {
+                    let mut qs = ws.take_i(iw.qscratch);
+                    quantize_w_i8(w, rest, l.w_len, wb, &mut qs[..w.len()], &mut sv[..l.w_len]);
+                    let plen = packed4_row_len(rest) * l.w_len;
+                    pack_i4(&qs[..w.len()], rest, l.w_len, &mut qv[..plen]);
+                    ws.put_i(iw.qscratch, qs);
+                } else {
+                    quantize_w_i8(w, rest, l.w_len, wb, &mut qv[..w.len()], &mut sv[..l.w_len]);
+                }
+                ws.put_i(iw.qdst, qv);
+                ws.put(iw.wscales, sv);
+                return;
+            }
             let mut dstv = ws.take(dst);
             if is_passthrough(wb, cx.binar) {
                 dstv[..w.len()].copy_from_slice(w);
@@ -1055,9 +1224,39 @@ fn exec_step(step: &Step, cx: &Ctx, ws: &mut Workspace) {
             }
             ws.put(dst, dstv);
         }
-        Step::Fc { li, xq, wq, dst, n, panel } => {
+        Step::Fc { li, xq, wq, dst, n, panel, int } => {
             let l = &cx.g.layers[li];
             let wlen = cx.params[l.p_w].data.len();
+            let wb = &cx.wbits[l.w_off..l.w_off + l.w_len];
+            let rep = if int.is_some() { wrep(wb, cx.binar) } else { WRep::F32 };
+            if let (Some(ig), false) = (int, rep == WRep::F32) {
+                let xqv = ws.take(xq);
+                let mut dstv = ws.take(dst);
+                let qwv = ws.take_i(ig.qw);
+                let swv = ws.take(ig.wsc);
+                let mut qav = ws.take_i(ig.qa);
+                let mut asv = ws.take(ig.ascale);
+                qfc_into(
+                    &xqv[..n * l.cin],
+                    n,
+                    l.cin,
+                    &qwv,
+                    &swv[..l.w_len],
+                    rep == WRep::I4,
+                    l.cout,
+                    &mut dstv[..n * l.cout],
+                    &mut qav[..n * l.cin],
+                    &mut asv[..n],
+                );
+                add_bias(&mut dstv[..n * l.cout], l.cout, &cx.params[l.p_w + 1].data);
+                ws.put(xq, xqv);
+                ws.put_i(ig.qw, qwv);
+                ws.put(ig.wsc, swv);
+                ws.put_i(ig.qa, qav);
+                ws.put(ig.ascale, asv);
+                ws.put(dst, dstv);
+                return;
+            }
             let xqv = ws.take(xq);
             let wqv = ws.take(wq);
             let mut dstv = ws.take(dst);
@@ -1078,12 +1277,52 @@ fn exec_step(step: &Step, cx: &Ctx, ws: &mut Workspace) {
             ws.put(wq, wqv);
             ws.put(dst, dstv);
         }
-        Step::Conv { li, xq, wq, dst, patches, panel, d } => {
+        Step::Conv { li, xq, wq, dst, patches, panel, d, int } => {
             let l = &cx.g.layers[li];
             let wlen = cx.params[l.p_w].data.len();
             let (ho, _, _) = same_pad(d.h, l.k, l.s);
             let (wo, _, _) = same_pad(d.w, l.k, l.s);
             let od_len = d.n * ho * wo * l.cout;
+            let wb = &cx.wbits[l.w_off..l.w_off + l.w_len];
+            let rep = if int.is_some() { wrep(wb, cx.binar) } else { WRep::F32 };
+            if let (Some(ig), false) = (int, rep == WRep::F32) {
+                let xqv = ws.take(xq);
+                let mut dstv = ws.take(dst);
+                let qwv = ws.take_i(ig.qw);
+                let swv = ws.take(ig.wsc);
+                let mut qpv = ws.take_i(ig.qa);
+                let mut asv = ws.take(ig.ascale);
+                let mut pv = patches.map(|p| ws.take(p));
+                let patch_len = conv_patch_len(d, l.k, l.s);
+                let patches_s: &mut [f32] = match &mut pv {
+                    Some(v) => &mut v[..patch_len],
+                    None => &mut [],
+                };
+                qconv2d_into(
+                    &xqv[..d.elems()],
+                    d,
+                    &qwv,
+                    &swv[..l.w_len],
+                    rep == WRep::I4,
+                    l.k,
+                    l.s,
+                    l.cout,
+                    &mut dstv[..od_len],
+                    patches_s,
+                    &mut qpv[..conv_qpatch_len(d, l.k, l.s)],
+                    &mut asv[..conv_qrows(d, l.k, l.s)],
+                );
+                if let (Some(p), Some(v)) = (patches, pv) {
+                    ws.put(p, v);
+                }
+                ws.put(xq, xqv);
+                ws.put_i(ig.qw, qwv);
+                ws.put(ig.wsc, swv);
+                ws.put_i(ig.qa, qpv);
+                ws.put(ig.ascale, asv);
+                ws.put(dst, dstv);
+                return;
+            }
             let xqv = ws.take(xq);
             let wqv = ws.take(wq);
             let mut dstv = ws.take(dst);

@@ -22,6 +22,31 @@ pub fn round_te(x: f32) -> f32 {
     }
 }
 
+/// Positive level count of the signed symmetric linear quantizer for a
+/// *rounded* bit-width `b`: `2^(b-1) - 1`, floored at 1 so `b == 1` stays a
+/// binary {-s, +s} grid.  Computed as an exact integer shift — powers of two
+/// up to 2²³ and their minus-one neighbours are exactly representable in
+/// f32, so this is bit-identical to the `2.0f32.powf(b - 1.0) - 1.0` it
+/// replaces while keeping transcendental math out of the per-row hot loop.
+/// The integer kernels (`kernels/qgemm.rs`) derive their per-channel scales
+/// from this same function so the int and fake-quant grids agree exactly.
+pub fn linear_levels(b: f32) -> f32 {
+    let e = (b.clamp(1.0, 24.0) as u32) - 1;
+    (((1u64 << e) as f32) - 1.0).max(1.0)
+}
+
+/// Max-abs scale of the linear quantizer over `row` at `levels` positive
+/// levels: `max|row| / levels`, or 1.0 for an all-zero row (any scale
+/// reproduces zeros; 1.0 matches the python oracle).  Shared with the
+/// integer kernels so both paths quantize onto the identical grid.
+pub fn linear_scale(row_max_abs: f32, levels: f32) -> f32 {
+    if row_max_abs > 0.0 {
+        row_max_abs / levels
+    } else {
+        1.0
+    }
+}
+
 /// Per-channel linear quantize-dequantize over the `cols`-wide row `c` of a
 /// channel-major matrix, in place.
 fn fake_quant_row(row: &mut [f32], bits: f32) {
@@ -35,9 +60,9 @@ fn fake_quant_row(row: &mut [f32], bits: f32) {
     }
     // Signed symmetric quantizer: 2^(b-1) - 1 positive levels; b == 1 is
     // degenerate (0 levels) → binary {-s, +s} via the max(levels, 1) floor.
-    let levels = (2.0f32.powf(b.clamp(1.0, 24.0) - 1.0) - 1.0).max(1.0);
+    let levels = linear_levels(b);
     let max_abs = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
-    let scale = if max_abs > 0.0 { max_abs / levels } else { 1.0 };
+    let scale = linear_scale(max_abs, levels);
     for x in row.iter_mut() {
         let q = round_te(*x / scale).clamp(-levels, levels);
         *x = q * scale;
@@ -45,10 +70,13 @@ fn fake_quant_row(row: &mut [f32], bits: f32) {
 }
 
 /// Per-channel multi-bit residual binarization of row `c`, in place.
-fn binarize_row(row: &mut [f32], bits: f32) {
+/// `r` is caller-owned scratch for the residual — grown once and reused
+/// across rows instead of allocating per call.
+fn binarize_row(row: &mut [f32], bits: f32, r: &mut Vec<f32>) {
     let b = round_te(bits).clamp(0.0, MAX_BBN as f32) as usize;
     let k_cols = row.len().max(1) as f32;
-    let mut r: Vec<f32> = row.to_vec();
+    r.clear();
+    r.extend_from_slice(row);
     row.fill(0.0);
     for _ in 0..b {
         let alpha = r.iter().map(|x| x.abs()).sum::<f32>() / k_cols;
@@ -75,10 +103,13 @@ pub fn is_passthrough(bits: &[f32], binar: bool) -> bool {
 pub fn quantize_rows(x: &mut [f32], rows: usize, cols: usize, bits: &[f32], binar: bool) {
     debug_assert_eq!(x.len(), rows * cols);
     debug_assert_eq!(bits.len(), rows);
+    // One residual buffer for the whole matrix (binar mode only) — the
+    // first row grows it to `cols`, every later row reuses the capacity.
+    let mut scratch: Vec<f32> = Vec::new();
     for c in 0..rows {
         let row = &mut x[c * cols..(c + 1) * cols];
         if binar {
-            binarize_row(row, bits[c]);
+            binarize_row(row, bits[c], &mut scratch);
         } else {
             fake_quant_row(row, bits[c]);
         }
@@ -139,14 +170,28 @@ mod tests {
         let orig: Vec<f32> = (0..32).map(|i| ((i * 13 % 17) as f32 / 8.0) - 1.0).collect();
         let err = |bits: f32| {
             let mut x = orig.clone();
-            binarize_row(&mut x, bits);
+            binarize_row(&mut x, bits, &mut Vec::new());
             x.iter().zip(&orig).map(|(a, b)| (a - b).abs() as f64).sum::<f64>()
         };
         assert!(err(1.0) > err(3.0));
         assert!(err(3.0) > err(8.0));
         let mut zeroed = orig.clone();
-        binarize_row(&mut zeroed, 0.0);
+        binarize_row(&mut zeroed, 0.0, &mut Vec::new());
         assert!(zeroed.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn shifted_levels_match_powf() {
+        // The hoisted integer-shift level computation must reproduce the
+        // original transcendental formula bit-for-bit at every bit-width.
+        for b in 1..=24 {
+            let bf = b as f32;
+            let powf = (2.0f32.powf(bf.clamp(1.0, 24.0) - 1.0) - 1.0).max(1.0);
+            assert_eq!(linear_levels(bf).to_bits(), powf.to_bits(), "bits={b}");
+        }
+        assert_eq!(linear_levels(8.0), 127.0);
+        assert_eq!(linear_levels(4.0), 7.0);
+        assert_eq!(linear_levels(1.0), 1.0);
     }
 
     #[test]

@@ -88,6 +88,42 @@ pub struct DaemonSweepResult {
     pub cache: (u64, u64),
 }
 
+/// Wait for one submitted job and interpret its terminal row: the verbatim
+/// report on `done`, the daemon's error text otherwise, plus the job's
+/// eval-cache (hits, misses) delta.
+fn wait_outcome(
+    client: &mut DaemonClient,
+    handle: &str,
+) -> anyhow::Result<(Result<Json, String>, (u64, u64))> {
+    let row = client.result(handle, true)?;
+    let mut cache = (0u64, 0u64);
+    if let Some(c) = row.get("cache") {
+        cache.0 = c.get("hits").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        cache.1 = c.get("misses").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    }
+    let outcome = match row.req("state")?.as_str() {
+        Some("done") => Ok(row.req("report")?.clone()),
+        Some(state) => {
+            Err(row.get("error").and_then(Json::as_str).unwrap_or(state).to_string())
+        }
+        None => anyhow::bail!("malformed result row for {handle}"),
+    };
+    Ok((outcome, cache))
+}
+
+/// Run one job through a daemon and block for its verbatim report — the
+/// single-job core of [`run_sweep_via_daemon`], reused by
+/// `autoq repro --daemon` to route searches through a shared daemon (and
+/// its eval cache) while fine-tunes and report assembly stay local.
+pub fn run_job_via_daemon(addr: &str, spec: &JobSpec) -> anyhow::Result<Json> {
+    let mut client = DaemonClient::connect(addr)?;
+    let handle = client.submit(spec)?;
+    crate::info!("[{}] submitted as {handle}", spec.id());
+    let (outcome, cache) = wait_outcome(&mut client, &handle)?;
+    crate::info!("[{}] eval cache {} hit(s) / {} miss(es)", spec.id(), cache.0, cache.1);
+    outcome.map_err(|e| anyhow::anyhow!("[{}] daemon job failed: {e}", spec.id()))
+}
+
 /// Run a sweep through a daemon: expand the grid locally (same
 /// `Sweep::jobs` expansion — same ids, same derived seeds), submit every
 /// cell, wait for each result in submission order, and write each verbatim
@@ -117,31 +153,23 @@ pub fn run_sweep_via_daemon(addr: &str, sweep: &Sweep) -> anyhow::Result<DaemonS
     let mut failures = Vec::new();
     let mut cache = (0u64, 0u64);
     for (spec, handle) in specs.iter().zip(&handles) {
-        let row = client.result(handle, true)?;
-        if let Some(c) = row.get("cache") {
-            cache.0 += c.get("hits").and_then(Json::as_f64).unwrap_or(0.0) as u64;
-            cache.1 += c.get("misses").and_then(Json::as_f64).unwrap_or(0.0) as u64;
-        }
-        match row.req("state")?.as_str() {
-            Some("done") => {
+        let (outcome, delta) = wait_outcome(&mut client, handle)?;
+        cache.0 += delta.0;
+        cache.1 += delta.1;
+        match outcome {
+            Ok(report) => {
                 let path = out_dir.join(format!("{}.json", spec.id()));
                 // The report is written verbatim — byte-identical to what a
                 // daemon-free `Sweep::run` of the same grid produces
                 // (modulo wall-clock `secs`).
-                std::fs::write(&path, row.req("report")?.to_string())
+                std::fs::write(&path, report.to_string())
                     .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", path.display()))?;
                 written.push((spec.id(), path));
             }
-            Some(state) => {
-                let err = row
-                    .get("error")
-                    .and_then(Json::as_str)
-                    .unwrap_or(state)
-                    .to_string();
-                crate::warn_!("[{}] {state}: {err}", spec.id());
+            Err(err) => {
+                crate::warn_!("[{}] failed: {err}", spec.id());
                 failures.push((spec.id(), err));
             }
-            None => anyhow::bail!("malformed result row for {handle}"),
         }
     }
     crate::info!(

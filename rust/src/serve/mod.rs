@@ -25,7 +25,7 @@ pub mod server;
 pub mod wire;
 
 pub use cache::{CacheHandle, EvalCache};
-pub use client::{run_sweep_via_daemon, DaemonClient, DaemonSweepResult};
+pub use client::{run_job_via_daemon, run_sweep_via_daemon, DaemonClient, DaemonSweepResult};
 pub use queue::{JobQueue, JobState};
 pub use server::{worker_thread_budget, ServeConfig, Server};
 pub use wire::ServeRequest;

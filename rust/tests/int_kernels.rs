@@ -1,0 +1,238 @@
+//! Integer-kernel contracts (DESIGN.md §Integer kernels):
+//!
+//! * **Weight-grid exactness**: the per-channel i8 codes × scales from
+//!   `quantize_w_i8` reproduce the fake-quant f32 weights bit-for-bit —
+//!   the int path's weights carry *zero* extra error.
+//! * **Tolerance contract**: quantize → pack → gemm → dequantize stays
+//!   within the bound proven in the `qgemm` module docs against a
+//!   sequential-f32 fake-quant oracle, across randomized shapes including
+//!   edge tiles, all-zero rows/channels and pruned (0-bit) channels.
+//! * **Nibble packing**: the bit-packed int4 kernel is bit-identical to
+//!   the byte-wide int8 kernel whenever every channel fits a nibble.
+//! * **Model level**: zoo-model `EvalResult`s under the int path agree
+//!   with the forced-f32 reference at wbits ∈ {2, 4, 8}, and repeat int
+//!   evals are byte-deterministic.
+
+use autoq::cost::Mode;
+use autoq::data::synth::{Split, SynthDataset};
+use autoq::models::{ModelRunner, ParamStore};
+use autoq::runtime::reference::kernels::{
+    qgemm_into, quantize_rows_i8, quantize_weights_alloc, set_int_kernels_enabled, wrep_with,
+    WRep,
+};
+use autoq::runtime::reference::quantize::quantize_rows;
+use autoq::runtime::{BackendKind, Parallelism, Runtime};
+use autoq::util::rng::Rng;
+
+/// Transpose a row-major `(rest, cout)` weight into channel-major
+/// `(cout, rest)` and fake-quantize each channel row — the f32 oracle the
+/// int path is specified against.
+fn fake_quant_channel_major(w: &[f32], rest: usize, cout: usize, bits: &[f32]) -> Vec<f32> {
+    let mut wfq = vec![0.0f32; rest * cout];
+    for co in 0..cout {
+        for r in 0..rest {
+            wfq[co * rest + r] = w[r * cout + co];
+        }
+    }
+    quantize_rows(&mut wfq, cout, rest, bits, false);
+    wfq
+}
+
+/// The per-element bound from the `qgemm` module docs:
+/// `k·maxa_i·maxw_j·(1/254 + (k + 4)·2⁻²³)`.
+fn tolerance_bound(k: usize, maxa: f64, maxw: f64) -> f64 {
+    k as f64 * maxa * maxw * (1.0 / 254.0 + (k as f64 + 4.0) * (2.0f64).powi(-23))
+}
+
+fn max_abs(xs: &[f32]) -> f64 {
+    xs.iter().fold(0.0f32, |m, &x| m.max(x.abs())) as f64
+}
+
+#[test]
+fn weight_codes_reproduce_fake_quant_bitwise() {
+    let mut rng = Rng::new(0xA11CE);
+    for trial in 0..200 {
+        let rest = 1 + rng.below(33);
+        let cout = 1 + rng.below(9);
+        let mut w = vec![0.0f32; rest * cout];
+        rng.fill_normal_f32(&mut w, 1.0);
+        // All-zero channels exercise the scale = 0-free (1.0) grid branch.
+        if cout > 1 && rng.below(3) == 0 {
+            let co = rng.below(cout);
+            for r in 0..rest {
+                w[r * cout + co] = 0.0;
+            }
+        }
+        let bits: Vec<f32> = (0..cout)
+            .map(|_| match rng.below(10) {
+                0 => 0.0,  // pruned
+                1 => -1.3, // rounds below zero → pruned
+                2 => 7.6,  // rounds to 8, the i8 ceiling
+                b => (b - 2) as f32,
+            })
+            .collect();
+        let wfq = fake_quant_channel_major(&w, rest, cout, &bits);
+        let (q8, s8) = quantize_weights_alloc(&w, rest, cout, &bits, WRep::I8);
+        for co in 0..cout {
+            for r in 0..rest {
+                let dq = q8[co * rest + r] as f32 * s8[co];
+                assert_eq!(
+                    dq.to_bits(),
+                    wfq[co * rest + r].to_bits(),
+                    "trial={trial} co={co} r={r}: {dq} vs {}",
+                    wfq[co * rest + r]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_nibble_kernel_matches_bytewide_kernel() {
+    let mut rng = Rng::new(0x4444);
+    for trial in 0..80 {
+        let m = 1 + rng.below(4);
+        let k = 1 + rng.below(40); // odd k exercises the padded tail nibble
+        let n = 1 + rng.below(10);
+        let mut a = vec![0.0f32; m * k];
+        let mut w = vec![0.0f32; k * n];
+        rng.fill_normal_f32(&mut a, 1.0);
+        rng.fill_normal_f32(&mut w, 0.7);
+        let bits: Vec<f32> = (0..n).map(|_| rng.below(5) as f32).collect(); // 0..=4
+        assert_eq!(wrep_with(true, &bits, false), WRep::I4);
+        let mut qa = vec![0i8; m * k];
+        let mut sa = vec![0.0f32; m];
+        quantize_rows_i8(&a, m, k, &mut qa, &mut sa);
+        let (q8, s8) = quantize_weights_alloc(&w, k, n, &bits, WRep::I8);
+        let (q4, s4) = quantize_weights_alloc(&w, k, n, &bits, WRep::I4);
+        assert_eq!(s8, s4, "trial={trial}");
+        let mut o8 = vec![f32::NAN; m * n];
+        let mut o4 = vec![f32::NAN; m * n];
+        qgemm_into(&mut o8, &qa, &sa, &q8, &s8, m, k, n, false);
+        qgemm_into(&mut o4, &qa, &sa, &q4, &s4, m, k, n, true);
+        for (e, (x, y)) in o8.iter().zip(&o4).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "trial={trial} ({m},{k},{n}) elem {e}");
+        }
+    }
+}
+
+#[test]
+fn int_gemm_respects_the_documented_tolerance() {
+    let mut rng = Rng::new(0xBEEF);
+    // Directed edge shapes (single element, single row/col, dot-chunk
+    // remainders, an n past the MC chunk) plus random ones.
+    let mut shapes = vec![(1, 1, 1), (1, 7, 1), (3, 1, 5), (1, 257, 3), (2, 33, 4), (2, 2, 130)];
+    for _ in 0..60 {
+        shapes.push((1 + rng.below(5), 1 + rng.below(64), 1 + rng.below(12)));
+    }
+    for (ti, &(m, k, n)) in shapes.iter().enumerate() {
+        let mut a = vec![0.0f32; m * k];
+        rng.fill_normal_f32(&mut a, 1.0);
+        if m > 1 && rng.below(3) == 0 {
+            let i = rng.below(m);
+            a[i * k..(i + 1) * k].fill(0.0); // all-zero activation row
+        }
+        let mut w = vec![0.0f32; k * n];
+        rng.fill_normal_f32(&mut w, 0.7);
+        if n > 1 && rng.below(3) == 0 {
+            let co = rng.below(n);
+            for r in 0..k {
+                w[r * n + co] = 0.0; // all-zero weight channel
+            }
+        }
+        for low_bit in [false, true] {
+            let bits: Vec<f32> = (0..n)
+                .map(|_| {
+                    if rng.below(8) == 0 {
+                        return 0.0; // pruned channel
+                    }
+                    (1 + rng.below(if low_bit { 4 } else { 8 })) as f32
+                })
+                .collect();
+            let rep = wrep_with(true, &bits, false);
+            assert_ne!(rep, WRep::F32, "bits ≤ 8 must dispatch an int kernel");
+            let (qw, sw) = quantize_weights_alloc(&w, k, n, &bits, rep);
+            let mut qa = vec![0i8; m * k];
+            let mut sa = vec![0.0f32; m];
+            quantize_rows_i8(&a, m, k, &mut qa, &mut sa);
+            let mut out = vec![f32::NAN; m * n];
+            qgemm_into(&mut out, &qa, &sa, &qw, &sw, m, k, n, rep == WRep::I4);
+            let wfq = fake_quant_channel_major(&w, k, n, &bits);
+            for i in 0..m {
+                let maxa = max_abs(&a[i * k..(i + 1) * k]);
+                for j in 0..n {
+                    // Sequential f32 accumulation — the reference the f32
+                    // kernels produce and the bound is stated against.
+                    let mut r = 0.0f32;
+                    for t in 0..k {
+                        r += a[i * k + t] * wfq[j * k + t];
+                    }
+                    let maxw = max_abs(&wfq[j * k..(j + 1) * k]);
+                    let bound = tolerance_bound(k, maxa, maxw);
+                    let diff = (out[i * n + j] as f64 - r as f64).abs();
+                    assert!(
+                        diff <= bound,
+                        "shape {ti} ({m},{k},{n}) {rep:?} [{i}][{j}]: \
+                         |{} - {r}| = {diff} > {bound}",
+                        out[i * n + j]
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Model-level agreement on the zoo: int-path `EvalResult`s vs the
+/// forced-f32 reference at uniform wbits ∈ {2, 4, 8}.  The loss bound is
+/// the discriminative one (garbage logits shift cross-entropy far more
+/// than the re-quantization error budget); the repeat-eval assertion pins
+/// the int path's byte-determinism.  Two models keep the runtime sane
+/// while covering plain conv+fc (cif10) and squeeze blocks (sqnet).
+#[test]
+fn zoo_eval_agreement_across_int_and_f32_paths() {
+    let dir = std::env::temp_dir().join(format!("autoq_intk_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let data = SynthDataset::new(42);
+    let mut rt =
+        Runtime::open_with_opts(&dir, BackendKind::Reference, Some(Parallelism::new(2))).unwrap();
+    for model in ["cif10", "sqnet"] {
+        let meta = rt.manifest.model(model).unwrap().clone();
+        let params = ParamStore::init(&meta.params, &mut Rng::new(42));
+        let runner = ModelRunner::new(meta.clone(), params).unwrap();
+        let abits = vec![4u8; meta.a_channels];
+        for wb in [2u8, 4, 8] {
+            let wbits = vec![wb; meta.w_channels];
+            let mut eval = |rt: &mut Runtime| {
+                runner
+                    .eval_config(rt, Mode::Quant, &wbits, &abits, &data, Split::Val, 2)
+                    .unwrap()
+            };
+            let prev = set_int_kernels_enabled(false);
+            let reference = eval(&mut rt);
+            set_int_kernels_enabled(true);
+            let int1 = eval(&mut rt);
+            let int2 = eval(&mut rt);
+            set_int_kernels_enabled(prev);
+            assert_eq!(
+                int1.accuracy.to_bits(),
+                int2.accuracy.to_bits(),
+                "{model} wb={wb}: int path must be deterministic"
+            );
+            assert_eq!(int1.loss.to_bits(), int2.loss.to_bits(), "{model} wb={wb}");
+            assert_eq!(int1.images, reference.images, "{model} wb={wb}");
+            assert!(
+                (int1.accuracy - reference.accuracy).abs() <= 0.1,
+                "{model} wb={wb}: accuracy {} vs f32 {}",
+                int1.accuracy,
+                reference.accuracy
+            );
+            assert!(
+                (int1.loss - reference.loss).abs() <= 0.1 * (1.0 + reference.loss.abs()),
+                "{model} wb={wb}: loss {} vs f32 {}",
+                int1.loss,
+                reference.loss
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
