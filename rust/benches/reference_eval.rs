@@ -7,11 +7,17 @@
 //!                  serial/parallel byte-identity (the CI regression guard)
 //!   --json PATH    write machine-readable results (the committed baseline
 //!                  lives at BENCH_reference_eval.json in the repo root)
+//!   --simd on|off  pin the SIMD integer-dot dispatch for the whole run
+//!                  (default: the build's feature default); the dedicated
+//!                  SIMD comparison section still measures both settings
 //!
 //! Full (non-smoke) runs enforce the scaling target from the ROADMAP: the
 //! 4-thread eval sweep must reach ≥ 2× the serial throughput, or the
 //! bench exits non-zero.  The check is skipped (with a warning) on hosts
-//! with fewer than 4 cores, where the target is unmeasurable.
+//! with fewer than 4 cores, where the target is unmeasurable.  They also
+//! enforce the integer-kernel floors: int8/int4 qgemm vs blocked f32, the
+//! int depthwise conv vs its f32 kernel, and — on AVX2 hosts with the
+//! `simd` feature — the SIMD int8 inner loop vs the scalar one (≥ 1.5×).
 //!
 //! Regenerate the baseline with:
 //!   cargo bench --bench reference_eval -- --json ../BENCH_reference_eval.json
@@ -46,6 +52,14 @@ const INT8_MIN_SPEEDUP: f64 = 1.2;
 const INT4_MIN_SPEEDUP: f64 = 1.0;
 const INT_SMOKE_MIN_SPEEDUP: f64 = 0.25;
 
+/// SIMD-vs-scalar floor for the int8 qgemm inner loop (full runs on hosts
+/// where the AVX2 path can actually engage; smoke runs only report).
+const SIMD_INT8_MIN_SPEEDUP: f64 = 1.5;
+
+/// Int-vs-f32 depthwise conv floors (same grading split as the qgemm
+/// targets: real floor on full runs, catastrophe guard on smoke).
+const DWCONV_MIN_SPEEDUP: f64 = 1.0;
+
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let smoke = args.iter().any(|a| a == "--smoke");
@@ -54,8 +68,32 @@ fn main() -> anyhow::Result<()> {
         .position(|a| a == "--json")
         .and_then(|i| args.get(i + 1))
         .map(PathBuf::from);
+    let simd_arg: Option<&str> = args
+        .iter()
+        .position(|a| a == "--simd")
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str);
+    match simd_arg {
+        None => {}
+        Some("on") => {
+            kernels::set_simd_int_enabled(true);
+        }
+        Some("off") => {
+            kernels::set_simd_int_enabled(false);
+        }
+        Some(other) => anyhow::bail!("--simd must be on|off, got {other:?}"),
+    }
+    // Whether the AVX2 integer dots can actually engage on this build/host
+    // (the enable switch alone is not enough — see kernels::simd docs).
+    #[cfg(target_arch = "x86_64")]
+    let simd_capable = cfg!(feature = "simd") && std::arch::is_x86_feature_detected!("avx2");
+    #[cfg(not(target_arch = "x86_64"))]
+    let simd_capable = false;
     let (n_batches, iters, warmup) = if smoke { (2, 1, 0) } else { (4, 5, 1) };
-    println!("== reference_eval bench (threads sweep + kernel comparison) ==");
+    println!(
+        "== reference_eval bench (threads sweep + kernel comparison; simd int dispatch {}) ==",
+        if kernels::simd_int_enabled() { "on" } else { "off" }
+    );
 
     // Shared short-pretrained params in a scratch artifact dir so every
     // runtime below evaluates the same model.
@@ -186,6 +224,73 @@ fn main() -> anyhow::Result<()> {
          (thresholds {min8}x / {min4}x)"
     );
 
+    // SIMD-vs-scalar comparison on the int8 GEMM proper (activations
+    // pre-quantized outside the timer, isolating the inner dot loops).
+    // Results are bit-identical both ways — that contract is pinned by
+    // tests; here only the speedup is graded.
+    kernels::quantize_rows_i8(&a, m, k, &mut qa, &mut sa);
+    let prev_simd = kernels::set_simd_int_enabled(false);
+    let r8_scalar = bench(&format!("qgemm int8 simd=off ({m}x{k}x{n})"), warmup, kiters, || {
+        kernels::qgemm_into(&mut oint, &qa, &sa, &qw8, &sw8, m, k, n, false);
+    });
+    kernels::set_simd_int_enabled(true);
+    let r8_simd = bench(&format!("qgemm int8 simd=on  ({m}x{k}x{n})"), warmup, kiters, || {
+        kernels::qgemm_into(&mut oint, &qa, &sa, &qw8, &sw8, m, k, n, false);
+    });
+    kernels::set_simd_int_enabled(prev_simd);
+    let simd_speedup = r8_scalar.min_s / r8_simd.min_s;
+    println!(
+        "    -> simd int8 {simd_speedup:.2}x vs scalar ({})",
+        if simd_capable { "AVX2 active" } else { "AVX2 unavailable — dispatch is scalar both ways" }
+    );
+    if !simd_capable {
+        println!(
+            "note: SIMD int path cannot engage here (needs the `simd` feature and an \
+             AVX2 x86_64 host) — skipping the >= {SIMD_INT8_MIN_SPEEDUP}x check"
+        );
+    } else if !smoke {
+        anyhow::ensure!(
+            simd_speedup >= SIMD_INT8_MIN_SPEEDUP,
+            "SIMD integer-dot regression: {simd_speedup:.2}x vs scalar \
+             (threshold {SIMD_INT8_MIN_SPEEDUP}x)"
+        );
+    }
+
+    // Depthwise conv: int per-channel kernel vs the f32 kernel, same
+    // shape (the layer class the int path previously excluded).
+    use autoq::runtime::reference::nn::{self, Dims};
+    let dd = if smoke {
+        Dims { n: 1, h: 16, w: 16, c: 32 }
+    } else {
+        Dims { n: 2, h: 32, w: 32, c: 64 }
+    };
+    let (dk, ds) = (3usize, 1usize);
+    let mut dw = vec![0.0f32; dk * dk * dd.c];
+    let mut dx = vec![0.0f32; dd.elems()];
+    rng.fill_normal_f32(&mut dw, 1.0);
+    rng.fill_normal_f32(&mut dx, 1.0);
+    // (k,k,1,cin) row-major is a (rest = k², cout = cin) weight — the
+    // shared WQ quantizer covers it unchanged.
+    let dbits = vec![8.0f32; dd.c];
+    let (qdw, sdw) = kernels::quantize_weights_alloc(&dw, dk * dk, dd.c, &dbits, kernels::WRep::I8);
+    let mut dout = vec![0.0f32; dd.elems()];
+    let mut dqx = vec![0i8; dd.elems()];
+    let mut dsx = vec![0.0f32; nn::dwconv_qrows(dd)];
+    let label = format!("{}x{}x{}x{} k{dk}", dd.n, dd.h, dd.w, dd.c);
+    let rdf = bench(&format!("dwconv f32     ({label})"), warmup, kiters, || {
+        nn::dwconv2d_into(&dx, dd, &dw, dk, ds, &mut dout);
+    });
+    let rdi = bench(&format!("dwconv int8    ({label})"), warmup, kiters, || {
+        nn::qdwconv2d_into(&dx, dd, &qdw, &sdw, false, dk, ds, &mut dout, &mut dqx, &mut dsx, None);
+    });
+    let sdw_speedup = rdf.min_s / rdi.min_s;
+    println!("    -> int8 dwconv {sdw_speedup:.2}x vs f32");
+    let dw_min = if smoke { INT_SMOKE_MIN_SPEEDUP } else { DWCONV_MIN_SPEEDUP };
+    anyhow::ensure!(
+        sdw_speedup >= dw_min,
+        "int-dwconv regression: {sdw_speedup:.2}x vs f32 (threshold {dw_min}x)"
+    );
+
     if let Some(path) = json_path {
         let doc = Json::obj(vec![
             ("bench", Json::Str("reference_eval".to_string())),
@@ -216,6 +321,37 @@ fn main() -> anyhow::Result<()> {
                     ("i4_speedup", Json::from(s4)),
                     ("i8_threshold", Json::from(min8)),
                     ("i4_threshold", Json::from(min4)),
+                ]),
+            ),
+            (
+                "simd",
+                Json::obj(vec![
+                    ("capable", Json::Bool(simd_capable)),
+                    (
+                        "forced",
+                        match simd_arg {
+                            Some(s) => Json::Str(s.to_string()),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("i8_scalar_min_s", Json::from(r8_scalar.min_s)),
+                    ("i8_simd_min_s", Json::from(r8_simd.min_s)),
+                    ("i8_speedup", Json::from(simd_speedup)),
+                    ("i8_threshold", Json::from(SIMD_INT8_MIN_SPEEDUP)),
+                ]),
+            ),
+            (
+                "dwconv",
+                Json::obj(vec![
+                    ("n", Json::from(dd.n)),
+                    ("h", Json::from(dd.h)),
+                    ("w", Json::from(dd.w)),
+                    ("c", Json::from(dd.c)),
+                    ("k", Json::from(dk)),
+                    ("f32_min_s", Json::from(rdf.min_s)),
+                    ("i8_min_s", Json::from(rdi.min_s)),
+                    ("i8_speedup", Json::from(sdw_speedup)),
+                    ("i8_threshold", Json::from(dw_min)),
                 ]),
             ),
         ]);

@@ -47,6 +47,68 @@ pub const DATA_SEED: u64 = 42;
 /// their own step count).
 const AUTO_PRETRAIN_STEPS: usize = 300;
 
+/// Calibration batches (train split) for static activation scales — the
+/// scales never peek at validation data.
+const CALIB_BATCHES: usize = 2;
+
+/// How integer-path evals obtain activation scales (`--act-scales`,
+/// `$AUTOQ_ACT_SCALES`): dynamic per-row max scales (the default, exact),
+/// or static per-layer scales calibrated once per model at load time
+/// (removes the per-row max pass from the eval hot loop).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActScaleMode {
+    Dynamic,
+    Static,
+}
+
+impl ActScaleMode {
+    /// Resolve from `$AUTOQ_ACT_SCALES` (unset or "dynamic" = Dynamic).
+    pub fn from_env() -> ActScaleMode {
+        match std::env::var("AUTOQ_ACT_SCALES").ok().as_deref() {
+            Some(s) if s.eq_ignore_ascii_case("static") => ActScaleMode::Static,
+            Some(s) if !s.trim().is_empty() && !s.eq_ignore_ascii_case("dynamic") => {
+                crate::warn_!("ignoring unknown AUTOQ_ACT_SCALES={s:?} (want static|dynamic)");
+                ActScaleMode::Dynamic
+            }
+            _ => ActScaleMode::Dynamic,
+        }
+    }
+
+    /// Parse a `--act-scales` CLI value.
+    pub fn parse(s: &str) -> anyhow::Result<ActScaleMode> {
+        match s {
+            "static" => Ok(ActScaleMode::Static),
+            "dynamic" => Ok(ActScaleMode::Dynamic),
+            other => anyhow::bail!("unknown --act-scales {other:?} (want static|dynamic)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ActScaleMode::Dynamic => "dynamic",
+            ActScaleMode::Static => "static",
+        }
+    }
+}
+
+/// Fingerprint of a calibration table (model name + exact f32 bit
+/// patterns of the per-layer maxes), keyed into the eval cache so static-
+/// and dynamic-scale evals never alias.  Never returns 0 — 0 is the
+/// reserved "dynamic scales" fingerprint.
+pub fn act_table_fingerprint(model: &str, maxes: &[f32]) -> u64 {
+    let mut h = crate::serve::cache::KeyHasher::new();
+    h.str(model).u64(maxes.len() as u64);
+    for &m in maxes {
+        h.u64(m.to_bits() as u64);
+    }
+    let fp = h.finish();
+    if fp == 0 {
+        1
+    } else {
+        fp
+    }
+}
+
 /// The crate's front door: owns the runtime, the model-runner cache and the
 /// artifact layout, and executes [`JobSpec`]s into [`JobReport`]s.
 pub struct Coordinator {
@@ -57,6 +119,10 @@ pub struct Coordinator {
     /// coordinator creates (`autoq serve` attaches one per scheduler
     /// worker; `None` = uncached, the historical behavior).
     eval_cache: Option<Arc<CacheHandle>>,
+    /// Activation-scale mode for integer-path evals.  Static mode
+    /// calibrates per-layer scales in [`Coordinator::ensure_pretrained`];
+    /// set it before the first model loads.
+    act_scales: ActScaleMode,
 }
 
 impl Coordinator {
@@ -100,7 +166,24 @@ impl Coordinator {
         // The reference backend needs no artifacts, but trained params still
         // persist under the artifact dir — make sure it exists.
         std::fs::create_dir_all(dir)?;
-        Ok(Coordinator { rt, dir: dir.to_path_buf(), runners: HashMap::new(), eval_cache: None })
+        Ok(Coordinator {
+            rt,
+            dir: dir.to_path_buf(),
+            runners: HashMap::new(),
+            eval_cache: None,
+            act_scales: ActScaleMode::from_env(),
+        })
+    }
+
+    /// Choose the activation-scale mode (mirrors `--act-scales`).  Call
+    /// before the first `ensure_pretrained` — calibration happens at model
+    /// load and already-cached runners are not recalibrated.
+    pub fn set_act_scale_mode(&mut self, mode: ActScaleMode) {
+        self.act_scales = mode;
+    }
+
+    pub fn act_scale_mode(&self) -> ActScaleMode {
+        self.act_scales
     }
 
     /// Attach a content-addressed eval cache: every cached and future
@@ -158,6 +241,72 @@ impl Coordinator {
         Self::params_path_in(&self.dir, model)
     }
 
+    /// Where a model's calibrated activation-scale table persists.
+    pub fn act_scales_path(&self, model: &str) -> PathBuf {
+        self.dir.join(format!("{model}_act_scales.json"))
+    }
+
+    /// Calibrate and install static activation scales for `model` (no-op
+    /// in dynamic mode).  Only the reference backend reads the in-process
+    /// scale registry, so other backends warn and stay dynamic.  The table
+    /// is a pure function of (graph, trained params, calibration batches),
+    /// so repeated loads reproduce byte-identical scales and fingerprints.
+    fn install_static_scales(
+        &mut self,
+        model: &str,
+        runner: &mut ModelRunner,
+    ) -> anyhow::Result<()> {
+        if self.act_scales != ActScaleMode::Static {
+            return Ok(());
+        }
+        if self.backend() != BackendKind::Reference {
+            crate::warn_!(
+                "--act-scales static only calibrates on the reference backend; \
+                 {} evals keep dynamic scales",
+                self.backend().as_str()
+            );
+            return Ok(());
+        }
+        use crate::runtime::reference::{model_exec, zoo};
+        let g = zoo::model_graph(model)?;
+        let data = SynthDataset::new(DATA_SEED);
+        let hw = runner.meta.image_hw;
+        let eb = runner.meta.eval_batch;
+        let batches: Vec<crate::runtime::Tensor> = (0..CALIB_BATCHES)
+            .map(|bi| {
+                let b = data.batch(Split::Train, (bi * eb) as u64, eb);
+                crate::runtime::Tensor::new(vec![b.n, hw, hw, 3], b.images)
+            })
+            .collect();
+        let params: Vec<&crate::runtime::Tensor> = runner.params.tensors.iter().collect();
+        let brefs: Vec<&crate::runtime::Tensor> = batches.iter().collect();
+        let maxes = model_exec::calibrate_act_maxes(&g, false, &params, &brefs)?;
+        let fp = act_table_fingerprint(model, &maxes);
+        self.save_act_scales(model, &maxes, fp)?;
+        model_exec::set_act_scales(
+            model,
+            Some(Arc::new(model_exec::ActScales { maxes, fingerprint: fp })),
+        );
+        runner.set_calib_fingerprint(fp);
+        crate::info!("calibrated static activation scales for {model} (fingerprint {fp:016x})");
+        Ok(())
+    }
+
+    /// Persist a calibration table next to the trained params: exact f32
+    /// bit patterns (not decimal floats), so a reload reproduces the table
+    /// and its fingerprint byte-for-byte.
+    fn save_act_scales(&self, model: &str, maxes: &[f32], fp: u64) -> anyhow::Result<()> {
+        use crate::util::json::Json;
+        let bits: Vec<Json> = maxes.iter().map(|&m| Json::Num(m.to_bits() as f64)).collect();
+        let v = Json::obj(vec![
+            ("model", Json::from(model)),
+            ("fingerprint", Json::from(format!("{fp:016x}"))),
+            ("maxes_bits", Json::Arr(bits)),
+        ]);
+        std::fs::write(self.act_scales_path(model), format!("{v}\n"))?;
+        Ok(())
+    }
+
     /// Load `model` into the runner cache, pre-training and persisting the
     /// params on first use (the logic formerly duplicated across
     /// `cmd_pretrain`, `load_runner` and `repro::runner_for`).
@@ -180,6 +329,7 @@ impl Coordinator {
             r
         };
         self.attach_cache(&mut runner);
+        self.install_static_scales(model, &mut runner)?;
         self.runners.insert(model.to_string(), runner);
         Ok(())
     }
@@ -190,6 +340,7 @@ impl Coordinator {
         self.ensure_pretrained(model)?;
         let cached = self.runners.get(model).expect("ensured above");
         let mut runner = ModelRunner::new(cached.meta.clone(), cached.params.clone())?;
+        runner.set_calib_fingerprint(cached.calib_fingerprint());
         self.attach_cache(&mut runner);
         Ok(runner)
     }

@@ -18,7 +18,7 @@
 
 use std::path::PathBuf;
 
-use autoq::coordinator::{Coordinator, JobOutcome, JobSpec, Sweep};
+use autoq::coordinator::{ActScaleMode, Coordinator, JobOutcome, JobSpec, Sweep};
 use autoq::cost::Mode;
 use autoq::runtime::{shard, BackendKind, Parallelism, RuntimeOpts};
 use autoq::search::{Granularity, Protocol, ProtocolKind};
@@ -44,6 +44,22 @@ const SHARD_HOSTS_HELP: &str = "comma-separated host:port list of remote `autoq 
 /// Shared `--shard-encoding` option help (empty/auto = env, else binary).
 const SHARD_ENCODING_HELP: &str =
     "shard wire encoding json|binary (default: $AUTOQ_SHARD_ENCODING, else binary)";
+
+/// Shared `--act-scales` option help (empty = env, else dynamic).
+const ACT_SCALES_HELP: &str = "activation quantization scales static|dynamic — static runs a \
+     deterministic calibration pass and reuses one scale per layer (default: $AUTOQ_ACT_SCALES, \
+     else dynamic per-row scales)";
+
+/// Apply the shared `--act-scales` option to an opened coordinator (empty
+/// string = keep the env-resolved mode).  Must run before the first model
+/// load so calibration happens during `ensure_pretrained`.
+fn apply_act_scales(a: &Args, coord: &mut Coordinator) -> anyhow::Result<()> {
+    let s = a.get("act-scales");
+    if !s.is_empty() {
+        coord.set_act_scale_mode(ActScaleMode::parse(&s)?);
+    }
+    Ok(())
+}
 
 /// Parse the shared `--backend` option (empty string = auto-resolve).
 fn backend_arg(a: &Args) -> anyhow::Result<Option<BackendKind>> {
@@ -243,6 +259,7 @@ fn cmd_search(rest: &[String]) -> anyhow::Result<()> {
         .opt("shard-workers", "", SHARD_WORKERS_HELP)
         .opt("shard-hosts", "", SHARD_HOSTS_HELP)
         .opt("shard-encoding", "", SHARD_ENCODING_HELP)
+        .opt("act-scales", "", ACT_SCALES_HELP)
         .flag("paper-scale", "use the paper's 400-episode schedule")
         .flag("no-relabel", "disable HIRO goal relabeling (ablation)")
         .parse(rest)?;
@@ -264,6 +281,7 @@ fn cmd_search(rest: &[String]) -> anyhow::Result<()> {
         builder = builder.out(PathBuf::from(&out));
     }
     let mut coord = open_coord(&a)?;
+    apply_act_scales(&a, &mut coord)?;
     let report = coord.run(&builder.build()?)?;
     let JobOutcome::Search { best, history } = &report.outcome else {
         anyhow::bail!("search job returned an unexpected report kind");
@@ -429,6 +447,7 @@ fn cmd_eval(rest: &[String]) -> anyhow::Result<()> {
         .opt("shard-workers", "", SHARD_WORKERS_HELP)
         .opt("shard-hosts", "", SHARD_HOSTS_HELP)
         .opt("shard-encoding", "", SHARD_ENCODING_HELP)
+        .opt("act-scales", "", ACT_SCALES_HELP)
         .parse(rest)?;
     let model = a.get("model");
     let mut builder = JobSpec::eval(&model).batches(a.get_usize("batches")?);
@@ -437,6 +456,7 @@ fn cmd_eval(rest: &[String]) -> anyhow::Result<()> {
         builder = builder.config(PathBuf::from(&cfgf));
     }
     let mut coord = open_coord(&a)?;
+    apply_act_scales(&a, &mut coord)?;
     let report = coord.run(&builder.build()?)?;
     let JobOutcome::Eval(res) = &report.outcome else {
         anyhow::bail!("eval job returned an unexpected report kind");
@@ -639,6 +659,16 @@ fn cmd_status(rest: &[String]) -> anyhow::Result<()> {
             cache.get("hits").and_then(Json::as_f64).unwrap_or(0.0) as u64,
             cache.get("misses").and_then(Json::as_f64).unwrap_or(0.0) as u64,
         );
+        // Per-client accounting: one line per connection that has finished
+        // at least one job (hit/miss deltas of its jobs, summed).
+        for row in reply.get("clients").and_then(Json::as_arr).unwrap_or(&[]) {
+            println!(
+                "  client {}: {} hit(s) / {} miss(es)",
+                row.get("client").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+                row.get("hits").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+                row.get("misses").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            );
+        }
     } else {
         print_job_row(&client.status(Some(&job))?)?;
     }

@@ -37,6 +37,11 @@ pub struct ModelRunner {
     /// Cached `cache::param_fingerprint` of `params`, invalidated together
     /// with `param_cache` so cache keys always reflect the live weights.
     param_fp: RefCell<Option<u64>>,
+    /// Fingerprint of the installed static activation-scale calibration
+    /// table (0 = dynamic per-row scales).  Part of the eval cache key:
+    /// static and dynamic evals of the same config may differ within
+    /// tolerance, so they must never alias.
+    calib_fp: u64,
 }
 
 /// Bit config in evaluation form (f32 vectors, network channel order).
@@ -62,6 +67,7 @@ impl ModelRunner {
             param_cache: RefCell::new(None),
             eval_cache: None,
             param_fp: RefCell::new(None),
+            calib_fp: 0,
         })
     }
 
@@ -75,6 +81,7 @@ impl ModelRunner {
             param_cache: RefCell::new(None),
             eval_cache: None,
             param_fp: RefCell::new(None),
+            calib_fp: 0,
         }
     }
 
@@ -86,6 +93,17 @@ impl ModelRunner {
 
     pub fn eval_cache(&self) -> Option<&Arc<CacheHandle>> {
         self.eval_cache.as_ref()
+    }
+
+    /// Record the calibration-table fingerprint this runner evaluates
+    /// under (0 = dynamic activation scales).  Must change whenever the
+    /// installed static scale table does.
+    pub fn set_calib_fingerprint(&mut self, fp: u64) {
+        self.calib_fp = fp;
+    }
+
+    pub fn calib_fingerprint(&self) -> u64 {
+        self.calib_fp
     }
 
     /// Fingerprint of the current parameter tensors, cached until the next
@@ -164,6 +182,7 @@ impl ModelRunner {
                 n_batches,
                 eb,
                 self.param_fingerprint(),
+                self.calib_fp,
             );
             (handle.clone(), key)
         });

@@ -30,8 +30,10 @@
 //! tolerance* rather than bit-equality, but its integer accumulation is
 //! exact and therefore even more strongly deterministic than the f32
 //! paths.  `simd` holds the runtime-dispatched AVX lane loop the blocked
-//! f32 kernels share; it is bit-identical to the scalar loop by
-//! construction.  See DESIGN.md §Integer kernels.
+//! f32 kernels share *and* the AVX2 `maddubs` widening integer dot
+//! products the qgemm inner loops route through; both are bit-identical
+//! to their scalar loops by construction (exact integer accumulation on
+//! the int side).  See DESIGN.md §Integer kernels.
 
 pub mod im2col;
 pub mod matmul;
@@ -45,5 +47,6 @@ pub use matmul::{
 };
 pub use qgemm::{int_kernels_enabled, set_int_kernels_enabled, wrep, wrep_with, WRep};
 pub use qgemm::{pack_i4, packed4_row_len, qgemm_i4, qgemm_i8, qgemm_into, qweight_len};
-pub use qgemm::{quantize_rows_i8, quantize_w_i8, quantize_weights_alloc};
-pub use simd::axpy;
+pub use qgemm::{quantize_rows_i8, quantize_rows_i8_static, quantize_w_i8, quantize_weights_alloc};
+pub use qgemm::I8_LEVELS;
+pub use simd::{axpy, set_simd_int_enabled, simd_int_enabled};

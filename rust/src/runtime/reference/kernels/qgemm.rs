@@ -20,7 +20,12 @@
 //!   are re-quantized **dynamically per row** — per sample / output pixel —
 //!   onto a symmetric 127-level i8 grid: `sa[i] = max|row| / 127`.  This is
 //!   the int path's only approximation and is what the tolerance contract
-//!   below bounds.
+//!   below bounds.  Under calibrated **static** activation scales
+//!   ([`quantize_rows_i8_static`], `--act-scales static`) the per-row
+//!   max pass is replaced by one precomputed per-layer scale; rows whose
+//!   max exceeds the calibrated one saturate at ±127, trading the strict
+//!   per-element bound for a model-level agreement bound
+//!   (`tests/act_scales.rs`).
 //!
 //! # Kernel shape
 //!
@@ -137,6 +142,32 @@ pub fn wrep_with(enabled: bool, wbits: &[f32], binar: bool) -> WRep {
     }
 }
 
+/// Static-scale variant of [`quantize_rows_i8`]: every row shares one
+/// precomputed calibration `scale` (`> 0`), so the max-abs pass over the
+/// activation matrix disappears from the hot loop — codes come from a
+/// single sweep.  Values beyond `127·scale` saturate at ±127; the
+/// calibration pass picks `scale` from the per-layer max over the
+/// calibration batches, so saturation only hits data outside the
+/// calibrated range (the EvalResult agreement bound in
+/// `tests/act_scales.rs` covers this).
+pub fn quantize_rows_i8_static(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    scale: f32,
+    qa: &mut [i8],
+    sa: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert!(qa.len() >= m * k);
+    debug_assert!(sa.len() >= m);
+    debug_assert!(scale > 0.0, "static activation scale must be positive");
+    sa[..m].fill(scale);
+    for (q, &x) in qa[..m * k].iter_mut().zip(a) {
+        *q = round_te(x / scale).clamp(-I8_LEVELS, I8_LEVELS) as i8;
+    }
+}
+
 /// Dynamic per-row symmetric i8 quantization of a row-major `(m, k)`
 /// matrix: `qa[i*k + t] = round_te(a[i*k + t] / sa[i])` clamped to ±127,
 /// `sa[i] = max|row i| / 127` (1.0 for an all-zero row, whose codes are
@@ -233,11 +264,16 @@ pub fn unpack4_hi(b: i8) -> i32 {
     (b >> 4) as i32
 }
 
-/// Exact i32 dot product of two i8 slices.  The fixed-width 16-lane inner
-/// chunks give LLVM a clean widen-multiply-accumulate shape to vectorize.
+/// Exact i32 dot product of two i8 slices: the explicit AVX2 `maddubs`
+/// path when available (`simd.rs` — bit-identical by exactness), else a
+/// scalar loop whose fixed-width 16-lane inner chunks give LLVM a clean
+/// widen-multiply-accumulate shape to vectorize.
 #[inline]
 fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
     debug_assert_eq!(a.len(), b.len());
+    if let Some(acc) = super::simd::try_dot_i8(a, b) {
+        return acc;
+    }
     let mut acc = 0i32;
     let mut ca = a.chunks_exact(16);
     let mut cb = b.chunks_exact(16);
@@ -255,11 +291,14 @@ fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
 }
 
 /// Exact i32 dot product of an i8 slice against a nibble-packed row of
-/// `k` codes, unpacking on the fly.
+/// `k` codes, unpacking on the fly (in-register on the AVX2 path).
 #[inline]
 fn dot_i8_i4(a: &[i8], wp: &[i8], k: usize) -> i32 {
     debug_assert_eq!(a.len(), k);
     debug_assert!(wp.len() >= packed4_row_len(k));
+    if let Some(acc) = super::simd::try_dot_i8_i4(a, wp, k) {
+        return acc;
+    }
     let mut acc = 0i32;
     for (&byte, pair) in wp.iter().zip(a.chunks_exact(2)) {
         acc += i32::from(pair[0]) * unpack4_lo(byte) + i32::from(pair[1]) * unpack4_hi(byte);

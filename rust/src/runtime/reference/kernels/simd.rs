@@ -1,25 +1,80 @@
-//! Explicit SIMD lane loops for the blocked f32 kernels.
+//! Explicit SIMD lane loops for the blocked f32 kernels and the integer
+//! GEMM inner products.
 //!
-//! One helper, [`axpy`]: `c[j] += a * b[j]` over equal-length slices — the
-//! exact shape of the inner j-loop the GEBP panels in `matmul.rs` are laid
-//! out for.  The vectorized dimension indexes *independent* output
-//! elements, and each element still sees exactly one IEEE multiply followed
-//! by one IEEE add (`_mm256_mul_ps` + `_mm256_add_ps`, never an FMA), so
-//! the result is bit-identical to the scalar loop — the naive kernels stay
-//! the oracle and the existing `to_bits()` equality tests cover this path
-//! for free.
+//! # f32: [`axpy`]
 //!
-//! The AVX path is compiled behind the `simd` cargo feature (default-on)
-//! and selected once per process by runtime CPU detection; everything else
-//! (feature off, non-x86, AVX-less hosts) takes the scalar loop.  The
-//! reduction-form kernel `matmul_a_bt_into` is *not* routed through here:
-//! its inner loop is the accumulation itself, and vectorizing it would
-//! reassociate the sum and break the determinism contract.
+//! `c[j] += a * b[j]` over equal-length slices — the exact shape of the
+//! inner j-loop the GEBP panels in `matmul.rs` are laid out for.  The
+//! vectorized dimension indexes *independent* output elements, and each
+//! element still sees exactly one IEEE multiply followed by one IEEE add
+//! (`_mm256_mul_ps` + `_mm256_add_ps`, never an FMA), so the result is
+//! bit-identical to the scalar loop — the naive kernels stay the oracle
+//! and the existing `to_bits()` equality tests cover this path for free.
+//! The reduction-form kernel `matmul_a_bt_into` is *not* routed through
+//! here: its inner loop is the f32 accumulation itself, and vectorizing it
+//! would reassociate the sum and break the determinism contract.
+//!
+//! # int8/int4: [`try_dot_i8`] / [`try_dot_i8_i4`]
+//!
+//! The qgemm inner loops are *integer* reductions with exact i32
+//! accumulation, so — unlike the f32 reductions — any lane order computes
+//! the same sum and vectorizing them is legal under the determinism
+//! contract.  The AVX2 path widens with the classic sign-transfer
+//! `maddubs` scheme: for 32 code pairs per iteration,
+//!
+//! ```text
+//! abs_a = |a|                         (codes are clamped to ±127, so no
+//!                                      −128 edge case)
+//! sb    = sign(b, a)                  (b negated where a < 0, zeroed
+//!                                      where a == 0 — the term is 0)
+//! p16   = maddubs(abs_a, sb)          (u8×i8 pairs → i16, saturating)
+//! p32   = madd(p16, 1)                (i16 pairs → exact i32)
+//! ```
+//!
+//! Saturation in `maddubs` can never fire: |a|·|b| ≤ 127·127 = 16129 per
+//! product, ≤ 32258 per pair sum — inside i16.  Every step is therefore
+//! exact integer arithmetic and the result is **bit-identical to the
+//! scalar loop by construction** (pinned by the unit tests below and by
+//! `tests/int_kernels.rs` at the model level).  The int4 variant unpacks
+//! 16 packed weight bytes into 32 sign-extended nibble codes in-register
+//! (`(x ^ 8) − 8` bytewise) and feeds the same multiply-accumulate.
+//!
+//! The AVX paths are compiled behind the `simd` cargo feature (default-on)
+//! and selected once per process by runtime CPU detection (AVX for `axpy`,
+//! AVX2 for the int dots); everything else (feature off, non-x86, hosts
+//! without the instruction set) takes the scalar loops in the callers.  A
+//! process-wide switch ([`set_simd_int_enabled`]) additionally lets tests
+//! and benches force the scalar int path to pin byte-equality and measure
+//! the speedup.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static SIMD_INT: AtomicBool = AtomicBool::new(true);
+
+/// Whether the SIMD integer inner loops may be dispatched (they also need
+/// the `simd` feature and a runtime AVX2 host to actually run).
+pub fn simd_int_enabled() -> bool {
+    SIMD_INT.load(Ordering::Relaxed)
+}
+
+/// Flip SIMD integer-dot dispatch on/off (returns the previous value).
+/// Results are bit-identical either way; benches use this to measure the
+/// speedup and tests to pin the byte-equality.
+pub fn set_simd_int_enabled(on: bool) -> bool {
+    SIMD_INT.swap(on, Ordering::Relaxed)
+}
 
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
 mod x86 {
+    use super::super::qgemm::{unpack4_hi, unpack4_lo};
     use std::arch::x86_64::{
-        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_storeu_ps,
+        __m256i, _mm256_abs_epi8, _mm256_add_epi32, _mm256_add_ps, _mm256_and_si256,
+        _mm256_castsi256_si128, _mm256_cvtepu8_epi16, _mm256_extracti128_si256,
+        _mm256_loadu_ps, _mm256_loadu_si256, _mm256_madd_epi16, _mm256_maddubs_epi16,
+        _mm256_mul_ps, _mm256_or_si256, _mm256_set1_epi16, _mm256_set1_epi8, _mm256_set1_ps,
+        _mm256_setzero_si256, _mm256_sign_epi8, _mm256_slli_epi16, _mm256_storeu_ps,
+        _mm256_sub_epi8, _mm256_xor_si256, _mm_add_epi32, _mm_cvtsi128_si32, _mm_loadu_si128,
+        _mm_shuffle_epi32, _mm_unpackhi_epi64,
     };
     use std::sync::OnceLock;
 
@@ -27,6 +82,12 @@ mod x86 {
     pub fn available() -> bool {
         static AVX: OnceLock<bool> = OnceLock::new();
         *AVX.get_or_init(|| std::arch::is_x86_feature_detected!("avx"))
+    }
+
+    /// One-time AVX2 detection (the int dots need the 256-bit integer ops).
+    pub fn avx2_available() -> bool {
+        static AVX2: OnceLock<bool> = OnceLock::new();
+        *AVX2.get_or_init(|| std::arch::is_x86_feature_detected!("avx2"))
     }
 
     /// `c[j] += a * b[j]` in 8-wide AVX lanes, scalar tail.
@@ -51,6 +112,96 @@ mod x86 {
             c[j] += a * b[j];
         }
     }
+
+    /// Horizontal sum of the 8 i32 lanes (exact integer adds).
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_epi32(v: __m256i) -> i32 {
+        let s = _mm_add_epi32(_mm256_castsi256_si128(v), _mm256_extracti128_si256::<1>(v));
+        let s = _mm_add_epi32(s, _mm_unpackhi_epi64(s, s));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b01>(s));
+        _mm_cvtsi128_si32(s)
+    }
+
+    /// Exact i32 dot product of two i8 slices, 32 codes per iteration via
+    /// the sign-transfer `maddubs` scheme (module docs), scalar tail.
+    ///
+    /// # Safety
+    /// The caller must have verified AVX2 support (see [`avx2_available`])
+    /// and equal slice lengths; codes must lie in −127..=127 (the
+    /// quantizers clamp there), which rules out both the `abs(−128)` edge
+    /// and i16 saturation in `maddubs`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+        let n = a.len();
+        let mut acc = _mm256_setzero_si256();
+        let ones = _mm256_set1_epi16(1);
+        let n32 = n & !31;
+        let mut i = 0usize;
+        while i < n32 {
+            let va = _mm256_loadu_si256(a.as_ptr().add(i).cast());
+            let vb = _mm256_loadu_si256(b.as_ptr().add(i).cast());
+            let abs_a = _mm256_abs_epi8(va);
+            let sb = _mm256_sign_epi8(vb, va);
+            let p16 = _mm256_maddubs_epi16(abs_a, sb);
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(p16, ones));
+            i += 32;
+        }
+        let mut sum = hsum_epi32(acc);
+        for j in n32..n {
+            sum += i32::from(*a.get_unchecked(j)) * i32::from(*b.get_unchecked(j));
+        }
+        sum
+    }
+
+    /// Exact i32 dot product of an i8 slice against a nibble-packed weight
+    /// row of `k` codes: 16 packed bytes unpack to 32 sign-extended codes
+    /// in-register per iteration, then the same `maddubs` path as
+    /// [`dot_i8`]; scalar tail for the last `k mod 32` codes.
+    ///
+    /// # Safety
+    /// Same contract as [`dot_i8`]; `a` holds `k` codes and `wp` at least
+    /// `packed4_row_len(k)` bytes.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_i8_i4(a: &[i8], wp: &[i8], k: usize) -> i32 {
+        let mut acc = _mm256_setzero_si256();
+        let ones = _mm256_set1_epi16(1);
+        let lo_mask = _mm256_set1_epi16(0x000f);
+        let hi_mask = _mm256_set1_epi16(0x0f00);
+        let sign = _mm256_set1_epi8(0x08);
+        let k32 = k & !31;
+        let mut i = 0usize;
+        while i < k32 {
+            // 16 packed bytes = 32 nibble codes; widening each byte to a
+            // 16-bit lane lets one shift+mask pair place the low nibble in
+            // the even output byte and the high nibble in the odd one —
+            // exactly the packer's low-nibble-first code order.
+            let p = _mm_loadu_si128(wp.as_ptr().add(i / 2).cast());
+            let p16 = _mm256_cvtepu8_epi16(p);
+            let lo = _mm256_and_si256(p16, lo_mask);
+            let hi = _mm256_and_si256(_mm256_slli_epi16::<4>(p16), hi_mask);
+            // Sign-extend nibbles bytewise: (x ^ 8) − 8 maps 0..15 → −8..7.
+            let codes = _mm256_or_si256(lo, hi);
+            let w = _mm256_sub_epi8(_mm256_xor_si256(codes, sign), sign);
+            let va = _mm256_loadu_si256(a.as_ptr().add(i).cast());
+            let abs_a = _mm256_abs_epi8(va);
+            let sw = _mm256_sign_epi8(w, va);
+            let p16m = _mm256_maddubs_epi16(abs_a, sw);
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(p16m, ones));
+            i += 32;
+        }
+        let mut sum = hsum_epi32(acc);
+        let mut j = k32 / 2;
+        while 2 * j + 1 < k {
+            let byte = *wp.get_unchecked(j);
+            sum += i32::from(*a.get_unchecked(2 * j)) * unpack4_lo(byte)
+                + i32::from(*a.get_unchecked(2 * j + 1)) * unpack4_hi(byte);
+            j += 1;
+        }
+        if k % 2 == 1 {
+            sum += i32::from(*a.get_unchecked(k - 1)) * unpack4_lo(*wp.get_unchecked(k / 2));
+        }
+        sum
+    }
 }
 
 /// `c[j] += a * b[j]` for equal-length slices, dispatched once per process
@@ -70,8 +221,40 @@ pub fn axpy(c: &mut [f32], a: f32, b: &[f32]) {
     }
 }
 
+/// AVX2 i8·i8 dot product when the SIMD int path is on, available, and
+/// enabled; `None` sends the caller to its scalar loop.  The value, when
+/// present, is bit-identical to the scalar sum (exact i32, module docs).
+#[inline]
+pub fn try_dot_i8(a: &[i8], b: &[i8]) -> Option<i32> {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert!(a.iter().chain(b).all(|&v| v > i8::MIN), "codes must be clamped to ±127");
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_int_enabled() && x86::avx2_available() {
+        // SAFETY: AVX2 presence verified at runtime just above; code range
+        // checked by the debug assertion (guaranteed by the quantizers).
+        return Some(unsafe { x86::dot_i8(a, b) });
+    }
+    let _ = (a, b);
+    None
+}
+
+/// AVX2 i8 · nibble-packed-i4 dot product ([`try_dot_i8`] semantics).
+#[inline]
+pub fn try_dot_i8_i4(a: &[i8], wp: &[i8], k: usize) -> Option<i32> {
+    debug_assert_eq!(a.len(), k);
+    debug_assert!(a.iter().all(|&v| v > i8::MIN), "codes must be clamped to ±127");
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_int_enabled() && x86::avx2_available() {
+        // SAFETY: AVX2 presence verified at runtime just above.
+        return Some(unsafe { x86::dot_i8_i4(a, wp, k) });
+    }
+    let _ = (a, wp, k);
+    None
+}
+
 #[cfg(test)]
 mod tests {
+    use super::super::qgemm::{pack_i4, packed4_row_len, unpack4_hi, unpack4_lo};
     use super::*;
     use crate::util::rng::Rng;
 
@@ -91,6 +274,70 @@ mod tests {
                 let expect = c0[j] + a * b[j];
                 assert_eq!(c1[j].to_bits(), expect.to_bits(), "len={len} j={j}");
             }
+        }
+    }
+
+    fn codes(r: &mut Rng, len: usize, lim: i32) -> Vec<i8> {
+        (0..len).map(|_| ((r.next_u64() % (2 * lim as u64 + 1)) as i32 - lim) as i8).collect()
+    }
+
+    #[test]
+    fn simd_dot_i8_matches_scalar_exactly() {
+        let mut r = Rng::new(29);
+        // Lengths straddling the 32-lane width, including extremes that
+        // would expose maddubs saturation if the exactness proof were off.
+        for len in [0usize, 1, 15, 16, 31, 32, 33, 63, 64, 65, 100, 256, 1000] {
+            let a = codes(&mut r, len, 127);
+            let b = codes(&mut r, len, 127);
+            let scalar: i32 =
+                a.iter().zip(&b).map(|(&x, &y)| i32::from(x) * i32::from(y)).sum();
+            if let Some(simd) = try_dot_i8(&a, &b) {
+                assert_eq!(simd, scalar, "len={len}");
+            }
+        }
+        // Worst-case magnitude rows: every pair sum hits ±32258.
+        let a = vec![127i8; 640];
+        let mut b = vec![127i8; 640];
+        if let Some(simd) = try_dot_i8(&a, &b) {
+            assert_eq!(simd, 640 * 16129);
+        }
+        for v in b.iter_mut() {
+            *v = -127;
+        }
+        if let Some(simd) = try_dot_i8(&a, &b) {
+            assert_eq!(simd, -640 * 16129);
+        }
+    }
+
+    #[test]
+    fn simd_dot_i8_i4_matches_scalar_exactly() {
+        let mut r = Rng::new(31);
+        for k in [0usize, 1, 2, 7, 15, 16, 31, 32, 33, 63, 64, 65, 100, 513] {
+            let a = codes(&mut r, k, 127);
+            let w = codes(&mut r, k, 7); // nibble range
+            let mut wp = vec![0i8; packed4_row_len(k).max(1)];
+            pack_i4(&w, k, 1, &mut wp);
+            let mut scalar = 0i32;
+            for (j, &x) in a.iter().enumerate() {
+                let wc = if j % 2 == 0 { unpack4_lo(wp[j / 2]) } else { unpack4_hi(wp[j / 2]) };
+                scalar += i32::from(x) * wc;
+            }
+            if let Some(simd) = try_dot_i8_i4(&a, &wp, k) {
+                assert_eq!(simd, scalar, "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_int_switch_forces_scalar_path() {
+        let prev = set_simd_int_enabled(false);
+        assert!(try_dot_i8(&[1, 2], &[3, 4]).is_none(), "switch off must decline");
+        assert!(try_dot_i8_i4(&[1, 2], &[0x21], 2).is_none());
+        set_simd_int_enabled(prev);
+        // On AVX2 hosts the re-enabled path must come back (and still agree).
+        if let Some(v) = try_dot_i8(&[1, 2], &[3, 4]) {
+            assert_eq!(v, 11);
+            assert!(prev, "default switch state is on");
         }
     }
 }

@@ -17,20 +17,20 @@
 //! for every model × mode × thread count.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 use crate::runtime::backend::{Executable, ScratchStats};
-use crate::runtime::reference::kernels::{quantize_weights_alloc, wrep, WRep};
+use crate::runtime::reference::kernels::{quantize_weights_alloc, wrep, WRep, I8_LEVELS};
 use crate::runtime::reference::nn::{
     add_bias, bias_bwd, cmajor_to_nhwc, cmajor_to_w, conv2d, conv2d_bwd, dwconv2d, dwconv2d_bwd,
     gap, gap_bwd, group_norm, group_norm_bwd, matmul, matmul_a_bt, matmul_at_b_acc, maxpool2,
-    maxpool2_bwd, nhwc_to_cmajor, qconv2d, qfc, relu, relu_bwd, softmax_xent, w_to_cmajor, Dims,
-    GnCache,
+    maxpool2_bwd, nhwc_to_cmajor, qconv2d, qdwconv2d, qfc, relu, relu_bwd, softmax_xent,
+    w_to_cmajor, Dims, GnCache,
 };
 use crate::runtime::reference::plan::{
     compile_eval, compile_train, run_eval, run_train, Plan, Workspace,
 };
-use crate::runtime::reference::quantize::{is_passthrough, quantize_rows};
+use crate::runtime::reference::quantize::{is_passthrough, linear_scale, quantize_rows};
 use crate::runtime::reference::zoo::{LType, ModelGraph, Node, EVAL_BATCH, TRAIN_BATCH};
 use crate::runtime::tensor::Tensor;
 use crate::runtime::value::Value;
@@ -88,6 +88,85 @@ fn add_vec(a: &mut [f32], b: &[f32]) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Static activation scales (calibration)
+// ---------------------------------------------------------------------------
+
+/// Calibrated static activation scales for one model: per-layer max
+/// |input| observed over the calibration batches, plus the fingerprint
+/// the eval cache keys the table under (0 is reserved for dynamic mode).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ActScales {
+    /// max|activation| entering each graph layer (layer index order).
+    pub maxes: Vec<f32>,
+    /// FNV fingerprint over the exact f32 bit patterns of `maxes`.
+    pub fingerprint: u64,
+}
+
+/// How a forward walk obtains activation scales on the integer path.
+pub enum ActMode<'a> {
+    /// Dynamic per-row max scales (the default).
+    Dynamic,
+    /// Static per-layer scales from a calibration table of per-layer
+    /// max|input| values: one precomputed i8 grid per layer, no max pass
+    /// in the hot loop.
+    Static(&'a [f32]),
+    /// Calibration pass: record per-layer max|input| into the table.
+    /// Callers run this with passthrough bit-widths, so layers execute
+    /// the plain f32 path and nothing dispatches the integer kernels.
+    Record(&'a mut [f32]),
+}
+
+static ACT_SCALES: OnceLock<RwLock<HashMap<String, Arc<ActScales>>>> = OnceLock::new();
+
+fn act_scale_registry() -> &'static RwLock<HashMap<String, Arc<ActScales>>> {
+    ACT_SCALES.get_or_init(Default::default)
+}
+
+/// Register (`Some`) or clear (`None`) the static activation-scale table
+/// for `model`.  Reference-backend evals pick the table up by graph name
+/// on every batch, so flipping the registration immediately changes how
+/// subsequent evals quantize activations (the coordinator owns this
+/// lifecycle and keys the eval cache on the table's fingerprint).
+pub fn set_act_scales(model: &str, scales: Option<Arc<ActScales>>) {
+    let mut reg = act_scale_registry().write().expect("act-scale registry poisoned");
+    match scales {
+        Some(s) => {
+            reg.insert(model.to_string(), s);
+        }
+        None => {
+            reg.remove(model);
+        }
+    }
+}
+
+/// The registered static-scale table for `model`, if any.
+pub fn act_scales_for(model: &str) -> Option<Arc<ActScales>> {
+    act_scale_registry().read().expect("act-scale registry poisoned").get(model).cloned()
+}
+
+/// Deterministic calibration pass for static activation scales: a plain
+/// f32 passthrough forward (32-bit everywhere, so nothing quantizes or
+/// dispatches int kernels) over `batches`, recording each layer's
+/// max|input|.  A pure function of (graph, params, batches) — identical
+/// inputs produce byte-identical maxes on every host, which is what
+/// keeps cached reports reproducible under `--act-scales static`.
+pub fn calibrate_act_maxes(
+    g: &ModelGraph,
+    binar: bool,
+    params: &[&Tensor],
+    batches: &[&Tensor],
+) -> anyhow::Result<Vec<f32>> {
+    let wbits = vec![32.0f32; g.w_channels];
+    let abits = vec![32.0f32; g.a_channels];
+    let mut maxes = vec![0.0f32; g.layers.len()];
+    for images in batches {
+        let mut act = ActMode::Record(&mut maxes);
+        forward(g, params, images, &wbits, &abits, binar, false, &mut act)?;
+    }
+    Ok(maxes)
+}
+
 /// One primitive layer: per-channel quantize input + weight, conv/matmul,
 /// norm or bias, optional ReLU.  Returns the output and (in training) the
 /// backward tape.
@@ -101,10 +180,26 @@ fn layer_fwd(
     binar: bool,
     x: ActT,
     want_tape: bool,
+    act: &mut ActMode,
 ) -> (ActT, Option<LayerTape>) {
     let l = &g.layers[li];
     let wb = &wbits[l.w_off..l.w_off + l.w_len];
     let ab = &abits[l.a_off..l.a_off + l.a_len];
+
+    // Calibration: record the raw input's max|x| before any quantization.
+    // The raw max upper-bounds the fake-quantized activation's max for
+    // every abits setting (symmetric max-abs grids never exceed their
+    // row max), so one fp32 calibration pass serves all bit configs.
+    if let ActMode::Record(maxes) = act {
+        let data = match &x {
+            ActT::A4(_, data) => data,
+            ActT::A2 { data, .. } => data,
+        };
+        let mx = data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        if mx > maxes[li] {
+            maxes[li] = mx;
+        }
+    }
 
     // Per-input-channel activation quantization (fc: one shared channel).
     // Exact-passthrough bit slices (≥ 24 bits, quant mode) skip the
@@ -132,25 +227,32 @@ fn layer_fwd(
 
     // Integer-path dispatch: same [`wrep`] rule as the plan executor (so
     // the walk and the planned engine stay byte-identical), eval only —
-    // training tapes need the f32 quantized operands — and never for
-    // depthwise convs, which have no integer kernel.
-    let int_ok = !want_tape && l.typ != LType::DwConv;
+    // training tapes need the f32 quantized operands.  Depthwise convs
+    // dispatch through `qdwconv2d` with per-(image, channel) scales.
+    let int_ok = !want_tape;
     let rep = if int_ok { wrep(wb, binar) } else { WRep::F32 };
     if rep != WRep::F32 {
         let w = params[l.p_w];
         let rest = w.data.len() / l.w_len;
         let (qw, sw) = quantize_weights_alloc(&w.data, rest, l.w_len, wb, rep);
         let i4 = rep == WRep::I4;
+        // Static mode derives one i8 grid per layer from the calibrated
+        // max — the identical expression the plan executor uses, so the
+        // two engines stay byte-identical in every act-scale mode.
+        let act_scale = match act {
+            ActMode::Static(maxes) => Some(linear_scale(maxes[li], I8_LEVELS)),
+            _ => None,
+        };
         return match l.typ {
             LType::Fc => {
                 let ActT::A2 { n, c, data } = &xq else { panic!("fc expects flat input") };
-                let mut y = qfc(data, *n, *c, &qw, &sw, i4, l.cout);
+                let mut y = qfc(data, *n, *c, &qw, &sw, i4, l.cout, act_scale);
                 add_bias(&mut y, l.cout, &params[l.p_w + 1].data);
                 (ActT::A2 { n: *n, c: l.cout, data: y }, None)
             }
             LType::Conv => {
                 let ActT::A4(d, data) = &xq else { panic!("conv expects NHWC input") };
-                let (mut y, od) = qconv2d(data, *d, &qw, &sw, i4, l.k, l.s, l.cout);
+                let (mut y, od) = qconv2d(data, *d, &qw, &sw, i4, l.k, l.s, l.cout, act_scale);
                 if l.norm {
                     let (yy, _) =
                         group_norm(&y, od, &params[l.p_w + 1].data, &params[l.p_w + 2].data);
@@ -163,7 +265,21 @@ fn layer_fwd(
                 }
                 (ActT::A4(od, y), None)
             }
-            LType::DwConv => unreachable!("dwconv never dispatches the int path"),
+            LType::DwConv => {
+                let ActT::A4(d, data) = &xq else { panic!("dwconv expects NHWC input") };
+                let (mut y, od) = qdwconv2d(data, *d, &qw, &sw, i4, l.k, l.s, act_scale);
+                if l.norm {
+                    let (yy, _) =
+                        group_norm(&y, od, &params[l.p_w + 1].data, &params[l.p_w + 2].data);
+                    y = yy;
+                } else {
+                    add_bias(&mut y, od.c, &params[l.p_w + 1].data);
+                }
+                if l.relu {
+                    relu(&mut y);
+                }
+                (ActT::A4(od, y), None)
+            }
         };
     }
 
@@ -265,6 +381,7 @@ fn layer_bwd(
 }
 
 /// Full forward walk.  Returns (logits data, n, classes, tapes-if-train).
+#[allow(clippy::too_many_arguments)]
 fn forward(
     g: &ModelGraph,
     params: &[&Tensor],
@@ -273,6 +390,7 @@ fn forward(
     abits: &[f32],
     binar: bool,
     want_tape: bool,
+    act: &mut ActMode,
 ) -> anyhow::Result<(Vec<f32>, usize, usize, Option<Vec<Tape>>)> {
     anyhow::ensure!(images.shape.len() == 4, "images must be NHWC");
     let d0 = Dims { n: images.shape[0], h: images.shape[1], w: images.shape[2], c: images.shape[3] };
@@ -281,7 +399,8 @@ fn forward(
     let mut x = ActT::A4(d0, images.data.clone());
     let mut tapes: Vec<Tape> = Vec::new();
     let mut li = 0usize;
-    let fwd = |li: usize, x: ActT| layer_fwd(g, li, params, wbits, abits, binar, x, want_tape);
+    let mut fwd =
+        |li: usize, x: ActT| layer_fwd(g, li, params, wbits, abits, binar, x, want_tape, act);
 
     for node in &g.nodes {
         match *node {
@@ -533,6 +652,7 @@ impl RefModelEval {
         let (params, images, labels, wbits, abits) =
             parse_eval_inputs(self.graph.params.len(), inputs)?;
         let plan = self.plan_for(images.shape[0]);
+        let table = act_scales_for(&self.graph.name);
         let (correct, loss) = run_eval(
             &plan,
             &self.graph,
@@ -542,6 +662,7 @@ impl RefModelEval {
             labels,
             &wbits.data,
             &abits.data,
+            table.as_ref().map(|t| t.maxes.as_slice()),
             ws,
         )?;
         Ok(vec![Value::scalar(correct), Value::scalar(loss)])
@@ -553,8 +674,21 @@ impl RefModelEval {
     pub fn run_walk(&self, inputs: &[&Value]) -> anyhow::Result<Vec<Value>> {
         let (params, images, labels, wbits, abits) =
             parse_eval_inputs(self.graph.params.len(), inputs)?;
-        let (logits, n, classes, _) =
-            forward(&self.graph, &params, images, &wbits.data, &abits.data, self.binar, false)?;
+        let table = act_scales_for(&self.graph.name);
+        let mut act = match &table {
+            Some(t) => ActMode::Static(&t.maxes),
+            None => ActMode::Dynamic,
+        };
+        let (logits, n, classes, _) = forward(
+            &self.graph,
+            &params,
+            images,
+            &wbits.data,
+            &abits.data,
+            self.binar,
+            false,
+            &mut act,
+        )?;
         anyhow::ensure!(labels.len() == n, "labels len {} vs batch {n}", labels.len());
         let (correct, loss, _) = softmax_xent(&logits, n, classes, labels, false);
         Ok(vec![Value::scalar(correct), Value::scalar(loss)])
@@ -644,8 +778,16 @@ impl RefModelTrain {
         let np = self.graph.params.len();
         let (params, momenta, images, labels, wbits, abits, lr) =
             parse_train_inputs(np, inputs)?;
-        let (logits, n, classes, tapes) =
-            forward(&self.graph, &params, images, &wbits.data, &abits.data, self.binar, true)?;
+        let (logits, n, classes, tapes) = forward(
+            &self.graph,
+            &params,
+            images,
+            &wbits.data,
+            &abits.data,
+            self.binar,
+            true,
+            &mut ActMode::Dynamic,
+        )?;
         anyhow::ensure!(labels.len() == n, "labels len {} vs batch {n}", labels.len());
         let (_, loss, dlogits) = softmax_xent(&logits, n, classes, labels, true);
         let grads = backward(
@@ -739,7 +881,8 @@ mod tests {
             let wbits = vec![32.0f32; g.w_channels];
             let abits = vec![32.0f32; g.a_channels];
             let (logits, n, c, _) =
-                forward(&g, &params, &images, &wbits, &abits, false, false).unwrap();
+                forward(&g, &params, &images, &wbits, &abits, false, false, &mut ActMode::Dynamic)
+                    .unwrap();
             assert_eq!(n, 2, "{name}");
             assert_eq!(c, 10, "{name}");
             assert_eq!(logits.len(), 20, "{name}");
@@ -757,7 +900,9 @@ mod tests {
         let images = tiny_images(2, 1);
         let wbits = vec![0.0f32; g.w_channels];
         let abits = vec![32.0f32; g.a_channels];
-        let (logits, ..) = forward(&g, &params, &images, &wbits, &abits, false, false).unwrap();
+        let (logits, ..) =
+            forward(&g, &params, &images, &wbits, &abits, false, false, &mut ActMode::Dynamic)
+                .unwrap();
         assert!(logits.iter().all(|&v| v.abs() < 1e-5), "{logits:?}");
     }
 
@@ -950,7 +1095,9 @@ mod tests {
             let images = tiny_images(2, 29);
             let wbits = vec![3.0f32; g.w_channels];
             let abits = vec![3.0f32; g.a_channels];
-            let (logits, ..) = forward(&g, &params, &images, &wbits, &abits, true, false).unwrap();
+            let (logits, ..) =
+                forward(&g, &params, &images, &wbits, &abits, true, false, &mut ActMode::Dynamic)
+                    .unwrap();
             assert!(logits.iter().all(|v| v.is_finite()), "{name}");
         }
     }

@@ -23,7 +23,15 @@ pub use crate::runtime::reference::kernels::{
     col2im_acc, im2col, im2col::same_pad, matmul, matmul_a_bt, matmul_a_bt_into, matmul_acc,
     matmul_acc_scratch, matmul_at_b_acc, matmul_panel_len,
 };
-pub use crate::runtime::reference::kernels::{qgemm_into, quantize_rows_i8};
+pub use crate::runtime::reference::kernels::{
+    qgemm_into, quantize_rows_i8, quantize_rows_i8_static,
+};
+use crate::runtime::reference::kernels::{
+    packed4_row_len,
+    qgemm::{unpack4_hi, unpack4_lo},
+    I8_LEVELS,
+};
+use crate::runtime::reference::quantize::{linear_scale, round_te};
 
 /// NHWC activation dims.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -391,6 +399,77 @@ pub fn conv_qrows(d: Dims, k: usize, s: usize) -> usize {
     }
 }
 
+/// Activation scales the int dwconv path needs: one per (image, channel).
+pub fn dwconv_qrows(d: Dims) -> usize {
+    d.n * d.c
+}
+
+/// Row-matrix activation quantize dispatch: a calibrated static per-layer
+/// scale when `act_scale` is set (`--act-scales static`), else the dynamic
+/// per-row max pass.
+#[inline]
+fn quantize_acts(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    act_scale: Option<f32>,
+    qa: &mut [i8],
+    sa: &mut [f32],
+) {
+    match act_scale {
+        Some(s) => quantize_rows_i8_static(x, m, k, s, qa, sa),
+        None => quantize_rows_i8(x, m, k, qa, sa),
+    }
+}
+
+/// Per-(image, channel) symmetric i8 quantization of an NHWC tensor — the
+/// depthwise analogue of the per-row GEMM quantizer: channel `c` of image
+/// `n` gets `sx[n·C + c] = max|x[n, :, :, c]| / 127` (1.0 for an all-zero
+/// slice).  Fully overwrites the first `d.elems()` codes and `n·C` scales.
+pub fn quantize_nhwc_i8(x: &[f32], d: Dims, qx: &mut [i8], sx: &mut [f32]) {
+    debug_assert_eq!(x.len(), d.elems());
+    debug_assert!(qx.len() >= d.elems());
+    debug_assert!(sx.len() >= d.n * d.c);
+    let img = d.h * d.w * d.c;
+    for ni in 0..d.n {
+        let xs = &x[ni * img..(ni + 1) * img];
+        let srow = &mut sx[ni * d.c..(ni + 1) * d.c];
+        srow.fill(0.0);
+        for p in 0..d.h * d.w {
+            for (s, &v) in srow.iter_mut().zip(&xs[p * d.c..(p + 1) * d.c]) {
+                let a = v.abs();
+                if a > *s {
+                    *s = a;
+                }
+            }
+        }
+        for s in srow.iter_mut() {
+            *s = linear_scale(*s, I8_LEVELS);
+        }
+        let qs = &mut qx[ni * img..(ni + 1) * img];
+        for p in 0..d.h * d.w {
+            let row = &xs[p * d.c..(p + 1) * d.c];
+            for (c, (q, &v)) in qs[p * d.c..(p + 1) * d.c].iter_mut().zip(row).enumerate() {
+                *q = round_te(v / srow[c]).clamp(-I8_LEVELS, I8_LEVELS) as i8;
+            }
+        }
+    }
+}
+
+/// Static-scale variant of [`quantize_nhwc_i8`]: one calibrated scale for
+/// every (image, channel) slice — no max pass (values beyond `127·scale`
+/// saturate, see `quantize_rows_i8_static`).
+pub fn quantize_nhwc_i8_static(x: &[f32], d: Dims, scale: f32, qx: &mut [i8], sx: &mut [f32]) {
+    debug_assert_eq!(x.len(), d.elems());
+    debug_assert!(qx.len() >= d.elems());
+    debug_assert!(sx.len() >= d.n * d.c);
+    debug_assert!(scale > 0.0, "static activation scale must be positive");
+    sx[..d.n * d.c].fill(scale);
+    for (q, &v) in qx[..d.elems()].iter_mut().zip(x) {
+        *q = round_te(v / scale).clamp(-I8_LEVELS, I8_LEVELS) as i8;
+    }
+}
+
 /// Dense conv on the integer path, SAME padding, into caller storage:
 /// fake-quantized f32 activations are re-quantized per row to i8
 /// (`qpatch` codes + `ascale` dynamic scales, sizes [`conv_qpatch_len`] /
@@ -413,6 +492,7 @@ pub fn qconv2d_into(
     patches: &mut [f32],
     qpatch: &mut [i8],
     ascale: &mut [f32],
+    act_scale: Option<f32>,
 ) -> Dims {
     let (ho, _, _) = same_pad(d.h, k, s);
     let (wo, _, _) = same_pad(d.w, k, s);
@@ -420,7 +500,7 @@ pub fn qconv2d_into(
     debug_assert_eq!(out.len(), od.elems());
     if k == 1 && s == 1 {
         let m = d.n * d.h * d.w;
-        quantize_rows_i8(x, m, d.c, qpatch, ascale);
+        quantize_acts(x, m, d.c, act_scale, qpatch, ascale);
         qgemm_into(out, qpatch, ascale, qw, sw, m, d.c, cout, i4);
         return od;
     }
@@ -429,7 +509,7 @@ pub fn qconv2d_into(
     debug_assert_eq!(patches.len(), ho * wo * cols);
     for ni in 0..d.n {
         im2col(&x[ni * img_elems..(ni + 1) * img_elems], d.h, d.w, d.c, k, s, patches);
-        quantize_rows_i8(patches, ho * wo, cols, qpatch, ascale);
+        quantize_acts(patches, ho * wo, cols, act_scale, qpatch, ascale);
         let dst = &mut out[ni * ho * wo * cout..(ni + 1) * ho * wo * cout];
         qgemm_into(dst, qpatch, ascale, qw, sw, ho * wo, cols, cout, i4);
     }
@@ -447,6 +527,7 @@ pub fn qconv2d(
     k: usize,
     s: usize,
     cout: usize,
+    act_scale: Option<f32>,
 ) -> (Vec<f32>, Dims) {
     let (ho, _, _) = same_pad(d.h, k, s);
     let (wo, _, _) = same_pad(d.w, k, s);
@@ -455,7 +536,7 @@ pub fn qconv2d(
     let mut qpatch = vec![0i8; conv_qpatch_len(d, k, s)];
     let mut ascale = vec![0.0f32; conv_qrows(d, k, s)];
     let od = qconv2d_into(
-        x, d, qw, sw, i4, k, s, cout, &mut out, &mut patches, &mut qpatch, &mut ascale,
+        x, d, qw, sw, i4, k, s, cout, &mut out, &mut patches, &mut qpatch, &mut ascale, act_scale,
     );
     (out, od)
 }
@@ -476,12 +557,14 @@ pub fn qfc_into(
     out: &mut [f32],
     qa: &mut [i8],
     ascale: &mut [f32],
+    act_scale: Option<f32>,
 ) {
-    quantize_rows_i8(x, n, cin, qa, ascale);
+    quantize_acts(x, n, cin, act_scale, qa, ascale);
     qgemm_into(out, qa, ascale, qw, sw, n, cin, cout, i4);
 }
 
 /// Dense layer on the integer path, allocating (the tree-walk backend).
+#[allow(clippy::too_many_arguments)]
 pub fn qfc(
     x: &[f32],
     n: usize,
@@ -490,12 +573,119 @@ pub fn qfc(
     sw: &[f32],
     i4: bool,
     cout: usize,
+    act_scale: Option<f32>,
 ) -> Vec<f32> {
     let mut out = vec![0.0f32; n * cout];
     let mut qa = vec![0i8; n * cin];
     let mut ascale = vec![0.0f32; n];
-    qfc_into(x, n, cin, qw, sw, i4, cout, &mut out, &mut qa, &mut ascale);
+    qfc_into(x, n, cin, qw, sw, i4, cout, &mut out, &mut qa, &mut ascale, act_scale);
     out
+}
+
+/// Depthwise conv on the integer path, SAME padding, into caller storage.
+///
+/// Activations quantize per (image, channel) — the depthwise contraction
+/// never mixes channels, so the scale factors hoist out of the i32
+/// accumulator exactly as per-row scales do for the GEMM form (`qx`/`sx`
+/// scratch of `d.elems()` / [`dwconv_qrows`]; `act_scale` pins the static
+/// calibrated grid instead).  `qw`/`sw` are the `WQ` quantizer's
+/// channel-major codes over `rest = k·k` taps — the (k,k,1,cin) row-major
+/// parameter is precisely a `(rest, cout=cin)` weight, so the int dwconv
+/// reuses the shared weight quantizer and nibble packing unchanged (`i4`
+/// selects the packed form).  Exact i32 accumulation over ≤ k² taps, one
+/// f32 dequantize per output element: `out = acc · (sx[n,c] · sw[c])` —
+/// the qgemm tolerance contract with `k_eff = k²` (edge pixels sum fewer
+/// taps, and the bound is monotone in the tap count).  Fully overwrites
+/// `out`.
+#[allow(clippy::too_many_arguments)]
+pub fn qdwconv2d_into(
+    x: &[f32],
+    d: Dims,
+    qw: &[i8],
+    sw: &[f32],
+    i4: bool,
+    k: usize,
+    s: usize,
+    out: &mut [f32],
+    qx: &mut [i8],
+    sx: &mut [f32],
+    act_scale: Option<f32>,
+) -> Dims {
+    match act_scale {
+        Some(sc) => quantize_nhwc_i8_static(x, d, sc, qx, sx),
+        None => quantize_nhwc_i8(x, d, qx, sx),
+    }
+    let (ho, pad_t, _) = same_pad(d.h, k, s);
+    let (wo, pad_l, _) = same_pad(d.w, k, s);
+    let od = Dims { n: d.n, h: ho, w: wo, c: d.c };
+    debug_assert_eq!(out.len(), od.elems());
+    debug_assert!((k * k) as u64 * 16129 <= i32::MAX as u64);
+    let prow = packed4_row_len(k * k);
+    let wrow_len = if i4 { prow } else { k * k };
+    debug_assert!(qw.len() >= wrow_len * d.c);
+    debug_assert!(sw.len() >= d.c);
+    let img_elems = d.h * d.w * d.c;
+    for ni in 0..d.n {
+        let img = &qx[ni * img_elems..(ni + 1) * img_elems];
+        let ss = &sx[ni * d.c..(ni + 1) * d.c];
+        let dst = &mut out[ni * ho * wo * d.c..(ni + 1) * ho * wo * d.c];
+        for oy in 0..ho {
+            // Valid tap range for this output row: iy = oy·s + ky − pad_t
+            // must land in [0, h) — hoisting the bound check off the taps.
+            let ky_lo = pad_t.saturating_sub(oy * s);
+            let ky_hi = k.min(d.h + pad_t - oy * s);
+            for ox in 0..wo {
+                let kx_lo = pad_l.saturating_sub(ox * s);
+                let kx_hi = k.min(d.w + pad_l - ox * s);
+                let orow = &mut dst[(oy * wo + ox) * d.c..(oy * wo + ox + 1) * d.c];
+                for (c, o) in orow.iter_mut().enumerate() {
+                    let wrow = &qw[c * wrow_len..(c + 1) * wrow_len];
+                    let mut acc = 0i32;
+                    for ky in ky_lo..ky_hi {
+                        let iy = oy * s + ky - pad_t;
+                        for kx in kx_lo..kx_hi {
+                            let ix = ox * s + kx - pad_l;
+                            let tap = ky * k + kx;
+                            let wc = if i4 {
+                                let byte = wrow[tap / 2];
+                                if tap % 2 == 0 {
+                                    unpack4_lo(byte)
+                                } else {
+                                    unpack4_hi(byte)
+                                }
+                            } else {
+                                i32::from(wrow[tap])
+                            };
+                            acc += i32::from(img[(iy * d.w + ix) * d.c + c]) * wc;
+                        }
+                    }
+                    *o = acc as f32 * (ss[c] * sw[c]);
+                }
+            }
+        }
+    }
+    od
+}
+
+/// Depthwise conv on the integer path, allocating (the tree-walk backend).
+#[allow(clippy::too_many_arguments)]
+pub fn qdwconv2d(
+    x: &[f32],
+    d: Dims,
+    qw: &[i8],
+    sw: &[f32],
+    i4: bool,
+    k: usize,
+    s: usize,
+    act_scale: Option<f32>,
+) -> (Vec<f32>, Dims) {
+    let (ho, _, _) = same_pad(d.h, k, s);
+    let (wo, _, _) = same_pad(d.w, k, s);
+    let mut out = vec![0.0f32; d.n * ho * wo * d.c];
+    let mut qx = vec![0i8; d.elems()];
+    let mut sx = vec![0.0f32; dwconv_qrows(d)];
+    let od = qdwconv2d_into(x, d, qw, sw, i4, k, s, &mut out, &mut qx, &mut sx, act_scale);
+    (out, od)
 }
 
 // ---------------------------------------------------------------------------

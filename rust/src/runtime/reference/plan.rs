@@ -33,16 +33,18 @@
 //! construction since the transpose pair is a pure permutation and the
 //! quantizer is the identity on every row.
 
-use crate::runtime::reference::kernels::{pack_i4, packed4_row_len, quantize_w_i8, wrep, WRep};
+use crate::runtime::reference::kernels::{
+    pack_i4, packed4_row_len, quantize_w_i8, wrep, WRep, I8_LEVELS,
+};
 use crate::runtime::reference::nn::{
     add_bias, bias_bwd_acc, cmajor_to_nhwc_into, cmajor_to_w_into, conv2d_bwd_into, conv2d_into,
     conv_panel_len, conv_patch_len, conv_qpatch_len, conv_qrows, dwconv2d_bwd_into, dwconv2d_into,
-    gap_bwd_into, gap_into, gn_groups, group_norm_bwd_into, group_norm_into, matmul_a_bt_into,
-    matmul_acc_scratch, matmul_at_b_acc, matmul_panel_len, maxpool2_bwd_into, maxpool2_into,
-    nhwc_to_cmajor_into, qconv2d_into, qfc_into, relu, relu_bwd, same_pad, softmax_xent_into,
-    w_to_cmajor_into, Dims,
+    dwconv_qrows, gap_bwd_into, gap_into, gn_groups, group_norm_bwd_into, group_norm_into,
+    matmul_a_bt_into, matmul_acc_scratch, matmul_at_b_acc, matmul_panel_len, maxpool2_bwd_into,
+    maxpool2_into, nhwc_to_cmajor_into, qconv2d_into, qdwconv2d_into, qfc_into, relu, relu_bwd,
+    same_pad, softmax_xent_into, w_to_cmajor_into, Dims,
 };
-use crate::runtime::reference::quantize::{is_passthrough, quantize_rows};
+use crate::runtime::reference::quantize::{is_passthrough, linear_scale, quantize_rows};
 use crate::runtime::reference::zoo::{LType, ModelGraph, Node};
 use crate::runtime::tensor::Tensor;
 use crate::runtime::value::Value;
@@ -281,6 +283,22 @@ pub(crate) struct IntGemm {
     ascale: Slot,
 }
 
+/// Integer-path slots of a `DwConv` step: the producing `WQ` step's weight
+/// codes/scales plus per-(image, channel) activation scratch (depthwise
+/// contractions reduce over k·k taps of one channel, so the activation
+/// scale granularity is (n, c) rather than per im2col row).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct IntDw {
+    /// The `WQ` step's `qdst` (channel-major tap codes, nibble-packed on I4).
+    qw: ISlot,
+    /// The `WQ` step's `wscales`.
+    wsc: Slot,
+    /// i8 activation codes (`d.elems()` bytes, NHWC order).
+    qx: ISlot,
+    /// Per-(image, channel) activation scales ([`dwconv_qrows`]).
+    xsc: Slot,
+}
+
 /// One planned operation.  Layer steps carry the layer index `li` so the
 /// executor can read kernel geometry and parameter offsets from the graph;
 /// all activation geometry is resolved at compile time.
@@ -319,8 +337,9 @@ pub(crate) enum Step {
         d: Dims,
         int: Option<IntGemm>,
     },
-    /// dst = dwconv(xq, wq).
-    DwConv { li: usize, xq: Slot, wq: Slot, dst: Slot, d: Dims },
+    /// dst = dwconv(xq, wq); runs the per-channel integer kernel when
+    /// `int` is planned and [`wrep`] picks an int representation.
+    DwConv { li: usize, xq: Slot, wq: Slot, dst: Slot, d: Dims, int: Option<IntDw> },
     /// GroupNorm src → dst; `cache` = (xn, istd) tape slots when training.
     Gn { li: usize, src: Slot, dst: Slot, d: Dims, cache: Option<(Slot, Slot)> },
     /// In-place bias add on a conv output.
@@ -420,10 +439,14 @@ fn visit_slots(step: &mut Step, f: &mut impl FnMut(&mut Slot)) {
                 f(&mut i.ascale);
             }
         }
-        Step::DwConv { xq, wq, dst, .. } => {
+        Step::DwConv { xq, wq, dst, int, .. } => {
             f(xq);
             f(wq);
             f(dst);
+            if let Some(i) = int {
+                f(&mut i.wsc);
+                f(&mut i.xsc);
+            }
         }
         Step::Gn { src, dst, cache, .. } => {
             f(src);
@@ -523,6 +546,10 @@ fn visit_islots(step: &mut Step, f: &mut impl FnMut(&mut ISlot)) {
         Step::Fc { int: Some(i), .. } | Step::Conv { int: Some(i), .. } => {
             f(&mut i.qw);
             f(&mut i.qa);
+        }
+        Step::DwConv { int: Some(i), .. } => {
+            f(&mut i.qw);
+            f(&mut i.qx);
         }
         _ => {}
     }
@@ -711,10 +738,10 @@ impl<'g> PlanBuilder<'g> {
         let wlen: usize = self.g.params[l.p_w].shape.iter().product();
         let wq = self.vb(wlen);
         let scratch = self.vb(wlen);
-        // Int-path scratch (eval only; DwConv has no integer kernel).
-        // Which representation runs is a per-dispatch decision — the plan
-        // reserves capacity so any of them can.
-        let int_ok = !self.train && l.typ != LType::DwConv;
+        // Int-path scratch (eval only).  Which representation runs is a
+        // per-dispatch decision — the plan reserves capacity so any of
+        // them can.
+        let int_ok = !self.train;
         let int_wq = int_ok.then(|| IntWq {
             qdst: self.ivb(wlen),
             qscratch: self.ivb(wlen),
@@ -748,7 +775,13 @@ impl<'g> PlanBuilder<'g> {
                 let od = Dims { n: d.n, h: ho, w: wo, c: oc };
                 let dst = self.vb(od.elems());
                 if l.typ == LType::DwConv {
-                    self.steps.push(Step::DwConv { li, xq, wq, dst, d });
+                    let int = int_wq.map(|iw| IntDw {
+                        qw: iw.qdst,
+                        wsc: iw.wscales,
+                        qx: self.ivb(d.elems()),
+                        xsc: self.vb(dwconv_qrows(d)),
+                    });
+                    self.steps.push(Step::DwConv { li, xq, wq, dst, d, int });
                 } else {
                     let plen = conv_patch_len(d, l.k, l.s);
                     let patches = (plen > 0).then(|| self.vb(plen));
@@ -1128,7 +1161,17 @@ struct Ctx<'a> {
     images: &'a [f32],
     wbits: &'a [f32],
     abits: &'a [f32],
+    /// Calibrated per-layer activation maxima (static activation scales);
+    /// `None` = dynamic per-row scales.  Same table the walk reads, so
+    /// planned output stays byte-identical either way.
+    act_maxes: Option<&'a [f32]>,
     grad_slots: &'a [Slot],
+}
+
+/// Static activation scale for layer `li`, when a calibration table is
+/// installed (the exact expression `model_exec::layer_fwd` uses).
+fn static_scale(cx: &Ctx, li: usize) -> Option<f32> {
+    cx.act_maxes.map(|t| linear_scale(t[li], I8_LEVELS))
 }
 
 fn exec_steps(steps: &[Step], cx: &Ctx, ws: &mut Workspace) {
@@ -1247,6 +1290,7 @@ fn exec_step(step: &Step, cx: &Ctx, ws: &mut Workspace) {
                     &mut dstv[..n * l.cout],
                     &mut qav[..n * l.cin],
                     &mut asv[..n],
+                    static_scale(cx, li),
                 );
                 add_bias(&mut dstv[..n * l.cout], l.cout, &cx.params[l.p_w + 1].data);
                 ws.put(xq, xqv);
@@ -1311,6 +1355,7 @@ fn exec_step(step: &Step, cx: &Ctx, ws: &mut Workspace) {
                     patches_s,
                     &mut qpv[..conv_qpatch_len(d, l.k, l.s)],
                     &mut asv[..conv_qrows(d, l.k, l.s)],
+                    static_scale(cx, li),
                 );
                 if let (Some(p), Some(v)) = (patches, pv) {
                     ws.put(p, v);
@@ -1359,12 +1404,42 @@ fn exec_step(step: &Step, cx: &Ctx, ws: &mut Workspace) {
             ws.put(wq, wqv);
             ws.put(dst, dstv);
         }
-        Step::DwConv { li, xq, wq, dst, d } => {
+        Step::DwConv { li, xq, wq, dst, d, int } => {
             let l = &cx.g.layers[li];
             let wlen = cx.params[l.p_w].data.len();
             let (ho, _, _) = same_pad(d.h, l.k, l.s);
             let (wo, _, _) = same_pad(d.w, l.k, l.s);
             let od_len = d.n * ho * wo * d.c;
+            let wb = &cx.wbits[l.w_off..l.w_off + l.w_len];
+            let rep = if int.is_some() { wrep(wb, cx.binar) } else { WRep::F32 };
+            if let (Some(id), false) = (int, rep == WRep::F32) {
+                let xqv = ws.take(xq);
+                let mut dstv = ws.take(dst);
+                let qwv = ws.take_i(id.qw);
+                let swv = ws.take(id.wsc);
+                let mut qxv = ws.take_i(id.qx);
+                let mut xsv = ws.take(id.xsc);
+                qdwconv2d_into(
+                    &xqv[..d.elems()],
+                    d,
+                    &qwv,
+                    &swv[..l.w_len],
+                    rep == WRep::I4,
+                    l.k,
+                    l.s,
+                    &mut dstv[..od_len],
+                    &mut qxv[..d.elems()],
+                    &mut xsv[..dwconv_qrows(d)],
+                    static_scale(cx, li),
+                );
+                ws.put(xq, xqv);
+                ws.put_i(id.qw, qwv);
+                ws.put(id.wsc, swv);
+                ws.put_i(id.qx, qxv);
+                ws.put(id.xsc, xsv);
+                ws.put(dst, dstv);
+                return;
+            }
             let xqv = ws.take(xq);
             let wqv = ws.take(wq);
             let mut dstv = ws.take(dst);
@@ -1687,7 +1762,9 @@ fn check_inputs(
 }
 
 /// Execute an eval plan: forward + accuracy/loss head.  Returns (correct,
-/// loss) — byte-identical to the tree-walk.
+/// loss) — byte-identical to the tree-walk.  `acts` is the calibrated
+/// per-layer activation-max table (static scales) or `None` for dynamic
+/// per-row scales.
 #[allow(clippy::too_many_arguments)]
 pub fn run_eval(
     plan: &Plan,
@@ -1698,9 +1775,13 @@ pub fn run_eval(
     labels: &[i32],
     wbits: &[f32],
     abits: &[f32],
+    acts: Option<&[f32]>,
     ws: &mut Workspace,
 ) -> anyhow::Result<(f32, f32)> {
     check_inputs(plan, g, images, labels, wbits, abits)?;
+    if let Some(t) = acts {
+        anyhow::ensure!(t.len() == g.layers.len(), "act table len {} vs {}", t.len(), g.layers.len());
+    }
     ws.ensure(plan);
     let cx = Ctx {
         g,
@@ -1709,6 +1790,7 @@ pub fn run_eval(
         images: &images.data,
         wbits,
         abits,
+        act_maxes: acts,
         grad_slots: &plan.grad_slots,
     };
     exec_steps(&plan.steps[..plan.fwd_len], &cx, ws);
@@ -1746,6 +1828,7 @@ pub fn run_train(
         images: &images.data,
         wbits,
         abits,
+        act_maxes: None,
         grad_slots: &plan.grad_slots,
     };
     exec_steps(&plan.steps[..plan.fwd_len], &cx, ws);

@@ -10,7 +10,9 @@
 //!
 //!   backend kind, model name, cost mode, the full per-channel
 //!   wbits/abits vectors, dataset (seed, noise), split, batch schedule
-//!   (n_batches × eval_batch), and a fingerprint of the parameter tensors.
+//!   (n_batches × eval_batch), a fingerprint of the parameter tensors,
+//!   and a fingerprint of the static activation-scale calibration table
+//!   (0 = dynamic per-row scales).
 //!
 //! Search seed and protocol are deliberately **not** in the key: they decide
 //! *which* configs the agent evaluates, never the value of an evaluation —
@@ -95,6 +97,7 @@ pub fn eval_key(
     n_batches: usize,
     eval_batch: usize,
     param_fp: u64,
+    calib_fp: u64,
 ) -> u64 {
     let mut h = KeyHasher::new();
     h.str(backend)
@@ -107,7 +110,8 @@ pub fn eval_key(
         .str(split)
         .u64(n_batches as u64)
         .u64(eval_batch as u64)
-        .u64(param_fp);
+        .u64(param_fp)
+        .u64(calib_fp);
     h.finish()
 }
 
@@ -302,24 +306,25 @@ mod tests {
     use super::*;
 
     fn base_key() -> u64 {
-        eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 77)
+        eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 77, 0)
     }
 
     #[test]
     fn key_is_deterministic_and_field_sensitive() {
         assert_eq!(base_key(), base_key());
         let variants = [
-            eval_key("shard", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 77),
-            eval_key("reference", "res18", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 77),
-            eval_key("reference", "cif10", "binar", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 77),
-            eval_key("reference", "cif10", "quant", &[5, 5], &[4], 42, 0.85, "val", 2, 256, 77),
-            eval_key("reference", "cif10", "quant", &[5, 4], &[5], 42, 0.85, "val", 2, 256, 77),
-            eval_key("reference", "cif10", "quant", &[5, 4], &[4], 43, 0.85, "val", 2, 256, 77),
-            eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.9, "val", 2, 256, 77),
-            eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "train", 2, 256, 77),
-            eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 3, 256, 77),
-            eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 128, 77),
-            eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 78),
+            eval_key("shard", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 77, 0),
+            eval_key("reference", "res18", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 77, 0),
+            eval_key("reference", "cif10", "binar", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 77, 0),
+            eval_key("reference", "cif10", "quant", &[5, 5], &[4], 42, 0.85, "val", 2, 256, 77, 0),
+            eval_key("reference", "cif10", "quant", &[5, 4], &[5], 42, 0.85, "val", 2, 256, 77, 0),
+            eval_key("reference", "cif10", "quant", &[5, 4], &[4], 43, 0.85, "val", 2, 256, 77, 0),
+            eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.9, "val", 2, 256, 77, 0),
+            eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "train", 2, 256, 77, 0),
+            eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 3, 256, 77, 0),
+            eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 128, 77, 0),
+            eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 78, 0),
+            eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 77, 9),
         ];
         for (i, v) in variants.iter().enumerate() {
             assert_ne!(*v, base_key(), "variant {i} must change the key");
@@ -329,8 +334,8 @@ mod tests {
     #[test]
     fn length_prefixing_prevents_field_aliasing() {
         // Moving a bit between the two vectors must not alias.
-        let a = eval_key("r", "m", "q", &[5, 4], &[3], 1, 0.0, "val", 1, 1, 0);
-        let b = eval_key("r", "m", "q", &[5], &[4, 3], 1, 0.0, "val", 1, 1, 0);
+        let a = eval_key("r", "m", "q", &[5, 4], &[3], 1, 0.0, "val", 1, 1, 0, 0);
+        let b = eval_key("r", "m", "q", &[5], &[4, 3], 1, 0.0, "val", 1, 1, 0, 0);
         assert_ne!(a, b);
         let mut h1 = KeyHasher::new();
         h1.str("ab").str("c");

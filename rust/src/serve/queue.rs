@@ -15,7 +15,7 @@
 //!   * **now** (SIGINT/SIGTERM): queued jobs are cancelled, in-flight jobs
 //!     finish — the daemon never kills a running job half way.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc;
 use std::sync::{Condvar, Mutex};
 
@@ -56,6 +56,9 @@ struct JobEntry {
     handle: String,
     spec: JobSpec,
     state: JobState,
+    /// Connection id of the submitting client (`autoq status` reports
+    /// per-client cache hit/miss totals).
+    client: u64,
     /// Live event subscribers; senders whose receiver hung up are pruned
     /// on the next publish.
     subscribers: Vec<mpsc::Sender<Json>>,
@@ -75,6 +78,10 @@ struct Inner {
     pending: VecDeque<usize>,
     running: usize,
     shutdown: Shutdown,
+    /// Accumulated eval-cache (hits, misses) per submitting client,
+    /// summed from each finished job's delta (BTreeMap so status output
+    /// is in stable client-id order).
+    client_totals: BTreeMap<u64, (u64, u64)>,
 }
 
 pub struct JobQueue {
@@ -96,6 +103,7 @@ impl JobQueue {
                 pending: VecDeque::new(),
                 running: 0,
                 shutdown: Shutdown::No,
+                client_totals: BTreeMap::new(),
             }),
             cv: Condvar::new(),
         }
@@ -105,9 +113,9 @@ impl JobQueue {
         self.inner.lock().expect("job queue poisoned")
     }
 
-    /// Enqueue a validated spec; returns the queue-assigned handle.
-    /// Rejected once shutdown has begun.
-    pub fn submit(&self, spec: JobSpec) -> anyhow::Result<String> {
+    /// Enqueue a validated spec from connection `client`; returns the
+    /// queue-assigned handle.  Rejected once shutdown has begun.
+    pub fn submit(&self, spec: JobSpec, client: u64) -> anyhow::Result<String> {
         let mut g = self.lock();
         anyhow::ensure!(g.shutdown == Shutdown::No, "daemon is shutting down");
         let idx = g.jobs.len();
@@ -116,6 +124,7 @@ impl JobQueue {
             handle: handle.clone(),
             spec,
             state: JobState::Queued,
+            client,
             subscribers: Vec::new(),
         });
         g.pending.push_back(idx);
@@ -161,6 +170,10 @@ impl JobQueue {
             Ok(report) => JobState::Done { report, cache },
             Err(error) => JobState::Failed { error, cache },
         };
+        let client = g.jobs[idx].client;
+        let t = g.client_totals.entry(client).or_insert((0, 0));
+        t.0 += cache.0;
+        t.1 += cache.1;
         g.running -= 1;
         let subs: Vec<mpsc::Sender<Json>> = std::mem::take(&mut g.jobs[idx].subscribers);
         drop(g);
@@ -249,6 +262,13 @@ impl JobQueue {
             .collect()
     }
 
+    /// Per-client `(client id, hits, misses)` eval-cache totals, summed
+    /// over each client's finished jobs, ascending client id.
+    pub fn client_totals(&self) -> Vec<(u64, u64, u64)> {
+        let g = self.lock();
+        g.client_totals.iter().map(|(&c, &(h, m))| (c, h, m)).collect()
+    }
+
     /// Counts of (queued, running, finished) jobs.
     pub fn load(&self) -> (usize, usize, usize) {
         let g = self.lock();
@@ -311,8 +331,8 @@ mod tests {
     #[test]
     fn fifo_order_and_states() {
         let q = JobQueue::new();
-        let a = q.submit(spec()).unwrap();
-        let b = q.submit(spec()).unwrap();
+        let a = q.submit(spec(), 0).unwrap();
+        let b = q.submit(spec(), 0).unwrap();
         assert_eq!((a.as_str(), b.as_str()), ("job-0", "job-1"));
         assert_eq!(q.load(), (2, 0, 0));
         let (i0, _) = q.next_job().unwrap();
@@ -330,10 +350,10 @@ mod tests {
     #[test]
     fn drain_shutdown_runs_queue_dry_then_stops() {
         let q = std::sync::Arc::new(JobQueue::new());
-        q.submit(spec()).unwrap();
-        q.submit(spec()).unwrap();
+        q.submit(spec(), 0).unwrap();
+        q.submit(spec(), 1).unwrap();
         q.begin_shutdown(true);
-        assert!(q.submit(spec()).is_err(), "submissions rejected after shutdown");
+        assert!(q.submit(spec(), 2).is_err(), "submissions rejected after shutdown");
         let (i, _) = q.next_job().unwrap();
         q.finish(i, Err("x".into()), (0, 0));
         let (i, _) = q.next_job().unwrap();
@@ -345,9 +365,9 @@ mod tests {
     #[test]
     fn immediate_shutdown_cancels_queued_jobs() {
         let q = JobQueue::new();
-        let a = q.submit(spec()).unwrap();
+        let a = q.submit(spec(), 0).unwrap();
         let (i, _) = q.next_job().unwrap();
-        let b = q.submit(spec()).unwrap();
+        let b = q.submit(spec(), 0).unwrap();
         q.begin_shutdown(false);
         assert!(q.next_job().is_none());
         assert_eq!(q.state_of(&b).unwrap().1, JobState::Cancelled);
@@ -362,7 +382,7 @@ mod tests {
     #[test]
     fn wait_terminal_blocks_until_finish() {
         let q = std::sync::Arc::new(JobQueue::new());
-        let h = q.submit(spec()).unwrap();
+        let h = q.submit(spec(), 0).unwrap();
         let (i, _) = q.next_job().unwrap();
         let q2 = q.clone();
         let h2 = h.clone();
@@ -378,7 +398,7 @@ mod tests {
     #[test]
     fn subscribers_get_live_and_replayed_events() {
         let q = JobQueue::new();
-        let h = q.submit(spec()).unwrap();
+        let h = q.submit(spec(), 0).unwrap();
         let (i, _) = q.next_job().unwrap();
         let (tx, rx) = mpsc::channel();
         q.subscribe(&h, tx).unwrap();
@@ -393,5 +413,24 @@ mod tests {
         let fin = rx2.recv().unwrap();
         assert_eq!(fin.req("event").unwrap().as_str(), Some("finished"));
         assert_eq!(fin.req("ok").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn client_totals_accumulate_per_submitter() {
+        let q = JobQueue::new();
+        assert!(q.client_totals().is_empty());
+        q.submit(spec(), 7).unwrap();
+        q.submit(spec(), 3).unwrap();
+        q.submit(spec(), 7).unwrap();
+        // Nothing counted until a job finishes.
+        assert!(q.client_totals().is_empty());
+        let (i0, _) = q.next_job().unwrap();
+        q.finish(i0, Ok(Json::Null), (2, 1));
+        let (i1, _) = q.next_job().unwrap();
+        q.finish(i1, Err("boom".into()), (0, 4));
+        let (i2, _) = q.next_job().unwrap();
+        q.finish(i2, Ok(Json::Null), (5, 0));
+        // Sorted by client id; failed jobs still count their delta.
+        assert_eq!(q.client_totals(), vec![(3, 0, 4), (7, 7, 1)]);
     }
 }

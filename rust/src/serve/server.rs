@@ -31,7 +31,7 @@
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
@@ -164,6 +164,10 @@ impl Server {
         );
         let warm_lock = Arc::new(Mutex::new(()));
         let conns = Arc::new(AtomicUsize::new(0));
+        // Monotone connection ids: each accepted client gets the next one,
+        // and every job it submits is tagged with it so `status` can report
+        // per-client cache hit/miss totals.
+        let next_client = AtomicU64::new(0);
         // Resolve the remote shard-host list once, then deal disjoint
         // buckets to the scheduler workers (single-session listeners must
         // not be shared — two pools on one host would serialize).
@@ -197,7 +201,8 @@ impl Server {
                 }
                 match self.listener.accept() {
                     Ok((stream, peer)) => {
-                        crate::debug!("serve: connection from {peer}");
+                        let client = next_client.fetch_add(1, Ordering::SeqCst);
+                        crate::debug!("serve: connection {client} from {peer}");
                         let queue = self.queue.clone();
                         let cache = self.cache.clone();
                         let conns = conns.clone();
@@ -208,7 +213,7 @@ impl Server {
                         // hostage — the grace loop below waits briefly for
                         // handlers still writing a response, then exits.
                         std::thread::spawn(move || {
-                            match handle_connection(stream, idle, &queue, &cache) {
+                            match handle_connection(stream, idle, client, &queue, &cache) {
                                 Ok(()) => {}
                                 // A stalled client is a clean drop, not a
                                 // failure — the daemon keeps serving.
@@ -356,6 +361,7 @@ fn worker_loop(
 fn handle_connection(
     stream: TcpStream,
     idle: Option<Duration>,
+    client: u64,
     queue: &Arc<JobQueue>,
     cache: &Arc<EvalCache>,
 ) -> anyhow::Result<()> {
@@ -380,7 +386,7 @@ fn handle_connection(
                 )?;
             }
             ServeRequest::Submit(spec) => {
-                let reply = match queue.submit(spec.clone()) {
+                let reply = match queue.submit(spec.clone(), client) {
                     Ok(handle) => wire::ok_json(vec![
                         ("job", handle.into()),
                         ("id", spec.id().into()),
@@ -418,6 +424,7 @@ fn handle_connection(
                         ("running", running.into()),
                         ("finished", finished.into()),
                         ("cache", wire::cache_json(hits, misses)),
+                        ("clients", wire::clients_json(&queue.client_totals())),
                         ("cache_entries", cache.len().into()),
                     ]),
                 )?;

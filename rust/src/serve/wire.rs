@@ -270,6 +270,24 @@ pub fn cache_json(hits: u64, misses: u64) -> Json {
     ])
 }
 
+/// Per-client cache accounting for the queue-wide `status` reply:
+/// `[{client, hits, misses}, ...]`, ascending connection id.  Same f64-exact
+/// masking rule as [`cache_json`].
+pub fn clients_json(totals: &[(u64, u64, u64)]) -> Json {
+    Json::Arr(
+        totals
+            .iter()
+            .map(|&(client, hits, misses)| {
+                Json::obj(vec![
+                    ("client", ((client & 0x1F_FFFF_FFFF_FFFF) as usize).into()),
+                    ("hits", ((hits & 0x1F_FFFF_FFFF_FFFF) as usize).into()),
+                    ("misses", ((misses & 0x1F_FFFF_FFFF_FFFF) as usize).into()),
+                ])
+            })
+            .collect(),
+    )
+}
+
 pub fn event_started(job: &str, id: &str) -> Json {
     Json::obj(vec![("event", "started".into()), ("job", job.into()), ("id", id.into())])
 }

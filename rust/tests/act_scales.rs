@@ -1,0 +1,176 @@
+//! Static activation-scale calibration (`--act-scales static`,
+//! DESIGN.md §Integer kernels):
+//!
+//! * **Determinism**: calibrating the same model twice — across separate
+//!   coordinator instances — reproduces byte-identical per-layer maxes,
+//!   the same fingerprint, and a byte-identical persisted table.
+//! * **Agreement**: static-scale evals track dynamic-scale evals within
+//!   the quantization error budget, and repeat static evals are
+//!   byte-deterministic.
+//! * **Cache separation**: the calibration fingerprint is part of the
+//!   eval-cache key — a static eval never aliases a dynamic one — while a
+//!   cached static eval stays byte-identical to an uncached one.
+//!
+//! The static-scale registry (`model_exec::set_act_scales`) is process
+//! global and keyed by model name, so every test here serializes on one
+//! lock and clears the registry before returning.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use autoq::coordinator::{act_table_fingerprint, ActScaleMode, Coordinator, JobSpec};
+use autoq::cost::Mode;
+use autoq::data::synth::{Split, SynthDataset};
+use autoq::runtime::reference::model_exec;
+use autoq::runtime::BackendKind;
+use autoq::serve::cache::CacheHandle;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+const MODEL: &str = "cif10";
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("autoq_acts_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Persist cheap trained params once so every coordinator in a test loads
+/// the same bytes instead of auto-pretraining 300 steps.
+fn seed_params(dir: &Path) {
+    let mut coord = Coordinator::open_with(dir, Some(BackendKind::Reference)).unwrap();
+    coord.run(&JobSpec::pretrain(MODEL).steps(3).build().unwrap()).unwrap();
+}
+
+fn open_static(dir: &Path) -> Coordinator {
+    let mut coord = Coordinator::open_with(dir, Some(BackendKind::Reference)).unwrap();
+    coord.set_act_scale_mode(ActScaleMode::Static);
+    coord
+}
+
+#[test]
+fn act_scale_mode_parses_and_defaults() {
+    assert_eq!(ActScaleMode::parse("static").unwrap(), ActScaleMode::Static);
+    assert_eq!(ActScaleMode::parse("dynamic").unwrap(), ActScaleMode::Dynamic);
+    assert!(ActScaleMode::parse("auto").is_err());
+    assert_eq!(ActScaleMode::Static.as_str(), "static");
+    assert_eq!(ActScaleMode::Dynamic.as_str(), "dynamic");
+    // A fresh coordinator defaults to dynamic ($AUTOQ_ACT_SCALES unset in
+    // the test environment); the setter overrides it.
+    let dir = temp_dir("mode");
+    let mut coord = Coordinator::open_with(&dir, Some(BackendKind::Reference)).unwrap();
+    assert_eq!(coord.act_scale_mode(), ActScaleMode::Dynamic);
+    coord.set_act_scale_mode(ActScaleMode::Static);
+    assert_eq!(coord.act_scale_mode(), ActScaleMode::Static);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn calibration_is_deterministic_across_loads() {
+    let _guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = temp_dir("determ");
+    seed_params(&dir);
+
+    let mut c1 = open_static(&dir);
+    c1.ensure_pretrained(MODEL).unwrap();
+    let t1 = model_exec::act_scales_for(MODEL).expect("static mode must install a table");
+    let f1 = std::fs::read(c1.act_scales_path(MODEL)).expect("table must persist");
+    assert_ne!(t1.fingerprint, 0, "0 is the reserved dynamic fingerprint");
+    assert_eq!(t1.fingerprint, act_table_fingerprint(MODEL, &t1.maxes));
+    assert!(t1.maxes.iter().all(|m| m.is_finite() && *m >= 0.0), "{:?}", t1.maxes);
+    assert!(t1.maxes.iter().any(|&m| m > 0.0), "calibration saw real activations");
+    drop(c1);
+    model_exec::set_act_scales(MODEL, None);
+
+    let mut c2 = open_static(&dir);
+    c2.ensure_pretrained(MODEL).unwrap();
+    let t2 = model_exec::act_scales_for(MODEL).expect("recalibrated");
+    let f2 = std::fs::read(c2.act_scales_path(MODEL)).unwrap();
+    assert_eq!(t1.maxes.len(), t2.maxes.len());
+    for (i, (a, b)) in t1.maxes.iter().zip(&t2.maxes).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "layer {i} max drifted between calibrations");
+    }
+    assert_eq!(t1.fingerprint, t2.fingerprint);
+    assert_eq!(f1, f2, "persisted calibration tables must be byte-identical");
+
+    model_exec::set_act_scales(MODEL, None);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn static_and_dynamic_evals_agree_within_tolerance() {
+    let _guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = temp_dir("agree");
+    seed_params(&dir);
+
+    let mut coord = open_static(&dir);
+    let runner = coord.fresh_runner(MODEL).unwrap();
+    assert_ne!(runner.calib_fingerprint(), 0, "static runner must carry its calibration fp");
+    let data = SynthDataset::new(42);
+    let wbits = vec![5u8; runner.meta.w_channels];
+    let abits = vec![4u8; runner.meta.a_channels];
+    let rt = coord.runtime();
+    let mut eval = |rt: &mut autoq::runtime::Runtime| {
+        runner.eval_config(rt, Mode::Quant, &wbits, &abits, &data, Split::Val, 1).unwrap()
+    };
+    let st1 = eval(&mut *rt);
+    let st2 = eval(&mut *rt);
+    assert_eq!(st1.accuracy.to_bits(), st2.accuracy.to_bits(), "static evals must repeat exactly");
+    assert_eq!(st1.loss.to_bits(), st2.loss.to_bits());
+
+    // Same runner with the table cleared falls back to dynamic scales.
+    model_exec::set_act_scales(MODEL, None);
+    let dy = eval(&mut *rt);
+    assert_eq!(st1.images, dy.images);
+    assert!(
+        (st1.accuracy - dy.accuracy).abs() <= 0.1,
+        "static accuracy {} vs dynamic {}",
+        st1.accuracy,
+        dy.accuracy
+    );
+    assert!(
+        (st1.loss - dy.loss).abs() <= 0.1 * (1.0 + dy.loss.abs()),
+        "static loss {} vs dynamic {}",
+        st1.loss,
+        dy.loss
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn static_eval_memoizes_and_never_aliases_dynamic() {
+    let _guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = temp_dir("alias");
+    seed_params(&dir);
+
+    let mut coord = open_static(&dir);
+    let mut runner = coord.fresh_runner(MODEL).unwrap();
+    let plain = coord.fresh_runner(MODEL).unwrap();
+    let handle = CacheHandle::private();
+    runner.set_eval_cache(Some(handle.clone()));
+    let data = SynthDataset::new(42);
+    let wbits = vec![5u8; runner.meta.w_channels];
+    let abits = vec![4u8; runner.meta.a_channels];
+    let rt = coord.runtime();
+
+    let cold = runner.eval_config(rt, Mode::Quant, &wbits, &abits, &data, Split::Val, 1).unwrap();
+    assert_eq!(handle.counts(), (0, 1), "first static eval must miss");
+    let warm = runner.eval_config(rt, Mode::Quant, &wbits, &abits, &data, Split::Val, 1).unwrap();
+    assert_eq!(handle.counts(), (1, 1), "identical static eval must hit");
+    assert_eq!(warm.accuracy.to_bits(), cold.accuracy.to_bits());
+    assert_eq!(warm.loss.to_bits(), cold.loss.to_bits());
+
+    // A cache hit returns exactly what an uncached static runner computes.
+    let bare = plain.eval_config(rt, Mode::Quant, &wbits, &abits, &data, Split::Val, 1).unwrap();
+    assert_eq!(bare.accuracy.to_bits(), warm.accuracy.to_bits());
+    assert_eq!(bare.loss.to_bits(), warm.loss.to_bits());
+
+    // Flip the same runner to dynamic (fingerprint 0, no table): the
+    // stored static entry must NOT be served for the dynamic eval.
+    runner.set_calib_fingerprint(0);
+    model_exec::set_act_scales(MODEL, None);
+    runner.eval_config(rt, Mode::Quant, &wbits, &abits, &data, Split::Val, 1).unwrap();
+    assert_eq!(handle.counts(), (1, 2), "dynamic eval must miss the static entry");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

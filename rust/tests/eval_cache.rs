@@ -37,6 +37,7 @@ fn key_encoding_is_pinned_and_process_independent() {
     let (wbits, abits): (&[u8], &[u8]) = (&[5, 4, 3], &[4, 4]);
     let (data_seed, data_noise) = (42u64, 0.85f32);
     let (split, n_batches, eval_batch, param_fp) = ("val", 2usize, 256usize, 77u64);
+    let calib_fp = 9u64;
 
     let mut bytes: Vec<u8> = Vec::new();
     let push_u64 = |bytes: &mut Vec<u8>, v: u64| bytes.extend_from_slice(&v.to_le_bytes());
@@ -59,6 +60,7 @@ fn key_encoding_is_pinned_and_process_independent() {
     push_u64(&mut bytes, n_batches as u64);
     push_u64(&mut bytes, eval_batch as u64);
     push_u64(&mut bytes, param_fp);
+    push_u64(&mut bytes, calib_fp);
 
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for b in bytes {
@@ -68,13 +70,13 @@ fn key_encoding_is_pinned_and_process_independent() {
 
     let key = eval_key(
         backend, model, mode, wbits, abits, data_seed, data_noise, split, n_batches,
-        eval_batch, param_fp,
+        eval_batch, param_fp, calib_fp,
     );
     assert_eq!(h, key, "encoding drifted from the documented canonical form");
     // And the derivation is stable call-to-call.
     let again = eval_key(
         backend, model, mode, wbits, abits, data_seed, data_noise, split, n_batches,
-        eval_batch, param_fp,
+        eval_batch, param_fp, calib_fp,
     );
     assert_eq!(key, again);
 }
@@ -84,17 +86,18 @@ fn key_encoding_is_pinned_and_process_independent() {
 /// params).
 #[test]
 fn any_field_change_invalidates_the_key() {
-    let base = || eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 77);
+    let base = || eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 77, 0);
     let variants: Vec<(&str, u64)> = vec![
-        ("backend", eval_key("shard", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 77)),
-        ("model", eval_key("reference", "res18", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 77)),
-        ("mode", eval_key("reference", "cif10", "binar", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 77)),
-        ("wbits", eval_key("reference", "cif10", "quant", &[6, 4], &[4], 42, 0.85, "val", 2, 256, 77)),
-        ("abits", eval_key("reference", "cif10", "quant", &[5, 4], &[3], 42, 0.85, "val", 2, 256, 77)),
-        ("data_seed", eval_key("reference", "cif10", "quant", &[5, 4], &[4], 7, 0.85, "val", 2, 256, 77)),
-        ("split", eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "test", 2, 256, 77)),
-        ("n_batches", eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 4, 256, 77)),
-        ("param_fp", eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 78)),
+        ("backend", eval_key("shard", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 77, 0)),
+        ("model", eval_key("reference", "res18", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 77, 0)),
+        ("mode", eval_key("reference", "cif10", "binar", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 77, 0)),
+        ("wbits", eval_key("reference", "cif10", "quant", &[6, 4], &[4], 42, 0.85, "val", 2, 256, 77, 0)),
+        ("abits", eval_key("reference", "cif10", "quant", &[5, 4], &[3], 42, 0.85, "val", 2, 256, 77, 0)),
+        ("data_seed", eval_key("reference", "cif10", "quant", &[5, 4], &[4], 7, 0.85, "val", 2, 256, 77, 0)),
+        ("split", eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "test", 2, 256, 77, 0)),
+        ("n_batches", eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 4, 256, 77, 0)),
+        ("param_fp", eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 78, 0)),
+        ("calib_fp", eval_key("reference", "cif10", "quant", &[5, 4], &[4], 42, 0.85, "val", 2, 256, 77, 9)),
     ];
     for (field, v) in variants {
         assert_ne!(v, base(), "changing {field} must change the key");

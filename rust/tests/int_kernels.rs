@@ -12,14 +12,20 @@
 //! * **Model level**: zoo-model `EvalResult`s under the int path agree
 //!   with the forced-f32 reference at wbits ∈ {2, 4, 8}, and repeat int
 //!   evals are byte-deterministic.
+//! * **Depthwise**: the per-channel int dwconv kernel obeys the same
+//!   tolerance contract with `k_eff = k²`, and monet (the dwconv zoo
+//!   model) agrees across the int and f32 paths end to end.
+//! * **SIMD identity**: the AVX2 integer inner loops are bit-identical to
+//!   the scalar ones — at the kernel layer and through a full model eval.
 
 use autoq::cost::Mode;
 use autoq::data::synth::{Split, SynthDataset};
 use autoq::models::{ModelRunner, ParamStore};
 use autoq::runtime::reference::kernels::{
-    qgemm_into, quantize_rows_i8, quantize_weights_alloc, set_int_kernels_enabled, wrep_with,
-    WRep,
+    qgemm_into, quantize_rows_i8, quantize_weights_alloc, set_int_kernels_enabled,
+    set_simd_int_enabled, wrep_with, WRep,
 };
+use autoq::runtime::reference::nn::{self, Dims};
 use autoq::runtime::reference::quantize::quantize_rows;
 use autoq::runtime::{BackendKind, Parallelism, Runtime};
 use autoq::util::rng::Rng;
@@ -188,8 +194,14 @@ fn int_gemm_respects_the_documented_tolerance() {
 /// than the re-quantization error budget); the repeat-eval assertion pins
 /// the int path's byte-determinism.  Two models keep the runtime sane
 /// while covering plain conv+fc (cif10) and squeeze blocks (sqnet).
+/// The model-level tests flip process-global kernel switches (int
+/// dispatch, SIMD); serialize them so a concurrent flip cannot change
+/// another test's dispatch mid-eval.
+static FLAG_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
 #[test]
 fn zoo_eval_agreement_across_int_and_f32_paths() {
+    let _flags = FLAG_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     let dir = std::env::temp_dir().join(format!("autoq_intk_{}", std::process::id()));
     std::fs::remove_dir_all(&dir).ok();
     let data = SynthDataset::new(42);
@@ -234,5 +246,228 @@ fn zoo_eval_agreement_across_int_and_f32_paths() {
             );
         }
     }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Int depthwise conv vs a sequential-f32 fake-quant oracle: the qgemm
+/// tolerance contract with `k_eff = k²` (the per-output tap count; edge
+/// pixels sum fewer taps and the bound is monotone in the count).
+/// Activation maxima are taken per (image, channel) — the granularity
+/// `quantize_nhwc_i8` actually scales at.
+#[test]
+fn int_dwconv_respects_the_documented_tolerance() {
+    let mut rng = Rng::new(0xDC0C);
+    // Directed shapes: 1×1 minimum, stride-2, non-square, k > h, a k=5
+    // window; then random ones with k ∈ {1, 3, 5}.
+    let mut shapes = vec![
+        (1usize, 1usize, 1usize, 1usize, 1usize, 1usize),
+        (1, 4, 4, 3, 3, 1),
+        (2, 5, 5, 2, 3, 2),
+        (1, 7, 3, 4, 3, 1),
+        (1, 2, 2, 1, 5, 1),
+        (1, 8, 8, 1, 5, 2),
+    ];
+    for _ in 0..40 {
+        shapes.push((
+            1 + rng.below(2),
+            1 + rng.below(8),
+            1 + rng.below(8),
+            1 + rng.below(6),
+            1 + 2 * rng.below(3),
+            1 + rng.below(2),
+        ));
+    }
+    for (ti, &(n, h, w, c, k, s)) in shapes.iter().enumerate() {
+        let d = Dims { n, h, w, c };
+        let mut x = vec![0.0f32; d.elems()];
+        rng.fill_normal_f32(&mut x, 1.0);
+        if c > 1 && rng.below(3) == 0 {
+            // All-zero (image, channel) slice → the scale-free grid branch.
+            let ch = rng.below(c);
+            for p in 0..n * h * w {
+                x[p * c + ch] = 0.0;
+            }
+        }
+        let mut wt = vec![0.0f32; k * k * c];
+        rng.fill_normal_f32(&mut wt, 0.7);
+        for low_bit in [false, true] {
+            let bits: Vec<f32> = (0..c)
+                .map(|_| {
+                    if rng.below(8) == 0 {
+                        return 0.0; // pruned channel
+                    }
+                    (1 + rng.below(if low_bit { 4 } else { 8 })) as f32
+                })
+                .collect();
+            let rep = wrep_with(true, &bits, false);
+            assert_ne!(rep, WRep::F32, "bits ≤ 8 must dispatch an int kernel");
+            // (k,k,1,cin) row-major is a (rest = k², cout = cin) weight —
+            // the shared WQ quantizer covers dwconv unchanged.
+            let (qw, sw) = quantize_weights_alloc(&wt, k * k, c, &bits, rep);
+            let (out, od) = nn::qdwconv2d(&x, d, &qw, &sw, rep == WRep::I4, k, s, None);
+            // Oracle: fake-quant weights back in (k,k,1,cin) layout through
+            // the sequential-f32 dwconv kernel.
+            let wfq_cm = fake_quant_channel_major(&wt, k * k, c, &bits);
+            let mut wfq_rm = vec![0.0f32; k * k * c];
+            for ch in 0..c {
+                for tap in 0..k * k {
+                    wfq_rm[tap * c + ch] = wfq_cm[ch * k * k + tap];
+                }
+            }
+            let (oref, od2) = nn::dwconv2d(&x, d, &wfq_rm, k, s);
+            assert_eq!(od, od2, "shape {ti}");
+            for ni in 0..n {
+                for ch in 0..c {
+                    let mut maxa = 0.0f64;
+                    for p in 0..h * w {
+                        maxa = maxa.max(x[(ni * h * w + p) * c + ch].abs() as f64);
+                    }
+                    let maxw = max_abs(&wfq_cm[ch * k * k..(ch + 1) * k * k]);
+                    let bound = tolerance_bound(k * k, maxa, maxw);
+                    for oy in 0..od.h {
+                        for ox in 0..od.w {
+                            let e = ((ni * od.h + oy) * od.w + ox) * c + ch;
+                            let diff = (out[e] as f64 - oref[e] as f64).abs();
+                            assert!(
+                                diff <= bound,
+                                "shape {ti} ({n},{h},{w},{c}) k{k} s{s} {rep:?} [{e}]: \
+                                 |{} - {}| = {diff} > {bound}",
+                                out[e],
+                                oref[e]
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// SIMD-on vs SIMD-off byte identity at the kernel layer: the AVX2 dots
+/// accumulate exactly in i32, so both int8 and nibble-packed int4 GEMMs
+/// must reproduce the scalar loops bit-for-bit at every shape (ragged
+/// tails included).  Trivially true where the SIMD path cannot engage —
+/// both runs take the scalar loop.
+#[test]
+fn simd_and_scalar_integer_kernels_are_bit_identical() {
+    let mut rng = Rng::new(0x51D);
+    for trial in 0..40 {
+        let m = 1 + rng.below(4);
+        let k = 1 + rng.below(200); // spans several 32-lane blocks + tails
+        let n = 1 + rng.below(8);
+        let mut a = vec![0.0f32; m * k];
+        let mut w = vec![0.0f32; k * n];
+        rng.fill_normal_f32(&mut a, 1.0);
+        rng.fill_normal_f32(&mut w, 0.7);
+        let bits8: Vec<f32> = (0..n).map(|_| (1 + rng.below(8)) as f32).collect();
+        let bits4: Vec<f32> = (0..n).map(|_| (1 + rng.below(4)) as f32).collect();
+        let (q8, s8) = quantize_weights_alloc(&w, k, n, &bits8, WRep::I8);
+        let (q4, s4) = quantize_weights_alloc(&w, k, n, &bits4, WRep::I4);
+        let mut qa = vec![0i8; m * k];
+        let mut sa = vec![0.0f32; m];
+        quantize_rows_i8(&a, m, k, &mut qa, &mut sa);
+        let mut run = |simd: bool| {
+            let prev = set_simd_int_enabled(simd);
+            let mut o8 = vec![f32::NAN; m * n];
+            let mut o4 = vec![f32::NAN; m * n];
+            qgemm_into(&mut o8, &qa, &sa, &q8, &s8, m, k, n, false);
+            qgemm_into(&mut o4, &qa, &sa, &q4, &s4, m, k, n, true);
+            set_simd_int_enabled(prev);
+            (o8, o4)
+        };
+        let (on8, on4) = run(true);
+        let (off8, off4) = run(false);
+        for (e, (x, y)) in on8.iter().zip(&off8).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "trial={trial} i8 ({m},{k},{n}) elem {e}");
+        }
+        for (e, (x, y)) in on4.iter().zip(&off4).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "trial={trial} i4 ({m},{k},{n}) elem {e}");
+        }
+    }
+}
+
+/// Depthwise layers on the int path at model level: monet (the only zoo
+/// model with dwconv blocks) must agree with the forced-f32 reference and
+/// stay byte-deterministic — this pins the plan engine and the tree walk
+/// dispatching int dwconv under the same shared `wrep` rule end to end.
+#[test]
+fn monet_dwconv_zoo_eval_agreement() {
+    let _flags = FLAG_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = std::env::temp_dir().join(format!("autoq_intdw_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let data = SynthDataset::new(42);
+    let mut rt =
+        Runtime::open_with_opts(&dir, BackendKind::Reference, Some(Parallelism::new(2))).unwrap();
+    let meta = rt.manifest.model("monet").unwrap().clone();
+    assert!(meta.layers.iter().any(|l| l.typ == "dwconv"), "monet must carry dwconv layers");
+    let params = ParamStore::init(&meta.params, &mut Rng::new(42));
+    let runner = ModelRunner::new(meta.clone(), params).unwrap();
+    let abits = vec![4u8; meta.a_channels];
+    for wb in [4u8, 8] {
+        let wbits = vec![wb; meta.w_channels];
+        let mut eval = |rt: &mut Runtime| {
+            runner.eval_config(rt, Mode::Quant, &wbits, &abits, &data, Split::Val, 1).unwrap()
+        };
+        let prev = set_int_kernels_enabled(false);
+        let reference = eval(&mut rt);
+        set_int_kernels_enabled(true);
+        let int1 = eval(&mut rt);
+        let int2 = eval(&mut rt);
+        set_int_kernels_enabled(prev);
+        assert_eq!(
+            int1.accuracy.to_bits(),
+            int2.accuracy.to_bits(),
+            "monet wb={wb}: int dwconv path must be deterministic"
+        );
+        assert_eq!(int1.loss.to_bits(), int2.loss.to_bits(), "monet wb={wb}");
+        assert_eq!(int1.images, reference.images, "monet wb={wb}");
+        assert!(
+            (int1.accuracy - reference.accuracy).abs() <= 0.1,
+            "monet wb={wb}: accuracy {} vs f32 {}",
+            int1.accuracy,
+            reference.accuracy
+        );
+        assert!(
+            (int1.loss - reference.loss).abs() <= 0.1 * (1.0 + reference.loss.abs()),
+            "monet wb={wb}: loss {} vs f32 {}",
+            int1.loss,
+            reference.loss
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// SIMD-on vs SIMD-off byte identity at model level: a full int-path zoo
+/// eval (monet covers conv, fc and dwconv layers) must not move a single
+/// bit when the SIMD dispatch flips.
+#[test]
+fn simd_toggle_preserves_eval_bytes() {
+    let _flags = FLAG_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = std::env::temp_dir().join(format!("autoq_simdtg_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let data = SynthDataset::new(42);
+    let mut rt =
+        Runtime::open_with_opts(&dir, BackendKind::Reference, Some(Parallelism::new(2))).unwrap();
+    let meta = rt.manifest.model("monet").unwrap().clone();
+    let params = ParamStore::init(&meta.params, &mut Rng::new(7));
+    let runner = ModelRunner::new(meta.clone(), params).unwrap();
+    let wbits = vec![5u8; meta.w_channels];
+    let abits = vec![4u8; meta.a_channels];
+    let mut eval = |rt: &mut Runtime| {
+        runner.eval_config(rt, Mode::Quant, &wbits, &abits, &data, Split::Val, 1).unwrap()
+    };
+    let prev_int = set_int_kernels_enabled(true);
+    let prev_simd = set_simd_int_enabled(true);
+    let on = eval(&mut rt);
+    set_simd_int_enabled(false);
+    let off = eval(&mut rt);
+    set_simd_int_enabled(prev_simd);
+    set_int_kernels_enabled(prev_int);
+    assert_eq!(
+        on.accuracy.to_bits(),
+        off.accuracy.to_bits(),
+        "SIMD toggle changed eval accuracy bits"
+    );
+    assert_eq!(on.loss.to_bits(), off.loss.to_bits(), "SIMD toggle changed eval loss bits");
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -392,7 +392,7 @@ fn stop_flag_shuts_the_daemon_down() {
     daemon.thread.join().unwrap().unwrap();
     assert!(daemon.queue.shutting_down());
     assert!(
-        daemon.queue.submit(quick_eval()).is_err(),
+        daemon.queue.submit(quick_eval(), 0).is_err(),
         "submissions must be rejected after a signal shutdown"
     );
     std::fs::remove_dir_all(&dir).ok();
