@@ -26,6 +26,7 @@ use std::path::PathBuf;
 
 use autoq::coordinator::{Coordinator, JobSpec};
 use autoq::cost::Mode;
+use autoq::search::Granularity;
 use autoq::data::synth::SynthDataset;
 use autoq::data::Split;
 use autoq::runtime::reference::kernels;
@@ -291,6 +292,69 @@ fn main() -> anyhow::Result<()> {
         "int-dwconv regression: {sdw_speedup:.2}x vs f32 (threshold {dw_min}x)"
     );
 
+    // Durable-checkpoint overhead: the same short search with snapshots
+    // off, then at the tightest cadence (a snapshot after every episode —
+    // real runs checkpoint far less often).  Full runs enforce the
+    // DESIGN.md budget: journaling costs <= CKPT_MAX_OVERHEAD of search
+    // wall-clock.  Smoke's single iteration only guards catastrophe (and
+    // both grades require the checkpointed report to stay byte-identical
+    // to the plain one — snapshots must never perturb results).
+    let spec = JobSpec::search(MODEL)
+        .granularity(Granularity::Network(4))
+        .episodes(if smoke { 2 } else { 6 })
+        .warmup(1)
+        .eval_batches(1)
+        .seed(11)
+        .build()?;
+    let canon = |j: &Json| {
+        let mut j = j.clone();
+        if let Json::Obj(m) = &mut j {
+            m.insert("secs".to_string(), Json::Num(0.0));
+        }
+        j.to_string()
+    };
+    let mut coord = Coordinator::open_with_opts(
+        &dir,
+        Some(BackendKind::Reference),
+        Some(Parallelism::new(2)),
+    )?;
+    let siters = if smoke { 1 } else { 3 };
+    coord.set_checkpoint_every(0);
+    let mut plain = None;
+    let rplain = bench("search checkpoint=off", warmup, siters, || {
+        plain = Some(coord.run(&spec).unwrap().to_json());
+    });
+    coord.set_checkpoint_every(1);
+    let mut ckpt = None;
+    let rckpt = bench("search checkpoint=1 ", warmup, siters, || {
+        ckpt = Some(coord.run(&spec).unwrap().to_json());
+    });
+    let ckpt_overhead = rckpt.min_s / rplain.min_s - 1.0;
+    println!("    -> checkpoint overhead {:.2}% of search wall-clock", ckpt_overhead * 100.0);
+    assert_eq!(
+        canon(&plain.expect("plain search ran")),
+        canon(&ckpt.expect("checkpointed search ran")),
+        "a checkpointed search changed its report — snapshots must be side-effect free"
+    );
+    const CKPT_MAX_OVERHEAD: f64 = 0.02;
+    if smoke {
+        anyhow::ensure!(
+            rckpt.min_s <= rplain.min_s * 2.0,
+            "checkpointing catastrophically slowed the smoke search \
+             ({:.3}s vs {:.3}s)",
+            rckpt.min_s,
+            rplain.min_s
+        );
+    } else {
+        anyhow::ensure!(
+            ckpt_overhead <= CKPT_MAX_OVERHEAD,
+            "journal overhead regression: {:.2}% of search wall-clock \
+             (budget {:.0}%)",
+            ckpt_overhead * 100.0,
+            CKPT_MAX_OVERHEAD * 100.0
+        );
+    }
+
     if let Some(path) = json_path {
         let doc = Json::obj(vec![
             ("bench", Json::Str("reference_eval".to_string())),
@@ -338,6 +402,15 @@ fn main() -> anyhow::Result<()> {
                     ("i8_simd_min_s", Json::from(r8_simd.min_s)),
                     ("i8_speedup", Json::from(simd_speedup)),
                     ("i8_threshold", Json::from(SIMD_INT8_MIN_SPEEDUP)),
+                ]),
+            ),
+            (
+                "checkpoint",
+                Json::obj(vec![
+                    ("plain_min_s", Json::from(rplain.min_s)),
+                    ("ckpt_min_s", Json::from(rckpt.min_s)),
+                    ("overhead", Json::from(ckpt_overhead)),
+                    ("threshold", Json::from(0.02)),
                 ]),
             ),
             (

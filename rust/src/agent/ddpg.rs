@@ -102,6 +102,39 @@ impl DdpgAgent {
         &self.state[0..6]
     }
 
+    /// Full network/optimizer state for byte-exact checkpointing: the 48
+    /// parameter/target/Adam tensors (in their fixed group order) plus the
+    /// Adam time step.  `restore_state` with these values resumes the
+    /// exact agent.
+    pub fn snapshot_state(&self) -> (&[Value], f32) {
+        (&self.state, self.t)
+    }
+
+    /// Restore from [`DdpgAgent::snapshot_state`] output.  The snapshot
+    /// must match this agent's architecture tensor-for-tensor — a config
+    /// change surfaces here as a structured error, never as silent shape
+    /// corruption.
+    pub fn restore_state(&mut self, state: Vec<Value>, t: f32) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            state.len() == self.state.len(),
+            "agent snapshot has {} tensor(s), expected {}",
+            state.len(),
+            self.state.len()
+        );
+        for (i, (new, old)) in state.iter().zip(self.state.iter()).enumerate() {
+            let (new, old) = (new.as_f32()?, old.as_f32()?);
+            anyhow::ensure!(
+                new.shape == old.shape,
+                "agent snapshot tensor {i} shape {:?} != expected {:?}",
+                new.shape,
+                old.shape
+            );
+        }
+        self.state = state;
+        self.t = t;
+        Ok(())
+    }
+
     /// Deterministic policy μ(s) for up to `act_batch` states in one
     /// executable call.  `states` is row-major (n, s_dim); n ≤ act_batch.
     pub fn act(&self, rt: &mut Runtime, states: &[f32], n: usize) -> anyhow::Result<Vec<f32>> {

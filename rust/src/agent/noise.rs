@@ -45,6 +45,12 @@ impl NoiseSchedule {
     pub fn episode(&self) -> usize {
         self.episode
     }
+
+    /// Restore the episode counter from a checkpoint (the schedule's only
+    /// mutable state; σ₀/warmup/decay are rebuilt from config).
+    pub fn set_episode(&mut self, episode: usize) {
+        self.episode = episode;
+    }
 }
 
 #[cfg(test)]

@@ -62,6 +62,40 @@ impl ReplayBuffer {
     pub fn iter(&self) -> impl Iterator<Item = &Transition> {
         self.buf.iter()
     }
+
+    /// Internal state for byte-exact checkpointing: the ring contents *in
+    /// storage order* (not insertion order), the next overwrite slot, and
+    /// the lifetime push counter.  `restore_parts` with exactly these
+    /// values resumes identical sampling behaviour.
+    pub fn raw_parts(&self) -> (&[Transition], usize, u64) {
+        (&self.buf, self.next, self.pushed)
+    }
+
+    /// Rebuild the ring from [`ReplayBuffer::raw_parts`] output.  The
+    /// capacity is kept from `self`; the snapshot must fit it and name a
+    /// valid overwrite slot.
+    pub fn restore_parts(
+        &mut self,
+        buf: Vec<Transition>,
+        next: usize,
+        pushed: u64,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            buf.len() <= self.capacity,
+            "replay snapshot holds {} transition(s), capacity is {}",
+            buf.len(),
+            self.capacity
+        );
+        anyhow::ensure!(
+            next < self.capacity,
+            "replay snapshot next slot {next} out of range for capacity {}",
+            self.capacity
+        );
+        self.buf = buf;
+        self.next = next;
+        self.pushed = pushed;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -103,6 +137,35 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&s| s), "all slots should be sampled");
+    }
+
+    #[test]
+    fn raw_parts_restore_resumes_identical_sampling() {
+        let mut rb = ReplayBuffer::new(4);
+        for i in 0..6 {
+            rb.push(tr(i as f32));
+        }
+        let (buf, next, pushed) = rb.raw_parts();
+        let (buf, next, pushed) = (buf.to_vec(), next, pushed);
+        let mut restored = ReplayBuffer::new(4);
+        restored.restore_parts(buf, next, pushed).unwrap();
+        assert_eq!(restored.pushed, 6);
+        // Same ring state ⇒ same samples and same future overwrites.
+        let (mut r1, mut r2) = (Rng::new(9), Rng::new(9));
+        let (mut o1, mut o2) = (Vec::new(), Vec::new());
+        rb.sample_into(&mut r1, &mut o1, 4);
+        restored.sample_into(&mut r2, &mut o2, 4);
+        assert_eq!(o1, o2);
+        rb.push(tr(6.0));
+        restored.push(tr(6.0));
+        assert_eq!(rb.iter().collect::<Vec<_>>(), restored.iter().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn restore_parts_rejects_bad_shapes() {
+        let mut rb = ReplayBuffer::new(2);
+        assert!(rb.restore_parts(vec![tr(0.0); 3], 0, 3).is_err());
+        assert!(rb.restore_parts(vec![tr(0.0)], 2, 1).is_err());
     }
 
     #[test]

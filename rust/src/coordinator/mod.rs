@@ -91,6 +91,21 @@ impl ActScaleMode {
     }
 }
 
+/// Resolve the default search checkpoint cadence from
+/// `$AUTOQ_CHECKPOINT_EVERY` (unset, empty or 0 = disabled).
+fn checkpoint_every_from_env() -> usize {
+    match std::env::var("AUTOQ_CHECKPOINT_EVERY").ok() {
+        Some(s) if !s.trim().is_empty() => match s.trim().parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => {
+                crate::warn_!("ignoring non-numeric AUTOQ_CHECKPOINT_EVERY={s:?}");
+                0
+            }
+        },
+        _ => 0,
+    }
+}
+
 /// Fingerprint of a calibration table (model name + exact f32 bit
 /// patterns of the per-layer maxes), keyed into the eval cache so static-
 /// and dynamic-scale evals never alias.  Never returns 0 — 0 is the
@@ -123,6 +138,11 @@ pub struct Coordinator {
     /// calibrates per-layer scales in [`Coordinator::ensure_pretrained`];
     /// set it before the first model loads.
     act_scales: ActScaleMode,
+    /// Durable-checkpoint cadence for search jobs (DESIGN.md §Durable
+    /// jobs): snapshot the full search state every N episodes to
+    /// `dir/checkpoints/<job-id>.journal` so a killed search resumes from
+    /// its last snapshot.  0 (the default) disables checkpointing.
+    checkpoint_every: usize,
 }
 
 impl Coordinator {
@@ -172,7 +192,24 @@ impl Coordinator {
             runners: HashMap::new(),
             eval_cache: None,
             act_scales: ActScaleMode::from_env(),
+            checkpoint_every: checkpoint_every_from_env(),
         })
+    }
+
+    /// Choose the search checkpoint cadence (mirrors `--checkpoint-every`;
+    /// 0 disables).  Overrides `$AUTOQ_CHECKPOINT_EVERY`.
+    pub fn set_checkpoint_every(&mut self, every: usize) {
+        self.checkpoint_every = every;
+    }
+
+    pub fn checkpoint_every(&self) -> usize {
+        self.checkpoint_every
+    }
+
+    /// Where a search job's durable checkpoint journal lives while the
+    /// job runs (removed on successful completion).
+    pub fn checkpoint_path(&self, spec: &JobSpec) -> PathBuf {
+        self.dir.join("checkpoints").join(format!("{}.journal", spec.id()))
     }
 
     /// Choose the activation-scale mode (mirrors `--act-scales`).  Call
@@ -391,6 +428,12 @@ impl Coordinator {
                 cfg.relabel = p.relabel;
                 if p.paper_scale {
                     cfg = cfg.paper_scale();
+                }
+                if self.checkpoint_every > 0 {
+                    cfg.checkpoint = Some(crate::search::Checkpoint {
+                        path: self.checkpoint_path(spec),
+                        every: self.checkpoint_every,
+                    });
                 }
                 let res = crate::search::run_search_with(
                     &mut self.rt,

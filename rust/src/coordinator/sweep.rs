@@ -28,6 +28,7 @@ use crate::coordinator::observer::LogObserver;
 use crate::coordinator::report::JobReport;
 use crate::coordinator::Coordinator;
 use crate::cost::Mode;
+use crate::journal::{fingerprint, DurableLog};
 use crate::runtime::{BackendKind, Parallelism, RuntimeOpts};
 use crate::search::{Granularity, Protocol, ProtocolKind};
 
@@ -90,6 +91,12 @@ pub struct Sweep {
     pub shard_hosts: Option<Vec<String>>,
     /// Shard wire encoding (`None` = `$AUTOQ_SHARD_ENCODING`, else binary).
     pub shard_encoding: Option<crate::runtime::shard::Encoding>,
+    /// Resume from `out_dir/sweep.journal` (`autoq sweep --resume`): cells
+    /// already journaled as done — with an unchanged spec fingerprint —
+    /// are skipped (their report files re-materialized from the journal if
+    /// missing), and only the remainder is scheduled.  A non-resume run
+    /// starts the journal fresh so stale cells can't leak across grids.
+    pub resume: bool,
 }
 
 impl Default for Sweep {
@@ -112,6 +119,7 @@ impl Default for Sweep {
             shard_workers: None,
             shard_hosts: None,
             shard_encoding: None,
+            resume: false,
         }
     }
 }
@@ -145,6 +153,9 @@ pub struct SweepResult {
     pub reports: Vec<JobReport>,
     /// (job id, error) for cells that failed.
     pub failures: Vec<(String, String)>,
+    /// (job id, report path) for cells skipped on `--resume` because the
+    /// journal already holds their finished report.
+    pub skipped: Vec<(String, PathBuf)>,
     pub secs: f64,
 }
 
@@ -209,6 +220,56 @@ impl Sweep {
             .unwrap_or_else(|| PathBuf::from("reports").join("sweep"));
         std::fs::create_dir_all(&out_dir)?;
 
+        // Durable sweep journal (DESIGN.md §Durable jobs): every finished
+        // cell is appended as a DONE record keyed by job id, fingerprinted
+        // over the full spec JSON, carrying the exact report bytes.  On
+        // `--resume` the journal is replayed and matching cells are
+        // skipped; cells whose spec changed re-run under the same id.
+        let journal_path = out_dir.join("sweep.journal");
+        let mut log = if self.resume {
+            DurableLog::open(&journal_path)?
+        } else {
+            DurableLog::fresh(&journal_path)?
+        };
+        let mut skipped: Vec<(String, PathBuf)> = Vec::new();
+        let mut pending: Vec<JobSpec> = Vec::new();
+        for spec in jobs {
+            let id = spec.id();
+            let fp = fingerprint(spec.to_json().to_string().as_bytes());
+            match log.recorded(&id, fp) {
+                Some(payload) => {
+                    // Re-materialize the report file if the crash window
+                    // (or a stray delete) lost it — the journal holds the
+                    // exact bytes the finished cell wrote.
+                    let path = out_dir.join(format!("{id}.json"));
+                    let stale = match std::fs::read(&path) {
+                        Ok(bytes) => bytes != payload,
+                        Err(_) => true,
+                    };
+                    if stale {
+                        std::fs::write(&path, payload)?;
+                        crate::info!("sweep: restored {} from journal", path.display());
+                    }
+                    crate::info!("sweep: cell {id} already done — skipping");
+                    skipped.push((id, path));
+                }
+                None => pending.push(spec),
+            }
+        }
+        let jobs = pending;
+        if jobs.is_empty() {
+            crate::info!(
+                "sweep: all {} cell(s) already journaled — nothing to run",
+                skipped.len()
+            );
+            return Ok(SweepResult {
+                reports: Vec::new(),
+                failures: Vec::new(),
+                skipped,
+                secs: t0.elapsed().as_secs_f64(),
+            });
+        }
+
         let workers = self.workers.max(1).min(jobs.len());
 
         // Resolve the remote host list once so the env is read exactly one
@@ -253,6 +314,11 @@ impl Sweep {
         // single-session listener.
         let host_parts = crate::runtime::shard::partition_hosts(&shard_hosts, workers);
         let (tx, rx) = mpsc::channel::<(usize, Result<JobReport, String>)>();
+        let mut slots: Vec<Option<Result<JobReport, String>>> =
+            (0..jobs.len()).map(|_| None).collect();
+        // Cells whose report file could not be written; kept out of the
+        // journal so a `--resume` re-runs them.
+        let mut write_failures: Vec<(String, String)> = Vec::new();
         std::thread::scope(|s| {
             for w in 0..workers {
                 let tx = tx.clone();
@@ -291,29 +357,41 @@ impl Sweep {
                     }
                 });
             }
-        });
-        drop(tx);
-
-        let mut slots: Vec<Option<Result<JobReport, String>>> =
-            (0..jobs.len()).map(|_| None).collect();
-        for (i, res) in rx {
-            slots[i] = Some(res);
-        }
-
-        let mut reports = Vec::new();
-        let mut failures = Vec::new();
-        for (i, slot) in slots.into_iter().enumerate() {
-            match slot {
-                Some(Ok(report)) => {
+            // Drain results on the scope's main thread *while workers run*:
+            // each finished cell is persisted the moment it lands — report
+            // file first, then the journal DONE record — so a killed sweep
+            // keeps everything completed before the kill and `--resume`
+            // re-runs only the rest.
+            drop(tx);
+            for (i, res) in rx {
+                if let Ok(report) = &res {
                     let path = out_dir.join(format!("{}.json", report.id()));
-                    match report.save(&path) {
-                        Ok(()) => crate::info!("wrote {}", path.display()),
+                    let body = report.to_json().to_string();
+                    match std::fs::write(&path, &body) {
+                        Ok(()) => {
+                            crate::info!("wrote {}", path.display());
+                            let fp =
+                                fingerprint(jobs[i].to_json().to_string().as_bytes());
+                            if let Err(e) =
+                                log.record_done(&report.id(), fp, body.as_bytes())
+                            {
+                                crate::warn_!("sweep journal append failed: {e:#}");
+                            }
+                        }
                         // Keep the in-memory result; record the broken write.
-                        Err(e) => failures
+                        Err(e) => write_failures
                             .push((report.id(), format!("report write failed: {e:#}"))),
                     }
-                    reports.push(report);
                 }
+                slots[i] = Some(res);
+            }
+        });
+
+        let mut reports = Vec::new();
+        let mut failures = write_failures;
+        for (i, slot) in slots.into_iter().enumerate() {
+            match slot {
+                Some(Ok(report)) => reports.push(report),
                 Some(Err(e)) => failures.push((jobs[i].id(), e)),
                 None => failures.push((
                     jobs[i].id(),
@@ -322,7 +400,7 @@ impl Sweep {
                 )),
             }
         }
-        Ok(SweepResult { reports, failures, secs: t0.elapsed().as_secs_f64() })
+        Ok(SweepResult { reports, failures, skipped, secs: t0.elapsed().as_secs_f64() })
     }
 }
 

@@ -1,0 +1,191 @@
+//! Length-checked little-endian byte codec for journal payloads.
+//!
+//! Snapshots must round-trip *byte-exactly* — floats are stored as their
+//! IEEE-754 bit patterns (the shard wire-codec convention), never as
+//! decimal text — so a resumed search replays the uninterrupted run
+//! bit-for-bit.  Readers fail with a structured error on truncation
+//! instead of panicking: a torn journal tail surfaces as a recoverable
+//! decode error, not a crash.
+
+/// Append-only payload builder.
+#[derive(Debug, Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> ByteWriter {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    /// f32 as its raw bit pattern (byte-exact round-trip).
+    pub fn put_f32(&mut self, v: f32) {
+        self.put_u32(v.to_bits());
+    }
+    /// f64 as its raw bit pattern (byte-exact round-trip).
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+    pub fn put_bool(&mut self, v: bool) {
+        self.put_u8(v as u8);
+    }
+    /// Length-prefixed raw bytes.
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+    /// Length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, v: &str) {
+        self.put_bytes(v.as_bytes());
+    }
+    /// Length-prefixed f32 slice as raw bit patterns.
+    pub fn put_f32s(&mut self, vs: &[f32]) {
+        self.put_u32(vs.len() as u32);
+        for v in vs {
+            self.put_f32(*v);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+    pub fn into_vec(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Cursor over a payload; every accessor checks bounds.
+#[derive(Debug)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.pos + n <= self.buf.len(),
+            "journal payload truncated: wanted {n} byte(s) at offset {}, have {}",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    pub fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn f32(&mut self) -> anyhow::Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+    pub fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    pub fn bool(&mut self) -> anyhow::Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+    pub fn bytes(&mut self) -> anyhow::Result<&'a [u8]> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+    pub fn str(&mut self) -> anyhow::Result<&'a str> {
+        Ok(std::str::from_utf8(self.bytes()?)?)
+    }
+    pub fn f32s(&mut self) -> anyhow::Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        // Sanity cap so a corrupt length cannot ask for terabytes.
+        anyhow::ensure!(n * 4 <= self.buf.len() - self.pos, "journal f32 run overruns payload");
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+    /// Assert the payload was consumed exactly (schema drift guard).
+    pub fn finish(self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.remaining() == 0, "journal payload has {} trailing byte(s)", self.remaining());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_all_types() {
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 3);
+        w.put_f32(-0.0);
+        w.put_f64(f64::NAN);
+        w.put_bool(true);
+        w.put_bytes(b"abc");
+        w.put_str("héllo");
+        w.put_f32s(&[1.5, -2.25, f32::INFINITY]);
+        let buf = w.into_vec();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.f64().unwrap().to_bits(), f64::NAN.to_bits());
+        assert!(r.bool().unwrap());
+        assert_eq!(r.bytes().unwrap(), b"abc");
+        assert_eq!(r.str().unwrap(), "héllo");
+        let fs = r.f32s().unwrap();
+        assert_eq!(fs.len(), 3);
+        assert_eq!(fs[0], 1.5);
+        assert_eq!(fs[2], f32::INFINITY);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut w = ByteWriter::new();
+        w.put_str("hello world");
+        let buf = w.into_vec();
+        let mut r = ByteReader::new(&buf[..buf.len() - 2]);
+        assert!(r.str().is_err());
+    }
+
+    #[test]
+    fn finish_rejects_trailing_bytes() {
+        let mut w = ByteWriter::new();
+        w.put_u32(1);
+        w.put_u8(9);
+        let buf = w.into_vec();
+        let mut r = ByteReader::new(&buf);
+        r.u32().unwrap();
+        assert!(r.finish().is_err());
+    }
+}

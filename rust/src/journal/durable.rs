@@ -1,0 +1,357 @@
+//! [`DurableLog`]: the shared "enumerate units → skip done → run → record"
+//! seam over the raw record log.
+//!
+//! Every run-to-completion loop in the system (sweep cells, search
+//! episodes, serve jobs, repro cells) reduces to the same shape: a set of
+//! deterministic units identified by a stable id and a config
+//! *fingerprint*; units whose recorded fingerprint matches are replayed
+//! from their journaled bytes, units that are missing or whose fingerprint
+//! changed are re-run and recorded.  [`DurableLog::run_unit`] is that
+//! control flow; the layers differ only in what a "unit" is and how its
+//! payload decodes.
+//!
+//! Replay semantics: later records win.  The done set keeps one entry per
+//! id (a re-run overwrites), snapshots keep the latest blob per tag, and
+//! extra records (e.g. disk-tier cache entries) replay in append order.
+//! [`DurableLog::compact`] rewrites the file down to exactly that surviving
+//! state — done entries, the newest snapshot per tag, extras deduplicated
+//! by their leading 8-byte key — via a temp file + atomic rename.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use super::codec::{ByteReader, ByteWriter};
+use super::log::{kind, Journal, Record};
+
+/// A completed unit: the config fingerprint it ran under and its recorded
+/// result bytes.
+#[derive(Debug, Clone)]
+pub struct DoneEntry {
+    pub fingerprint: u64,
+    pub payload: Vec<u8>,
+}
+
+#[derive(Debug)]
+pub struct DurableLog {
+    journal: Journal,
+    done: BTreeMap<String, DoneEntry>,
+    /// tag → (seq, blob); later records overwrite, so this is the newest.
+    snapshots: BTreeMap<String, (u64, Vec<u8>)>,
+    /// Raw records of non-done/snapshot kinds, in append order.
+    extras: Vec<(u8, Vec<u8>)>,
+    /// Unix seconds of the newest record (replayed or appended).
+    newest_ts: Option<u64>,
+}
+
+impl DurableLog {
+    /// Open for resume: replay the existing log (if any).
+    pub fn open(path: &Path) -> anyhow::Result<DurableLog> {
+        let (journal, records) = Journal::open(path)?;
+        let mut log = DurableLog {
+            journal,
+            done: BTreeMap::new(),
+            snapshots: BTreeMap::new(),
+            extras: Vec::new(),
+            newest_ts: None,
+        };
+        for rec in records {
+            log.replay(rec)?;
+        }
+        Ok(log)
+    }
+
+    /// Start fresh: discard any existing log at `path` first.
+    pub fn fresh(path: &Path) -> anyhow::Result<DurableLog> {
+        match std::fs::remove_file(path) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => return Err(e.into()),
+        }
+        DurableLog::open(path)
+    }
+
+    fn replay(&mut self, rec: Record) -> anyhow::Result<()> {
+        self.newest_ts = Some(self.newest_ts.unwrap_or(0).max(rec.ts));
+        match rec.kind {
+            kind::DONE => {
+                let mut r = ByteReader::new(&rec.payload);
+                let id = r.str()?.to_string();
+                let fingerprint = r.u64()?;
+                let payload = r.bytes()?.to_vec();
+                self.done.insert(id, DoneEntry { fingerprint, payload });
+            }
+            kind::SNAPSHOT => {
+                let mut r = ByteReader::new(&rec.payload);
+                let tag = r.str()?.to_string();
+                let seq = r.u64()?;
+                let blob = r.bytes()?.to_vec();
+                self.snapshots.insert(tag, (seq, blob));
+            }
+            other => self.extras.push((other, rec.payload)),
+        }
+        Ok(())
+    }
+
+    pub fn path(&self) -> &Path {
+        self.journal.path()
+    }
+
+    /// The recorded result for `id`, if it finished under the same
+    /// fingerprint (a changed fingerprint means the unit's config changed
+    /// — it must re-run).
+    pub fn recorded(&self, id: &str, fingerprint: u64) -> Option<&[u8]> {
+        self.done
+            .get(id)
+            .filter(|e| e.fingerprint == fingerprint)
+            .map(|e| e.payload.as_slice())
+    }
+
+    /// Record a completed unit (overwrites any previous entry for `id`).
+    pub fn record_done(&mut self, id: &str, fingerprint: u64, payload: &[u8]) -> anyhow::Result<()> {
+        let mut w = ByteWriter::new();
+        w.put_str(id);
+        w.put_u64(fingerprint);
+        w.put_bytes(payload);
+        let ts = self.journal.append(kind::DONE, &w.into_vec())?;
+        self.newest_ts = Some(self.newest_ts.unwrap_or(0).max(ts));
+        self.done
+            .insert(id.to_string(), DoneEntry { fingerprint, payload: payload.to_vec() });
+        Ok(())
+    }
+
+    /// The shared skip-done-or-run-and-record control flow.  Returns the
+    /// unit's result bytes and whether they were replayed from the journal.
+    pub fn run_unit<F>(
+        &mut self,
+        id: &str,
+        fingerprint: u64,
+        run: F,
+    ) -> anyhow::Result<(Vec<u8>, bool)>
+    where
+        F: FnOnce() -> anyhow::Result<Vec<u8>>,
+    {
+        if let Some(payload) = self.recorded(id, fingerprint) {
+            return Ok((payload.to_vec(), true));
+        }
+        let payload = run()?;
+        self.record_done(id, fingerprint, &payload)?;
+        Ok((payload, false))
+    }
+
+    pub fn done_len(&self) -> usize {
+        self.done.len()
+    }
+    pub fn done_ids(&self) -> impl Iterator<Item = &str> {
+        self.done.keys().map(String::as_str)
+    }
+
+    /// Every done entry as `(id, payload)`, ignoring fingerprints — for
+    /// callers that replay a whole journal (the serve job queue) rather
+    /// than skip-scan known ids.
+    pub fn done_entries(&self) -> impl Iterator<Item = (&str, &[u8])> {
+        self.done.iter().map(|(id, e)| (id.as_str(), e.payload.as_slice()))
+    }
+
+    /// Append a state snapshot for `tag`; `seq` is a monotone sequence
+    /// number (episode count) so readers can sanity-check ordering.
+    pub fn snapshot(&mut self, tag: &str, seq: u64, blob: &[u8]) -> anyhow::Result<()> {
+        let mut w = ByteWriter::new();
+        w.put_str(tag);
+        w.put_u64(seq);
+        w.put_bytes(blob);
+        let ts = self.journal.append(kind::SNAPSHOT, &w.into_vec())?;
+        self.newest_ts = Some(self.newest_ts.unwrap_or(0).max(ts));
+        self.snapshots.insert(tag.to_string(), (seq, blob.to_vec()));
+        Ok(())
+    }
+
+    /// The newest snapshot recorded for `tag`.
+    pub fn latest_snapshot(&self, tag: &str) -> Option<(u64, &[u8])> {
+        self.snapshots.get(tag).map(|(seq, blob)| (*seq, blob.as_slice()))
+    }
+
+    /// Append a raw record of a custom kind (payload convention: the first
+    /// 8 bytes are the record's dedup key — see [`DurableLog::compact`]).
+    pub fn append_extra(&mut self, kd: u8, payload: &[u8]) -> anyhow::Result<()> {
+        let ts = self.journal.append(kd, payload)?;
+        self.newest_ts = Some(self.newest_ts.unwrap_or(0).max(ts));
+        self.extras.push((kd, payload.to_vec()));
+        Ok(())
+    }
+
+    /// Replayed + appended raw records of `kd`, in order.
+    pub fn extras(&self, kd: u8) -> impl Iterator<Item = &[u8]> {
+        self.extras.iter().filter(move |(k, _)| *k == kd).map(|(_, p)| p.as_slice())
+    }
+    pub fn extras_len(&self) -> usize {
+        self.extras.len()
+    }
+
+    /// Seconds since the newest record, if any (status reporting).
+    pub fn age_secs(&self) -> Option<u64> {
+        let newest = self.newest_ts?;
+        let now = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        Some(now.saturating_sub(newest))
+    }
+
+    /// Current on-disk size in bytes.
+    pub fn len_bytes(&self) -> u64 {
+        self.journal.len_bytes()
+    }
+
+    /// Rewrite the log down to its surviving state: every done entry, the
+    /// newest snapshot per tag, and extras deduplicated by their leading
+    /// 8-byte key (later wins).  Temp file + rename, so a crash during
+    /// compaction leaves either the old or the new log intact.
+    pub fn compact(&mut self) -> anyhow::Result<()> {
+        let path: PathBuf = self.journal.path().to_path_buf();
+        let tmp = path.with_extension("journal.tmp");
+        std::fs::remove_file(&tmp).ok();
+        {
+            let (mut out, _) = Journal::open(&tmp)?;
+            for (id, e) in &self.done {
+                let mut w = ByteWriter::new();
+                w.put_str(id);
+                w.put_u64(e.fingerprint);
+                w.put_bytes(&e.payload);
+                out.append(kind::DONE, &w.into_vec())?;
+            }
+            for (tag, (seq, blob)) in &self.snapshots {
+                let mut w = ByteWriter::new();
+                w.put_str(tag);
+                w.put_u64(*seq);
+                w.put_bytes(blob);
+                out.append(kind::SNAPSHOT, &w.into_vec())?;
+            }
+            // Dedup extras by (kind, leading 8 bytes), keeping the last
+            // occurrence but preserving first-seen order.
+            let mut order: Vec<(u8, u64)> = Vec::new();
+            let mut latest: BTreeMap<(u8, u64), &[u8]> = BTreeMap::new();
+            for (k, p) in &self.extras {
+                let key = if p.len() >= 8 {
+                    u64::from_le_bytes(p[..8].try_into().unwrap())
+                } else {
+                    super::log::fingerprint(p)
+                };
+                if latest.insert((*k, key), p.as_slice()).is_none() {
+                    order.push((*k, key));
+                }
+            }
+            for ok in &order {
+                out.append(ok.0, latest[ok])?;
+            }
+        }
+        std::fs::rename(&tmp, &path)?;
+        // Reopen so the append handle points at the compacted file.
+        let compacted = DurableLog::open(&path)?;
+        *self = compacted;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("autoq_durable_{tag}_{}.journal", std::process::id()))
+    }
+
+    #[test]
+    fn run_unit_skips_done_and_reruns_changed_fingerprint() {
+        let p = tmp("run_unit");
+        std::fs::remove_file(&p).ok();
+        let mut runs = 0;
+        {
+            let mut log = DurableLog::fresh(&p).unwrap();
+            let (out, cached) = log
+                .run_unit("cell/a", 11, || {
+                    runs += 1;
+                    Ok(b"result-a".to_vec())
+                })
+                .unwrap();
+            assert_eq!(out, b"result-a");
+            assert!(!cached);
+        }
+        {
+            // Same fingerprint: replayed without running.
+            let mut log = DurableLog::open(&p).unwrap();
+            let (out, cached) = log
+                .run_unit("cell/a", 11, || {
+                    runs += 1;
+                    Ok(b"never".to_vec())
+                })
+                .unwrap();
+            assert_eq!(out, b"result-a");
+            assert!(cached);
+            // Changed fingerprint: re-runs and overwrites.
+            let (out, cached) = log
+                .run_unit("cell/a", 12, || {
+                    runs += 1;
+                    Ok(b"result-a2".to_vec())
+                })
+                .unwrap();
+            assert_eq!(out, b"result-a2");
+            assert!(!cached);
+        }
+        let log = DurableLog::open(&p).unwrap();
+        assert_eq!(log.recorded("cell/a", 12).unwrap(), b"result-a2");
+        assert_eq!(log.recorded("cell/a", 11), None);
+        assert_eq!(runs, 2);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn latest_snapshot_wins_across_reopen() {
+        let p = tmp("snap");
+        std::fs::remove_file(&p).ok();
+        {
+            let mut log = DurableLog::fresh(&p).unwrap();
+            log.snapshot("search", 2, b"old").unwrap();
+            log.snapshot("search", 4, b"new").unwrap();
+        }
+        let log = DurableLog::open(&p).unwrap();
+        let (seq, blob) = log.latest_snapshot("search").unwrap();
+        assert_eq!(seq, 4);
+        assert_eq!(blob, b"new");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn compact_keeps_state_and_shrinks() {
+        let p = tmp("compact");
+        std::fs::remove_file(&p).ok();
+        let mut log = DurableLog::fresh(&p).unwrap();
+        for i in 0..20u64 {
+            // 20 snapshots for one tag: only the last survives compaction.
+            log.snapshot("search", i, &vec![7u8; 256]).unwrap();
+        }
+        log.record_done("cell/a", 1, b"ra").unwrap();
+        log.record_done("cell/b", 2, b"rb").unwrap();
+        // Two extras with the same leading key: later wins.
+        let mut e1 = 99u64.to_le_bytes().to_vec();
+        e1.extend_from_slice(b"old");
+        let mut e2 = 99u64.to_le_bytes().to_vec();
+        e2.extend_from_slice(b"new");
+        log.append_extra(kind::CACHE, &e1).unwrap();
+        log.append_extra(kind::CACHE, &e2).unwrap();
+        let before = log.len_bytes();
+        log.compact().unwrap();
+        assert!(log.len_bytes() < before);
+        assert_eq!(log.latest_snapshot("search").unwrap().0, 19);
+        assert_eq!(log.recorded("cell/a", 1).unwrap(), b"ra");
+        assert_eq!(log.recorded("cell/b", 2).unwrap(), b"rb");
+        let extras: Vec<&[u8]> = log.extras(kind::CACHE).collect();
+        assert_eq!(extras.len(), 1);
+        assert!(extras[0].ends_with(b"new"));
+        // And the compacted file replays identically.
+        let re = DurableLog::open(&p).unwrap();
+        assert_eq!(re.done_len(), 2);
+        assert_eq!(re.latest_snapshot("search").unwrap().0, 19);
+        assert_eq!(re.extras(kind::CACHE).count(), 1);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,268 @@
+//! The append-only record log under every durable surface.
+//!
+//! File layout (all integers little-endian):
+//!
+//! ```text
+//!   magic  "AUTOQJL1"                                     (8 bytes)
+//!   record [ len: u32 | kind: u8 | ts: u64 | crc: u64 | payload: len bytes ]
+//!   record …
+//! ```
+//!
+//! `ts` is unix seconds at append time (status reporting only — payloads
+//! never contain wall-clock, so replayed results stay byte-identical);
+//! `crc` is FNV-1a 64 over the kind byte, the ts bytes and the payload.
+//! Appends go straight to the file descriptor, so every record that
+//! `append` returned `Ok` for survives a SIGKILL of this process (page
+//! cache; power-loss durability would need fsync, which the deterministic
+//! replay story doesn't require — a lost tail is just re-run work).
+//!
+//! `open` replays the log and *truncates a torn or corrupt tail* at the
+//! last good record: a crash mid-append costs exactly the record being
+//! written, never the log.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// Journal file magic (8 bytes; the trailing `1` is the format version).
+pub const MAGIC: &[u8; 8] = b"AUTOQJL1";
+
+/// Per-record header size: len u32 + kind u8 + ts u64 + crc u64.
+const HEADER: usize = 4 + 1 + 8 + 8;
+
+/// Corruption guard: a valid record never exceeds this (a search snapshot
+/// with four full replay buffers is a few MB).
+const MAX_RECORD: usize = 1 << 30;
+
+/// Record kinds.  Payload schemas live with their writers (see
+/// [`super::DurableLog`] and `serve::cache`).
+pub mod kind {
+    /// A completed unit of work: `str id | u64 fingerprint | bytes result`.
+    pub const DONE: u8 = 1;
+    /// A resumable state snapshot: `str tag | u64 seq | bytes blob`.
+    pub const SNAPSHOT: u8 = 2;
+    /// A disk-tier eval-cache entry (see `serve::cache` for the schema).
+    pub const CACHE: u8 = 3;
+}
+
+/// FNV-1a 64 over a byte slice, continuing from `h` (seed with
+/// [`FNV_OFFSET`]).
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+pub fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Convenience: FNV-1a 64 of one buffer from the standard offset.
+pub fn fingerprint(bytes: &[u8]) -> u64 {
+    fnv1a(FNV_OFFSET, bytes)
+}
+
+fn record_crc(kind: u8, ts: u64, payload: &[u8]) -> u64 {
+    let h = fnv1a(FNV_OFFSET, &[kind]);
+    let h = fnv1a(h, &ts.to_le_bytes());
+    fnv1a(h, payload)
+}
+
+/// One replayed record.
+#[derive(Debug, Clone)]
+pub struct Record {
+    pub kind: u8,
+    /// Unix seconds at append time.
+    pub ts: u64,
+    pub payload: Vec<u8>,
+}
+
+/// An open journal positioned for appends.
+#[derive(Debug)]
+pub struct Journal {
+    path: PathBuf,
+    file: File,
+    /// Byte length of the valid prefix (== file length after open).
+    end: u64,
+}
+
+impl Journal {
+    /// Open (creating if absent), replay every intact record, and truncate
+    /// any torn/corrupt tail.  A file that exists but does not start with
+    /// [`MAGIC`] is rejected — that is somebody else's file, not a tail to
+    /// silently eat.
+    pub fn open(path: &Path) -> anyhow::Result<(Journal, Vec<Record>)> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut file = OpenOptions::new().read(true).write(true).create(true).open(path)?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)?;
+        let mut records = Vec::new();
+        let good;
+        if bytes.is_empty() {
+            file.write_all(MAGIC)?;
+            good = MAGIC.len() as u64;
+        } else {
+            anyhow::ensure!(
+                bytes.len() >= MAGIC.len() && &bytes[..MAGIC.len()] == MAGIC,
+                "{} exists but is not an autoq journal (bad magic)",
+                path.display()
+            );
+            let mut pos = MAGIC.len();
+            loop {
+                if pos == bytes.len() {
+                    break;
+                }
+                if pos + HEADER > bytes.len() {
+                    break; // torn header
+                }
+                let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+                let kd = bytes[pos + 4];
+                let ts = u64::from_le_bytes(bytes[pos + 5..pos + 13].try_into().unwrap());
+                let crc = u64::from_le_bytes(bytes[pos + 13..pos + 21].try_into().unwrap());
+                if len > MAX_RECORD || pos + HEADER + len > bytes.len() {
+                    break; // torn payload
+                }
+                let payload = &bytes[pos + HEADER..pos + HEADER + len];
+                if record_crc(kd, ts, payload) != crc {
+                    break; // corrupt record
+                }
+                records.push(Record { kind: kd, ts, payload: payload.to_vec() });
+                pos += HEADER + len;
+            }
+            good = pos as u64;
+            if (pos) < bytes.len() {
+                crate::warn_!(
+                    "journal {}: dropping {} torn/corrupt tail byte(s) after {} intact record(s)",
+                    path.display(),
+                    bytes.len() - pos,
+                    records.len()
+                );
+                file.set_len(good)?;
+            }
+        }
+        file.seek(SeekFrom::Start(good))?;
+        Ok((Journal { path: path.to_path_buf(), file, end: good }, records))
+    }
+
+    /// Append one record and hand it to the OS before returning.
+    pub fn append(&mut self, kind: u8, payload: &[u8]) -> anyhow::Result<u64> {
+        anyhow::ensure!(payload.len() <= MAX_RECORD, "journal record too large");
+        let ts = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let mut rec = Vec::with_capacity(HEADER + payload.len());
+        rec.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        rec.push(kind);
+        rec.extend_from_slice(&ts.to_le_bytes());
+        rec.extend_from_slice(&record_crc(kind, ts, payload).to_le_bytes());
+        rec.extend_from_slice(payload);
+        self.file.write_all(&rec)?;
+        self.end += rec.len() as u64;
+        Ok(ts)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Bytes in the valid prefix (grows with every append).
+    pub fn len_bytes(&self) -> u64 {
+        self.end
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("autoq_journal_{tag}_{}.journal", std::process::id()))
+    }
+
+    #[test]
+    fn append_then_replay() {
+        let p = tmp("roundtrip");
+        std::fs::remove_file(&p).ok();
+        {
+            let (mut j, recs) = Journal::open(&p).unwrap();
+            assert!(recs.is_empty());
+            j.append(kind::DONE, b"alpha").unwrap();
+            j.append(kind::SNAPSHOT, b"beta").unwrap();
+        }
+        let (_, recs) = Journal::open(&p).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].kind, kind::DONE);
+        assert_eq!(recs[0].payload, b"alpha");
+        assert_eq!(recs[1].kind, kind::SNAPSHOT);
+        assert_eq!(recs[1].payload, b"beta");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_truncated() {
+        let p = tmp("torn");
+        std::fs::remove_file(&p).ok();
+        {
+            let (mut j, _) = Journal::open(&p).unwrap();
+            j.append(kind::DONE, b"keep me").unwrap();
+        }
+        // Simulate a crash mid-append: a half-written header.
+        {
+            let mut f = OpenOptions::new().append(true).open(&p).unwrap();
+            f.write_all(&[0x99, 0x00, 0x00]).unwrap();
+        }
+        let before = std::fs::metadata(&p).unwrap().len();
+        let (j, recs) = Journal::open(&p).unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].payload, b"keep me");
+        assert!(std::fs::metadata(&p).unwrap().len() < before);
+        assert_eq!(j.len_bytes(), std::fs::metadata(&p).unwrap().len());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn corrupt_record_drops_it_and_everything_after() {
+        let p = tmp("corrupt");
+        std::fs::remove_file(&p).ok();
+        let second_start;
+        {
+            let (mut j, _) = Journal::open(&p).unwrap();
+            j.append(kind::DONE, b"first").unwrap();
+            second_start = j.len_bytes();
+            j.append(kind::DONE, b"second").unwrap();
+            j.append(kind::DONE, b"third").unwrap();
+        }
+        // Flip one payload byte of the middle record: it and the (intact)
+        // record after it are both dropped — replay never skips over a bad
+        // record, it stops at it.
+        {
+            let mut f = OpenOptions::new().read(true).write(true).open(&p).unwrap();
+            f.seek(SeekFrom::Start(second_start + HEADER as u64)).unwrap();
+            f.write_all(b"X").unwrap();
+        }
+        let (_, recs) = Journal::open(&p).unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].payload, b"first");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn foreign_file_rejected() {
+        let p = tmp("foreign");
+        std::fs::write(&p, b"definitely not a journal").unwrap();
+        assert!(Journal::open(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn fnv_matches_known_vector() {
+        // FNV-1a 64 of "a" is a published test vector.
+        assert_eq!(fingerprint(b"a"), 0xaf63dc4c8601ec8c);
+    }
+}

@@ -1,0 +1,31 @@
+//! Durable job journal: crash-safe checkpoint/resume for every
+//! run-to-completion loop (DESIGN.md §Durable jobs).
+//!
+//! Three layers:
+//!
+//! - [`log`] — the append-only, length-prefixed, checksummed record file.
+//!   A SIGKILL mid-append costs exactly the torn record: `open` truncates
+//!   the tail at the last intact checksum and replays the rest.
+//! - [`codec`] — the byte codec payloads are written in.  Floats travel as
+//!   IEEE-754 bit patterns so snapshots restore *byte-exactly*.
+//! - [`DurableLog`] — the shared "enumerate units → skip done → run →
+//!   record" control flow: a done set keyed by unit id + config
+//!   fingerprint (cheap to scan on startup, cheap to diff against a
+//!   changed grid), latest-wins state snapshots for mid-unit resume, and
+//!   a compaction pass that rewrites the file down to surviving state.
+//!
+//! Consumers: `coordinator::Sweep` (skip journaled cells, `--resume`),
+//! `search::run_search_with` (episode checkpoints via
+//! `search::checkpoint`), the serve daemon (job journal + disk-tier eval
+//! cache), and `repro` config caching.  The determinism contract is
+//! pinned across all of them: a resumed run produces byte-identical
+//! results to an uninterrupted one (modulo the wall-clock `secs` field,
+//! exactly as the existing byte-identity tests already treat it).
+
+pub mod codec;
+pub mod durable;
+pub mod log;
+
+pub use codec::{ByteReader, ByteWriter};
+pub use durable::{DoneEntry, DurableLog};
+pub use log::{fingerprint, fnv1a, Journal, Record, MAGIC};

@@ -16,6 +16,7 @@ pub mod baselines;
 pub mod coordinator;
 pub mod cost;
 pub mod data;
+pub mod journal;
 pub mod models;
 pub mod quant;
 pub mod repro;

@@ -50,6 +50,24 @@ const ACT_SCALES_HELP: &str = "activation quantization scales static|dynamic —
      deterministic calibration pass and reuses one scale per layer (default: $AUTOQ_ACT_SCALES, \
      else dynamic per-row scales)";
 
+/// Shared `--checkpoint-every` option help (empty = env, else off).
+const CHECKPOINT_HELP: &str = "snapshot the full search state to a durable journal every N \
+     episodes so a killed run resumes from its last snapshot; 0 disables (default: \
+     $AUTOQ_CHECKPOINT_EVERY, else 0)";
+
+/// Apply the shared `--checkpoint-every` option to an opened coordinator
+/// (empty string = keep the env-resolved cadence).
+fn apply_checkpoint_every(a: &Args, coord: &mut Coordinator) -> anyhow::Result<()> {
+    let s = a.get("checkpoint-every");
+    if !s.is_empty() {
+        coord.set_checkpoint_every(
+            s.parse::<usize>()
+                .map_err(|_| UsageError(format!("--checkpoint-every wants a number, got {s:?}")))?,
+        );
+    }
+    Ok(())
+}
+
 /// Apply the shared `--act-scales` option to an opened coordinator (empty
 /// string = keep the env-resolved mode).  Must run before the first model
 /// load so calibration happens during `ensure_pretrained`.
@@ -260,6 +278,7 @@ fn cmd_search(rest: &[String]) -> anyhow::Result<()> {
         .opt("shard-hosts", "", SHARD_HOSTS_HELP)
         .opt("shard-encoding", "", SHARD_ENCODING_HELP)
         .opt("act-scales", "", ACT_SCALES_HELP)
+        .opt("checkpoint-every", "", CHECKPOINT_HELP)
         .flag("paper-scale", "use the paper's 400-episode schedule")
         .flag("no-relabel", "disable HIRO goal relabeling (ablation)")
         .parse(rest)?;
@@ -282,6 +301,7 @@ fn cmd_search(rest: &[String]) -> anyhow::Result<()> {
     }
     let mut coord = open_coord(&a)?;
     apply_act_scales(&a, &mut coord)?;
+    apply_checkpoint_every(&a, &mut coord)?;
     let report = coord.run(&builder.build()?)?;
     let JobOutcome::Search { best, history } = &report.outcome else {
         anyhow::bail!("search job returned an unexpected report kind");
@@ -323,6 +343,10 @@ fn cmd_sweep(rest: &[String]) -> anyhow::Result<()> {
         .opt("shard-encoding", "", SHARD_ENCODING_HELP)
         .flag("paper-scale", "use the paper's 400-episode schedule")
         .flag("no-relabel", "disable HIRO goal relabeling (ablation)")
+        .flag(
+            "resume",
+            "skip cells already journaled as done in out-dir/sweep.journal and run only the rest",
+        )
         .parse(rest)?;
     let target_bits = a.get_f64("target-bits")?;
     let sweep = Sweep {
@@ -349,9 +373,15 @@ fn cmd_sweep(rest: &[String]) -> anyhow::Result<()> {
         shard_workers: shard_workers_arg(&a)?,
         shard_hosts: shard_hosts_arg(&a)?,
         shard_encoding: shard_encoding_arg(&a)?,
+        resume: a.get_bool("resume"),
     };
     let daemon = a.get("daemon");
     if !daemon.is_empty() {
+        anyhow::ensure!(
+            !sweep.resume,
+            "--resume is local-journal based and not supported with --daemon \
+             (the daemon's eval cache already makes repeats cheap)"
+        );
         // Same grid, same ids, same report bytes — but evaluated by the
         // daemon's warm workers and shared eval cache.
         let result = run_sweep_via_daemon(&daemon, &sweep)?;
@@ -393,10 +423,14 @@ fn cmd_sweep(rest: &[String]) -> anyhow::Result<()> {
             );
         }
     }
+    for (id, path) in &result.skipped {
+        println!("{id}  already done  ({})", path.display());
+    }
     println!(
-        "{} job(s) completed in {:.1}s; {} failure(s); reports under {}",
+        "{} job(s) completed in {:.1}s; {} skipped (journaled), {} failure(s); reports under {}",
         result.reports.len(),
         result.secs,
+        result.skipped.len(),
         result.failures.len(),
         a.get("out-dir")
     );
@@ -668,6 +702,28 @@ fn cmd_status(rest: &[String]) -> anyhow::Result<()> {
                 row.get("hits").and_then(Json::as_f64).unwrap_or(0.0) as u64,
                 row.get("misses").and_then(Json::as_f64).unwrap_or(0.0) as u64,
             );
+        }
+        // Durability: where the daemon's journals live and how fresh they
+        // are (absent on daemons running with durability degraded).
+        if let Some(d) = reply.get("durability") {
+            if let Some(path) = d.get("jobs_journal").and_then(Json::as_str) {
+                let n = d.get("jobs_journaled").and_then(Json::as_usize).unwrap_or(0);
+                let age = d
+                    .get("jobs_journal_age_secs")
+                    .and_then(Json::as_usize)
+                    .map(|s| format!(", newest record {s}s old"))
+                    .unwrap_or_default();
+                println!("job journal: {path} ({n} job(s){age})");
+            }
+            if let Some(path) = d.get("disk_cache").and_then(Json::as_str) {
+                let n = d.get("disk_cache_entries").and_then(Json::as_usize).unwrap_or(0);
+                let age = d
+                    .get("disk_cache_age_secs")
+                    .and_then(Json::as_usize)
+                    .map(|s| format!(", newest record {s}s old"))
+                    .unwrap_or_default();
+                println!("disk cache: {path} ({n} entr(ies){age})");
+            }
         }
     } else {
         print_job_row(&client.status(Some(&job))?)?;

@@ -7,6 +7,7 @@ use std::path::{Path, PathBuf};
 use crate::coordinator::{Coordinator, JobOutcome, JobSpec};
 use crate::cost::Mode;
 use crate::data::synth::SynthDataset;
+use crate::journal::{fingerprint, DurableLog};
 use crate::models::ModelRunner;
 use crate::quant::{load_config, save_config, SavedConfig};
 use crate::runtime::{BackendKind, Parallelism};
@@ -105,9 +106,25 @@ fn cache_key(model: &str, mode: Mode, protocol: &Protocol, gran: Granularity) ->
     ))
 }
 
+/// The repro cells' journal, next to the config files it indexes.  Unlike
+/// the bare `key.exists()` check, journal entries carry the search spec's
+/// fingerprint, so a cell whose knobs changed (episodes, seed, …) re-runs
+/// instead of silently reusing a config searched under different settings.
+fn repro_journal() -> Option<DurableLog> {
+    let path = reports_dir().join("configs").join("repro.journal");
+    match DurableLog::open(&path) {
+        Ok(log) => Some(log),
+        Err(e) => {
+            crate::warn_!("repro journal unavailable ({e:#}); cells will not checkpoint");
+            None
+        }
+    }
+}
+
 /// Search one (model, mode, protocol, granularity) cell through the
 /// coordinator job API, or return the cached best config from a previous
-/// repro run.
+/// repro run — either a journaled cell whose spec fingerprint still
+/// matches, or a legacy pre-journal config file.
 pub fn search_or_cached(
     c: &mut Coordinator,
     model: &str,
@@ -117,10 +134,6 @@ pub fn search_or_cached(
     ctx: &ReproCtx,
 ) -> anyhow::Result<SavedConfig> {
     let key = cache_key(model, mode, &protocol, gran);
-    if key.exists() && !ctx.fresh {
-        crate::debug!("cache hit: {}", key.display());
-        return load_config(&key);
-    }
     let spec = JobSpec::search(model)
         .mode(mode)
         .protocol(protocol)
@@ -131,16 +144,46 @@ pub fn search_or_cached(
         .seed(ctx.seed)
         .paper_scale(ctx.paper_scale)
         .build()?;
+    let id = key.file_name().and_then(|s| s.to_str()).unwrap_or("cell").to_string();
+    let fp = fingerprint(spec.to_json().to_string().as_bytes());
+    let mut log = repro_journal();
+    if !ctx.fresh {
+        if let Some(payload) = log.as_ref().and_then(|l| l.recorded(&id, fp)) {
+            // Journaled under the same spec: re-materialize the config file
+            // if it was deleted or diverged, then load it.
+            if std::fs::read(&key).ok().as_deref() != Some(payload) {
+                std::fs::write(&key, payload)?;
+            }
+            crate::debug!("repro journal hit: {}", key.display());
+            return load_config(&key);
+        }
+        if key.exists() {
+            // Legacy pre-journal cache entry: reuse as before (no
+            // fingerprint to check against).
+            crate::debug!("cache hit: {}", key.display());
+            return load_config(&key);
+        }
+    }
     if let Some(addr) = &ctx.daemon {
         let report = crate::serve::run_job_via_daemon(addr, &spec)?;
         save_config_from_report(&key, model, mode, &report)?;
-        return load_config(&key);
+    } else {
+        let report = c.run(&spec)?;
+        let JobOutcome::Search { best, .. } = &report.outcome else {
+            anyhow::bail!("search job returned a non-search report");
+        };
+        save_config(&key, model, mode, best)?;
     }
-    let report = c.run(&spec)?;
-    let JobOutcome::Search { best, .. } = &report.outcome else {
-        anyhow::bail!("search job returned a non-search report");
-    };
-    save_config(&key, model, mode, best)?;
+    if let Some(log) = log.as_mut() {
+        match std::fs::read(&key) {
+            Ok(payload) => {
+                if let Err(e) = log.record_done(&id, fp, &payload) {
+                    crate::warn_!("repro journal append failed: {e:#}");
+                }
+            }
+            Err(e) => crate::warn_!("cannot journal repro cell {id}: {e:#}"),
+        }
+    }
     load_config(&key)
 }
 

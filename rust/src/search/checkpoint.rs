@@ -1,0 +1,369 @@
+//! Episode-loop checkpointing: byte-exact snapshot/restore of the whole
+//! search state (agent nets, Adam momenta, replay buffers, RNG stream,
+//! noise schedule, best outcome and learning-curve history) through the
+//! journal substrate.
+//!
+//! The determinism contract: restoring a snapshot taken after episode *k*
+//! and running episodes *k+1..n* produces the **same final `SearchResult`
+//! bytes** as an uninterrupted *0..n* run (modulo wall-clock `secs`).
+//! Everything the loop mutates is captured here; everything else
+//! (`StateBuilder`, weight variances, `EpisodeConfig`) is rebuilt
+//! deterministically from the [`SearchConfig`], whose fingerprint is
+//! pinned into every snapshot — a changed config invalidates the
+//! checkpoint instead of resuming into the wrong run.
+
+use std::path::PathBuf;
+
+use crate::agent::ddpg::DdpgAgent;
+use crate::agent::hiro::HiroAgent;
+use crate::agent::replay::{ReplayBuffer, Transition};
+use crate::cost::logic::ModelCost;
+use crate::journal::codec::{ByteReader, ByteWriter};
+use crate::journal::log::{fingerprint, FNV_OFFSET};
+use crate::runtime::{Tensor, Value};
+use crate::search::episode::{EpisodeOutcome, LayerBits};
+use crate::search::protocol::Granularity;
+use crate::search::runner::{EpisodeStats, SearchConfig};
+use crate::util::rng::Rng;
+
+/// Snapshot-blob schema version (bump on layout changes; old blobs are
+/// then ignored and the search restarts clean).
+const VERSION: u8 = 1;
+
+/// Snapshot tag within a search journal.
+pub const TAG: &str = "search";
+
+/// Where and how often a search checkpoints.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// Journal file (one per search job).
+    pub path: PathBuf,
+    /// Snapshot every N finished episodes (0 disables checkpointing).
+    pub every: usize,
+}
+
+/// Fingerprint of everything that shapes a search's trajectory.  Two
+/// configs with equal fingerprints produce byte-identical runs, so a
+/// snapshot is resumable iff the fingerprints match.
+pub fn config_fingerprint(cfg: &SearchConfig, model: &str) -> u64 {
+    let mut w = ByteWriter::new();
+    w.put_str(model);
+    w.put_str(cfg.mode.as_str());
+    w.put_str(cfg.protocol.tag());
+    w.put_f64(cfg.protocol.target_bits);
+    match cfg.granularity {
+        Granularity::Network(b) => {
+            w.put_u8(0);
+            w.put_u32(b);
+        }
+        Granularity::Layer => w.put_u8(1),
+        Granularity::Channel => w.put_u8(2),
+    }
+    w.put_u64(cfg.episodes as u64);
+    w.put_u64(cfg.warmup as u64);
+    w.put_f64(cfg.noise_decay);
+    w.put_u64(cfg.eval_batches as u64);
+    w.put_u64(cfg.seed);
+    w.put_f32(cfg.zeta);
+    w.put_bool(cfg.relabel);
+    w.put_u64(cfg.llc_updates_div as u64);
+    crate::journal::log::fnv1a(FNV_OFFSET, &w.into_vec())
+}
+
+fn put_value(w: &mut ByteWriter, v: &Value) -> anyhow::Result<()> {
+    let t = v.as_f32()?;
+    w.put_u32(t.shape.len() as u32);
+    for &d in &t.shape {
+        w.put_u64(d as u64);
+    }
+    w.put_f32s(&t.data);
+    Ok(())
+}
+
+fn read_value(r: &mut ByteReader) -> anyhow::Result<Value> {
+    let nd = r.u32()? as usize;
+    let mut shape = Vec::with_capacity(nd);
+    for _ in 0..nd {
+        shape.push(r.u64()? as usize);
+    }
+    Ok(Value::F32(Tensor::new(shape, r.f32s()?)))
+}
+
+fn put_agent(w: &mut ByteWriter, agent: &DdpgAgent) -> anyhow::Result<()> {
+    let (state, t) = agent.snapshot_state();
+    w.put_u32(state.len() as u32);
+    for v in state {
+        put_value(w, v)?;
+    }
+    w.put_f32(t);
+    w.put_f32(agent.last_critic_loss);
+    w.put_f32(agent.last_actor_loss);
+    w.put_u64(agent.updates);
+    Ok(())
+}
+
+fn read_agent(r: &mut ByteReader, agent: &mut DdpgAgent) -> anyhow::Result<()> {
+    let n = r.u32()? as usize;
+    let mut state = Vec::with_capacity(n);
+    for _ in 0..n {
+        state.push(read_value(r)?);
+    }
+    let t = r.f32()?;
+    agent.restore_state(state, t)?;
+    agent.last_critic_loss = r.f32()?;
+    agent.last_actor_loss = r.f32()?;
+    agent.updates = r.u64()?;
+    Ok(())
+}
+
+fn put_replay(w: &mut ByteWriter, rb: &ReplayBuffer) {
+    let (buf, next, pushed) = rb.raw_parts();
+    w.put_u64(next as u64);
+    w.put_u64(pushed);
+    w.put_u32(buf.len() as u32);
+    for tr in buf {
+        w.put_f32s(&tr.s);
+        w.put_f32(tr.a);
+        w.put_f32(tr.r);
+        w.put_f32s(&tr.s2);
+        w.put_bool(tr.done);
+    }
+}
+
+fn read_replay(r: &mut ByteReader, rb: &mut ReplayBuffer) -> anyhow::Result<()> {
+    let next = r.u64()? as usize;
+    let pushed = r.u64()?;
+    let n = r.u32()? as usize;
+    let mut buf = Vec::with_capacity(n);
+    for _ in 0..n {
+        buf.push(Transition {
+            s: r.f32s()?,
+            a: r.f32()?,
+            r: r.f32()?,
+            s2: r.f32s()?,
+            done: r.bool()?,
+        });
+    }
+    rb.restore_parts(buf, next, pushed)
+}
+
+fn put_outcome(w: &mut ByteWriter, out: &EpisodeOutcome) {
+    w.put_bytes(&out.wbits);
+    w.put_bytes(&out.abits);
+    w.put_f64(out.accuracy);
+    w.put_f64(out.loss);
+    w.put_u64(out.cost.logic_ops);
+    w.put_u64(out.cost.logic_fp);
+    w.put_u64(out.cost.weight_bits);
+    w.put_u64(out.cost.weight_bits_fp);
+    w.put_f64(out.reward);
+    w.put_f64(out.score);
+    w.put_u32(out.per_layer.len() as u32);
+    for l in &out.per_layer {
+        w.put_str(&l.name);
+        w.put_f64(l.avg_w);
+        w.put_f64(l.avg_a);
+    }
+    w.put_f64(out.avg_wbits);
+    w.put_f64(out.avg_abits);
+}
+
+fn read_outcome(r: &mut ByteReader) -> anyhow::Result<EpisodeOutcome> {
+    let wbits = r.bytes()?.to_vec();
+    let abits = r.bytes()?.to_vec();
+    let accuracy = r.f64()?;
+    let loss = r.f64()?;
+    let cost = ModelCost {
+        logic_ops: r.u64()?,
+        logic_fp: r.u64()?,
+        weight_bits: r.u64()?,
+        weight_bits_fp: r.u64()?,
+    };
+    let reward = r.f64()?;
+    let score = r.f64()?;
+    let nl = r.u32()? as usize;
+    let mut per_layer = Vec::with_capacity(nl);
+    for _ in 0..nl {
+        per_layer.push(LayerBits { name: r.str()?.to_string(), avg_w: r.f64()?, avg_a: r.f64()? });
+    }
+    Ok(EpisodeOutcome {
+        wbits,
+        abits,
+        accuracy,
+        loss,
+        cost,
+        reward,
+        score,
+        per_layer,
+        avg_wbits: r.f64()?,
+        avg_abits: r.f64()?,
+    })
+}
+
+/// Serialize the complete mutable search state after `episodes_done`
+/// episodes.
+pub fn encode(
+    fp: u64,
+    episodes_done: usize,
+    history: &[EpisodeStats],
+    best: Option<&EpisodeOutcome>,
+    agents: &HiroAgent,
+) -> anyhow::Result<Vec<u8>> {
+    let mut w = ByteWriter::new();
+    w.put_u8(VERSION);
+    w.put_u64(fp);
+    w.put_u64(episodes_done as u64);
+    w.put_u32(history.len() as u32);
+    for st in history {
+        w.put_u64(st.episode as u64);
+        w.put_f64(st.accuracy);
+        w.put_f64(st.reward);
+        w.put_f64(st.avg_wbits);
+        w.put_f64(st.avg_abits);
+        w.put_f64(st.norm_logic);
+    }
+    w.put_bool(best.is_some());
+    if let Some(b) = best {
+        put_outcome(&mut w, b);
+    }
+    w.put_u64(agents.cfg.noise.episode() as u64);
+    let (s, spare) = agents.rng.state();
+    for word in s {
+        w.put_u64(word);
+    }
+    w.put_bool(spare.is_some());
+    w.put_u64(spare.unwrap_or(0));
+    for agent in [&agents.hlc_w, &agents.hlc_a, &agents.llc_w, &agents.llc_a] {
+        put_agent(&mut w, agent)?;
+    }
+    for rb in
+        [&agents.replay_hlc_w, &agents.replay_hlc_a, &agents.replay_llc_w, &agents.replay_llc_a]
+    {
+        put_replay(&mut w, rb);
+    }
+    Ok(w.into_vec())
+}
+
+/// The loop-position part of a restored snapshot (the agent part is
+/// applied directly to `agents`).
+#[derive(Debug)]
+pub struct ResumeState {
+    pub episodes_done: usize,
+    pub history: Vec<EpisodeStats>,
+    pub best: Option<EpisodeOutcome>,
+}
+
+/// Decode a snapshot blob into `agents` and return the loop position.
+/// Returns `Ok(None)` — start clean — when the blob's version or config
+/// fingerprint does not match; corrupt blobs are a structured error.
+pub fn decode_into(
+    blob: &[u8],
+    expect_fp: u64,
+    agents: &mut HiroAgent,
+) -> anyhow::Result<Option<ResumeState>> {
+    let mut r = ByteReader::new(blob);
+    if r.u8()? != VERSION {
+        return Ok(None);
+    }
+    if r.u64()? != expect_fp {
+        return Ok(None);
+    }
+    let episodes_done = r.u64()? as usize;
+    let nh = r.u32()? as usize;
+    let mut history = Vec::with_capacity(nh);
+    for _ in 0..nh {
+        history.push(EpisodeStats {
+            episode: r.u64()? as usize,
+            accuracy: r.f64()?,
+            reward: r.f64()?,
+            avg_wbits: r.f64()?,
+            avg_abits: r.f64()?,
+            norm_logic: r.f64()?,
+        });
+    }
+    let best = if r.bool()? { Some(read_outcome(&mut r)?) } else { None };
+    agents.cfg.noise.set_episode(r.u64()? as usize);
+    let s = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+    let has_spare = r.bool()?;
+    let spare_bits = r.u64()?;
+    agents.rng = Rng::restore(s, has_spare.then_some(spare_bits));
+    {
+        let HiroAgent { hlc_w, hlc_a, llc_w, llc_a, .. } = agents;
+        for agent in [hlc_w, hlc_a, llc_w, llc_a] {
+            read_agent(&mut r, agent)?;
+        }
+    }
+    {
+        let HiroAgent { replay_hlc_w, replay_hlc_a, replay_llc_w, replay_llc_a, .. } = agents;
+        for rb in [replay_hlc_w, replay_hlc_a, replay_llc_w, replay_llc_a] {
+            read_replay(&mut r, rb)?;
+        }
+    }
+    r.finish()?;
+    Ok(Some(ResumeState { episodes_done, history, best }))
+}
+
+/// Fingerprint of an arbitrary byte blob (re-exported convenience for the
+/// sweep/repro done-set callers).
+pub fn blob_fingerprint(bytes: &[u8]) -> u64 {
+    fingerprint(bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outcome_round_trips_byte_exactly() {
+        let out = EpisodeOutcome {
+            wbits: vec![3, 5, 8],
+            abits: vec![4, 4],
+            accuracy: 0.123456789,
+            loss: 1.5e-3,
+            cost: ModelCost { logic_ops: 7, logic_fp: 11, weight_bits: 13, weight_bits_fp: 17 },
+            reward: -0.25,
+            score: 19.75,
+            per_layer: vec![LayerBits { name: "conv1".into(), avg_w: 5.5, avg_a: 6.25 }],
+            avg_wbits: 5.33,
+            avg_abits: 4.0,
+        };
+        let mut w = ByteWriter::new();
+        put_outcome(&mut w, &out);
+        let buf = w.into_vec();
+        let mut r = ByteReader::new(&buf);
+        let back = read_outcome(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(back.wbits, out.wbits);
+        assert_eq!(back.abits, out.abits);
+        assert_eq!(back.accuracy.to_bits(), out.accuracy.to_bits());
+        assert_eq!(back.loss.to_bits(), out.loss.to_bits());
+        assert_eq!(back.cost.logic_ops, out.cost.logic_ops);
+        assert_eq!(back.cost.weight_bits_fp, out.cost.weight_bits_fp);
+        assert_eq!(back.per_layer.len(), 1);
+        assert_eq!(back.per_layer[0].name, "conv1");
+        assert_eq!(back.avg_wbits.to_bits(), out.avg_wbits.to_bits());
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_every_field() {
+        use crate::cost::Mode;
+        use crate::search::protocol::Protocol;
+        let base = SearchConfig::quick(
+            Mode::Quant,
+            Protocol::resource_constrained(5.0),
+            Granularity::Channel,
+        );
+        let f0 = config_fingerprint(&base, "cif10");
+        assert_eq!(f0, config_fingerprint(&base, "cif10"), "fingerprint must be stable");
+        assert_ne!(f0, config_fingerprint(&base, "monet"));
+        let mut c = base.clone();
+        c.episodes += 1;
+        assert_ne!(f0, config_fingerprint(&c, "cif10"));
+        let mut c = base.clone();
+        c.seed ^= 1;
+        assert_ne!(f0, config_fingerprint(&c, "cif10"));
+        let mut c = base.clone();
+        c.relabel = !c.relabel;
+        assert_ne!(f0, config_fingerprint(&c, "cif10"));
+    }
+}

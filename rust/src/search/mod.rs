@@ -3,11 +3,13 @@
 //! the explore/exploit runner (§4).
 
 pub mod algorithm1;
+pub mod checkpoint;
 pub mod episode;
 pub mod protocol;
 pub mod runner;
 
 pub use algorithm1::LayerBound;
+pub use checkpoint::Checkpoint;
 pub use episode::{EpisodeConfig, EpisodeOutcome, LayerBits};
 pub use protocol::{Granularity, Protocol, ProtocolKind};
 pub use runner::{

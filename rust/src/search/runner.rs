@@ -7,8 +7,10 @@ use crate::agent::noise::NoiseSchedule;
 use crate::cost::Mode;
 use crate::data::synth::SynthDataset;
 use crate::env::state::StateBuilder;
+use crate::journal::DurableLog;
 use crate::models::ModelRunner;
 use crate::runtime::Runtime;
+use crate::search::checkpoint::{self, Checkpoint};
 use crate::search::episode::{run_episode, train_after_episode, EpisodeConfig, EpisodeOutcome};
 use crate::search::protocol::{Granularity, Protocol};
 
@@ -26,6 +28,10 @@ pub struct SearchConfig {
     pub zeta: f32,
     pub relabel: bool,
     pub llc_updates_div: usize,
+    /// Durable checkpointing (DESIGN.md §Durable jobs): snapshot the full
+    /// search state to a journal every `every` episodes and resume from
+    /// the newest matching snapshot at startup.  `None` runs ephemeral.
+    pub checkpoint: Option<Checkpoint>,
 }
 
 impl SearchConfig {
@@ -43,6 +49,7 @@ impl SearchConfig {
             zeta: 0.5,
             relabel: true,
             llc_updates_div: 4,
+            checkpoint: None,
         }
     }
 
@@ -170,7 +177,39 @@ pub fn run_search_with(
     let llc_steps = runner.meta.w_channels + runner.meta.a_channels;
     let n_layers = runner.meta.layers.len();
 
-    for ep in 0..episodes {
+    // Durable checkpointing: open (or resume) the journal and restore the
+    // newest snapshot whose config fingerprint matches, continuing from
+    // the episode after it.  Restored episodes are not replayed through
+    // `on_episode` — their observers saw them before the interruption —
+    // but the final report carries the full restored history, so a
+    // resumed run's result bytes equal an uninterrupted run's.
+    let fp = checkpoint::config_fingerprint(cfg, &runner.meta.name);
+    let mut ckpt = match &cfg.checkpoint {
+        Some(ck) if ck.every > 0 => Some((DurableLog::open(&ck.path)?, ck.every)),
+        _ => None,
+    };
+    let mut start_ep = 0usize;
+    if let Some((log, _)) = ckpt.as_mut() {
+        if let Some((_, blob)) = log.latest_snapshot(checkpoint::TAG) {
+            match checkpoint::decode_into(blob, fp, &mut agents)? {
+                Some(st) => {
+                    start_ep = st.episodes_done.min(episodes);
+                    history = st.history;
+                    best = st.best;
+                    crate::info!(
+                        "resuming search from {} at episode {start_ep}/{episodes}",
+                        log.path().display()
+                    );
+                }
+                None => crate::warn_!(
+                    "checkpoint {} does not match this search config — starting clean",
+                    log.path().display()
+                ),
+            }
+        }
+    }
+
+    for ep in start_ep..episodes {
         let out = run_episode(
             rt,
             runner,
@@ -203,6 +242,25 @@ pub fn run_search_with(
             best = Some(out);
         }
         on_episode(&stats, episodes, better);
+        if let Some((log, every)) = ckpt.as_mut() {
+            let done = ep + 1;
+            // No snapshot after the final episode — the finished result is
+            // recorded at the layer above (report file / sweep journal /
+            // config cache), not as a resumable mid-run state.
+            if done % *every == 0 && done < episodes {
+                let blob = checkpoint::encode(fp, done, &history, best.as_ref(), &agents)?;
+                log.snapshot(checkpoint::TAG, done as u64, &blob)?;
+            }
+        }
+    }
+
+    // The search finished: its checkpoint journal is spent state (the
+    // result now lives in the caller's report), so drop it — a later
+    // identical run starts clean and reproduces the same bytes anyway.
+    if let Some((log, _)) = ckpt.take() {
+        let path = log.path().to_path_buf();
+        drop(log);
+        std::fs::remove_file(&path).ok();
     }
 
     let best = best.ok_or_else(|| {

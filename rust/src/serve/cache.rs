@@ -29,9 +29,12 @@
 //! contract that `tests/eval_cache.rs` pins.
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::journal::log::kind;
+use crate::journal::{ByteReader, ByteWriter, DurableLog};
 use crate::models::EvalResult;
 
 /// Incremental FNV-1a 64 over a canonical byte encoding.  Every variable-
@@ -165,6 +168,45 @@ pub struct EvalCache {
     max_entries: usize,
     /// Logical clock: bumped on every get/insert, stamped onto entries.
     tick: AtomicU64,
+    /// Optional disk tier (DESIGN.md §Durable jobs): every insert writes
+    /// through to a journal, a restarted daemon reloads the index, and a
+    /// memory miss falls through to it before counting as a miss.  Never
+    /// nested with the map lock — always taken after it is released.
+    disk: Option<Mutex<DiskTier>>,
+}
+
+/// The disk tier behind a capped memory map: a [`DurableLog`] of CACHE
+/// records plus an in-memory index of every key on disk.  The index holds
+/// results too (24 bytes each) — cheap next to re-running an eval, and it
+/// makes disk hits a map lookup instead of a file scan.
+#[derive(Debug)]
+struct DiskTier {
+    log: DurableLog,
+    index: HashMap<u64, EvalResult>,
+}
+
+/// CACHE record payload: key, then the result's exact bit patterns —
+/// f64 accuracy/loss as IEEE-754 bits so a reloaded result is
+/// byte-identical to the computed one.
+fn encode_cache_record(key: u64, r: &EvalResult) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u64(key);
+    w.put_f64(r.accuracy);
+    w.put_f64(r.loss);
+    w.put_u64(r.images as u64);
+    w.into_vec()
+}
+
+fn decode_cache_record(bytes: &[u8]) -> anyhow::Result<(u64, EvalResult)> {
+    let mut r = ByteReader::new(bytes);
+    let key = r.u64()?;
+    let res = EvalResult {
+        accuracy: r.f64()?,
+        loss: r.f64()?,
+        images: r.u64()? as usize,
+    };
+    r.finish()?;
+    Ok((key, res))
 }
 
 impl EvalCache {
@@ -192,7 +234,51 @@ impl EvalCache {
             misses: AtomicU64::new(0),
             max_entries: max_entries.max(1),
             tick: AtomicU64::new(0),
+            disk: None,
         }
+    }
+
+    /// Attach (and load) the durable disk tier at `path`: journaled
+    /// entries are indexed immediately, every future insert writes
+    /// through, and memory misses consult the disk index before counting
+    /// as misses.  Returns how many entries the journal held.  Call before
+    /// sharing the cache (`&mut` enforces it).
+    pub fn attach_disk(&mut self, path: &Path) -> anyhow::Result<usize> {
+        let mut log = DurableLog::open(path)?;
+        let mut index = HashMap::new();
+        for payload in log.extras(kind::CACHE) {
+            match decode_cache_record(payload) {
+                // Append order — a later record for the same key wins.
+                Ok((key, res)) => {
+                    index.insert(key, res);
+                }
+                Err(e) => crate::warn_!("disk cache record is malformed, skipping: {e:#}"),
+            }
+        }
+        // Re-inserts of hot keys accumulate duplicate records; rewrite the
+        // journal once the garbage clearly dominates the live set.
+        if log.extras_len() > index.len().saturating_mul(2) + 64 {
+            log.compact()?;
+        }
+        let loaded = index.len();
+        self.disk = Some(Mutex::new(DiskTier { log, index }));
+        Ok(loaded)
+    }
+
+    /// Entries in the disk tier's index (0 when no tier is attached).
+    pub fn disk_entries(&self) -> usize {
+        self.disk
+            .as_ref()
+            .map(|d| d.lock().expect("disk cache poisoned").index.len())
+            .unwrap_or(0)
+    }
+
+    /// Durability info for `status`: `(journal path, newest-record age in
+    /// seconds, indexed entries)`.  `None` when no disk tier is attached.
+    pub fn disk_info(&self) -> Option<(PathBuf, Option<u64>, usize)> {
+        let d = self.disk.as_ref()?;
+        let g = d.lock().expect("disk cache poisoned");
+        Some((g.log.path().to_path_buf(), g.log.age_secs(), g.index.len()))
     }
 
     pub fn len(&self) -> usize {
@@ -223,15 +309,57 @@ impl EvalCache {
                 Some(r)
             }
             None => {
+                // Memory miss: the disk tier may still know this key (a
+                // restarted daemon, or an entry the LRU cap evicted).  The
+                // map lock is already released here, so the two locks never
+                // nest.
+                if let Some(r) = self.disk_get(key) {
+                    self.promote(key, r, now);
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Some(r);
+                }
                 self.misses.fetch_add(1, Ordering::Relaxed);
                 None
             }
         }
     }
 
+    fn disk_get(&self, key: u64) -> Option<EvalResult> {
+        let d = self.disk.as_ref()?;
+        d.lock().expect("disk cache poisoned").index.get(&key).copied()
+    }
+
+    /// Re-admit a disk hit into the memory map without touching the disk
+    /// tier again.
+    fn promote(&self, key: u64, result: EvalResult, now: u64) {
+        let mut map = self.map.lock().expect("eval cache poisoned");
+        self.evict_if_full(&mut map, key);
+        map.insert(key, Entry { result, tick: now });
+    }
+
     fn insert(&self, key: u64, result: EvalResult) {
         let now = self.tick.fetch_add(1, Ordering::Relaxed);
-        let mut map = self.map.lock().expect("eval cache poisoned");
+        {
+            let mut map = self.map.lock().expect("eval cache poisoned");
+            self.evict_if_full(&mut map, key);
+            map.insert(key, Entry { result, tick: now });
+        }
+        // Write through to the disk tier (map lock released first).  A key
+        // already on disk is skipped: results are content-addressed, so a
+        // re-insert can never carry different bytes.
+        if let Some(d) = self.disk.as_ref() {
+            let mut g = d.lock().expect("disk cache poisoned");
+            if !g.index.contains_key(&key) {
+                if let Err(e) = g.log.append_extra(kind::CACHE, &encode_cache_record(key, &result))
+                {
+                    crate::warn_!("disk cache append failed: {e:#}");
+                }
+                g.index.insert(key, result);
+            }
+        }
+    }
+
+    fn evict_if_full(&self, map: &mut HashMap<u64, Entry>, key: u64) {
         if map.len() >= self.max_entries && !map.contains_key(&key) {
             // At capacity: drop the oldest ~1/8 (at least one) in one
             // sweep, so eviction cost amortizes instead of running a full
@@ -247,7 +375,6 @@ impl EvalCache {
                 ticks.len() - map.len()
             );
         }
-        map.insert(key, Entry { result, tick: now });
     }
 }
 
@@ -399,6 +526,49 @@ mod tests {
         for i in 0..4u64 {
             assert!(handle.get(i).is_some(), "key {i} must still be cached");
         }
+    }
+
+    #[test]
+    fn disk_tier_survives_restart_and_catches_memory_misses() {
+        let p = std::env::temp_dir()
+            .join(format!("autoq_cache_disk_{}.journal", std::process::id()));
+        std::fs::remove_file(&p).ok();
+        let r = EvalResult { accuracy: 0.875, loss: 0.125, images: 512 };
+        {
+            let mut cache = EvalCache::with_cap(8);
+            assert_eq!(cache.attach_disk(&p).unwrap(), 0);
+            cache.insert(7, r);
+            cache.insert(7, r); // re-insert: no duplicate disk record
+            assert_eq!(cache.disk_entries(), 1);
+        }
+        {
+            // "Restart": a fresh cache over the same journal serves the
+            // entry as a hit even though memory is empty.
+            let mut cache = EvalCache::with_cap(8);
+            assert_eq!(cache.attach_disk(&p).unwrap(), 1);
+            assert_eq!(cache.len(), 0);
+            assert_eq!(cache.get(7), Some(r));
+            assert_eq!(cache.counts(), (1, 0), "disk fallthrough must count as a hit");
+            // The hit was promoted into the memory map.
+            assert_eq!(cache.len(), 1);
+            assert_eq!(cache.get(99), None);
+            assert_eq!(cache.counts(), (1, 1));
+            let (path, age, entries) = cache.disk_info().unwrap();
+            assert_eq!(path, p);
+            assert!(age.is_some());
+            assert_eq!(entries, 1);
+        }
+        {
+            // LRU eviction from memory must not lose the entry: the disk
+            // tier still answers it.
+            let mut cache = EvalCache::with_cap(2);
+            cache.attach_disk(&p).unwrap();
+            for i in 100..110u64 {
+                cache.insert(i, r);
+            }
+            assert!(cache.get(7).is_some(), "evicted key must come back from disk");
+        }
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

@@ -16,10 +16,12 @@
 //!     finish — the daemon never kills a running job half way.
 
 use std::collections::{BTreeMap, VecDeque};
+use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::sync::{Condvar, Mutex};
 
 use crate::coordinator::JobSpec;
+use crate::journal::{fingerprint, ByteReader, ByteWriter, DurableLog};
 use crate::util::json::Json;
 
 /// Lifecycle of one submission.
@@ -34,6 +36,11 @@ pub enum JobState {
     Failed { error: String, cache: (u64, u64) },
     /// Never ran (immediate shutdown or explicit drain cancel).
     Cancelled,
+    /// Still terminal, but the heavyweight payload (report/error) was
+    /// dropped by the `$AUTOQ_QUEUE_RETAIN` retention cap.  `was` keeps
+    /// the original terminal name so `status` output is unchanged;
+    /// `result`/`subscribe` answer a structured "evicted" error.
+    Evicted { was: &'static str },
 }
 
 impl JobState {
@@ -44,12 +51,69 @@ impl JobState {
             JobState::Done { .. } => "done",
             JobState::Failed { .. } => "failed",
             JobState::Cancelled => "cancelled",
+            JobState::Evicted { was } => was,
         }
     }
 
     pub fn is_terminal(&self) -> bool {
-        matches!(self, JobState::Done { .. } | JobState::Failed { .. } | JobState::Cancelled)
+        matches!(
+            self,
+            JobState::Done { .. }
+                | JobState::Failed { .. }
+                | JobState::Cancelled
+                | JobState::Evicted { .. }
+        )
     }
+}
+
+/// Default retained terminal payloads when `$AUTOQ_QUEUE_RETAIN` is unset
+/// — generous (reports are a few KB; 4096 of them is ~tens of MB) while
+/// still bounding a daemon that runs for weeks.
+const DEFAULT_QUEUE_RETAIN: usize = 4096;
+
+/// Resolve the retention cap from `$AUTOQ_QUEUE_RETAIN` (`0` = unlimited).
+fn retain_from_env() -> usize {
+    match std::env::var("AUTOQ_QUEUE_RETAIN") {
+        Ok(s) if !s.trim().is_empty() => match s.trim().parse::<usize>() {
+            Ok(0) => usize::MAX,
+            Ok(n) => n,
+            Err(_) => {
+                crate::warn_!("ignoring non-numeric AUTOQ_QUEUE_RETAIN={s:?}");
+                DEFAULT_QUEUE_RETAIN
+            }
+        },
+        _ => DEFAULT_QUEUE_RETAIN,
+    }
+}
+
+// Journal payload state bytes (DESIGN.md §Durable jobs — job records).
+const JR_SUBMITTED: u8 = 0;
+const JR_DONE: u8 = 1;
+const JR_FAILED: u8 = 2;
+const JR_CANCELLED: u8 = 3;
+
+/// Encode one job-journal payload: lifecycle byte, spec JSON, terminal
+/// payload (report JSON / error text / empty), cache delta.
+fn encode_job_record(state: u8, spec_json: &str, payload: &str, cache: (u64, u64)) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u8(state);
+    w.put_str(spec_json);
+    w.put_str(payload);
+    w.put_u64(cache.0);
+    w.put_u64(cache.1);
+    w.into_vec()
+}
+
+/// Decode [`encode_job_record`] output back into `(state byte, spec JSON,
+/// payload, cache delta)`.
+fn decode_job_record(bytes: &[u8]) -> anyhow::Result<(u8, String, String, (u64, u64))> {
+    let mut r = ByteReader::new(bytes);
+    let state = r.u8()?;
+    let spec_json = r.str()?.to_string();
+    let payload = r.str()?.to_string();
+    let cache = (r.u64()?, r.u64()?);
+    r.finish()?;
+    Ok((state, spec_json, payload, cache))
 }
 
 struct JobEntry {
@@ -82,11 +146,54 @@ struct Inner {
     /// summed from each finished job's delta (BTreeMap so status output
     /// is in stable client-id order).
     client_totals: BTreeMap<u64, (u64, u64)>,
+    /// Durable job journal (DESIGN.md §Durable jobs): submissions and
+    /// terminal states append under the queue lock, so record order always
+    /// matches state order.  `None` = ephemeral queue (tests, embedders).
+    journal: Option<DurableLog>,
+}
+
+impl Inner {
+    /// Append a job-journal record keyed by the job's handle; append
+    /// failures are logged, never fatal — the queue keeps serving and the
+    /// worst case is a re-run after restart.
+    fn journal_job(&mut self, idx: usize, state: u8, payload: &str, cache: (u64, u64)) {
+        let spec_json = self.jobs[idx].spec.to_json().to_string();
+        let handle = self.jobs[idx].handle.clone();
+        if let Some(log) = self.journal.as_mut() {
+            let fp = fingerprint(spec_json.as_bytes());
+            let rec = encode_job_record(state, &spec_json, payload, cache);
+            if let Err(e) = log.record_done(&handle, fp, &rec) {
+                crate::warn_!("job journal append failed for {handle}: {e:#}");
+            }
+        }
+    }
+
+    /// Enforce the retention cap: beyond `retain` heavyweight terminal
+    /// payloads, the oldest are swapped to [`JobState::Evicted`] in place —
+    /// entries are never removed, so `job-<idx>` indexing stays valid.
+    fn apply_retention(&mut self, retain: usize) {
+        let heavy: Vec<usize> = self
+            .jobs
+            .iter()
+            .enumerate()
+            .filter(|(_, j)| matches!(j.state, JobState::Done { .. } | JobState::Failed { .. }))
+            .map(|(i, _)| i)
+            .collect();
+        if heavy.len() > retain {
+            for &i in &heavy[..heavy.len() - retain] {
+                let was = self.jobs[i].state.name();
+                self.jobs[i].state = JobState::Evicted { was };
+            }
+        }
+    }
 }
 
 pub struct JobQueue {
     inner: Mutex<Inner>,
     cv: Condvar,
+    /// Max terminal jobs whose report/error payload is kept in memory
+    /// (`$AUTOQ_QUEUE_RETAIN`; `usize::MAX` = unlimited).
+    retain: usize,
 }
 
 impl Default for JobQueue {
@@ -97,6 +204,15 @@ impl Default for JobQueue {
 
 impl JobQueue {
     pub fn new() -> JobQueue {
+        Self::with_parts(retain_from_env(), None)
+    }
+
+    /// A queue with an explicit retention cap (tests pin small caps).
+    pub fn with_retain(retain: usize) -> JobQueue {
+        Self::with_parts(retain.max(1), None)
+    }
+
+    fn with_parts(retain: usize, journal: Option<DurableLog>) -> JobQueue {
         JobQueue {
             inner: Mutex::new(Inner {
                 jobs: Vec::new(),
@@ -104,13 +220,116 @@ impl JobQueue {
                 running: 0,
                 shutdown: Shutdown::No,
                 client_totals: BTreeMap::new(),
+                journal,
             }),
             cv: Condvar::new(),
+            retain: retain.max(1),
         }
+    }
+
+    /// A queue backed by a durable job journal at `path`: prior sessions'
+    /// jobs are replayed into their original `job-<idx>` slots (jobs that
+    /// were submitted but never reached a terminal state come back as
+    /// `Failed` — the daemon restarted under them), and every new
+    /// submission/terminal transition appends a record.  Returns the queue
+    /// plus how many jobs were restored.
+    pub fn with_journal(path: &Path) -> anyhow::Result<(JobQueue, usize)> {
+        let log = DurableLog::open(path)?;
+        let q = Self::with_parts(retain_from_env(), Some(log));
+        let restored = {
+            let mut g = q.inner.lock().expect("job queue poisoned");
+            Self::restore_from_journal(&mut g)?
+        };
+        if restored > 0 {
+            let mut g = q.inner.lock().expect("job queue poisoned");
+            g.apply_retention(q.retain);
+        }
+        Ok((q, restored))
+    }
+
+    /// Rebuild the jobs vec from the journal's done map.  Handles are
+    /// `job-<idx>`; records replay into exactly those slots so handles
+    /// issued before the restart still resolve.
+    fn restore_from_journal(g: &mut Inner) -> anyhow::Result<usize> {
+        let Some(log) = g.journal.as_ref() else { return Ok(0) };
+        let mut rows: Vec<(usize, Vec<u8>)> = Vec::new();
+        for (id, payload) in log.done_entries() {
+            let Some(idx) = id.strip_prefix("job-").and_then(|n| n.parse::<usize>().ok()) else {
+                crate::warn_!("job journal holds foreign id {id:?} — skipping");
+                continue;
+            };
+            rows.push((idx, payload.to_vec()));
+        }
+        rows.sort_by_key(|(idx, _)| *idx);
+        for (idx, rec) in rows {
+            let (state, spec_json, payload, cache) = match decode_job_record(&rec) {
+                Ok(parts) => parts,
+                Err(e) => {
+                    crate::warn_!("job journal record for job-{idx} is malformed: {e:#}");
+                    continue;
+                }
+            };
+            let spec = match Json::parse(&spec_json)
+                .map_err(anyhow::Error::msg)
+                .and_then(|j| crate::serve::wire::job_from_json(&j))
+            {
+                Ok(s) => s,
+                Err(e) => {
+                    crate::warn_!("job journal spec for job-{idx} no longer parses: {e:#}");
+                    continue;
+                }
+            };
+            let state = match state {
+                JR_DONE => match Json::parse(&payload) {
+                    Ok(report) => JobState::Done { report, cache },
+                    Err(e) => JobState::Failed {
+                        error: format!("journaled report no longer parses: {e}"),
+                        cache,
+                    },
+                },
+                JR_FAILED => JobState::Failed { error: payload, cache },
+                JR_CANCELLED => JobState::Cancelled,
+                // Submitted (or unknown lifecycle byte) without a terminal
+                // record: the daemon died under it.
+                _ => JobState::Failed {
+                    error: "daemon restarted before the job finished".to_string(),
+                    cache: (0, 0),
+                },
+            };
+            // Fill any gap with cancelled placeholders so `job-<idx>`
+            // stays an index (a torn journal tail can only lose a suffix,
+            // but stay robust anyway).
+            while g.jobs.len() < idx {
+                let h = format!("job-{}", g.jobs.len());
+                g.jobs.push(JobEntry {
+                    handle: h,
+                    spec: spec.clone(),
+                    state: JobState::Cancelled,
+                    client: 0,
+                    subscribers: Vec::new(),
+                });
+            }
+            g.jobs.push(JobEntry {
+                handle: format!("job-{idx}"),
+                spec,
+                state,
+                client: 0,
+                subscribers: Vec::new(),
+            });
+        }
+        Ok(g.jobs.len())
     }
 
     fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
         self.inner.lock().expect("job queue poisoned")
+    }
+
+    /// Durability info for `status`: `(journal path, newest-record age in
+    /// seconds, journaled job count)`.  `None` when the queue is ephemeral.
+    pub fn journal_info(&self) -> Option<(PathBuf, Option<u64>, usize)> {
+        let g = self.lock();
+        let log = g.journal.as_ref()?;
+        Some((log.path().to_path_buf(), log.age_secs(), log.done_len()))
     }
 
     /// Enqueue a validated spec from connection `client`; returns the
@@ -128,6 +347,7 @@ impl JobQueue {
             subscribers: Vec::new(),
         });
         g.pending.push_back(idx);
+        g.journal_job(idx, JR_SUBMITTED, "", (0, 0));
         drop(g);
         self.cv.notify_all();
         Ok(handle)
@@ -166,10 +386,19 @@ impl JobQueue {
             cache,
         );
         let mut g = self.lock();
-        g.jobs[idx].state = match outcome {
-            Ok(report) => JobState::Done { report, cache },
-            Err(error) => JobState::Failed { error, cache },
+        let (state, jr, payload) = match outcome {
+            Ok(report) => {
+                let body = report.to_string();
+                (JobState::Done { report, cache }, JR_DONE, body)
+            }
+            Err(error) => {
+                let body = error.clone();
+                (JobState::Failed { error, cache }, JR_FAILED, body)
+            }
         };
+        g.jobs[idx].state = state;
+        g.journal_job(idx, jr, &payload, cache);
+        g.apply_retention(self.retain);
         let client = g.jobs[idx].client;
         let t = g.client_totals.entry(client).or_insert((0, 0));
         t.0 += cache.0;
@@ -219,6 +448,17 @@ impl JobQueue {
                 let ev = crate::serve::wire::event_finished(
                     handle,
                     &Err("job was cancelled".to_string()),
+                    (0, 0),
+                );
+                let _ = sender.send(ev);
+            }
+            JobState::Evicted { was } => {
+                let ev = crate::serve::wire::event_finished(
+                    handle,
+                    &Err(format!(
+                        "job ended {was} but its result was evicted by the retention cap \
+                         (AUTOQ_QUEUE_RETAIN)"
+                    )),
                     (0, 0),
                 );
                 let _ = sender.send(ev);
@@ -289,6 +529,7 @@ impl JobQueue {
         if g.shutdown == Shutdown::Now {
             while let Some(idx) = g.pending.pop_front() {
                 g.jobs[idx].state = JobState::Cancelled;
+                g.journal_job(idx, JR_CANCELLED, "", (0, 0));
                 cancelled.push((idx, std::mem::take(&mut g.jobs[idx].subscribers)));
             }
         }
@@ -413,6 +654,60 @@ mod tests {
         let fin = rx2.recv().unwrap();
         assert_eq!(fin.req("event").unwrap().as_str(), Some("finished"));
         assert_eq!(fin.req("ok").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn retention_cap_evicts_oldest_terminal_payloads() {
+        let q = JobQueue::with_retain(2);
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            handles.push(q.submit(spec(), 0).unwrap());
+        }
+        for _ in 0..4 {
+            let (i, _) = q.next_job().unwrap();
+            q.finish(i, Ok(Json::Bool(true)), (0, 0));
+        }
+        // Oldest two payloads evicted; status name and terminality kept.
+        let (_, st) = q.state_of(&handles[0]).unwrap();
+        assert_eq!(st, JobState::Evicted { was: "done" });
+        assert_eq!(st.name(), "done");
+        assert!(st.is_terminal());
+        let (_, st) = q.state_of(&handles[3]).unwrap();
+        assert!(matches!(st, JobState::Done { .. }), "newest results must survive");
+        // Late subscribe on an evicted job answers a structured error event.
+        let (tx, rx) = mpsc::channel();
+        q.subscribe(&handles[0], tx).unwrap();
+        let ev = rx.recv().unwrap();
+        assert_eq!(ev.req("ok").unwrap().as_bool(), Some(false));
+        assert!(ev.req("error").unwrap().as_str().unwrap().contains("evicted"));
+    }
+
+    #[test]
+    fn journal_restores_jobs_across_restart() {
+        let path = std::env::temp_dir()
+            .join(format!("autoq_queue_restart_{}.journal", std::process::id()));
+        std::fs::remove_file(&path).ok();
+        {
+            let (q, restored) = JobQueue::with_journal(&path).unwrap();
+            assert_eq!(restored, 0);
+            assert_eq!(q.submit(spec(), 0).unwrap(), "job-0");
+            assert_eq!(q.submit(spec(), 0).unwrap(), "job-1");
+            let (i, _) = q.next_job().unwrap();
+            q.finish(i, Ok(Json::Bool(true)), (2, 1));
+            // job-1 never reaches a terminal state — the "crash" is here.
+        }
+        let (q, restored) = JobQueue::with_journal(&path).unwrap();
+        assert_eq!(restored, 2);
+        let (_, st) = q.state_of("job-0").unwrap();
+        let JobState::Done { report, cache } = st else { panic!("job-0 not done: {st:?}") };
+        assert_eq!(report, Json::Bool(true));
+        assert_eq!(cache, (2, 1));
+        let (_, st) = q.state_of("job-1").unwrap();
+        let JobState::Failed { error, .. } = st else { panic!("job-1 must fail on restart") };
+        assert!(error.contains("restarted"), "{error}");
+        // New submissions continue after the restored slots.
+        assert_eq!(q.submit(spec(), 0).unwrap(), "job-2");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -118,12 +118,26 @@ impl Server {
         let listener = TcpListener::bind(listen)
             .map_err(|e| anyhow::anyhow!("cannot listen on {listen}: {e}"))?;
         let addr = listener.local_addr()?;
+        // Durable state lives under `<dir>/serve/`: the job journal (every
+        // submitted/terminal job) and the eval cache's disk tier.  A dir
+        // that cannot hold them degrades to in-memory-only with a warning —
+        // a read-only artifacts mount must not keep the daemon down.
+        let (queue, cache) = match open_durable(&cfg.dir) {
+            Ok(pair) => pair,
+            Err(e) => {
+                crate::warn_!(
+                    "serve: durability disabled ({e:#}); jobs and cached evals will not \
+                     survive a restart"
+                );
+                (JobQueue::new(), EvalCache::new())
+            }
+        };
         Ok(Server {
             listener,
             addr,
             cfg,
-            queue: Arc::new(JobQueue::new()),
-            cache: Arc::new(EvalCache::new()),
+            queue: Arc::new(queue),
+            cache: Arc::new(cache),
             stop: Arc::new(AtomicBool::new(false)),
         })
     }
@@ -267,6 +281,23 @@ impl Server {
         );
         Ok(())
     }
+}
+
+/// Open (and restore) the daemon's durable state under `<dir>/serve/`.
+fn open_durable(dir: &std::path::Path) -> anyhow::Result<(JobQueue, EvalCache)> {
+    let serve_dir = dir.join("serve");
+    std::fs::create_dir_all(&serve_dir)?;
+    let (queue, restored) = JobQueue::with_journal(&serve_dir.join("jobs.journal"))?;
+    let mut cache = EvalCache::new();
+    let loaded = cache.attach_disk(&serve_dir.join("eval_cache.journal"))?;
+    if restored > 0 || loaded > 0 {
+        crate::info!(
+            "serve: restored {restored} journaled job(s) and {loaded} disk-cached eval(s) \
+             from {}",
+            serve_dir.display()
+        );
+    }
+    Ok((queue, cache))
 }
 
 /// Streams job progress onto the wire as typed events.
@@ -426,6 +457,10 @@ fn handle_connection(
                         ("cache", wire::cache_json(hits, misses)),
                         ("clients", wire::clients_json(&queue.client_totals())),
                         ("cache_entries", cache.len().into()),
+                        (
+                            "durability",
+                            wire::durability_json(queue.journal_info(), cache.disk_info()),
+                        ),
                     ]),
                 )?;
             }
@@ -488,6 +523,18 @@ fn status_row(handle: &str, id: &str, state: &JobState) -> Json {
             pairs.push(("error", error.as_str().into()));
             pairs.push(("cache", wire::cache_json(cache.0, cache.1)));
         }
+        JobState::Evicted { was } => {
+            // `state` already reports the original terminal name; tell the
+            // client why the payload itself is gone.
+            pairs.push((
+                "error",
+                format!(
+                    "job ended {was} but its result was evicted by the retention cap \
+                     (AUTOQ_QUEUE_RETAIN)"
+                )
+                .into(),
+            ));
+        }
         _ => {}
     }
     wire::ok_json(pairs)
@@ -511,17 +558,38 @@ mod tests {
         }
     }
 
-    #[test]
-    fn bind_rejects_zero_workers_and_bad_addrs() {
-        let cfg = ServeConfig { workers: 0, ..ServeConfig::default() };
-        assert!(Server::bind("127.0.0.1:0", cfg).is_err());
-        assert!(Server::bind("not-an-addr", ServeConfig::default()).is_err());
+    /// A per-test artifacts dir: `bind` now opens journals under
+    /// `<dir>/serve/`, so tests must not share the working directory.
+    fn tmp_cfg(tag: &str) -> ServeConfig {
+        ServeConfig {
+            dir: std::env::temp_dir()
+                .join(format!("autoq_server_{tag}_{}", std::process::id())),
+            ..ServeConfig::default()
+        }
     }
 
     #[test]
-    fn bind_resolves_port_zero() {
-        let srv = Server::bind("127.0.0.1:0", ServeConfig::default()).unwrap();
+    fn bind_rejects_zero_workers_and_bad_addrs() {
+        let cfg = ServeConfig { workers: 0, ..tmp_cfg("reject") };
+        assert!(Server::bind("127.0.0.1:0", cfg).is_err());
+        assert!(Server::bind("not-an-addr", tmp_cfg("reject")).is_err());
+        std::fs::remove_dir_all(tmp_cfg("reject").dir).ok();
+    }
+
+    #[test]
+    fn bind_resolves_port_zero_and_opens_durable_state() {
+        let cfg = tmp_cfg("port0");
+        let dir = cfg.dir.clone();
+        let srv = Server::bind("127.0.0.1:0", cfg).unwrap();
         assert_ne!(srv.local_addr().port(), 0);
+        let (jpath, _, journaled) = srv.queue().journal_info().expect("job journal attached");
+        assert_eq!(jpath, dir.join("serve").join("jobs.journal"));
+        assert_eq!(journaled, 0);
+        let (cpath, _, entries) = srv.cache().disk_info().expect("disk cache attached");
+        assert_eq!(cpath, dir.join("serve").join("eval_cache.journal"));
+        assert_eq!(entries, 0);
+        drop(srv);
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]
@@ -534,6 +602,13 @@ mod tests {
         let failed = JobState::Failed { error: "boom".into(), cache: (0, 0) };
         let j = status_row("job-1", "x", &failed);
         assert_eq!(j.req("error").unwrap().as_str(), Some("boom"));
+        assert!(j.get("report").is_none());
+        // An evicted job keeps its terminal name but explains the missing
+        // payload.
+        let evicted = JobState::Evicted { was: "done" };
+        let j = status_row("job-2", "x", &evicted);
+        assert_eq!(j.req("state").unwrap().as_str(), Some("done"));
+        assert!(j.req("error").unwrap().as_str().unwrap().contains("evicted"));
         assert!(j.get("report").is_none());
     }
 }

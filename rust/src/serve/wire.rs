@@ -288,6 +288,32 @@ pub fn clients_json(totals: &[(u64, u64, u64)]) -> Json {
     )
 }
 
+/// Durability section of the queue-wide `status` reply: where the job
+/// journal and disk cache tier live, how many entries each holds, and the
+/// age (seconds) of each journal's newest record.  Either half is omitted
+/// when that tier is not attached (e.g. durability degraded at bind time).
+pub fn durability_json(
+    jobs: Option<(PathBuf, Option<u64>, usize)>,
+    disk: Option<(PathBuf, Option<u64>, usize)>,
+) -> Json {
+    let mut pairs: Vec<(&str, Json)> = Vec::new();
+    if let Some((path, age, entries)) = jobs {
+        pairs.push(("jobs_journal", path.display().to_string().into()));
+        pairs.push(("jobs_journaled", entries.into()));
+        if let Some(age) = age {
+            pairs.push(("jobs_journal_age_secs", ((age & 0x1F_FFFF_FFFF_FFFF) as usize).into()));
+        }
+    }
+    if let Some((path, age, entries)) = disk {
+        pairs.push(("disk_cache", path.display().to_string().into()));
+        pairs.push(("disk_cache_entries", entries.into()));
+        if let Some(age) = age {
+            pairs.push(("disk_cache_age_secs", ((age & 0x1F_FFFF_FFFF_FFFF) as usize).into()));
+        }
+    }
+    Json::obj(pairs)
+}
+
 pub fn event_started(job: &str, id: &str) -> Json {
     Json::obj(vec![("event", "started".into()), ("job", job.into()), ("id", id.into())])
 }

@@ -1,0 +1,397 @@
+//! Crash-safety tests for the durable job journal (DESIGN.md §Durable
+//! jobs): SIGKILL a sweep and a search mid-run and prove `--resume` /
+//! checkpoint resume reproduce the uninterrupted run byte-for-byte while
+//! re-running only the unfinished units; recover torn journal tails; and
+//! restart an `autoq serve` daemon into its journaled jobs + disk-tier
+//! eval cache.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+use autoq::coordinator::{Coordinator, JobSpec, Sweep};
+use autoq::cost::Mode;
+use autoq::runtime::{BackendKind, Parallelism};
+use autoq::search::{Granularity, Protocol};
+use autoq::serve::{DaemonClient, ServeConfig, Server};
+use autoq::util::json::Json;
+
+fn exe() -> PathBuf {
+    static EXE: OnceLock<PathBuf> = OnceLock::new();
+    EXE.get_or_init(|| PathBuf::from(env!("CARGO_BIN_EXE_autoq"))).clone()
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("autoq_durable_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Persist cheap (3-step) trained params so every run below loads
+/// identical bytes instead of auto-pretraining 300 steps mid-test.
+fn seed_params(dir: &Path) {
+    let mut coord = Coordinator::open_with(dir, Some(BackendKind::Reference)).unwrap();
+    coord.run(&JobSpec::pretrain("cif10").steps(3).build().unwrap()).unwrap();
+}
+
+/// Report files in `dir` as sorted (name, secs-zeroed JSON) rows — the
+/// journal file itself is not a report and is skipped.
+fn canon(dir: &Path) -> Vec<(String, String)> {
+    let mut rows: Vec<(String, String)> = std::fs::read_dir(dir)
+        .unwrap()
+        .filter_map(|e| {
+            let path = e.unwrap().path();
+            if path.extension().and_then(|s| s.to_str()) != Some("json") {
+                return None;
+            }
+            let mut j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+            if let Json::Obj(m) = &mut j {
+                m.insert("secs".to_string(), Json::Num(0.0));
+            }
+            Some((path.file_name().unwrap().to_string_lossy().into_owned(), j.to_string()))
+        })
+        .collect();
+    rows.sort();
+    rows
+}
+
+fn zero_secs(j: &Json) -> String {
+    let mut j = j.clone();
+    if let Json::Obj(m) = &mut j {
+        m.insert("secs".to_string(), Json::Num(0.0));
+    }
+    j.to_string()
+}
+
+/// Poll until `path` exists with at least `min_len` bytes (or panic at the
+/// deadline).  Returns false if the watched child exited first.
+fn wait_for_file(
+    path: &Path,
+    min_len: u64,
+    child: &mut std::process::Child,
+    deadline: Duration,
+) -> bool {
+    let t0 = Instant::now();
+    loop {
+        if let Ok(md) = std::fs::metadata(path) {
+            if md.len() >= min_len {
+                return true;
+            }
+        }
+        if child.try_wait().unwrap().is_some() {
+            return false; // finished before we could interrupt it
+        }
+        assert!(
+            t0.elapsed() < deadline,
+            "timed out waiting for {} to reach {min_len} bytes",
+            path.display()
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// Parse `"<n> <marker>"` out of a CLI summary line.
+fn count_before(stdout: &str, marker: &str) -> usize {
+    let line = stdout
+        .lines()
+        .find(|l| l.contains(marker))
+        .unwrap_or_else(|| panic!("no {marker:?} line in output:\n{stdout}"));
+    line.split(marker).next().unwrap().split_whitespace().last().unwrap().parse().unwrap()
+}
+
+/// SIGKILL `autoq sweep` after its first cell lands, then `--resume`: the
+/// per-cell report JSONs must be byte-identical (modulo `secs`) to an
+/// uninterrupted run, with only the unfinished cells re-run.
+#[cfg(unix)]
+#[test]
+fn sweep_survives_sigkill_and_resumes_byte_identical() {
+    let exe = exe();
+    let dir = temp_dir("sweep_kill");
+    seed_params(&dir);
+    let run = |out: &Path, extra: &[&str]| {
+        let mut cmd = Command::new(&exe);
+        cmd.args([
+            "sweep",
+            "--models",
+            "cif10",
+            "--modes",
+            "quant",
+            "--protocols",
+            "rc,ag",
+            "--granularities",
+            "network:4",
+            "--episodes",
+            "4",
+            "--warmup",
+            "1",
+            "--eval-batches",
+            "2",
+            "--seed",
+            "21",
+            "--workers",
+            "1",
+            "--threads",
+            "2",
+            "--backend",
+            "reference",
+            "--out-dir",
+        ])
+        .arg(out)
+        .args(extra)
+        .env("AUTOQ_ARTIFACTS", &dir)
+        .stderr(Stdio::null());
+        cmd
+    };
+
+    // Uninterrupted baseline.
+    let base = dir.join("base");
+    let st = run(&base, &[]).stdout(Stdio::null()).status().unwrap();
+    assert!(st.success());
+    let want = canon(&base);
+    assert_eq!(want.len(), 2, "grid must expand to two cells");
+
+    // Killed run: one worker runs the two cells serially; SIGKILL as soon
+    // as the journal holds the first cell's DONE record.
+    let res = dir.join("res");
+    let mut child = run(&res, &[]).stdout(Stdio::null()).spawn().unwrap();
+    let interrupted =
+        wait_for_file(&res.join("sweep.journal"), 512, &mut child, Duration::from_secs(120));
+    if interrupted {
+        child.kill().unwrap(); // SIGKILL — no drop handlers, no flush
+    }
+    child.wait().unwrap();
+
+    // Resume: finished cells skip, the rest re-run, bytes converge.
+    let out = run(&res, &["--resume"]).output().unwrap();
+    assert!(out.status.success(), "resume failed: {}", String::from_utf8_lossy(&out.stdout));
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    let skipped = count_before(&stdout, " skipped (journaled)");
+    let completed = count_before(&stdout, " job(s) completed");
+    assert!(skipped >= 1, "at least the first cell must be journaled:\n{stdout}");
+    assert_eq!(completed + skipped, 2, "every cell must be accounted for:\n{stdout}");
+    assert_eq!(canon(&res), want, "resumed sweep diverged from the uninterrupted run");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// SIGKILL `autoq search --checkpoint-every 1` mid-run, re-run the same
+/// command, and require the final searched config to be byte-identical to
+/// an uninterrupted (checkpoint-free) run's.
+#[cfg(unix)]
+#[test]
+fn search_survives_sigkill_and_resumes_byte_identical() {
+    let exe = exe();
+    let dir = temp_dir("search_kill");
+    seed_params(&dir);
+    let run = |out: &Path, every: &str| {
+        let mut cmd = Command::new(&exe);
+        cmd.args([
+            "search",
+            "--model",
+            "cif10",
+            "--mode",
+            "quant",
+            "--protocol",
+            "rc",
+            "--target-bits",
+            "5",
+            "--granularity",
+            "network:4",
+            "--episodes",
+            "4",
+            "--warmup",
+            "1",
+            "--eval-batches",
+            "1",
+            "--seed",
+            "3",
+            "--threads",
+            "2",
+            "--backend",
+            "reference",
+            "--checkpoint-every",
+            every,
+            "--out",
+        ])
+        .arg(out)
+        .env("AUTOQ_ARTIFACTS", &dir)
+        .stdout(Stdio::null())
+        .stderr(Stdio::null());
+        cmd
+    };
+    // The checkpoint journal lives under the artifact dir, named by the
+    // job id the CLI flags above resolve to.
+    let spec = JobSpec::search("cif10")
+        .mode(Mode::Quant)
+        .protocol(Protocol::resource_constrained(5.0))
+        .granularity(Granularity::Network(4))
+        .episodes(4)
+        .warmup(1)
+        .eval_batches(1)
+        .seed(3)
+        .build()
+        .unwrap();
+    let journal = dir.join("checkpoints").join(format!("{}.journal", spec.id()));
+
+    // Uninterrupted, checkpoint-free baseline.
+    let base = dir.join("base.json");
+    assert!(run(&base, "0").status().unwrap().success());
+
+    // Killed run: SIGKILL once the first per-episode snapshot is on disk.
+    let out = dir.join("res.json");
+    let mut child = run(&out, "1").spawn().unwrap();
+    let interrupted = wait_for_file(&journal, 64, &mut child, Duration::from_secs(120));
+    if interrupted {
+        child.kill().unwrap();
+    }
+    child.wait().unwrap();
+
+    // Same command again: resumes from the snapshot (or restarts clean if
+    // the kill landed before one) and must converge on the same bytes.
+    assert!(run(&out, "1").status().unwrap().success());
+    assert_eq!(
+        std::fs::read(&base).unwrap(),
+        std::fs::read(&out).unwrap(),
+        "resumed search config diverged from the uninterrupted run"
+    );
+    assert!(!journal.exists(), "a finished search must remove its checkpoint journal");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// In-process resume semantics: a completed sweep's journal skips every
+/// cell (re-materializing deleted report files byte-exactly), and a torn
+/// journal tail loses exactly its own record — the resume re-runs that one
+/// cell and converges on identical bytes.
+#[test]
+fn sweep_resume_skips_done_cells_and_recovers_torn_journals() {
+    let dir = temp_dir("resume_torn");
+    seed_params(&dir);
+    let out_dir = dir.join("out");
+    let grid = Sweep {
+        protocols: vec![Protocol::resource_constrained(5.0), Protocol::accuracy_guaranteed()],
+        granularities: vec![Granularity::Network(4)],
+        episodes: 3,
+        warmup: 1,
+        eval_batches: 1,
+        base_seed: 9,
+        workers: 1,
+        out_dir: Some(out_dir.clone()),
+        backend: Some(BackendKind::Reference),
+        threads: Some(Parallelism::new(2)),
+        ..Sweep::default()
+    };
+    let r1 = grid.run(&dir).unwrap();
+    assert!(r1.failures.is_empty(), "{:?}", r1.failures);
+    assert_eq!(r1.reports.len(), 2);
+    assert!(r1.skipped.is_empty());
+    let want = canon(&out_dir);
+
+    // Resume over a complete journal: nothing runs, and a deleted report
+    // file comes back byte-exactly from the journal.
+    let lost = out_dir.join(format!("{}.json", r1.reports[0].id()));
+    std::fs::remove_file(&lost).unwrap();
+    let resume = Sweep { resume: true, ..grid.clone() };
+    let r2 = resume.run(&dir).unwrap();
+    assert_eq!(r2.reports.len(), 0, "a complete journal must skip every cell");
+    assert_eq!(r2.skipped.len(), 2);
+    assert!(lost.exists(), "skipped cells must re-materialize missing report files");
+    assert_eq!(canon(&out_dir), want);
+
+    // Torn tail: chop bytes off the last record; only that cell re-runs.
+    let jpath = out_dir.join("sweep.journal");
+    let bytes = std::fs::read(&jpath).unwrap();
+    std::fs::write(&jpath, &bytes[..bytes.len() - 7]).unwrap();
+    let r3 = resume.run(&dir).unwrap();
+    assert!(r3.failures.is_empty(), "{:?}", r3.failures);
+    assert_eq!(r3.skipped.len(), 1, "the torn record must lose exactly its own cell");
+    assert_eq!(r3.reports.len(), 1);
+    assert_eq!(canon(&out_dir), want, "re-run after tail truncation diverged");
+
+    // A changed grid under the same out-dir re-runs the changed cell even
+    // though its id is journaled (fingerprint mismatch).
+    let mut changed = resume.clone();
+    changed.episodes = 4;
+    let r4 = changed.run(&dir).unwrap();
+    assert_eq!(r4.skipped.len(), 0, "changed specs must not reuse stale journal entries");
+    assert_eq!(r4.reports.len(), 2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Restarted daemon: journaled jobs answer `result` after the restart, a
+/// previously-evaluated search is served entirely from the disk-tier eval
+/// cache (hits, zero misses, byte-identical report), and the `status`
+/// reply surfaces the durability info.
+#[test]
+fn restarted_daemon_serves_cached_evals_from_the_disk_tier() {
+    let dir = temp_dir("serve_restart");
+    seed_params(&dir);
+    let start = || {
+        let cfg = ServeConfig {
+            dir: dir.clone(),
+            backend: Some(BackendKind::Reference),
+            threads: Some(Parallelism::new(2)),
+            workers: 1,
+            ..ServeConfig::default()
+        };
+        let server = Server::bind("127.0.0.1:0", cfg).unwrap();
+        let addr = server.local_addr().to_string();
+        (addr, std::thread::spawn(move || server.run()))
+    };
+    let spec = JobSpec::search("cif10")
+        .mode(Mode::Quant)
+        .protocol(Protocol::resource_constrained(5.0))
+        .granularity(Granularity::Network(5))
+        .episodes(2)
+        .warmup(1)
+        .eval_batches(1)
+        .seed(7)
+        .build()
+        .unwrap();
+
+    // First daemon lifetime: run the search, then drain-shutdown.
+    let (addr, thread) = start();
+    let mut client = DaemonClient::connect(&addr).unwrap();
+    let handle = client.submit(&spec).unwrap();
+    assert_eq!(handle, "job-0");
+    let row = client.result(&handle, true).unwrap();
+    assert_eq!(row.req("state").unwrap().as_str(), Some("done"));
+    let want = zero_secs(row.req("report").unwrap());
+    client.shutdown(true).unwrap();
+    thread.join().unwrap().unwrap();
+    assert!(dir.join("serve").join("jobs.journal").exists());
+    assert!(dir.join("serve").join("eval_cache.journal").exists());
+
+    // Second daemon lifetime over the same artifact dir.
+    let (addr, thread) = start();
+    let mut client = DaemonClient::connect(&addr).unwrap();
+
+    // The pre-restart job was restored from the journal, report intact.
+    let row = client.result("job-0", false).unwrap();
+    assert_eq!(row.req("state").unwrap().as_str(), Some("done"));
+    assert_eq!(zero_secs(row.req("report").unwrap()), want, "restored report diverged");
+
+    // Re-submitting the same spec: every eval answers from the disk tier
+    // (the daemon restarted with an empty memory map), zero misses, and
+    // the report stays byte-identical.
+    let handle = client.submit(&spec).unwrap();
+    assert_eq!(handle, "job-1", "restored jobs must keep their handles");
+    let row = client.result(&handle, true).unwrap();
+    assert_eq!(row.req("state").unwrap().as_str(), Some("done"));
+    assert_eq!(zero_secs(row.req("report").unwrap()), want, "disk-tier-served report diverged");
+    let cache = row.req("cache").unwrap();
+    let hits = cache.req("hits").unwrap().as_usize().unwrap();
+    let misses = cache.req("misses").unwrap().as_usize().unwrap();
+    assert!(hits > 0, "restarted daemon must serve evals from the disk tier");
+    assert_eq!(misses, 0, "a byte-identical repeat must add no misses");
+
+    // Durability info rides the bare status reply.
+    let status = client.status(None).unwrap();
+    let d = status.req("durability").unwrap();
+    assert!(d.req("jobs_journal").unwrap().as_str().unwrap().ends_with("jobs.journal"));
+    assert!(d.req("jobs_journaled").unwrap().as_usize().unwrap() >= 1);
+    assert!(d.req("disk_cache_entries").unwrap().as_usize().unwrap() > 0);
+
+    client.shutdown(true).unwrap();
+    thread.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
